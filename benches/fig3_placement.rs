@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Fig. 3 (B&B vs greedy placement) and time the
+//! branch-and-bound search itself (the paper claims seconds-scale runtime).
+use aie4ml::harness::fig3;
+use aie4ml::passes::placement::place_bnb;
+use aie4ml::util::bench;
+
+fn main() {
+    let blocks = fig3::example_blocks();
+    let prob = fig3::problem();
+    bench::run("fig3_bnb_search", 5, || place_bnb(&blocks, &prob).unwrap().cost);
+    let (figure, _) = bench::run("fig3_full_comparison", 3, || fig3::render().unwrap());
+    println!("\n{figure}");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Fig. 4 (layer scaling to 296 tiles, 3 precisions).
+use aie4ml::harness::fig4;
+use aie4ml::util::bench;
+
+fn main() {
+    let (figure, _) = bench::run("fig4_layer_scaling", 3, || fig4::render(128).unwrap());
+    println!("\n{figure}");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table I (single-tile ceilings, analytical).
+use aie4ml::harness::table1;
+use aie4ml::util::bench;
+
+fn main() {
+    let (table, _) = bench::run("table1_ceilings", 100, table1::render);
+    println!("\n{table}");
+}

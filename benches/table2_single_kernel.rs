@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table II (single-kernel GOPS/efficiency/latency).
+use aie4ml::harness::table2;
+use aie4ml::util::bench;
+
+fn main() {
+    let (table, _) = bench::run("table2_single_kernel", 10, || table2::render().unwrap());
+    println!("\n{table}");
+}

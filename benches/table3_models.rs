@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table III (MLP-Mixer / MLP blocks, on-chip).
+use aie4ml::harness::table3;
+use aie4ml::util::bench;
+
+fn main() {
+    let (table, _) = bench::run("table3_models", 3, || table3::render().unwrap());
+    println!("\n{table}");
+}

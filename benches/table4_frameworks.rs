@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table IV (prior AIE frameworks comparison;
+//! the AIE4ML row is measured via the full-array GEMM run).
+use aie4ml::harness::table4;
+use aie4ml::util::bench;
+
+fn main() {
+    bench::run("table4_gemm_full_array", 5, || {
+        table4::measure_gemm_full_array().unwrap().0
+    });
+    let (table, _) = bench::run("table4_render", 3, || table4::render().unwrap());
+    println!("\n{table}");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table V (cross-device 7-layer MLP throughput).
+use aie4ml::harness::table5;
+use aie4ml::util::bench;
+
+fn main() {
+    let (table, _) = bench::run("table5_cross_device", 3, || table5::render().unwrap());
+    println!("\n{table}");
+}

@@ -1,0 +1,20 @@
+//! Internal perf probe used by the §Perf pass (not part of the doc'd API).
+use aie4ml::harness::models::seven_layer_mlp;
+use aie4ml::sim::functional::{execute, Activation};
+use aie4ml::util::Pcg32;
+use std::time::Instant;
+fn main() {
+    let m = seven_layer_mlp(128).unwrap();
+    let fw = m.firmware.as_ref().unwrap();
+    let mut rng = Pcg32::seed_from_u64(1);
+    let x = Activation::new(128, 512, (0..128*512).map(|_| rng.gen_i32_in(-128,127)).collect()).unwrap();
+    let _warm = execute(fw, &x).unwrap();
+    let t0 = Instant::now();
+    let iters = 5;
+    let mut sum = 0i64;
+    for _ in 0..iters {
+        let y = execute(fw, &x).unwrap();
+        sum += y.data[0] as i64;
+    }
+    println!("execute mlp7 batch128: {:.1} ms/iter (checksum {sum})", t0.elapsed().as_secs_f64()*1e3/iters as f64);
+}

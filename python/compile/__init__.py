@@ -1,0 +1,15 @@
+"""AIE4ML build-time Python package (never imported at runtime).
+
+Layer 1 (`kernels/`): the Pallas blocked quantized-linear kernel -- the
+``aie::mmul`` analog -- plus the pure-jnp oracle it is validated against.
+Layer 2 (`model.py`): quantized MLP / MLP-Mixer forward graphs calling the
+kernel. ``aot.py`` lowers them once to HLO text under ``artifacts/``;
+``exporter.py`` writes the matching model JSON the Rust compiler ingests.
+
+int64 accumulators (the i16xi16 path) require x64 mode; enable it before
+anything traces.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

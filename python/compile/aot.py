@@ -1,0 +1,84 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowered with return_tuple=True;
+the Rust side unwraps with ``to_tuple1()``. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+Writes ``<name>.hlo.txt`` per zoo model plus the exporter JSONs under
+``models/`` so one command produces the whole matched artifact set.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .exporter import zoo_specs
+from .model import model_from_spec
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # ``constant({...})``, which the 0.5.1 HLO text parser silently
+    # mis-parses — baked weight matrices MUST be printed in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The 0.5.1 text parser rejects newer metadata fields (source_end_line);
+    # metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_model(spec: dict, batch: int, *, use_pallas=True) -> str:
+    model = model_from_spec(spec)
+    fn = model.aot_fn(use_pallas=use_pallas)
+    x = jax.ShapeDtypeStruct((batch, model.in_features), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(x))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--ref", action="store_true",
+                    help="lower the pure-jnp reference instead of Pallas")
+    args = ap.parse_args()
+    models_dir = os.path.join(args.out, "models")
+    os.makedirs(models_dir, exist_ok=True)
+    manifest = []
+    for spec, batch in zoo_specs():
+        name = spec["name"]
+        model_path = os.path.join(models_dir, f"{name}.json")
+        with open(model_path, "w") as f:
+            json.dump(spec, f)
+        hlo = lower_model(spec, batch, use_pallas=not args.ref)
+        hlo_path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        manifest.append(
+            {
+                "name": name,
+                "batch": batch,
+                "model": os.path.abspath(model_path),
+                "hlo": os.path.abspath(hlo_path),
+                "in_features": spec["layers"][0]["in_features"],
+                "out_features": spec["layers"][-1]["out_features"],
+            }
+        )
+        print(f"lowered {name} (batch {batch}) -> {hlo_path} ({len(hlo)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

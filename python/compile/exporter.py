@@ -1,0 +1,114 @@
+"""Exporter: the hls4ml-frontend substitute.
+
+Generates quantized model descriptions (layers, power-of-two quantizers,
+integer weights) and writes them as the neutral JSON the Rust compiler's
+``frontend::json_model`` ingests. The same in-memory spec feeds ``aot.py``,
+which bakes identical weights into the HLO artifacts — so the Rust firmware
+simulator and the PJRT oracle are guaranteed to agree on payloads.
+
+Weights are drawn from ``numpy.default_rng`` seeded with the FNV-1a hash of
+the model name (the same hash as ``rust/src/util/rng.rs::fnv1a``), so model
+identity is stable across regenerations.
+
+Usage: ``python -m compile.exporter --out ../artifacts/models``
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+
+def fnv1a(name: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def _dtype_range(dtype: str):
+    return {"int8": (-128, 127), "int16": (-32768, 32767)}[dtype]
+
+
+def make_spec(name, dims, *, act_dtype="int8", wgt_dtype=None, frac_bits=6,
+              relu=True, weight_scale=0.25):
+    """Build a model spec dict (JSON-shaped) with deterministic weights.
+
+    ``weight_scale`` shrinks the weight range so that deep networks don't
+    saturate to the rails on every layer (saturation is still exercised by
+    dedicated tests).
+    """
+    wgt_dtype = wgt_dtype or act_dtype
+    rng = np.random.default_rng(fnv1a(name))
+    wlo, whi = _dtype_range(wgt_dtype)
+    wlo = int(wlo * weight_scale)
+    whi = int(whi * weight_scale)
+    layers = []
+    for i, (fin, fout) in enumerate(zip(dims[:-1], dims[1:])):
+        is_last = i == len(dims) - 2
+        weights = rng.integers(wlo, whi + 1, size=(fout, fin))
+        bias = rng.integers(-512, 513, size=(fout,))
+        layers.append(
+            {
+                "name": f"fc{i + 1}",
+                "type": "dense",
+                "in_features": int(fin),
+                "out_features": int(fout),
+                "use_bias": True,
+                "relu": bool(relu and not is_last),
+                "quant": {
+                    "input": {"dtype": act_dtype, "frac_bits": frac_bits},
+                    "weight": {"dtype": wgt_dtype, "frac_bits": frac_bits},
+                    "output": {"dtype": act_dtype, "frac_bits": frac_bits},
+                },
+                "weights": [int(v) for v in weights.reshape(-1)],
+                "bias": [int(v) for v in bias],
+            }
+        )
+    return {"name": name, "device": "vek280", "layers": layers}
+
+
+# The model zoo shared by artifacts, examples and the Rust e2e tests.
+# (name, dims, act dtype, batch the artifact is specialized to)
+MODEL_ZOO = [
+    # Quickstart demo: small MLP, fast everywhere.
+    ("quickstart", [64, 32, 10], "int8", 8),
+    # The paper's cross-device workload (Table III row 5 / Table V).
+    ("mlp7", [512] * 8, "int8", 128),
+    # A mixer-style token-mixing block (Table III row 1 geometry, scaled to
+    # keep artifact build time reasonable).
+    ("token_mixer", [196, 256, 196], "int8", 64),
+    # Mixed precision: int16 activations x int8 weights.
+    ("mlp_i16i8", [128, 128, 64], "int16", 16),
+]
+
+
+def zoo_specs():
+    out = []
+    for name, dims, act, batch in MODEL_ZOO:
+        wgt = "int8" if act == "int16" else act
+        spec = make_spec(name, dims, act_dtype=act, wgt_dtype=wgt)
+        out.append((spec, batch))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/models")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for spec, batch in zoo_specs():
+        path = os.path.join(args.out, f"{spec['name']}.json")
+        with open(path, "w") as f:
+            json.dump(spec, f)
+        manifest.append({"name": spec["name"], "batch": batch, "model": path})
+        print(f"wrote {path} ({len(spec['layers'])} layers)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Layer-1 Pallas kernel: the blocked quantized linear layer.
+
+This is the ``aie::mmul`` analog rethought for the TPU-style memory
+hierarchy (DESIGN.md §Hardware-Adaptation):
+
+* the AIE tile's local memory becomes VMEM tiles expressed with BlockSpec —
+  the grid is ``(M/bm, N/bn, K/bk)`` and each program instance holds one
+  (bm×bk) A tile and one (bk×bn) W tile, exactly the staging the AIE kernel
+  does with its two load units;
+* the 2×2 accumulator scheme becomes an accumulator *block* in VMEM scratch,
+  reused across the K grid dimension (revolving accumulation instead of
+  cascaded partial sums);
+* BIAS_LOAD happens in the k==0 prologue, exactly like the AIE kernel's
+  ACC_INIT/BIAS_LOAD;
+* VST.SRS + optional ReLU happen in the k==last epilogue, fused into the
+  store of the output tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO and the same code path runs
+under pytest, under the AOT lowering, and under the Rust PJRT oracle.
+Real-TPU VMEM footprint / MXU-utilization estimates live in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import DTYPE_RANGE
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nsteps, shift, use_bias,
+            relu, acc_dtype, out_dtype):
+    """One (i, j, k) grid step: acc += A_ik @ W_kj, epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _prologue():
+        if use_bias:
+            # BIAS_LOAD: replicate the bias tile across the accumulator rows.
+            acc_ref[...] = jnp.broadcast_to(
+                b_ref[...].astype(acc_dtype), acc_ref.shape
+            )
+        else:
+            # ACC_INIT: zero the accumulators.
+            acc_ref[...] = jnp.zeros(acc_ref.shape, acc_dtype)
+
+    # VMAC: one blocked multiply-accumulate per grid step.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(acc_dtype),
+        w_ref[...].astype(acc_dtype),
+        preferred_element_type=jnp.dtype(acc_dtype),
+    )
+
+    @pl.when(k == nsteps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        # VST.SRS: shift (wrapping rounding add), round, saturate.
+        if shift > 0:
+            rnd = jnp.asarray(1, acc_dtype) << jnp.asarray(shift - 1, acc_dtype)
+            acc = (acc + rnd) >> jnp.asarray(shift, acc_dtype)
+        lo, hi = DTYPE_RANGE[jnp.dtype(out_dtype)]
+        y = jnp.clip(acc, lo, hi)
+        if relu:
+            y = jnp.maximum(y, jnp.asarray(0, y.dtype))
+        o_ref[...] = y.astype(out_dtype)
+
+
+def _pad_to(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def pallas_linear(x, w, b=None, *, shift=0, relu=False, acc_dtype=jnp.int32,
+                  out_dtype=jnp.int8, bm=32, bk=64, bn=64, interpret=True):
+    """Blocked quantized linear layer as a single pallas_call.
+
+    x: [batch, f_in] integer activations; w: [f_in, f_out]; b: [f_out] at
+    accumulator scale. Arbitrary shapes are zero-padded up to the block grid
+    (the mem-tile zero-padding analog) and the padding is sliced off the
+    output. Returns [batch, f_out] in ``out_dtype``.
+    """
+    batch, f_in = x.shape
+    f_in_w, f_out = w.shape
+    assert f_in == f_in_w, (x.shape, w.shape)
+
+    bm = max(1, min(bm, batch))
+    bk = max(1, min(bk, f_in))
+    bn = max(1, min(bn, f_out))
+    pad_m = -(-batch // bm) * bm
+    pad_k = -(-f_in // bk) * bk
+    pad_n = -(-f_out // bn) * bn
+
+    xp = _pad_to(x, pad_m, pad_k)
+    wp = _pad_to(w, pad_k, pad_n)
+    use_bias = b is not None
+    if use_bias:
+        bp = jnp.pad(b, (0, pad_n - f_out)).astype(acc_dtype).reshape(1, pad_n)
+    else:
+        # Dummy operand keeps the call signature static.
+        bp = jnp.zeros((1, pad_n), acc_dtype)
+
+    grid = (pad_m // bm, pad_n // bn, pad_k // bk)
+    kernel = functools.partial(
+        _kernel,
+        nsteps=grid[2],
+        shift=shift,
+        use_bias=use_bias,
+        relu=relu,
+        acc_dtype=acc_dtype,
+        out_dtype=out_dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pad_m, pad_n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.dtype(acc_dtype))],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:batch, :f_out]
+
+
+def vmem_footprint_bytes(bm, bk, bn, act_bytes, wgt_bytes, out_bytes,
+                         acc_bytes=4):
+    """Static VMEM working-set estimate for one program instance (double-
+    buffered inputs, single accumulator block + output tile). Used by the
+    DESIGN.md §Perf analysis — interpret-mode wallclock is *not* a TPU
+    proxy, so kernel structure is tuned against this estimate instead."""
+    return (
+        2 * (bm * bk * act_bytes)    # A tile, ping-pong
+        + 2 * (bk * bn * wgt_bytes)  # W tile, ping-pong
+        + bm * bn * acc_bytes        # accumulator block
+        + bm * bn * out_bytes        # output tile
+    )

@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracle for the quantized linear layer.
+
+This is the single source of truth for the integer semantics of the whole
+stack (the bit-exactness contract in DESIGN.md). It must stay in lock-step
+with three other implementations:
+
+* the Pallas kernel (``kernels/linear.py``),
+* the Rust functional simulator (``rust/src/sim/functional.rs``),
+* and the Rust ``srs``/``srs_i32`` primitives (``rust/src/ir/quant.rs``).
+
+Semantics:
+
+    acc  = x @ w            exact in the accumulator dtype
+                            (int32 wraps -- the hardware accumulator is
+                            modular; int64 never overflows for our shapes)
+    acc += bias             bias stored at accumulator scale
+    y    = srs(acc, shift)  shift-round-saturate on store (VST.SRS):
+                            round-half-up = (acc + 2^(s-1)) >> s with a
+                            *wrapping* add in the accumulator dtype,
+                            arithmetic shift, saturate to the output dtype
+    y    = max(y, 0)        when ReLU is fused (equivalent to ReLU before
+                            SRS because SRS is monotone with srs(0) = 0)
+"""
+
+import jax.numpy as jnp
+
+DTYPE_RANGE = {
+    jnp.dtype(jnp.int8): (-128, 127),
+    jnp.dtype(jnp.int16): (-32768, 32767),
+    jnp.dtype(jnp.int32): (-(2 ** 31), 2 ** 31 - 1),
+}
+
+
+def srs(acc, shift, out_dtype):
+    """Shift-round-saturate. ``acc`` keeps its (accumulator) dtype; the
+    rounding add wraps in that dtype, matching the hardware register."""
+    acc_dtype = acc.dtype
+    if shift > 0:
+        rnd = jnp.asarray(1, acc_dtype) << jnp.asarray(shift - 1, acc_dtype)
+        acc = (acc + rnd) >> jnp.asarray(shift, acc_dtype)
+    lo, hi = DTYPE_RANGE[jnp.dtype(out_dtype)]
+    return jnp.clip(acc, lo, hi)
+
+
+def ref_linear(x, w, b=None, *, shift=0, relu=False,
+               acc_dtype=jnp.int32, out_dtype=jnp.int8):
+    """Reference quantized linear layer.
+
+    x: [batch, f_in]   integer activations (any int dtype within range)
+    w: [f_in, f_out]   integer weights
+    b: [f_out] or None bias at accumulator scale
+    Returns [batch, f_out] in ``out_dtype``.
+    """
+    acc = jnp.dot(x.astype(acc_dtype), w.astype(acc_dtype),
+                  preferred_element_type=jnp.dtype(acc_dtype))
+    if b is not None:
+        acc = acc + b.astype(acc_dtype)
+    y = srs(acc, shift, out_dtype)
+    if relu:
+        y = jnp.maximum(y, jnp.asarray(0, y.dtype))
+    return y.astype(out_dtype)

@@ -1,0 +1,166 @@
+"""Layer-2 JAX model: quantized MLP / MLP-Mixer forward graphs.
+
+Build-time only. A ``QuantModel`` is constructed from the same specification
+the exporter writes to JSON (so the Rust compiler and these graphs always
+agree on shapes, quantizers and weight payloads), and its forward function
+calls the Layer-1 Pallas kernel for every linear layer, so the whole network
+lowers into a single HLO module.
+
+AOT convention (consumed by ``rust/src/runtime``): the jitted function takes
+one int32 tensor ``[batch, f_in]`` (values within the input dtype's range),
+casts to the quantized dtype internally, and returns a 1-tuple of an int32
+tensor ``[batch, f_out]``.
+"""
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.linear import pallas_linear
+from .kernels.ref import ref_linear
+
+_DTYPES = {
+    "int8": jnp.int8,
+    "int16": jnp.int16,
+    "int32": jnp.int32,
+    "int64": jnp.int64,
+}
+
+
+def parse_dtype(name):
+    return _DTYPES[name.replace("i", "int") if not name.startswith("int") else name]
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One dense layer, mirroring the exporter JSON entry."""
+
+    name: str
+    in_features: int
+    out_features: int
+    use_bias: bool
+    relu: bool
+    act_dtype: str  # input/output storage dtype ("int8"/"int16")
+    wgt_dtype: str
+    in_frac: int
+    w_frac: int
+    out_frac: int
+    weights: np.ndarray  # [out, in] row-major, like the JSON
+    bias: np.ndarray  # [out] at accumulator scale
+
+    @property
+    def shift(self) -> int:
+        # acc_frac = in_frac + w_frac; the store must produce out_frac
+        # => shift = in_frac + w_frac - out_frac (clamped at 0), exactly
+        # rust/src/ir/quant.rs::derive_shift.
+        return max(self.in_frac + self.w_frac - self.out_frac, 0)
+
+    @property
+    def acc_dtype(self):
+        if self.act_dtype == "int16" and self.wgt_dtype == "int16":
+            return jnp.int64
+        return jnp.int32
+
+
+@dataclasses.dataclass
+class QuantModel:
+    """A chain of quantized dense layers."""
+
+    name: str
+    layers: List[LayerSpec]
+
+    @property
+    def in_features(self) -> int:
+        return self.layers[0].in_features
+
+    @property
+    def out_features(self) -> int:
+        return self.layers[-1].out_features
+
+    def forward(self, x_i32, *, use_pallas=True, bm=32, bk=64, bn=64):
+        """Forward pass on an int32 [batch, f_in] tensor -> int32 tensor."""
+        act = x_i32.astype(parse_dtype(self.layers[0].act_dtype))
+        for spec in self.layers:
+            w = jnp.asarray(spec.weights.T)  # [in, out] for x @ w
+            b = jnp.asarray(spec.bias) if spec.use_bias else None
+            fn = pallas_linear if use_pallas else ref_linear
+            kwargs = dict(
+                shift=spec.shift,
+                relu=spec.relu,
+                acc_dtype=spec.acc_dtype,
+                out_dtype=parse_dtype(spec.act_dtype),
+            )
+            if use_pallas:
+                kwargs.update(bm=bm, bk=bk, bn=bn)
+            act = fn(act, w, b, **kwargs)
+        return act.astype(jnp.int32)
+
+    def aot_fn(self, *, use_pallas=True):
+        """The function ``aot.py`` lowers: x_i32 -> (y_i32,)."""
+
+        def fn(x):
+            return (self.forward(x, use_pallas=use_pallas),)
+
+        return fn
+
+
+def model_from_spec(spec: dict) -> QuantModel:
+    """Build a QuantModel from the exporter's python-side dict (same
+    structure as the JSON file)."""
+    layers = []
+    for l in spec["layers"]:
+        layers.append(
+            LayerSpec(
+                name=l["name"],
+                in_features=l["in_features"],
+                out_features=l["out_features"],
+                use_bias=l["use_bias"],
+                relu=l["relu"],
+                act_dtype=l["quant"]["input"]["dtype"],
+                wgt_dtype=l["quant"]["weight"]["dtype"],
+                in_frac=l["quant"]["input"]["frac_bits"],
+                w_frac=l["quant"]["weight"]["frac_bits"],
+                out_frac=l["quant"]["output"]["frac_bits"],
+                weights=np.asarray(l["weights"], np.int32).reshape(
+                    l["out_features"], l["in_features"]
+                ),
+                bias=np.asarray(l["bias"], np.int64)
+                if l["use_bias"]
+                else np.zeros(l["out_features"], np.int64),
+            )
+        )
+    return QuantModel(name=spec["name"], layers=layers)
+
+
+def random_input(model: QuantModel, batch: int, seed: int = 0) -> np.ndarray:
+    """Deterministic in-range int32 input batch."""
+    rng = np.random.default_rng(seed)
+    lo, hi = (-128, 127) if model.layers[0].act_dtype == "int8" else (-32768, 32767)
+    return rng.integers(lo, hi + 1, size=(batch, model.in_features)).astype(np.int32)
+
+
+# Reference NumPy forward (third implementation, NumPy-only — used in tests
+# to triangulate jnp/Pallas disagreements).
+def numpy_forward(model: QuantModel, x_i32: np.ndarray) -> np.ndarray:
+    act = x_i32.astype(np.int64)
+    for spec in model.layers:
+        acc_bits = 64 if spec.acc_dtype == jnp.int64 else 32
+        acc = act.astype(np.int64) @ spec.weights.T.astype(np.int64)
+        if spec.use_bias:
+            acc = acc + spec.bias
+        if acc_bits == 32:
+            acc = acc.astype(np.int32)  # wrap like the hardware accumulator
+        s = spec.shift
+        if s > 0:
+            if acc_bits == 32:
+                acc = (acc + np.int32(1 << (s - 1))) >> np.int32(s)
+            else:
+                acc = (acc + np.int64(1 << (s - 1))) >> np.int64(s)
+        lo, hi = (-128, 127) if spec.act_dtype == "int8" else (-32768, 32767)
+        y = np.clip(acc.astype(np.int64), lo, hi)
+        if spec.relu:
+            y = np.maximum(y, 0)
+        act = y
+    return act.astype(np.int32)

@@ -1,0 +1,126 @@
+"""Post-training power-of-two quantization: float model -> AIE4ML spec.
+
+The paper's frontend accepts already-quantized models from hls4ml/QKeras;
+this module closes the loop for plain float models: given float weights and
+a calibration batch, it chooses per-tensor power-of-two scales (frac_bits),
+quantizes weights/biases, propagates activation scales through the network,
+and emits the same spec dict the exporter produces — ready for both the Rust
+compiler and the AOT path.
+
+Scale selection is max-abs: ``frac_bits = bits-1 - ceil(log2(max|x|))``,
+clamped so the representable range covers the observed values (the standard
+hls4ml-style PoT calibration).
+"""
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .model import model_from_spec, numpy_forward
+
+
+@dataclasses.dataclass
+class FloatLayer:
+    """One float dense layer: weights [out, in], bias [out] or None."""
+
+    name: str
+    weights: np.ndarray
+    bias: Optional[np.ndarray]
+    relu: bool
+
+
+def pot_frac_bits(max_abs: float, bits: int) -> int:
+    """Fractional bits so that max_abs fits the signed `bits`-wide range
+    with a power-of-two scale. max_abs == 0 maxes out resolution."""
+    if max_abs <= 0:
+        return bits - 1
+    # Need max_abs * 2^f <= 2^(bits-1) - 1  =>  f <= log2((2^(b-1)-1)/max)
+    limit = (1 << (bits - 1)) - 1
+    f = int(np.floor(np.log2(limit / max_abs)))
+    return max(min(f, 24), -24)
+
+
+def quantize_tensor(x: np.ndarray, frac_bits: int, bits: int) -> np.ndarray:
+    scaled = np.round(x * (2.0 ** frac_bits))
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return np.clip(scaled, lo, hi).astype(np.int64)
+
+
+def calibrate(
+    layers: List[FloatLayer],
+    calib_x: np.ndarray,
+    *,
+    name: str = "quantized",
+    act_bits: int = 8,
+    wgt_bits: int = 8,
+) -> dict:
+    """Quantize a float MLP into an AIE4ML spec dict.
+
+    calib_x: [n, f_in] float calibration batch used to size the activation
+    scales layer by layer (float forward pass).
+    """
+    act_dtype = f"int{act_bits}"
+    wgt_dtype = f"int{wgt_bits}"
+    spec_layers = []
+    act = calib_x.astype(np.float64)
+    in_frac = pot_frac_bits(float(np.max(np.abs(act))), act_bits)
+    for i, l in enumerate(layers):
+        w_frac = pot_frac_bits(float(np.max(np.abs(l.weights))), wgt_bits)
+        # Float forward to size the output scale.
+        out_f = act @ l.weights.T
+        if l.bias is not None:
+            out_f = out_f + l.bias
+        if l.relu:
+            out_f = np.maximum(out_f, 0.0)
+        out_frac = pot_frac_bits(float(np.max(np.abs(out_f))), act_bits)
+        # Integer payloads. Bias lives at accumulator scale in+w frac bits.
+        wq = quantize_tensor(l.weights, w_frac, wgt_bits)
+        bq = (
+            quantize_tensor(l.bias, in_frac + w_frac, 32)
+            if l.bias is not None
+            else np.zeros(l.weights.shape[0], np.int64)
+        )
+        spec_layers.append(
+            {
+                "name": l.name or f"fc{i + 1}",
+                "type": "dense",
+                "in_features": int(l.weights.shape[1]),
+                "out_features": int(l.weights.shape[0]),
+                "use_bias": l.bias is not None,
+                "relu": bool(l.relu),
+                "quant": {
+                    "input": {"dtype": act_dtype, "frac_bits": int(in_frac)},
+                    "weight": {"dtype": wgt_dtype, "frac_bits": int(w_frac)},
+                    # The Rust shift derivation is in+w-out; record out scale.
+                    "output": {"dtype": act_dtype, "frac_bits": int(out_frac)},
+                },
+                "weights": [int(v) for v in wq.reshape(-1)],
+                "bias": [int(v) for v in bq],
+            }
+        )
+        act = out_f
+        in_frac = out_frac
+    return {"name": name, "device": "vek280", "layers": spec_layers}
+
+
+def quantization_error(spec: dict, layers: List[FloatLayer], x: np.ndarray):
+    """Relative L2 error between the float forward pass and the quantized
+    integer pipeline (numpy_forward) on input batch x."""
+    # Float reference.
+    out_f = x.astype(np.float64)
+    for l in layers:
+        out_f = out_f @ l.weights.T
+        if l.bias is not None:
+            out_f = out_f + l.bias
+        if l.relu:
+            out_f = np.maximum(out_f, 0.0)
+    # Quantized path.
+    m = model_from_spec(spec)
+    in_frac = spec["layers"][0]["quant"]["input"]["frac_bits"]
+    xq = quantize_tensor(x, in_frac, 8).astype(np.int32)
+    yq = numpy_forward(m, xq)
+    out_frac = spec["layers"][-1]["quant"]["output"]["frac_bits"]
+    y_deq = yq.astype(np.float64) / (2.0 ** out_frac)
+    denom = np.linalg.norm(out_f) + 1e-12
+    return float(np.linalg.norm(y_deq - out_f) / denom)

@@ -1,0 +1,99 @@
+"""Layer-2 model tests: spec construction, Pallas/jnp/NumPy triangulation,
+jit+lowering sanity for every zoo model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.exporter import make_spec, zoo_specs, fnv1a
+from compile.model import model_from_spec, numpy_forward, random_input
+
+
+def small_spec(name="t", dims=(32, 48, 16), act="int8"):
+    return make_spec(name, list(dims), act_dtype=act)
+
+
+def test_spec_shapes():
+    spec = small_spec()
+    m = model_from_spec(spec)
+    assert m.in_features == 32
+    assert m.out_features == 16
+    assert len(m.layers) == 2
+    assert m.layers[0].relu and not m.layers[1].relu
+    assert m.layers[0].weights.shape == (48, 32)
+
+
+def test_exporter_deterministic():
+    a = make_spec("det", [16, 8])
+    b = make_spec("det", [16, 8])
+    assert a["layers"][0]["weights"] == b["layers"][0]["weights"]
+    c = make_spec("det2", [16, 8])
+    assert a["layers"][0]["weights"] != c["layers"][0]["weights"]
+
+
+def test_fnv1a_matches_rust():
+    # Pinned vector shared with rust/src/util/rng.rs::fnv_stable.
+    assert fnv1a("") == 0xCBF29CE484222325
+
+
+@pytest.mark.parametrize("act", ["int8", "int16"])
+def test_forward_triangulates(act):
+    spec = small_spec(f"tri_{act}", (24, 40, 12), act)
+    m = model_from_spec(spec)
+    x = random_input(m, 6, seed=1)
+    via_pallas = np.asarray(m.forward(jnp.asarray(x), use_pallas=True, bm=8, bk=16, bn=16))
+    via_ref = np.asarray(m.forward(jnp.asarray(x), use_pallas=False))
+    via_numpy = numpy_forward(m, x)
+    np.testing.assert_array_equal(via_pallas, via_ref)
+    np.testing.assert_array_equal(via_pallas, via_numpy)
+
+
+def test_mixed_precision_forward():
+    spec = make_spec("mix", [32, 32, 16], act_dtype="int16", wgt_dtype="int8")
+    m = model_from_spec(spec)
+    assert m.layers[0].acc_dtype == jnp.int32
+    x = random_input(m, 4, seed=2)
+    a = np.asarray(m.forward(jnp.asarray(x), use_pallas=True, bm=4, bk=8, bn=8))
+    b = numpy_forward(m, x)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_i16i16_wide_acc_forward():
+    spec = make_spec("wide", [64, 32], act_dtype="int16", wgt_dtype="int16")
+    m = model_from_spec(spec)
+    assert m.layers[0].acc_dtype == jnp.int64
+    x = random_input(m, 4, seed=3)
+    a = np.asarray(m.forward(jnp.asarray(x), use_pallas=True, bm=4, bk=16, bn=16))
+    b = numpy_forward(m, x)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_jit_forward_matches_eager():
+    spec = small_spec("jit", (16, 24, 8))
+    m = model_from_spec(spec)
+    x = jnp.asarray(random_input(m, 4, seed=4))
+    eager = m.forward(x)
+    jitted = jax.jit(lambda t: m.forward(t))(x)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+def test_zoo_specs_valid():
+    for spec, batch in zoo_specs():
+        m = model_from_spec(spec)
+        assert batch >= 1
+        for l in m.layers:
+            assert l.weights.shape == (l.out_features, l.in_features)
+            lo, hi = (-128, 127) if l.wgt_dtype == "int8" else (-32768, 32767)
+            assert l.weights.min() >= lo and l.weights.max() <= hi
+
+
+def test_zoo_quickstart_runs():
+    (spec, batch) = next(
+        (s, b) for s, b in zoo_specs() if s["name"] == "quickstart"
+    )
+    m = model_from_spec(spec)
+    x = random_input(m, batch, seed=0)
+    y = np.asarray(m.forward(jnp.asarray(x)))
+    assert y.shape == (batch, 10)
+    np.testing.assert_array_equal(y, numpy_forward(m, x))

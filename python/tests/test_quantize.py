@@ -1,0 +1,116 @@
+"""Post-training quantization calibration: float model -> AIE4ML spec.
+
+Checks: scale selection, spec validity (consumable by model_from_spec and
+the Rust frontend's JSON schema), accuracy of the quantized pipeline vs the
+float reference, and mixed in/out scales through the shift derivation.
+"""
+
+import numpy as np
+import pytest
+
+from compile.quantize import (FloatLayer, calibrate, pot_frac_bits,
+                              quantization_error, quantize_tensor)
+from compile.model import model_from_spec, numpy_forward
+
+
+def float_mlp(seed, dims, weight_scale=0.5):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i, (fin, fout) in enumerate(zip(dims[:-1], dims[1:])):
+        layers.append(
+            FloatLayer(
+                name=f"fc{i+1}",
+                weights=rng.normal(0, weight_scale, size=(fout, fin)),
+                bias=rng.normal(0, 0.1, size=(fout,)),
+                relu=i + 2 < len(dims),
+            )
+        )
+    return layers
+
+
+def test_pot_frac_bits_ranges():
+    # max_abs 1.0 with 8 bits: 1.0 * 2^f <= 127 -> f = 6.
+    assert pot_frac_bits(1.0, 8) == 6
+    assert pot_frac_bits(0.5, 8) == 7
+    assert pot_frac_bits(100.0, 8) == 0
+    assert pot_frac_bits(0.0, 8) == 7
+    # Representable: quantized max never exceeds the rail.
+    for m in [0.3, 1.7, 12.0, 300.0]:
+        f = pot_frac_bits(m, 8)
+        assert abs(round(m * 2.0 ** f)) <= 127
+
+
+def test_quantize_tensor_saturates():
+    x = np.array([10.0, -10.0, 0.1])
+    q = quantize_tensor(x, 6, 8)
+    assert list(q) == [127, -128, 6]
+
+
+def test_calibrated_spec_is_valid_and_runs():
+    layers = float_mlp(0, [32, 48, 10])
+    calib = np.random.default_rng(1).normal(0, 1.0, size=(64, 32))
+    spec = calibrate(layers, calib, name="calib_test")
+    # Structure matches the exporter schema.
+    assert spec["layers"][0]["quant"]["input"]["dtype"] == "int8"
+    m = model_from_spec(spec)
+    assert m.in_features == 32 and m.out_features == 10
+    # Quantized forward runs and produces in-range outputs.
+    xq = quantize_tensor(calib[:8], spec["layers"][0]["quant"]["input"]["frac_bits"], 8)
+    y = numpy_forward(m, xq.astype(np.int32))
+    assert y.shape == (8, 10)
+    assert np.abs(y).max() <= 127
+
+
+def test_quantization_error_small():
+    layers = float_mlp(2, [24, 32, 8], weight_scale=0.3)
+    calib = np.random.default_rng(3).normal(0, 1.0, size=(128, 24))
+    spec = calibrate(layers, calib)
+    err = quantization_error(spec, layers, calib[:32])
+    # int8 PoT quantization of a 2-layer MLP: a few percent relative error.
+    assert err < 0.08, f"relative error {err}"
+
+
+def test_int16_activations_reduce_error():
+    layers = float_mlp(4, [24, 32, 8], weight_scale=0.3)
+    calib = np.random.default_rng(5).normal(0, 1.0, size=(128, 24))
+    e8 = quantization_error(calibrate(layers, calib, act_bits=8), layers, calib[:32])
+    # Wider weights sharpen the weight grid; error must not increase.
+    e_wide = quantization_error(
+        calibrate(layers, calib, act_bits=8, wgt_bits=8), layers, calib[:32]
+    )
+    assert e_wide <= e8 + 1e-9
+
+
+def test_shift_derivation_nonuniform_scales():
+    layers = float_mlp(6, [16, 16], weight_scale=2.0)  # big weights -> low w_frac
+    calib = np.random.default_rng(7).normal(0, 0.2, size=(32, 16))  # small acts
+    spec = calibrate(layers, calib)
+    m = model_from_spec(spec)
+    l = m.layers[0]
+    q = spec["layers"][0]["quant"]
+    assert l.shift == max(q["input"]["frac_bits"] + q["weight"]["frac_bits"]
+                          - q["output"]["frac_bits"], 0)
+
+
+def test_no_bias_layer():
+    layers = [FloatLayer("fc1", np.eye(8) * 0.5, None, False)]
+    calib = np.random.default_rng(8).normal(0, 1.0, size=(16, 8))
+    spec = calibrate(layers, calib)
+    assert not spec["layers"][0]["use_bias"]
+    m = model_from_spec(spec)
+    y = numpy_forward(m, np.full((2, 8), 64, np.int32))
+    assert y.shape == (2, 8)
+
+
+def test_calibrated_spec_pallas_matches_numpy():
+    import jax.numpy as jnp
+
+    layers = float_mlp(9, [16, 24, 8], weight_scale=0.4)
+    calib = np.random.default_rng(10).normal(0, 1.0, size=(32, 16))
+    spec = calibrate(layers, calib)
+    m = model_from_spec(spec)
+    xq = quantize_tensor(
+        calib[:4], spec["layers"][0]["quant"]["input"]["frac_bits"], 8
+    ).astype(np.int32)
+    via_pallas = np.asarray(m.forward(jnp.asarray(xq), use_pallas=True, bm=4, bk=8, bn=8))
+    np.testing.assert_array_equal(via_pallas, numpy_forward(m, xq))

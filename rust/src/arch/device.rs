@@ -1,0 +1,201 @@
+//! Device descriptions: the 2D AIE array geometry, local memories, memory
+//! tiles, cascade chains and interface columns.
+//!
+//! The evaluation platform is the Versal VEK280 (AIE-ML generation): a
+//! 38-column × 8-row array of 304 compute tiles with one row of memory tiles
+//! along the array's south edge. The paper's layer-scaling study uses up to
+//! 296 of 304 tiles (97.4%): one full column is held back for array
+//! I/O / RTP plumbing, which we model as a reserved column.
+
+use super::precision::AieGeneration;
+
+/// Static description of one AIE device target.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    pub generation: AieGeneration,
+    /// Compute-array geometry.
+    pub cols: usize,
+    pub rows: usize,
+    /// Columns reserved for shim/RTP plumbing (not placeable).
+    pub reserved_cols: usize,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// Data memory local to each AIE tile, bytes (AIE-ML: 64 KiB).
+    pub local_mem_bytes: usize,
+    /// Number of local-memory banks (parallel loads/stores need distinct banks).
+    pub local_mem_banks: usize,
+    /// Each load port width in bytes (256-bit = 32 B); two load ports + one store.
+    pub load_port_bytes: usize,
+    pub load_ports: usize,
+    pub store_port_bytes: usize,
+    /// Memory tiles: one per column along the south edge.
+    pub mem_tiles: usize,
+    /// Capacity of one memory tile in bytes (AIE-ML: 512 KiB).
+    pub mem_tile_bytes: usize,
+    /// Memory-tile DMA channel width in bytes per cycle (512-bit = 64 B).
+    pub mem_tile_port_bytes: usize,
+    /// Read/write DMA channels per memory tile.
+    pub mem_tile_channels: usize,
+    /// Cascade port width in bits (AIE-ML: 512).
+    pub cascade_bits: usize,
+    /// VLIW issue slots (AIE-ML: 7-way).
+    pub vliw_slots: usize,
+}
+
+impl Device {
+    /// Versal VEK280 — the paper's evaluation platform (AIE-ML).
+    pub fn vek280() -> Device {
+        Device {
+            name: "VEK280".to_string(),
+            generation: AieGeneration::AieMl,
+            cols: 38,
+            rows: 8,
+            reserved_cols: 1,
+            freq_ghz: 1.25,
+            local_mem_bytes: 64 * 1024,
+            local_mem_banks: 8,
+            load_port_bytes: 32,
+            load_ports: 2,
+            store_port_bytes: 32,
+            mem_tiles: 38,
+            mem_tile_bytes: 512 * 1024,
+            mem_tile_port_bytes: 64,
+            mem_tile_channels: 6,
+            cascade_bits: 512,
+            vliw_slots: 7,
+        }
+    }
+
+    /// Versal VEK385 — AIE-MLv2, functionally validated target.
+    pub fn vek385() -> Device {
+        Device {
+            name: "VEK385".to_string(),
+            generation: AieGeneration::AieMlV2,
+            cols: 36,
+            rows: 8,
+            reserved_cols: 1,
+            freq_ghz: 1.25,
+            local_mem_bytes: 64 * 1024,
+            local_mem_banks: 8,
+            load_port_bytes: 64,
+            load_ports: 2,
+            store_port_bytes: 64,
+            mem_tiles: 36,
+            mem_tile_bytes: 512 * 1024,
+            mem_tile_port_bytes: 64,
+            mem_tile_channels: 6,
+            cascade_bits: 512,
+            vliw_slots: 7,
+        }
+    }
+
+    /// First-generation AIE device (VCK190-class) — used only by the
+    /// prior-framework baseline models in Table IV.
+    pub fn vck190() -> Device {
+        Device {
+            name: "VCK190".to_string(),
+            generation: AieGeneration::Aie,
+            cols: 50,
+            rows: 8,
+            reserved_cols: 0,
+            freq_ghz: 1.25,
+            local_mem_bytes: 32 * 1024,
+            local_mem_banks: 8,
+            load_port_bytes: 32,
+            load_ports: 2,
+            store_port_bytes: 32,
+            mem_tiles: 0, // no memory tiles on first-gen AIE
+            mem_tile_bytes: 0,
+            mem_tile_port_bytes: 0,
+            mem_tile_channels: 0,
+            cascade_bits: 384,
+            vliw_slots: 7,
+        }
+    }
+
+    /// Look a device up by name.
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "vek280" | "aie-ml" | "aieml" => Some(Device::vek280()),
+            "vek385" | "aie-mlv2" | "aiemlv2" => Some(Device::vek385()),
+            "vck190" | "aie" => Some(Device::vck190()),
+            _ => None,
+        }
+    }
+
+    /// Total compute tiles on the device.
+    pub fn total_tiles(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    /// Tiles available to the placer (reserved columns excluded).
+    pub fn placeable_tiles(&self) -> usize {
+        (self.cols - self.reserved_cols) * self.rows
+    }
+
+    /// Columns available to the placer.
+    pub fn placeable_cols(&self) -> usize {
+        self.cols - self.reserved_cols
+    }
+
+    /// Theoretical INT8 device peak in TOPS (all compute tiles).
+    pub fn peak_int8_tops(&self) -> f64 {
+        use super::precision::{macs_per_cycle, PrecisionPair};
+        let w = macs_per_cycle(self.generation, PrecisionPair::I8I8).unwrap_or(0) as f64;
+        2.0 * w * self.freq_ghz * self.total_tiles() as f64 / 1000.0
+    }
+
+    /// Load bandwidth of one tile in bytes/cycle.
+    pub fn tile_load_bandwidth(&self) -> usize {
+        self.load_ports * self.load_port_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vek280_geometry_matches_paper() {
+        let d = Device::vek280();
+        assert_eq!(d.total_tiles(), 304);
+        // 296/304 tiles usable = 97.4% spatial utilization (paper Fig. 4).
+        assert_eq!(d.placeable_tiles(), 296);
+        let util = d.placeable_tiles() as f64 / d.total_tiles() as f64;
+        assert!((util - 0.974).abs() < 0.001, "utilization {util}");
+    }
+
+    #[test]
+    fn vek280_int8_peak_near_195_tops() {
+        // 304 tiles x 256 MAC/cyc x 2 op x 1.25 GHz = 194.56 TOPS; the
+        // paper's "160 TOPS = 82.2% of theoretical INT8 peak" implies a
+        // peak of ~194.6 TOPS.
+        let d = Device::vek280();
+        let peak = d.peak_int8_tops();
+        assert!((peak - 194.56).abs() < 0.01, "peak {peak}");
+        assert!((160.0 / peak - 0.822).abs() < 0.005);
+    }
+
+    #[test]
+    fn device_lookup() {
+        assert_eq!(Device::by_name("vek280").unwrap().name, "VEK280");
+        assert_eq!(Device::by_name("AIE-MLv2").unwrap().name, "VEK385");
+        assert!(Device::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn memory_tile_capacity() {
+        let d = Device::vek280();
+        // One 512 KiB memory tile per column.
+        assert_eq!(d.mem_tiles, d.cols);
+        assert_eq!(d.mem_tile_bytes, 524288);
+    }
+
+    #[test]
+    fn bandwidths() {
+        let d = Device::vek280();
+        assert_eq!(d.tile_load_bandwidth(), 64); // 2 x 256-bit
+        assert_eq!(d.mem_tile_port_bytes, 64); // 512-bit DMA
+    }
+}

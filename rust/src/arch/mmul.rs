@@ -1,0 +1,275 @@
+//! `aie::mmul` tiling configurations and single-tile performance ceilings.
+//!
+//! The `aie::mmul` class template is parameterized by ⟨M,K,N⟩ and the operand
+//! datatypes; *native* tilings map directly to one hardware intrinsic while
+//! non-native tilings are emulated through multiple intrinsic calls with
+//! extra data manipulation (paper §III-A). Table I of the paper lists the
+//! native tilings this study uses and their theoretical ceilings, which this
+//! module reproduces analytically.
+
+use super::precision::{macs_per_cycle, AieGeneration, PrecisionPair};
+use std::fmt;
+
+/// An ⟨M,K,N⟩ `aie::mmul` tile shape for a precision pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MmulTiling {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub pair: PrecisionPair,
+    /// Maps directly to a single hardware intrinsic.
+    pub native: bool,
+}
+
+impl MmulTiling {
+    pub const fn new(m: usize, k: usize, n: usize, pair: PrecisionPair, native: bool) -> Self {
+        MmulTiling { m, k, n, pair, native }
+    }
+
+    /// MACs performed by one tile multiply.
+    pub fn macs_per_tile(&self) -> usize {
+        self.m * self.k * self.n
+    }
+
+    /// Bytes loaded per tile multiply (A tile + W tile).
+    pub fn bytes_per_tile(&self) -> usize {
+        self.m * self.k * self.pair.act.bytes() + self.k * self.n * self.pair.wgt.bytes()
+    }
+
+    /// Cycles the VMAC pipeline needs per tile multiply, given the
+    /// generation's MAC density: `ceil(M·K·N / W(p_A,p_B))`.
+    pub fn vmac_cycles_per_tile(&self, generation: AieGeneration) -> usize {
+        let w = macs_per_cycle(generation, self.pair).unwrap_or(1) as usize;
+        self.macs_per_tile().div_ceil(w)
+    }
+
+    /// Load-port cycles per tile multiply: two 256-bit (32 B) load ports,
+    /// one dedicated to A and one to W (paper: VLDA / VLDB from each unit).
+    /// The slower port bounds the load stage.
+    pub fn load_cycles_per_tile(&self, load_port_bytes: usize) -> usize {
+        let a_bytes = self.m * self.k * self.pair.act.bytes();
+        let w_bytes = self.k * self.n * self.pair.wgt.bytes();
+        let a_cyc = a_bytes.div_ceil(load_port_bytes);
+        let w_cyc = w_bytes.div_ceil(load_port_bytes);
+        a_cyc.max(w_cyc)
+    }
+
+    /// Effective steady-state cycles per tile multiply for a *single-tile
+    /// schedule* (no accumulator blocking): the slowest of VMAC / VLDA /
+    /// VLDB stages (paper: "per-tile efficiency is limited by the slowest
+    /// stage among VLDA, VLDB, or VMAC").
+    pub fn single_tile_cycles(&self, generation: AieGeneration, load_port_bytes: usize) -> usize {
+        self.vmac_cycles_per_tile(generation)
+            .max(self.load_cycles_per_tile(load_port_bytes))
+    }
+
+    /// Effective steady-state cycles per tile multiply under the 2×2
+    /// accumulator scheme: each loaded A tile is reused across 2 W tiles and
+    /// vice versa, so per-tile load traffic halves and the VMAC stage
+    /// dominates for all native tilings.
+    pub fn blocked_cycles(&self, generation: AieGeneration, load_port_bytes: usize) -> usize {
+        let vmac = self.vmac_cycles_per_tile(generation);
+        // With 2x2 blocking each load feeds two tile-multiplies.
+        let a_bytes = self.m * self.k * self.pair.act.bytes();
+        let w_bytes = self.k * self.n * self.pair.wgt.bytes();
+        let load = (a_bytes.div_ceil(load_port_bytes)).max(w_bytes.div_ceil(load_port_bytes));
+        vmac.max(load.div_ceil(2))
+    }
+
+    /// Peak sustained MAC/cycle for this tiling with the blocked schedule.
+    pub fn peak_macs_per_cycle(&self, generation: AieGeneration, load_port_bytes: usize) -> f64 {
+        self.macs_per_tile() as f64 / self.blocked_cycles(generation, load_port_bytes) as f64
+    }
+}
+
+impl fmt::Display for MmulTiling {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "<{},{},{}> {}", self.m, self.k, self.n, self.pair)
+    }
+}
+
+/// The representative native tilings selected in the paper (Table I).
+pub fn native_tilings() -> Vec<MmulTiling> {
+    vec![
+        MmulTiling::new(4, 8, 8, PrecisionPair::I8I8, true),
+        MmulTiling::new(4, 4, 8, PrecisionPair::I16I8, true),
+        MmulTiling::new(4, 4, 4, PrecisionPair::I16I16, true),
+    ]
+}
+
+/// The full set of tilings the tool supports (a superset of Table I;
+/// non-native entries are emulated and modeled with an efficiency penalty).
+pub fn supported_tilings() -> Vec<MmulTiling> {
+    let mut v = native_tilings();
+    v.extend(native_tilings_v2());
+    v.extend([
+        // Additional native shapes for AIE-ML per AMD's table.
+        MmulTiling::new(2, 8, 8, PrecisionPair::I8I8, true),
+        MmulTiling::new(4, 8, 4, PrecisionPair::I8I8, true),
+        MmulTiling::new(8, 8, 4, PrecisionPair::I8I8, true),
+        MmulTiling::new(2, 4, 8, PrecisionPair::I16I8, true),
+        MmulTiling::new(4, 4, 4, PrecisionPair::I16I8, true),
+        MmulTiling::new(2, 4, 4, PrecisionPair::I16I16, true),
+        MmulTiling::new(4, 2, 4, PrecisionPair::I16I16, true),
+        // Non-native examples (emulated via two intrinsic calls).
+        MmulTiling::new(4, 16, 8, PrecisionPair::I8I8, false),
+        MmulTiling::new(8, 4, 4, PrecisionPair::I16I16, false),
+    ]);
+    v
+}
+
+/// AIE-MLv2 native tilings: the wider MAC array (2x density) makes larger
+/// ⟨M,K,N⟩ shapes single-intrinsic (paper §III: "using more blocks can
+/// improve accumulator usage on AIE-MLv2 devices").
+pub fn native_tilings_v2() -> Vec<MmulTiling> {
+    vec![
+        MmulTiling::new(8, 8, 8, PrecisionPair::I8I8, true),
+        MmulTiling::new(8, 4, 8, PrecisionPair::I16I8, true),
+        MmulTiling::new(4, 4, 8, PrecisionPair::I16I16, true),
+    ]
+}
+
+/// Pick the paper's preferred native tiling for a precision pair.
+pub fn default_tiling(pair: PrecisionPair) -> Option<MmulTiling> {
+    native_tilings().into_iter().find(|t| t.pair == pair)
+}
+
+/// Generation-aware default tiling (AIE-MLv2 forward compatibility).
+pub fn default_tiling_for(generation: AieGeneration, pair: PrecisionPair) -> Option<MmulTiling> {
+    match generation {
+        AieGeneration::AieMlV2 => native_tilings_v2().into_iter().find(|t| t.pair == pair),
+        _ => default_tiling(pair),
+    }
+}
+
+/// One row of Table I: theoretical single-tile ceiling for a tiling.
+#[derive(Debug, Clone)]
+pub struct CeilingRow {
+    pub tiling: (usize, usize, usize),
+    pub datatype: String,
+    pub native: bool,
+    pub mac_per_cycle: u32,
+    pub gmac_s: f64,
+    pub gop_s: f64,
+}
+
+/// Reproduce Table I for a given generation and clock.
+pub fn table1_ceilings(generation: AieGeneration, freq_ghz: f64) -> Vec<CeilingRow> {
+    native_tilings()
+        .into_iter()
+        .map(|t| {
+            let w = macs_per_cycle(generation, t.pair).unwrap();
+            let gmac = w as f64 * freq_ghz;
+            CeilingRow {
+                tiling: (t.m, t.k, t.n),
+                datatype: t.pair.to_string(),
+                native: t.native,
+                mac_per_cycle: w,
+                gmac_s: gmac,
+                gop_s: 2.0 * gmac,
+            }
+        })
+        .collect()
+}
+
+/// Peak GOP/s of one tile for a precision pair (2 ops per MAC).
+pub fn tile_peak_gops(generation: AieGeneration, pair: PrecisionPair, freq_ghz: f64) -> f64 {
+    2.0 * macs_per_cycle(generation, pair).unwrap_or(0) as f64 * freq_ghz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LOAD_PORT_BYTES: usize = 32; // 256-bit
+
+    #[test]
+    fn table1_rows_match_paper() {
+        let rows = table1_ceilings(AieGeneration::AieMl, 1.25);
+        assert_eq!(rows.len(), 3);
+        // <4,8,8> i8xi8: 256 MAC/cyc, 320 GMAC/s, 640 GOP/s
+        assert_eq!(rows[0].tiling, (4, 8, 8));
+        assert_eq!(rows[0].mac_per_cycle, 256);
+        assert!((rows[0].gmac_s - 320.0).abs() < 1e-9);
+        assert!((rows[0].gop_s - 640.0).abs() < 1e-9);
+        // <4,4,8> i16xi8: 128, 160, 320
+        assert_eq!(rows[1].mac_per_cycle, 128);
+        assert!((rows[1].gop_s - 320.0).abs() < 1e-9);
+        // <4,4,4> i16xi16: 64, 80, 160
+        assert_eq!(rows[2].mac_per_cycle, 64);
+        assert!((rows[2].gop_s - 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_tilings_sustain_one_vmac_per_cycle_blocked() {
+        // With the 2x2 accumulator scheme every native tiling from Table I
+        // should reach 1 tile-multiply per cycle (VMAC-bound, not load-bound).
+        for t in native_tilings() {
+            assert_eq!(
+                t.blocked_cycles(AieGeneration::AieMl, LOAD_PORT_BYTES),
+                t.vmac_cycles_per_tile(AieGeneration::AieMl),
+                "tiling {t} should be VMAC-bound under 2x2 blocking"
+            );
+        }
+    }
+
+    #[test]
+    fn i8_tile_load_bound_without_blocking() {
+        // <4,8,8> i8: A tile 32 B (1 cyc), W tile 64 B (2 cyc) -> load-bound
+        // at 2 cycles/tile in a single-tile schedule; blocking recovers it.
+        let t = MmulTiling::new(4, 8, 8, PrecisionPair::I8I8, true);
+        assert_eq!(t.vmac_cycles_per_tile(AieGeneration::AieMl), 1);
+        assert_eq!(t.load_cycles_per_tile(LOAD_PORT_BYTES), 2);
+        assert_eq!(t.single_tile_cycles(AieGeneration::AieMl, LOAD_PORT_BYTES), 2);
+        assert_eq!(t.blocked_cycles(AieGeneration::AieMl, LOAD_PORT_BYTES), 1);
+    }
+
+    #[test]
+    fn gemv_memory_ceiling() {
+        // Paper §III-A: two 256-bit load ports = 64 B/cycle, i.e. only
+        // ~32 int8 MAC/cycle without reuse (GEMV regime).
+        let bytes_per_cycle = 2 * LOAD_PORT_BYTES;
+        let macs_no_reuse = bytes_per_cycle / 2; // one A byte + one W byte per MAC
+        assert_eq!(macs_no_reuse, 32);
+    }
+
+    #[test]
+    fn v2_tilings_single_cycle_on_v2() {
+        // Each v2 native tiling is one VMAC on AIE-MLv2 (2x MAC density),
+        // and stays load-feedable with the wider 512-bit v2 load ports.
+        for t in native_tilings_v2() {
+            assert_eq!(t.vmac_cycles_per_tile(AieGeneration::AieMlV2), 1, "{t}");
+            assert_eq!(
+                t.blocked_cycles(AieGeneration::AieMlV2, 64),
+                1,
+                "{t} must stay VMAC-bound with 64 B load ports"
+            );
+        }
+    }
+
+    #[test]
+    fn generation_aware_defaults() {
+        let ml = default_tiling_for(AieGeneration::AieMl, PrecisionPair::I8I8).unwrap();
+        let v2 = default_tiling_for(AieGeneration::AieMlV2, PrecisionPair::I8I8).unwrap();
+        assert_eq!((ml.m, ml.k, ml.n), (4, 8, 8));
+        assert_eq!((v2.m, v2.k, v2.n), (8, 8, 8));
+    }
+
+    #[test]
+    fn default_tilings_exist_for_all_pairs() {
+        for pair in [PrecisionPair::I8I8, PrecisionPair::I16I8, PrecisionPair::I16I16] {
+            let t = default_tiling(pair).unwrap();
+            assert!(t.native);
+            assert_eq!(t.pair, pair);
+        }
+    }
+
+    #[test]
+    fn macs_and_bytes_per_tile() {
+        let t = MmulTiling::new(4, 8, 8, PrecisionPair::I8I8, true);
+        assert_eq!(t.macs_per_tile(), 256);
+        assert_eq!(t.bytes_per_tile(), 32 + 64);
+        let t16 = MmulTiling::new(4, 4, 4, PrecisionPair::I16I16, true);
+        assert_eq!(t16.bytes_per_tile(), 32 + 32);
+    }
+}

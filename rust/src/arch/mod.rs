@@ -1,0 +1,17 @@
+//! Architecture model of AMD Versal AI Engine devices.
+//!
+//! This module is the static substrate everything else builds on: integer
+//! precisions and the MAC-density table (`precision`), `aie::mmul` tiling
+//! shapes with their analytic ceilings (`mmul`), and whole-device
+//! descriptions (`device`).
+
+pub mod device;
+pub mod mmul;
+pub mod precision;
+
+pub use device::Device;
+pub use mmul::{
+    default_tiling, default_tiling_for, native_tilings, native_tilings_v2, supported_tilings,
+    table1_ceilings, tile_peak_gops, CeilingRow, MmulTiling,
+};
+pub use precision::{macs_per_cycle, AieGeneration, Dtype, PrecisionPair};

@@ -1,0 +1,202 @@
+//! Integer datatypes and the AIE-ML MAC-throughput table `W(p_A, p_B)`.
+//!
+//! The AIE-ML vector unit issues one vector multiply-accumulate (VMAC) per
+//! cycle; the number of parallel MACs inside that VMAC depends on the operand
+//! precision pair. Values follow AMD's published performance table for the
+//! AIE-ML generation at 1.25 GHz (paper Table I / ref [20]).
+
+use std::fmt;
+
+/// Integer datatypes supported on the AIE-ML datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    I8,
+    I16,
+    I32,
+    I64,
+}
+
+impl Dtype {
+    /// Width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Dtype::I8 => 8,
+            Dtype::I16 => 16,
+            Dtype::I32 => 32,
+            Dtype::I64 => 64,
+        }
+    }
+
+    /// Width in bytes.
+    pub fn bytes(self) -> usize {
+        (self.bits() / 8) as usize
+    }
+
+    /// Inclusive representable range.
+    pub fn range(self) -> (i64, i64) {
+        match self {
+            Dtype::I8 => (i8::MIN as i64, i8::MAX as i64),
+            Dtype::I16 => (i16::MIN as i64, i16::MAX as i64),
+            Dtype::I32 => (i32::MIN as i64, i32::MAX as i64),
+            Dtype::I64 => (i64::MIN, i64::MAX),
+        }
+    }
+
+    /// Saturate `v` into this dtype's range.
+    pub fn saturate(self, v: i64) -> i64 {
+        let (lo, hi) = self.range();
+        v.clamp(lo, hi)
+    }
+
+    /// Parse from the exporter's string form ("int8", "i8", ...).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "i8" | "int8" | "s8" => Some(Dtype::I8),
+            "i16" | "int16" | "s16" => Some(Dtype::I16),
+            "i32" | "int32" | "s32" => Some(Dtype::I32),
+            "i64" | "int64" | "s64" => Some(Dtype::I64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dtype::I8 => "i8",
+            Dtype::I16 => "i16",
+            Dtype::I32 => "i32",
+            Dtype::I64 => "i64",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// An (activation, weight) precision pair, e.g. i16×i8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrecisionPair {
+    pub act: Dtype,
+    pub wgt: Dtype,
+}
+
+impl PrecisionPair {
+    pub const fn new(act: Dtype, wgt: Dtype) -> Self {
+        PrecisionPair { act, wgt }
+    }
+
+    pub const I8I8: PrecisionPair = PrecisionPair::new(Dtype::I8, Dtype::I8);
+    pub const I16I8: PrecisionPair = PrecisionPair::new(Dtype::I16, Dtype::I8);
+    pub const I16I16: PrecisionPair = PrecisionPair::new(Dtype::I16, Dtype::I16);
+
+    /// Accumulator dtype used on AIE-ML for this pair (paper Table II notes):
+    /// 32-bit accumulators for i8×i8 and i16×i8, 64-bit for i16×i16.
+    pub fn acc_dtype(self) -> Dtype {
+        match (self.act, self.wgt) {
+            (Dtype::I16, Dtype::I16) => Dtype::I64,
+            _ => Dtype::I32,
+        }
+    }
+}
+
+impl fmt::Display for PrecisionPair {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.act, self.wgt)
+    }
+}
+
+/// AIE generation. AIE-MLv2 doubles MAC density for the 8-bit path and
+/// widens local memory, but shares the programming model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AieGeneration {
+    /// First-generation AIE (Versal AI Core, e.g. VCK190) — for baselines.
+    Aie,
+    /// Second generation, ML-optimized (VEK280).
+    AieMl,
+    /// Third generation (VEK385).
+    AieMlV2,
+}
+
+impl fmt::Display for AieGeneration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            AieGeneration::Aie => "AIE",
+            AieGeneration::AieMl => "AIE-ML",
+            AieGeneration::AieMlV2 => "AIE-MLv2",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// `W(p_A, p_B)`: parallel MACs per cycle for a precision pair on a given
+/// AIE generation. Returns `None` for unsupported pairs.
+pub fn macs_per_cycle(generation: AieGeneration, p: PrecisionPair) -> Option<u32> {
+    use Dtype::*;
+    let base = match (p.act, p.wgt) {
+        (I8, I8) => 256,
+        (I16, I8) | (I8, I16) => 128,
+        (I16, I16) => 64,
+        _ => return None,
+    };
+    Some(match generation {
+        // First-gen AIE had half the 8-bit MAC density of AIE-ML.
+        AieGeneration::Aie => base / 2,
+        AieGeneration::AieMl => base,
+        // AIE-MLv2 doubles vector MAC density.
+        AieGeneration::AieMlV2 => base * 2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_ranges() {
+        assert_eq!(Dtype::I8.range(), (-128, 127));
+        assert_eq!(Dtype::I16.range(), (-32768, 32767));
+        assert_eq!(Dtype::I8.saturate(300), 127);
+        assert_eq!(Dtype::I8.saturate(-300), -128);
+        assert_eq!(Dtype::I16.saturate(1234), 1234);
+    }
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for d in [Dtype::I8, Dtype::I16, Dtype::I32, Dtype::I64] {
+            assert_eq!(Dtype::parse(&d.to_string()), Some(d));
+        }
+        assert_eq!(Dtype::parse("int8"), Some(Dtype::I8));
+        assert_eq!(Dtype::parse("float32"), None);
+    }
+
+    #[test]
+    fn mac_table_matches_paper_table1() {
+        // Paper Table I: W(8b,8b)=256, W(16b,8b)=128, W(16b,16b)=64 on AIE-ML.
+        assert_eq!(
+            macs_per_cycle(AieGeneration::AieMl, PrecisionPair::I8I8),
+            Some(256)
+        );
+        assert_eq!(
+            macs_per_cycle(AieGeneration::AieMl, PrecisionPair::I16I8),
+            Some(128)
+        );
+        assert_eq!(
+            macs_per_cycle(AieGeneration::AieMl, PrecisionPair::I16I16),
+            Some(64)
+        );
+    }
+
+    #[test]
+    fn mlv2_doubles_density() {
+        assert_eq!(
+            macs_per_cycle(AieGeneration::AieMlV2, PrecisionPair::I8I8),
+            Some(512)
+        );
+    }
+
+    #[test]
+    fn acc_dtypes_match_paper_footnotes() {
+        assert_eq!(PrecisionPair::I8I8.acc_dtype(), Dtype::I32);
+        assert_eq!(PrecisionPair::I16I8.acc_dtype(), Dtype::I32);
+        assert_eq!(PrecisionPair::I16I16.acc_dtype(), Dtype::I64);
+    }
+}

@@ -1,0 +1,181 @@
+//! Prior AIE-framework baselines (paper Table IV).
+//!
+//! Direct measurement of MaxEVA/AutoMM/GAMA/CHARM/ARIES is impossible here
+//! (different toolchains, first-gen hardware); the paper itself compares
+//! against their *reported* sustained INT8 efficiency and architectural
+//! features. We encode those published characteristics as data — plus an
+//! analytical sanity model that recomputes each framework's efficiency from
+//! its reported sustained TOPS and its device's INT8 peak — so the table is
+//! regenerated rather than transcribed: AIE4ML's row comes from our
+//! simulator's GEMM run, the baselines from their papers' numbers.
+
+use crate::arch::{AieGeneration, Device};
+
+/// Feature matrix + reported performance of one framework.
+#[derive(Debug, Clone)]
+pub struct FrameworkRow {
+    pub name: &'static str,
+    pub generation: AieGeneration,
+    /// Reported sustained INT8 TOPS (midpoint when a range is published).
+    pub sustained_tops: f64,
+    /// Reported efficiency range (% of device INT8 peak), when published
+    /// directly; otherwise derived from `sustained_tops`.
+    pub reported_eff_pct: Option<(f64, f64)>,
+    pub fused_bias_act: bool,
+    pub weights_on_aie: bool,
+    pub activations_on_aie: bool,
+    pub multi_layer: bool,
+    /// Multi-layer support relies on PL-side orchestration.
+    pub multi_layer_via_pl: bool,
+    pub auto_placement: bool,
+    pub aies_used: (usize, usize),
+}
+
+impl FrameworkRow {
+    /// Device INT8 peak the framework's numbers are normalized against.
+    pub fn device(&self) -> Device {
+        match self.generation {
+            AieGeneration::Aie => Device::vck190(),
+            AieGeneration::AieMl | AieGeneration::AieMlV2 => Device::vek280(),
+        }
+    }
+
+    /// Efficiency as % of the device INT8 peak: the reported range when the
+    /// source publishes one, else derived sustained/peak.
+    pub fn efficiency_pct(&self) -> (f64, f64) {
+        if let Some(r) = self.reported_eff_pct {
+            return r;
+        }
+        let pct = 100.0 * self.sustained_tops / self.device().peak_int8_tops();
+        (pct, pct)
+    }
+
+    pub fn utilization_pct(&self) -> f64 {
+        100.0 * self.aies_used.0 as f64 / self.aies_used.1 as f64
+    }
+}
+
+/// The prior-framework rows of Table IV (published numbers; references in
+/// the paper: MaxEVA [13], AutoMM [15], GAMA [19], CHARM [16], ARIES [17]).
+pub fn prior_frameworks() -> Vec<FrameworkRow> {
+    vec![
+        FrameworkRow {
+            name: "AutoMM",
+            generation: AieGeneration::Aie,
+            sustained_tops: 3.5,
+            reported_eff_pct: Some((27.5, 27.5)),
+            fused_bias_act: false,
+            weights_on_aie: false,
+            activations_on_aie: false,
+            multi_layer: true,
+            multi_layer_via_pl: true,
+            auto_placement: false,
+            aies_used: (192, 400),
+        },
+        FrameworkRow {
+            name: "MaxEVA",
+            generation: AieGeneration::Aie,
+            sustained_tops: 7.4,
+            reported_eff_pct: Some((56.0, 60.0)),
+            fused_bias_act: false,
+            weights_on_aie: false,
+            activations_on_aie: false,
+            multi_layer: false,
+            multi_layer_via_pl: false,
+            auto_placement: false,
+            aies_used: (400, 400),
+        },
+        FrameworkRow {
+            name: "GAMA",
+            generation: AieGeneration::AieMl,
+            sustained_tops: 165.0,
+            reported_eff_pct: Some((85.0, 85.0)),
+            fused_bias_act: false,
+            weights_on_aie: false,
+            activations_on_aie: false,
+            multi_layer: false,
+            multi_layer_via_pl: false,
+            auto_placement: false,
+            aies_used: (288, 304),
+        },
+        FrameworkRow {
+            name: "CHARM",
+            generation: AieGeneration::Aie,
+            sustained_tops: 3.9,
+            reported_eff_pct: Some((31.0, 31.0)),
+            fused_bias_act: false,
+            weights_on_aie: false,
+            activations_on_aie: false,
+            multi_layer: true,
+            multi_layer_via_pl: true,
+            auto_placement: false,
+            aies_used: (192, 400),
+        },
+        FrameworkRow {
+            name: "ARIES",
+            generation: AieGeneration::Aie,
+            sustained_tops: 5.7,
+            reported_eff_pct: Some((45.0, 45.0)),
+            fused_bias_act: false,
+            weights_on_aie: false,
+            activations_on_aie: false,
+            multi_layer: true,
+            multi_layer_via_pl: true,
+            auto_placement: true, // within user-defined core groups
+            aies_used: (320, 400),
+        },
+    ]
+}
+
+/// The AIE4ML row, filled from a measured GEMM-at-full-array run.
+pub fn aie4ml_row(measured_gemm_tops: f64, tiles_used: usize) -> FrameworkRow {
+    let device = Device::vek280();
+    let eff = 100.0 * measured_gemm_tops / device.peak_int8_tops();
+    FrameworkRow {
+        name: "AIE4ML",
+        generation: AieGeneration::AieMl,
+        sustained_tops: measured_gemm_tops,
+        reported_eff_pct: Some((eff, eff)),
+        fused_bias_act: true,
+        weights_on_aie: true,
+        activations_on_aie: true,
+        multi_layer: true,
+        multi_layer_via_pl: false,
+        auto_placement: true,
+        aies_used: (tiles_used, device.total_tiles()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_rows_match_paper_table4() {
+        let rows = prior_frameworks();
+        let by_name = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(by_name("MaxEVA").efficiency_pct(), (56.0, 60.0));
+        assert_eq!(by_name("GAMA").efficiency_pct(), (85.0, 85.0));
+        assert!((by_name("AutoMM").utilization_pct() - 48.0).abs() < 0.1);
+        assert!((by_name("GAMA").utilization_pct() - 94.7).abs() < 0.1);
+        assert!(!by_name("GAMA").fused_bias_act);
+        assert!(by_name("ARIES").auto_placement);
+    }
+
+    #[test]
+    fn aie4ml_row_derives_efficiency() {
+        // Paper: 160 TOPS sustained GEMM = 82.2% of INT8 peak, 296/304 tiles.
+        let row = aie4ml_row(160.0, 296);
+        let (lo, _) = row.efficiency_pct();
+        assert!((lo - 82.2).abs() < 0.3, "eff {lo}");
+        assert!((row.utilization_pct() - 97.4).abs() < 0.1);
+        assert!(row.fused_bias_act && row.weights_on_aie && row.activations_on_aie);
+    }
+
+    #[test]
+    fn only_aie4ml_is_fully_on_chip() {
+        for r in prior_frameworks() {
+            assert!(!(r.weights_on_aie && r.activations_on_aie), "{}", r.name);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytical baselines for the paper's comparison tables.
+//!
+//! `frameworks` encodes the prior AIE-framework rows of Table IV;
+//! `devices` the cross-architecture roofline models of Table V. In both
+//! tables the AIE4ML row is produced by our simulator — only the
+//! competitors are literature constants (documented per row).
+
+pub mod devices;
+pub mod frameworks;
+
+pub use devices::{baseline_devices, DeviceRow};
+pub use frameworks::{aie4ml_row, prior_frameworks, FrameworkRow};

@@ -1,0 +1,282 @@
+//! The fully-resolved firmware description — the compiler's output.
+//!
+//! On real hardware this corresponds to the emitted Vitis project (kernel
+//! C++, graph hpp, mem-tile buffer descriptors); here it is additionally the
+//! exact configuration the cycle-approximate simulator executes. Everything
+//! is concrete: per-tile packed weight streams, per-edge mem-tile tiler
+//! programs, placement coordinates.
+
+use crate::arch::{Device, Dtype, MmulTiling};
+use crate::ir::{CascadeGeometry, DenseQuant, NodeId, PlacementRect};
+use crate::sim::dma::Tiler2d;
+
+/// One compute-tile kernel instance.
+#[derive(Debug, Clone)]
+pub struct KernelInst {
+    /// Physical coordinates on the array.
+    pub col: usize,
+    pub row: usize,
+    /// Logical position within the layer: (cascade row index, position along
+    /// the cascade, 0 = west-most).
+    pub cas_row: usize,
+    pub cas_pos: usize,
+    /// Packed weight stream for this tile: the `f_in_slice × f_out_slice`
+    /// transposed weight slice in ⟨K,N⟩ tile-major order (RTP-loaded once,
+    /// resident in local memory).
+    pub weights: Vec<i32>,
+    /// Bias slice (accumulator scale); only the cascade *tail* tile applies
+    /// bias+SRS+activation. Empty elsewhere.
+    pub bias: Vec<i64>,
+    /// Is this the cascade tail (east-most tile of its row)?
+    pub is_tail: bool,
+    /// Local-memory bytes used by weights + double-buffered I/O.
+    pub local_mem_bytes: usize,
+}
+
+/// The mem-tile program for one inter-layer edge.
+#[derive(Debug, Clone)]
+pub struct MemTilePlan {
+    /// Column of the memory tile used (south edge of the consumer's input
+    /// column after placement).
+    pub mem_col: usize,
+    /// Producer-side write tiler (layer_i writes {M_i, N_i} tiles).
+    pub write_tiler: Tiler2d,
+    /// Consumer-side read tiler (layer_{i+1} reads {M_{i+1}, K_{i+1}} tiles).
+    pub read_tiler: Tiler2d,
+    /// Buffer bytes (whole logical activation, single buffer).
+    pub buffer_bytes: usize,
+    /// Ping-pong double buffering enabled.
+    pub ping_pong: bool,
+    /// Element dtype stored in the buffer.
+    pub dtype: Dtype,
+    /// Memory-tile columns the buffer is sharded over (one shard per
+    /// cascade column; each column's memory tile holds only its slice).
+    pub columns: usize,
+}
+
+impl MemTilePlan {
+    pub fn total_bytes(&self) -> usize {
+        if self.ping_pong {
+            self.buffer_bytes * 2
+        } else {
+            self.buffer_bytes
+        }
+    }
+
+    /// Bytes resident in a single memory tile (its shard, ×2 if ping-pong).
+    pub fn per_column_bytes(&self) -> usize {
+        let shard = self.buffer_bytes.div_ceil(self.columns.max(1));
+        if self.ping_pong {
+            shard * 2
+        } else {
+            shard
+        }
+    }
+}
+
+/// One fully-resolved layer.
+#[derive(Debug, Clone)]
+pub struct FirmwareLayer {
+    pub name: String,
+    pub node_id: NodeId,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub use_bias: bool,
+    pub relu: bool,
+    pub quant: DenseQuant,
+    pub tiling: MmulTiling,
+    pub cascade: CascadeGeometry,
+    pub placement: PlacementRect,
+    /// `cascade.cas_num × cascade.cas_len` kernels, row-major by cascade row.
+    pub kernels: Vec<KernelInst>,
+    /// Mem-tile program feeding this layer's input.
+    pub input_plan: MemTilePlan,
+}
+
+impl FirmwareLayer {
+    pub fn kernel(&self, cas_row: usize, cas_pos: usize) -> &KernelInst {
+        &self.kernels[cas_row * self.cascade.cas_len + cas_pos]
+    }
+    pub fn tiles(&self) -> usize {
+        self.kernels.len()
+    }
+    pub fn macs_per_sample(&self) -> usize {
+        self.in_features * self.out_features
+    }
+}
+
+/// The complete firmware package for one model.
+#[derive(Debug, Clone)]
+pub struct Firmware {
+    pub model_name: String,
+    pub device: Device,
+    /// Layers in execution (topological) order.
+    pub layers: Vec<FirmwareLayer>,
+    /// Mem-tile program draining the last layer's output.
+    pub output_plan: MemTilePlan,
+    /// Steady-state batch size the pipeline is configured for.
+    pub batch: usize,
+}
+
+impl Firmware {
+    /// Compute tiles used across all layers.
+    pub fn tiles_used(&self) -> usize {
+        self.layers.iter().map(|l| l.tiles()).sum()
+    }
+
+    /// Total MACs per sample.
+    pub fn macs_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.macs_per_sample()).sum()
+    }
+
+    /// Total ops per sample (2 per MAC).
+    pub fn ops_per_sample(&self) -> usize {
+        2 * self.macs_per_sample()
+    }
+
+    /// Network input/output feature counts.
+    pub fn input_features(&self) -> usize {
+        self.layers.first().map(|l| l.in_features).unwrap_or(0)
+    }
+    pub fn output_features(&self) -> usize {
+        self.layers.last().map(|l| l.out_features).unwrap_or(0)
+    }
+
+    /// Sanity invariants the emission pass guarantees; exercised by tests
+    /// and by `aie4ml compile --verify`.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        let cols = self.device.cols - self.device.reserved_cols;
+        let rows = self.device.rows;
+        // Placements legal + non-overlapping.
+        for (i, a) in self.layers.iter().enumerate() {
+            ensure!(
+                a.placement.fits(cols, rows),
+                "layer {} placement out of bounds: {:?}",
+                a.name,
+                a.placement
+            );
+            for b in &self.layers[i + 1..] {
+                ensure!(
+                    !a.placement.overlaps(&b.placement),
+                    "layers {} and {} overlap",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+        for l in &self.layers {
+            // Kernel grid complete and coordinates inside the rect.
+            ensure!(
+                l.kernels.len() == l.cascade.tiles(),
+                "layer {}: {} kernels for {} cascade tiles",
+                l.name,
+                l.kernels.len(),
+                l.cascade.tiles()
+            );
+            for k in &l.kernels {
+                ensure!(
+                    k.col >= l.placement.col
+                        && k.col < l.placement.col + l.placement.width
+                        && k.row >= l.placement.row
+                        && k.row < l.placement.row + l.placement.height,
+                    "layer {}: kernel at ({},{}) outside rect {:?}",
+                    l.name,
+                    k.col,
+                    k.row,
+                    l.placement
+                );
+                // Tail tiles carry bias (when used); heads/mids don't.
+                if k.is_tail {
+                    ensure!(
+                        !l.use_bias || k.bias.len() == l.cascade.f_out_slice,
+                        "layer {}: tail bias length",
+                        l.name
+                    );
+                } else {
+                    ensure!(k.bias.is_empty(), "layer {}: non-tail tile has bias", l.name);
+                }
+                // Local memory budget.
+                ensure!(
+                    k.local_mem_bytes <= self.device.local_mem_bytes,
+                    "layer {}: tile ({},{}) uses {} B local memory (limit {})",
+                    l.name,
+                    k.col,
+                    k.row,
+                    k.local_mem_bytes,
+                    self.device.local_mem_bytes
+                );
+            }
+            // Mem-tile buffer shard fits one memory tile.
+            ensure!(
+                l.input_plan.per_column_bytes() <= self.device.mem_tile_bytes,
+                "layer {}: input mem-tile shard {} B exceeds {} B",
+                l.name,
+                l.input_plan.per_column_bytes(),
+                self.device.mem_tile_bytes
+            );
+        }
+        ensure!(
+            self.tiles_used() <= self.device.placeable_tiles(),
+            "firmware uses {} tiles, device has {}",
+            self.tiles_used(),
+            self.device.placeable_tiles()
+        );
+        Ok(())
+    }
+
+    /// Serialize a structural summary to pretty JSON (weights elided — they
+    /// live in the packed binary blobs next to the project).
+    pub fn to_json(&self) -> anyhow::Result<String> {
+        use crate::util::json::{obj, Value};
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                obj([
+                    ("name", Value::from(l.name.as_str())),
+                    ("in_features", Value::from(l.in_features)),
+                    ("out_features", Value::from(l.out_features)),
+                    ("use_bias", Value::from(l.use_bias)),
+                    ("relu", Value::from(l.relu)),
+                    ("dtype", Value::from(l.quant.input.dtype.to_string())),
+                    ("acc_dtype", Value::from(l.quant.acc_dtype.to_string())),
+                    ("shift", Value::from(l.quant.shift)),
+                    (
+                        "tiling",
+                        Value::from(vec![l.tiling.m, l.tiling.k, l.tiling.n]),
+                    ),
+                    (
+                        "cascade",
+                        obj([
+                            ("cas_len", Value::from(l.cascade.cas_len)),
+                            ("cas_num", Value::from(l.cascade.cas_num)),
+                            ("f_in_slice", Value::from(l.cascade.f_in_slice)),
+                            ("f_out_slice", Value::from(l.cascade.f_out_slice)),
+                        ]),
+                    ),
+                    (
+                        "placement",
+                        Value::from(vec![
+                            l.placement.col,
+                            l.placement.row,
+                            l.placement.width,
+                            l.placement.height,
+                        ]),
+                    ),
+                    ("mem_col", Value::from(l.input_plan.mem_col)),
+                    ("mem_bytes_per_column", Value::from(l.input_plan.per_column_bytes())),
+                ])
+            })
+            .collect();
+        Ok(obj([
+            ("model", Value::from(self.model_name.as_str())),
+            ("device", Value::from(self.device.name.as_str())),
+            ("batch", Value::from(self.batch)),
+            ("tiles_used", Value::from(self.tiles_used())),
+            ("macs_per_sample", Value::from(self.macs_per_sample())),
+            ("layers", Value::Array(layers)),
+        ])
+        .to_string_pretty())
+    }
+}

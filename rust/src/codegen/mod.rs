@@ -1,0 +1,7 @@
+//! Code generation: the resolved firmware package and project rendering.
+
+pub mod firmware;
+pub mod render;
+
+pub use firmware::{Firmware, FirmwareLayer, KernelInst, MemTilePlan};
+pub use render::{render_floorplan, render_graph, render_kernel, write_project};

@@ -1,0 +1,190 @@
+//! Dynamic batcher: groups single-sample requests into device batches.
+//!
+//! Trigger-system style serving: requests arrive one event at a time and
+//! must leave within a deadline, so the batcher flushes on whichever comes
+//! first — a full batch or the batching deadline. The compiled firmware is
+//! specialized to a fixed batch, so partial flushes are zero-padded up to
+//! the firmware batch (padding rows are discarded on the way out; the
+//! mem-tile zero-pad makes this free on hardware).
+
+use crate::sim::functional::Activation;
+use std::time::{Duration, Instant};
+
+/// One queued request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+/// A batch ready for execution.
+#[derive(Debug)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    pub activation: Activation,
+    /// Per-request queueing delay at flush time.
+    pub queue_delays: Vec<Duration>,
+    /// Rows that are real requests (the rest is padding).
+    pub occupancy: usize,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Device batch (must equal the firmware's compiled batch).
+    pub batch: usize,
+    /// Max time the oldest request may wait before a partial flush.
+    pub max_wait: Duration,
+}
+
+/// Accumulates requests and decides when to flush.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    features: usize,
+    pending: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, features: usize) -> Batcher {
+        Batcher { policy, features, pending: Vec::with_capacity(policy.batch) }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        debug_assert_eq!(req.features.len(), self.features);
+        self.pending.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Should we flush now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.len() >= self.policy.batch {
+            return true;
+        }
+        self.pending
+            .first()
+            .map(|r| now.duration_since(r.enqueued) >= self.policy.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Time until the deadline of the oldest pending request (for timers).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending.first().map(|r| {
+            self.policy
+                .max_wait
+                .checked_sub(now.duration_since(r.enqueued))
+                .unwrap_or(Duration::ZERO)
+        })
+    }
+
+    /// Flush up to one device batch, zero-padding to the firmware batch.
+    pub fn flush(&mut self, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let take = self.pending.len().min(self.policy.batch);
+        let reqs: Vec<Request> = self.pending.drain(..take).collect();
+        let occupancy = reqs.len();
+        let mut data = vec![0i32; self.policy.batch * self.features];
+        let mut ids = Vec::with_capacity(occupancy);
+        let mut delays = Vec::with_capacity(occupancy);
+        for (i, r) in reqs.into_iter().enumerate() {
+            data[i * self.features..(i + 1) * self.features].copy_from_slice(&r.features);
+            ids.push(r.id);
+            delays.push(now.duration_since(r.enqueued));
+        }
+        Some(Batch {
+            ids,
+            activation: Activation {
+                batch: self.policy.batch,
+                features: self.features,
+                data,
+            },
+            queue_delays: delays,
+            occupancy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, features: usize, t: Instant) -> Request {
+        Request { id, features: vec![id as i32 % 100; features], enqueued: t }
+    }
+
+    #[test]
+    fn flush_on_full_batch() {
+        let now = Instant::now();
+        let mut b = Batcher::new(
+            BatchPolicy { batch: 4, max_wait: Duration::from_secs(10) },
+            8,
+        );
+        for i in 0..3 {
+            b.push(req(i, 8, now));
+        }
+        assert!(!b.ready(now));
+        b.push(req(3, 8, now));
+        assert!(b.ready(now));
+        let batch = b.flush(now).unwrap();
+        assert_eq!(batch.occupancy, 4);
+        assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_on_deadline_with_padding() {
+        let start = Instant::now();
+        let mut b = Batcher::new(
+            BatchPolicy { batch: 8, max_wait: Duration::from_millis(1) },
+            4,
+        );
+        b.push(req(42, 4, start));
+        let later = start + Duration::from_millis(2);
+        assert!(b.ready(later));
+        let batch = b.flush(later).unwrap();
+        assert_eq!(batch.occupancy, 1);
+        assert_eq!(batch.activation.batch, 8);
+        // Row 0 is the request, rows 1.. are zero padding.
+        assert_eq!(batch.activation.row(0), &[42, 42, 42, 42]);
+        assert!(batch.activation.row(3).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn overfull_queue_flushes_in_order() {
+        let now = Instant::now();
+        let mut b = Batcher::new(
+            BatchPolicy { batch: 2, max_wait: Duration::from_secs(1) },
+            1,
+        );
+        for i in 0..5 {
+            b.push(req(i, 1, now));
+        }
+        assert_eq!(b.flush(now).unwrap().ids, vec![0, 1]);
+        assert_eq!(b.flush(now).unwrap().ids, vec![2, 3]);
+        assert_eq!(b.flush(now).unwrap().ids, vec![4]);
+        assert!(b.flush(now).is_none());
+    }
+
+    #[test]
+    fn deadline_timer() {
+        let start = Instant::now();
+        let mut b = Batcher::new(
+            BatchPolicy { batch: 8, max_wait: Duration::from_millis(100) },
+            1,
+        );
+        assert!(b.next_deadline(start).is_none());
+        b.push(req(0, 1, start));
+        let d = b.next_deadline(start + Duration::from_millis(40)).unwrap();
+        assert!(d <= Duration::from_millis(60));
+    }
+}

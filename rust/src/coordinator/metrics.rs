@@ -1,0 +1,93 @@
+//! Serving metrics: latency percentiles, throughput, batch occupancy.
+
+use std::time::Duration;
+
+/// Streaming metrics accumulator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+    batches: usize,
+    requests: usize,
+    padded_rows: usize,
+    device_busy_us: f64,
+}
+
+/// A point-in-time snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch_occupancy: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub max_latency_us: f64,
+    pub device_busy_us: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&mut self, occupancy: usize, batch: usize, latencies: &[Duration], device_us: f64) {
+        self.batches += 1;
+        self.requests += occupancy;
+        self.padded_rows += batch - occupancy;
+        self.device_busy_us += device_us;
+        for l in latencies {
+            self.latencies_us.push(l.as_secs_f64() * 1e6);
+        }
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
+        };
+        MetricsReport {
+            requests: self.requests,
+            batches: self.batches,
+            mean_batch_occupancy: if self.batches == 0 {
+                0.0
+            } else {
+                self.requests as f64 / (self.requests + self.padded_rows).max(1) as f64
+                    * (self.requests + self.padded_rows) as f64
+                    / self.batches as f64
+            },
+            p50_latency_us: pct(0.50),
+            p99_latency_us: pct(0.99),
+            max_latency_us: sorted.last().copied().unwrap_or(0.0),
+            device_busy_us: self.device_busy_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::new();
+        let lat: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        m.record_batch(100, 128, &lat, 500.0);
+        let r = m.report();
+        assert_eq!(r.requests, 100);
+        assert!((r.p50_latency_us - 50.0).abs() <= 1.5);
+        assert!((r.p99_latency_us - 99.0).abs() <= 1.5);
+        assert_eq!(r.max_latency_us, 100.0);
+        assert_eq!(r.device_busy_us, 500.0);
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = Metrics::new().report();
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.p99_latency_us, 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 serving coordinator: the ultra-low-latency companion runtime.
+//!
+//! The paper positions AIE4ML for trigger-system-like environments where
+//! events arrive continuously and must be classified within microseconds.
+//! This module is that companion: an async request router and dynamic
+//! batcher in front of the compiled firmware, with latency/throughput
+//! metrics. Rust owns the event loop; the firmware package (and on real
+//! hardware, the AIE array) does the math.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher, Request};
+pub use metrics::{Metrics, MetricsReport};
+pub use router::Router;
+pub use server::{Client, Server};

@@ -1,0 +1,190 @@
+//! Multi-model router: one serving endpoint in front of many compiled
+//! firmware instances (the vLLM-router shape, scaled to the trigger world).
+//!
+//! A trigger farm runs several classifiers concurrently (e.g. jet tagging,
+//! muon ID, anomaly scoring) on the same host; the router owns one
+//! [`Server`] per model, routes requests by model name, and aggregates
+//! metrics. Registration is dynamic: models can be added while serving
+//! (the paper's RTP-reload story — new coefficients without rebuilds —
+//! corresponds to re-registering a model under the same name).
+
+use super::metrics::MetricsReport;
+use super::server::Server;
+use crate::codegen::firmware::Firmware;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Routing table entry.
+struct Entry {
+    server: Server,
+    features: usize,
+}
+
+/// The router. Cheap to share (`Arc<Router>`); all methods take `&self`.
+pub struct Router {
+    table: RwLock<HashMap<String, Entry>>,
+    max_wait: Duration,
+    queue_depth: usize,
+}
+
+impl Router {
+    pub fn new(max_wait: Duration, queue_depth: usize) -> Router {
+        Router { table: RwLock::new(HashMap::new()), max_wait, queue_depth }
+    }
+
+    /// Register (or replace) a model. Replacing drains the old server.
+    pub fn register(&self, name: &str, fw: Arc<Firmware>) -> Result<()> {
+        let features = fw.input_features();
+        let server = Server::spawn(fw, self.max_wait, self.queue_depth);
+        let old = self
+            .table
+            .write()
+            .unwrap()
+            .insert(name.to_string(), Entry { server, features });
+        if let Some(e) = old {
+            e.server.shutdown();
+        }
+        Ok(())
+    }
+
+    /// Deregister a model, draining its server; returns its final metrics.
+    pub fn deregister(&self, name: &str) -> Result<MetricsReport> {
+        let entry = self
+            .table
+            .write()
+            .unwrap()
+            .remove(name)
+            .with_context(|| format!("model '{name}' not registered"))?;
+        Ok(entry.server.shutdown())
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.table.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Route one request to `model`. Blocks until the batch it lands in
+    /// completes (same contract as [`super::Client::infer`]).
+    pub fn infer(&self, model: &str, features: Vec<i32>) -> Result<Vec<i32>> {
+        // Clone the client under the read lock, then release it before the
+        // (potentially long) inference wait.
+        let client = {
+            let table = self.table.read().unwrap();
+            let Some(entry) = table.get(model) else {
+                bail!("model '{model}' not registered (have: {:?})", {
+                    let mut v: Vec<&String> = table.keys().collect();
+                    v.sort();
+                    v
+                })
+            };
+            if features.len() != entry.features {
+                bail!(
+                    "model '{model}' expects {} features, got {}",
+                    entry.features,
+                    features.len()
+                );
+            }
+            entry.server.client.clone()
+        };
+        client.infer(features)
+    }
+
+    /// Per-model metrics snapshot.
+    pub fn metrics(&self) -> HashMap<String, MetricsReport> {
+        self.table
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (k.clone(), e.server.metrics()))
+            .collect()
+    }
+
+    /// Drain every server.
+    pub fn shutdown(self) -> HashMap<String, MetricsReport> {
+        self.table
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|(k, e)| (k, e.server.shutdown()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dtype;
+    use crate::harness::models::compile_mlp;
+
+    fn fw(name: &str, dims: &[usize], batch: usize) -> Arc<Firmware> {
+        Arc::new(
+            compile_mlp(name, dims, Dtype::I8, batch, Some((1, 2)))
+                .unwrap()
+                .firmware
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn routes_by_model_name() {
+        let router = Router::new(Duration::from_millis(2), 64);
+        router.register("jets", fw("jets", &[16, 8, 4], 4)).unwrap();
+        router.register("muons", fw("muons", &[24, 8, 2], 4)).unwrap();
+        assert_eq!(router.models(), vec!["jets", "muons"]);
+        let a = router.infer("jets", vec![1; 16]).unwrap();
+        let b = router.infer("muons", vec![1; 24]).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 2);
+        let m = router.shutdown();
+        assert_eq!(m["jets"].requests, 1);
+        assert_eq!(m["muons"].requests, 1);
+    }
+
+    #[test]
+    fn unknown_model_and_bad_shape_rejected() {
+        let router = Router::new(Duration::from_millis(2), 8);
+        router.register("only", fw("only", &[8, 4], 2)).unwrap();
+        assert!(router.infer("nope", vec![0; 8]).is_err());
+        assert!(router.infer("only", vec![0; 7]).is_err());
+        router.shutdown();
+    }
+
+    #[test]
+    fn reregister_replaces_model() {
+        let router = Router::new(Duration::from_millis(2), 8);
+        router.register("m", fw("v1", &[8, 4], 2)).unwrap();
+        let y1 = router.infer("m", vec![5; 8]).unwrap();
+        // New coefficients under the same name (different seed -> weights).
+        router.register("m", fw("v2", &[8, 4], 2)).unwrap();
+        let y2 = router.infer("m", vec![5; 8]).unwrap();
+        assert_eq!(y1.len(), y2.len());
+        assert_ne!(y1, y2, "new weights must change outputs");
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_multi_model_traffic() {
+        let router = Router::new(Duration::from_millis(5), 256);
+        router.register("a", fw("ma", &[8, 4], 4)).unwrap();
+        router.register("b", fw("mb", &[8, 4], 4)).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..6 {
+                let r = &router;
+                scope.spawn(move || {
+                    let model = if t % 2 == 0 { "a" } else { "b" };
+                    for i in 0..20 {
+                        let out = r.infer(model, vec![(i % 5) as i32; 8]).unwrap();
+                        assert_eq!(out.len(), 4);
+                    }
+                });
+            }
+        });
+        // Metrics are recorded after replies are delivered, so only the
+        // post-drain (shutdown) report is exact.
+        let metrics = router.shutdown();
+        assert_eq!(metrics["a"].requests + metrics["b"].requests, 120);
+    }
+}

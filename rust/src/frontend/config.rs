@@ -1,0 +1,231 @@
+//! User configuration directives (the hls4ml config-interface analog).
+//!
+//! Inferred IR attributes can be overridden per layer — bitwidths, cascade
+//! parameters, tiling shapes or placement coordinates — provided they are
+//! valid for the target device; the Resolve and Placement passes honor these
+//! as hard constraints (paper §IV-A).
+
+use crate::ir::{CascadeGeometry, PlacementRect};
+use crate::util::json::Value;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Per-layer overrides.
+#[derive(Debug, Clone, Default)]
+pub struct LayerConfig {
+    /// Explicit ⟨M,K,N⟩ tiling.
+    pub tiling: Option<(usize, usize, usize)>,
+    /// Explicit cascade geometry (cas_len, cas_num).
+    pub cascade: Option<(usize, usize)>,
+    /// Pinned placement anchor (col, row) — hard constraint for B&B.
+    pub place_at: Option<(usize, usize)>,
+}
+
+/// Global compile configuration.
+#[derive(Debug, Clone)]
+pub struct CompileConfig {
+    /// Target device name (default "vek280").
+    pub device: String,
+    /// Placement objective weights (Eq. 2): λ weighs vertical hops,
+    /// µ biases toward lower rows.
+    pub lambda: f64,
+    pub mu: f64,
+    /// Placement start coordinates for the first graph.
+    pub start: (usize, usize),
+    /// Target tiles per layer for the auto-parallelizer; `None` lets the
+    /// Resolve pass balance the whole network across the array.
+    pub tiles_per_layer: Option<usize>,
+    /// Steady-state batch size used for performance reporting.
+    pub batch: usize,
+    /// Branch-and-bound node budget (safety valve for pathological graphs).
+    pub bnb_max_nodes: usize,
+    /// Per-layer overrides keyed by layer name.
+    pub layers: HashMap<String, LayerConfig>,
+}
+
+impl Default for CompileConfig {
+    fn default() -> Self {
+        CompileConfig {
+            device: "vek280".to_string(),
+            lambda: 1.0,
+            mu: 0.05,
+            start: (0, 0),
+            tiles_per_layer: None,
+            batch: 128,
+            bnb_max_nodes: 150_000,
+            layers: HashMap::new(),
+        }
+    }
+}
+
+fn pair_usize(v: &Value) -> anyhow::Result<(usize, usize)> {
+    let a = v.as_array()?;
+    anyhow::ensure!(a.len() == 2, "expected a 2-element array");
+    Ok((a[0].as_usize()?, a[1].as_usize()?))
+}
+
+impl CompileConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<CompileConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    /// Parse a config JSON; all fields optional, defaults as in `Default`.
+    pub fn from_json_str(text: &str) -> anyhow::Result<CompileConfig> {
+        let v = Value::parse(text)?;
+        let mut c = CompileConfig::default();
+        if let Some(d) = v.get("device") {
+            c.device = d.as_str()?.to_string();
+        }
+        if let Some(l) = v.get("lambda") {
+            c.lambda = l.as_f64()?;
+        }
+        if let Some(m) = v.get("mu") {
+            c.mu = m.as_f64()?;
+        }
+        if let Some(s) = v.get("start") {
+            c.start = pair_usize(s)?;
+        }
+        if let Some(t) = v.get("tiles_per_layer") {
+            if !matches!(t, Value::Null) {
+                c.tiles_per_layer = Some(t.as_usize()?);
+            }
+        }
+        if let Some(b) = v.get("batch") {
+            c.batch = b.as_usize()?;
+        }
+        if let Some(n) = v.get("bnb_max_nodes") {
+            c.bnb_max_nodes = n.as_usize()?;
+        }
+        if let Some(layers) = v.get("layers") {
+            for (name, lv) in layers.as_object()? {
+                let mut lc = LayerConfig::default();
+                if let Some(t) = lv.get("tiling") {
+                    let a = t.as_array()?;
+                    anyhow::ensure!(a.len() == 3, "tiling must be [M,K,N]");
+                    lc.tiling = Some((a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?));
+                }
+                if let Some(cas) = lv.get("cascade") {
+                    lc.cascade = Some(pair_usize(cas)?);
+                }
+                if let Some(p) = lv.get("place_at") {
+                    lc.place_at = Some(pair_usize(p)?);
+                }
+                c.layers.insert(name.clone(), lc);
+            }
+        }
+        Ok(c)
+    }
+
+    /// Serialize to JSON (inverse of `from_json_str`).
+    pub fn to_json_string(&self) -> String {
+        let layers: std::collections::BTreeMap<String, Value> = self
+            .layers
+            .iter()
+            .map(|(k, lc)| {
+                let mut fields: Vec<(&str, Value)> = Vec::new();
+                if let Some((m, kk, n)) = lc.tiling {
+                    fields.push(("tiling", Value::from(vec![m, kk, n])));
+                }
+                if let Some((l, n)) = lc.cascade {
+                    fields.push(("cascade", Value::from(vec![l, n])));
+                }
+                if let Some((c, r)) = lc.place_at {
+                    fields.push(("place_at", Value::from(vec![c, r])));
+                }
+                (
+                    k.clone(),
+                    Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()),
+                )
+            })
+            .collect();
+        let mut fields = vec![
+            ("device", Value::from(self.device.as_str())),
+            ("lambda", Value::from(self.lambda)),
+            ("mu", Value::from(self.mu)),
+            ("start", Value::from(vec![self.start.0, self.start.1])),
+            ("batch", Value::from(self.batch)),
+            ("bnb_max_nodes", Value::from(self.bnb_max_nodes)),
+            ("layers", Value::Object(layers)),
+        ];
+        if let Some(t) = self.tiles_per_layer {
+            fields.push(("tiles_per_layer", Value::from(t)));
+        }
+        Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+            .to_string_pretty()
+    }
+
+    pub fn layer(&self, name: &str) -> LayerConfig {
+        self.layers.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Apply a pinned placement from config into a rect, given geometry.
+    pub fn pinned_rect(&self, name: &str, geo: &CascadeGeometry) -> Option<PlacementRect> {
+        self.layer(name).place_at.map(|(col, row)| PlacementRect {
+            col,
+            row,
+            width: geo.cas_len,
+            height: geo.cas_num,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_fig3() {
+        let c = CompileConfig::default();
+        assert_eq!(c.start, (0, 0));
+        assert!((c.lambda - 1.0).abs() < 1e-12);
+        assert!((c.mu - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_override_roundtrip() {
+        let mut c = CompileConfig::default();
+        c.layers.insert(
+            "fc1".into(),
+            LayerConfig {
+                tiling: Some((4, 8, 8)),
+                cascade: Some((4, 4)),
+                place_at: Some((2, 0)),
+            },
+        );
+        let text = c.to_json_string();
+        let c2 = CompileConfig::from_json_str(&text).unwrap();
+        assert_eq!(c2.layer("fc1").cascade, Some((4, 4)));
+        assert_eq!(c2.layer("fc1").tiling, Some((4, 8, 8)));
+        assert_eq!(c2.layer("fc1").place_at, Some((2, 0)));
+        assert_eq!(c2.layer("fc2").cascade, None);
+    }
+
+    #[test]
+    fn partial_config_parses_with_defaults() {
+        let c = CompileConfig::from_json_str(r#"{"batch": 64, "mu": 0.1}"#).unwrap();
+        assert_eq!(c.batch, 64);
+        assert!((c.mu - 0.1).abs() < 1e-12);
+        assert_eq!(c.device, "vek280");
+        assert!(c.tiles_per_layer.is_none());
+    }
+
+    #[test]
+    fn pinned_rect_uses_geometry() {
+        let mut c = CompileConfig::default();
+        c.layers.insert("fc1".into(), LayerConfig { place_at: Some((3, 1)), ..Default::default() });
+        let geo = CascadeGeometry { cas_len: 4, cas_num: 2, f_in_slice: 32, f_out_slice: 64 };
+        let r = c.pinned_rect("fc1", &geo).unwrap();
+        assert_eq!((r.col, r.row, r.width, r.height), (3, 1, 4, 2));
+        assert!(c.pinned_rect("fc2", &geo).is_none());
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        assert!(CompileConfig::from_json_str("{").is_err());
+        assert!(CompileConfig::from_json_str(r#"{"start": [1]}"#).is_err());
+        assert!(
+            CompileConfig::from_json_str(r#"{"layers": {"fc": {"tiling": [1,2]}}}"#).is_err()
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! Model JSON ingestion — the hls4ml-parser substitute.
+//!
+//! The paper reuses the hls4ml frontend to parse quantized Keras/PyTorch
+//! models; our Python exporter (`python/compile/exporter.py`) plays the same
+//! role and emits a neutral JSON description: layer list, shapes, power-of-two
+//! quantizers, and the already-quantized integer weights. This module parses
+//! that JSON (via the in-repo `util::json` parser) into the frontend graph
+//! the Lowering pass consumes.
+
+use crate::arch::Dtype;
+use crate::ir::{Graph, OpKind, QuantSpec};
+use crate::util::json::{JsonError, Value};
+use std::path::Path;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum FrontendError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(#[from] JsonError),
+    #[error("layer {layer}: unknown dtype '{dtype}'")]
+    BadDtype { layer: String, dtype: String },
+    #[error("layer {layer}: weights length {got}, expected {want} (= out_features x in_features)")]
+    BadWeights { layer: String, got: usize, want: usize },
+    #[error("layer {layer}: bias length {got}, expected {want}")]
+    BadBias { layer: String, got: usize, want: usize },
+    #[error("layer {layer}: unsupported layer type '{ty}'")]
+    BadLayerType { layer: String, ty: String },
+    #[error("model has no layers")]
+    Empty,
+}
+
+/// JSON quantizer spec.
+#[derive(Debug, Clone)]
+pub struct JsonQuant {
+    pub dtype: String,
+    pub frac_bits: i32,
+}
+
+impl JsonQuant {
+    pub fn new(dtype: &str, frac_bits: i32) -> JsonQuant {
+        JsonQuant { dtype: dtype.to_string(), frac_bits }
+    }
+
+    pub fn to_spec(&self, layer: &str) -> Result<QuantSpec, FrontendError> {
+        let dtype = Dtype::parse(&self.dtype).ok_or_else(|| FrontendError::BadDtype {
+            layer: layer.to_string(),
+            dtype: self.dtype.clone(),
+        })?;
+        Ok(QuantSpec::new(dtype, self.frac_bits))
+    }
+
+    fn from_json(v: &Value) -> Result<JsonQuant, FrontendError> {
+        Ok(JsonQuant {
+            dtype: v.field("dtype")?.as_str()?.to_string(),
+            frac_bits: v.get("frac_bits").map(|x| x.as_i64()).transpose()? .unwrap_or(0) as i32,
+        })
+    }
+}
+
+/// Per-layer quantization block.
+#[derive(Debug, Clone)]
+pub struct JsonLayerQuant {
+    pub input: JsonQuant,
+    pub weight: JsonQuant,
+    pub output: JsonQuant,
+}
+
+/// One layer entry.
+#[derive(Debug, Clone)]
+pub struct JsonLayer {
+    pub name: String,
+    pub ty: String,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub use_bias: bool,
+    /// Separate ReLU after this layer (Lowering will fuse it).
+    pub relu: bool,
+    pub quant: JsonLayerQuant,
+    /// Quantized integer weights, row-major [out_features][in_features].
+    pub weights: Vec<i32>,
+    /// Quantized integer bias at accumulator scale, length out_features.
+    pub bias: Vec<i64>,
+}
+
+impl JsonLayer {
+    /// Convenience constructor for a dense layer with uniform quantization —
+    /// used pervasively by tests, benches and the synthetic-model builders.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense(
+        name: &str,
+        in_features: usize,
+        out_features: usize,
+        use_bias: bool,
+        relu: bool,
+        act_dtype: &str,
+        wgt_dtype: &str,
+        frac_bits: i32,
+        weights: Vec<i32>,
+        bias: Vec<i64>,
+    ) -> JsonLayer {
+        JsonLayer {
+            name: name.to_string(),
+            ty: "dense".to_string(),
+            in_features,
+            out_features,
+            use_bias,
+            relu,
+            quant: JsonLayerQuant {
+                input: JsonQuant::new(act_dtype, frac_bits),
+                weight: JsonQuant::new(wgt_dtype, frac_bits),
+                output: JsonQuant::new(act_dtype, frac_bits),
+            },
+            weights,
+            bias,
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<JsonLayer, FrontendError> {
+        let q = v.field("quant")?;
+        let weights = match v.get("weights") {
+            Some(arr) => {
+                let arr = arr.as_array()?;
+                let mut out = Vec::with_capacity(arr.len());
+                for x in arr {
+                    out.push(x.as_i64()? as i32);
+                }
+                out
+            }
+            None => Vec::new(),
+        };
+        let bias = match v.get("bias") {
+            Some(arr) => {
+                let arr = arr.as_array()?;
+                let mut out = Vec::with_capacity(arr.len());
+                for x in arr {
+                    out.push(x.as_i64()?);
+                }
+                out
+            }
+            None => Vec::new(),
+        };
+        Ok(JsonLayer {
+            name: v.field("name")?.as_str()?.to_string(),
+            ty: v.field("type")?.as_str()?.to_string(),
+            in_features: v.field("in_features")?.as_usize()?,
+            out_features: v.field("out_features")?.as_usize()?,
+            use_bias: v.get("use_bias").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
+            relu: v.get("relu").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
+            quant: JsonLayerQuant {
+                input: JsonQuant::from_json(q.field("input")?)?,
+                weight: JsonQuant::from_json(q.field("weight")?)?,
+                output: JsonQuant::from_json(q.field("output")?)?,
+            },
+            weights,
+            bias,
+        })
+    }
+}
+
+/// Top-level model description.
+#[derive(Debug, Clone)]
+pub struct JsonModel {
+    pub name: String,
+    pub device: Option<String>,
+    pub layers: Vec<JsonLayer>,
+}
+
+impl JsonModel {
+    pub fn new(name: &str, layers: Vec<JsonLayer>) -> JsonModel {
+        JsonModel { name: name.to_string(), device: None, layers }
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<JsonModel, FrontendError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<JsonModel, FrontendError> {
+        let v = Value::parse(text)?;
+        let layers = v
+            .field("layers")?
+            .as_array()?
+            .iter()
+            .map(JsonLayer::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(JsonModel {
+            name: v.field("name")?.as_str()?.to_string(),
+            device: v.get("device").and_then(|d| d.as_str().ok()).map(str::to_string),
+            layers,
+        })
+    }
+
+    /// Serialize back to JSON (inverse of `from_str`; used to write model
+    /// files and by round-trip tests).
+    pub fn to_json_string(&self) -> String {
+        use crate::util::json::obj;
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let q = |j: &JsonQuant| {
+                    obj([
+                        ("dtype", Value::from(j.dtype.as_str())),
+                        ("frac_bits", Value::from(j.frac_bits as i64)),
+                    ])
+                };
+                obj([
+                    ("name", Value::from(l.name.as_str())),
+                    ("type", Value::from(l.ty.as_str())),
+                    ("in_features", Value::from(l.in_features)),
+                    ("out_features", Value::from(l.out_features)),
+                    ("use_bias", Value::from(l.use_bias)),
+                    ("relu", Value::from(l.relu)),
+                    (
+                        "quant",
+                        obj([
+                            ("input", q(&l.quant.input)),
+                            ("weight", q(&l.quant.weight)),
+                            ("output", q(&l.quant.output)),
+                        ]),
+                    ),
+                    ("weights", Value::from(l.weights.clone())),
+                    ("bias", Value::from(l.bias.clone())),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("name", Value::from(self.name.as_str())),
+            ("layers", Value::Array(layers)),
+        ];
+        if let Some(d) = &self.device {
+            fields.push(("device", Value::from(d.as_str())));
+        }
+        Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+            .to_string_pretty()
+    }
+
+    /// Validate tensor sizes against declared shapes.
+    pub fn validate(&self) -> Result<(), FrontendError> {
+        if self.layers.is_empty() {
+            return Err(FrontendError::Empty);
+        }
+        for l in &self.layers {
+            if l.ty != "dense" {
+                return Err(FrontendError::BadLayerType {
+                    layer: l.name.clone(),
+                    ty: l.ty.clone(),
+                });
+            }
+            let want = l.in_features * l.out_features;
+            if l.weights.len() != want {
+                return Err(FrontendError::BadWeights {
+                    layer: l.name.clone(),
+                    got: l.weights.len(),
+                    want,
+                });
+            }
+            if l.use_bias && l.bias.len() != l.out_features {
+                return Err(FrontendError::BadBias {
+                    layer: l.name.clone(),
+                    got: l.bias.len(),
+                    want: l.out_features,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the frontend IR graph (ReLU still standalone; quantizers and
+    /// weights attached to nodes; AIE attrs untouched).
+    pub fn to_graph(&self) -> Result<Graph, FrontendError> {
+        self.validate()?;
+        let mut g = Graph::new();
+        let input = g.add_node(
+            "input",
+            OpKind::Input { features: self.layers[0].in_features },
+        );
+        let mut prev = input;
+        for l in &self.layers {
+            let id = g.add_node(
+                l.name.clone(),
+                OpKind::Dense {
+                    in_features: l.in_features,
+                    out_features: l.out_features,
+                    use_bias: l.use_bias,
+                    fused_relu: false,
+                },
+            );
+            {
+                // Pre-populate quant attrs from the JSON; the Quantization
+                // pass finalizes acc dtype and shift.
+                let node = g.node_mut(id).unwrap();
+                node.weights = l.weights.clone();
+                node.bias = l.bias.clone();
+                node.attrs.quant = Some(crate::ir::DenseQuant {
+                    input: l.quant.input.to_spec(&l.name)?,
+                    weight: l.quant.weight.to_spec(&l.name)?,
+                    output: l.quant.output.to_spec(&l.name)?,
+                    bias_dtype: Dtype::I32,
+                    acc_dtype: Dtype::I32, // finalized by Quantization pass
+                    shift: 0,              // finalized by Quantization pass
+                });
+            }
+            g.connect(prev, id);
+            prev = id;
+            if l.relu {
+                let r = g.add_node(format!("{}_relu", l.name), OpKind::ReLU);
+                g.connect(prev, r);
+                prev = r;
+            }
+        }
+        let out = g.add_node("output", OpKind::Output);
+        g.connect(prev, out);
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> JsonModel {
+        let mut m = JsonModel::new(
+            "tiny",
+            vec![JsonLayer::dense("fc1", 2, 2, true, true, "int8", "int8", 4, vec![1, 2, 3, 4], vec![10, -10])],
+        );
+        m.device = Some("vek280".into());
+        m
+    }
+
+    #[test]
+    fn parse_and_build() {
+        // Round-trip through real JSON text, then build the graph.
+        let text = tiny_model().to_json_string();
+        let m = JsonModel::from_str(&text).unwrap();
+        assert_eq!(m.device.as_deref(), Some("vek280"));
+        let g = m.to_graph().unwrap();
+        // input, fc1, fc1_relu, output
+        assert_eq!(g.nodes.len(), 4);
+        let dense = g.dense_order().unwrap();
+        assert_eq!(dense.len(), 1);
+        let n = g.node(dense[0]).unwrap();
+        assert_eq!(n.weights, vec![1, 2, 3, 4]);
+        assert_eq!(n.bias, vec![10, -10]);
+        let q = n.attrs.quant.unwrap();
+        assert_eq!(q.input.frac_bits, 4);
+    }
+
+    #[test]
+    fn parse_from_raw_exporter_shape() {
+        // The exact shape exporter.py writes.
+        let text = r#"{
+            "name": "raw", "device": "vek280",
+            "layers": [{
+                "name": "fc1", "type": "dense",
+                "in_features": 2, "out_features": 1,
+                "use_bias": true, "relu": false,
+                "quant": {"input": {"dtype": "int8", "frac_bits": 6},
+                          "weight": {"dtype": "int8", "frac_bits": 6},
+                          "output": {"dtype": "int8", "frac_bits": 6}},
+                "weights": [5, -3], "bias": [100]
+            }]
+        }"#;
+        let m = JsonModel::from_str(text).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.layers[0].weights, vec![5, -3]);
+        assert_eq!(m.layers[0].bias, vec![100]);
+    }
+
+    #[test]
+    fn bad_weights_rejected() {
+        let mut m = tiny_model();
+        m.layers[0].weights.pop();
+        assert!(matches!(m.validate(), Err(FrontendError::BadWeights { .. })));
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let mut m = tiny_model();
+        m.layers[0].quant.input.dtype = "fp8".into();
+        assert!(m.to_graph().is_err());
+    }
+
+    #[test]
+    fn bad_bias_rejected() {
+        let mut m = tiny_model();
+        m.layers[0].bias.push(0);
+        assert!(matches!(m.validate(), Err(FrontendError::BadBias { .. })));
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let m = JsonModel::new("x", vec![]);
+        assert!(matches!(m.validate(), Err(FrontendError::Empty)));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_payloads() {
+        let m = tiny_model();
+        let m2 = JsonModel::from_str(&m.to_json_string()).unwrap();
+        assert_eq!(m2.layers[0].weights, m.layers[0].weights);
+        assert_eq!(m2.layers[0].bias, m.layers[0].bias);
+        assert_eq!(m2.layers[0].quant.weight.frac_bits, 4);
+    }
+}

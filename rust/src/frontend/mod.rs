@@ -1,0 +1,10 @@
+//! Frontend: model ingestion and user configuration.
+//!
+//! `json_model` parses the exporter's neutral JSON (the hls4ml-parser role);
+//! `config` carries the user directives that override inferred attributes.
+
+pub mod config;
+pub mod json_model;
+
+pub use config::{CompileConfig, LayerConfig};
+pub use json_model::{FrontendError, JsonLayer, JsonModel, JsonQuant};

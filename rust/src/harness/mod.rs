@@ -1,0 +1,35 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation section. Each submodule exposes `generate()` (data),
+//! `paper()` (the published values) and `render()` (formatted
+//! measured-vs-paper output). Criterion benches and the `aie4ml bench`
+//! CLI subcommand call into these.
+
+pub mod fig3;
+pub mod fig4;
+pub mod models;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+use anyhow::Result;
+
+/// Render every table/figure, in paper order.
+pub fn render_all() -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&table1::render());
+    out.push('\n');
+    out.push_str(&table2::render()?);
+    out.push('\n');
+    out.push_str(&fig3::render()?);
+    out.push('\n');
+    out.push_str(&fig4::render(128)?);
+    out.push('\n');
+    out.push_str(&table3::render()?);
+    out.push('\n');
+    out.push_str(&table4::render()?);
+    out.push('\n');
+    out.push_str(&table5::render()?);
+    Ok(out)
+}

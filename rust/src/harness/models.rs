@@ -1,0 +1,182 @@
+//! Synthetic model builders shared by benches, examples and tests.
+//!
+//! Weights are generated from a deterministic PCG stream seeded by the
+//! FNV-1a hash of the model name, so the Rust-side builders and the Python
+//! exporter (`python/compile/exporter.py`) can agree on seeds; bit-identical
+//! payload sharing goes through the model JSON file.
+
+use crate::arch::Dtype;
+use crate::frontend::{CompileConfig, JsonLayer, JsonModel, LayerConfig};
+use crate::passes::{compile, Model};
+use crate::util::rng::{fnv1a, Pcg32};
+use anyhow::Result;
+
+/// Seed derived from a model name (stable across runs and languages).
+pub fn name_seed(name: &str) -> u64 {
+    fnv1a(name)
+}
+
+/// Specification of one synthetic dense layer.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub relu: bool,
+    pub dtype_act: Dtype,
+    pub dtype_wgt: Dtype,
+}
+
+/// Build a JsonModel with deterministic random weights.
+pub fn synth_model(name: &str, layers: &[LayerSpec], frac_bits: i32) -> JsonModel {
+    let mut rng = Pcg32::seed_from_u64(name_seed(name));
+    let jlayers: Vec<JsonLayer> = layers
+        .iter()
+        .map(|l| {
+            let (wlo, whi) = l.dtype_wgt.range();
+            let weights: Vec<i32> = (0..l.in_features * l.out_features)
+                .map(|_| rng.gen_i32_in(wlo, whi))
+                .collect();
+            let bias: Vec<i64> =
+                (0..l.out_features).map(|_| rng.gen_range_i64(-512, 512)).collect();
+            let mut layer = JsonLayer::dense(
+                &l.name,
+                l.in_features,
+                l.out_features,
+                true,
+                l.relu,
+                &l.dtype_act.to_string(),
+                &l.dtype_wgt.to_string(),
+                frac_bits,
+                weights,
+                bias,
+            );
+            layer.quant.weight.dtype = l.dtype_wgt.to_string();
+            layer
+        })
+        .collect();
+    let mut m = JsonModel::new(name, jlayers);
+    m.device = Some("vek280".to_string());
+    m
+}
+
+/// A uniform MLP: `dims[0] -> dims[1] -> ...`, ReLU on every layer
+/// (paper §V-B: "every linear layer is immediately followed by a fused
+/// ReLU activation, both within Mixer MLPs and standalone MLP layers").
+pub fn mlp_spec(dims: &[usize], dtype: Dtype) -> Vec<LayerSpec> {
+    dims.windows(2)
+        .enumerate()
+        .map(|(i, w)| LayerSpec {
+            name: format!("fc{}", i + 1),
+            in_features: w[0],
+            out_features: w[1],
+            relu: true,
+            dtype_act: dtype,
+            dtype_wgt: dtype,
+        })
+        .collect()
+}
+
+/// Compile a synthetic MLP with an explicit per-layer cascade geometry.
+pub fn compile_mlp(
+    name: &str,
+    dims: &[usize],
+    dtype: Dtype,
+    batch: usize,
+    cascade: Option<(usize, usize)>,
+) -> Result<Model> {
+    let spec = mlp_spec(dims, dtype);
+    let json = synth_model(name, &spec, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = batch;
+    if let Some(c) = cascade {
+        for l in &spec {
+            cfg.layers
+                .insert(l.name.clone(), LayerConfig { cascade: Some(c), ..Default::default() });
+        }
+    }
+    compile(&json, cfg)
+}
+
+/// The paper's cross-device workload: 7-layer 512×512 MLP, int8
+/// (Table III row 5 / Table V).
+pub fn seven_layer_mlp(batch: usize) -> Result<Model> {
+    // 7 dense layers of hidden size 512; (4,8) cascades divide 512 exactly
+    // (f_in_slice 128, f_out_slice 64) -> zero padding waste, 32 tiles/layer.
+    compile_mlp("mlp7", &[512; 8], Dtype::I8, batch, Some((4, 8)))
+}
+
+/// MLP-Mixer sub-blocks of Table III. Each is two linear layers applied to
+/// a reshaped tensor; `rows` is the GEMM row count after reshape.
+pub struct MixerBlock {
+    pub name: &'static str,
+    pub rows: usize,
+    pub dims: [usize; 3],
+    pub mops: f64,
+}
+
+/// Table III workloads: token/channel-mixing blocks + standalone MLPs.
+pub fn table3_blocks() -> Vec<MixerBlock> {
+    vec![
+        // input [B*C, T] = [512, 196], layer 196 -> 256 -> 196
+        MixerBlock { name: "token_mlp_s16", rows: 512, dims: [196, 256, 196], mops: 102.0 },
+        // input [B*T, C] = [196, 512], layer 512 -> 2048 -> 512
+        MixerBlock { name: "channel_mlp_s16", rows: 196, dims: [512, 2048, 512], mops: 822.0 },
+        // input [B*C, T] = [1024, 196], layer 196 -> 512 -> 196
+        MixerBlock { name: "token_mlp_l16", rows: 1024, dims: [196, 512, 196], mops: 411.0 },
+        // input [256, 1024], hidden 1024, 2 layers
+        MixerBlock { name: "mlp_2layer", rows: 256, dims: [1024, 1024, 1024], mops: 1074.0 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_is_stable() {
+        assert_eq!(name_seed("mlp7"), name_seed("mlp7"));
+        assert_ne!(name_seed("mlp7"), name_seed("mlp8"));
+    }
+
+    #[test]
+    fn synth_model_deterministic() {
+        let a = synth_model("det", &mlp_spec(&[32, 16], Dtype::I8), 4);
+        let b = synth_model("det", &mlp_spec(&[32, 16], Dtype::I8), 4);
+        assert_eq!(a.layers[0].weights, b.layers[0].weights);
+        assert_eq!(a.layers[0].bias, b.layers[0].bias);
+    }
+
+    #[test]
+    fn weights_in_dtype_range() {
+        let m = synth_model("rng", &mlp_spec(&[64, 64], Dtype::I8), 4);
+        assert!(m.layers[0].weights.iter().all(|&w| (-128..=127).contains(&w)));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn seven_layer_compiles_and_fits() {
+        let m = seven_layer_mlp(128).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        assert_eq!(fw.layers.len(), 7);
+        assert_eq!(fw.tiles_used(), 7 * 32);
+        assert!(fw.tiles_used() <= fw.device.placeable_tiles());
+        // Paper: 3.7 MOPs per sample for the 7-layer MLP.
+        let mops = fw.ops_per_sample() as f64 / 1e6;
+        assert!((mops - 3.67).abs() < 0.05, "mops {mops}");
+    }
+
+    #[test]
+    fn table3_mops_match_paper() {
+        for b in table3_blocks() {
+            let macs: usize = b.dims.windows(2).map(|w| w[0] * w[1]).sum();
+            let mops = (2 * macs * b.rows) as f64 / 1e6;
+            assert!(
+                (mops - b.mops).abs() / b.mops < 0.02,
+                "{}: computed {mops} MOPs vs paper {}",
+                b.name,
+                b.mops
+            );
+        }
+    }
+}

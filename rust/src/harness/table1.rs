@@ -1,0 +1,63 @@
+//! Table I — single AIE-ML tile ceilings for selected tilings/datatypes.
+
+use crate::arch::{table1_ceilings, AieGeneration, CeilingRow};
+use std::fmt::Write as _;
+
+pub use crate::arch::mmul::CeilingRow as Row;
+
+/// Generate the Table I rows (analytical, from the architecture model).
+pub fn generate() -> Vec<CeilingRow> {
+    table1_ceilings(AieGeneration::AieMl, 1.25)
+}
+
+/// Paper-reported values for comparison: (tiling, dtype, MAC/cyc, GMAC/s, GOP/s).
+pub fn paper() -> Vec<((usize, usize, usize), &'static str, u32, f64, f64)> {
+    vec![
+        ((4, 8, 8), "i8xi8", 256, 320.0, 640.0),
+        ((4, 4, 8), "i16xi8", 128, 160.0, 320.0),
+        ((4, 4, 4), "i16xi16", 64, 80.0, 160.0),
+    ]
+}
+
+/// Render the table like the paper prints it.
+pub fn render() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "TABLE I — Single AIE-ML tile ceilings @ 1.25 GHz");
+    let _ = writeln!(s, "{:<12} {:<10} {:>7} {:>9} {:>8} {:>8}", "<M,K,N>", "Datatype", "Native", "MAC/cyc", "GMAC/s", "GOP/s");
+    for r in generate() {
+        let _ = writeln!(
+            s,
+            "{:<12} {:<10} {:>7} {:>9} {:>8.0} {:>8.0}",
+            format!("<{},{},{}>", r.tiling.0, r.tiling.1, r.tiling.2),
+            r.datatype,
+            if r.native { "Yes" } else { "No" },
+            r.mac_per_cycle,
+            r.gmac_s,
+            r.gop_s
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn generated_rows_match_paper_exactly() {
+        let gen = super::generate();
+        let paper = super::paper();
+        assert_eq!(gen.len(), paper.len());
+        for (g, p) in gen.iter().zip(&paper) {
+            assert_eq!(g.tiling, p.0);
+            assert_eq!(g.mac_per_cycle, p.2);
+            assert!((g.gmac_s - p.3).abs() < 1e-9);
+            assert!((g.gop_s - p.4).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let s = super::render();
+        assert!(s.contains("<4,8,8>"));
+        assert!(s.contains("640"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Table II — single-kernel performance for different input precisions:
+//! sustained GOPS + efficiency for the base and fused (+Bias+ReLU) kernels,
+//! and micro-batch latency (B=8, 4×4 cascade).
+
+use crate::arch::{default_tiling, tile_peak_gops, AieGeneration, Device, Dtype, PrecisionPair};
+use crate::frontend::{CompileConfig, LayerConfig};
+use crate::harness::models::{synth_model, LayerSpec};
+use crate::ir::{DenseQuant, QuantSpec};
+use crate::passes::{compile, resolve::batch_chunk};
+use crate::sim::cycles::{batch_cycles, sustained_gops, CycleModel, KernelWorkload};
+use crate::sim::engine::{analyze, EngineModel};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// One measured Table II row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub datatype: String,
+    pub workload: String,
+    pub base_gops: f64,
+    pub base_eff: f64,
+    pub fused_gops: f64,
+    pub fused_eff: f64,
+    pub latency_us: f64,
+}
+
+/// Paper-reported values: (dtype, base GOPS, base eff, fused GOPS,
+/// fused eff, latency µs).
+pub fn paper() -> Vec<(&'static str, f64, f64, f64, f64, f64)> {
+    vec![
+        ("i8xi8", 613.0, 0.958, 520.0, 0.813, 0.5),
+        ("i16xi8", 314.0, 0.981, 287.0, 0.897, 3.3),
+        ("i16xi16", 138.0, 0.863, 114.0, 0.706, 2.5),
+    ]
+}
+
+fn row_config() -> Vec<(PrecisionPair, usize)> {
+    vec![
+        (PrecisionPair::I8I8, 128),
+        (PrecisionPair::I16I8, 128),
+        (PrecisionPair::I16I16, 64),
+    ]
+}
+
+fn single_tile_gops(pair: PrecisionPair, feat: usize, fused: bool, batch: usize) -> f64 {
+    let device = Device::vek280();
+    let tiling = default_tiling(pair).unwrap();
+    let q = DenseQuant {
+        input: QuantSpec::new(pair.act, 6),
+        weight: QuantSpec::new(pair.wgt, 6),
+        output: QuantSpec::new(pair.act, 6),
+        bias_dtype: Dtype::I32,
+        acc_dtype: pair.acc_dtype(),
+        shift: 6,
+    };
+    let (chunk, _) = batch_chunk(&device, &tiling, &q, feat, feat, batch)
+        .expect("single-kernel workload fits local memory");
+    let w = KernelWorkload {
+        batch: chunk,
+        f_in_slice: feat,
+        f_out_slice: feat,
+        tiling,
+        use_bias: fused,
+        relu: fused,
+        is_tail: true,
+    };
+    let cycles = batch_cycles(batch, chunk, &w, &CycleModel::default(), AieGeneration::AieMl, device.load_port_bytes);
+    sustained_gops(batch * feat * feat, cycles, device.freq_ghz)
+}
+
+/// Micro-batch latency: base kernel, B=8, 4×4 cascade (paper setting).
+fn micro_latency_us(pair: PrecisionPair, feat: usize) -> Result<f64> {
+    let spec = vec![LayerSpec {
+        name: "fc1".into(),
+        in_features: feat,
+        out_features: feat,
+        relu: false,
+        dtype_act: pair.act,
+        dtype_wgt: pair.wgt,
+    }];
+    let json = synth_model(&format!("lat_{pair}"), &spec, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    cfg.layers
+        .insert("fc1".into(), LayerConfig { cascade: Some((4, 4)), ..Default::default() });
+    let model = compile(&json, cfg)?;
+    let report = analyze(model.firmware.as_ref().unwrap(), &EngineModel::default());
+    Ok(report.latency_us)
+}
+
+/// Generate the measured Table II.
+pub fn generate() -> Result<Vec<Table2Row>> {
+    let mut rows = Vec::new();
+    for (pair, feat) in row_config() {
+        let peak = tile_peak_gops(AieGeneration::AieMl, pair, 1.25);
+        let base = single_tile_gops(pair, feat, false, 128);
+        let fused = single_tile_gops(pair, feat, true, 128);
+        rows.push(Table2Row {
+            datatype: pair.to_string(),
+            workload: format!("{feat}x{feat}"),
+            base_gops: base,
+            base_eff: base / peak,
+            fused_gops: fused,
+            fused_eff: fused / peak,
+            latency_us: micro_latency_us(pair, feat)?,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render measured-vs-paper.
+pub fn render() -> Result<String> {
+    let rows = generate()?;
+    let paper = paper();
+    let mut s = String::new();
+    let _ = writeln!(s, "TABLE II — Single-kernel performance (measured | paper)");
+    let _ = writeln!(
+        s,
+        "{:<9} {:<9} {:>20} {:>20} {:>16}",
+        "Datatype", "Workload", "Base GOPS (eff)", "+Bias+ReLU (eff)", "Latency µs"
+    );
+    for (r, p) in rows.iter().zip(&paper) {
+        let _ = writeln!(
+            s,
+            "{:<9} {:<9} {:>7.0} ({:>4.1}%)|{:>4.1}% {:>7.0} ({:>4.1}%)|{:>4.1}% {:>6.2}|{:>4.1}",
+            r.datatype,
+            r.workload,
+            r.base_gops,
+            100.0 * r.base_eff,
+            100.0 * p.2,
+            r.fused_gops,
+            100.0 * r.fused_eff,
+            100.0 * p.4,
+            r.latency_us,
+            p.5,
+        );
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiencies_track_paper_within_tolerance() {
+        let rows = generate().unwrap();
+        let paper = paper();
+        for (r, p) in rows.iter().zip(&paper) {
+            assert!(
+                (r.base_eff - p.2).abs() < 0.03,
+                "{}: base eff {} vs paper {}",
+                r.datatype,
+                r.base_eff,
+                p.2
+            );
+            assert!(
+                (r.fused_eff - p.4).abs() < 0.05,
+                "{}: fused eff {} vs paper {}",
+                r.datatype,
+                r.fused_eff,
+                p.4
+            );
+        }
+    }
+
+    #[test]
+    fn latencies_in_microsecond_regime() {
+        for r in generate().unwrap() {
+            assert!(r.latency_us > 0.05 && r.latency_us < 5.0, "{}: {} µs", r.datatype, r.latency_us);
+        }
+    }
+}

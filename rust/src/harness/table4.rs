@@ -1,0 +1,126 @@
+//! Table IV — comparison with prior AIE-based frameworks.
+//!
+//! Baseline rows are published characteristics (`baselines::frameworks`);
+//! the AIE4ML row is measured: a GEMM workload at full array utilization
+//! through the compiler + engine (single linear layer, no bias/activation,
+//! spanning 296 tiles — the paper's 160 TOPS / 82.2% configuration).
+
+use crate::arch::Dtype;
+use crate::baselines::frameworks::{aie4ml_row, prior_frameworks, FrameworkRow};
+use crate::frontend::{CompileConfig, LayerConfig};
+use crate::harness::models::{synth_model, LayerSpec};
+use crate::passes::compile;
+use crate::sim::engine::{analyze, EngineModel};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Run the GEMM-at-full-array workload and return (TOPS, tiles used).
+pub fn measure_gemm_full_array() -> Result<(f64, usize)> {
+    // Full-width cascade: 37 columns x 8 rows = 296 tiles, int8,
+    // 128-feature slices per tile (the Table II workload per tile),
+    // no bias / no activation (pure GEMM).
+    let spec = vec![LayerSpec {
+        name: "gemm".into(),
+        in_features: 37 * 128,
+        out_features: 8 * 128,
+        relu: false,
+        dtype_act: Dtype::I8,
+        dtype_wgt: Dtype::I8,
+    }];
+    let mut json = synth_model("gemm_full", &spec, 6);
+    // Pure GEMM: drop the bias.
+    json.layers[0].use_bias = false;
+    json.layers[0].bias.clear();
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 128;
+    cfg.layers
+        .insert("gemm".into(), LayerConfig { cascade: Some((37, 8)), ..Default::default() });
+    let model = compile(&json, cfg)?;
+    let fw = model.firmware.as_ref().unwrap();
+    let report = analyze(fw, &EngineModel::default());
+    Ok((report.throughput_tops, fw.tiles_used()))
+}
+
+/// All rows: AIE4ML (measured) first, then the literature baselines.
+pub fn generate() -> Result<Vec<FrameworkRow>> {
+    let (tops, tiles) = measure_gemm_full_array()?;
+    let mut rows = vec![aie4ml_row(tops, tiles)];
+    rows.extend(prior_frameworks());
+    Ok(rows)
+}
+
+pub fn render() -> Result<String> {
+    let rows = generate()?;
+    let mut s = String::new();
+    let _ = writeln!(s, "TABLE IV — comparison with prior AIE-based frameworks");
+    let _ = writeln!(
+        s,
+        "{:<9} {:<10} {:>9} {:>8} {:>7} {:>7} {:>7} {:>7} {:>16}",
+        "Framework", "AIE Gen", "Eff.(%)", "FusedBA", "WtsAIE", "ActAIE", "Multi", "Place", "Max AIEs"
+    );
+    for r in &rows {
+        let (lo, hi) = r.efficiency_pct();
+        let eff = if (lo - hi).abs() < 0.05 { format!("{lo:.1}") } else { format!("{lo:.0}-{hi:.0}") };
+        let b = |v: bool| if v { "yes" } else { "no" };
+        let multi = if r.multi_layer && r.multi_layer_via_pl {
+            "via-PL"
+        } else if r.multi_layer {
+            "yes"
+        } else {
+            "no"
+        };
+        let _ = writeln!(
+            s,
+            "{:<9} {:<10} {:>9} {:>8} {:>7} {:>7} {:>7} {:>7} {:>10}/{} ({:.1}%)",
+            r.name,
+            format!("{}", r.generation),
+            eff,
+            b(r.fused_bias_act),
+            b(r.weights_on_aie),
+            b(r.activations_on_aie),
+            multi,
+            b(r.auto_placement),
+            r.aies_used.0,
+            r.aies_used.1,
+            r.utilization_pct()
+        );
+    }
+    let _ = writeln!(s, "paper AIE4ML row: 82.2% eff, 296/304 tiles (97.4%)");
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Device;
+
+    #[test]
+    fn gemm_uses_296_tiles() {
+        let (_, tiles) = measure_gemm_full_array().unwrap();
+        assert_eq!(tiles, 296);
+        assert_eq!(Device::vek280().placeable_tiles(), 296);
+    }
+
+    #[test]
+    fn gemm_efficiency_in_high_band() {
+        // Paper: 160 TOPS = 82.2% of the 194.56 TOPS INT8 peak. Our cycle-
+        // approximate model lands in the 80-100% band and the shape claim
+        // (AIE4ML sustains a GAMA-class fraction of peak while doing
+        // end-to-end data movement on-chip) holds. EXPERIMENTS.md discusses
+        // the delta.
+        let (tops, _) = measure_gemm_full_array().unwrap();
+        let peak = Device::vek280().peak_int8_tops();
+        let eff = tops / peak;
+        assert!(eff > 0.75 && eff < 1.0, "GEMM eff {eff}");
+    }
+
+    #[test]
+    fn aie4ml_is_the_only_fully_featured_row() {
+        let rows = generate().unwrap();
+        assert_eq!(rows[0].name, "AIE4ML");
+        assert!(rows[0].fused_bias_act && rows[0].auto_placement);
+        for r in &rows[1..] {
+            assert!(!(r.weights_on_aie && r.activations_on_aie && r.fused_bias_act));
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! The AIE-IR graph: a DAG of nodes connected by activation edges.
+//!
+//! AIE4ML networks are (for the operator classes the paper evaluates —
+//! MLPs and MLP-Mixer sub-blocks) layer *chains*; the graph structure still
+//! models general fan-out so the memory-tile planner can broadcast one
+//! producer to several consumers.
+
+use super::node::{Node, NodeId, OpKind};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum GraphError {
+    #[error("node {0} not found")]
+    NodeNotFound(NodeId),
+    #[error("graph has no input node")]
+    NoInput,
+    #[error("graph has no output node")]
+    NoOutput,
+    #[error("graph contains a cycle")]
+    Cyclic,
+    #[error("shape mismatch on edge {from}->{to}: producer {produced} features, consumer expects {expected}")]
+    ShapeMismatch { from: NodeId, to: NodeId, produced: usize, expected: usize },
+}
+
+/// A directed activation edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub from: NodeId,
+    pub to: NodeId,
+}
+
+/// The IR graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>, op: OpKind) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node::new(id, name, op));
+        id
+    }
+
+    pub fn connect(&mut self, from: NodeId, to: NodeId) {
+        self.edges.push(Edge { from, to });
+    }
+
+    pub fn node(&self, id: NodeId) -> Result<&Node, GraphError> {
+        self.nodes.get(id).ok_or(GraphError::NodeNotFound(id))
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> Result<&mut Node, GraphError> {
+        self.nodes.get_mut(id).ok_or(GraphError::NodeNotFound(id))
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|e| e.to == id).map(|e| e.from).collect()
+    }
+
+    pub fn successors(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|e| e.from == id).map(|e| e.to).collect()
+    }
+
+    /// Topological order of all node ids. Errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, GraphError> {
+        let mut indeg: HashMap<NodeId, usize> =
+            self.nodes.iter().map(|n| (n.id, 0)).collect();
+        for e in &self.edges {
+            *indeg.get_mut(&e.to).ok_or(GraphError::NodeNotFound(e.to))? += 1;
+        }
+        let mut ready: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| indeg[&n.id] == 0)
+            .map(|n| n.id)
+            .collect();
+        ready.sort_unstable();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(id) = ready.pop() {
+            order.push(id);
+            for s in self.successors(id) {
+                let d = indeg.get_mut(&s).unwrap();
+                *d -= 1;
+                if *d == 0 {
+                    ready.push(s);
+                }
+            }
+            ready.sort_unstable();
+            ready.reverse(); // pop smallest id first for determinism
+        }
+        if order.len() != self.nodes.len() {
+            return Err(GraphError::Cyclic);
+        }
+        Ok(order)
+    }
+
+    /// Dense nodes in topological order — the layers the compiler maps.
+    pub fn dense_order(&self) -> Result<Vec<NodeId>, GraphError> {
+        Ok(self
+            .topo_order()?
+            .into_iter()
+            .filter(|&id| self.nodes[id].op.is_dense())
+            .collect())
+    }
+
+    /// Input feature count of the network.
+    pub fn input_features(&self) -> Result<usize, GraphError> {
+        self.nodes
+            .iter()
+            .find_map(|n| match n.op {
+                OpKind::Input { features } => Some(features),
+                _ => None,
+            })
+            .ok_or(GraphError::NoInput)
+    }
+
+    /// Output feature count (out_features of the last dense layer).
+    pub fn output_features(&self) -> Result<usize, GraphError> {
+        let dense = self.dense_order()?;
+        let last = *dense.last().ok_or(GraphError::NoOutput)?;
+        Ok(self.nodes[last].dense_dims().unwrap().1)
+    }
+
+    /// Validate shape compatibility along every dense→dense edge and from
+    /// the input node into the first dense layer.
+    pub fn validate_shapes(&self) -> Result<(), GraphError> {
+        let feat_out = |n: &Node| -> Option<usize> {
+            match n.op {
+                OpKind::Input { features } => Some(features),
+                OpKind::Dense { out_features, .. } => Some(out_features),
+                _ => None,
+            }
+        };
+        for e in &self.edges {
+            let from = self.node(e.from)?;
+            let to = self.node(e.to)?;
+            if let (Some(produced), OpKind::Dense { in_features, .. }) = (feat_out(from), &to.op) {
+                if produced != *in_features {
+                    return Err(GraphError::ShapeMismatch {
+                        from: e.from,
+                        to: e.to,
+                        produced,
+                        expected: *in_features,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MACs for one sample through every dense layer.
+    pub fn macs_per_sample(&self) -> usize {
+        self.nodes.iter().map(|n| n.macs_per_sample()).sum()
+    }
+
+    /// Total ops (2 per MAC) for one sample.
+    pub fn ops_per_sample(&self) -> usize {
+        2 * self.macs_per_sample()
+    }
+}
+
+/// Convenience constructor: a sequential MLP
+/// `features[0] -> features[1] -> ... -> features[L]`, each layer with bias
+/// and (optionally) ReLU on all but the last layer.
+pub fn sequential_mlp(features: &[usize], relu_hidden: bool) -> Graph {
+    assert!(features.len() >= 2, "need at least input+one layer");
+    let mut g = Graph::new();
+    let input = g.add_node("input", OpKind::Input { features: features[0] });
+    let mut prev = input;
+    for (i, w) in features.windows(2).enumerate() {
+        let is_last = i == features.len() - 2;
+        let id = g.add_node(
+            format!("fc{}", i + 1),
+            OpKind::Dense {
+                in_features: w[0],
+                out_features: w[1],
+                use_bias: true,
+                fused_relu: relu_hidden && !is_last,
+            },
+        );
+        g.connect(prev, id);
+        prev = id;
+    }
+    let out = g.add_node("output", OpKind::Output);
+    g.connect(prev, out);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_topo() {
+        let g = sequential_mlp(&[512, 512, 512], true);
+        let topo = g.topo_order().unwrap();
+        assert_eq!(topo.len(), 4); // input, fc1, fc2, output
+        let dense = g.dense_order().unwrap();
+        assert_eq!(dense.len(), 2);
+        assert_eq!(g.input_features().unwrap(), 512);
+        assert_eq!(g.output_features().unwrap(), 512);
+        g.validate_shapes().unwrap();
+    }
+
+    #[test]
+    fn macs_count() {
+        let g = sequential_mlp(&[128, 128, 10], true);
+        assert_eq!(g.macs_per_sample(), 128 * 128 + 128 * 10);
+        assert_eq!(g.ops_per_sample(), 2 * (128 * 128 + 128 * 10));
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 64 });
+        let d = g.add_node(
+            "fc",
+            OpKind::Dense { in_features: 32, out_features: 8, use_bias: false, fused_relu: false },
+        );
+        g.connect(i, d);
+        assert!(matches!(g.validate_shapes(), Err(GraphError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new();
+        let a = g.add_node("a", OpKind::ReLU);
+        let b = g.add_node("b", OpKind::ReLU);
+        g.connect(a, b);
+        g.connect(b, a);
+        assert!(matches!(g.topo_order(), Err(GraphError::Cyclic)));
+    }
+
+    #[test]
+    fn relu_only_on_hidden() {
+        let g = sequential_mlp(&[16, 32, 8], true);
+        let dense = g.dense_order().unwrap();
+        assert!(g.node(dense[0]).unwrap().fused_relu());
+        assert!(!g.node(dense[1]).unwrap().fused_relu());
+    }
+}

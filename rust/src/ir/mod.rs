@@ -1,0 +1,16 @@
+//! The AIE4ML intermediate representation (paper §IV-A).
+//!
+//! During lowering, the frontend graph is transformed into this AIE-IR where
+//! each node carries embedded metadata on layer topology, tensor dimensions,
+//! quantization and connectivity; subsequent passes progressively populate
+//! the AIE attributes (tiling, cascade geometry, packing, placement).
+
+pub mod graph;
+pub mod node;
+pub mod quant;
+
+pub use graph::{sequential_mlp, Edge, Graph, GraphError};
+pub use node::{
+    AieAttrs, CascadeGeometry, DenseQuant, Node, NodeId, OpKind, PlacementRect,
+};
+pub use quant::{derive_shift, srs, srs_i32, QuantSpec};

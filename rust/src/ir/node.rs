@@ -1,0 +1,251 @@
+//! IR nodes: operations with progressively-populated AIE attributes.
+//!
+//! Each node carries (a) frontend-level information (op kind, shapes,
+//! weights, quantizers) and (b) AIE-specific attributes that the pass
+//! pipeline resolves: tiling, cascade geometry, placement, packed buffers.
+//! User-specified attributes arrive pre-populated from the config and are
+//! honored by the passes (treated as hard constraints).
+
+use super::quant::QuantSpec;
+use crate::arch::{Dtype, MmulTiling};
+
+pub type NodeId = usize;
+
+/// Operation kind for a node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Network input placeholder: shape `[batch, features]`.
+    Input { features: usize },
+    /// Fully-connected layer (the paper's generalized linear layer).
+    Dense {
+        in_features: usize,
+        out_features: usize,
+        use_bias: bool,
+        /// Populated by the Lowering pass when a following ReLU is fused.
+        fused_relu: bool,
+    },
+    /// Standalone activation (fused into Dense by Lowering when possible).
+    ReLU,
+    /// Network output marker.
+    Output,
+}
+
+impl OpKind {
+    pub fn is_dense(&self) -> bool {
+        matches!(self, OpKind::Dense { .. })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Input { .. } => "input",
+            OpKind::Dense { .. } => "dense",
+            OpKind::ReLU => "relu",
+            OpKind::Output => "output",
+        }
+    }
+}
+
+/// Cascade geometry of one layer on the 2D array (paper §III-B):
+/// `f_in = CAS_LEN · f_in_slice`, `f_out = CAS_NUM · f_out_slice`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CascadeGeometry {
+    /// Tiles per cascade row (horizontal, reduction dimension).
+    pub cas_len: usize,
+    /// Number of cascade rows (vertical, output-feature dimension).
+    pub cas_num: usize,
+    /// Input features handled by each tile (after zero-padding).
+    pub f_in_slice: usize,
+    /// Output features produced by each cascade row.
+    pub f_out_slice: usize,
+}
+
+impl CascadeGeometry {
+    pub fn tiles(&self) -> usize {
+        self.cas_len * self.cas_num
+    }
+    /// Padded global input dimension covered by the geometry.
+    pub fn f_in_padded(&self) -> usize {
+        self.cas_len * self.f_in_slice
+    }
+    /// Padded global output dimension covered by the geometry.
+    pub fn f_out_padded(&self) -> usize {
+        self.cas_num * self.f_out_slice
+    }
+}
+
+/// Rectangle of tiles assigned to a layer by the Placement pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacementRect {
+    /// West-most column.
+    pub col: usize,
+    /// South-most row (row 0 is adjacent to the memory tiles).
+    pub row: usize,
+    /// Width = CAS_LEN, height = CAS_NUM.
+    pub width: usize,
+    pub height: usize,
+}
+
+impl PlacementRect {
+    /// Column where the layer's input is injected (west edge — the cascade
+    /// flows west→east, so inputs broadcast up from the memory tile below
+    /// the west-most column).
+    pub fn input_col(&self) -> usize {
+        self.col
+    }
+    /// Column where outputs drain (east edge tiles hold the final SRS).
+    pub fn output_col(&self) -> usize {
+        self.col + self.width - 1
+    }
+    pub fn input_row(&self) -> usize {
+        self.row
+    }
+    pub fn output_row(&self) -> usize {
+        self.row
+    }
+    /// Top-most occupied row (the `r_top` term in Eq. 2).
+    pub fn top_row(&self) -> usize {
+        self.row + self.height - 1
+    }
+    /// Do two rectangles overlap?
+    pub fn overlaps(&self, other: &PlacementRect) -> bool {
+        self.col < other.col + other.width
+            && other.col < self.col + self.width
+            && self.row < other.row + other.height
+            && other.row < self.row + self.height
+    }
+    /// Does the rectangle fit inside a cols×rows array?
+    pub fn fits(&self, cols: usize, rows: usize) -> bool {
+        self.col + self.width <= cols && self.row + self.height <= rows
+    }
+}
+
+/// Quantization attributes of a Dense node, resolved by the Quantization
+/// pass. All tensors are power-of-two scaled integers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DenseQuant {
+    pub input: QuantSpec,
+    pub weight: QuantSpec,
+    /// Bias is stored at accumulator precision and scale.
+    pub bias_dtype: Dtype,
+    pub acc_dtype: Dtype,
+    pub output: QuantSpec,
+    /// SRS shift applied on store.
+    pub shift: u32,
+}
+
+/// AIE attributes of a node, populated progressively by the pass pipeline.
+/// `None` means "not yet resolved"; user overrides arrive pre-set.
+#[derive(Debug, Clone, Default)]
+pub struct AieAttrs {
+    pub tiling: Option<MmulTiling>,
+    pub cascade: Option<CascadeGeometry>,
+    pub placement: Option<PlacementRect>,
+    /// User pinned the placement (hard constraint for the B&B solver).
+    pub placement_pinned: bool,
+    pub quant: Option<DenseQuant>,
+    /// Per-tile packed weight buffers, filled by the Packing pass. Indexed
+    /// `[cas_row][cas_col]` flattened row-major; each buffer is the tile's
+    /// weight slice laid out in ⟨K,N⟩ tile order, widened to i32 storage.
+    pub packed_weights: Vec<Vec<i32>>,
+    /// Per-cascade-row packed bias slices (accumulator precision).
+    pub packed_bias: Vec<Vec<i64>>,
+}
+
+/// One IR node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    /// Raw (already-quantized) weights, row-major `[out_features][in_features]`,
+    /// as exported by the frontend. Stored widened to i32.
+    pub weights: Vec<i32>,
+    /// Raw bias, length `out_features`, at accumulator scale.
+    pub bias: Vec<i64>,
+    pub attrs: AieAttrs,
+}
+
+impl Node {
+    pub fn new(id: NodeId, name: impl Into<String>, op: OpKind) -> Node {
+        Node {
+            id,
+            name: name.into(),
+            op,
+            weights: Vec::new(),
+            bias: Vec::new(),
+            attrs: AieAttrs::default(),
+        }
+    }
+
+    /// (in_features, out_features) for Dense nodes.
+    pub fn dense_dims(&self) -> Option<(usize, usize)> {
+        match self.op {
+            OpKind::Dense { in_features, out_features, .. } => Some((in_features, out_features)),
+            _ => None,
+        }
+    }
+
+    pub fn use_bias(&self) -> bool {
+        matches!(self.op, OpKind::Dense { use_bias: true, .. })
+    }
+
+    pub fn fused_relu(&self) -> bool {
+        matches!(self.op, OpKind::Dense { fused_relu: true, .. })
+    }
+
+    /// MACs for one sample through this node.
+    pub fn macs_per_sample(&self) -> usize {
+        self.dense_dims().map(|(i, o)| i * o).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_overlap() {
+        let a = PlacementRect { col: 0, row: 0, width: 4, height: 4 };
+        let b = PlacementRect { col: 3, row: 3, width: 2, height: 2 };
+        let c = PlacementRect { col: 4, row: 0, width: 2, height: 2 };
+        assert!(a.overlaps(&b));
+        assert!(b.overlaps(&a));
+        assert!(!a.overlaps(&c));
+        assert!(!c.overlaps(&a));
+    }
+
+    #[test]
+    fn rect_fits() {
+        let a = PlacementRect { col: 36, row: 6, width: 2, height: 2 };
+        assert!(a.fits(38, 8));
+        assert!(!a.fits(37, 8));
+        assert!(!a.fits(38, 7));
+    }
+
+    #[test]
+    fn rect_io_coords() {
+        let a = PlacementRect { col: 5, row: 2, width: 4, height: 3 };
+        assert_eq!(a.input_col(), 5);
+        assert_eq!(a.output_col(), 8);
+        assert_eq!(a.top_row(), 4);
+    }
+
+    #[test]
+    fn cascade_geometry_dims() {
+        let g = CascadeGeometry { cas_len: 4, cas_num: 4, f_in_slice: 32, f_out_slice: 32 };
+        assert_eq!(g.tiles(), 16);
+        assert_eq!(g.f_in_padded(), 128);
+        assert_eq!(g.f_out_padded(), 128);
+    }
+
+    #[test]
+    fn node_macs() {
+        let n = Node::new(
+            0,
+            "fc1",
+            OpKind::Dense { in_features: 512, out_features: 512, use_bias: true, fused_relu: true },
+        );
+        assert_eq!(n.macs_per_sample(), 512 * 512);
+        assert!(n.use_bias());
+        assert!(n.fused_relu());
+    }
+}

@@ -1,0 +1,148 @@
+//! Quantization metadata and the shift-round-saturate (SRS) primitive.
+//!
+//! AIE4ML operates on power-of-two–scaled integer tensors (the regime used by
+//! hls4ml/QKeras-style quantizers): a tensor holds integers `q` representing
+//! real values `q · 2^-frac_bits`. A linear layer accumulates exactly in a
+//! wide accumulator and requantizes on store with the hardware `VST.SRS`
+//! instruction, which applies shift (scaling), rounding and saturation in one
+//! step (paper §III-A). This module defines the *single* integer semantics
+//! every implementation in the stack (Pallas kernel, jnp reference, Rust
+//! functional simulator, PJRT-executed HLO) must match bit-exactly.
+
+use crate::arch::Dtype;
+
+/// Quantization spec of one tensor: storage dtype + binary-point position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub dtype: Dtype,
+    /// Number of fractional bits: real value = int · 2^-frac_bits.
+    pub frac_bits: i32,
+}
+
+impl QuantSpec {
+    pub const fn new(dtype: Dtype, frac_bits: i32) -> Self {
+        QuantSpec { dtype, frac_bits }
+    }
+
+    /// Quantize a real value into this spec (round-half-up, saturating) —
+    /// used only at the model boundary (optional float I/O), never on the
+    /// integer inference path.
+    pub fn quantize(&self, x: f64) -> i64 {
+        let scaled = x * (2f64).powi(self.frac_bits);
+        self.dtype.saturate(scaled.round_ties_even() as i64)
+    }
+
+    /// Dequantize back to a real value.
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * (2f64).powi(-self.frac_bits)
+    }
+}
+
+/// Shift-round-saturate: `y = sat_dtype(round_half_up(acc / 2^shift))`.
+///
+/// `round_half_up(acc / 2^s) = (acc + 2^(s-1)) >> s` with an arithmetic
+/// shift, for `s > 0`; `s == 0` is a pure saturate. The addition is wrapping
+/// (the AIE accumulator is modular); saturation happens only at the store.
+///
+/// This is the exact semantics mirrored by `kernels/linear.py::srs` and
+/// `kernels/ref.py::srs` on the Python side — change all of them together
+/// or bit-exactness tests fail.
+pub fn srs(acc: i64, shift: u32, out: Dtype) -> i64 {
+    debug_assert!(shift < 63, "srs shift out of range: {shift}");
+    let rounded = if shift == 0 {
+        acc
+    } else {
+        acc.wrapping_add(1i64 << (shift - 1)) >> shift
+    };
+    out.saturate(rounded)
+}
+
+/// SRS over an `i32` accumulator (i8×i8 and i16×i8 paths): the rounding add
+/// wraps in 32-bit before the shift, matching the hardware accumulator width
+/// and `jnp.int32` arithmetic.
+pub fn srs_i32(acc: i32, shift: u32, out: Dtype) -> i32 {
+    debug_assert!(shift < 31, "srs32 shift out of range: {shift}");
+    let rounded = if shift == 0 {
+        acc
+    } else {
+        acc.wrapping_add(1i32 << (shift - 1)) >> shift
+    };
+    out.saturate(rounded as i64) as i32
+}
+
+/// Derive the output shift for a layer so the binary points line up:
+/// `acc_frac = in_frac + w_frac`, and the store must produce `out_frac`,
+/// so `shift = acc_frac - out_frac` (clamped at 0: we never up-shift on
+/// store; the resolver widens `out_frac` instead).
+pub fn derive_shift(in_frac: i32, w_frac: i32, out_frac: i32) -> u32 {
+    (in_frac + w_frac - out_frac).max(0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srs_rounds_half_up() {
+        // 3/2 = 1.5 -> 2 ; -3/2 = -1.5 -> -1 (round half toward +inf)
+        assert_eq!(srs(3, 1, Dtype::I8), 2);
+        assert_eq!(srs(-3, 1, Dtype::I8), -1);
+        assert_eq!(srs(4, 2, Dtype::I8), 1);
+        assert_eq!(srs(6, 2, Dtype::I8), 2); // 1.5 -> 2
+        assert_eq!(srs(5, 2, Dtype::I8), 1); // 1.25 -> 1
+        assert_eq!(srs(7, 2, Dtype::I8), 2); // 1.75 -> 2
+    }
+
+    #[test]
+    fn srs_saturates() {
+        assert_eq!(srs(1000, 1, Dtype::I8), 127);
+        assert_eq!(srs(-1000, 1, Dtype::I8), -128);
+        assert_eq!(srs(1 << 20, 4, Dtype::I16), 32767);
+    }
+
+    #[test]
+    fn srs_zero_shift_is_saturate() {
+        assert_eq!(srs(300, 0, Dtype::I8), 127);
+        assert_eq!(srs(42, 0, Dtype::I8), 42);
+    }
+
+    #[test]
+    fn srs_i32_matches_wide_when_no_wrap() {
+        for acc in [-70000i64, -129, -1, 0, 1, 127, 70000] {
+            for s in [0u32, 1, 3, 8] {
+                assert_eq!(
+                    srs(acc, s, Dtype::I8),
+                    srs_i32(acc as i32, s, Dtype::I8) as i64,
+                    "acc={acc} s={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn srs_i32_wraps_on_rounding_overflow() {
+        // i32::MAX + rounding bias wraps — the 64-bit version must not be
+        // used on the 32-bit accumulator path, precisely because of this.
+        let acc = i32::MAX;
+        let w = srs_i32(acc, 1, Dtype::I16);
+        // (MAX + 1) wraps to MIN; MIN >> 1 is very negative -> saturates low.
+        assert_eq!(w, -32768);
+        assert_eq!(srs(acc as i64, 1, Dtype::I16), 32767);
+    }
+
+    #[test]
+    fn quantize_dequantize() {
+        let q = QuantSpec::new(Dtype::I8, 6);
+        assert_eq!(q.quantize(0.5), 32);
+        assert_eq!(q.quantize(10.0), 127); // saturates
+        assert!((q.dequantize(32) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shift_derivation() {
+        // in 6 frac bits, w 6 frac bits, out 6 frac bits -> shift 6.
+        assert_eq!(derive_shift(6, 6, 6), 6);
+        assert_eq!(derive_shift(0, 0, 0), 0);
+        assert_eq!(derive_shift(2, 2, 8), 0); // clamped
+    }
+}

@@ -1,0 +1,35 @@
+//! # AIE4ML — end-to-end neural-network compilation for AMD AIE-ML devices
+//!
+//! A reproduction of *AIE4ML: An End-to-End Framework for Compiling Neural
+//! Networks for the Next Generation of AMD AI Engines* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * [`arch`] — device model of the Versal AIE-ML array (tiles, memory
+//!   tiles, cascade chains, precision/tiling tables).
+//! * [`ir`] / [`frontend`] / [`passes`] / [`codegen`] — the compiler: model
+//!   ingestion, AIE-IR, the 7-stage pass pipeline (lowering, quantization,
+//!   resolve, packing, graph planning, branch-and-bound placement, project
+//!   emission).
+//! * [`sim`] — the simulator substrate: bit-exact functional execution and
+//!   a calibrated cycle-approximate performance model.
+//! * [`runtime`] — PJRT oracle: executes the AOT-lowered JAX model (built
+//!   once by `python/compile/aot.py`) from Rust for bit-exactness checks.
+//! * [`coordinator`] — async serving driver (trigger-system companion).
+//! * [`baselines`] — analytical models for prior-framework and cross-device
+//!   comparisons (Tables IV, V).
+//! * [`harness`] — regenerates every table and figure of the paper.
+
+pub mod arch;
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod frontend;
+pub mod harness;
+pub mod ir;
+pub mod passes;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use frontend::{CompileConfig, JsonModel};
+pub use passes::{compile, compile_file, Model};

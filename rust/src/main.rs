@@ -1,0 +1,259 @@
+//! `aie4ml` — the leader binary: compile models, run inference on the
+//! firmware simulator, analyze performance, regenerate the paper's tables,
+//! and inspect devices. (CLI parsing is hand-rolled; the offline build
+//! environment carries no clap.)
+
+use aie4ml::arch::Device;
+use aie4ml::codegen::render::{render_floorplan, write_project};
+use aie4ml::frontend::{CompileConfig, JsonModel};
+use aie4ml::passes::compile;
+use aie4ml::sim::engine::{analyze, EngineModel, PerfReport};
+use aie4ml::sim::functional::{execute, Activation};
+use aie4ml::util::Pcg32;
+use anyhow::{bail, Context, Result};
+
+const USAGE: &str = "\
+aie4ml — end-to-end NN compiler + simulator for AMD AIE-ML
+
+USAGE:
+  aie4ml compile <model.json> [--config <cfg.json>] [--out <dir>] [--batch N] [--verify]
+  aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
+  aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
+  aie4ml bench   [table1|table2|fig3|fig4|table3|table4|table5|all]
+  aie4ml serve   <model.json> [--batch N] [--requests N] [--max-wait-us N]
+  aie4ml info    [device]
+";
+
+/// Minimal argument cursor: positionals + --flags.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut switches = std::collections::HashSet::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    switches.insert(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags, switches })
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_config(args: &Args, default_batch: usize) -> Result<CompileConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(p) => CompileConfig::from_file(p)?,
+        None => CompileConfig::default(),
+    };
+    cfg.batch = args.get_usize("batch", default_batch)?;
+    Ok(cfg)
+}
+
+fn print_perf(rep: &PerfReport) {
+    println!("model: {}  batch: {}  tiles: {}", rep.model_name, rep.batch, rep.tiles_used);
+    println!(
+        "interval: {:.0} cycles = {:.3} µs   latency: {:.0} cycles = {:.3} µs",
+        rep.interval_cycles, rep.interval_us, rep.latency_cycles, rep.latency_us
+    );
+    println!(
+        "per-sample interval: {:.4} µs   throughput: {:.2} TOPS",
+        rep.interval_per_sample_us, rep.throughput_tops
+    );
+    println!(
+        "{:<16} {:>6} {:>12} {:>10} {:>10} {:>12} {:>10}",
+        "layer", "tiles", "compute", "dma_in", "dma_out", "stage", "bottleneck"
+    );
+    for l in &rep.layers {
+        println!(
+            "{:<16} {:>6} {:>12.0} {:>10.0} {:>10.0} {:>12.0} {:>10}",
+            l.name,
+            l.tiles,
+            l.compute_cycles,
+            l.dma_in_cycles,
+            l.dma_out_cycles,
+            l.stage_cycles,
+            format!("{:?}", l.bottleneck)
+        );
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "compile" => {
+            let args = Args::parse(rest, &["verify"])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)
+                .with_context(|| format!("loading {model_path}"))?;
+            let cfg = load_config(&args, 128)?;
+            let compiled = compile(&json, cfg)?;
+            let fw = compiled.firmware.as_ref().unwrap();
+            let out = args.flags.get("out").cloned().unwrap_or_else(|| "build/project".into());
+            write_project(fw, &out)?;
+            println!(
+                "compiled '{}': {} layers, {} tiles on {}",
+                fw.model_name,
+                fw.layers.len(),
+                fw.tiles_used(),
+                fw.device.name
+            );
+            if let Some(rep) = &compiled.placement_report {
+                println!(
+                    "placement: J = {:.2} ({} nodes, optimal={}, {:.1} ms)",
+                    rep.cost, rep.nodes_explored, rep.optimal, rep.elapsed_ms
+                );
+            }
+            if args.switches.contains("verify") {
+                fw.check_invariants()?;
+                println!("{}", render_floorplan(fw));
+                println!("invariants OK");
+            }
+            println!("project written to {out}");
+        }
+        "run" => {
+            let args = Args::parse(rest, &["perf"])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)?;
+            let batch = args.get_usize("batch", 8)?;
+            let cfg = load_config(&args, batch)?;
+            let compiled = compile(&json, cfg)?;
+            let fw = compiled.firmware.as_ref().unwrap();
+            let features = fw.input_features();
+            let x = match args.flags.get("input") {
+                Some(p) => {
+                    let v = aie4ml::util::json::Value::parse(&std::fs::read_to_string(p)?)?;
+                    let data = v
+                        .as_array()?
+                        .iter()
+                        .map(|x| x.as_i64().map(|i| i as i32))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Activation::new(batch, features, data)?
+                }
+                None => {
+                    let mut rng = Pcg32::seed_from_u64(0);
+                    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+                    Activation::new(
+                        batch,
+                        features,
+                        (0..batch * features).map(|_| rng.gen_i32_in(lo, hi)).collect(),
+                    )?
+                }
+            };
+            let y = execute(fw, &x)?;
+            println!(
+                "ran batch {} through {} layers -> [{}x{}]",
+                batch,
+                fw.layers.len(),
+                y.batch,
+                y.features
+            );
+            println!("first output row: {:?}", y.row(0));
+            if args.switches.contains("perf") {
+                print_perf(&analyze(fw, &EngineModel::default()));
+            }
+        }
+        "perf" => {
+            let args = Args::parse(rest, &[])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)?;
+            let cfg = load_config(&args, 128)?;
+            let compiled = compile(&json, cfg)?;
+            print_perf(&analyze(compiled.firmware.as_ref().unwrap(), &EngineModel::default()));
+        }
+        "bench" => {
+            let args = Args::parse(rest, &[])?;
+            let which = args.positional.first().map(String::as_str).unwrap_or("all");
+            use aie4ml::harness as h;
+            let out = match which {
+                "table1" => h::table1::render(),
+                "table2" => h::table2::render()?,
+                "fig3" => h::fig3::render()?,
+                "fig4" => h::fig4::render(128)?,
+                "table3" => h::table3::render()?,
+                "table4" => h::table4::render()?,
+                "table5" => h::table5::render()?,
+                "all" => h::render_all()?,
+                other => bail!("unknown bench target '{other}'"),
+            };
+            println!("{out}");
+        }
+        "serve" => {
+            let args = Args::parse(rest, &[])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)?;
+            let cfg = load_config(&args, 16)?;
+            let requests = args.get_usize("requests", 256)?;
+            let max_wait_us = args.get_usize("max-wait-us", 200)?;
+            let compiled = compile(&json, cfg)?;
+            let fw = std::sync::Arc::new(compiled.firmware.clone().unwrap());
+            let features = fw.input_features();
+            let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+            let server = aie4ml::coordinator::Server::spawn(
+                fw,
+                std::time::Duration::from_micros(max_wait_us as u64),
+                1024,
+            );
+            let mut rng = Pcg32::seed_from_u64(1);
+            let mut handles = Vec::new();
+            for _ in 0..requests {
+                let c = server.client.clone();
+                let x: Vec<i32> = (0..features).map(|_| rng.gen_i32_in(lo, hi)).collect();
+                handles.push(std::thread::spawn(move || c.infer(x)));
+            }
+            for h in handles {
+                h.join().expect("client thread")?;
+            }
+            let m = server.shutdown();
+            println!(
+                "served {} requests in {} batches  p50 {:.1} µs  p99 {:.1} µs  device busy {:.1} µs",
+                m.requests, m.batches, m.p50_latency_us, m.p99_latency_us, m.device_busy_us
+            );
+        }
+        "info" => {
+            let args = Args::parse(rest, &[])?;
+            let name = args.positional.first().map(String::as_str).unwrap_or("vek280");
+            let d = Device::by_name(name).with_context(|| format!("unknown device '{name}'"))?;
+            println!("{d:#?}");
+            println!("total tiles: {}", d.total_tiles());
+            println!(
+                "placeable:   {} ({:.1}%)",
+                d.placeable_tiles(),
+                100.0 * d.placeable_tiles() as f64 / d.total_tiles() as f64
+            );
+            println!("INT8 peak:   {:.2} TOPS", d.peak_int8_tops());
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! Pass 7 — Project emission: instantiate the firmware package.
+//!
+//! Consumes the fully-attributed IR and renders the concrete artifact the
+//! rest of the system executes: per-tile kernel instances with physical
+//! coordinates and packed parameter streams, finalized memory-tile programs
+//! (the physical memory-tile column is the one below the consumer's input
+//! column, where the broadcast to the cascade column originates), and the
+//! top-level firmware description. The human-readable project source (kernel
+//! C++ and graph hpp, as Vitis would consume) is rendered by
+//! [`crate::codegen::render`] from the same structure.
+
+use super::{resolve::batch_chunk, Model, Pass};
+use crate::codegen::firmware::{Firmware, FirmwareLayer, KernelInst};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+pub struct Emission;
+
+impl Pass for Emission {
+    fn name(&self) -> &'static str {
+        "emission"
+    }
+
+    fn run(&self, model: &mut Model) -> Result<()> {
+        let dense = model.graph.dense_order()?;
+        let program = model
+            .memtile_plans
+            .clone()
+            .context("graph-planning pass must run first")?;
+        let mut layers = Vec::with_capacity(dense.len());
+        for &id in &dense {
+            let node = model.graph.node(id)?;
+            let name = node.name.clone();
+            let (f_in, f_out) = node.dense_dims().unwrap();
+            let tiling = node.attrs.tiling.context("resolve: tiling")?;
+            let geo = node.attrs.cascade.context("resolve: cascade")?;
+            let rect = node.attrs.placement.context("placement: rect")?;
+            let q = node.attrs.quant.context("quantize: quant")?;
+
+            let (_, local_mem_bytes) = batch_chunk(
+                &model.device,
+                &tiling,
+                &q,
+                geo.f_in_slice,
+                geo.f_out_slice,
+                model.config.batch,
+            )
+            .with_context(|| format!("layer '{name}': local memory budget"))?;
+
+            let mut kernels = Vec::with_capacity(geo.tiles());
+            for r in 0..geo.cas_num {
+                for c in 0..geo.cas_len {
+                    let is_tail = c == geo.cas_len - 1;
+                    kernels.push(KernelInst {
+                        col: rect.col + c,
+                        row: rect.row + r,
+                        cas_row: r,
+                        cas_pos: c,
+                        weights: node.attrs.packed_weights[r * geo.cas_len + c].clone(),
+                        bias: if is_tail && node.use_bias() {
+                            node.attrs.packed_bias[r].clone()
+                        } else {
+                            Vec::new()
+                        },
+                        is_tail,
+                        local_mem_bytes,
+                    });
+                }
+            }
+
+            let mut input_plan = program
+                .input_plans
+                .get(&id)
+                .cloned()
+                .with_context(|| format!("layer '{name}': no mem-tile plan"))?;
+            // The memory tile feeding a layer sits below its input column:
+            // activations broadcast vertically up the cascade column.
+            input_plan.mem_col = rect.input_col().min(model.device.mem_tiles.saturating_sub(1));
+
+            layers.push(FirmwareLayer {
+                name,
+                node_id: id,
+                in_features: f_in,
+                out_features: f_out,
+                use_bias: node.use_bias(),
+                relu: node.fused_relu(),
+                quant: q,
+                tiling,
+                cascade: geo,
+                placement: rect,
+                kernels,
+                input_plan,
+            });
+        }
+
+        let mut output_plan = program.output_plan.context("graph-planning: output plan")?;
+        output_plan.mem_col = layers
+            .last()
+            .map(|l| l.placement.output_col())
+            .unwrap_or(0)
+            .min(model.device.mem_tiles.saturating_sub(1));
+
+        // --- Memory-tile allocation audit --------------------------------
+        // A buffer is sharded over `columns` memory tiles starting at its
+        // mem_col; several layers' shards can land on the same physical
+        // memory tile. Sum the per-column footprints and reject any column
+        // that exceeds the 512 KiB SRAM (the hardware allocator would).
+        let mut usage: HashMap<usize, usize> = HashMap::new();
+        let mut charge = |plan: &crate::codegen::firmware::MemTilePlan| {
+            for c in 0..plan.columns {
+                let col = (plan.mem_col + c).min(model.device.mem_tiles.saturating_sub(1));
+                *usage.entry(col).or_default() += plan.per_column_bytes();
+            }
+        };
+        for l in &layers {
+            charge(&l.input_plan);
+        }
+        charge(&output_plan);
+        for (col, bytes) in &usage {
+            if *bytes > model.device.mem_tile_bytes {
+                bail!(
+                    "memory tile column {col} oversubscribed: {bytes} B of {} B                      (layers sharing the column need smaller batches or a wider spread)",
+                    model.device.mem_tile_bytes
+                );
+            }
+        }
+
+        model.firmware = Some(Firmware {
+            model_name: model.name.clone(),
+            device: model.device.clone(),
+            layers,
+            output_plan,
+            batch: model.config.batch,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::frontend::{CompileConfig, JsonModel};
+    use crate::passes::compile;
+
+    fn mlp_json(dims: &[usize]) -> JsonModel {
+        use crate::frontend::JsonLayer;
+        let layers: Vec<JsonLayer> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                JsonLayer::dense(
+                    &format!("fc{}", i + 1),
+                    w[0],
+                    w[1],
+                    true,
+                    i + 2 < dims.len(),
+                    "int8",
+                    "int8",
+                    6,
+                    vec![1; w[0] * w[1]],
+                    vec![0i64; w[1]],
+                )
+            })
+            .collect();
+        JsonModel::new("mlp", layers)
+    }
+
+    #[test]
+    fn full_pipeline_emits_firmware() {
+        let json = mlp_json(&[128, 256, 128, 64]);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 32;
+        let model = compile(&json, cfg).unwrap();
+        let fw = model.firmware.as_ref().unwrap();
+        assert_eq!(fw.layers.len(), 3);
+        fw.check_invariants().unwrap();
+        // Tail tiles carry bias; heads don't.
+        for l in &fw.layers {
+            for k in &l.kernels {
+                assert_eq!(k.is_tail, k.cas_pos == l.cascade.cas_len - 1);
+            }
+        }
+        // Mem-tile columns track input columns.
+        for l in &fw.layers {
+            assert_eq!(l.input_plan.mem_col, l.placement.input_col());
+        }
+    }
+
+    #[test]
+    fn firmware_counts_consistent() {
+        let json = mlp_json(&[512, 512, 512]);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 16;
+        let model = compile(&json, cfg).unwrap();
+        let fw = model.firmware.as_ref().unwrap();
+        assert_eq!(fw.macs_per_sample(), 512 * 512 * 2);
+        assert_eq!(fw.input_features(), 512);
+        assert_eq!(fw.output_features(), 512);
+        assert!(fw.tiles_used() <= fw.device.placeable_tiles());
+    }
+}

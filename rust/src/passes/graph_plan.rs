@@ -1,0 +1,221 @@
+//! Pass 5 — Graph planning: explicit compute-graph ↔ memory-tile wiring.
+//!
+//! Each inter-layer edge becomes a double-buffered memory-tile buffer with
+//! independent write and read tilers (paper §III-C): `layer_i` writes results
+//! in {M_i, N_i} tiles while `layer_{i+1}` reads them in {M_{i+1}, K_{i+1}}
+//! tiles; the read side zero-pads up to the consumer's padded input extent
+//! so arbitrary layer shapes connect without touching kernel code. Mixed
+//! precision is handled naturally because each buffer carries its own dtype
+//! and the two tilers need not agree on block shape.
+//!
+//! The physical memory-tile column is fixed later (after Placement) by the
+//! Emission pass; this pass resolves everything shape-level.
+
+use super::{Model, Pass};
+use crate::codegen::firmware::MemTilePlan;
+use crate::sim::dma::Tiler2d;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+pub struct GraphPlanning;
+
+/// All mem-tile programs of a model: one input plan per dense layer
+/// (keyed by consumer node id) plus the network output drain.
+#[derive(Debug, Clone, Default)]
+pub struct MemTileProgram {
+    pub input_plans: HashMap<usize, MemTilePlan>,
+    pub output_plan: Option<MemTilePlan>,
+}
+
+impl Pass for GraphPlanning {
+    fn name(&self) -> &'static str {
+        "graph-planning"
+    }
+
+    fn run(&self, model: &mut Model) -> Result<()> {
+        let dense = model.graph.dense_order()?;
+        let batch = model.config.batch;
+        let mut program = MemTileProgram::default();
+
+        for (i, &id) in dense.iter().enumerate() {
+            let node = model.graph.node(id)?;
+            let name = node.name.clone();
+            let (f_in, _) = node.dense_dims().unwrap();
+            let tiling = node.attrs.tiling.with_context(|| format!("{name}: no tiling"))?;
+            let geo = node.attrs.cascade.with_context(|| format!("{name}: no cascade"))?;
+            let q = node.attrs.quant.unwrap();
+
+            // Producer side: network input (row-major, modeled as 1xK tiles)
+            // or the previous dense layer's {M, N} store tiles.
+            let (write_tiler, prod_dtype) = if i == 0 {
+                (Tiler2d::new(batch, f_in, 1, tiling.k), q.input.dtype)
+            } else {
+                let prev = model.graph.node(dense[i - 1])?;
+                let pt = prev.attrs.tiling.unwrap();
+                let pq = prev.attrs.quant.unwrap();
+                let (_, prev_out) = prev.dense_dims().unwrap();
+                (Tiler2d::new(batch, prev_out, pt.m, pt.n), pq.output.dtype)
+            };
+            if prod_dtype != q.input.dtype {
+                bail!(
+                    "edge into '{name}': producer dtype {} != consumer input dtype {}",
+                    prod_dtype,
+                    q.input.dtype
+                );
+            }
+            // Consumer side: read {M, K} tiles over the *padded* input extent
+            // (zero padding injected by the mem-tile DMA).
+            let read_tiler = Tiler2d::new(batch, geo.f_in_padded(), tiling.m, tiling.k);
+            let buffer_bytes = batch * f_in * q.input.dtype.bytes();
+            program.input_plans.insert(
+                id,
+                MemTilePlan {
+                    mem_col: 0, // finalized by Emission after Placement
+                    write_tiler,
+                    read_tiler,
+                    buffer_bytes,
+                    ping_pong: true,
+                    dtype: q.input.dtype,
+                    columns: geo.cas_len,
+                },
+            );
+        }
+
+        // Output drain: last layer's {M, N} tiles back to row-major.
+        let last = model.graph.node(*dense.last().unwrap())?;
+        let lt = last.attrs.tiling.unwrap();
+        let lq = last.attrs.quant.unwrap();
+        let (_, f_out) = last.dense_dims().unwrap();
+        let last_geo = last.attrs.cascade.unwrap();
+        program.output_plan = Some(MemTilePlan {
+            mem_col: 0,
+            write_tiler: Tiler2d::new(batch, f_out, lt.m, lt.n),
+            read_tiler: Tiler2d::new(batch, f_out, 1, f_out.max(1)),
+            buffer_bytes: batch * f_out * lq.output.dtype.bytes(),
+            ping_pong: true,
+            dtype: lq.output.dtype,
+            columns: last_geo.cas_num.max(1),
+        });
+
+        // Capacity check: the buffer is sharded across the cascade columns'
+        // memory tiles (512 KiB each); every shard's ping-pong pair must
+        // fit a single tile's SRAM.
+        for (id, plan) in &program.input_plans {
+            if plan.per_column_bytes() > model.device.mem_tile_bytes {
+                let name = &model.graph.node(*id)?.name;
+                bail!(
+                    "layer '{name}': mem-tile shard {} B exceeds capacity {} B \
+                     (reduce batch or split the activation)",
+                    plan.per_column_bytes(),
+                    model.device.mem_tile_bytes
+                );
+            }
+        }
+
+        model.memtile_plans = Some(program);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{CompileConfig, JsonModel};
+    use crate::passes::{lowering::Lowering, packing::Packing, quantize::Quantization, resolve::Resolve};
+
+    use crate::frontend::JsonLayer;
+
+    fn planned(layers: Vec<JsonLayer>, batch: usize) -> Model {
+        let jm = JsonModel::new("m", layers);
+        let mut c = CompileConfig::default();
+        c.batch = batch;
+        let mut m = Model::new("m", jm.to_graph().unwrap(), c).unwrap();
+        for p in [
+            &Lowering as &dyn Pass,
+            &Quantization,
+            &Resolve,
+            &Packing,
+            &GraphPlanning,
+        ] {
+            p.run(&mut m).unwrap();
+        }
+        m
+    }
+
+    fn layer(name: &str, fin: usize, fout: usize, act: &str) -> JsonLayer {
+        JsonLayer::dense(
+            name,
+            fin,
+            fout,
+            true,
+            true,
+            act,
+            "int8",
+            0,
+            vec![0; fin * fout],
+            vec![0i64; fout],
+        )
+    }
+
+    #[test]
+    fn plans_for_every_layer_plus_output() {
+        let m = planned(
+            vec![layer("fc1", 128, 256, "int8"), layer("fc2", 256, 64, "int8")],
+            32,
+        );
+        let prog = m.memtile_plans.as_ref().unwrap();
+        assert_eq!(prog.input_plans.len(), 2);
+        assert!(prog.output_plan.is_some());
+    }
+
+    #[test]
+    fn retiling_shapes_connect_layers() {
+        let m = planned(
+            vec![layer("fc1", 128, 256, "int8"), layer("fc2", 256, 64, "int8")],
+            32,
+        );
+        let dense = m.graph.dense_order().unwrap();
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let plan2 = &prog.input_plans[&dense[1]];
+        // Writer covers fc1's logical output (256), reader covers fc2's
+        // padded input extent (>= 256).
+        assert_eq!(plan2.write_tiler.cols, 256);
+        assert!(plan2.read_tiler.cols >= 256);
+        let g2 = m.graph.node(dense[1]).unwrap().attrs.cascade.unwrap();
+        assert_eq!(plan2.read_tiler.cols, g2.f_in_padded());
+        // Write tiles are {M,N} of fc1, read tiles {M,K} of fc2.
+        let t1 = m.graph.node(dense[0]).unwrap().attrs.tiling.unwrap();
+        let t2 = m.graph.node(dense[1]).unwrap().attrs.tiling.unwrap();
+        assert_eq!((plan2.write_tiler.tile_rows, plan2.write_tiler.tile_cols), (t1.m, t1.n));
+        assert_eq!((plan2.read_tiler.tile_rows, plan2.read_tiler.tile_cols), (t2.m, t2.k));
+    }
+
+    #[test]
+    fn mixed_precision_edge_dtype_mismatch_rejected() {
+        let jm = JsonModel::new(
+            "m",
+            vec![layer("fc1", 64, 64, "int8"), layer("fc2", 64, 64, "int16")],
+        );
+        let mut m = Model::new("m", jm.to_graph().unwrap(), CompileConfig::default()).unwrap();
+        Lowering.run(&mut m).unwrap();
+        Quantization.run(&mut m).unwrap();
+        Resolve.run(&mut m).unwrap();
+        Packing.run(&mut m).unwrap();
+        // fc1 stores int8 but fc2 expects int16 inputs -> planning must fail.
+        assert!(GraphPlanning.run(&mut m).is_err());
+    }
+
+    #[test]
+    fn oversized_buffer_rejected() {
+        // batch 4096 x 8192 int8 activations = 32 MiB >> 512 KiB mem tile.
+        let jm = JsonModel::new("m", vec![layer("fc1", 8192, 64, "int8")]);
+        let mut c = CompileConfig::default();
+        c.batch = 4096;
+        let mut m = Model::new("m", jm.to_graph().unwrap(), c).unwrap();
+        Lowering.run(&mut m).unwrap();
+        Quantization.run(&mut m).unwrap();
+        Resolve.run(&mut m).unwrap();
+        Packing.run(&mut m).unwrap();
+        assert!(GraphPlanning.run(&mut m).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Pass 1 — Lowering: create the AIE-IR and apply simple fusions.
+//!
+//! The frontend graph may contain standalone `ReLU` nodes following dense
+//! layers; the AIE kernel applies activation in its epilogue for free, so
+//! Dense+ReLU is fused here (paper §IV-A step 1). The pass also validates
+//! shapes and rejects operator patterns the backend cannot map.
+
+use super::{Model, Pass};
+use crate::ir::{Graph, OpKind};
+use anyhow::{bail, Result};
+
+pub struct Lowering;
+
+impl Pass for Lowering {
+    fn name(&self) -> &'static str {
+        "lowering"
+    }
+
+    fn run(&self, model: &mut Model) -> Result<()> {
+        model.graph.validate_shapes()?;
+        model.graph = fuse_dense_relu(&model.graph)?;
+        // Every remaining node must be mappable.
+        for n in &model.graph.nodes {
+            match n.op {
+                OpKind::Input { .. } | OpKind::Dense { .. } | OpKind::Output => {}
+                OpKind::ReLU => {
+                    bail!(
+                        "node '{}': standalone ReLU without a preceding dense layer \
+                         cannot be mapped to the AIE backend",
+                        n.name
+                    )
+                }
+            }
+        }
+        if model.graph.dense_order()?.is_empty() {
+            bail!("model has no dense layers to map");
+        }
+        Ok(())
+    }
+}
+
+/// Rebuild the graph with every `Dense -> ReLU` pair fused into a single
+/// Dense node with `fused_relu = true`. Only fuses when the dense layer's
+/// output feeds the ReLU exclusively (single consumer).
+pub fn fuse_dense_relu(graph: &Graph) -> Result<Graph> {
+    let topo = graph.topo_order()?;
+    let mut fused_into: Vec<Option<usize>> = vec![None; graph.nodes.len()]; // relu id -> dense id
+    for &id in &topo {
+        if matches!(graph.nodes[id].op, OpKind::ReLU) {
+            let preds = graph.predecessors(id);
+            if preds.len() == 1 {
+                let p = preds[0];
+                if graph.nodes[p].op.is_dense() && graph.successors(p).len() == 1 {
+                    fused_into[id] = Some(p);
+                }
+            }
+        }
+    }
+
+    // Rebuild, skipping fused ReLU nodes and rewiring their edges.
+    let mut out = Graph::new();
+    let mut remap: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    for &id in &topo {
+        if fused_into[id].is_some() {
+            continue;
+        }
+        let n = &graph.nodes[id];
+        let mut op = n.op.clone();
+        if let OpKind::Dense { fused_relu, .. } = &mut op {
+            // Did any ReLU fuse into this dense node?
+            if fused_into.iter().any(|f| *f == Some(id)) {
+                *fused_relu = true;
+            }
+        }
+        let new_id = out.add_node(n.name.clone(), op);
+        let new_node = out.node_mut(new_id).unwrap();
+        new_node.weights = n.weights.clone();
+        new_node.bias = n.bias.clone();
+        new_node.attrs = n.attrs.clone();
+        remap[id] = Some(new_id);
+    }
+    // Resolve a node id through fused ReLUs to its surviving representative.
+    let resolve = |mut id: usize| -> usize {
+        while let Some(d) = fused_into[id] {
+            id = d;
+        }
+        remap[id].unwrap()
+    };
+    for e in &graph.edges {
+        let from = resolve(e.from);
+        let to = resolve(e.to);
+        if from != to {
+            out.connect(from, to);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{CompileConfig, JsonModel};
+
+    fn model_with_relu() -> Model {
+        use crate::frontend::JsonLayer;
+        let jm = JsonModel::new(
+            "m",
+            vec![
+                JsonLayer::dense("fc1", 4, 4, true, true, "int8", "int8", 0, vec![0; 16], vec![0; 4]),
+                JsonLayer::dense("fc2", 4, 2, false, false, "int8", "int8", 0, vec![0; 8], vec![]),
+            ],
+        );
+        Model::new("m", jm.to_graph().unwrap(), CompileConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn relu_fused_into_dense() {
+        let mut m = model_with_relu();
+        // Before: input, fc1, fc1_relu, fc2, output = 5 nodes.
+        assert_eq!(m.graph.nodes.len(), 5);
+        Lowering.run(&mut m).unwrap();
+        assert_eq!(m.graph.nodes.len(), 4);
+        let dense = m.graph.dense_order().unwrap();
+        assert!(m.graph.node(dense[0]).unwrap().fused_relu());
+        assert!(!m.graph.node(dense[1]).unwrap().fused_relu());
+        // Connectivity preserved: fc1 -> fc2.
+        assert_eq!(m.graph.successors(dense[0]), vec![dense[1]]);
+    }
+
+    #[test]
+    fn weights_survive_fusion() {
+        let mut m = model_with_relu();
+        let dense_before = m.graph.dense_order().unwrap();
+        m.graph.node_mut(dense_before[0]).unwrap().weights = (0..16).collect();
+        Lowering.run(&mut m).unwrap();
+        let dense = m.graph.dense_order().unwrap();
+        assert_eq!(m.graph.node(dense[0]).unwrap().weights, (0..16).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn orphan_relu_rejected() {
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 4 });
+        let r = g.add_node("r", OpKind::ReLU);
+        let d = g.add_node(
+            "fc",
+            OpKind::Dense { in_features: 4, out_features: 2, use_bias: false, fused_relu: false },
+        );
+        let o = g.add_node("out", OpKind::Output);
+        g.connect(i, r);
+        g.connect(r, d);
+        g.connect(d, o);
+        let mut m = Model::new("m", g, CompileConfig::default()).unwrap();
+        assert!(Lowering.run(&mut m).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! The AIE4ML pass pipeline (paper §IV-A, Fig. 2).
+//!
+//! Model transformation is organized as a series of compiler passes, each
+//! consuming and enriching the IR:
+//! 1. **Lowering** — creates the AIE-IR, applies fusions (Dense+ReLU),
+//!    initializes device context.
+//! 2. **Quantization** — converts tensors into supported integer
+//!    representations, finalizes accumulator dtypes and SRS shifts.
+//! 3. **Resolve** — derives all deterministic AIE attributes (tiling,
+//!    parallelism/cascade geometry), honoring valid user overrides.
+//! 4. **Packing** — reorganizes stationary tensors into tiled, aligned
+//!    layouts expected by the `aie::mmul` intrinsics.
+//! 5. **Graph-planning** — determines explicit connections between compute
+//!    graphs and memory tiles (write/read tiler pairs).
+//! 6. **Placement** — maps layers onto the physical 2D grid via
+//!    branch-and-bound search.
+//! 7. **Project emission** — instantiates layer templates and renders the
+//!    firmware package.
+
+pub mod emit;
+pub mod graph_plan;
+pub mod lowering;
+pub mod packing;
+pub mod placement;
+pub mod quantize;
+pub mod resolve;
+
+use crate::arch::Device;
+use crate::codegen::firmware::Firmware;
+use crate::frontend::{CompileConfig, JsonModel};
+use crate::ir::Graph;
+use anyhow::Result;
+
+pub use placement::{greedy_above, greedy_right, place_bnb, PlacementReport, PlacementStrategy};
+
+/// The mutable compilation state threaded through the pass pipeline.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub device: Device,
+    pub config: CompileConfig,
+    pub graph: Graph,
+    /// Populated by the graph-planning pass: per-dense-layer re-tiling plans
+    /// (consumer-indexed) plus the final output plan.
+    pub memtile_plans: Option<graph_plan::MemTileProgram>,
+    /// Populated by the placement pass.
+    pub placement_report: Option<PlacementReport>,
+    /// Populated by the emission pass.
+    pub firmware: Option<Firmware>,
+}
+
+impl Model {
+    pub fn new(name: impl Into<String>, graph: Graph, config: CompileConfig) -> Result<Model> {
+        let device = Device::by_name(&config.device)
+            .ok_or_else(|| anyhow::anyhow!("unknown device '{}'", config.device))?;
+        Ok(Model {
+            name: name.into(),
+            device,
+            config,
+            graph,
+            memtile_plans: None,
+            placement_report: None,
+            firmware: None,
+        })
+    }
+}
+
+/// A compiler pass.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, model: &mut Model) -> Result<()>;
+}
+
+/// Run the standard 7-stage pipeline.
+pub fn default_pipeline() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(lowering::Lowering),
+        Box::new(quantize::Quantization),
+        Box::new(resolve::Resolve),
+        Box::new(packing::Packing),
+        Box::new(graph_plan::GraphPlanning),
+        Box::new(placement::Placement),
+        Box::new(emit::Emission),
+    ]
+}
+
+/// Compile a parsed JSON model with a config all the way to firmware.
+pub fn compile(json: &JsonModel, config: CompileConfig) -> Result<Model> {
+    let graph = json.to_graph()?;
+    let mut model = Model::new(json.name.clone(), graph, config)?;
+    for pass in default_pipeline() {
+        pass.run(&mut model)
+            .map_err(|e| anyhow::anyhow!("pass '{}' failed: {e:#}", pass.name()))?;
+    }
+    if let Some(fw) = &model.firmware {
+        fw.check_invariants()?;
+    }
+    Ok(model)
+}
+
+/// Compile straight from a model JSON file.
+pub fn compile_file(path: impl AsRef<std::path::Path>, config: CompileConfig) -> Result<Model> {
+    let json = JsonModel::from_file(path)?;
+    compile(&json, config)
+}

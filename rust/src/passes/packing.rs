@@ -1,0 +1,180 @@
+//! Pass 4 — Packing: reorganize stationary tensors into tiled layouts.
+//!
+//! Weights and biases are RTP-loaded once and stay resident in tile-local
+//! memory (paper §III), so they must already be laid out in the exact ⟨K,N⟩
+//! tile-major order the `aie::mmul` kernel consumes. For each compute tile
+//! at cascade position (row r, col c) this pass extracts the transposed
+//! weight slice `Wᵀ[c·f_in_slice .. , r·f_out_slice ..]`, zero-pads it to the
+//! slice extent, and streams it through a [`Tiler2d`] in the kernel's ⟨K,N⟩
+//! block order. Bias slices (accumulator scale) go to each cascade row.
+
+use super::{Model, Pass};
+use crate::sim::dma::Tiler2d;
+use anyhow::{Context, Result};
+
+pub struct Packing;
+
+impl Pass for Packing {
+    fn name(&self) -> &'static str {
+        "packing"
+    }
+
+    fn run(&self, model: &mut Model) -> Result<()> {
+        let dense = model.graph.dense_order()?;
+        for id in dense {
+            let node = model.graph.node_mut(id)?;
+            let name = node.name.clone();
+            let (f_in, f_out) = node.dense_dims().unwrap();
+            let tiling = node.attrs.tiling.with_context(|| format!("{name}: no tiling"))?;
+            let geo = node.attrs.cascade.with_context(|| format!("{name}: no cascade"))?;
+
+            let mut packed = Vec::with_capacity(geo.tiles());
+            for r in 0..geo.cas_num {
+                for c in 0..geo.cas_len {
+                    // Transposed slice W^T[in, out] restricted to this tile,
+                    // zero-padded to (f_in_slice x f_out_slice).
+                    let mut wt = vec![0i32; geo.f_in_slice * geo.f_out_slice];
+                    for i in 0..geo.f_in_slice {
+                        let gi = c * geo.f_in_slice + i;
+                        if gi >= f_in {
+                            break;
+                        }
+                        for o in 0..geo.f_out_slice {
+                            let go = r * geo.f_out_slice + o;
+                            if go >= f_out {
+                                break;
+                            }
+                            // weights are row-major [out][in]
+                            wt[i * geo.f_out_slice + o] = node.weights[go * f_in + gi];
+                        }
+                    }
+                    let tiler = Tiler2d::new(geo.f_in_slice, geo.f_out_slice, tiling.k, tiling.n);
+                    packed.push(tiler.tile(&wt));
+                }
+            }
+            node.attrs.packed_weights = packed;
+
+            // Bias per cascade row, zero-padded to f_out_slice.
+            let mut packed_bias = Vec::with_capacity(geo.cas_num);
+            for r in 0..geo.cas_num {
+                let mut b = vec![0i64; geo.f_out_slice];
+                if node.use_bias() {
+                    for o in 0..geo.f_out_slice {
+                        let go = r * geo.f_out_slice + o;
+                        if go < f_out {
+                            b[o] = node.bias[go];
+                        }
+                    }
+                }
+                packed_bias.push(b);
+            }
+            node.attrs.packed_bias = packed_bias;
+        }
+        Ok(())
+    }
+}
+
+/// Reconstruct the logical transposed weight slice of one tile from its
+/// packed stream — used by tests and by the functional simulator to prove
+/// the packed layout is what the kernel semantics expect.
+pub fn unpack_tile(
+    packed: &[i32],
+    f_in_slice: usize,
+    f_out_slice: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    Tiler2d::new(f_in_slice, f_out_slice, k, n).untile(packed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{CompileConfig, JsonModel, LayerConfig};
+    use crate::passes::{lowering::Lowering, quantize::Quantization, resolve::Resolve};
+
+    fn packed_model(fin: usize, fout: usize, cascade: (usize, usize)) -> Model {
+        use crate::frontend::JsonLayer;
+        let weights: Vec<i32> = (0..(fin * fout) as i32).map(|x| x % 100 - 50).collect();
+        let bias: Vec<i64> = (0..fout as i64).map(|x| x * 3 - 7).collect();
+        let jm = JsonModel::new(
+            "m",
+            vec![JsonLayer::dense("fc1", fin, fout, true, false, "int8", "int8", 0, weights, bias)],
+        );
+        let mut c = CompileConfig::default();
+        c.layers.insert("fc1".into(), LayerConfig { cascade: Some(cascade), ..Default::default() });
+        let mut m = Model::new("m", jm.to_graph().unwrap(), c).unwrap();
+        Lowering.run(&mut m).unwrap();
+        Quantization.run(&mut m).unwrap();
+        Resolve.run(&mut m).unwrap();
+        Packing.run(&mut m).unwrap();
+        m
+    }
+
+    #[test]
+    fn packed_tiles_reconstruct_weights() {
+        let (fin, fout) = (128, 128);
+        let m = packed_model(fin, fout, (4, 4));
+        let id = m.graph.dense_order().unwrap()[0];
+        let n = m.graph.node(id).unwrap();
+        let geo = n.attrs.cascade.unwrap();
+        let t = n.attrs.tiling.unwrap();
+        assert_eq!(n.attrs.packed_weights.len(), 16);
+        // Reassemble W^T from per-tile unpacked slices and compare.
+        for r in 0..geo.cas_num {
+            for c in 0..geo.cas_len {
+                let packed = &n.attrs.packed_weights[r * geo.cas_len + c];
+                let wt = unpack_tile(packed, geo.f_in_slice, geo.f_out_slice, t.k, t.n);
+                for i in 0..geo.f_in_slice {
+                    for o in 0..geo.f_out_slice {
+                        let gi = c * geo.f_in_slice + i;
+                        let go = r * geo.f_out_slice + o;
+                        let expect = if gi < fin && go < fout {
+                            n.weights[go * fin + gi]
+                        } else {
+                            0
+                        };
+                        assert_eq!(wt[i * geo.f_out_slice + o], expect);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_dims_zero_padded() {
+        // 100x70 layer on a 2x2 cascade: slices round up to alignment, the
+        // padding region must be exactly zero.
+        let m = packed_model(100, 70, (2, 2));
+        let id = m.graph.dense_order().unwrap()[0];
+        let n = m.graph.node(id).unwrap();
+        let geo = n.attrs.cascade.unwrap();
+        let t = n.attrs.tiling.unwrap();
+        assert!(geo.f_in_padded() >= 100 && geo.f_out_padded() >= 70);
+        // Check the far corner tile's padding is zero.
+        let packed = n.attrs.packed_weights.last().unwrap();
+        let wt = unpack_tile(packed, geo.f_in_slice, geo.f_out_slice, t.k, t.n);
+        let last_i = geo.f_in_slice - 1;
+        let gi = (geo.cas_len - 1) * geo.f_in_slice + last_i;
+        assert!(gi >= 100);
+        for o in 0..geo.f_out_slice {
+            assert_eq!(wt[last_i * geo.f_out_slice + o], 0);
+        }
+    }
+
+    #[test]
+    fn bias_slices_cover_rows() {
+        let m = packed_model(64, 96, (2, 3));
+        let id = m.graph.dense_order().unwrap()[0];
+        let n = m.graph.node(id).unwrap();
+        let geo = n.attrs.cascade.unwrap();
+        assert_eq!(n.attrs.packed_bias.len(), geo.cas_num);
+        for r in 0..geo.cas_num {
+            for o in 0..geo.f_out_slice {
+                let go = r * geo.f_out_slice + o;
+                let expect = if go < 96 { go as i64 * 3 - 7 } else { 0 };
+                assert_eq!(n.attrs.packed_bias[r][o], expect);
+            }
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Pass 2 — Quantization: finalize integer representations.
+//!
+//! The frontend delivers power-of-two-quantized tensors; this pass checks
+//! they are representable on the target AIE generation, selects accumulator
+//! precision per operand pair (32-bit for i8×i8 / i16×i8, 64-bit for
+//! i16×i16 — paper Table II footnotes), derives the SRS shift that aligns
+//! the binary points, and range-checks the stored weight/bias payloads.
+
+use super::{Model, Pass};
+use crate::arch::{macs_per_cycle, Dtype, PrecisionPair};
+use crate::ir::derive_shift;
+use anyhow::{bail, Result};
+
+pub struct Quantization;
+
+impl Pass for Quantization {
+    fn name(&self) -> &'static str {
+        "quantization"
+    }
+
+    fn run(&self, model: &mut Model) -> Result<()> {
+        let dense = model.graph.dense_order()?;
+        let generation = model.device.generation;
+        for id in dense {
+            let node = model.graph.node_mut(id)?;
+            let name = node.name.clone();
+            let Some(mut q) = node.attrs.quant else {
+                bail!("layer '{name}': no quantization spec from frontend");
+            };
+            let pair = PrecisionPair::new(q.input.dtype, q.weight.dtype);
+            if macs_per_cycle(generation, pair).is_none() {
+                bail!(
+                    "layer '{name}': precision pair {pair} unsupported on {generation}"
+                );
+            }
+            if !matches!(q.output.dtype, Dtype::I8 | Dtype::I16) {
+                bail!("layer '{name}': output dtype {} not storable", q.output.dtype);
+            }
+            q.acc_dtype = pair.acc_dtype();
+            q.bias_dtype = Dtype::I32; // paper: 32-bit bias on all paths
+            // Bias lives at accumulator scale: frac = in_frac + w_frac.
+            q.shift = derive_shift(q.input.frac_bits, q.weight.frac_bits, q.output.frac_bits);
+            node.attrs.quant = Some(q);
+
+            // Range-check stored payloads against the declared dtypes.
+            let (wlo, whi) = q.weight.dtype.range();
+            if let Some(bad) = node.weights.iter().find(|&&w| (w as i64) < wlo || (w as i64) > whi)
+            {
+                bail!(
+                    "layer '{name}': weight {bad} outside {} range",
+                    q.weight.dtype
+                );
+            }
+            let (blo, bhi) = q.bias_dtype.range();
+            if let Some(bad) = node.bias.iter().find(|&&b| b < blo || b > bhi) {
+                bail!("layer '{name}': bias {bad} outside {} range", q.bias_dtype);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{CompileConfig, JsonModel};
+    use crate::passes::lowering::Lowering;
+
+    fn build(input: &str, weight: &str, output: &str, weights: Vec<i32>) -> Model {
+        use crate::frontend::JsonLayer;
+        let mut layer =
+            JsonLayer::dense("fc1", 2, 2, true, false, input, weight, 6, weights, vec![0, 0]);
+        layer.quant.output.dtype = output.to_string();
+        let jm = JsonModel::new("m", vec![layer]);
+        let mut m = Model::new("m", jm.to_graph().unwrap(), CompileConfig::default()).unwrap();
+        Lowering.run(&mut m).unwrap();
+        m
+    }
+
+    #[test]
+    fn acc_and_shift_resolved() {
+        let mut m = build("int8", "int8", "int8", vec![1, 2, 3, 4]);
+        Quantization.run(&mut m).unwrap();
+        let id = m.graph.dense_order().unwrap()[0];
+        let q = m.graph.node(id).unwrap().attrs.quant.unwrap();
+        assert_eq!(q.acc_dtype, Dtype::I32);
+        assert_eq!(q.shift, 6); // 6 + 6 - 6
+    }
+
+    #[test]
+    fn i16i16_uses_64bit_acc() {
+        let mut m = build("int16", "int16", "int16", vec![1, 2, 3, 4]);
+        Quantization.run(&mut m).unwrap();
+        let id = m.graph.dense_order().unwrap()[0];
+        let q = m.graph.node(id).unwrap().attrs.quant.unwrap();
+        assert_eq!(q.acc_dtype, Dtype::I64);
+    }
+
+    #[test]
+    fn weight_out_of_range_rejected() {
+        let mut m = build("int8", "int8", "int8", vec![1, 2, 3, 400]);
+        let err = Quantization.run(&mut m).unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn unsupported_pair_rejected() {
+        // i32 activations are not a MAC-supported operand type.
+        let mut m = build("int32", "int8", "int8", vec![1, 2, 3, 4]);
+        assert!(Quantization.run(&mut m).is_err());
+    }
+
+    #[test]
+    fn unstorable_output_rejected() {
+        let mut m = build("int8", "int8", "int64", vec![1, 2, 3, 4]);
+        assert!(Quantization.run(&mut m).is_err());
+    }
+}

@@ -1,0 +1,387 @@
+//! Pass 3 — Resolve: derive deterministic AIE attributes.
+//!
+//! For every dense layer this pass fixes (a) the `aie::mmul` ⟨M,K,N⟩ tiling
+//! (native shape for the operand pair unless the user overrides), (b) the
+//! cascade geometry (CAS_LEN × CAS_NUM and per-tile feature slices, paper
+//! §III-B) subject to array geometry, local-memory capacity and alignment
+//! constraints, and (c) the I/O batch chunking that keeps double-buffered
+//! io_buffers within local memory. User-supplied attributes are validated
+//! and honored as hard constraints.
+
+use super::{Model, Pass};
+use crate::arch::{Device, MmulTiling, PrecisionPair};
+use crate::ir::{CascadeGeometry, DenseQuant};
+use anyhow::{bail, Context, Result};
+
+pub struct Resolve;
+
+/// Alignment requirement on tile / I/O boundaries, bytes (paper §V-B:
+/// "32-bit alignment requirements on tile or I/O boundaries" — slices must
+/// start on 4-byte boundaries; vector-load 32-byte alignment applies to the
+/// buffer base, which the packing layout guarantees).
+const IO_ALIGN_BYTES: usize = 4;
+
+impl Pass for Resolve {
+    fn name(&self) -> &'static str {
+        "resolve"
+    }
+
+    fn run(&self, model: &mut Model) -> Result<()> {
+        let dense = model.graph.dense_order()?;
+        let device = model.device.clone();
+
+        // --- Tiling selection -------------------------------------------
+        for &id in &dense {
+            let node = model.graph.node_mut(id)?;
+            let name = node.name.clone();
+            let q = node.attrs.quant.context("quantization pass must run first")?;
+            let pair = PrecisionPair::new(q.input.dtype, q.weight.dtype);
+            let user = model.config.layer(&name).tiling;
+            let tiling = match user {
+                Some((m, k, n)) => {
+                    let supported = crate::arch::supported_tilings();
+                    *supported
+                        .iter()
+                        .find(|t| t.pair == pair && (t.m, t.k, t.n) == (m, k, n))
+                        .with_context(|| {
+                            format!("layer '{name}': tiling <{m},{k},{n}> unsupported for {pair}")
+                        })?
+                }
+                None => crate::arch::default_tiling_for(device.generation, pair)
+                    .with_context(|| format!("layer '{name}': no native tiling for {pair}"))?,
+            };
+            node.attrs.tiling = Some(tiling);
+        }
+
+        // --- Parallelism targets ----------------------------------------
+        let targets = parallelism_targets(model, &dense)?;
+
+        // --- Cascade geometry per layer ----------------------------------
+        for (&id, &target) in dense.iter().zip(&targets) {
+            let batch = model.config.batch;
+            let node = model.graph.node_mut(id)?;
+            let name = node.name.clone();
+            let (f_in, f_out) = node.dense_dims().unwrap();
+            let tiling = node.attrs.tiling.unwrap();
+            let q = node.attrs.quant.unwrap();
+            let user = model.config.layer(&name).cascade;
+            let geo = match user {
+                Some((cas_len, cas_num)) => {
+                    let geo = geometry_for(&device, f_in, f_out, &tiling, &q, cas_len, cas_num, batch)
+                        .with_context(|| {
+                            format!("layer '{name}': user cascade ({cas_len},{cas_num}) infeasible")
+                        })?;
+                    geo
+                }
+                None => choose_geometry(&device, f_in, f_out, &tiling, &q, target, batch)
+                    .with_context(|| format!("layer '{name}': no feasible cascade geometry"))?,
+            };
+            node.attrs.cascade = Some(geo);
+        }
+        Ok(())
+    }
+}
+
+/// Round `x` up to a multiple of `align` (align > 0).
+fn round_up(x: usize, align: usize) -> usize {
+    x.div_ceil(align) * align
+}
+
+/// Per-tile slice of the input dimension for a given cascade length:
+/// multiple of K and of the 32-byte I/O alignment.
+fn f_in_slice_for(f_in: usize, cas_len: usize, tiling: &MmulTiling, q: &DenseQuant) -> usize {
+    let elem_align = IO_ALIGN_BYTES / q.input.dtype.bytes();
+    let align = lcm(tiling.k, elem_align.max(1));
+    round_up(f_in.div_ceil(cas_len), align)
+}
+
+/// Per-row slice of the output dimension for a given cascade count.
+fn f_out_slice_for(f_out: usize, cas_num: usize, tiling: &MmulTiling, q: &DenseQuant) -> usize {
+    let elem_align = IO_ALIGN_BYTES / q.output.dtype.bytes();
+    let align = lcm(tiling.n, elem_align.max(1));
+    round_up(f_out.div_ceil(cas_num), align)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// Batch rows processed per io_buffer refill: the largest multiple of M
+/// (≤ batch, ≥ M) whose double-buffered I/O plus resident weights fit in
+/// local memory. Returns (chunk, local_mem_bytes).
+pub fn batch_chunk(
+    device: &Device,
+    tiling: &MmulTiling,
+    q: &DenseQuant,
+    f_in_slice: usize,
+    f_out_slice: usize,
+    batch: usize,
+) -> Option<(usize, usize)> {
+    let weight_bytes = f_in_slice * f_out_slice * q.weight.dtype.bytes();
+    let bias_bytes = f_out_slice * q.bias_dtype.bytes();
+    let mut chunk = round_up(batch.max(1), tiling.m);
+    loop {
+        let in_bytes = 2 * chunk * f_in_slice * q.input.dtype.bytes();
+        let out_bytes = 2 * chunk * f_out_slice * q.output.dtype.bytes();
+        let total = weight_bytes + bias_bytes + in_bytes + out_bytes;
+        if total <= device.local_mem_bytes {
+            return Some((chunk, total));
+        }
+        if chunk <= tiling.m {
+            return None; // weights alone exceed local memory
+        }
+        chunk = round_up(chunk / 2, tiling.m);
+    }
+}
+
+/// Build and validate the geometry for an explicit (cas_len, cas_num).
+#[allow(clippy::too_many_arguments)]
+fn geometry_for(
+    device: &Device,
+    f_in: usize,
+    f_out: usize,
+    tiling: &MmulTiling,
+    q: &DenseQuant,
+    cas_len: usize,
+    cas_num: usize,
+    batch: usize,
+) -> Result<CascadeGeometry> {
+    if cas_len == 0 || cas_num == 0 {
+        bail!("degenerate cascade geometry");
+    }
+    if cas_len > device.placeable_cols() {
+        bail!("cascade length {cas_len} exceeds {} placeable columns", device.placeable_cols());
+    }
+    if cas_num > device.rows {
+        bail!("cascade count {cas_num} exceeds {} rows", device.rows);
+    }
+    let f_in_slice = f_in_slice_for(f_in, cas_len, tiling, q);
+    let f_out_slice = f_out_slice_for(f_out, cas_num, tiling, q);
+    if batch_chunk(device, tiling, q, f_in_slice, f_out_slice, batch).is_none() {
+        bail!("weight slice {f_in_slice}x{f_out_slice} does not fit local memory");
+    }
+    Ok(CascadeGeometry { cas_len, cas_num, f_in_slice, f_out_slice })
+}
+
+/// Choose the best feasible geometry with at most `target` tiles:
+/// maximize used tiles, then minimize padded waste, then prefer
+/// longer cascades (they share input broadcasts), then lower height.
+fn choose_geometry(
+    device: &Device,
+    f_in: usize,
+    f_out: usize,
+    tiling: &MmulTiling,
+    q: &DenseQuant,
+    target: usize,
+    batch: usize,
+) -> Option<CascadeGeometry> {
+    let max_len = device
+        .placeable_cols()
+        .min(f_in.div_ceil(tiling.k))
+        .max(1);
+    let max_num = device.rows.min(f_out.div_ceil(tiling.n)).max(1);
+    let mut best: Option<(CascadeGeometry, (usize, usize, usize, usize))> = None;
+    for cas_len in 1..=max_len {
+        for cas_num in 1..=max_num {
+            if cas_len * cas_num > target {
+                continue;
+            }
+            let Ok(geo) = geometry_for(device, f_in, f_out, tiling, q, cas_len, cas_num, batch)
+            else {
+                continue;
+            };
+            let waste = geo.f_in_padded() * geo.f_out_padded() - f_in * f_out;
+            // Sort key: more tiles first; then prefer taller blocks —
+            // full-height rectangles provably pack side-by-side on the
+            // array (targets are quantized to column multiples), so height
+            // outranks padding waste; then less waste, shorter cascades.
+            let key = (usize::MAX - geo.tiles(), device.rows - cas_num, waste, cas_len);
+            if best.as_ref().map(|(_, k)| key < *k).unwrap_or(true) {
+                best = Some((geo, key));
+            }
+        }
+    }
+    best.map(|(g, _)| g)
+}
+
+/// Distribute the device's placeable tiles across layers proportionally to
+/// their MAC counts (each layer gets at least one tile), honoring
+/// `config.tiles_per_layer` when set. Auto targets ≥ one column are rounded
+/// down to full-column multiples (height = device rows) so the resulting
+/// rectangles provably pack side-by-side on the array.
+fn parallelism_targets(model: &Model, dense: &[usize]) -> Result<Vec<usize>> {
+    if let Some(t) = model.config.tiles_per_layer {
+        if t == 0 {
+            bail!("tiles_per_layer must be positive");
+        }
+        return Ok(vec![t; dense.len()]);
+    }
+    let budget = model.device.placeable_tiles();
+    let rows = model.device.rows;
+    let macs: Vec<usize> = dense
+        .iter()
+        .map(|&id| model.graph.nodes[id].macs_per_sample().max(1))
+        .collect();
+    let total: usize = macs.iter().sum();
+    let targets: Vec<usize> = macs
+        .iter()
+        .map(|&m| {
+            let raw = ((budget * m) as f64 / total as f64).floor().max(1.0) as usize;
+            if raw >= rows {
+                raw - raw % rows
+            } else {
+                raw
+            }
+        })
+        .collect();
+    Ok(targets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{CompileConfig, JsonModel, LayerConfig};
+    use crate::passes::{lowering::Lowering, quantize::Quantization};
+
+    use crate::frontend::JsonLayer;
+
+    fn mk_model(layers: Vec<JsonLayer>, config: CompileConfig) -> Model {
+        let jm = JsonModel::new("m", layers);
+        let mut m = Model::new("m", jm.to_graph().unwrap(), config).unwrap();
+        Lowering.run(&mut m).unwrap();
+        Quantization.run(&mut m).unwrap();
+        m
+    }
+
+    fn dense_layer(name: &str, fin: usize, fout: usize) -> JsonLayer {
+        JsonLayer::dense(
+            name,
+            fin,
+            fout,
+            true,
+            true,
+            "int8",
+            "int8",
+            6,
+            vec![0; fin * fout],
+            vec![0i64; fout],
+        )
+    }
+
+    #[test]
+    fn resolves_native_tiling_and_geometry() {
+        let mut m = mk_model(vec![dense_layer("fc1", 128, 128)], {
+            let mut c = CompileConfig::default();
+            c.tiles_per_layer = Some(16);
+            c
+        });
+        Resolve.run(&mut m).unwrap();
+        let id = m.graph.dense_order().unwrap()[0];
+        let n = m.graph.node(id).unwrap();
+        let t = n.attrs.tiling.unwrap();
+        assert_eq!((t.m, t.k, t.n), (4, 8, 8)); // native i8 tiling
+        let g = n.attrs.cascade.unwrap();
+        assert!(g.tiles() <= 16);
+        assert!(g.f_in_padded() >= 128 && g.f_out_padded() >= 128);
+        // i8 with K=8 and 32-bit I/O alignment -> slices are multiples of 8.
+        assert_eq!(g.f_in_slice % 8, 0);
+    }
+
+    #[test]
+    fn paper_4x4_cascade_for_128x128() {
+        // The paper's latency measurement uses a 4x4 cascade on 128x128.
+        let mut c = CompileConfig::default();
+        c.layers.insert(
+            "fc1".into(),
+            LayerConfig { cascade: Some((4, 4)), ..Default::default() },
+        );
+        let mut m = mk_model(vec![dense_layer("fc1", 128, 128)], c);
+        Resolve.run(&mut m).unwrap();
+        let id = m.graph.dense_order().unwrap()[0];
+        let g = m.graph.node(id).unwrap().attrs.cascade.unwrap();
+        assert_eq!((g.cas_len, g.cas_num), (4, 4));
+        assert_eq!(g.f_in_slice, 32);
+        assert_eq!(g.f_out_slice, 32);
+    }
+
+    #[test]
+    fn user_tiling_override_honored() {
+        let mut c = CompileConfig::default();
+        c.tiles_per_layer = Some(4);
+        c.layers.insert(
+            "fc1".into(),
+            LayerConfig { tiling: Some((2, 8, 8)), ..Default::default() },
+        );
+        let mut m = mk_model(vec![dense_layer("fc1", 64, 64)], c);
+        Resolve.run(&mut m).unwrap();
+        let id = m.graph.dense_order().unwrap()[0];
+        let t = m.graph.node(id).unwrap().attrs.tiling.unwrap();
+        assert_eq!((t.m, t.k, t.n), (2, 8, 8));
+    }
+
+    #[test]
+    fn invalid_tiling_override_rejected() {
+        let mut c = CompileConfig::default();
+        c.layers.insert(
+            "fc1".into(),
+            LayerConfig { tiling: Some((3, 7, 5)), ..Default::default() },
+        );
+        let mut m = mk_model(vec![dense_layer("fc1", 64, 64)], c);
+        assert!(Resolve.run(&mut m).is_err());
+    }
+
+    #[test]
+    fn oversize_cascade_rejected() {
+        let mut c = CompileConfig::default();
+        c.layers.insert(
+            "fc1".into(),
+            LayerConfig { cascade: Some((40, 4)), ..Default::default() },
+        );
+        let mut m = mk_model(vec![dense_layer("fc1", 4096, 64)], c);
+        assert!(Resolve.run(&mut m).is_err());
+    }
+
+    #[test]
+    fn auto_targets_proportional_to_macs() {
+        // Two layers, one 4x the MACs of the other: bigger layer gets more tiles.
+        let mut m = mk_model(
+            vec![dense_layer("fc1", 512, 512), dense_layer("fc2", 512, 128)],
+            CompileConfig::default(),
+        );
+        Resolve.run(&mut m).unwrap();
+        let dense = m.graph.dense_order().unwrap();
+        let g1 = m.graph.node(dense[0]).unwrap().attrs.cascade.unwrap();
+        let g2 = m.graph.node(dense[1]).unwrap().attrs.cascade.unwrap();
+        assert!(g1.tiles() > g2.tiles());
+    }
+
+    #[test]
+    fn batch_chunk_fits_memory() {
+        let d = Device::vek280();
+        let t = crate::arch::default_tiling(PrecisionPair::I8I8).unwrap();
+        let q = DenseQuant {
+            input: crate::ir::QuantSpec::new(crate::arch::Dtype::I8, 0),
+            weight: crate::ir::QuantSpec::new(crate::arch::Dtype::I8, 0),
+            output: crate::ir::QuantSpec::new(crate::arch::Dtype::I8, 0),
+            bias_dtype: crate::arch::Dtype::I32,
+            acc_dtype: crate::arch::Dtype::I32,
+            shift: 0,
+        };
+        // 128x128 slice, batch 128: full batch I/O would blow 64 KiB, so the
+        // chunk must shrink but stay a multiple of M.
+        let (chunk, bytes) = batch_chunk(&d, &t, &q, 128, 128, 128).unwrap();
+        assert!(bytes <= d.local_mem_bytes);
+        assert_eq!(chunk % t.m, 0);
+        assert!(chunk >= t.m);
+        // Oversized weight slice is infeasible outright.
+        assert!(batch_chunk(&d, &t, &q, 1024, 128, 128).is_none());
+    }
+}

@@ -1,0 +1,73 @@
+//! Bit-exactness oracle: firmware simulator vs PJRT-executed JAX model.
+//!
+//! The paper's toolflow guarantees outputs "bit-exact with respect to the
+//! quantized hls4ml model"; our equivalent gate compares the Rust firmware
+//! simulator against the AOT-lowered JAX model (which itself is pytest-
+//! checked against the Pallas kernel and the pure-jnp reference). A model
+//! passes when every output element matches exactly.
+
+use crate::codegen::firmware::Firmware;
+use crate::sim::functional::{execute, Activation};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+use super::PjrtRuntime;
+
+/// Result of one oracle comparison.
+#[derive(Debug, Clone)]
+pub struct OracleReport {
+    pub batch: usize,
+    pub features_out: usize,
+    pub elements: usize,
+    pub mismatches: usize,
+    /// First few mismatch positions (index, firmware, oracle) for debugging.
+    pub first_mismatches: Vec<(usize, i32, i32)>,
+}
+
+impl OracleReport {
+    pub fn bit_exact(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+/// Run `input` through both the firmware simulator and the HLO artifact and
+/// compare bit-exactly.
+///
+/// Artifact convention (see `python/compile/aot.py`): a single i32 input of
+/// shape `[batch, f_in]`, weights baked as constants from the same exporter
+/// JSON the Rust compiler consumed, i32 output `[batch, f_out]`.
+pub fn compare(
+    runtime: &mut PjrtRuntime,
+    artifact: impl AsRef<Path>,
+    fw: &Firmware,
+    input: &Activation,
+) -> Result<OracleReport> {
+    ensure!(input.batch == fw.batch, "artifact is specialized to batch {}", fw.batch);
+    let fw_out = execute(fw, input).context("firmware simulation")?;
+    let oracle_out = runtime
+        .execute_i32(artifact, &[(&input.data, &[input.batch, input.features])])
+        .context("PJRT oracle execution")?;
+    ensure!(
+        oracle_out.len() == fw_out.data.len(),
+        "oracle produced {} elements, firmware {}",
+        oracle_out.len(),
+        fw_out.data.len()
+    );
+    let mut mismatches = 0usize;
+    let mut first = Vec::new();
+    for (i, (&a, &b)) in fw_out.data.iter().zip(&oracle_out).enumerate() {
+        if a != b {
+            mismatches += 1;
+            if first.len() < 8 {
+                first.push((i, a, b));
+            }
+        }
+    }
+    Ok(OracleReport {
+        batch: input.batch,
+        features_out: fw_out.features,
+        elements: fw_out.data.len(),
+        mismatches,
+        first_mismatches: first,
+    })
+}

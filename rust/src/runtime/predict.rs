@@ -1,0 +1,129 @@
+//! The paper's `predict()` interface (§IV-B): one entry point, two
+//! execution modes — fast functional **x86** simulation (here: the
+//! AOT-lowered JAX model through PJRT) and the **aie** mode (here: the
+//! bit-exact firmware simulator, which is also what reports hardware-level
+//! statistics through the cycle model). Optional float I/O quantizes inputs
+//! and dequantizes outputs at the boundary, like the generated AIE project.
+
+use crate::codegen::firmware::Firmware;
+use crate::sim::engine::{analyze, EngineModel, PerfReport};
+use crate::sim::functional::{dequantize_output, execute, quantize_input, Activation};
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+
+use super::PjrtRuntime;
+
+/// Execution mode for [`Predictor::predict`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Fast functional validation through the PJRT-compiled JAX model.
+    X86,
+    /// The firmware simulator (cycle model available via [`Predictor::profile`]).
+    Aie,
+}
+
+/// A compiled model plus (optionally) its AOT artifact.
+pub struct Predictor {
+    fw: Firmware,
+    artifact: Option<PathBuf>,
+    runtime: Option<PjrtRuntime>,
+}
+
+impl Predictor {
+    pub fn new(fw: Firmware, artifact: Option<PathBuf>) -> Predictor {
+        Predictor { fw, artifact, runtime: None }
+    }
+
+    pub fn firmware(&self) -> &Firmware {
+        &self.fw
+    }
+
+    /// Integer predict: `[batch, f_in]` widened ints in, widened ints out.
+    pub fn predict(&mut self, x: &Activation, mode: Mode) -> Result<Activation> {
+        ensure!(x.batch == self.fw.batch, "predictor is specialized to batch {}", self.fw.batch);
+        match mode {
+            Mode::Aie => execute(&self.fw, x),
+            Mode::X86 => {
+                let artifact = self
+                    .artifact
+                    .clone()
+                    .context("x86 mode needs an AOT artifact (run `make artifacts`)")?;
+                if self.runtime.is_none() {
+                    self.runtime = Some(PjrtRuntime::cpu()?);
+                }
+                let rt = self.runtime.as_mut().unwrap();
+                let out = rt.execute_i32(&artifact, &[(&x.data, &[x.batch, x.features])])?;
+                Activation::new(x.batch, self.fw.output_features(), out)
+            }
+        }
+    }
+
+    /// Float predict: quantize at the input, dequantize at the output
+    /// (the paper's optional NumPy float I/O).
+    pub fn predict_f64(&mut self, x: &[f64], mode: Mode) -> Result<Vec<f64>> {
+        let qx = quantize_input(&self.fw, x, self.fw.batch)?;
+        let y = self.predict(&qx, mode)?;
+        Ok(dequantize_output(&self.fw, &y))
+    }
+
+    /// Hardware-level statistics from the cycle model (the aie-mode
+    /// profiling report of §IV-B: throughput, tile utilization, latency).
+    pub fn profile(&self) -> PerfReport {
+        analyze(&self.fw, &EngineModel::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dtype;
+    use crate::harness::models::compile_mlp;
+    use crate::util::Pcg32;
+
+    fn predictor() -> Predictor {
+        let m = compile_mlp("pred", &[32, 16, 8], Dtype::I8, 4, Some((1, 2))).unwrap();
+        Predictor::new(m.firmware.unwrap(), None)
+    }
+
+    #[test]
+    fn aie_mode_runs_without_artifact() {
+        let mut p = predictor();
+        let mut rng = Pcg32::seed_from_u64(1);
+        let x = Activation::new(4, 32, (0..128).map(|_| rng.gen_i32_in(-128, 127)).collect())
+            .unwrap();
+        let y = p.predict(&x, Mode::Aie).unwrap();
+        assert_eq!((y.batch, y.features), (4, 8));
+    }
+
+    #[test]
+    fn x86_mode_requires_artifact() {
+        let mut p = predictor();
+        let x = Activation::zeros(4, 32);
+        let err = p.predict(&x, Mode::X86).unwrap_err().to_string();
+        assert!(err.contains("artifact"), "{err}");
+    }
+
+    #[test]
+    fn float_io_roundtrip() {
+        let mut p = predictor();
+        let x: Vec<f64> = (0..4 * 32).map(|i| (i as f64 - 64.0) / 128.0).collect();
+        let y = p.predict_f64(&x, Mode::Aie).unwrap();
+        assert_eq!(y.len(), 4 * 8);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn profile_reports() {
+        let p = predictor();
+        let rep = p.profile();
+        assert!(rep.throughput_tops > 0.0);
+        assert_eq!(rep.layers.len(), 2);
+    }
+
+    #[test]
+    fn wrong_batch_rejected() {
+        let mut p = predictor();
+        let x = Activation::zeros(3, 32);
+        assert!(p.predict(&x, Mode::Aie).is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! Kernel-level cycle model (cycle-approximate, calibrated).
+//!
+//! We model one kernel invocation — C[chunk×f_out_slice] += A×W on one tile —
+//! as: steady-state VMAC cycles from the VLIW model, plus per-accumulator-
+//! block overheads (ACC_INIT in the prologue, SRS + VST epilogue feed),
+//! plus fused-path extras (store/ReLU per block, BIAS_LOAD per output
+//! column group), plus a fixed per-invocation cost (pipeline fill/drain,
+//! lock acquire/release, pointer setup).
+//!
+//! The overhead constants below are **calibrated**: they are the unique
+//! solution of the paper's measured single-tile efficiencies (Table II, six
+//! equations) under this overhead structure — the same role the Vitis
+//! cycle-accurate simulator plays for the authors. Scaling behaviour
+//! (Fig. 4, Table III) then *emerges* from the model rather than being
+//! fitted. See DESIGN.md §Cycle model and EXPERIMENTS.md for
+//! paper-vs-measured numbers.
+
+use crate::arch::{AieGeneration, Dtype, MmulTiling};
+use crate::sim::vliw;
+
+/// Calibration constants. One instance is shared across all benchmarks;
+/// tests pin the derived Table II efficiencies.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleModel {
+    /// Fixed cycles per kernel invocation: lock handshakes on the
+    /// double-buffered io_buffers, pointer setup, pipeline fill/drain.
+    pub kernel_fixed: f64,
+    /// Base epilogue per 2×2 accumulator block (ACC_INIT + SRS feed +
+    /// overlapped store), 32-bit accumulators.
+    pub block_base_acc32: f64,
+    /// Same, 64-bit accumulators (two SRS passes per lane group).
+    pub block_base_acc64: f64,
+    /// Extra per block when the fused bias/ReLU epilogue is enabled
+    /// (unoverlapped stores + ReLU clamp), 32-bit accumulators.
+    pub fused_extra_acc32: f64,
+    pub fused_extra_acc64: f64,
+    /// BIAS_LOAD: fetch + replicate a bias tile, paid once per output
+    /// column-pair per chunk (bias registers are reused down the batch).
+    pub bias_col_acc32: f64,
+    pub bias_col_acc64: f64,
+    /// Cascade heads/mids: push accumulators to the cascade port instead of
+    /// the SRS/store epilogue.
+    pub head_block: f64,
+    /// Multiplier on steady-state for non-native (emulated) tilings.
+    pub non_native_penalty: f64,
+}
+
+impl Default for CycleModel {
+    fn default() -> Self {
+        // Solved from paper Table II (see module docs):
+        //   i8xi8   128x128: base 95.8%, fused 81.3%
+        //   i16xi8  128x128: base 98.1%, fused 89.7%
+        //   i16xi16  64x64 : base 86.3%, fused 70.6%
+        CycleModel {
+            kernel_fixed: 26.0,
+            block_base_acc32: 1.8,
+            block_base_acc64: 9.3,
+            fused_extra_acc32: 8.0,
+            fused_extra_acc64: 12.0,
+            bias_col_acc32: 16.4,
+            bias_col_acc64: 18.0,
+            head_block: 1.0,
+            non_native_penalty: 1.8,
+        }
+    }
+}
+
+/// One kernel invocation's workload on a single tile.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelWorkload {
+    /// Batch rows processed in this invocation (one io_buffer chunk).
+    pub batch: usize,
+    pub f_in_slice: usize,
+    pub f_out_slice: usize,
+    pub tiling: MmulTiling,
+    pub use_bias: bool,
+    pub relu: bool,
+    /// This tile performs the epilogue (cascade tail) — heads/mids forward
+    /// raw accumulators over the cascade and skip SRS/store.
+    pub is_tail: bool,
+}
+
+/// Cycle breakdown of one kernel invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CycleBreakdown {
+    pub steady: f64,
+    pub block_overhead: f64,
+    pub fixed: f64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> f64 {
+        self.steady + self.block_overhead + self.fixed
+    }
+}
+
+/// Number of 2×2 accumulator blocks in the output tile grid.
+pub fn block_count(w: &KernelWorkload) -> usize {
+    let m_tiles = w.batch.div_ceil(w.tiling.m);
+    let n_tiles = w.f_out_slice.div_ceil(w.tiling.n);
+    m_tiles.div_ceil(2) * n_tiles.div_ceil(2)
+}
+
+/// Output column-pair count (BIAS_LOAD granularity).
+pub fn col_block_count(w: &KernelWorkload) -> usize {
+    w.f_out_slice.div_ceil(w.tiling.n).div_ceil(2)
+}
+
+/// Cycles for one kernel invocation on one tile.
+pub fn kernel_cycles(
+    w: &KernelWorkload,
+    model: &CycleModel,
+    generation: AieGeneration,
+    load_port_bytes: usize,
+) -> CycleBreakdown {
+    let m_tiles = w.batch.div_ceil(w.tiling.m);
+    let k_tiles = w.f_in_slice.div_ceil(w.tiling.k);
+    let n_tiles = w.f_out_slice.div_ceil(w.tiling.n);
+    let tile_muls = m_tiles * k_tiles * n_tiles;
+
+    let mut per_tile = vliw::blocked_cycles_per_tile(&w.tiling, generation, load_port_bytes);
+    if !w.tiling.native {
+        per_tile *= model.non_native_penalty;
+    }
+    let steady = tile_muls as f64 * per_tile;
+
+    let wide = w.tiling.pair.acc_dtype() == Dtype::I64;
+    let (base, fused_extra, bias_col) = if wide {
+        (model.block_base_acc64, model.fused_extra_acc64, model.bias_col_acc64)
+    } else {
+        (model.block_base_acc32, model.fused_extra_acc32, model.bias_col_acc32)
+    };
+    let blocks = block_count(w) as f64;
+    let block_overhead = if w.is_tail {
+        let mut o = blocks * base;
+        if w.use_bias || w.relu {
+            o += blocks * fused_extra;
+        }
+        if w.use_bias {
+            o += col_block_count(w) as f64 * bias_col;
+        }
+        o
+    } else {
+        blocks * model.head_block
+    };
+
+    CycleBreakdown { steady, block_overhead, fixed: model.kernel_fixed }
+}
+
+/// Cycles for a full batch on one tile: the batch is processed in io_buffer
+/// chunks of `chunk` rows; each chunk is one kernel invocation.
+pub fn batch_cycles(
+    batch: usize,
+    chunk: usize,
+    w_template: &KernelWorkload,
+    model: &CycleModel,
+    generation: AieGeneration,
+    load_port_bytes: usize,
+) -> f64 {
+    let chunks = batch.div_ceil(chunk.max(1));
+    let mut total = 0.0;
+    let mut remaining = batch;
+    for _ in 0..chunks {
+        let rows = remaining.min(chunk);
+        remaining -= rows;
+        let w = KernelWorkload { batch: rows, ..*w_template };
+        total += kernel_cycles(&w, model, generation, load_port_bytes).total();
+    }
+    total
+}
+
+/// Sustained GOPS of one tile for a workload, at `freq_ghz`.
+pub fn sustained_gops(macs: usize, cycles: f64, freq_ghz: f64) -> f64 {
+    2.0 * macs as f64 * freq_ghz / cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{default_tiling, tile_peak_gops, PrecisionPair};
+
+    fn table2_workload(pair: PrecisionPair, feat: usize, bias_relu: bool) -> KernelWorkload {
+        KernelWorkload {
+            batch: 128,
+            f_in_slice: feat,
+            f_out_slice: feat,
+            tiling: default_tiling(pair).unwrap(),
+            use_bias: bias_relu,
+            relu: bias_relu,
+            is_tail: true,
+        }
+    }
+
+    fn efficiency(pair: PrecisionPair, feat: usize, bias_relu: bool) -> f64 {
+        let w = table2_workload(pair, feat, bias_relu);
+        // Full batch in io_buffer chunks of 32 rows (the calibration point).
+        let macs = w.batch * feat * feat;
+        let model = CycleModel::default();
+        let cycles = batch_cycles(128, 32, &w, &model, AieGeneration::AieMl, 32);
+        let gops = sustained_gops(macs, cycles, 1.25);
+        gops / tile_peak_gops(AieGeneration::AieMl, pair, 1.25)
+    }
+
+    /// Paper Table II, base kernels: 95.8% / 98.1% / 86.3%.
+    #[test]
+    fn table2_base_efficiencies_in_band() {
+        let e8 = efficiency(PrecisionPair::I8I8, 128, false);
+        assert!((e8 - 0.958).abs() < 0.012, "i8xi8 base eff {e8}");
+        let e168 = efficiency(PrecisionPair::I16I8, 128, false);
+        assert!((e168 - 0.981).abs() < 0.012, "i16xi8 base eff {e168}");
+        let e1616 = efficiency(PrecisionPair::I16I16, 64, false);
+        assert!((e1616 - 0.863).abs() < 0.012, "i16xi16 base eff {e1616}");
+    }
+
+    /// Paper Table II, +Bias+ReLU: 81.3% / 89.7% / 70.6%.
+    #[test]
+    fn table2_fused_efficiencies_in_band() {
+        let e8 = efficiency(PrecisionPair::I8I8, 128, true);
+        assert!((e8 - 0.813).abs() < 0.015, "i8xi8 fused eff {e8}");
+        let e168 = efficiency(PrecisionPair::I16I8, 128, true);
+        assert!((e168 - 0.897).abs() < 0.015, "i16xi8 fused eff {e168}");
+        let e1616 = efficiency(PrecisionPair::I16I16, 64, true);
+        assert!((e1616 - 0.706).abs() < 0.015, "i16xi16 fused eff {e1616}");
+    }
+
+    #[test]
+    fn fused_is_slower_than_base() {
+        for (pair, feat) in [
+            (PrecisionPair::I8I8, 128),
+            (PrecisionPair::I16I8, 128),
+            (PrecisionPair::I16I16, 64),
+        ] {
+            assert!(efficiency(pair, feat, true) < efficiency(pair, feat, false));
+        }
+    }
+
+    #[test]
+    fn cascade_heads_cheaper_than_tails() {
+        let mut w = table2_workload(PrecisionPair::I8I8, 128, true);
+        let model = CycleModel::default();
+        let tail = kernel_cycles(&w, &model, AieGeneration::AieMl, 32).total();
+        w.is_tail = false;
+        let head = kernel_cycles(&w, &model, AieGeneration::AieMl, 32).total();
+        assert!(head < tail);
+    }
+
+    #[test]
+    fn non_native_penalized() {
+        let mut w = table2_workload(PrecisionPair::I8I8, 128, false);
+        let model = CycleModel::default();
+        let native = kernel_cycles(&w, &model, AieGeneration::AieMl, 32).steady;
+        w.tiling.native = false;
+        let emulated = kernel_cycles(&w, &model, AieGeneration::AieMl, 32).steady;
+        assert!(emulated > native * 1.5);
+    }
+
+    #[test]
+    fn larger_batch_amortizes_overheads() {
+        let model = CycleModel::default();
+        let w1 = KernelWorkload { batch: 8, ..table2_workload(PrecisionPair::I8I8, 128, false) };
+        let w2 = KernelWorkload { batch: 128, ..table2_workload(PrecisionPair::I8I8, 128, false) };
+        let c1 = kernel_cycles(&w1, &model, AieGeneration::AieMl, 32);
+        let c2 = kernel_cycles(&w2, &model, AieGeneration::AieMl, 32);
+        let eff1 = c1.steady / c1.total();
+        let eff2 = c2.steady / c2.total();
+        assert!(eff2 > eff1);
+    }
+
+    #[test]
+    fn bias_cost_scales_with_columns_not_rows() {
+        // Doubling the batch (more row blocks) must not double the bias
+        // overhead; doubling f_out_slice (more column groups) must.
+        let model = CycleModel::default();
+        let w = table2_workload(PrecisionPair::I8I8, 128, true);
+        let base = kernel_cycles(&w, &model, AieGeneration::AieMl, 32);
+        let w_rows = KernelWorkload { batch: 256, ..w };
+        let w_cols = KernelWorkload { f_out_slice: 256, ..w };
+        let rows = kernel_cycles(&w_rows, &model, AieGeneration::AieMl, 32);
+        let cols = kernel_cycles(&w_cols, &model, AieGeneration::AieMl, 32);
+        // Column-proportional part: isolate via col_block_count.
+        assert_eq!(col_block_count(&w_rows), col_block_count(&w));
+        assert_eq!(col_block_count(&w_cols), 2 * col_block_count(&w));
+        assert!(rows.block_overhead < 2.0 * base.block_overhead);
+        assert!(cols.block_overhead > 1.9 * base.block_overhead);
+    }
+}

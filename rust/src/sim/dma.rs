@@ -1,0 +1,332 @@
+//! Memory-tile DMA "tiler" model (AM020 — Versal AI Engine-ML Memory Tile).
+//!
+//! AIE-ML memory tiles move data with DMA engines programmed by tiling
+//! parameters: (i) the **buffer dimension** — the full logical extent of the
+//! stored buffer, (ii) the **tiling dimension** — the inner block shape of
+//! each transfer, and (iii) the **tile traversal** — stride and wrap per
+//! dimension. The DMA injects **zeros** when accessing data outside the
+//! defined buffer boundary (built-in zero padding), which AIE4ML exploits to
+//! connect arbitrary layer shapes (paper §III-B, §III-C).
+//!
+//! Two layers of model live here:
+//! * [`AddressGenerator`] — the raw stride/wrap nested-loop walker, exactly
+//!   the hardware's D0/D1/D2 descriptors, over a linear buffer.
+//! * [`Tiler2d`] — a coordinate-aware 2D tiler (row/col blocks over a
+//!   row-major matrix) with out-of-bounds zero padding; this is what the
+//!   packing pass and the memory-tile re-tiling plan use.
+
+
+/// One traversal dimension: `wrap` iterations advancing `stride` elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimStep {
+    pub stride: isize,
+    pub wrap: usize,
+}
+
+/// Nested-loop address generator over a linear buffer: dims\[0\] is the
+/// outermost loop, the last dim is innermost — mirroring the memory-tile
+/// DMA buffer-descriptor fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AddressGenerator {
+    pub base: isize,
+    pub dims: Vec<DimStep>,
+}
+
+impl AddressGenerator {
+    pub fn new(base: isize, dims: Vec<DimStep>) -> Self {
+        AddressGenerator { base, dims }
+    }
+
+    /// Total number of addresses generated.
+    pub fn len(&self) -> usize {
+        self.dims.iter().map(|d| d.wrap).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Generate the full address sequence.
+    pub fn addresses(&self) -> Vec<isize> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut idx = vec![0usize; self.dims.len()];
+        if self.dims.iter().any(|d| d.wrap == 0) {
+            return out;
+        }
+        loop {
+            let addr = self.base
+                + idx
+                    .iter()
+                    .zip(&self.dims)
+                    .map(|(&i, d)| i as isize * d.stride)
+                    .sum::<isize>();
+            out.push(addr);
+            // increment innermost-first
+            let mut carry = true;
+            for d in (0..self.dims.len()).rev() {
+                if !carry {
+                    break;
+                }
+                idx[d] += 1;
+                if idx[d] == self.dims[d].wrap {
+                    idx[d] = 0;
+                } else {
+                    carry = false;
+                }
+            }
+            if carry {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Gather elements from `buf` following the address sequence; addresses
+    /// outside `[0, buf.len())` produce zeros (hardware zero padding).
+    pub fn gather(&self, buf: &[i32]) -> Vec<i32> {
+        self.addresses()
+            .into_iter()
+            .map(|a| {
+                if a >= 0 && (a as usize) < buf.len() {
+                    buf[a as usize]
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    /// Scatter `data` into `buf` following the address sequence; OOB writes
+    /// are dropped (the hardware masks them).
+    pub fn scatter(&self, buf: &mut [i32], data: &[i32]) {
+        for (a, &v) in self.addresses().into_iter().zip(data) {
+            if a >= 0 && (a as usize) < buf.len() {
+                buf[a as usize] = v;
+            }
+        }
+    }
+}
+
+/// Coordinate-aware 2D tiler over a row-major `rows × cols` matrix:
+/// emits `tile_rows × tile_cols` blocks in row-major block order, elements
+/// row-major within each block. Reads outside the matrix produce zeros, so
+/// the *padded* logical extent is `ceil(rows/tr)·tr × ceil(cols/tc)·tc`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiler2d {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+impl Tiler2d {
+    pub fn new(rows: usize, cols: usize, tile_rows: usize, tile_cols: usize) -> Self {
+        assert!(tile_rows > 0 && tile_cols > 0, "degenerate tile shape");
+        Tiler2d { rows, cols, tile_rows, tile_cols }
+    }
+
+    /// Number of row blocks after padding.
+    pub fn row_blocks(&self) -> usize {
+        self.rows.div_ceil(self.tile_rows)
+    }
+
+    /// Number of column blocks after padding.
+    pub fn col_blocks(&self) -> usize {
+        self.cols.div_ceil(self.tile_cols)
+    }
+
+    /// Padded matrix extent.
+    pub fn padded(&self) -> (usize, usize) {
+        (self.row_blocks() * self.tile_rows, self.col_blocks() * self.tile_cols)
+    }
+
+    /// Length of the tiled stream.
+    pub fn stream_len(&self) -> usize {
+        let (pr, pc) = self.padded();
+        pr * pc
+    }
+
+    /// Read `matrix` (row-major, rows×cols) into tile-major order with zero
+    /// padding: the exact stream the memory tile feeds an `aie::mmul` kernel.
+    pub fn tile(&self, matrix: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(matrix.len(), self.rows * self.cols);
+        let mut out = Vec::with_capacity(self.stream_len());
+        for br in 0..self.row_blocks() {
+            for bc in 0..self.col_blocks() {
+                let c0 = bc * self.tile_cols;
+                for r in 0..self.tile_rows {
+                    let rr = br * self.tile_rows + r;
+                    if rr >= self.rows || c0 >= self.cols {
+                        // Fully padded tile row.
+                        out.resize(out.len() + self.tile_cols, 0);
+                        continue;
+                    }
+                    // Interior: bulk row-segment copy; tail columns padded.
+                    let valid = self.tile_cols.min(self.cols - c0);
+                    let base = rr * self.cols + c0;
+                    out.extend_from_slice(&matrix[base..base + valid]);
+                    out.resize(out.len() + (self.tile_cols - valid), 0);
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`tile`]: write a tile-major stream back into row-major
+    /// form, dropping the zero padding.
+    pub fn untile(&self, stream: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(stream.len(), self.stream_len());
+        let mut out = vec![0i32; self.rows * self.cols];
+        let mut it = stream.iter();
+        for br in 0..self.row_blocks() {
+            for bc in 0..self.col_blocks() {
+                for r in 0..self.tile_rows {
+                    for c in 0..self.tile_cols {
+                        let v = *it.next().unwrap();
+                        let rr = br * self.tile_rows + r;
+                        let cc = bc * self.tile_cols + c;
+                        if rr < self.rows && cc < self.cols {
+                            out[rr * self.cols + cc] = v;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Lower this tiler to the raw stride/wrap descriptor (only valid when
+    /// the matrix divides evenly — the hardware handles padding by boundary
+    /// checks, which the coordinate form models directly).
+    pub fn to_address_generator(&self) -> Option<AddressGenerator> {
+        if self.rows % self.tile_rows != 0 || self.cols % self.tile_cols != 0 {
+            return None;
+        }
+        Some(AddressGenerator::new(
+            0,
+            vec![
+                DimStep { stride: (self.tile_rows * self.cols) as isize, wrap: self.row_blocks() },
+                DimStep { stride: self.tile_cols as isize, wrap: self.col_blocks() },
+                DimStep { stride: self.cols as isize, wrap: self.tile_rows },
+                DimStep { stride: 1, wrap: self.tile_cols },
+            ],
+        ))
+    }
+}
+
+/// A re-tiling between two layouts through a memory tile: producer writes in
+/// `write` tile order, consumer reads in `read` tile order. Models the
+/// independent write/read tilers of one memory-tile buffer (paper §III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Retiler {
+    pub write: Tiler2d,
+    pub read: Tiler2d,
+}
+
+impl Retiler {
+    /// Pass a producer-tiled stream through the buffer and out in consumer
+    /// tile order. The logical matrix shape must agree.
+    pub fn retile(&self, producer_stream: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(self.write.rows, self.read.rows);
+        debug_assert_eq!(self.write.cols, self.read.cols);
+        let linear = self.write.untile(producer_stream);
+        self.read.tile(&linear)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_generator_contiguous() {
+        let ag = AddressGenerator::new(0, vec![DimStep { stride: 1, wrap: 6 }]);
+        assert_eq!(ag.addresses(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(ag.len(), 6);
+    }
+
+    #[test]
+    fn address_generator_strided_2d() {
+        // 2 rows of 3, column-major read of a row-major 2x3 buffer.
+        let ag = AddressGenerator::new(
+            0,
+            vec![DimStep { stride: 1, wrap: 3 }, DimStep { stride: 3, wrap: 2 }],
+        );
+        assert_eq!(ag.addresses(), vec![0, 3, 1, 4, 2, 5]);
+    }
+
+    #[test]
+    fn address_generator_zero_pads_oob() {
+        let ag = AddressGenerator::new(4, vec![DimStep { stride: 1, wrap: 4 }]);
+        let buf = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(ag.gather(&buf), vec![5, 6, 0, 0]);
+    }
+
+    #[test]
+    fn tiler_roundtrip_exact() {
+        let t = Tiler2d::new(4, 6, 2, 3);
+        let m: Vec<i32> = (0..24).collect();
+        let stream = t.tile(&m);
+        assert_eq!(stream.len(), 24);
+        assert_eq!(t.untile(&stream), m);
+        // First tile is the top-left 2x3 block.
+        assert_eq!(&stream[..6], &[0, 1, 2, 6, 7, 8]);
+    }
+
+    #[test]
+    fn tiler_zero_pads() {
+        // 3x5 matrix in 2x4 tiles -> padded to 4x8.
+        let t = Tiler2d::new(3, 5, 2, 4);
+        let m: Vec<i32> = (1..=15).collect();
+        let stream = t.tile(&m);
+        assert_eq!(stream.len(), 4 * 8);
+        // Round-trip drops the padding.
+        assert_eq!(t.untile(&stream), m);
+        // Padding positions are zero: element (row 3, col 0) is OOB.
+        let padded_rows = 4;
+        let padded_cols = 8;
+        assert_eq!(t.padded(), (padded_rows, padded_cols));
+        // Tile (1,0) covers rows 2..4; its second row is all zeros.
+        let tile10_start = (1 * t.col_blocks() + 0) * 8;
+        assert_eq!(&stream[tile10_start + 4..tile10_start + 8], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tiler_matches_address_generator_when_divisible() {
+        let t = Tiler2d::new(4, 8, 2, 4);
+        let m: Vec<i32> = (0..32).collect();
+        let ag = t.to_address_generator().unwrap();
+        assert_eq!(ag.gather(&m), t.tile(&m));
+    }
+
+    #[test]
+    fn address_generator_unavailable_when_padding_needed() {
+        assert!(Tiler2d::new(3, 5, 2, 4).to_address_generator().is_none());
+    }
+
+    #[test]
+    fn retile_between_layouts() {
+        // Producer writes 2x2 tiles, consumer reads 1x4 tiles (layer_i
+        // {M_i,N_i} -> layer_{i+1} {M_{i+1},K_{i+1}} re-tiling).
+        let w = Tiler2d::new(4, 4, 2, 2);
+        let r = Tiler2d::new(4, 4, 1, 4);
+        let m: Vec<i32> = (0..16).collect();
+        let produced = w.tile(&m);
+        let retiled = Retiler { write: w, read: r }.retile(&produced);
+        assert_eq!(retiled, r.tile(&m));
+        // 1x4 tiles of a 4x4 row-major matrix are just its rows.
+        assert_eq!(retiled, m);
+    }
+
+    #[test]
+    fn scatter_gather_inverse() {
+        let ag = AddressGenerator::new(
+            0,
+            vec![DimStep { stride: 4, wrap: 3 }, DimStep { stride: 1, wrap: 4 }],
+        );
+        let data: Vec<i32> = (100..112).collect();
+        let mut buf = vec![0i32; 12];
+        ag.scatter(&mut buf, &data);
+        assert_eq!(ag.gather(&buf), data);
+    }
+}

@@ -1,0 +1,473 @@
+//! Bit-exact functional execution of compiled firmware.
+//!
+//! This is the simulator's correctness half: it executes the *packed*
+//! firmware exactly as the hardware kernels would — per-tile weight streams
+//! are unpacked through the same ⟨K,N⟩ tiler the kernel uses, activations
+//! travel through the mem-tile write/read tilers with DMA zero padding,
+//! partial sums cascade west→east per row, the tail tile adds bias,
+//! applies ReLU in the epilogue and stores through SRS.
+//!
+//! Accumulator semantics match the hardware (and `jnp` int arithmetic):
+//! exact accumulation reduced modulo the accumulator width (i32 wraps for
+//! the 8/16-bit paths, i64 for i16×i16), saturation only at the SRS store.
+//! ReLU-before-SRS and clamp-after-SRS are bit-identical because SRS is
+//! monotone with srs(0)=0; we apply `max(srs(acc), 0)`.
+
+use crate::arch::Dtype;
+use crate::codegen::firmware::{Firmware, FirmwareLayer};
+use crate::ir::srs;
+use crate::sim::dma::Tiler2d;
+use anyhow::{ensure, Result};
+
+/// A batch of activations: row-major `[batch, features]`, storage widened
+/// to i32 (values always within the layer dtype's range).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Activation {
+    pub batch: usize,
+    pub features: usize,
+    pub data: Vec<i32>,
+}
+
+impl Activation {
+    pub fn new(batch: usize, features: usize, data: Vec<i32>) -> Result<Activation> {
+        ensure!(
+            data.len() == batch * features,
+            "activation data {} != {}x{}",
+            data.len(),
+            batch,
+            features
+        );
+        Ok(Activation { batch, features, data })
+    }
+
+    pub fn zeros(batch: usize, features: usize) -> Activation {
+        Activation { batch, features, data: vec![0; batch * features] }
+    }
+
+    pub fn row(&self, b: usize) -> &[i32] {
+        &self.data[b * self.features..(b + 1) * self.features]
+    }
+}
+
+/// Execute the whole firmware on an input batch. The input must be within
+/// the first layer's input dtype range (checked).
+pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
+    ensure!(
+        input.features == fw.input_features(),
+        "input features {} != model {}",
+        input.features,
+        fw.input_features()
+    );
+    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+    ensure!(
+        input.data.iter().all(|&x| (x as i64) >= lo && (x as i64) <= hi),
+        "input values outside {} range",
+        fw.layers[0].quant.input.dtype
+    );
+    let mut act = input.clone();
+    for layer in &fw.layers {
+        act = execute_layer(layer, &act)?;
+    }
+    // Output drain through the output mem-tile plan (round-trip through the
+    // write tiler models the final store order; values unchanged).
+    let plan = &fw.output_plan;
+    let stream = plan.write_tiler.tile(&act.data);
+    let data = plan.write_tiler.untile(&stream);
+    Activation::new(act.batch, act.features, data)
+}
+
+/// Execute one layer bit-exactly.
+pub fn execute_layer(layer: &FirmwareLayer, input: &Activation) -> Result<Activation> {
+    ensure!(
+        input.features == layer.in_features,
+        "layer '{}': input features {} != {}",
+        layer.name,
+        input.features,
+        layer.in_features
+    );
+    let geo = layer.cascade;
+    let t = layer.tiling;
+    let q = layer.quant;
+    let batch = input.batch;
+
+    // --- Mem-tile path: store in producer tile order, fetch, zero-pad ----
+    // The write/read tiler round trip is exercised for DMA-model fidelity.
+    let plan = &layer.input_plan;
+    let stream = plan.write_tiler.tile(&input.data);
+    let linear = plan.write_tiler.untile(&stream);
+    let f_in_pad = geo.f_in_padded();
+    let mut padded = vec![0i32; batch * f_in_pad];
+    for b in 0..batch {
+        padded[b * f_in_pad..b * f_in_pad + input.features]
+            .copy_from_slice(&linear[b * input.features..(b + 1) * input.features]);
+    }
+
+    // --- Per-cascade-row compute (rows are independent) ------------------
+    let f_out = layer.out_features;
+    let wide_acc = q.acc_dtype == Dtype::I64;
+    // Cascade rows are independent — compute them on scoped threads (the
+    // offline environment has no rayon; std::thread::scope serves the same
+    // purpose for this embarrassingly parallel loop).
+    let compute_row = |r: usize| -> Vec<i32> {
+        {
+            // Unpack each tile's weight stream through the kernel's tiler.
+            let wt_tiler = Tiler2d::new(geo.f_in_slice, geo.f_out_slice, t.k, t.n);
+            let slices: Vec<Vec<i32>> = (0..geo.cas_len)
+                .map(|c| wt_tiler.untile(&layer.kernel(r, c).weights))
+                .collect();
+            let tail = layer.kernel(r, geo.cas_len - 1);
+            let f_os = geo.f_out_slice;
+            let mut out = vec![0i32; batch * f_os];
+            // Row-of-accumulators loop order (i-k-j): each activation value
+            // streams across the contiguous weight row, which vectorizes and
+            // avoids the strided f_out_slice walk of the naive j-inner form.
+            //
+            // 32-bit path: accumulate with *wrapping i32* arithmetic — the
+            // hardware accumulator is modular, and mod-2^32 arithmetic is a
+            // ring homomorphism, so wrap-as-you-go equals exact-then-wrap.
+            // i32 lanes also vectorize 2x denser than i64. The i16xi16 path
+            // keeps exact i64 accumulation (its sums never overflow i64).
+            if !wide_acc {
+                let mut acc = vec![0i32; f_os];
+                for b in 0..batch {
+                    let a_row = &padded[b * f_in_pad..(b + 1) * f_in_pad];
+                    acc.fill(0);
+                    for (c, wt) in slices.iter().enumerate() {
+                        let a = &a_row[c * geo.f_in_slice..(c + 1) * geo.f_in_slice];
+                        for (i, &av) in a.iter().enumerate() {
+                            if av == 0 {
+                                continue; // zero padding rows/cols are common
+                            }
+                            let wrow = &wt[i * f_os..(i + 1) * f_os];
+                            for (o, &wv) in wrow.iter().enumerate() {
+                                acc[o] = acc[o].wrapping_add(av.wrapping_mul(wv));
+                            }
+                        }
+                    }
+                    let out_row = &mut out[b * f_os..(b + 1) * f_os];
+                    for o in 0..f_os {
+                        let mut a = acc[o];
+                        if layer.use_bias {
+                            a = a.wrapping_add(tail.bias[o] as i32);
+                        }
+                        let mut y = srs(a as i64, q.shift, q.output.dtype);
+                        if layer.relu {
+                            y = y.max(0);
+                        }
+                        out_row[o] = y as i32;
+                    }
+                }
+            } else {
+                let mut acc = vec![0i64; f_os];
+                for b in 0..batch {
+                    let a_row = &padded[b * f_in_pad..(b + 1) * f_in_pad];
+                    acc.fill(0);
+                    for (c, wt) in slices.iter().enumerate() {
+                        let a = &a_row[c * geo.f_in_slice..(c + 1) * geo.f_in_slice];
+                        for (i, &av) in a.iter().enumerate() {
+                            if av == 0 {
+                                continue;
+                            }
+                            let av = av as i64;
+                            let wrow = &wt[i * f_os..(i + 1) * f_os];
+                            for (o, &wv) in wrow.iter().enumerate() {
+                                acc[o] += av * wv as i64;
+                            }
+                        }
+                    }
+                    let out_row = &mut out[b * f_os..(b + 1) * f_os];
+                    for o in 0..f_os {
+                        let mut a = acc[o];
+                        if layer.use_bias {
+                            a += tail.bias[o];
+                        }
+                        let mut y = srs(a, q.shift, q.output.dtype);
+                        if layer.relu {
+                            y = y.max(0);
+                        }
+                        out_row[o] = y as i32;
+                    }
+                }
+            }
+            out
+        }
+    };
+    let parallel = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1;
+    let out_rows: Vec<Vec<i32>> = if parallel && geo.cas_num > 1 && batch * geo.f_out_slice >= 4096 {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..geo.cas_num)
+                .map(|r| scope.spawn(move || compute_row(r)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("row thread")).collect()
+        })
+    } else {
+        (0..geo.cas_num).map(compute_row).collect()
+    };
+
+    // --- Gather cascade-row outputs, drop feature padding -----------------
+    let mut data = vec![0i32; batch * f_out];
+    for (r, rows) in out_rows.iter().enumerate() {
+        for b in 0..batch {
+            for o in 0..geo.f_out_slice {
+                let go = r * geo.f_out_slice + o;
+                if go < f_out {
+                    data[b * f_out + go] = rows[b * geo.f_out_slice + o];
+                }
+            }
+        }
+    }
+    Activation::new(batch, f_out, data)
+}
+
+/// Reference dense layer on *unpacked* logical tensors — a second,
+/// independent implementation used to cross-check the packed path in tests.
+pub fn reference_dense(
+    input: &Activation,
+    weights: &[i32], // [out][in] row-major
+    bias: Option<&[i64]>,
+    f_out: usize,
+    shift: u32,
+    out_dtype: Dtype,
+    acc_dtype: Dtype,
+    relu: bool,
+) -> Activation {
+    let f_in = input.features;
+    let mut data = vec![0i32; input.batch * f_out];
+    for b in 0..input.batch {
+        for o in 0..f_out {
+            let mut acc: i64 = 0;
+            for i in 0..f_in {
+                acc += input.data[b * f_in + i] as i64 * weights[o * f_in + i] as i64;
+            }
+            if let Some(bias) = bias {
+                acc += bias[o];
+            }
+            if acc_dtype != Dtype::I64 {
+                acc = acc as i32 as i64;
+            }
+            let mut y = srs(acc, shift, out_dtype);
+            if relu {
+                y = y.max(0);
+            }
+            data[b * f_out + o] = y as i32;
+        }
+    }
+    Activation { batch: input.batch, features: f_out, data }
+}
+
+/// Quantize a float batch at the model boundary (optional float I/O).
+pub fn quantize_input(fw: &Firmware, x: &[f64], batch: usize) -> Result<Activation> {
+    let q = fw.layers[0].quant.input;
+    let features = fw.input_features();
+    ensure!(x.len() == batch * features, "float input length");
+    let data = x.iter().map(|&v| q.quantize(v) as i32).collect();
+    Activation::new(batch, features, data)
+}
+
+/// Dequantize the output batch back to floats.
+pub fn dequantize_output(fw: &Firmware, y: &Activation) -> Vec<f64> {
+    let q = fw.layers.last().unwrap().quant.output;
+    y.data.iter().map(|&v| q.dequantize(v as i64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{CompileConfig, JsonLayer, JsonModel, LayerConfig};
+    use crate::passes::compile;
+    use crate::util::rng::Pcg32;
+
+    fn rng() -> Pcg32 {
+        Pcg32::seed_from_u64(0x41E4)
+    }
+
+    fn build_fw(
+        dims: &[usize],
+        dtype: &str,
+        batch: usize,
+        cascade: Option<(usize, usize)>,
+        seed: u64,
+    ) -> (Firmware, Vec<Vec<i32>>, Vec<Vec<i64>>) {
+        let mut r = Pcg32::seed_from_u64(seed);
+        let (lo, hi) = Dtype::parse(dtype).unwrap().range();
+        let mut all_w = Vec::new();
+        let mut all_b = Vec::new();
+        let layers: Vec<JsonLayer> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let weights: Vec<i32> =
+                    (0..w[0] * w[1]).map(|_| r.gen_i32_in(lo, hi)).collect();
+                let bias: Vec<i64> = (0..w[1]).map(|_| r.gen_range_i64(-1000, 1000)).collect();
+                all_w.push(weights.clone());
+                all_b.push(bias.clone());
+                JsonLayer::dense(
+                    &format!("fc{}", i + 1),
+                    w[0],
+                    w[1],
+                    true,
+                    i + 2 < dims.len(),
+                    dtype,
+                    dtype,
+                    6,
+                    weights,
+                    bias,
+                )
+            })
+            .collect();
+        let jm = JsonModel::new("t", layers);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = batch;
+        cfg.tiles_per_layer = Some(8);
+        if let Some(cas) = cascade {
+            for i in 0..dims.len() - 1 {
+                cfg.layers.insert(
+                    format!("fc{}", i + 1),
+                    LayerConfig { cascade: Some(cas), ..Default::default() },
+                );
+            }
+        }
+        let fw = compile(&jm, cfg).unwrap().firmware.unwrap();
+        (fw, all_w, all_b)
+    }
+
+    fn random_input(batch: usize, features: usize, dtype: Dtype, r: &mut Pcg32) -> Activation {
+        let (lo, hi) = dtype.range();
+        let data = (0..batch * features).map(|_| r.gen_i32_in(lo, hi)).collect();
+        Activation::new(batch, features, data).unwrap()
+    }
+
+    #[test]
+    fn packed_path_matches_reference_i8() {
+        let (fw, ws, bs) = build_fw(&[64, 96, 32], "int8", 8, Some((2, 2)), 7);
+        let mut r = rng();
+        let x = random_input(8, 64, Dtype::I8, &mut r);
+        let y = execute(&fw, &x).unwrap();
+        // Independent reference path over logical tensors.
+        let mut a = x.clone();
+        for (i, l) in fw.layers.iter().enumerate() {
+            a = reference_dense(
+                &a,
+                &ws[i],
+                Some(&bs[i]),
+                l.out_features,
+                l.quant.shift,
+                l.quant.output.dtype,
+                l.quant.acc_dtype,
+                l.relu,
+            );
+        }
+        assert_eq!(y.data, a.data);
+    }
+
+    #[test]
+    fn packed_path_matches_reference_i16() {
+        let (fw, ws, bs) = build_fw(&[48, 64, 16], "int16", 4, Some((2, 2)), 11);
+        let mut r = rng();
+        let x = random_input(4, 48, Dtype::I16, &mut r);
+        let y = execute(&fw, &x).unwrap();
+        let mut a = x.clone();
+        for (i, l) in fw.layers.iter().enumerate() {
+            a = reference_dense(
+                &a,
+                &ws[i],
+                Some(&bs[i]),
+                l.out_features,
+                l.quant.shift,
+                l.quant.output.dtype,
+                l.quant.acc_dtype,
+                l.relu,
+            );
+        }
+        assert_eq!(y.data, a.data);
+    }
+
+    #[test]
+    fn result_independent_of_cascade_geometry() {
+        // The same layer computed on 1 tile vs 2x2 vs 4x2 cascades must be
+        // bit-identical — parallelization must not change semantics.
+        let mut r = rng();
+        let x = random_input(8, 128, Dtype::I8, &mut r);
+        let (fw1, _, _) = build_fw(&[128, 64], "int8", 8, Some((1, 1)), 3);
+        let (fw2, _, _) = build_fw(&[128, 64], "int8", 8, Some((2, 2)), 3);
+        let (fw3, _, _) = build_fw(&[128, 64], "int8", 8, Some((4, 2)), 3);
+        let y1 = execute(&fw1, &x).unwrap();
+        let y2 = execute(&fw2, &x).unwrap();
+        let y3 = execute(&fw3, &x).unwrap();
+        assert_eq!(y1.data, y2.data);
+        assert_eq!(y1.data, y3.data);
+    }
+
+    #[test]
+    fn ragged_shapes_execute() {
+        // Non-divisible dims exercise mem-tile zero padding end to end.
+        let (fw, ws, bs) = build_fw(&[100, 70, 10], "int8", 5, Some((2, 3)), 13);
+        let mut r = rng();
+        let x = random_input(5, 100, Dtype::I8, &mut r);
+        let y = execute(&fw, &x).unwrap();
+        let mut a = x.clone();
+        for (i, l) in fw.layers.iter().enumerate() {
+            a = reference_dense(
+                &a,
+                &ws[i],
+                Some(&bs[i]),
+                l.out_features,
+                l.quant.shift,
+                l.quant.output.dtype,
+                l.quant.acc_dtype,
+                l.relu,
+            );
+        }
+        assert_eq!(y.data, a.data);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        // Identity-free check: all-negative weights + relu => zero outputs.
+        let jm = JsonModel::new(
+            "m",
+            vec![JsonLayer::dense("fc1", 32, 32, false, true, "int8", "int8", 0, vec![-1; 32 * 32], vec![])],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 4;
+        cfg.tiles_per_layer = Some(1);
+        let fw = compile(&jm, cfg).unwrap().firmware.unwrap();
+        let x = Activation::new(4, 32, vec![1; 4 * 32]).unwrap();
+        let y = execute(&fw, &x).unwrap();
+        assert!(y.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn srs_saturation_reached() {
+        // Max-positive weights/inputs with shift 0 must pin at +127.
+        let jm = JsonModel::new(
+            "m",
+            vec![JsonLayer::dense("fc1", 32, 32, false, false, "int8", "int8", 0, vec![127; 32 * 32], vec![])],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 2;
+        cfg.tiles_per_layer = Some(1);
+        let fw = compile(&jm, cfg).unwrap().firmware.unwrap();
+        let x = Activation::new(2, 32, vec![127; 2 * 32]).unwrap();
+        let y = execute(&fw, &x).unwrap();
+        assert!(y.data.iter().all(|&v| v == 127));
+    }
+
+    #[test]
+    fn input_range_checked() {
+        let (fw, _, _) = build_fw(&[32, 16], "int8", 2, Some((1, 1)), 1);
+        let x = Activation::new(2, 32, vec![300; 64]).unwrap();
+        assert!(execute(&fw, &x).is_err());
+    }
+
+    #[test]
+    fn float_boundary_roundtrip() {
+        let (fw, _, _) = build_fw(&[32, 16], "int8", 2, Some((1, 1)), 5);
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 - 32.0) / 64.0).collect();
+        let qa = quantize_input(&fw, &x, 2).unwrap();
+        let y = execute(&fw, &qa).unwrap();
+        let yf = dequantize_output(&fw, &y);
+        assert_eq!(yf.len(), 2 * 16);
+        assert!(yf.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,194 @@
+//! Stream-switch interconnect model: routing between layer outputs and the
+//! next layer's memory tile.
+//!
+//! The AIE-ML array routes data through per-tile stream switches; a hop
+//! costs one switch traversal, and links are shared, so long or overlapping
+//! routes add latency and (under contention) serialize. The placement
+//! objective (Eq. 2) exists precisely to shorten these routes — this module
+//! makes the cost concrete so placement quality feeds the performance model
+//! (and the `ablation_placement` bench can measure it).
+//!
+//! Routing is dimension-ordered (X then Y), the standard deadlock-free
+//! scheme on mesh NoCs and a faithful stand-in for the AIE stream-switch
+//! static routes the `aiecompiler` derives.
+
+use crate::codegen::firmware::Firmware;
+use crate::ir::PlacementRect;
+
+/// One static route: from a producer tile through the array to a memory
+/// tile column (memory tiles sit below row 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    /// Sequence of (col, row) tiles traversed, producer first.
+    pub hops: Vec<(usize, usize)>,
+}
+
+impl Route {
+    /// Dimension-ordered route from `(c0, r0)` down to the memory tile at
+    /// column `mc` (X first along the producer's row, then Y down to row 0).
+    pub fn dimension_ordered(c0: usize, r0: usize, mc: usize) -> Route {
+        let mut hops = vec![(c0, r0)];
+        let mut c = c0;
+        while c != mc {
+            c = if c < mc { c + 1 } else { c - 1 };
+            hops.push((c, r0));
+        }
+        for r in (0..r0).rev() {
+            hops.push((c, r));
+        }
+        Route { hops }
+    }
+
+    /// Switch traversals (route length minus the source).
+    pub fn len(&self) -> usize {
+        self.hops.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Static routing of one compiled firmware: every cascade-tail tile routes
+/// its output slice to the consumer's memory-tile column; every memory tile
+/// broadcasts up its column (vertical links).
+#[derive(Debug, Clone)]
+pub struct RoutingPlan {
+    pub routes: Vec<Route>,
+    /// Maximum number of routes crossing any single directed link.
+    pub max_link_load: usize,
+    /// Total switch traversals.
+    pub total_hops: usize,
+}
+
+/// Build the routing plan from placements.
+pub fn route_firmware(fw: &Firmware) -> RoutingPlan {
+    let mut routes = Vec::new();
+    for (i, layer) in fw.layers.iter().enumerate() {
+        // Output drain target: the next layer's input column (or the output
+        // plan's column for the last layer).
+        let mc = if i + 1 < fw.layers.len() {
+            fw.layers[i + 1].input_plan.mem_col
+        } else {
+            fw.output_plan.mem_col
+        };
+        for k in &layer.kernels {
+            if k.is_tail {
+                routes.push(Route::dimension_ordered(k.col, k.row, mc));
+            }
+        }
+    }
+    let mut link_load = std::collections::HashMap::new();
+    let mut total = 0usize;
+    for r in &routes {
+        total += r.len();
+        for w in r.hops.windows(2) {
+            *link_load.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+    }
+    RoutingPlan {
+        routes,
+        max_link_load: link_load.values().copied().max().unwrap_or(0),
+        total_hops: total,
+    }
+}
+
+/// Interconnect latency contribution of a placement (cycles): the longest
+/// route, plus a serialization penalty on the most-contended link.
+pub fn interconnect_latency_cycles(plan: &RoutingPlan, hop_cycles: usize) -> f64 {
+    let longest = plan.routes.iter().map(Route::len).max().unwrap_or(0);
+    (longest * hop_cycles) as f64 + plan.max_link_load.saturating_sub(1) as f64
+}
+
+/// Sum of Manhattan distances between consecutive layers' out/in columns —
+/// the quantity Eq. 2 minimizes, measured on actual placements.
+pub fn chain_wirelength(rects: &[PlacementRect]) -> usize {
+    rects
+        .windows(2)
+        .map(|w| {
+            w[0].output_col().abs_diff(w[1].input_col())
+                + w[0].output_row().abs_diff(w[1].input_row())
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dtype;
+    use crate::harness::models::compile_mlp;
+
+    #[test]
+    fn dimension_ordered_route_shape() {
+        let r = Route::dimension_ordered(3, 2, 6);
+        // 3 east hops + 2 south hops.
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.hops.first(), Some(&(3, 2)));
+        assert_eq!(r.hops.last(), Some(&(6, 0)));
+        // X-first: row stays 2 until col reaches 6.
+        assert!(r.hops.iter().take(4).all(|&(_, row)| row == 2));
+    }
+
+    #[test]
+    fn route_to_own_column_is_pure_vertical() {
+        let r = Route::dimension_ordered(5, 3, 5);
+        assert_eq!(r.len(), 3);
+        assert!(r.hops.iter().all(|&(c, _)| c == 5));
+    }
+
+    #[test]
+    fn zero_length_route() {
+        let r = Route::dimension_ordered(2, 0, 2);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn firmware_routing_covers_all_tails() {
+        let m = compile_mlp("route", &[128, 128, 64], Dtype::I8, 8, Some((2, 4))).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        let plan = route_firmware(fw);
+        let tails: usize = fw
+            .layers
+            .iter()
+            .map(|l| l.kernels.iter().filter(|k| k.is_tail).count())
+            .sum();
+        assert_eq!(plan.routes.len(), tails);
+        assert!(plan.total_hops > 0);
+        assert!(plan.max_link_load >= 1);
+    }
+
+    #[test]
+    fn compact_placement_routes_shorter_than_scattered() {
+        use crate::frontend::{CompileConfig, LayerConfig};
+        use crate::harness::models::{mlp_spec, synth_model};
+        let spec = mlp_spec(&[128, 128, 128], Dtype::I8);
+        let json = synth_model("route_cmp", &spec, 6);
+        // Compact: B&B placement.
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        for l in &spec {
+            cfg.layers
+                .insert(l.name.clone(), LayerConfig { cascade: Some((2, 4)), ..Default::default() });
+        }
+        let compact = crate::passes::compile(&json, cfg.clone()).unwrap();
+        // Scattered: pin the layers far apart.
+        cfg.layers.get_mut("fc1").unwrap().place_at = Some((0, 0));
+        cfg.layers.get_mut("fc2").unwrap().place_at = Some((30, 4));
+        let scattered = crate::passes::compile(&json, cfg).unwrap();
+        let hops_compact = route_firmware(compact.firmware.as_ref().unwrap()).total_hops;
+        let hops_scattered = route_firmware(scattered.firmware.as_ref().unwrap()).total_hops;
+        assert!(
+            hops_compact < hops_scattered,
+            "compact {hops_compact} !< scattered {hops_scattered}"
+        );
+    }
+
+    #[test]
+    fn wirelength_matches_manual() {
+        use crate::ir::PlacementRect;
+        let a = PlacementRect { col: 0, row: 0, width: 4, height: 2 };
+        let b = PlacementRect { col: 6, row: 1, width: 2, height: 2 };
+        // |out_col(a)=3 - in_col(b)=6| + |0 - 1| = 4
+        assert_eq!(chain_wirelength(&[a, b]), 4);
+    }
+}

@@ -1,0 +1,20 @@
+//! The AIE-ML simulator substrate: DMA tilers, bit-exact functional
+//! execution, the VLIW/cycle model, and the steady-state pipeline engine.
+//!
+//! The paper evaluates on AMD's cycle-accurate `aiesim`; this module is the
+//! substitution (see DESIGN.md): `functional` is bit-exact by construction,
+//! `vliw`+`cycles` are calibrated against the paper's published single-tile
+//! numbers, and `engine` derives multi-tile/multi-layer behaviour from the
+//! device model.
+
+pub mod cycles;
+pub mod dma;
+pub mod engine;
+pub mod functional;
+pub mod interconnect;
+pub mod vliw;
+
+pub use cycles::{batch_cycles, kernel_cycles, CycleBreakdown, CycleModel, KernelWorkload};
+pub use dma::{AddressGenerator, DimStep, Retiler, Tiler2d};
+pub use engine::{analyze, replicated_tops, EngineModel, PerfReport};
+pub use functional::{execute, execute_layer, Activation};

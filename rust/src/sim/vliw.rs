@@ -1,0 +1,123 @@
+//! VLIW issue-slot model of the AIE-ML core.
+//!
+//! The AIE-ML core issues a 7-way very long instruction word: in one cycle
+//! it can schedule one vector multiply-accumulate (VMAC), two vector loads
+//! (VLDA, VLDB — one per load unit), one vector store (VST), a scalar ALU
+//! op, and move operations (paper §III-A "Optimized VLIW Execution").
+//! This module derives the steady-state initiation interval (II) of the
+//! blocked linear-kernel loop from per-iteration slot demands, and models
+//! the software-pipeline prologue/epilogue depth.
+
+use crate::arch::{AieGeneration, MmulTiling};
+
+/// Per-cycle issue capacity of the core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IssueSlots {
+    pub vmac: usize,
+    pub vld: usize,
+    pub vst: usize,
+    pub scalar: usize,
+}
+
+impl IssueSlots {
+    /// AIE-ML / AIE-MLv2 7-way VLIW: 1 VMAC + 2 VLD + 1 VST + scalar + moves.
+    pub fn aie_ml() -> IssueSlots {
+        IssueSlots { vmac: 1, vld: 2, vst: 1, scalar: 1 }
+    }
+}
+
+/// Slot demand of one steady-state loop iteration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SlotDemand {
+    pub vmac: usize,
+    pub vld: usize,
+    pub vst: usize,
+    pub scalar: usize,
+}
+
+/// Steady-state initiation interval: cycles per loop iteration given the
+/// slot demand — the maximum over resource classes of demand/capacity.
+pub fn initiation_interval(demand: &SlotDemand, slots: &IssueSlots) -> usize {
+    let per = |d: usize, c: usize| if c == 0 { usize::MAX } else { d.div_ceil(c) };
+    per(demand.vmac, slots.vmac)
+        .max(per(demand.vld, slots.vld))
+        .max(per(demand.vst, slots.vst))
+        .max(per(demand.scalar, slots.scalar))
+        .max(1)
+}
+
+/// Slot demand of one iteration of the 2×2-blocked `aie::mmul` inner loop:
+/// 4 tile-multiplies (two A tiles × two W tiles) per iteration, each tile
+/// multiply costing `vmac_cycles_per_tile` VMAC issues; 2 A-tile loads and
+/// 2 W-tile loads (each `load_cycles` wide-vector loads); one scalar
+/// address update. Stores happen only in the K-loop epilogue and are
+/// overlapped, so they don't appear in the steady-state demand.
+pub fn blocked_loop_demand(tiling: &MmulTiling, generation: AieGeneration, load_port_bytes: usize) -> SlotDemand {
+    let a_bytes = tiling.m * tiling.k * tiling.pair.act.bytes();
+    let w_bytes = tiling.k * tiling.n * tiling.pair.wgt.bytes();
+    let a_loads = a_bytes.div_ceil(load_port_bytes);
+    let w_loads = w_bytes.div_ceil(load_port_bytes);
+    SlotDemand {
+        vmac: 4 * tiling.vmac_cycles_per_tile(generation),
+        vld: 2 * a_loads + 2 * w_loads,
+        vst: 0,
+        scalar: 1,
+    }
+}
+
+/// Steady-state cycles per *tile multiply* of the blocked kernel.
+pub fn blocked_cycles_per_tile(
+    tiling: &MmulTiling,
+    generation: AieGeneration,
+    load_port_bytes: usize,
+) -> f64 {
+    let demand = blocked_loop_demand(tiling, generation, load_port_bytes);
+    initiation_interval(&demand, &IssueSlots::aie_ml()) as f64 / 4.0
+}
+
+/// Software-pipeline depth: cycles to fill/drain the loop pipeline once per
+/// kernel invocation (loads → MAC → SRS → store stages).
+pub const PIPELINE_DEPTH: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{native_tilings, PrecisionPair};
+
+    #[test]
+    fn native_tilings_reach_ii_four_for_four_tiles() {
+        // Every Table-I native tiling sustains 4 tile-multiplies in 4 cycles
+        // (1 VMAC/cycle) under the 2x2 scheme: the VLIW has enough load slots.
+        for t in native_tilings() {
+            let d = blocked_loop_demand(&t, AieGeneration::AieMl, 32);
+            let ii = initiation_interval(&d, &IssueSlots::aie_ml());
+            assert_eq!(
+                ii,
+                4 * t.vmac_cycles_per_tile(AieGeneration::AieMl),
+                "tiling {t}: VMAC should bound the loop, not loads"
+            );
+        }
+    }
+
+    #[test]
+    fn i8_tiling_is_exactly_one_tile_per_cycle() {
+        let t = crate::arch::default_tiling(PrecisionPair::I8I8).unwrap();
+        assert!((blocked_cycles_per_tile(&t, AieGeneration::AieMl, 32) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_bound_when_ports_halved() {
+        // With hypothetical 16-byte ports the i8 <4,8,8> tiling becomes
+        // load-bound: W tile is 64 B = 4 loads, so 2A+2W = 12 loads / 2 ports
+        // = 6 cycles > 4 VMAC cycles.
+        let t = crate::arch::default_tiling(PrecisionPair::I8I8).unwrap();
+        let d = blocked_loop_demand(&t, AieGeneration::AieMl, 16);
+        assert_eq!(initiation_interval(&d, &IssueSlots::aie_ml()), 6);
+    }
+
+    #[test]
+    fn ii_never_zero() {
+        let d = SlotDemand::default();
+        assert_eq!(initiation_interval(&d, &IssueSlots::aie_ml()), 1);
+    }
+}

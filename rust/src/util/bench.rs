@@ -1,0 +1,65 @@
+//! Micro benchmark harness (the offline environment has no criterion).
+//!
+//! Each `benches/*.rs` binary regenerates one paper table/figure and times
+//! the regeneration. `run` does warmup + N timed iterations and prints
+//! mean / min / max wall-clock, which is what `cargo bench` surfaces.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  min {:>10.3?}  max {:>10.3?}  ({} iters)",
+            self.mean, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Time `f` over `iters` iterations after one warmup call. The closure's
+/// output is returned from the *last* iteration so benches can print the
+/// regenerated table exactly once.
+pub fn run<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> (T, BenchStats) {
+    let mut result = f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        result = f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let stats = BenchStats {
+        iters,
+        mean: total / iters as u32,
+        min: times.iter().min().copied().unwrap_or_default(),
+        max: times.iter().max().copied().unwrap_or_default(),
+    };
+    println!("bench {name:<28} {stats}");
+    (result, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_and_returns() {
+        let mut calls = 0;
+        let (out, stats) = run("noop", 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(out, 6); // warmup + 5 iters
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+}

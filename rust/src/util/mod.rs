@@ -1,0 +1,68 @@
+//! In-repo substrates for the offline build environment: JSON, PRNG,
+//! a scratch-dir helper and a micro property-testing harness.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Value;
+pub use rng::{fnv1a, Pcg32};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SCRATCH_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique scratch directory under the system temp dir, removed on drop
+/// (tempfile replacement for tests).
+pub struct ScratchDir {
+    path: PathBuf,
+}
+
+impl ScratchDir {
+    pub fn new(tag: &str) -> std::io::Result<ScratchDir> {
+        let n = SCRATCH_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "aie4ml-{tag}-{}-{}",
+            std::process::id(),
+            n
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(ScratchDir { path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_dir_lifecycle() {
+        let p;
+        {
+            let d = ScratchDir::new("t").unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(p.join("x"), b"hi").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn scratch_dirs_unique() {
+        let a = ScratchDir::new("u").unwrap();
+        let b = ScratchDir::new("u").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

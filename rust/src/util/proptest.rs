@@ -1,0 +1,181 @@
+//! Micro property-testing harness (the environment has no proptest crate).
+//!
+//! `check` runs a property over N deterministic random cases and, on
+//! failure, greedily shrinks the failing case via the strategy's `shrink`
+//! before panicking with the minimal reproduction. Strategies are plain
+//! functions from a PRNG to a value plus an optional shrinker.
+
+use super::rng::Pcg32;
+
+/// A value generator with an optional shrinker.
+pub struct Strategy<T> {
+    pub gen: Box<dyn Fn(&mut Pcg32) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Strategy<T> {
+    pub fn new(gen: impl Fn(&mut Pcg32) -> T + 'static) -> Strategy<T> {
+        Strategy { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Strategy<T> {
+        self.shrink = Box::new(shrink);
+        self
+    }
+}
+
+/// Ranged usize strategy with halving shrink toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> Strategy<usize> {
+    Strategy::new(move |r| r.gen_range_usize(lo, hi)).with_shrink(move |&v| {
+        let mut out = Vec::new();
+        if v > lo {
+            out.push(lo);
+            let mid = lo + (v - lo) / 2;
+            if mid != lo && mid != v {
+                out.push(mid);
+            }
+            if v - 1 != mid {
+                out.push(v - 1);
+            }
+        }
+        out
+    })
+}
+
+/// Ranged i64 strategy shrinking toward 0 (or the closest bound).
+pub fn i64_in(lo: i64, hi: i64) -> Strategy<i64> {
+    Strategy::new(move |r| r.gen_range_i64(lo, hi)).with_shrink(move |&v| {
+        let target = 0i64.clamp(lo, hi);
+        let mut out = Vec::new();
+        if v != target {
+            out.push(target);
+            let mid = target + (v - target) / 2;
+            if mid != target && mid != v {
+                out.push(mid);
+            }
+        }
+        out
+    })
+}
+
+/// Vec strategy: length in [min_len, max_len], elements from `elem`.
+pub fn vec_of<T: Clone + 'static>(
+    elem: Strategy<T>,
+    min_len: usize,
+    max_len: usize,
+) -> Strategy<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let e1 = elem.clone();
+    Strategy::new(move |r| {
+        let n = r.gen_range_usize(min_len, max_len);
+        (0..n).map(|_| (e1.gen)(r)).collect()
+    })
+    .with_shrink(move |v: &Vec<T>| {
+        let mut out = Vec::new();
+        // Shrink length first.
+        if v.len() > min_len {
+            out.push(v[..min_len].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+            if v.len() / 2 >= min_len {
+                out.push(v[..v.len() / 2].to_vec());
+            }
+        }
+        // Then shrink one element at a time (first few positions).
+        for i in 0..v.len().min(4) {
+            for s in (elem.shrink)(&v[i]) {
+                let mut w = v.clone();
+                w[i] = s;
+                out.push(w);
+            }
+        }
+        out
+    })
+}
+
+/// Run `prop` over `cases` deterministic random inputs; shrink + panic on
+/// the first failure. `name` seeds the generator so distinct properties get
+/// distinct streams but each run is reproducible.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    strat: &Strategy<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::seed_from_u64(super::rng::fnv1a(name));
+    for case in 0..cases {
+        let input = (strat.gen)(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in (strat.shrink)(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}/{cases}):\n  minimal input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add_commutes", 200, &vec_of(i64_in(-100, 100), 0, 8), |v| {
+            let s1: i64 = v.iter().sum();
+            let s2: i64 = v.iter().rev().sum();
+            if s1 == s2 {
+                Ok(())
+            } else {
+                Err("sum not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics() {
+        check("always_fails", 10, &usize_in(0, 100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: all values < 50. Failing inputs shrink toward 50.
+        let result = std::panic::catch_unwind(|| {
+            check("lt_50", 100, &usize_in(0, 1000), |&v| {
+                if v < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 50"))
+                }
+            });
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrinker halves toward 0, so the reported minimum should be
+        // well below the original random failure (usually exactly 50..99).
+        let min: usize = err
+            .split("minimal input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(min < 200, "shrunk to {min}");
+    }
+}

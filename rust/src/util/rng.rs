@@ -1,0 +1,197 @@
+//! Deterministic PRNG (PCG32) — the offline environment has no `rand`.
+//!
+//! Used everywhere reproducibility matters: synthetic weights, test inputs,
+//! workload generators. The exporter on the Python side uses numpy's
+//! default_rng with seeds derived from the same FNV-1a name hash, so both
+//! sides can generate *independent but documented* payloads; bit-identical
+//! payload sharing goes through the model JSON, never through parallel
+//! generation.
+
+/// PCG-XSH-RR 32-bit generator (O'Neill 2014), seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn seed_from_u64(seed: u64) -> Pcg32 {
+        // SplitMix64 to spread the seed over state+stream.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let state = next();
+        let inc = next() | 1;
+        let mut rng = Pcg32 { state, inc };
+        rng.next_u32(); // warm up
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[lo, hi]` inclusive (unbiased via rejection).
+    pub fn gen_range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi, "empty range");
+        let span = (hi - lo) as u64 + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64() as i64;
+        }
+        // Fast path: spans that fit u32 need only one PCG step (this is the
+        // synthetic-weight-generation hot loop).
+        if span <= u32::MAX as u64 {
+            let span32 = span as u32;
+            let zone = u32::MAX - (u32::MAX % span32);
+            loop {
+                let v = self.next_u32();
+                if v < zone {
+                    return lo + (v % span32) as i64;
+                }
+            }
+        }
+        // Lemire-style rejection.
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + (v % span) as i64;
+            }
+        }
+    }
+
+    pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.gen_range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn gen_i32_in(&mut self, lo: i64, hi: i64) -> i32 {
+        self.gen_range_i64(lo, hi) as i32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Random boolean with probability `p`.
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range_usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash — stable seed derivation from names (mirrored by the
+/// Python exporter).
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::seed_from_u64(42);
+        let mut b = Pcg32::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Pcg32::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn range_bounds_respected() {
+        let mut r = Pcg32::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let v = r.gen_range_i64(-128, 127);
+            assert!((-128..=127).contains(&v));
+        }
+        // Degenerate range.
+        assert_eq!(r.gen_range_i64(5, 5), 5);
+    }
+
+    #[test]
+    fn range_covers_extremes() {
+        let mut r = Pcg32::seed_from_u64(1);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..20_000 {
+            match r.gen_range_i64(0, 7) {
+                0 => seen_lo = true,
+                7 => seen_hi = true,
+                _ => {}
+            }
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut r = Pcg32::seed_from_u64(99);
+        let mut counts = [0usize; 8];
+        let n = 80_000;
+        for _ in 0..n {
+            counts[r.gen_range_usize(0, 7)] += 1;
+        }
+        for c in counts {
+            let expected = n / 8;
+            assert!((c as f64 - expected as f64).abs() < expected as f64 * 0.1);
+        }
+    }
+
+    #[test]
+    fn fnv_stable() {
+        assert_eq!(fnv1a("mlp7"), fnv1a("mlp7"));
+        assert_ne!(fnv1a("a"), fnv1a("b"));
+        // Known FNV-1a vector.
+        assert_eq!(fnv1a(""), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg32::seed_from_u64(3);
+        for _ in 0..1000 {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seed_from_u64(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

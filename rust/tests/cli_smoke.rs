@@ -1,0 +1,98 @@
+//! CLI smoke tests: drive the `aie4ml` binary end to end through
+//! std::process (compile → project tree, run, perf, info, bad input).
+
+use aie4ml::frontend::JsonModel;
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::util::ScratchDir;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn bin() -> PathBuf {
+    // target/<profile>/aie4ml next to the test executable's directory.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("aie4ml");
+    p
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(bin()).args(args).output().expect("spawn aie4ml")
+}
+
+fn write_model(dir: &ScratchDir) -> PathBuf {
+    let json: JsonModel = synth_model("cli_model", &mlp_spec(&[64, 32, 8], aie4ml::arch::Dtype::I8), 6);
+    let path = dir.path().join("model.json");
+    std::fs::write(&path, json.to_json_string()).unwrap();
+    path
+}
+
+#[test]
+fn cli_compile_writes_project() {
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_model(&dir);
+    let out_dir = dir.path().join("proj");
+    let out = run(&[
+        "compile",
+        model.to_str().unwrap(),
+        "--out",
+        out_dir.to_str().unwrap(),
+        "--batch",
+        "8",
+        "--verify",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("invariants OK"), "{stdout}");
+    assert!(out_dir.join("graph.hpp").exists());
+    assert!(out_dir.join("kernels/fc1.h").exists());
+}
+
+#[test]
+fn cli_run_and_perf() {
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_model(&dir);
+    let out = run(&["run", model.to_str().unwrap(), "--batch", "4", "--perf"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("first output row"), "{stdout}");
+    assert!(stdout.contains("throughput"), "{stdout}");
+
+    let out = run(&["perf", model.to_str().unwrap(), "--batch", "16"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("bottleneck"));
+}
+
+#[test]
+fn cli_info_devices() {
+    for dev in ["vek280", "vek385", "vck190"] {
+        let out = run(&["info", dev]);
+        assert!(out.status.success(), "{dev}");
+        assert!(String::from_utf8_lossy(&out.stdout).contains("INT8 peak"));
+    }
+    let out = run(&["info", "h100"]);
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_bench_table1() {
+    let out = run(&["bench", "table1"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("TABLE I"));
+    assert!(stdout.contains("640"));
+}
+
+#[test]
+fn cli_errors_are_clean() {
+    // No args -> usage on stderr, nonzero exit.
+    let out = run(&[]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+    // Unknown command.
+    let out = run(&["frobnicate"]);
+    assert!(!out.status.success());
+    // Missing model file.
+    let out = run(&["compile", "/nonexistent/model.json"]);
+    assert!(!out.status.success());
+}

@@ -1,0 +1,151 @@
+//! Integration: firmware simulator vs PJRT-executed JAX artifacts,
+//! bit-exact, across the exported model zoo (including mixed precision).
+//!
+//! Requires `make artifacts`. Tests are skipped (not failed) when the
+//! artifacts have not been built, so `cargo test` stays green in a fresh
+//! checkout; CI runs `make test` which builds them first.
+
+use aie4ml::frontend::{CompileConfig, JsonModel};
+use aie4ml::passes::compile;
+use aie4ml::runtime::{oracle, PjrtRuntime};
+use aie4ml::sim::functional::Activation;
+use aie4ml::util::json::Value;
+use aie4ml::util::Pcg32;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct ZooEntry {
+    name: String,
+    batch: usize,
+    model: PathBuf,
+    hlo: PathBuf,
+}
+
+fn manifest() -> Option<Vec<ZooEntry>> {
+    let path = artifacts_dir().join("manifest.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Value::parse(&text).ok()?;
+    let mut out = Vec::new();
+    for e in v.as_array().ok()? {
+        out.push(ZooEntry {
+            name: e.field("name").ok()?.as_str().ok()?.to_string(),
+            batch: e.field("batch").ok()?.as_usize().ok()?,
+            model: PathBuf::from(e.field("model").ok()?.as_str().ok()?),
+            hlo: PathBuf::from(e.field("hlo").ok()?.as_str().ok()?),
+        });
+    }
+    Some(out)
+}
+
+fn check_model(entry: &ZooEntry, seed: u64) {
+    let json = JsonModel::from_file(&entry.model).expect("model JSON");
+    let mut cfg = CompileConfig::default();
+    cfg.batch = entry.batch;
+    let compiled = compile(&json, cfg).expect("compile");
+    let fw = compiled.firmware.as_ref().unwrap();
+    fw.check_invariants().unwrap();
+
+    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let input = Activation::new(
+        fw.batch,
+        fw.input_features(),
+        (0..fw.batch * fw.input_features()).map(|_| rng.gen_i32_in(lo, hi)).collect(),
+    )
+    .unwrap();
+    let mut rt = PjrtRuntime::cpu().expect("PJRT client");
+    let report = oracle::compare(&mut rt, &entry.hlo, fw, &input).expect("oracle run");
+    assert!(
+        report.bit_exact(),
+        "{}: {}/{} mismatches, first: {:?}",
+        entry.name,
+        report.mismatches,
+        report.elements,
+        report.first_mismatches
+    );
+}
+
+fn entry(name: &str) -> Option<ZooEntry> {
+    manifest()?.into_iter().find(|e| e.name == name)
+}
+
+macro_rules! zoo_test {
+    ($test:ident, $name:literal, $seed:literal) => {
+        #[test]
+        fn $test() {
+            match entry($name) {
+                Some(e) => check_model(&e, $seed),
+                None => eprintln!("skipping: artifacts not built (run `make artifacts`)"),
+            }
+        }
+    };
+}
+
+zoo_test!(quickstart_bit_exact, "quickstart", 11);
+zoo_test!(mlp7_bit_exact, "mlp7", 22);
+zoo_test!(token_mixer_bit_exact, "token_mixer", 33);
+zoo_test!(mixed_precision_bit_exact, "mlp_i16i8", 44);
+
+#[test]
+fn oracle_detects_corruption() {
+    // Negative control: perturb one weight after compilation; the oracle
+    // must flag mismatches (guards against a vacuously-green comparator).
+    let Some(e) = entry("quickstart") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let json = JsonModel::from_file(&e.model).unwrap();
+    let mut cfg = CompileConfig::default();
+    cfg.batch = e.batch;
+    let compiled = compile(&json, cfg).unwrap();
+    let mut fw = compiled.firmware.clone().unwrap();
+    // Flip one packed weight in the first layer's first kernel.
+    fw.layers[0].kernels[0].weights[0] ^= 0x7;
+    let mut rng = Pcg32::seed_from_u64(5);
+    let input = Activation::new(
+        fw.batch,
+        fw.input_features(),
+        (0..fw.batch * fw.input_features()).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+    )
+    .unwrap();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let report = oracle::compare(&mut rt, &e.hlo, &fw, &input).unwrap();
+    assert!(!report.bit_exact(), "corrupted weights must be detected");
+}
+
+#[test]
+fn predict_modes_agree() {
+    // The paper's predict() interface: x86 (PJRT) and aie (firmware sim)
+    // modes must agree bit-exactly on the same inputs.
+    use aie4ml::runtime::predict::{Mode, Predictor};
+    let Some(e) = entry("quickstart") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let json = JsonModel::from_file(&e.model).unwrap();
+    let mut cfg = CompileConfig::default();
+    cfg.batch = e.batch;
+    let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+    let features = fw.input_features();
+    let mut p = Predictor::new(fw, Some(e.hlo.clone()));
+    let mut rng = Pcg32::seed_from_u64(77);
+    let x = Activation::new(
+        e.batch,
+        features,
+        (0..e.batch * features).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+    )
+    .unwrap();
+    let aie = p.predict(&x, Mode::Aie).unwrap();
+    let x86 = p.predict(&x, Mode::X86).unwrap();
+    assert_eq!(aie.data, x86.data);
+    // Float I/O path also runs under both modes.
+    let xf: Vec<f64> = (0..e.batch * features).map(|i| (i % 97) as f64 / 97.0 - 0.5).collect();
+    let yf_aie = p.predict_f64(&xf, Mode::Aie).unwrap();
+    let yf_x86 = p.predict_f64(&xf, Mode::X86).unwrap();
+    assert_eq!(yf_aie, yf_x86);
+    // Hardware-level stats are available in aie mode.
+    assert!(p.profile().throughput_tops > 0.0);
+}

@@ -1,0 +1,234 @@
+//! Integration over the compiler + simulator without artifacts: full
+//! pipeline on varied topologies, properties of the emitted firmware, and
+//! end-to-end behaviours (project emission, serving loop, perf analysis).
+
+use aie4ml::arch::Dtype;
+use aie4ml::codegen::render::write_project;
+use aie4ml::coordinator::Server;
+use aie4ml::frontend::{CompileConfig, JsonModel, LayerConfig};
+use aie4ml::harness::models::{compile_mlp, mlp_spec, synth_model};
+use aie4ml::passes::compile;
+use aie4ml::sim::engine::{analyze, EngineModel};
+use aie4ml::sim::functional::{execute, Activation};
+use aie4ml::util::{Pcg32, ScratchDir};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn random_input(fw: &aie4ml::codegen::Firmware, seed: u64) -> Activation {
+    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+    let mut rng = Pcg32::seed_from_u64(seed);
+    Activation::new(
+        fw.batch,
+        fw.input_features(),
+        (0..fw.batch * fw.input_features()).map(|_| rng.gen_i32_in(lo, hi)).collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn deep_narrow_network_compiles_and_runs() {
+    let m = compile_mlp("deep", &[64; 13], Dtype::I8, 16, None).unwrap();
+    let fw = m.firmware.as_ref().unwrap();
+    fw.check_invariants().unwrap();
+    assert_eq!(fw.layers.len(), 12);
+    let y = execute(fw, &random_input(fw, 1)).unwrap();
+    assert_eq!(y.features, 64);
+}
+
+#[test]
+fn wide_shallow_network_compiles_and_runs() {
+    let m = compile_mlp("wide", &[2048, 4096, 256], Dtype::I8, 32, None).unwrap();
+    let fw = m.firmware.as_ref().unwrap();
+    fw.check_invariants().unwrap();
+    let y = execute(fw, &random_input(fw, 2)).unwrap();
+    assert_eq!(y.features, 256);
+}
+
+#[test]
+fn ragged_dims_full_pipeline() {
+    // Prime-ish feature counts exercise zero padding at every boundary.
+    let m = compile_mlp("ragged", &[97, 131, 53, 7], Dtype::I8, 9, None).unwrap();
+    let fw = m.firmware.as_ref().unwrap();
+    fw.check_invariants().unwrap();
+    let y = execute(fw, &random_input(fw, 3)).unwrap();
+    assert_eq!(y.features, 7);
+    assert_eq!(y.batch, 9);
+}
+
+#[test]
+fn i16_network_full_pipeline() {
+    let m = compile_mlp("wide16", &[128, 96, 32], Dtype::I16, 8, Some((2, 4))).unwrap();
+    let fw = m.firmware.as_ref().unwrap();
+    assert_eq!(fw.layers[0].quant.acc_dtype, Dtype::I64);
+    let y = execute(fw, &random_input(fw, 4)).unwrap();
+    assert_eq!(y.features, 32);
+}
+
+#[test]
+fn determinism_same_model_same_firmware_output() {
+    let a = compile_mlp("det_int", &[128, 64, 32], Dtype::I8, 8, None).unwrap();
+    let b = compile_mlp("det_int", &[128, 64, 32], Dtype::I8, 8, None).unwrap();
+    let fa = a.firmware.as_ref().unwrap();
+    let fb = b.firmware.as_ref().unwrap();
+    let x = random_input(fa, 5);
+    assert_eq!(execute(fa, &x).unwrap().data, execute(fb, &x).unwrap().data);
+    // Same placement too (the B&B is deterministic).
+    for (la, lb) in fa.layers.iter().zip(&fb.layers) {
+        assert_eq!(la.placement, lb.placement);
+    }
+}
+
+#[test]
+fn project_emission_writes_complete_tree() {
+    let m = compile_mlp("proj", &[64, 32], Dtype::I8, 8, Some((2, 2))).unwrap();
+    let fw = m.firmware.as_ref().unwrap();
+    let dir = ScratchDir::new("proj").unwrap();
+    write_project(fw, dir.path()).unwrap();
+    for f in ["graph.hpp", "floorplan.txt", "firmware.json", "kernels/fc1.h", "fc1.params.bin"] {
+        assert!(dir.path().join(f).exists(), "{f} missing");
+    }
+    // firmware.json is parseable and structurally sane.
+    let v = aie4ml::util::json::Value::parse(
+        &std::fs::read_to_string(dir.path().join("firmware.json")).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(v.field("model").unwrap().as_str().unwrap(), "proj");
+    assert_eq!(v.field("layers").unwrap().as_array().unwrap().len(), 1);
+}
+
+#[test]
+fn perf_reports_are_self_consistent() {
+    for dims in [vec![512usize; 4], vec![196, 256, 196]] {
+        let m = compile_mlp("perfchk", &dims, Dtype::I8, 64, None).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        let rep = analyze(fw, &EngineModel::default());
+        // interval = max stage; latency >= interval; throughput consistent.
+        let max_stage = rep.layers.iter().map(|l| l.stage_cycles).fold(0.0, f64::max);
+        assert_eq!(rep.interval_cycles, max_stage);
+        assert!(rep.latency_cycles >= rep.interval_cycles);
+        let ops = fw.ops_per_sample() as f64 * fw.batch as f64;
+        let tops = ops / (rep.interval_cycles / (fw.device.freq_ghz * 1e9)) / 1e12;
+        assert!((tops - rep.throughput_tops).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn serving_loop_end_to_end() {
+    let spec = mlp_spec(&[32, 16, 4], Dtype::I8);
+    let json = synth_model("serve_e2e", &spec, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    cfg.tiles_per_layer = Some(2);
+    let fw = Arc::new(compile(&json, cfg).unwrap().firmware.unwrap());
+    let server = Server::spawn(fw.clone(), Duration::from_micros(500), 256);
+    let mut handles = Vec::new();
+    for i in 0..32 {
+        let c = server.client.clone();
+        handles.push(std::thread::spawn(move || c.infer(vec![(i % 7) as i32; 32]).unwrap()));
+    }
+    let outs: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Identical inputs across batches must give identical outputs.
+    assert_eq!(outs[0], outs[7]);
+    assert_eq!(outs[1], outs[8]);
+    let m = server.shutdown();
+    assert_eq!(m.requests, 32);
+}
+
+#[test]
+fn user_overrides_respected_end_to_end() {
+    let spec = mlp_spec(&[128, 128], Dtype::I8);
+    let json = synth_model("overrides", &spec, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    cfg.layers.insert(
+        "fc1".into(),
+        LayerConfig { cascade: Some((4, 4)), place_at: Some((10, 2)), tiling: Some((4, 8, 8)) },
+    );
+    let model = compile(&json, cfg).unwrap();
+    let fw = model.firmware.as_ref().unwrap();
+    let l = &fw.layers[0];
+    assert_eq!((l.cascade.cas_len, l.cascade.cas_num), (4, 4));
+    assert_eq!((l.placement.col, l.placement.row), (10, 2));
+    assert_eq!((l.tiling.m, l.tiling.k, l.tiling.n), (4, 8, 8));
+}
+
+#[test]
+fn infeasible_models_rejected_cleanly() {
+    // A single layer bigger than the whole device's weight capacity.
+    let json = JsonModel::new(
+        "huge",
+        vec![aie4ml::frontend::JsonLayer::dense(
+            "fc1",
+            1 << 14,
+            1 << 14,
+            false,
+            false,
+            "int8",
+            "int8",
+            0,
+            vec![0; (1 << 14) * (1 << 14) >> 10], // wrong length too
+            vec![],
+        )],
+    );
+    assert!(compile(&json, CompileConfig::default()).is_err());
+}
+
+#[test]
+fn aie_mlv2_forward_compatibility() {
+    // The paper: "also compatible with the newer AIE-MLv2 architecture".
+    // Same model, vek385 target: compiles, runs bit-exactly, and the wider
+    // MAC array roughly doubles per-tile throughput.
+    let spec = mlp_spec(&[256, 256, 128], Dtype::I8);
+    let json = synth_model("v2compat", &spec, 6);
+    let mut cfg_ml = CompileConfig::default();
+    cfg_ml.batch = 16;
+    for l in &spec {
+        cfg_ml
+            .layers
+            .insert(l.name.clone(), LayerConfig { cascade: Some((2, 4)), ..Default::default() });
+    }
+    let mut cfg_v2 = cfg_ml.clone();
+    cfg_v2.device = "vek385".into();
+
+    let ml = compile(&json, cfg_ml).unwrap();
+    let v2 = compile(&json, cfg_v2).unwrap();
+    let fw_ml = ml.firmware.as_ref().unwrap();
+    let fw_v2 = v2.firmware.as_ref().unwrap();
+    assert_eq!(fw_v2.device.name, "VEK385");
+    // v2 uses the wider native tiling.
+    assert_eq!(
+        (fw_v2.layers[0].tiling.m, fw_v2.layers[0].tiling.k, fw_v2.layers[0].tiling.n),
+        (8, 8, 8)
+    );
+    // Bit-exact across generations (parallelization is semantics-free).
+    let x = random_input(fw_ml, 99);
+    assert_eq!(execute(fw_ml, &x).unwrap().data, execute(fw_v2, &x).unwrap().data);
+    // Perf: ~2x per-tile MAC density at equal tile counts.
+    let p_ml = analyze(fw_ml, &EngineModel::default());
+    let p_v2 = analyze(fw_v2, &EngineModel::default());
+    let speedup = p_v2.throughput_tops / p_ml.throughput_tops;
+    assert!(
+        (1.5..=2.5).contains(&speedup),
+        "v2 speedup {speedup} outside the 2x band"
+    );
+}
+
+#[test]
+fn memtile_column_oversubscription_rejected() {
+    // Two fat layers pinned onto the same columns: each shard fits a memory
+    // tile alone, but their sum exceeds 512 KiB -> emission must refuse.
+    let spec = mlp_spec(&[1024, 1024, 1024], Dtype::I8);
+    let json = synth_model("oversub", &spec, 6);
+    let mut cfg = CompileConfig::default();
+    // Per layer per column: 2500 * 1024 / 16 cols * 2 (ping-pong) = 320 KiB.
+    // One layer fits a 512 KiB memory tile; two on the same columns do not.
+    cfg.batch = 2500;
+    for (name, at) in [("fc1", (0, 0)), ("fc2", (0, 4))] {
+        cfg.layers.insert(
+            name.into(),
+            LayerConfig { cascade: Some((16, 4)), place_at: Some(at), ..Default::default() },
+        );
+    }
+    let err = compile(&json, cfg).unwrap_err().to_string();
+    assert!(err.contains("oversubscribed"), "unexpected error: {err}");
+}

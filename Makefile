@@ -1,0 +1,43 @@
+# AIE4ML build entry points.
+#
+#   make build      release build of the workspace (library + aie4ml CLI)
+#   make test       tier-1 gate: release build + full test suite (hermetic —
+#                   the oracle bit-exactness tests run against the pure-Rust
+#                   reference backend and the generated model zoo)
+#   make zoo        materialize the deterministic model zoo under rust/artifacts
+#                   (reuses an existing manifest; `aie4ml zoo --force` regenerates)
+#   make artifacts  PJRT-gated: export paper-scale model JSONs + HLO artifacts
+#                   via the Python/JAX toolchain (needs jax; pairs with
+#                   `cargo test --features pjrt`)
+#   make fmt        rustfmt check (what CI runs)
+#   make bench      regenerate every paper table/figure with timings
+
+CARGO ?= cargo
+PY ?= python3
+
+.PHONY: build test zoo artifacts fmt bench clean
+
+build:
+	$(CARGO) build --release
+
+test: build
+	$(CARGO) test -q
+
+zoo: build
+	target/release/aie4ml zoo
+
+artifacts:
+	@$(PY) -c "import jax" 2>/dev/null || \
+		(echo "error: jax is unavailable — 'make artifacts' needs the PJRT toolchain;" ; \
+		 echo "       the hermetic gate ('make test') does not." ; exit 1)
+	cd python && $(PY) -m compile.aot --out $(abspath rust/artifacts)
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+bench: build
+	$(CARGO) bench
+
+clean:
+	$(CARGO) clean
+	rm -rf rust/artifacts

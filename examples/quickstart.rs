@@ -1,30 +1,28 @@
 //! Quickstart: compile a small quantized MLP and run inference, all in
-//! a dozen lines of API. Uses the exporter's `quickstart` model when the
-//! artifacts exist, otherwise builds an equivalent model in-process (so the
-//! example runs even before `make artifacts`).
+//! a dozen lines of API. Materializes the deterministic model zoo on first
+//! run, so the example works on a fresh checkout with no Python involved
+//! (`make artifacts` swaps in the Python-exported set).
 //!
 //!     cargo run --release --example quickstart
 
 use aie4ml::codegen::render::render_floorplan;
 use aie4ml::frontend::{CompileConfig, JsonModel};
-use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::harness::zoo;
 use aie4ml::passes::compile;
 use aie4ml::sim::engine::{analyze, EngineModel};
 use aie4ml::sim::functional::{execute, Activation};
 use aie4ml::util::Pcg32;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 fn main() -> Result<()> {
-    // 1. A quantized model: from the Python exporter if present, else synthetic.
-    let exported = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts/models/quickstart.json");
-    let json = if exported.exists() {
-        println!("model: {} (exported by python/compile/exporter.py)", exported.display());
-        JsonModel::from_file(&exported)?
-    } else {
-        println!("model: in-process synthetic (run `make artifacts` for the exported one)");
-        synth_model("quickstart", &mlp_spec(&[64, 32, 10], aie4ml::arch::Dtype::I8), 6)
-    };
+    // 1. A quantized model from the zoo (generated deterministically if absent).
+    let entries = zoo::ensure_zoo(&zoo::artifacts_dir())?;
+    let entry = entries
+        .iter()
+        .find(|e| e.name == "quickstart")
+        .context("model zoo has no quickstart entry")?;
+    println!("model: {}", entry.model.display());
+    let json = JsonModel::from_file(&entry.model)?;
 
     // 2. Compile: lowering -> quantization -> resolve -> packing ->
     //    graph planning -> B&B placement -> emission.

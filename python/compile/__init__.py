@@ -10,6 +10,13 @@ int64 accumulators (the i16xi16 path) require x64 mode; enable it before
 anything traces.
 """
 
-import jax
-
-jax.config.update("jax_enable_x64", True)
+try:
+    import jax
+except ImportError:  # hermetic environments: exporter-only use
+    jax = None
+    HAVE_JAX = False
+else:
+    # int64 accumulators (the i16xi16 path) require x64 mode; enable it
+    # before anything traces.
+    jax.config.update("jax_enable_x64", True)
+    HAVE_JAX = True

@@ -1,6 +1,28 @@
-"""Make `pytest python/tests/` work from the repository root: the compile
-package lives in this directory."""
+"""Make `pytest python/tests/` work from the repository root, and keep the
+suite green in hermetic environments: test files that need the PJRT/JAX
+toolchain (or hypothesis) are skipped at collection when those packages are
+unavailable — the Rust tier-1 gate runs against the pure-Rust reference
+oracle and never needs them."""
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def _missing(mod: str) -> bool:
+    return importlib.util.find_spec(mod) is None
+
+
+collect_ignore = []
+if _missing("jax"):
+    # model.py / aot.py / quantize.py all trace through jax; only the
+    # exporter half (and its tests) is importable without it.
+    collect_ignore += [
+        "tests/test_aot.py",
+        "tests/test_kernel.py",
+        "tests/test_model.py",
+        "tests/test_quantize.py",
+    ]
+elif _missing("hypothesis"):
+    collect_ignore += ["tests/test_kernel.py"]

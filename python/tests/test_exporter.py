@@ -1,0 +1,61 @@
+"""Exporter tests that run without the PJRT/JAX toolchain (numpy only):
+spec schema, determinism, dtype ranges, and zoo/manifest compatibility with
+the Rust side (`rust/src/harness/zoo.rs`, `frontend::json_model`)."""
+
+import json
+
+from compile.exporter import MODEL_ZOO, fnv1a, make_spec, zoo_specs
+
+
+def test_fnv1a_pinned_vector():
+    # Shared with rust/src/util/rng.rs::fnv_stable.
+    assert fnv1a("") == 0xCBF29CE484222325
+    assert fnv1a("mlp7") == fnv1a("mlp7")
+    assert fnv1a("a") != fnv1a("b")
+
+
+def test_make_spec_deterministic():
+    a = make_spec("det", [16, 8])
+    b = make_spec("det", [16, 8])
+    assert a == b
+    assert make_spec("det2", [16, 8])["layers"][0]["weights"] != a["layers"][0]["weights"]
+
+
+def test_spec_schema_matches_rust_frontend():
+    spec = make_spec("schema", [8, 6, 4], act_dtype="int16", wgt_dtype="int8")
+    assert spec["device"] == "vek280"
+    for layer in spec["layers"]:
+        assert layer["type"] == "dense"
+        want = layer["in_features"] * layer["out_features"]
+        assert len(layer["weights"]) == want
+        assert len(layer["bias"]) == layer["out_features"]
+        q = layer["quant"]
+        assert q["input"]["dtype"] == "int16"
+        assert q["weight"]["dtype"] == "int8"
+        assert q["output"]["dtype"] == "int16"
+    # ReLU on hidden layers only.
+    assert spec["layers"][0]["relu"] and not spec["layers"][-1]["relu"]
+    # Round-trips through JSON exactly (integer payloads, no floats).
+    assert json.loads(json.dumps(spec)) == spec
+
+
+def test_weights_within_dtype_range():
+    spec = make_spec("range", [32, 16])
+    for layer in spec["layers"]:
+        assert all(-128 <= w <= 127 for w in layer["weights"])
+        assert all(-(2**31) <= b < 2**31 for b in layer["bias"])
+
+
+def test_zoo_names_match_rust_zoo():
+    # rust/src/harness/zoo.rs mirrors these names and batches; the two sides
+    # share payloads through the written JSON, not parallel generation.
+    names = [name for name, _, _, _ in MODEL_ZOO]
+    assert names == ["quickstart", "mlp7", "token_mixer", "mlp_i16i8"]
+    for spec, batch in zoo_specs():
+        assert batch > 0
+        assert spec["layers"], spec["name"]
+        # Mixed-precision entry carries int16 activations over int8 weights.
+        if spec["name"] == "mlp_i16i8":
+            q = spec["layers"][0]["quant"]
+            assert q["input"]["dtype"] == "int16"
+            assert q["weight"]["dtype"] == "int8"

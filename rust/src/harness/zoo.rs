@@ -1,0 +1,226 @@
+//! Deterministic in-repo model zoo: the artifact set the bit-exactness gate
+//! runs against, generated on demand so a fresh checkout needs no Python,
+//! no network and no PJRT toolchain.
+//!
+//! Mirrors `python/compile/exporter.py::MODEL_ZOO` in names, topology and
+//! batch (the hermetic `mlp7` is width-reduced to keep `cargo test` fast;
+//! `make artifacts` regenerates the paper-scale set plus HLO artifacts).
+//! Weights come from the seeded PCG stream (`harness::models::synth_model`,
+//! seeded by the FNV-1a name hash) — payload agreement between the firmware
+//! and any oracle goes through the written JSON, never through parallel
+//! generation, so the two zoos need not produce identical weights.
+//!
+//! `ensure_zoo` writes `models/<name>.json` plus a `manifest.json` whose
+//! entries (`name`, `batch`, `model`, `hlo`) match what the Python exporter
+//! and `aot.py` write, and is a no-op when a usable manifest already exists
+//! (so Python-built artifact sets are never clobbered).
+
+use crate::arch::Dtype;
+use crate::frontend::JsonModel;
+use crate::harness::models::{synth_model, LayerSpec};
+use crate::util::json::{obj, Value};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One zoo entry, paths resolved to the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ZooEntry {
+    pub name: String,
+    /// Batch size the model (and any AOT artifact) is specialized to.
+    pub batch: usize,
+    /// Exporter-format model JSON (always present after `ensure_zoo`).
+    pub model: PathBuf,
+    /// HLO-text artifact for the PJRT oracle (present only after
+    /// `make artifacts`; the hermetic reference oracle never needs it).
+    pub hlo: PathBuf,
+}
+
+fn layer_specs(dims: &[usize], act: Dtype, wgt: Dtype) -> Vec<LayerSpec> {
+    dims.windows(2)
+        .enumerate()
+        .map(|(i, w)| LayerSpec {
+            name: format!("fc{}", i + 1),
+            in_features: w[0],
+            out_features: w[1],
+            relu: i + 2 < dims.len(),
+            dtype_act: act,
+            dtype_wgt: wgt,
+        })
+        .collect()
+}
+
+/// The hermetic zoo: (model, batch). Deterministic across runs and machines.
+pub fn zoo_models() -> Vec<(JsonModel, usize)> {
+    vec![
+        // Quickstart demo: small MLP, fast everywhere.
+        (synth_model("quickstart", &layer_specs(&[64, 32, 10], Dtype::I8, Dtype::I8), 6), 8),
+        // 7-layer MLP (hermetic width; paper scale comes from `make artifacts`).
+        (synth_model("mlp7", &layer_specs(&[256; 8], Dtype::I8, Dtype::I8), 6), 32),
+        // Mixer-style token-mixing block (Table III row 1 geometry).
+        (synth_model("token_mixer", &layer_specs(&[196, 256, 196], Dtype::I8, Dtype::I8), 6), 64),
+        // Mixed precision: int16 activations x int8 weights.
+        (synth_model("mlp_i16i8", &layer_specs(&[128, 128, 64], Dtype::I16, Dtype::I8), 6), 16),
+    ]
+}
+
+/// The artifacts directory used by tests, examples and the CLI:
+/// `rust/artifacts` (next to this crate's manifest).
+pub fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn resolve(dir: &Path, raw: &str) -> PathBuf {
+    let p = PathBuf::from(raw);
+    if p.is_absolute() {
+        return p;
+    }
+    // Relative paths are anchored at the artifacts dir; the CWD-relative
+    // form is accepted only when such a file actually exists (legacy
+    // Python-written manifests), so diagnostics and existence checks never
+    // depend on the process working directory otherwise.
+    let joined = dir.join(&p);
+    if !joined.exists() && p.exists() {
+        return p;
+    }
+    joined
+}
+
+/// Parse `dir/manifest.json` if present. Tolerates manifests written by the
+/// Python exporter (no `hlo` field) by defaulting to `dir/<name>.hlo.txt`.
+/// Returns `None` when the manifest is absent or unreadable.
+pub fn read_manifest(dir: &Path) -> Option<Vec<ZooEntry>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+    let v = Value::parse(&text).ok()?;
+    let mut out = Vec::new();
+    for e in v.as_array().ok()? {
+        let name = e.field("name").ok()?.as_str().ok()?.to_string();
+        let hlo = match e.get("hlo").and_then(|h| h.as_str().ok()) {
+            Some(h) => resolve(dir, h),
+            None => dir.join(format!("{name}.hlo.txt")),
+        };
+        out.push(ZooEntry {
+            batch: e.field("batch").ok()?.as_usize().ok()?,
+            model: resolve(dir, e.field("model").ok()?.as_str().ok()?),
+            hlo,
+            name,
+        });
+    }
+    Some(out)
+}
+
+/// Write the hermetic zoo (model JSONs + manifest) into `dir`.
+pub fn write_zoo(dir: &Path) -> Result<Vec<ZooEntry>> {
+    let models_dir = dir.join("models");
+    std::fs::create_dir_all(&models_dir)
+        .with_context(|| format!("creating {}", models_dir.display()))?;
+    let mut entries = Vec::new();
+    let mut manifest = Vec::new();
+    for (model, batch) in zoo_models() {
+        let path = models_dir.join(format!("{}.json", model.name));
+        // Write-then-rename so a concurrent reader never sees a torn model.
+        let tmp = models_dir.join(format!("{}.json.tmp.{}", model.name, std::process::id()));
+        std::fs::write(&tmp, model.to_json_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        // A regenerated model invalidates any HLO artifact lowered from a
+        // previous (possibly paper-scale) model of the same name.
+        let _ = std::fs::remove_file(dir.join(format!("{}.hlo.txt", model.name)));
+        manifest.push(obj([
+            ("name", Value::from(model.name.as_str())),
+            ("batch", Value::from(batch)),
+            ("model", Value::from(format!("models/{}.json", model.name))),
+            ("hlo", Value::from(format!("{}.hlo.txt", model.name))),
+        ]));
+        entries.push(ZooEntry {
+            name: model.name.clone(),
+            batch,
+            model: path,
+            hlo: dir.join(format!("{}.hlo.txt", model.name)),
+        });
+    }
+    // Write-then-rename so a concurrent reader never sees a torn manifest.
+    let tmp = dir.join(format!("manifest.json.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, Value::Array(manifest).to_string_pretty())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, dir.join("manifest.json")).context("publishing manifest.json")?;
+    Ok(entries)
+}
+
+/// Idempotent entry point: reuse an existing usable manifest (Rust- or
+/// Python-written), else (re)generate the hermetic zoo.
+pub fn ensure_zoo(dir: &Path) -> Result<Vec<ZooEntry>> {
+    if let Some(entries) = read_manifest(dir) {
+        if !entries.is_empty() && entries.iter().all(|e| e.model.exists()) {
+            return Ok(entries);
+        }
+    }
+    write_zoo(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ScratchDir;
+
+    #[test]
+    fn zoo_is_deterministic() {
+        let a = zoo_models();
+        let b = zoo_models();
+        assert_eq!(a.len(), 4);
+        for ((ma, _), (mb, _)) in a.iter().zip(&b) {
+            assert_eq!(ma.name, mb.name);
+            assert_eq!(ma.layers[0].weights, mb.layers[0].weights);
+        }
+        // Mirrors the Python MODEL_ZOO names.
+        let names: Vec<&str> = a.iter().map(|(m, _)| m.name.as_str()).collect();
+        assert_eq!(names, ["quickstart", "mlp7", "token_mixer", "mlp_i16i8"]);
+    }
+
+    #[test]
+    fn ensure_zoo_writes_and_reuses() {
+        let dir = ScratchDir::new("zoo").unwrap();
+        let first = ensure_zoo(dir.path()).unwrap();
+        assert_eq!(first.len(), 4);
+        for e in &first {
+            assert!(e.model.exists(), "{} missing", e.model.display());
+            // Written models parse back into valid exporter JSON.
+            let m = JsonModel::from_file(&e.model).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.name, e.name);
+        }
+        // Second call reuses the manifest (same paths, no rewrite needed).
+        let second = ensure_zoo(dir.path()).unwrap();
+        assert_eq!(second.len(), 4);
+        assert_eq!(second[0].model, first[0].model);
+    }
+
+    #[test]
+    fn python_style_manifest_accepted() {
+        // The Python exporter writes entries without an `hlo` field.
+        let dir = ScratchDir::new("zoo_py").unwrap();
+        std::fs::create_dir_all(dir.path().join("models")).unwrap();
+        let (model, _) = zoo_models().remove(0);
+        std::fs::write(dir.path().join("models/quickstart.json"), model.to_json_string())
+            .unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"[{"name": "quickstart", "batch": 8, "model": "models/quickstart.json"}]"#,
+        )
+        .unwrap();
+        let entries = ensure_zoo(dir.path()).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].model.exists());
+        assert_eq!(entries[0].hlo, dir.path().join("quickstart.hlo.txt"));
+    }
+
+    #[test]
+    fn mixed_precision_entry_uses_i16_activations() {
+        let zoo = zoo_models();
+        let (m, batch) = &zoo[3];
+        assert_eq!(m.name, "mlp_i16i8");
+        assert_eq!(*batch, 16);
+        assert_eq!(m.layers[0].quant.input.dtype, "i16");
+        assert_eq!(m.layers[0].quant.weight.dtype, "i8");
+    }
+}

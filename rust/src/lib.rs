@@ -12,8 +12,9 @@
 //!   emission).
 //! * [`sim`] — the simulator substrate: bit-exact functional execution and
 //!   a calibrated cycle-approximate performance model.
-//! * [`runtime`] — PJRT oracle: executes the AOT-lowered JAX model (built
-//!   once by `python/compile/aot.py`) from Rust for bit-exactness checks.
+//! * [`runtime`] — bit-exactness oracles: the hermetic pure-Rust reference
+//!   backend (default), plus the PJRT backend (`--features pjrt`) that
+//!   executes the AOT-lowered JAX model built by `python/compile/aot.py`.
 //! * [`coordinator`] — async serving driver (trigger-system companion).
 //! * [`baselines`] — analytical models for prior-framework and cross-device
 //!   comparisons (Tables IV, V).

@@ -19,6 +19,8 @@ USAGE:
   aie4ml compile <model.json> [--config <cfg.json>] [--out <dir>] [--batch N] [--verify]
   aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
   aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
+  aie4ml oracle  <model.json> [--config <cfg.json>] [--batch N] [--seed N]
+  aie4ml zoo     [--dir <artifacts-dir>] [--force]
   aie4ml bench   [table1|table2|fig3|fig4|table3|table4|table5|all]
   aie4ml serve   <model.json> [--batch N] [--requests N] [--max-wait-us N]
   aie4ml info    [device]
@@ -186,6 +188,70 @@ fn main() -> Result<()> {
             let cfg = load_config(&args, 128)?;
             let compiled = compile(&json, cfg)?;
             print_perf(&analyze(compiled.firmware.as_ref().unwrap(), &EngineModel::default()));
+        }
+        "oracle" => {
+            // Hermetic bit-exactness gate: compile the model, execute the
+            // same random batch through the packed firmware simulator and
+            // the pure-Rust reference oracle, compare element-by-element.
+            let args = Args::parse(rest, &[])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)
+                .with_context(|| format!("loading {model_path}"))?;
+            let cfg = load_config(&args, 16)?;
+            let batch = cfg.batch;
+            let seed = args.get_usize("seed", 7)? as u64;
+            let compiled = compile(&json, cfg)?;
+            let fw = compiled.firmware.as_ref().unwrap();
+            fw.check_invariants()?;
+            let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+            let mut rng = Pcg32::seed_from_u64(seed);
+            let x = Activation::new(
+                batch,
+                fw.input_features(),
+                (0..batch * fw.input_features()).map(|_| rng.gen_i32_in(lo, hi)).collect(),
+            )?;
+            let mut backend = aie4ml::runtime::ReferenceOracle::from_model(&json)?;
+            let report = aie4ml::runtime::oracle::compare(&mut backend, fw, &x)?;
+            println!(
+                "oracle [{}]: {} elements compared, {} mismatches -> {}",
+                report.backend,
+                report.elements,
+                report.mismatches,
+                if report.bit_exact() { "BIT-EXACT" } else { "MISMATCH" }
+            );
+            if !report.bit_exact() {
+                for (i, a, b) in &report.first_mismatches {
+                    eprintln!("  idx {i}: firmware {a} vs oracle {b}");
+                }
+                bail!("firmware is not bit-exact against the reference oracle");
+            }
+        }
+        "zoo" => {
+            // Materialize the hermetic model zoo + manifest. An existing
+            // usable manifest (Rust- or Python-written) is reused unless
+            // --force regenerates from scratch.
+            let args = Args::parse(rest, &["force"])?;
+            let dir = args
+                .flags
+                .get("dir")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(aie4ml::harness::zoo::artifacts_dir);
+            let entries = if args.switches.contains("force") {
+                aie4ml::harness::zoo::write_zoo(&dir)?
+            } else {
+                aie4ml::harness::zoo::ensure_zoo(&dir)?
+            };
+            println!("model zoo at {}:", dir.display());
+            for e in &entries {
+                println!(
+                    "  {:<14} batch {:>4}  model {}  hlo {}{}",
+                    e.name,
+                    e.batch,
+                    e.model.display(),
+                    e.hlo.display(),
+                    if e.hlo.exists() { "" } else { " (not built)" }
+                );
+            }
         }
         "bench" => {
             let args = Args::parse(rest, &[])?;

@@ -1,21 +1,36 @@
-//! Bit-exactness oracle: firmware simulator vs PJRT-executed JAX model.
+//! Bit-exactness oracle: firmware simulator vs an independent backend.
 //!
 //! The paper's toolflow guarantees outputs "bit-exact with respect to the
 //! quantized hls4ml model"; our equivalent gate compares the Rust firmware
-//! simulator against the AOT-lowered JAX model (which itself is pytest-
-//! checked against the Pallas kernel and the pure-jnp reference). A model
-//! passes when every output element matches exactly.
+//! simulator against an [`OracleBackend`]:
+//!
+//! * [`crate::runtime::ReferenceOracle`] — hermetic, pure-Rust execution of
+//!   the logical model (always available; what `cargo test` runs on a fresh
+//!   checkout).
+//! * [`PjrtOracle`] (`--features pjrt`) — the AOT-lowered JAX model executed
+//!   through the PJRT CPU client (itself pytest-checked against the Pallas
+//!   kernel and the pure-jnp reference).
+//!
+//! A model passes when every output element matches exactly.
 
 use crate::codegen::firmware::Firmware;
 use crate::sim::functional::{execute, Activation};
 use anyhow::{ensure, Context, Result};
-use std::path::Path;
 
-use super::PjrtRuntime;
+/// An independent implementation of the model that the firmware simulator
+/// is compared against element-by-element.
+pub trait OracleBackend {
+    /// Human-readable backend identity for reports and error messages.
+    fn describe(&self) -> String;
+    /// Run `input` (`[batch, f_in]` widened ints, row-major) and return the
+    /// flat `[batch, f_out]` output.
+    fn execute_oracle(&mut self, input: &Activation) -> Result<Vec<i32>>;
+}
 
 /// Result of one oracle comparison.
 #[derive(Debug, Clone)]
 pub struct OracleReport {
+    pub backend: String,
     pub batch: usize,
     pub features_out: usize,
     pub elements: usize,
@@ -30,26 +45,22 @@ impl OracleReport {
     }
 }
 
-/// Run `input` through both the firmware simulator and the HLO artifact and
+/// Run `input` through both the firmware simulator and the backend and
 /// compare bit-exactly.
-///
-/// Artifact convention (see `python/compile/aot.py`): a single i32 input of
-/// shape `[batch, f_in]`, weights baked as constants from the same exporter
-/// JSON the Rust compiler consumed, i32 output `[batch, f_out]`.
 pub fn compare(
-    runtime: &mut PjrtRuntime,
-    artifact: impl AsRef<Path>,
+    backend: &mut dyn OracleBackend,
     fw: &Firmware,
     input: &Activation,
 ) -> Result<OracleReport> {
-    ensure!(input.batch == fw.batch, "artifact is specialized to batch {}", fw.batch);
+    ensure!(input.batch == fw.batch, "firmware is specialized to batch {}", fw.batch);
     let fw_out = execute(fw, input).context("firmware simulation")?;
-    let oracle_out = runtime
-        .execute_i32(artifact, &[(&input.data, &[input.batch, input.features])])
-        .context("PJRT oracle execution")?;
+    let oracle_out = backend
+        .execute_oracle(input)
+        .with_context(|| format!("oracle execution ({})", backend.describe()))?;
     ensure!(
         oracle_out.len() == fw_out.data.len(),
-        "oracle produced {} elements, firmware {}",
+        "oracle {} produced {} elements, firmware {}",
+        backend.describe(),
         oracle_out.len(),
         fw_out.data.len()
     );
@@ -64,10 +75,111 @@ pub fn compare(
         }
     }
     Ok(OracleReport {
+        backend: backend.describe(),
         batch: input.batch,
         features_out: fw_out.features,
         elements: fw_out.data.len(),
         mismatches,
         first_mismatches: first,
     })
+}
+
+/// PJRT-backed oracle over an AOT-compiled HLO artifact.
+///
+/// Artifact convention (see `python/compile/aot.py`): a single i32 input of
+/// shape `[batch, f_in]`, weights baked as constants from the same exporter
+/// JSON the Rust compiler consumed, i32 output `[batch, f_out]`.
+#[cfg(feature = "pjrt")]
+pub struct PjrtOracle {
+    runtime: super::pjrt::PjrtRuntime,
+    artifact: std::path::PathBuf,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtOracle {
+    pub fn new(artifact: impl Into<std::path::PathBuf>) -> Result<PjrtOracle> {
+        Ok(PjrtOracle { runtime: super::pjrt::PjrtRuntime::cpu()?, artifact: artifact.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl OracleBackend for PjrtOracle {
+    fn describe(&self) -> String {
+        format!("pjrt({})", self.artifact.display())
+    }
+
+    fn execute_oracle(&mut self, input: &Activation) -> Result<Vec<i32>> {
+        self.runtime
+            .execute_i32(&self.artifact, &[(&input.data, &[input.batch, input.features])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{mlp_spec, synth_model};
+    use crate::passes::compile;
+    use crate::runtime::ReferenceOracle;
+    use crate::util::Pcg32;
+
+    fn compiled(name: &str, dims: &[usize], batch: usize) -> (Firmware, ReferenceOracle) {
+        let json = synth_model(name, &mlp_spec(dims, crate::arch::Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = batch;
+        cfg.tiles_per_layer = Some(4);
+        let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+        let oracle = ReferenceOracle::from_model(&json).unwrap();
+        (fw, oracle)
+    }
+
+    fn random_input(fw: &Firmware, seed: u64) -> Activation {
+        let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+        let mut rng = Pcg32::seed_from_u64(seed);
+        Activation::new(
+            fw.batch,
+            fw.input_features(),
+            (0..fw.batch * fw.input_features()).map(|_| rng.gen_i32_in(lo, hi)).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn firmware_matches_reference_backend() {
+        let (fw, mut oracle) = compiled("oracle_unit", &[48, 32, 8], 6);
+        let x = random_input(&fw, 3);
+        let report = compare(&mut oracle, &fw, &x).unwrap();
+        assert!(report.bit_exact(), "{report:?}");
+        assert_eq!(report.elements, 6 * 8);
+        assert!(report.backend.contains("reference"));
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let (mut fw, mut oracle) = compiled("oracle_corrupt", &[32, 16], 4);
+        // Poison the tail tile's bias after compilation and feed zeros: the
+        // firmware output saturates to the rail while the oracle stays in
+        // the small-bias band, so the comparator must flag every row
+        // (guards against a vacuously-green comparison).
+        for k in &mut fw.layers[0].kernels {
+            if k.is_tail && k.cas_row == 0 {
+                k.bias[0] += 100_000_000;
+            }
+        }
+        let x = Activation::zeros(fw.batch, fw.input_features());
+        let report = compare(&mut oracle, &fw, &x).unwrap();
+        assert!(!report.bit_exact(), "corrupted bias must be detected");
+        assert!(!report.first_mismatches.is_empty());
+    }
+
+    #[test]
+    fn wrong_batch_rejected() {
+        let (fw, mut oracle) = compiled("oracle_batch", &[16, 8], 4);
+        let x = Activation::zeros(3, 16);
+        assert!(compare(&mut oracle, &fw, &x).is_err());
+    }
 }

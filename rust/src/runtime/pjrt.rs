@@ -1,0 +1,95 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts from Rust.
+//! Compiled only with `--features pjrt`.
+//!
+//! `python/compile/aot.py` lowers the quantized JAX model (whose hot loop is
+//! the Pallas blocked-linear kernel) to **HLO text** once at build time;
+//! this module loads that text via the `xla` crate, compiles it on the PJRT
+//! CPU client and executes it with integer tensors. It serves as the
+//! independent functional oracle — the role the paper's x86 simulation mode
+//! plays against the AIE firmware — and never sits on the request path.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! In hermetic builds the `xla` dependency resolves to the in-repo stub
+//! crate (`rust/xla_stub`), which type-checks identically but refuses to
+//! create a client at runtime; swap the path dependency for a real xla-rs
+//! checkout to execute artifacts.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client with a cache of compiled executables keyed by path.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client (the only backend in this environment).
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached per path).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref().to_path_buf();
+        if !self.cache.contains_key(&path) {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(path, exe);
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on i32 input buffers of the given shapes.
+    ///
+    /// The aot.py convention: all inputs are i32 tensors (converted to the
+    /// quantized dtype inside the graph), the output is a 1-tuple of an i32
+    /// tensor (widened back), lowered with `return_tuple=True`.
+    pub fn execute_i32(
+        &mut self,
+        path: impl AsRef<Path>,
+        inputs: &[(&[i32], &[usize])],
+    ) -> Result<Vec<i32>> {
+        let exe_path = path.as_ref().to_path_buf();
+        self.load(&exe_path)?;
+        let exe = &self.cache[&exe_path];
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing artifact")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<i32>().context("reading i32 output")
+    }
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("cached", &self.cache.len())
+            .finish()
+    }
+}

@@ -1,37 +1,66 @@
 //! The paper's `predict()` interface (§IV-B): one entry point, two
-//! execution modes — fast functional **x86** simulation (here: the
-//! AOT-lowered JAX model through PJRT) and the **aie** mode (here: the
-//! bit-exact firmware simulator, which is also what reports hardware-level
-//! statistics through the cycle model). Optional float I/O quantizes inputs
-//! and dequantizes outputs at the boundary, like the generated AIE project.
+//! execution modes — fast functional **x86** validation and the **aie**
+//! mode (the bit-exact firmware simulator, which also reports hardware-level
+//! statistics through the cycle model).
+//!
+//! The x86 half is backend-pluggable: the hermetic default executes the
+//! logical model through [`ReferenceOracle`]; with `--features pjrt` an
+//! AOT-lowered JAX artifact runs through the PJRT CPU client instead.
+//! Optional float I/O quantizes inputs and dequantizes outputs at the
+//! boundary, like the generated AIE project.
 
 use crate::codegen::firmware::Firmware;
 use crate::sim::engine::{analyze, EngineModel, PerfReport};
 use crate::sim::functional::{dequantize_output, execute, quantize_input, Activation};
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 use std::path::PathBuf;
 
-use super::PjrtRuntime;
+use super::reference::ReferenceOracle;
 
 /// Execution mode for [`Predictor::predict`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
-    /// Fast functional validation through the PJRT-compiled JAX model.
+    /// Fast functional validation through an independent x86 backend
+    /// (reference oracle, or the PJRT-compiled JAX model with `pjrt`).
     X86,
     /// The firmware simulator (cycle model available via [`Predictor::profile`]).
     Aie,
 }
 
-/// A compiled model plus (optionally) its AOT artifact.
+enum X86Backend {
+    /// Hermetic pure-Rust execution of the logical model.
+    Reference(ReferenceOracle),
+    /// AOT artifact through the PJRT CPU client (lazily created).
+    #[cfg(feature = "pjrt")]
+    Pjrt { artifact: PathBuf, runtime: Option<super::pjrt::PjrtRuntime> },
+}
+
+/// A compiled model plus (optionally) an independent x86 backend.
 pub struct Predictor {
     fw: Firmware,
+    backend: Option<X86Backend>,
+    /// The artifact path as given, kept for diagnostics in builds where the
+    /// PJRT backend is compiled out.
     artifact: Option<PathBuf>,
-    runtime: Option<PjrtRuntime>,
 }
 
 impl Predictor {
+    /// Predictor over an optional AOT artifact. The artifact is executed
+    /// through PJRT and therefore needs `--features pjrt`; in default builds
+    /// x86 mode requires [`Predictor::with_reference`] instead.
     pub fn new(fw: Firmware, artifact: Option<PathBuf>) -> Predictor {
-        Predictor { fw, artifact, runtime: None }
+        #[cfg(feature = "pjrt")]
+        let backend = artifact
+            .clone()
+            .map(|artifact| X86Backend::Pjrt { artifact, runtime: None });
+        #[cfg(not(feature = "pjrt"))]
+        let backend = None;
+        Predictor { fw, backend, artifact }
+    }
+
+    /// Predictor whose x86 mode runs the hermetic reference oracle.
+    pub fn with_reference(fw: Firmware, oracle: ReferenceOracle) -> Predictor {
+        Predictor { fw, backend: Some(X86Backend::Reference(oracle)), artifact: None }
     }
 
     pub fn firmware(&self) -> &Firmware {
@@ -44,15 +73,26 @@ impl Predictor {
         match mode {
             Mode::Aie => execute(&self.fw, x),
             Mode::X86 => {
-                let artifact = self
-                    .artifact
-                    .clone()
-                    .context("x86 mode needs an AOT artifact (run `make artifacts`)")?;
-                if self.runtime.is_none() {
-                    self.runtime = Some(PjrtRuntime::cpu()?);
-                }
-                let rt = self.runtime.as_mut().unwrap();
-                let out = rt.execute_i32(&artifact, &[(&x.data, &[x.batch, x.features])])?;
+                let out = match self.backend.as_mut() {
+                    Some(X86Backend::Reference(oracle)) => oracle.execute(x)?.data,
+                    #[cfg(feature = "pjrt")]
+                    Some(X86Backend::Pjrt { artifact, runtime }) => {
+                        if runtime.is_none() {
+                            *runtime = Some(super::pjrt::PjrtRuntime::cpu()?);
+                        }
+                        runtime
+                            .as_mut()
+                            .unwrap()
+                            .execute_i32(&*artifact, &[(&x.data, &[x.batch, x.features])])?
+                    }
+                    None => bail!(
+                        "x86 mode needs an AOT artifact executed through PJRT \
+                         (build with --features pjrt and run `make artifacts`) or a \
+                         hermetic reference oracle (Predictor::with_reference); \
+                         artifact given: {:?}",
+                        self.artifact
+                    ),
+                };
                 Activation::new(x.batch, self.fw.output_features(), out)
             }
         }
@@ -77,12 +117,24 @@ impl Predictor {
 mod tests {
     use super::*;
     use crate::arch::Dtype;
-    use crate::harness::models::compile_mlp;
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{compile_mlp, mlp_spec, synth_model};
+    use crate::passes::compile;
     use crate::util::Pcg32;
 
     fn predictor() -> Predictor {
         let m = compile_mlp("pred", &[32, 16, 8], Dtype::I8, 4, Some((1, 2))).unwrap();
         Predictor::new(m.firmware.unwrap(), None)
+    }
+
+    fn reference_predictor(name: &str) -> Predictor {
+        let json = synth_model(name, &mlp_spec(&[32, 16, 8], Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 4;
+        cfg.tiles_per_layer = Some(2);
+        let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+        let oracle = ReferenceOracle::from_model(&json).unwrap();
+        Predictor::with_reference(fw, oracle)
     }
 
     #[test]
@@ -101,6 +153,22 @@ mod tests {
         let x = Activation::zeros(4, 32);
         let err = p.predict(&x, Mode::X86).unwrap_err().to_string();
         assert!(err.contains("artifact"), "{err}");
+    }
+
+    #[test]
+    fn x86_reference_mode_matches_aie() {
+        let mut p = reference_predictor("pred_ref");
+        let mut rng = Pcg32::seed_from_u64(2);
+        let x = Activation::new(4, 32, (0..128).map(|_| rng.gen_i32_in(-128, 127)).collect())
+            .unwrap();
+        let aie = p.predict(&x, Mode::Aie).unwrap();
+        let x86 = p.predict(&x, Mode::X86).unwrap();
+        assert_eq!(aie.data, x86.data);
+        // Float I/O agrees under both modes as well.
+        let xf: Vec<f64> = (0..4 * 32).map(|i| (i % 97) as f64 / 97.0 - 0.5).collect();
+        let yf_aie = p.predict_f64(&xf, Mode::Aie).unwrap();
+        let yf_x86 = p.predict_f64(&xf, Mode::X86).unwrap();
+        assert_eq!(yf_aie, yf_x86);
     }
 
     #[test]

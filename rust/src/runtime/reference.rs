@@ -1,0 +1,203 @@
+//! Hermetic reference oracle: an independent, pure-Rust execution of the
+//! *logical* model, used to gate the packed firmware path bit-exactly.
+//!
+//! The paper's toolflow validates firmware against the quantized hls4ml
+//! model. Our default (network-free, PJRT-free) equivalent executes the
+//! exporter JSON directly through [`reference_dense`] — unpacked row-major
+//! weights, wide accumulation, the same quantize → SRS → saturate → ReLU
+//! chain — sharing **no** code with the packed per-tile path the firmware
+//! simulator runs. Any divergence between the two implementations trips the
+//! `oracle_bitexact` gate on a fresh checkout, without artifacts.
+//!
+//! With `--features pjrt` the AOT-compiled JAX/XLA artifact provides a third,
+//! fully external implementation (see [`super::pjrt`]).
+
+use crate::arch::{Dtype, PrecisionPair};
+use crate::frontend::JsonModel;
+use crate::ir::{derive_shift, QuantSpec};
+use crate::sim::functional::{reference_dense, Activation};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+use super::oracle::OracleBackend;
+
+/// One dense layer in logical (unpacked) form.
+struct RefLayer {
+    name: String,
+    in_features: usize,
+    out_features: usize,
+    /// Row-major `[out_features][in_features]`, exactly as exported.
+    weights: Vec<i32>,
+    bias: Option<Vec<i64>>,
+    input: QuantSpec,
+    output: QuantSpec,
+    acc_dtype: Dtype,
+    shift: u32,
+    relu: bool,
+}
+
+/// The reference model: a chain of [`RefLayer`]s built straight from the
+/// exporter JSON (no pass pipeline involved).
+pub struct ReferenceOracle {
+    name: String,
+    layers: Vec<RefLayer>,
+}
+
+impl ReferenceOracle {
+    /// Build from a parsed model JSON. Quantization attributes are derived
+    /// the same way the Quantization pass derives them (accumulator dtype
+    /// from the precision pair, SRS shift from the binary points) — but on
+    /// the logical tensors, independent of tiling/packing/placement.
+    pub fn from_model(json: &JsonModel) -> Result<ReferenceOracle> {
+        json.validate().context("reference oracle: invalid model")?;
+        let mut layers = Vec::with_capacity(json.layers.len());
+        for l in &json.layers {
+            let input = l.quant.input.to_spec(&l.name)?;
+            let weight = l.quant.weight.to_spec(&l.name)?;
+            let output = l.quant.output.to_spec(&l.name)?;
+            let pair = PrecisionPair::new(input.dtype, weight.dtype);
+            layers.push(RefLayer {
+                name: l.name.clone(),
+                in_features: l.in_features,
+                out_features: l.out_features,
+                weights: l.weights.clone(),
+                bias: if l.use_bias { Some(l.bias.clone()) } else { None },
+                input,
+                output,
+                acc_dtype: pair.acc_dtype(),
+                shift: derive_shift(input.frac_bits, weight.frac_bits, output.frac_bits),
+                relu: l.relu,
+            });
+        }
+        ensure!(!layers.is_empty(), "reference oracle: model has no layers");
+        Ok(ReferenceOracle { name: json.name.clone(), layers })
+    }
+
+    /// Build from a model JSON file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<ReferenceOracle> {
+        let path = path.as_ref();
+        let json = JsonModel::from_file(path)
+            .with_context(|| format!("reference oracle: loading {}", path.display()))?;
+        Self::from_model(&json)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn input_features(&self) -> usize {
+        self.layers[0].in_features
+    }
+
+    pub fn output_features(&self) -> usize {
+        self.layers.last().unwrap().out_features
+    }
+
+    /// Execute the whole chain on an integer batch.
+    pub fn execute(&self, input: &Activation) -> Result<Activation> {
+        ensure!(
+            input.features == self.input_features(),
+            "reference oracle: input features {} != model {}",
+            input.features,
+            self.input_features()
+        );
+        let (lo, hi) = self.layers[0].input.dtype.range();
+        ensure!(
+            input.data.iter().all(|&x| (x as i64) >= lo && (x as i64) <= hi),
+            "reference oracle: input values outside {} range",
+            self.layers[0].input.dtype
+        );
+        let mut act = input.clone();
+        for l in &self.layers {
+            ensure!(
+                act.features == l.in_features,
+                "reference oracle: layer '{}' expects {} features, got {}",
+                l.name,
+                l.in_features,
+                act.features
+            );
+            act = reference_dense(
+                &act,
+                &l.weights,
+                l.bias.as_deref(),
+                l.out_features,
+                l.shift,
+                l.output.dtype,
+                l.acc_dtype,
+                l.relu,
+            );
+        }
+        Ok(act)
+    }
+}
+
+impl OracleBackend for ReferenceOracle {
+    fn describe(&self) -> String {
+        format!("reference({})", self.name)
+    }
+
+    fn execute_oracle(&mut self, input: &Activation) -> Result<Vec<i32>> {
+        Ok(self.execute(input)?.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::JsonLayer;
+
+    fn two_layer() -> JsonModel {
+        JsonModel::new(
+            "ref",
+            vec![
+                JsonLayer::dense(
+                    "fc1",
+                    3,
+                    2,
+                    true,
+                    true,
+                    "int8",
+                    "int8",
+                    1,
+                    vec![1, -2, 3, -4, 5, -6],
+                    vec![10, -10],
+                ),
+                JsonLayer::dense("fc2", 2, 2, false, false, "int8", "int8", 0, vec![1, 0, 0, 1], vec![]),
+            ],
+        )
+    }
+
+    #[test]
+    fn executes_hand_checked_chain() {
+        let oracle = ReferenceOracle::from_model(&two_layer()).unwrap();
+        assert_eq!(oracle.input_features(), 3);
+        assert_eq!(oracle.output_features(), 2);
+        // fc1 (shift = 1+1-1 = 1, relu): row [10, 20, 30] ->
+        //   o0 = 10-40+90+10 = 70  -> srs 35
+        //   o1 = -40+100-180-10 = -130 -> srs -65 -> relu 0
+        // fc2 is identity with shift 0.
+        let x = Activation::new(1, 3, vec![10, 20, 30]).unwrap();
+        let y = oracle.execute(&x).unwrap();
+        assert_eq!(y.data, vec![35, 0]);
+    }
+
+    #[test]
+    fn input_range_checked() {
+        let oracle = ReferenceOracle::from_model(&two_layer()).unwrap();
+        let x = Activation::new(1, 3, vec![300, 0, 0]).unwrap();
+        assert!(oracle.execute(&x).is_err());
+        let bad = Activation::new(1, 2, vec![1, 2]).unwrap();
+        assert!(oracle.execute(&bad).is_err());
+    }
+
+    #[test]
+    fn mixed_precision_acc_dtype() {
+        let mut m = two_layer();
+        // i16 activations x i8 weights -> 32-bit accumulator.
+        m.layers[0].quant.input.dtype = "int16".into();
+        m.layers[0].quant.output.dtype = "int16".into();
+        m.layers[1].quant.input.dtype = "int16".into();
+        let oracle = ReferenceOracle::from_model(&m).unwrap();
+        assert_eq!(oracle.layers[0].acc_dtype, Dtype::I32);
+    }
+}

@@ -15,7 +15,7 @@
 
 use crate::arch::Dtype;
 use crate::codegen::firmware::{Firmware, FirmwareLayer};
-use crate::ir::srs;
+use crate::ir::{srs, srs_i32};
 use crate::sim::dma::Tiler2d;
 use anyhow::{ensure, Result};
 
@@ -150,11 +150,14 @@ pub fn execute_layer(layer: &FirmwareLayer, input: &Activation) -> Result<Activa
                         if layer.use_bias {
                             a = a.wrapping_add(tail.bias[o] as i32);
                         }
-                        let mut y = srs(a as i64, q.shift, q.output.dtype);
+                        // 32-bit store: the SRS rounding add wraps in the
+                        // accumulator width, like the hardware and jnp.int32
+                        // (see ir::srs_i32) — never the 64-bit srs here.
+                        let mut y = srs_i32(a, q.shift, q.output.dtype);
                         if layer.relu {
                             y = y.max(0);
                         }
-                        out_row[o] = y as i32;
+                        out_row[o] = y;
                     }
                 }
             } else {
@@ -242,10 +245,14 @@ pub fn reference_dense(
             if let Some(bias) = bias {
                 acc += bias[o];
             }
-            if acc_dtype != Dtype::I64 {
-                acc = acc as i32 as i64;
-            }
-            let mut y = srs(acc, shift, out_dtype);
+            // Match the store semantics exactly: 32-bit accumulators wrap
+            // (including the SRS rounding add — srs_i32), the i16xi16 path
+            // stays exact in i64.
+            let mut y = if acc_dtype != Dtype::I64 {
+                srs_i32(acc as i32, shift, out_dtype) as i64
+            } else {
+                srs(acc, shift, out_dtype)
+            };
             if relu {
                 y = y.max(0);
             }

@@ -14,7 +14,11 @@ pub mod functional;
 pub mod interconnect;
 pub mod vliw;
 
-pub use cycles::{batch_cycles, kernel_cycles, CycleBreakdown, CycleModel, KernelWorkload};
+pub use cycles::{
+    batch_cycles, kernel_cycles, sustained_gops, CycleBreakdown, CycleModel, KernelWorkload,
+};
 pub use dma::{AddressGenerator, DimStep, Retiler, Tiler2d};
 pub use engine::{analyze, replicated_tops, EngineModel, PerfReport};
-pub use functional::{execute, execute_layer, Activation};
+pub use functional::{
+    dequantize_output, execute, execute_layer, quantize_input, reference_dense, Activation,
+};

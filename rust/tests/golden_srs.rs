@@ -1,0 +1,194 @@
+//! Golden-vector regression tests for the SRS/saturation/ReLU epilogue.
+//!
+//! Every value here is pinned by hand (documented per case) so a change to
+//! the store semantics — rounding direction, saturation point, accumulator
+//! wrap behaviour, ReLU placement — fails loudly with the exact vector that
+//! moved. These are the integer semantics every implementation in the stack
+//! (Pallas kernel, jnp reference, firmware simulator, reference oracle)
+//! must match bit-exactly; change them all together or not at all.
+
+use aie4ml::arch::Dtype;
+use aie4ml::ir::{derive_shift, srs, srs_i32};
+use aie4ml::sim::functional::{reference_dense, Activation};
+
+// ---------- srs (wide accumulator) ------------------------------------------
+
+#[test]
+fn golden_srs_i8_shift4_rounding() {
+    // shift 4 = divide by 16, round half toward +inf, saturate to i8.
+    // (acc, expected): positives round up at .5, negatives round toward 0
+    // at exactly .5 and away below it.
+    let golden: &[(i64, i64)] = &[
+        (0, 0),
+        (7, 0),    //  0.4375 -> 0
+        (8, 1),    //  0.5    -> 1 (half up)
+        (15, 1),   //  0.9375 -> 1
+        (16, 1),   //  1.0    -> 1
+        (24, 2),   //  1.5    -> 2 (half up)
+        (-7, 0),   // -0.4375 -> 0
+        (-8, 0),   // -0.5    -> 0 (half toward +inf)
+        (-9, -1),  // -0.5625 -> -1
+        (-24, -1), // -1.5    -> -1 (half toward +inf)
+        (-25, -2), // -1.5625 -> -2
+    ];
+    for &(acc, want) in golden {
+        assert_eq!(srs(acc, 4, Dtype::I8), want, "srs({acc}, 4, i8)");
+    }
+}
+
+#[test]
+fn golden_srs_i8_saturation_boundaries() {
+    // 2032/16 = 127.0 exactly: the largest non-saturating positive.
+    assert_eq!(srs(2032, 4, Dtype::I8), 127);
+    // 2040/16 = 127.5 rounds to 128 -> saturates to 127.
+    assert_eq!(srs(2040, 4, Dtype::I8), 127);
+    // -2048/16 = -128.0 exactly: the smallest non-saturating negative.
+    assert_eq!(srs(-2048, 4, Dtype::I8), -128);
+    // -2064/16 = -129.0 -> saturates to -128.
+    assert_eq!(srs(-2064, 4, Dtype::I8), -128);
+    // Shift 0 is a pure saturate.
+    assert_eq!(srs(300, 0, Dtype::I8), 127);
+    assert_eq!(srs(-300, 0, Dtype::I8), -128);
+    assert_eq!(srs(42, 0, Dtype::I8), 42);
+}
+
+#[test]
+fn golden_srs_i16_boundaries() {
+    // 65534/2 = 32767: largest non-saturating; 65536/2 = 32768 saturates.
+    assert_eq!(srs(65534, 1, Dtype::I16), 32767);
+    assert_eq!(srs(65536, 1, Dtype::I16), 32767);
+    // (-65537 + 1) >> 1 = -32768: lands exactly on the negative rail.
+    assert_eq!(srs(-65537, 1, Dtype::I16), -32768);
+    assert_eq!(srs(-65539, 1, Dtype::I16), -32768);
+    assert_eq!(srs(-65535, 1, Dtype::I16), -32767);
+}
+
+// ---------- srs_i32 (32-bit accumulator paths) -------------------------------
+
+#[test]
+fn golden_srs_i32_agrees_with_wide_in_range() {
+    // In the non-wrapping band the 32-bit store must equal the wide one.
+    let golden: &[(i32, u32, i64)] = &[
+        (70, 1, 35),
+        (-130, 1, -65),
+        (8, 4, 1),
+        (-9, 4, -1),
+        (2040, 4, 127),
+        (-2064, 4, -128),
+        (1 << 20, 4, 127), // deep saturation
+    ];
+    for &(acc, shift, want) in golden {
+        assert_eq!(srs_i32(acc, shift, Dtype::I8) as i64, want, "srs_i32({acc}, {shift})");
+        assert_eq!(srs(acc as i64, shift, Dtype::I8), want, "srs({acc}, {shift})");
+    }
+}
+
+#[test]
+fn golden_srs_i32_rounding_add_wraps() {
+    // i32::MAX + rounding bias wraps to the negative half: the hardware
+    // accumulator is modular, so the 32-bit path saturates LOW where the
+    // wide path saturates HIGH. This asymmetry is load-bearing — it is why
+    // the i8/i16xi8 paths must never use the 64-bit srs.
+    assert_eq!(srs_i32(i32::MAX, 1, Dtype::I16), -32768);
+    assert_eq!(srs(i32::MAX as i64, 1, Dtype::I16), 32767);
+    // One below the wrap point stays in-band and saturates high.
+    assert_eq!(srs_i32(i32::MAX - 1, 1, Dtype::I16), 32767);
+    // The negative extreme has no wrap (bias is +2^(s-1)).
+    assert_eq!(srs_i32(i32::MIN, 1, Dtype::I16), -32768);
+}
+
+// ---------- shift derivation --------------------------------------------------
+
+#[test]
+fn golden_shift_derivation() {
+    // acc_frac = in_frac + w_frac; shift realigns to out_frac, clamped at 0.
+    assert_eq!(derive_shift(6, 6, 6), 6);
+    assert_eq!(derive_shift(4, 2, 3), 3);
+    assert_eq!(derive_shift(0, 0, 0), 0);
+    assert_eq!(derive_shift(2, 2, 8), 0); // never up-shift on store
+}
+
+// ---------- dense epilogue through reference_dense ----------------------------
+
+/// Hand-computed 2x3 -> 2 dense layer, shift 1, bias, no ReLU:
+///   W = [[1,-2,3], [-4,5,-6]] (row-major [out][in]), b = [10, -10]
+///   row0 = [10,20,30]:
+///     o0 = 10-40+90+10  =  70 -> srs(70,1)  = 35
+///     o1 = -40+100-180-10 = -130 -> srs(-130,1) = -65
+///   row1 = [-5,6,-7]:
+///     o0 = -5-12-21+10  = -28 -> srs(-28,1) = (-27 >> 1) = -14
+///     o1 = 20+30+42-10  =  82 -> srs(82,1)  = (83 >> 1)  = 41
+#[test]
+fn golden_dense_epilogue_no_relu() {
+    let x = Activation::new(2, 3, vec![10, 20, 30, -5, 6, -7]).unwrap();
+    let w = vec![1, -2, 3, -4, 5, -6];
+    let b = vec![10i64, -10];
+    let y = reference_dense(&x, &w, Some(&b), 2, 1, Dtype::I8, Dtype::I32, false);
+    assert_eq!(y.data, vec![35, -65, -14, 41]);
+}
+
+#[test]
+fn golden_dense_epilogue_relu_after_srs() {
+    // Same layer with ReLU: negatives clamp to zero AFTER the SRS store
+    // (srs is monotone with srs(0)=0, so relu-pre == clamp-post).
+    let x = Activation::new(2, 3, vec![10, 20, 30, -5, 6, -7]).unwrap();
+    let w = vec![1, -2, 3, -4, 5, -6];
+    let b = vec![10i64, -10];
+    let y = reference_dense(&x, &w, Some(&b), 2, 1, Dtype::I8, Dtype::I32, true);
+    assert_eq!(y.data, vec![35, 0, 0, 41]);
+}
+
+#[test]
+fn golden_all_negative_relu_zeroes() {
+    // All-negative weights + ones input + ReLU => exactly zero everywhere.
+    let x = Activation::new(1, 4, vec![1, 1, 1, 1]).unwrap();
+    let w = vec![-1; 8]; // 2 outputs x 4 inputs
+    let y = reference_dense(&x, &w, None, 2, 0, Dtype::I8, Dtype::I32, true);
+    assert_eq!(y.data, vec![0, 0]);
+}
+
+#[test]
+fn golden_accumulator_wrap_i32_vs_i64() {
+    // Identical inputs; only the accumulator dtype differs. The dot product
+    // is 4 * 127 * 127 = 64516; bias pushes the exact sum to
+    // 2_147_548_163 > i32::MAX:
+    //  * i64 accumulator: stays exact -> saturates HIGH (+127).
+    //  * i32 accumulator: wraps to 2_147_548_163 - 2^32 = -2_147_419_133
+    //    -> saturates LOW (-128).
+    let x = Activation::new(1, 4, vec![127, 127, 127, 127]).unwrap();
+    let w = vec![127, 127, 127, 127];
+    let b = vec![2_147_483_647i64]; // i32::MAX, the largest storable bias
+    let wide = reference_dense(&x, &w, Some(&b), 1, 0, Dtype::I8, Dtype::I64, false);
+    assert_eq!(wide.data, vec![127]);
+    let wrapped = reference_dense(&x, &w, Some(&b), 1, 0, Dtype::I8, Dtype::I32, false);
+    assert_eq!(wrapped.data, vec![-128]);
+}
+
+#[test]
+fn golden_srs_rounding_wrap_through_dense() {
+    // acc = i32::MAX exactly (zero input dot + bias); with shift 1 the SRS
+    // rounding add wraps the 32-bit accumulator and saturates LOW — the
+    // divergence a 64-bit srs on the truncated value would miss (it
+    // saturates HIGH, as the i64-accumulator variant shows).
+    let x = Activation::new(1, 1, vec![0]).unwrap();
+    let w = vec![1];
+    let b = vec![i32::MAX as i64];
+    let wrapped = reference_dense(&x, &w, Some(&b), 1, 1, Dtype::I16, Dtype::I32, false);
+    assert_eq!(wrapped.data, vec![-32768]);
+    let wide = reference_dense(&x, &w, Some(&b), 1, 1, Dtype::I16, Dtype::I64, false);
+    assert_eq!(wide.data, vec![32767]);
+}
+
+#[test]
+fn golden_i16_output_boundaries_through_dense() {
+    // One input, one output, weight 1, shift 0: the layer is an identity
+    // with an i16 saturating store. Bias walks the accumulator across both
+    // rails.
+    let x = Activation::new(1, 1, vec![0]).unwrap();
+    let w = vec![1];
+    for (bias, want) in [(32767i64, 32767), (32768, 32767), (-32768, -32768), (-32769, -32768)] {
+        let b = vec![bias];
+        let y = reference_dense(&x, &w, Some(&b), 1, 0, Dtype::I16, Dtype::I64, false);
+        assert_eq!(y.data, vec![want], "bias {bias}");
+    }
+}

@@ -11,8 +11,40 @@ use aie4ml::passes::placement::{
 use aie4ml::passes::compile;
 use aie4ml::sim::dma::{Retiler, Tiler2d};
 use aie4ml::sim::functional::{execute, reference_dense, Activation};
-use aie4ml::util::proptest::{check, Strategy};
+use aie4ml::util::proptest::{check, usize_in, Strategy};
 use aie4ml::util::Pcg32;
+
+// ---------- Harness self-test ------------------------------------------------
+
+/// A known-failing property must shrink to — and report — the *minimal*
+/// counterexample. Property: `v < 50` over `usize_in(0, 1000)`; the halving
+/// shrinker converges on exactly 50 from any failing start, so the panic
+/// message is fully deterministic.
+#[test]
+fn prop_shrinking_reports_minimal_counterexample() {
+    let result = std::panic::catch_unwind(|| {
+        check("golden_lt_50", 100, &usize_in(0, 1000), |&v| {
+            if v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 50"))
+            }
+        });
+    });
+    let err = *result
+        .expect_err("a property that fails for half the domain must fail within 100 cases")
+        .downcast::<String>()
+        .expect("proptest panics with a formatted String");
+    assert!(
+        err.contains("property 'golden_lt_50' failed"),
+        "unexpected panic message: {err}"
+    );
+    assert!(
+        err.contains("minimal input: 50"),
+        "shrinker did not reach the 50 boundary: {err}"
+    );
+    assert!(err.contains("50 >= 50"), "minimal error message not propagated: {err}");
+}
 
 // ---------- DMA tiler invariants -------------------------------------------
 

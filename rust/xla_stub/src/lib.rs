@@ -1,0 +1,155 @@
+//! Offline stub of the `xla` (xla-rs) API surface that `aie4ml`'s optional
+//! `pjrt` feature compiles against.
+//!
+//! The build environment carries no XLA/PJRT toolchain, so this crate keeps
+//! `cargo build --features pjrt` hermetic: it mirrors exactly the types and
+//! signatures `aie4ml::runtime::pjrt` uses, and every entry point that would
+//! touch a real PJRT client returns [`Error::Unavailable`] at runtime. To run
+//! real HLO artifacts, point the `xla` path dependency in `rust/Cargo.toml`
+//! at an xla-rs checkout with its PJRT runtime libraries.
+
+use std::fmt;
+use std::path::Path;
+
+const STUB_MSG: &str = "xla/PJRT unavailable: this build links the in-repo stub \
+     (rust/xla_stub); point the `xla` path dependency at a real xla-rs checkout \
+     to execute HLO artifacts";
+
+/// Error type mirroring xla-rs's crate error.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable(STUB_MSG))
+}
+
+/// Element types the stub literals accept (subset of xla-rs NativeType).
+pub trait NativeType: Copy {}
+impl NativeType for i8 {}
+impl NativeType for i16 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// A PJRT client. [`PjRtClient::cpu`] always fails in the stub, so the
+/// remaining methods exist only to satisfy the type checker.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (text form in the real crate).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A host literal.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_refuses_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must not create clients");
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_construction_is_pure() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[3]).is_err());
+    }
+}

@@ -10,12 +10,13 @@
 #                   via the Python/JAX toolchain (needs jax; pairs with
 #                   `cargo test --features pjrt`)
 #   make fmt        rustfmt check (what CI runs)
+#   make clippy     clippy over every target, warnings are errors (what CI runs)
 #   make bench      regenerate every paper table/figure with timings
 
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: build test zoo artifacts fmt bench clean
+.PHONY: build test zoo artifacts fmt clippy bench clean
 
 build:
 	$(CARGO) build --release
@@ -34,6 +35,9 @@ artifacts:
 
 fmt:
 	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
 
 bench: build
 	$(CARGO) bench

@@ -7,7 +7,7 @@
 //! programs, placement coordinates.
 
 use crate::arch::{Device, Dtype, MmulTiling};
-use crate::ir::{CascadeGeometry, DenseQuant, NodeId, PlacementRect};
+use crate::ir::{CascadeGeometry, DenseQuant, NodeId, PlacementRect, QuantSpec};
 use crate::sim::dma::Tiler2d;
 
 /// One compute-tile kernel instance.
@@ -74,6 +74,40 @@ impl MemTilePlan {
     }
 }
 
+/// The mem-tile program of a merge node: a multi-input buffer. Every
+/// producer lands its tiles through its own write tiler (paper §III-C
+/// generalized from one writer to N); consumers read the merged activation
+/// row-major through their own input plans.
+#[derive(Debug, Clone)]
+pub struct MergePlan {
+    /// Column of the memory tile holding the merged buffer.
+    pub mem_col: usize,
+    /// One producer-side write tiler per input edge, in input order.
+    pub write_tilers: Vec<Tiler2d>,
+    /// Merged activation width.
+    pub features: usize,
+    /// Buffer bytes (whole merged activation, single buffer).
+    pub buffer_bytes: usize,
+    /// Ping-pong double buffering enabled.
+    pub ping_pong: bool,
+    /// Element quantization of the merged buffer (all inputs must agree).
+    pub quant: QuantSpec,
+    /// Memory-tile columns the buffer spans (merge buffers are not sharded).
+    pub columns: usize,
+}
+
+impl MergePlan {
+    /// Bytes resident in a single memory tile (×2 if ping-pong).
+    pub fn per_column_bytes(&self) -> usize {
+        let shard = self.buffer_bytes.div_ceil(self.columns.max(1));
+        if self.ping_pong {
+            shard * 2
+        } else {
+            shard
+        }
+    }
+}
+
 /// One fully-resolved layer.
 #[derive(Debug, Clone)]
 pub struct FirmwareLayer {
@@ -105,14 +139,83 @@ impl FirmwareLayer {
     }
 }
 
+/// A merge operator in compiled firmware.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeOp {
+    /// Residual elementwise add: i32 wrapping sum, SRS(shift 0) store
+    /// (pure saturation — all operands share one binary point).
+    Add,
+    /// Feature concatenation in input order.
+    Concat,
+}
+
+/// One fully-resolved merge stage (residual Add / Concat).
+#[derive(Debug, Clone)]
+pub struct MergeStage {
+    pub name: String,
+    pub node_id: NodeId,
+    pub op: MergeOp,
+    /// Output width of the merged activation.
+    pub features: usize,
+    /// Quantization of the merged buffer (inputs and output agree).
+    pub quant: QuantSpec,
+    /// The multi-input mem-tile buffer realizing the merge.
+    pub plan: MergePlan,
+}
+
+/// Where a stage reads its input from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageSource {
+    /// The network input buffer.
+    Input,
+    /// The output of an earlier stage (index into [`Firmware::stages`]).
+    Stage(usize),
+}
+
+/// What a stage executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageRef {
+    /// Index into [`Firmware::layers`].
+    Layer(usize),
+    /// Index into [`Firmware::merges`].
+    Merge(usize),
+}
+
+/// One node of the firmware stage DAG.
+#[derive(Debug, Clone)]
+pub struct FirmwareStage {
+    pub op: StageRef,
+    /// Producers feeding this stage, in input order. Dense stages have
+    /// exactly one; merge stages have two or more.
+    pub inputs: Vec<StageSource>,
+}
+
 /// The complete firmware package for one model.
+///
+/// Execution structure is a **stage DAG**, not a layer chain: `stages`
+/// lists every compute stage (dense layers and merge nodes) in topological
+/// order, each naming its producers, so fan-out and residual fan-in
+/// topologies execute the same way chains do (a chain is the degenerate
+/// DAG where every stage has one input and one consumer). `layers` and
+/// `merges` are the stage pools the DAG indexes into.
 #[derive(Debug, Clone)]
 pub struct Firmware {
     pub model_name: String,
     pub device: Device,
-    /// Layers in execution (topological) order.
+    /// Dense stages in topological order.
     pub layers: Vec<FirmwareLayer>,
-    /// Mem-tile program draining the last layer's output.
+    /// Merge stages (residual Add / Concat) in topological order.
+    pub merges: Vec<MergeStage>,
+    /// The stage DAG in topological order: a stage's inputs always
+    /// reference lower stage indices (or the network input).
+    pub stages: Vec<FirmwareStage>,
+    /// Index into `stages` of the stage producing the network output.
+    pub output_stage: usize,
+    /// Network input width.
+    pub in_features: usize,
+    /// Quantization of the network input buffer.
+    pub input_quant: QuantSpec,
+    /// Mem-tile program draining the output stage.
     pub output_plan: MemTilePlan,
     /// Steady-state batch size the pipeline is configured for.
     pub batch: usize,
@@ -136,10 +239,52 @@ impl Firmware {
 
     /// Network input/output feature counts.
     pub fn input_features(&self) -> usize {
-        self.layers.first().map(|l| l.in_features).unwrap_or(0)
+        self.in_features
     }
     pub fn output_features(&self) -> usize {
-        self.layers.last().map(|l| l.out_features).unwrap_or(0)
+        self.stages
+            .get(self.output_stage)
+            .map(|s| self.stage_out_features_of(s))
+            .unwrap_or(0)
+    }
+
+    /// Quantization of the network output (the output stage's store spec).
+    pub fn output_quant(&self) -> QuantSpec {
+        match self.stages[self.output_stage].op {
+            StageRef::Layer(li) => self.layers[li].quant.output,
+            StageRef::Merge(mi) => self.merges[mi].quant,
+        }
+    }
+
+    /// Feature count produced by stage `i`.
+    pub fn stage_out_features(&self, i: usize) -> usize {
+        self.stage_out_features_of(&self.stages[i])
+    }
+
+    fn stage_out_features_of(&self, s: &FirmwareStage) -> usize {
+        match s.op {
+            StageRef::Layer(li) => self.layers[li].out_features,
+            StageRef::Merge(mi) => self.merges[mi].features,
+        }
+    }
+
+    /// Display name of stage `i`.
+    pub fn stage_name(&self, i: usize) -> &str {
+        match self.stages[i].op {
+            StageRef::Layer(li) => &self.layers[li].name,
+            StageRef::Merge(mi) => &self.merges[mi].name,
+        }
+    }
+
+    /// Stages consuming stage `i`'s output, in stage order (empty for the
+    /// output stage).
+    pub fn stage_consumers(&self, i: usize) -> Vec<usize> {
+        self.stages
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.inputs.contains(&StageSource::Stage(i)))
+            .map(|(j, _)| j)
+            .collect()
     }
 
     /// Sanity invariants the emission pass guarantees; exercised by tests
@@ -222,6 +367,81 @@ impl Firmware {
             self.tiles_used(),
             self.device.placeable_tiles()
         );
+        // Stage DAG: complete, topological, well-typed.
+        ensure!(
+            self.stages.len() == self.layers.len() + self.merges.len(),
+            "stage DAG has {} stages for {} layers + {} merges",
+            self.stages.len(),
+            self.layers.len(),
+            self.merges.len()
+        );
+        ensure!(self.output_stage < self.stages.len(), "output stage out of range");
+        for (i, s) in self.stages.iter().enumerate() {
+            for src in &s.inputs {
+                if let StageSource::Stage(j) = src {
+                    ensure!(*j < i, "stage {i} consumes stage {j}: DAG not topological");
+                }
+            }
+            match s.op {
+                StageRef::Layer(li) => {
+                    ensure!(li < self.layers.len(), "stage {i}: layer index {li} out of range");
+                    ensure!(
+                        s.inputs.len() == 1,
+                        "dense stage '{}' has {} inputs",
+                        self.layers[li].name,
+                        s.inputs.len()
+                    );
+                }
+                StageRef::Merge(mi) => {
+                    ensure!(mi < self.merges.len(), "stage {i}: merge index {mi} out of range");
+                    let m = &self.merges[mi];
+                    ensure!(
+                        s.inputs.len() >= 2 && s.inputs.len() == m.plan.write_tilers.len(),
+                        "merge '{}': {} inputs vs {} write tilers",
+                        m.name,
+                        s.inputs.len(),
+                        m.plan.write_tilers.len()
+                    );
+                    let widths: Vec<usize> = s
+                        .inputs
+                        .iter()
+                        .map(|src| match src {
+                            StageSource::Input => self.in_features,
+                            StageSource::Stage(j) => self.stage_out_features(*j),
+                        })
+                        .collect();
+                    match m.op {
+                        MergeOp::Add => {
+                            ensure!(
+                                widths.iter().all(|&w| w == m.features),
+                                "merge '{}': add input widths {:?} != {}",
+                                m.name,
+                                widths,
+                                m.features
+                            );
+                        }
+                        MergeOp::Concat => {
+                            let sum: usize = widths.iter().sum();
+                            ensure!(
+                                sum == m.features,
+                                "merge '{}': concat widths {:?} sum to {} != {}",
+                                m.name,
+                                widths,
+                                sum,
+                                m.features
+                            );
+                        }
+                    }
+                    ensure!(
+                        m.plan.per_column_bytes() <= self.device.mem_tile_bytes,
+                        "merge '{}': buffer {} B exceeds {} B",
+                        m.name,
+                        m.plan.per_column_bytes(),
+                        self.device.mem_tile_bytes
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
@@ -269,14 +489,62 @@ impl Firmware {
                 ])
             })
             .collect();
-        Ok(obj([
+        let mut top = obj([
             ("model", Value::from(self.model_name.as_str())),
             ("device", Value::from(self.device.name.as_str())),
             ("batch", Value::from(self.batch)),
             ("tiles_used", Value::from(self.tiles_used())),
             ("macs_per_sample", Value::from(self.macs_per_sample())),
             ("layers", Value::Array(layers)),
-        ])
-        .to_string_pretty())
+        ]);
+        // DAG models additionally describe their merges and stage wiring;
+        // chain firmware keeps the exact pre-DAG JSON shape.
+        if !self.merges.is_empty() {
+            let merges: Vec<Value> = self
+                .merges
+                .iter()
+                .map(|m| {
+                    obj([
+                        ("name", Value::from(m.name.as_str())),
+                        (
+                            "op",
+                            Value::from(match m.op {
+                                MergeOp::Add => "add",
+                                MergeOp::Concat => "concat",
+                            }),
+                        ),
+                        ("features", Value::from(m.features)),
+                        ("dtype", Value::from(m.quant.dtype.to_string())),
+                        ("mem_col", Value::from(m.plan.mem_col)),
+                        ("mem_bytes", Value::from(m.plan.per_column_bytes())),
+                    ])
+                })
+                .collect();
+            let stages: Vec<Value> = self
+                .stages
+                .iter()
+                .map(|s| {
+                    let op = match s.op {
+                        StageRef::Layer(i) => format!("dense:{i}"),
+                        StageRef::Merge(i) => format!("merge:{i}"),
+                    };
+                    let inputs: Vec<Value> = s
+                        .inputs
+                        .iter()
+                        .map(|src| match src {
+                            StageSource::Input => Value::from("input"),
+                            StageSource::Stage(j) => Value::from(*j),
+                        })
+                        .collect();
+                    obj([("op", Value::from(op)), ("inputs", Value::Array(inputs))])
+                })
+                .collect();
+            if let Value::Object(fields) = &mut top {
+                fields.insert("merges".to_string(), Value::Array(merges));
+                fields.insert("stages".to_string(), Value::Array(stages));
+                fields.insert("output_stage".to_string(), Value::from(self.output_stage));
+            }
+        }
+        Ok(top.to_string_pretty())
     }
 }

@@ -3,5 +3,8 @@
 pub mod firmware;
 pub mod render;
 
-pub use firmware::{Firmware, FirmwareLayer, KernelInst, MemTilePlan};
+pub use firmware::{
+    Firmware, FirmwareLayer, FirmwareStage, KernelInst, MemTilePlan, MergeOp, MergePlan,
+    MergeStage, StageRef, StageSource,
+};
 pub use render::{render_floorplan, render_graph, render_kernel, write_project};

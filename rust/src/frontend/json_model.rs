@@ -27,6 +27,8 @@ pub enum FrontendError {
     BadBias { layer: String, got: usize, want: usize },
     #[error("layer {layer}: unsupported layer type '{ty}'")]
     BadLayerType { layer: String, ty: String },
+    #[error("layer {layer}: {detail}")]
+    BadTopology { layer: String, detail: String },
     #[error("model has no layers")]
     Empty,
 }
@@ -68,6 +70,12 @@ pub struct JsonLayerQuant {
 }
 
 /// One layer entry.
+///
+/// `ty` is `"dense"`, `"add"` (residual merge) or `"concat"`. Layers wire
+/// into a DAG through `inputs`: each entry names an earlier layer (its
+/// post-activation output) or the literal `"input"` for the network input.
+/// An empty `inputs` list means "the previous layer" — the chain default,
+/// so exporter JSONs written before DAG support parse unchanged.
 #[derive(Debug, Clone)]
 pub struct JsonLayer {
     pub name: String,
@@ -82,6 +90,8 @@ pub struct JsonLayer {
     pub weights: Vec<i32>,
     /// Quantized integer bias at accumulator scale, length out_features.
     pub bias: Vec<i64>,
+    /// Producer layers feeding this one (empty = previous layer).
+    pub inputs: Vec<String>,
 }
 
 impl JsonLayer {
@@ -114,7 +124,44 @@ impl JsonLayer {
             },
             weights,
             bias,
+            inputs: Vec::new(),
         }
+    }
+
+    /// Rewire this layer to read from explicitly named producers (an earlier
+    /// layer's name, or `"input"` for the network input).
+    pub fn with_inputs(mut self, inputs: &[&str]) -> JsonLayer {
+        self.inputs = inputs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    fn merge(name: &str, ty: &str, features: usize, dtype: &str, frac_bits: i32, inputs: &[&str]) -> JsonLayer {
+        JsonLayer {
+            name: name.to_string(),
+            ty: ty.to_string(),
+            in_features: features,
+            out_features: features,
+            use_bias: false,
+            relu: false,
+            quant: JsonLayerQuant {
+                input: JsonQuant::new(dtype, frac_bits),
+                weight: JsonQuant::new(dtype, frac_bits),
+                output: JsonQuant::new(dtype, frac_bits),
+            },
+            weights: Vec::new(),
+            bias: Vec::new(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// A residual fan-in: elementwise add of `inputs`, each `features` wide.
+    pub fn residual_add(name: &str, features: usize, dtype: &str, frac_bits: i32, inputs: &[&str]) -> JsonLayer {
+        Self::merge(name, "add", features, dtype, frac_bits, inputs)
+    }
+
+    /// A feature concatenation of `inputs`; `features` is the total width.
+    pub fn concat(name: &str, features: usize, dtype: &str, frac_bits: i32, inputs: &[&str]) -> JsonLayer {
+        Self::merge(name, "concat", features, dtype, frac_bits, inputs)
     }
 
     fn from_json(v: &Value) -> Result<JsonLayer, FrontendError> {
@@ -141,6 +188,17 @@ impl JsonLayer {
             }
             None => Vec::new(),
         };
+        let inputs = match v.get("inputs") {
+            Some(arr) => {
+                let arr = arr.as_array()?;
+                let mut out = Vec::with_capacity(arr.len());
+                for x in arr {
+                    out.push(x.as_str()?.to_string());
+                }
+                out
+            }
+            None => Vec::new(),
+        };
         Ok(JsonLayer {
             name: v.field("name")?.as_str()?.to_string(),
             ty: v.field("type")?.as_str()?.to_string(),
@@ -155,6 +213,7 @@ impl JsonLayer {
             },
             weights,
             bias,
+            inputs,
         })
     }
 }
@@ -206,7 +265,7 @@ impl JsonModel {
                         ("frac_bits", Value::from(j.frac_bits as i64)),
                     ])
                 };
-                obj([
+                let mut layer = obj([
                     ("name", Value::from(l.name.as_str())),
                     ("type", Value::from(l.ty.as_str())),
                     ("in_features", Value::from(l.in_features)),
@@ -223,7 +282,15 @@ impl JsonModel {
                     ),
                     ("weights", Value::from(l.weights.clone())),
                     ("bias", Value::from(l.bias.clone())),
-                ])
+                ]);
+                // Only DAG layers carry `inputs` — chain JSONs stay
+                // byte-identical to what pre-DAG exporters wrote.
+                if !l.inputs.is_empty() {
+                    if let Value::Object(fields) = &mut layer {
+                        fields.insert("inputs".to_string(), Value::from(l.inputs.clone()));
+                    }
+                }
+                layer
             })
             .collect();
         let mut fields = vec![
@@ -237,32 +304,122 @@ impl JsonModel {
             .to_string_pretty()
     }
 
-    /// Validate tensor sizes against declared shapes.
+    /// Validate tensor sizes against declared shapes and the DAG wiring
+    /// (merge arity, payload-free merges, unique layer names).
     pub fn validate(&self) -> Result<(), FrontendError> {
         if self.layers.is_empty() {
             return Err(FrontendError::Empty);
         }
+        if self.layers[0].ty != "dense" {
+            return Err(FrontendError::BadTopology {
+                layer: self.layers[0].name.clone(),
+                detail: "the first layer must be dense (it consumes the network input)".into(),
+            });
+        }
+        let mut names = std::collections::HashSet::new();
         for l in &self.layers {
-            if l.ty != "dense" {
-                return Err(FrontendError::BadLayerType {
+            if !names.insert(l.name.as_str()) || l.name == "input" {
+                return Err(FrontendError::BadTopology {
                     layer: l.name.clone(),
-                    ty: l.ty.clone(),
+                    detail: "layer names must be unique and must not shadow 'input'".into(),
                 });
             }
-            let want = l.in_features * l.out_features;
-            if l.weights.len() != want {
-                return Err(FrontendError::BadWeights {
-                    layer: l.name.clone(),
-                    got: l.weights.len(),
-                    want,
-                });
-            }
-            if l.use_bias && l.bias.len() != l.out_features {
-                return Err(FrontendError::BadBias {
-                    layer: l.name.clone(),
-                    got: l.bias.len(),
-                    want: l.out_features,
-                });
+            match l.ty.as_str() {
+                "dense" => {
+                    if l.inputs.len() > 1 {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!("dense layers take one input, found {}", l.inputs.len()),
+                        });
+                    }
+                    let want = l.in_features * l.out_features;
+                    if l.weights.len() != want {
+                        return Err(FrontendError::BadWeights {
+                            layer: l.name.clone(),
+                            got: l.weights.len(),
+                            want,
+                        });
+                    }
+                    if l.use_bias && l.bias.len() != l.out_features {
+                        return Err(FrontendError::BadBias {
+                            layer: l.name.clone(),
+                            got: l.bias.len(),
+                            want: l.out_features,
+                        });
+                    }
+                }
+                "add" | "concat" => {
+                    if l.inputs.len() < 2 {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!(
+                                "{} merges need at least two inputs, found {}",
+                                l.ty,
+                                l.inputs.len()
+                            ),
+                        });
+                    }
+                    if !l.weights.is_empty() || !l.bias.is_empty() || l.use_bias || l.relu {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: "merge layers carry no weights, bias or activation".into(),
+                        });
+                    }
+                    if l.ty == "add" && l.in_features != l.out_features {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: "add merges preserve width (in_features == out_features)".into(),
+                        });
+                    }
+                    // The declared merge quantization must match every
+                    // producer's store spec (the raw input's spec for
+                    // "input" arms) — the buffer cannot reconcile binary
+                    // points, and the backends derive the spec from the
+                    // producers, so a mismatched declaration would be a
+                    // silent lie otherwise.
+                    for src in &l.inputs {
+                        let produced = if src == "input" {
+                            Some(&self.layers[0].quant.input)
+                        } else {
+                            self.layers
+                                .iter()
+                                .take_while(|p| p.name != l.name)
+                                .find(|p| &p.name == src)
+                                .map(|p| &p.quant.output)
+                        };
+                        // Unknown names are reported by to_graph with a
+                        // better message, and unknown dtype spellings by
+                        // to_spec; only check resolvable, parseable arms.
+                        if let Some(produced) = produced {
+                            let same_dtype = match (
+                                Dtype::parse(&produced.dtype),
+                                Dtype::parse(&l.quant.output.dtype),
+                            ) {
+                                (Some(a), Some(b)) => a == b,
+                                _ => true,
+                            };
+                            if !same_dtype || produced.frac_bits != l.quant.output.frac_bits {
+                                return Err(FrontendError::BadTopology {
+                                    layer: l.name.clone(),
+                                    detail: format!(
+                                        "input '{src}' quantization disagrees with the merge \
+                                         ({} frac {} vs declared {} frac {})",
+                                        produced.dtype,
+                                        produced.frac_bits,
+                                        l.quant.output.dtype,
+                                        l.quant.output.frac_bits
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    return Err(FrontendError::BadLayerType {
+                        layer: l.name.clone(),
+                        ty: l.ty.clone(),
+                    })
+                }
             }
         }
         Ok(())
@@ -270,6 +427,12 @@ impl JsonModel {
 
     /// Build the frontend IR graph (ReLU still standalone; quantizers and
     /// weights attached to nodes; AIE attrs untouched).
+    ///
+    /// Layers with an empty `inputs` list chain onto the previous layer;
+    /// explicit `inputs` entries resolve to earlier layers' post-activation
+    /// outputs (or `"input"`), so fan-out and fan-in topologies are
+    /// expressible while chain JSONs build the same graph as before. The
+    /// last layer is the network output.
     pub fn to_graph(&self) -> Result<Graph, FrontendError> {
         self.validate()?;
         let mut g = Graph::new();
@@ -277,39 +440,64 @@ impl JsonModel {
             "input",
             OpKind::Input { features: self.layers[0].in_features },
         );
+        // Layer name -> the node carrying its output (the ReLU node when a
+        // separate activation follows, so consumers see post-activation data).
+        let mut handles: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
         let mut prev = input;
         for l in &self.layers {
-            let id = g.add_node(
-                l.name.clone(),
-                OpKind::Dense {
-                    in_features: l.in_features,
-                    out_features: l.out_features,
-                    use_bias: l.use_bias,
-                    fused_relu: false,
-                },
-            );
-            {
-                // Pre-populate quant attrs from the JSON; the Quantization
-                // pass finalizes acc dtype and shift.
-                let node = g.node_mut(id).unwrap();
-                node.weights = l.weights.clone();
-                node.bias = l.bias.clone();
-                node.attrs.quant = Some(crate::ir::DenseQuant {
-                    input: l.quant.input.to_spec(&l.name)?,
-                    weight: l.quant.weight.to_spec(&l.name)?,
-                    output: l.quant.output.to_spec(&l.name)?,
-                    bias_dtype: Dtype::I32,
-                    acc_dtype: Dtype::I32, // finalized by Quantization pass
-                    shift: 0,              // finalized by Quantization pass
-                });
+            let id = match l.ty.as_str() {
+                "dense" => {
+                    let id = g.add_node(
+                        l.name.clone(),
+                        OpKind::Dense {
+                            in_features: l.in_features,
+                            out_features: l.out_features,
+                            use_bias: l.use_bias,
+                            fused_relu: false,
+                        },
+                    );
+                    // Pre-populate quant attrs from the JSON; the Quantization
+                    // pass finalizes acc dtype and shift.
+                    let node = g.node_mut(id).unwrap();
+                    node.weights = l.weights.clone();
+                    node.bias = l.bias.clone();
+                    node.attrs.quant = Some(crate::ir::DenseQuant {
+                        input: l.quant.input.to_spec(&l.name)?,
+                        weight: l.quant.weight.to_spec(&l.name)?,
+                        output: l.quant.output.to_spec(&l.name)?,
+                        bias_dtype: Dtype::I32,
+                        acc_dtype: Dtype::I32, // finalized by Quantization pass
+                        shift: 0,              // finalized by Quantization pass
+                    });
+                    id
+                }
+                "add" => g.add_node(l.name.clone(), OpKind::Add { features: l.out_features }),
+                _ => g.add_node(l.name.clone(), OpKind::Concat { features: l.out_features }),
+            };
+            if l.inputs.is_empty() {
+                g.connect(prev, id);
+            } else {
+                for src in &l.inputs {
+                    let from = if src == "input" {
+                        input
+                    } else {
+                        *handles.get(src.as_str()).ok_or_else(|| FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!(
+                                "unknown input '{src}' (inputs must name an earlier layer or 'input')"
+                            ),
+                        })?
+                    };
+                    g.connect(from, id);
+                }
             }
-            g.connect(prev, id);
             prev = id;
             if l.relu {
                 let r = g.add_node(format!("{}_relu", l.name), OpKind::ReLU);
                 g.connect(prev, r);
                 prev = r;
             }
+            handles.insert(l.name.as_str(), prev);
         }
         let out = g.add_node("output", OpKind::Output);
         g.connect(prev, out);
@@ -403,5 +591,87 @@ mod tests {
         assert_eq!(m2.layers[0].weights, m.layers[0].weights);
         assert_eq!(m2.layers[0].bias, m.layers[0].bias);
         assert_eq!(m2.layers[0].quant.weight.frac_bits, 4);
+    }
+
+    fn residual_model() -> JsonModel {
+        JsonModel::new(
+            "res",
+            vec![
+                JsonLayer::dense("fc1", 4, 8, true, true, "int8", "int8", 4, vec![1; 32], vec![0; 8]),
+                JsonLayer::dense("fc2", 8, 4, true, false, "int8", "int8", 4, vec![1; 32], vec![0; 4]),
+                JsonLayer::residual_add("res", 4, "int8", 4, &["input", "fc2"]),
+                JsonLayer::dense("head", 4, 2, false, false, "int8", "int8", 4, vec![1; 8], vec![])
+                    .with_inputs(&["res"]),
+            ],
+        )
+    }
+
+    #[test]
+    fn residual_json_builds_dag() {
+        let m = residual_model();
+        m.validate().unwrap();
+        let g = m.to_graph().unwrap();
+        // input, fc1, fc1_relu, fc2, res, head, output.
+        assert_eq!(g.nodes.len(), 7);
+        g.validate_shapes().unwrap();
+        assert_eq!(g.input_features().unwrap(), 4);
+        assert_eq!(g.output_features().unwrap(), 2);
+        // The merge has two predecessors: the network input and fc2.
+        let res = g.nodes.iter().find(|n| n.name == "res").unwrap().id;
+        assert_eq!(g.predecessors(res).len(), 2);
+        // Fan-out: input feeds fc1 and the merge.
+        assert_eq!(g.successors(0).len(), 2);
+    }
+
+    #[test]
+    fn dag_json_roundtrips_inputs() {
+        let m = residual_model();
+        let m2 = JsonModel::from_str(&m.to_json_string()).unwrap();
+        assert_eq!(m2.layers[2].ty, "add");
+        assert_eq!(m2.layers[2].inputs, vec!["input", "fc2"]);
+        assert_eq!(m2.layers[3].inputs, vec!["res"]);
+        m2.to_graph().unwrap();
+        // Chain layers keep writing no `inputs` key at all.
+        assert!(!tiny_model().to_json_string().contains("inputs"));
+    }
+
+    #[test]
+    fn unknown_input_rejected() {
+        let mut m = residual_model();
+        m.layers[3].inputs = vec!["nonexistent".into()];
+        assert!(matches!(m.to_graph(), Err(FrontendError::BadTopology { .. })));
+    }
+
+    #[test]
+    fn merge_arity_and_payload_rejected() {
+        let mut m = residual_model();
+        m.layers[2].inputs = vec!["fc2".into()];
+        assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+        let mut m = residual_model();
+        m.layers[2].weights = vec![1];
+        assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+    }
+
+    #[test]
+    fn duplicate_layer_name_rejected() {
+        let mut m = residual_model();
+        m.layers[1].name = "fc1".into();
+        assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+    }
+
+    #[test]
+    fn concat_layer_parses() {
+        let m = JsonModel::new(
+            "cat",
+            vec![
+                JsonLayer::dense("a", 4, 4, false, false, "int8", "int8", 0, vec![1; 16], vec![]),
+                JsonLayer::dense("b", 4, 2, false, false, "int8", "int8", 0, vec![1; 8], vec![])
+                    .with_inputs(&["input"]),
+                JsonLayer::concat("cat", 6, "int8", 0, &["a", "b"]),
+            ],
+        );
+        let g = m.to_graph().unwrap();
+        g.validate_shapes().unwrap();
+        assert_eq!(g.output_features().unwrap(), 6);
     }
 }

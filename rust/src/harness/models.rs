@@ -98,6 +98,62 @@ pub fn compile_mlp(
     compile(&json, cfg)
 }
 
+/// A skip-connection MLP (the DAG analog of [`mlp_spec`]):
+/// `input -> fc1(ReLU) -> fc2`, residual `add(input, fc2)`, then a dense
+/// head reading the merged activation. Deterministic weights from the
+/// name-seeded PCG stream, like [`synth_model`].
+pub fn residual_mlp_model(
+    name: &str,
+    features: usize,
+    hidden: usize,
+    classes: usize,
+    frac_bits: i32,
+) -> JsonModel {
+    let mut rng = Pcg32::seed_from_u64(name_seed(name));
+    let mut dense = |lname: &str, fin: usize, fout: usize, relu: bool| -> JsonLayer {
+        let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-512, 512)).collect();
+        JsonLayer::dense(lname, fin, fout, true, relu, "int8", "int8", frac_bits, weights, bias)
+    };
+    let layers = vec![
+        dense("fc1", features, hidden, true),
+        dense("fc2", hidden, features, false),
+        JsonLayer::residual_add("res", features, "int8", frac_bits, &["input", "fc2"]),
+        dense("head", features, classes, false).with_inputs(&["res"]),
+    ];
+    let mut m = JsonModel::new(name, layers);
+    m.device = Some("vek280".to_string());
+    m
+}
+
+/// A diamond: `input -> stem`, which fans out into two parallel branches
+/// `a` and `b` that re-merge through a residual add, then a dense head —
+/// the smallest topology exercising fan-out *and* fan-in.
+pub fn diamond_mlp_model(
+    name: &str,
+    features: usize,
+    branch: usize,
+    classes: usize,
+    frac_bits: i32,
+) -> JsonModel {
+    let mut rng = Pcg32::seed_from_u64(name_seed(name));
+    let mut dense = |lname: &str, fin: usize, fout: usize, relu: bool| -> JsonLayer {
+        let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-512, 512)).collect();
+        JsonLayer::dense(lname, fin, fout, true, relu, "int8", "int8", frac_bits, weights, bias)
+    };
+    let layers = vec![
+        dense("stem", features, branch, true),
+        dense("a", branch, branch, true).with_inputs(&["stem"]),
+        dense("b", branch, branch, false).with_inputs(&["stem"]),
+        JsonLayer::residual_add("res", branch, "int8", frac_bits, &["a", "b"]),
+        dense("head", branch, classes, false).with_inputs(&["res"]),
+    ];
+    let mut m = JsonModel::new(name, layers);
+    m.device = Some("vek280".to_string());
+    m
+}
+
 /// The paper's cross-device workload: 7-layer 512×512 MLP, int8
 /// (Table III row 5 / Table V).
 pub fn seven_layer_mlp(batch: usize) -> Result<Model> {
@@ -152,6 +208,29 @@ mod tests {
         let m = synth_model("rng", &mlp_spec(&[64, 64], Dtype::I8), 4);
         assert!(m.layers[0].weights.iter().all(|&w| (-128..=127).contains(&w)));
         m.validate().unwrap();
+    }
+
+    #[test]
+    fn residual_and_diamond_models_compile_end_to_end() {
+        let res = residual_mlp_model("models_res", 64, 96, 16, 6);
+        res.validate().unwrap();
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        let m = compile(&res, cfg).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        fw.check_invariants().unwrap();
+        assert_eq!(fw.merges.len(), 1);
+        assert_eq!(fw.output_features(), 16);
+
+        let dia = diamond_mlp_model("models_dia", 64, 64, 8, 6);
+        dia.validate().unwrap();
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        let m = compile(&dia, cfg).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        fw.check_invariants().unwrap();
+        assert_eq!(fw.layers.len(), 4);
+        assert_eq!(fw.merges.len(), 1);
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //! Mirrors `python/compile/exporter.py::MODEL_ZOO` in names, topology and
 //! batch (the hermetic `mlp7` is width-reduced to keep `cargo test` fast;
 //! `make artifacts` regenerates the paper-scale set plus HLO artifacts).
+//! The `residual_mlp` entry is Rust-only for now: the Python exporter has
+//! no DAG export yet, so Python-written manifests simply omit it (tests
+//! that need it look it up leniently).
 //! Weights come from the seeded PCG stream (`harness::models::synth_model`,
 //! seeded by the FNV-1a name hash) — payload agreement between the firmware
 //! and any oracle goes through the written JSON, never through parallel
@@ -17,7 +20,7 @@
 
 use crate::arch::Dtype;
 use crate::frontend::JsonModel;
-use crate::harness::models::{synth_model, LayerSpec};
+use crate::harness::models::{residual_mlp_model, synth_model, LayerSpec};
 use crate::util::json::{obj, Value};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -33,6 +36,10 @@ pub struct ZooEntry {
     /// HLO-text artifact for the PJRT oracle (present only after
     /// `make artifacts`; the hermetic reference oracle never needs it).
     pub hlo: PathBuf,
+    /// Whether the manifest declared the `hlo` path explicitly (true for
+    /// Rust- and AOT-written manifests; false for the plain Python
+    /// exporter, which omits the field).
+    pub hlo_declared: bool,
 }
 
 fn layer_specs(dims: &[usize], act: Dtype, wgt: Dtype) -> Vec<LayerSpec> {
@@ -60,6 +67,8 @@ pub fn zoo_models() -> Vec<(JsonModel, usize)> {
         (synth_model("token_mixer", &layer_specs(&[196, 256, 196], Dtype::I8, Dtype::I8), 6), 64),
         // Mixed precision: int16 activations x int8 weights.
         (synth_model("mlp_i16i8", &layer_specs(&[128, 128, 64], Dtype::I16, Dtype::I8), 6), 16),
+        // Skip-connection MLP: fan-out + residual Add fan-in (DAG gate).
+        (residual_mlp_model("residual_mlp", 128, 256, 32, 6), 16),
     ]
 }
 
@@ -94,7 +103,9 @@ pub fn read_manifest(dir: &Path) -> Option<Vec<ZooEntry>> {
     let mut out = Vec::new();
     for e in v.as_array().ok()? {
         let name = e.field("name").ok()?.as_str().ok()?.to_string();
-        let hlo = match e.get("hlo").and_then(|h| h.as_str().ok()) {
+        let declared = e.get("hlo").and_then(|h| h.as_str().ok());
+        let hlo_declared = declared.is_some();
+        let hlo = match declared {
             Some(h) => resolve(dir, h),
             None => dir.join(format!("{name}.hlo.txt")),
         };
@@ -102,6 +113,7 @@ pub fn read_manifest(dir: &Path) -> Option<Vec<ZooEntry>> {
             batch: e.field("batch").ok()?.as_usize().ok()?,
             model: resolve(dir, e.field("model").ok()?.as_str().ok()?),
             hlo,
+            hlo_declared,
             name,
         });
     }
@@ -137,6 +149,7 @@ pub fn write_zoo(dir: &Path) -> Result<Vec<ZooEntry>> {
             batch,
             model: path,
             hlo: dir.join(format!("{}.hlo.txt", model.name)),
+            hlo_declared: true,
         });
     }
     // Write-then-rename so a concurrent reader never sees a torn manifest.
@@ -149,10 +162,25 @@ pub fn write_zoo(dir: &Path) -> Result<Vec<ZooEntry>> {
 
 /// Idempotent entry point: reuse an existing usable manifest (Rust- or
 /// Python-written), else (re)generate the hermetic zoo.
+///
+/// A *stale* Rust-written hermetic manifest — explicit `hlo` paths, none
+/// of them built, missing models the current zoo defines — is rebuilt so
+/// newly added gates (e.g. `residual_mlp`) actually run. Python-exporter
+/// manifests (no `hlo` fields) and AOT artifact sets (HLO files present)
+/// are never clobbered.
 pub fn ensure_zoo(dir: &Path) -> Result<Vec<ZooEntry>> {
     if let Some(entries) = read_manifest(dir) {
-        if !entries.is_empty() && entries.iter().all(|e| e.model.exists()) {
-            return Ok(entries);
+        let usable = !entries.is_empty() && entries.iter().all(|e| e.model.exists());
+        if usable {
+            let names: std::collections::HashSet<&str> =
+                entries.iter().map(|e| e.name.as_str()).collect();
+            let covers_zoo =
+                zoo_models().iter().all(|(m, _)| names.contains(m.name.as_str()));
+            let stale_hermetic = entries.iter().any(|e| e.hlo_declared)
+                && !entries.iter().any(|e| e.hlo.exists());
+            if covers_zoo || !stale_hermetic {
+                return Ok(entries);
+            }
         }
     }
     write_zoo(dir)
@@ -167,21 +195,21 @@ mod tests {
     fn zoo_is_deterministic() {
         let a = zoo_models();
         let b = zoo_models();
-        assert_eq!(a.len(), 4);
+        assert_eq!(a.len(), 5);
         for ((ma, _), (mb, _)) in a.iter().zip(&b) {
             assert_eq!(ma.name, mb.name);
             assert_eq!(ma.layers[0].weights, mb.layers[0].weights);
         }
-        // Mirrors the Python MODEL_ZOO names.
+        // Mirrors the Python MODEL_ZOO names, plus the Rust-only DAG entry.
         let names: Vec<&str> = a.iter().map(|(m, _)| m.name.as_str()).collect();
-        assert_eq!(names, ["quickstart", "mlp7", "token_mixer", "mlp_i16i8"]);
+        assert_eq!(names, ["quickstart", "mlp7", "token_mixer", "mlp_i16i8", "residual_mlp"]);
     }
 
     #[test]
     fn ensure_zoo_writes_and_reuses() {
         let dir = ScratchDir::new("zoo").unwrap();
         let first = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(first.len(), 4);
+        assert_eq!(first.len(), 5);
         for e in &first {
             assert!(e.model.exists(), "{} missing", e.model.display());
             // Written models parse back into valid exporter JSON.
@@ -191,8 +219,52 @@ mod tests {
         }
         // Second call reuses the manifest (same paths, no rewrite needed).
         let second = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(second.len(), 4);
+        assert_eq!(second.len(), 5);
         assert_eq!(second[0].model, first[0].model);
+    }
+
+    #[test]
+    fn stale_rust_manifest_regenerated() {
+        // A Rust-written hermetic manifest from before the DAG entry
+        // (explicit hlo path, file not built, residual_mlp missing) must be
+        // rebuilt — otherwise the residual bit-exactness gate silently skips.
+        let dir = ScratchDir::new("zoo_stale").unwrap();
+        ensure_zoo(dir.path()).unwrap(); // materializes models/
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"[{"name": "quickstart", "batch": 8,
+                 "model": "models/quickstart.json", "hlo": "quickstart.hlo.txt"}]"#,
+        )
+        .unwrap();
+        let entries = ensure_zoo(dir.path()).unwrap();
+        assert_eq!(entries.len(), 5);
+        assert!(entries.iter().any(|e| e.name == "residual_mlp"));
+        // With the HLO artifact actually present, the same truncated
+        // manifest is an AOT set and must be preserved verbatim.
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"[{"name": "quickstart", "batch": 8,
+                 "model": "models/quickstart.json", "hlo": "quickstart.hlo.txt"}]"#,
+        )
+        .unwrap();
+        std::fs::write(dir.path().join("quickstart.hlo.txt"), "HloModule m").unwrap();
+        let entries = ensure_zoo(dir.path()).unwrap();
+        assert_eq!(entries.len(), 1);
+    }
+
+    #[test]
+    fn residual_zoo_entry_is_a_dag() {
+        let zoo = zoo_models();
+        let (m, batch) = &zoo[4];
+        assert_eq!(m.name, "residual_mlp");
+        assert_eq!(*batch, 16);
+        assert_eq!(m.layers[2].ty, "add");
+        assert_eq!(m.layers[2].inputs, vec!["input", "fc2"]);
+        // The DAG round-trips through the written JSON.
+        let text = m.to_json_string();
+        let back = JsonModel::from_str(&text).unwrap();
+        back.to_graph().unwrap();
+        assert_eq!(back.layers[2].inputs, vec!["input", "fc2"]);
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! The AIE-IR graph: a DAG of nodes connected by activation edges.
 //!
-//! AIE4ML networks are (for the operator classes the paper evaluates —
-//! MLPs and MLP-Mixer sub-blocks) layer *chains*; the graph structure still
-//! models general fan-out so the memory-tile planner can broadcast one
-//! producer to several consumers.
+//! Networks are true DAGs, not layer chains: a producer may fan out to
+//! several consumers (one mem-tile buffer per edge, the producer
+//! broadcasting to each consumer's read tiler), and fan-in is expressed
+//! with explicit merge nodes — [`OpKind::Add`] for residual connections
+//! (elementwise i32 add, saturating store) and [`OpKind::Concat`] for
+//! feature concatenation. Merge inputs are ordered by edge insertion.
+//! The network output is the graph's *unique sink*; multi-output graphs
+//! are rejected until multi-output drains land.
 
 use super::node::{Node, NodeId, OpKind};
 use std::collections::HashMap;
@@ -21,6 +25,10 @@ pub enum GraphError {
     Cyclic,
     #[error("shape mismatch on edge {from}->{to}: producer {produced} features, consumer expects {expected}")]
     ShapeMismatch { from: NodeId, to: NodeId, produced: usize, expected: usize },
+    #[error("graph has {0} sink nodes; exactly one network output is supported")]
+    MultipleSinks(usize),
+    #[error("node {node} ('{name}') has {found} inputs, which its operator does not support")]
+    ArityMismatch { node: NodeId, name: String, found: usize },
 }
 
 /// A directed activation edge.
@@ -66,6 +74,57 @@ impl Graph {
 
     pub fn successors(&self, id: NodeId) -> Vec<NodeId> {
         self.edges.iter().filter(|e| e.from == id).map(|e| e.to).collect()
+    }
+
+    /// Walk from `id` through non-dense nodes (merges, ReLU) to the nearest
+    /// dense nodes in the given direction; Input/Output terminate a walk.
+    /// The single skip-list for "which ops are transparent to dataflow" —
+    /// placement's block-graph edges and emission's merge-buffer columns
+    /// both rely on it.
+    fn dense_neighbors(&self, id: NodeId, forward: bool) -> Vec<NodeId> {
+        let step = |n: NodeId| if forward { self.successors(n) } else { self.predecessors(n) };
+        let mut out = Vec::new();
+        let mut seen: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+        let mut stack = step(id);
+        while let Some(n) = stack.pop() {
+            if !seen.insert(n) {
+                continue;
+            }
+            match self.nodes[n].op {
+                OpKind::Dense { .. } => out.push(n),
+                OpKind::Input { .. } | OpKind::Output => {}
+                _ => stack.extend(step(n)),
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Dense nodes whose outputs (transitively, through merge/ReLU nodes)
+    /// feed `id`'s input, sorted by id.
+    pub fn dense_ancestors(&self, id: NodeId) -> Vec<NodeId> {
+        self.dense_neighbors(id, false)
+    }
+
+    /// Dense nodes that (transitively, through merge/ReLU nodes) consume
+    /// `id`'s output, sorted by id.
+    pub fn dense_descendants(&self, id: NodeId) -> Vec<NodeId> {
+        self.dense_neighbors(id, true)
+    }
+
+    /// Dense nodes fed *directly* by the network input, in topological
+    /// order — the layers whose input quantization defines the network
+    /// input buffer (graph planning and emission must agree on this set).
+    pub fn input_fed_dense(&self) -> Result<Vec<NodeId>, GraphError> {
+        Ok(self
+            .dense_order()?
+            .into_iter()
+            .filter(|&id| {
+                self.predecessors(id)
+                    .iter()
+                    .any(|&p| matches!(self.nodes[p].op, OpKind::Input { .. }))
+            })
+            .collect())
     }
 
     /// Topological order of all node ids. Errors on cycles.
@@ -121,35 +180,126 @@ impl Graph {
             .ok_or(GraphError::NoInput)
     }
 
-    /// Output feature count (out_features of the last dense layer).
-    pub fn output_features(&self) -> Result<usize, GraphError> {
-        let dense = self.dense_order()?;
-        let last = *dense.last().ok_or(GraphError::NoOutput)?;
-        Ok(self.nodes[last].dense_dims().unwrap().1)
+    /// Feature count produced by a node's output, following ReLU nodes back
+    /// to their producer. `None` for Output markers (they produce nothing).
+    pub fn produced_features(&self, id: NodeId) -> Option<usize> {
+        let mut id = id;
+        for _ in 0..=self.nodes.len() {
+            match self.nodes.get(id)?.op {
+                OpKind::Input { features } => return Some(features),
+                OpKind::Dense { out_features, .. } => return Some(out_features),
+                OpKind::Add { features } | OpKind::Concat { features } => return Some(features),
+                OpKind::ReLU => id = *self.predecessors(id).first()?,
+                OpKind::Output => return None,
+            }
+        }
+        None // cycle of ReLU nodes
     }
 
-    /// Validate shape compatibility along every dense→dense edge and from
-    /// the input node into the first dense layer.
+    /// The unique sink node (no outgoing edges). Errors when the graph has
+    /// no sink or more than one (multi-output models are not supported yet).
+    pub fn output_node(&self) -> Result<NodeId, GraphError> {
+        let sinks: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| self.successors(n.id).is_empty())
+            .map(|n| n.id)
+            .collect();
+        match sinks.len() {
+            0 => Err(GraphError::NoOutput),
+            1 => Ok(sinks[0]),
+            n => Err(GraphError::MultipleSinks(n)),
+        }
+    }
+
+    /// The node whose value is the network output: the unique sink, skipping
+    /// an `Output` marker back to its single predecessor.
+    pub fn output_producer(&self) -> Result<NodeId, GraphError> {
+        let sink = self.output_node()?;
+        if !matches!(self.nodes[sink].op, OpKind::Output) {
+            return Ok(sink);
+        }
+        let preds = self.predecessors(sink);
+        match preds.len() {
+            1 => Ok(preds[0]),
+            0 => Err(GraphError::NoOutput),
+            n => Err(GraphError::MultipleSinks(n)),
+        }
+    }
+
+    /// Output feature count of the network, derived from the unique sink
+    /// (not from "the last dense in topological order" — a DAG's final
+    /// node may be a residual merge).
+    pub fn output_features(&self) -> Result<usize, GraphError> {
+        let id = self.output_producer()?;
+        self.produced_features(id).ok_or(GraphError::NoOutput)
+    }
+
+    /// Validate per-node input arity and shape compatibility along every
+    /// edge: dense layers take one input of `in_features`, Add merges take
+    /// N ≥ 2 inputs of exactly `features` each, Concat merges take N ≥ 2
+    /// inputs whose widths sum to `features`.
     pub fn validate_shapes(&self) -> Result<(), GraphError> {
-        let feat_out = |n: &Node| -> Option<usize> {
-            match n.op {
-                OpKind::Input { features } => Some(features),
-                OpKind::Dense { out_features, .. } => Some(out_features),
-                _ => None,
+        for n in &self.nodes {
+            let preds = self.predecessors(n.id);
+            let arity_ok = match n.op {
+                OpKind::Input { .. } => preds.is_empty(),
+                OpKind::Dense { .. } | OpKind::ReLU | OpKind::Output => preds.len() == 1,
+                OpKind::Add { .. } | OpKind::Concat { .. } => preds.len() >= 2,
+            };
+            if !arity_ok {
+                return Err(GraphError::ArityMismatch {
+                    node: n.id,
+                    name: n.name.clone(),
+                    found: preds.len(),
+                });
             }
-        };
-        for e in &self.edges {
-            let from = self.node(e.from)?;
-            let to = self.node(e.to)?;
-            if let (Some(produced), OpKind::Dense { in_features, .. }) = (feat_out(from), &to.op) {
-                if produced != *in_features {
-                    return Err(GraphError::ShapeMismatch {
-                        from: e.from,
-                        to: e.to,
-                        produced,
-                        expected: *in_features,
-                    });
+            match n.op {
+                OpKind::Dense { in_features, .. } => {
+                    if let Some(produced) = self.produced_features(preds[0]) {
+                        if produced != in_features {
+                            return Err(GraphError::ShapeMismatch {
+                                from: preds[0],
+                                to: n.id,
+                                produced,
+                                expected: in_features,
+                            });
+                        }
+                    }
                 }
+                OpKind::Add { features } => {
+                    for &p in &preds {
+                        if let Some(produced) = self.produced_features(p) {
+                            if produced != features {
+                                return Err(GraphError::ShapeMismatch {
+                                    from: p,
+                                    to: n.id,
+                                    produced,
+                                    expected: features,
+                                });
+                            }
+                        }
+                    }
+                }
+                OpKind::Concat { features } => {
+                    let mut sum = 0usize;
+                    let mut known = true;
+                    for &p in &preds {
+                        match self.produced_features(p) {
+                            Some(f) => sum += f,
+                            None => known = false,
+                        }
+                    }
+                    if known && sum != features {
+                        return Err(GraphError::ShapeMismatch {
+                            from: preds[0],
+                            to: n.id,
+                            produced: sum,
+                            expected: features,
+                        });
+                    }
+                }
+                _ => {}
             }
         }
         Ok(())
@@ -190,6 +340,30 @@ pub fn sequential_mlp(features: &[usize], relu_hidden: bool) -> Graph {
     }
     let out = g.add_node("output", OpKind::Output);
     g.connect(prev, out);
+    g
+}
+
+/// Convenience constructor: a residual block
+/// `input -> fc1(ReLU) -> fc2`, with `add(input, fc2)` as the network
+/// output — the smallest graph exercising fan-out and fan-in.
+pub fn residual_block(features: usize, hidden: usize) -> Graph {
+    let mut g = Graph::new();
+    let input = g.add_node("input", OpKind::Input { features });
+    let fc1 = g.add_node(
+        "fc1",
+        OpKind::Dense { in_features: features, out_features: hidden, use_bias: true, fused_relu: true },
+    );
+    let fc2 = g.add_node(
+        "fc2",
+        OpKind::Dense { in_features: hidden, out_features: features, use_bias: true, fused_relu: false },
+    );
+    let res = g.add_node("res", OpKind::Add { features });
+    let out = g.add_node("output", OpKind::Output);
+    g.connect(input, fc1);
+    g.connect(fc1, fc2);
+    g.connect(input, res);
+    g.connect(fc2, res);
+    g.connect(res, out);
     g
 }
 
@@ -244,5 +418,117 @@ mod tests {
         let dense = g.dense_order().unwrap();
         assert!(g.node(dense[0]).unwrap().fused_relu());
         assert!(!g.node(dense[1]).unwrap().fused_relu());
+    }
+
+    #[test]
+    fn residual_block_validates_and_reports_shapes() {
+        let g = residual_block(64, 128);
+        g.validate_shapes().unwrap();
+        assert_eq!(g.input_features().unwrap(), 64);
+        // The network output is the Add merge's width, not the last dense's.
+        assert_eq!(g.output_features().unwrap(), 64);
+        let dense = g.dense_order().unwrap();
+        assert_eq!(dense.len(), 2);
+        // Fan-out: the input feeds both fc1 and the residual merge.
+        assert_eq!(g.successors(0).len(), 2);
+    }
+
+    #[test]
+    fn dense_neighbor_queries() {
+        // residual_block ids: 0=input, 1=fc1, 2=fc2, 3=res(Add), 4=output.
+        let g = residual_block(64, 128);
+        assert_eq!(g.dense_ancestors(3), vec![2]); // through the merge, input stops
+        assert!(g.dense_descendants(3).is_empty()); // Output terminates
+        assert_eq!(g.dense_descendants(0), vec![1]); // fc1 directly; res is transparent
+        assert_eq!(g.dense_ancestors(2), vec![1]);
+        assert_eq!(g.input_fed_dense().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn fanin_shape_mismatch_detected() {
+        // fc produces 32 features but the Add merge expects 64 on both arms.
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 64 });
+        let d = g.add_node(
+            "fc",
+            OpKind::Dense { in_features: 64, out_features: 32, use_bias: false, fused_relu: false },
+        );
+        let a = g.add_node("res", OpKind::Add { features: 64 });
+        g.connect(i, d);
+        g.connect(i, a);
+        g.connect(d, a);
+        assert!(matches!(
+            g.validate_shapes(),
+            Err(GraphError::ShapeMismatch { produced: 32, expected: 64, .. })
+        ));
+    }
+
+    #[test]
+    fn concat_width_sum_checked() {
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 16 });
+        let a = g.add_node(
+            "a",
+            OpKind::Dense { in_features: 16, out_features: 8, use_bias: false, fused_relu: false },
+        );
+        let b = g.add_node(
+            "b",
+            OpKind::Dense { in_features: 16, out_features: 4, use_bias: false, fused_relu: false },
+        );
+        let c = g.add_node("cat", OpKind::Concat { features: 12 });
+        g.connect(i, a);
+        g.connect(i, b);
+        g.connect(a, c);
+        g.connect(b, c);
+        g.validate_shapes().unwrap();
+        assert_eq!(g.output_features().unwrap(), 12);
+        // Wrong declared width trips the sum check.
+        let mut bad = g.clone();
+        bad.nodes[c].op = OpKind::Concat { features: 13 };
+        assert!(matches!(bad.validate_shapes(), Err(GraphError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn merge_arity_enforced() {
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 8 });
+        let a = g.add_node("res", OpKind::Add { features: 8 });
+        g.connect(i, a);
+        assert!(matches!(g.validate_shapes(), Err(GraphError::ArityMismatch { found: 1, .. })));
+    }
+
+    #[test]
+    fn cycle_through_merge_detected() {
+        // fc -> add -> fc closes a loop; topo order must report Cyclic.
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 8 });
+        let d = g.add_node(
+            "fc",
+            OpKind::Dense { in_features: 8, out_features: 8, use_bias: false, fused_relu: false },
+        );
+        let a = g.add_node("res", OpKind::Add { features: 8 });
+        g.connect(i, a);
+        g.connect(d, a);
+        g.connect(a, d);
+        assert!(matches!(g.topo_order(), Err(GraphError::Cyclic)));
+        assert!(matches!(g.dense_order(), Err(GraphError::Cyclic)));
+    }
+
+    #[test]
+    fn multiple_sinks_rejected() {
+        // Two unconsumed dense layers -> no unique network output.
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 8 });
+        let a = g.add_node(
+            "a",
+            OpKind::Dense { in_features: 8, out_features: 4, use_bias: false, fused_relu: false },
+        );
+        let b = g.add_node(
+            "b",
+            OpKind::Dense { in_features: 8, out_features: 2, use_bias: false, fused_relu: false },
+        );
+        g.connect(i, a);
+        g.connect(i, b);
+        assert!(matches!(g.output_features(), Err(GraphError::MultipleSinks(2))));
     }
 }

@@ -9,7 +9,7 @@ pub mod graph;
 pub mod node;
 pub mod quant;
 
-pub use graph::{sequential_mlp, Edge, Graph, GraphError};
+pub use graph::{residual_block, sequential_mlp, Edge, Graph, GraphError};
 pub use node::{
     AieAttrs, CascadeGeometry, DenseQuant, Node, NodeId, OpKind, PlacementRect,
 };

@@ -26,6 +26,14 @@ pub enum OpKind {
     },
     /// Standalone activation (fused into Dense by Lowering when possible).
     ReLU,
+    /// Residual fan-in: elementwise add of two or more activations of
+    /// identical shape and quantization. The sum is taken in i32 (wrapping,
+    /// like the hardware accumulator) and stored through an SRS with shift 0
+    /// — a pure saturation, since all operands share one binary point.
+    Add { features: usize },
+    /// Feature-dimension concatenation of two or more activations (inputs
+    /// ordered by edge insertion). `features` is the total output width.
+    Concat { features: usize },
     /// Network output marker.
     Output,
 }
@@ -34,11 +42,17 @@ impl OpKind {
     pub fn is_dense(&self) -> bool {
         matches!(self, OpKind::Dense { .. })
     }
+    /// Is this a multi-input merge node (residual Add / Concat)?
+    pub fn is_merge(&self) -> bool {
+        matches!(self, OpKind::Add { .. } | OpKind::Concat { .. })
+    }
     pub fn name(&self) -> &'static str {
         match self {
             OpKind::Input { .. } => "input",
             OpKind::Dense { .. } => "dense",
             OpKind::ReLU => "relu",
+            OpKind::Add { .. } => "add",
+            OpKind::Concat { .. } => "concat",
             OpKind::Output => "output",
         }
     }

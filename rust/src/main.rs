@@ -160,7 +160,7 @@ fn main() -> Result<()> {
                 }
                 None => {
                     let mut rng = Pcg32::seed_from_u64(0);
-                    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+                    let (lo, hi) = fw.input_quant.dtype.range();
                     Activation::new(
                         batch,
                         features,
@@ -203,7 +203,7 @@ fn main() -> Result<()> {
             let compiled = compile(&json, cfg)?;
             let fw = compiled.firmware.as_ref().unwrap();
             fw.check_invariants()?;
-            let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+            let (lo, hi) = fw.input_quant.dtype.range();
             let mut rng = Pcg32::seed_from_u64(seed);
             let x = Activation::new(
                 batch,
@@ -280,7 +280,7 @@ fn main() -> Result<()> {
             let compiled = compile(&json, cfg)?;
             let fw = std::sync::Arc::new(compiled.firmware.clone().unwrap());
             let features = fw.input_features();
-            let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+            let (lo, hi) = fw.input_quant.dtype.range();
             let server = aie4ml::coordinator::Server::spawn(
                 fw,
                 std::time::Duration::from_micros(max_wait_us as u64),

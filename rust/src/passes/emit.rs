@@ -10,11 +10,56 @@
 //! [`crate::codegen::render`] from the same structure.
 
 use super::{resolve::batch_chunk, Model, Pass};
-use crate::codegen::firmware::{Firmware, FirmwareLayer, KernelInst};
-use anyhow::{bail, Context, Result};
+use crate::codegen::firmware::{
+    Firmware, FirmwareLayer, FirmwareStage, KernelInst, MergeOp, MergeStage, StageRef, StageSource,
+};
+use crate::ir::{Graph, NodeId, OpKind, QuantSpec};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 
 pub struct Emission;
+
+/// Resolve a graph predecessor into a stage source.
+fn stage_source(
+    graph: &Graph,
+    p: NodeId,
+    stage_of: &HashMap<NodeId, usize>,
+) -> Result<StageSource> {
+    if matches!(graph.nodes[p].op, OpKind::Input { .. }) {
+        return Ok(StageSource::Input);
+    }
+    stage_of
+        .get(&p)
+        .copied()
+        .map(StageSource::Stage)
+        .with_context(|| format!("node '{}' not yet emitted: stage DAG not topological", graph.nodes[p].name))
+}
+
+/// Physical column for a merge buffer: below the west-most input column of
+/// its (transitive) dense consumers, where the broadcasts originate; a
+/// sink merge instead drains below its dense producers' output columns.
+fn merge_mem_col(
+    graph: &Graph,
+    id: NodeId,
+    layer_idx: &HashMap<NodeId, usize>,
+    layers: &[FirmwareLayer],
+) -> usize {
+    let col_of = |ids: Vec<NodeId>, input_side: bool| -> Option<usize> {
+        ids.iter()
+            .filter_map(|n| layer_idx.get(n))
+            .map(|&li| {
+                if input_side {
+                    layers[li].placement.input_col()
+                } else {
+                    layers[li].placement.output_col()
+                }
+            })
+            .min()
+    };
+    col_of(graph.dense_descendants(id), true)
+        .or_else(|| col_of(graph.dense_ancestors(id), false))
+        .unwrap_or(0)
+}
 
 impl Pass for Emission {
     fn name(&self) -> &'static str {
@@ -93,12 +138,94 @@ impl Pass for Emission {
             });
         }
 
+        // --- Stage DAG ---------------------------------------------------
+        // Walk the full graph in topological order, wiring dense and merge
+        // stages to their producers (the chain is the degenerate case where
+        // every stage has exactly one input, the previous stage).
+        let layer_idx: HashMap<NodeId, usize> =
+            dense.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        let topo = model.graph.topo_order()?;
+        let mut stages: Vec<FirmwareStage> = Vec::new();
+        let mut merges: Vec<MergeStage> = Vec::new();
+        let mut stage_of: HashMap<NodeId, usize> = HashMap::new();
+        for &id in &topo {
+            let node = model.graph.node(id)?;
+            match node.op {
+                OpKind::Dense { .. } => {
+                    let preds = model.graph.predecessors(id);
+                    ensure!(preds.len() == 1, "layer '{}' must have one input", node.name);
+                    let src = stage_source(&model.graph, preds[0], &stage_of)?;
+                    stages.push(FirmwareStage { op: StageRef::Layer(layer_idx[&id]), inputs: vec![src] });
+                    stage_of.insert(id, stages.len() - 1);
+                }
+                OpKind::Add { features } | OpKind::Concat { features } => {
+                    let mut plan = program
+                        .merge_plans
+                        .get(&id)
+                        .cloned()
+                        .with_context(|| format!("merge '{}': no mem-tile plan", node.name))?;
+                    plan.mem_col = merge_mem_col(&model.graph, id, &layer_idx, &layers)
+                        .min(model.device.mem_tiles.saturating_sub(1));
+                    let inputs = model
+                        .graph
+                        .predecessors(id)
+                        .into_iter()
+                        .map(|p| stage_source(&model.graph, p, &stage_of))
+                        .collect::<Result<Vec<_>>>()?;
+                    merges.push(MergeStage {
+                        name: node.name.clone(),
+                        node_id: id,
+                        op: if matches!(node.op, OpKind::Add { .. }) {
+                            MergeOp::Add
+                        } else {
+                            MergeOp::Concat
+                        },
+                        features,
+                        quant: plan.quant,
+                        plan,
+                    });
+                    stages.push(FirmwareStage {
+                        op: StageRef::Merge(merges.len() - 1),
+                        inputs,
+                    });
+                    stage_of.insert(id, stages.len() - 1);
+                }
+                _ => {}
+            }
+        }
+        let sink = model.graph.output_producer()?;
+        let output_stage = *stage_of
+            .get(&sink)
+            .context("network output is not produced by an emitted stage")?;
+
+        // Network input width + quantization: every dense layer fed directly
+        // by the input must agree on its input spec.
+        let in_features = model.graph.input_features()?;
+        let mut input_quant: Option<QuantSpec> = None;
+        for id in model.graph.input_fed_dense()? {
+            let node = model.graph.node(id)?;
+            let spec = node.attrs.quant.context("quantize: quant")?.input;
+            match input_quant {
+                None => input_quant = Some(spec),
+                Some(s) if s == spec => {}
+                Some(s) => bail!(
+                    "input-fed layers disagree on input quantization: {} frac {} vs '{}' {} frac {}",
+                    s.dtype,
+                    s.frac_bits,
+                    node.name,
+                    spec.dtype,
+                    spec.frac_bits
+                ),
+            }
+        }
+        let input_quant = input_quant.context("no dense layer consumes the network input")?;
+
         let mut output_plan = program.output_plan.context("graph-planning: output plan")?;
-        output_plan.mem_col = layers
-            .last()
-            .map(|l| l.placement.output_col())
-            .unwrap_or(0)
-            .min(model.device.mem_tiles.saturating_sub(1));
+        output_plan.mem_col = match stages[output_stage].op {
+            StageRef::Layer(li) => layers[li].placement.output_col(),
+            StageRef::Merge(mi) => merges[mi].plan.mem_col,
+        }
+        .min(model.device.mem_tiles.saturating_sub(1));
 
         // --- Memory-tile allocation audit --------------------------------
         // A buffer is sharded over `columns` memory tiles starting at its
@@ -106,16 +233,21 @@ impl Pass for Emission {
         // memory tile. Sum the per-column footprints and reject any column
         // that exceeds the 512 KiB SRAM (the hardware allocator would).
         let mut usage: HashMap<usize, usize> = HashMap::new();
-        let mut charge = |plan: &crate::codegen::firmware::MemTilePlan| {
-            for c in 0..plan.columns {
-                let col = (plan.mem_col + c).min(model.device.mem_tiles.saturating_sub(1));
-                *usage.entry(col).or_default() += plan.per_column_bytes();
+        {
+            let mut charge = |mem_col: usize, columns: usize, per_column: usize| {
+                for c in 0..columns {
+                    let col = (mem_col + c).min(model.device.mem_tiles.saturating_sub(1));
+                    *usage.entry(col).or_default() += per_column;
+                }
+            };
+            for l in &layers {
+                charge(l.input_plan.mem_col, l.input_plan.columns, l.input_plan.per_column_bytes());
             }
-        };
-        for l in &layers {
-            charge(&l.input_plan);
+            for m in &merges {
+                charge(m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes());
+            }
+            charge(output_plan.mem_col, output_plan.columns, output_plan.per_column_bytes());
         }
-        charge(&output_plan);
         for (col, bytes) in &usage {
             if *bytes > model.device.mem_tile_bytes {
                 bail!(
@@ -129,6 +261,11 @@ impl Pass for Emission {
             model_name: model.name.clone(),
             device: model.device.clone(),
             layers,
+            merges,
+            stages,
+            output_stage,
+            in_features,
+            input_quant,
             output_plan,
             batch: model.config.batch,
         });
@@ -196,5 +333,64 @@ mod tests {
         assert_eq!(fw.input_features(), 512);
         assert_eq!(fw.output_features(), 512);
         assert!(fw.tiles_used() <= fw.device.placeable_tiles());
+    }
+
+    #[test]
+    fn chain_stage_dag_is_a_chain() {
+        use crate::codegen::firmware::{StageRef, StageSource};
+        let json = mlp_json(&[128, 256, 64]);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+        assert_eq!(fw.stages.len(), 2);
+        assert!(fw.merges.is_empty());
+        assert_eq!(fw.stages[0].inputs, vec![StageSource::Input]);
+        assert_eq!(fw.stages[1].inputs, vec![StageSource::Stage(0)]);
+        assert!(matches!(fw.stages[0].op, StageRef::Layer(0)));
+        assert_eq!(fw.output_stage, 1);
+        assert_eq!(fw.input_quant.dtype, crate::arch::Dtype::I8);
+    }
+
+    #[test]
+    fn residual_emits_merge_stage() {
+        use crate::codegen::firmware::{MergeOp, StageRef, StageSource};
+        use crate::frontend::JsonLayer;
+        let json = JsonModel::new(
+            "res",
+            vec![
+                JsonLayer::dense("fc1", 64, 96, true, true, "int8", "int8", 6, vec![1; 64 * 96], vec![0; 96]),
+                JsonLayer::dense("fc2", 96, 64, true, false, "int8", "int8", 6, vec![1; 96 * 64], vec![0; 64]),
+                JsonLayer::residual_add("res", 64, "int8", 6, &["input", "fc2"]),
+                JsonLayer::dense("head", 64, 10, true, false, "int8", "int8", 6, vec![1; 640], vec![0; 10])
+                    .with_inputs(&["res"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+        fw.check_invariants().unwrap();
+        assert_eq!(fw.layers.len(), 3);
+        assert_eq!(fw.merges.len(), 1);
+        assert_eq!(fw.stages.len(), 4);
+        assert_eq!(fw.merges[0].op, MergeOp::Add);
+        // The merge stage reads the network input and fc2's stage.
+        let merge_stage = fw
+            .stages
+            .iter()
+            .position(|s| matches!(s.op, StageRef::Merge(0)))
+            .unwrap();
+        assert!(fw.stages[merge_stage].inputs.contains(&StageSource::Input));
+        assert_eq!(fw.stages[merge_stage].inputs.len(), 2);
+        // The head consumes the merge; the merge's buffer column tracks the
+        // head's input column.
+        let head = fw.layers.iter().find(|l| l.name == "head").unwrap();
+        assert_eq!(fw.merges[0].plan.mem_col, head.placement.input_col());
+        assert_eq!(fw.output_features(), 10);
+        // Output drains from the head (a dense sink), as in chains.
+        assert_eq!(fw.output_plan.mem_col, head.placement.output_col());
+        // firmware.json gains the DAG description for merge models.
+        let js = fw.to_json().unwrap();
+        assert!(js.contains("\"merges\""));
+        assert!(js.contains("\"stages\""));
     }
 }

@@ -1,18 +1,25 @@
 //! Pass 5 — Graph planning: explicit compute-graph ↔ memory-tile wiring.
 //!
-//! Each inter-layer edge becomes a double-buffered memory-tile buffer with
-//! independent write and read tilers (paper §III-C): `layer_i` writes results
-//! in {M_i, N_i} tiles while `layer_{i+1}` reads them in {M_{i+1}, K_{i+1}}
-//! tiles; the read side zero-pads up to the consumer's padded input extent
-//! so arbitrary layer shapes connect without touching kernel code. Mixed
-//! precision is handled naturally because each buffer carries its own dtype
-//! and the two tilers need not agree on block shape.
+//! Every *edge* of the DAG gets a mem-tile buffer with independent write
+//! and read tilers (paper §III-C): the producer writes results in its
+//! {M, N} store tiles while the consumer reads them in {M, K} tiles; the
+//! read side zero-pads up to the consumer's padded input extent so
+//! arbitrary layer shapes connect without touching kernel code. A producer
+//! with several consumers broadcasts into one buffer per consumer (each
+//! with its own read tiler), so fan-out costs no extra kernel work. Merge
+//! nodes (residual `Add`, `Concat`) are planned as **multi-input buffers**:
+//! one write tiler per producer landing into a shared row-major buffer the
+//! consumers then read like any other activation. Mixed precision is
+//! handled naturally because each buffer carries its own dtype and the
+//! tilers need not agree on block shape.
 //!
 //! The physical memory-tile column is fixed later (after Placement) by the
 //! Emission pass; this pass resolves everything shape-level.
 
 use super::{Model, Pass};
-use crate::codegen::firmware::MemTilePlan;
+use crate::arch::Dtype;
+use crate::codegen::firmware::{MemTilePlan, MergePlan};
+use crate::ir::{NodeId, OpKind, QuantSpec};
 use crate::sim::dma::Tiler2d;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -20,11 +27,65 @@ use std::collections::HashMap;
 pub struct GraphPlanning;
 
 /// All mem-tile programs of a model: one input plan per dense layer
-/// (keyed by consumer node id) plus the network output drain.
+/// (keyed by consumer node id), one multi-input buffer per merge node
+/// (keyed by the merge node id), plus the network output drain.
 #[derive(Debug, Clone, Default)]
 pub struct MemTileProgram {
     pub input_plans: HashMap<usize, MemTilePlan>,
+    pub merge_plans: HashMap<usize, MergePlan>,
     pub output_plan: Option<MemTilePlan>,
+}
+
+/// The network input's quantization, taken from the first dense layer fed
+/// directly by the Input node ([`crate::ir::Graph::input_fed_dense`];
+/// Emission later validates that *all* input-fed layers agree). `None`
+/// when no dense layer reads the input directly — impossible for graphs
+/// the frontend builds.
+fn network_input_spec(model: &Model) -> Option<QuantSpec> {
+    let fed = model.graph.input_fed_dense().ok()?;
+    let id = *fed.first()?;
+    model.graph.nodes[id].attrs.quant.map(|q| q.input)
+}
+
+/// Producer-side description of one edge: the write tiler laying the
+/// producer's activation into the consumer's buffer, and the resolved
+/// store spec (`None` only when the producer is the network input and no
+/// input spec could be derived).
+fn producer_side(
+    model: &Model,
+    producer: NodeId,
+    batch: usize,
+    row_tile_cols: usize,
+    input_spec: Option<QuantSpec>,
+    merge_specs: &HashMap<NodeId, QuantSpec>,
+) -> Result<(Tiler2d, Option<QuantSpec>)> {
+    let pn = model.graph.node(producer)?;
+    match pn.op {
+        OpKind::Input { features } => {
+            // Network input: row-major, modeled as 1-row tiles.
+            Ok((Tiler2d::new(batch, features, 1, row_tile_cols.max(1)), input_spec))
+        }
+        OpKind::Dense { out_features, .. } => {
+            let pt = pn
+                .attrs
+                .tiling
+                .with_context(|| format!("producer '{}' has no tiling", pn.name))?;
+            let pq = pn
+                .attrs
+                .quant
+                .with_context(|| format!("producer '{}' has no quant", pn.name))?;
+            Ok((Tiler2d::new(batch, out_features, pt.m, pt.n), Some(pq.output)))
+        }
+        OpKind::Add { features } | OpKind::Concat { features } => {
+            let spec = merge_specs
+                .get(&producer)
+                .copied()
+                .with_context(|| format!("merge producer '{}' not yet planned", pn.name))?;
+            // Merge buffers are row-major.
+            Ok((Tiler2d::new(batch, features, 1, row_tile_cols.max(1)), Some(spec)))
+        }
+        _ => bail!("node '{}' cannot produce activations", pn.name),
+    }
 }
 
 impl Pass for GraphPlanning {
@@ -33,78 +94,169 @@ impl Pass for GraphPlanning {
     }
 
     fn run(&self, model: &mut Model) -> Result<()> {
-        let dense = model.graph.dense_order()?;
+        let topo = model.graph.topo_order()?;
         let batch = model.config.batch;
         let mut program = MemTileProgram::default();
+        // The network input's quantization (for edges and merge arms fed by
+        // the raw input) and the resolved store spec of every planned merge
+        // node (needed when a merge feeds another merge or a dense layer).
+        let input_spec = network_input_spec(model);
+        let mut merge_specs: HashMap<NodeId, QuantSpec> = HashMap::new();
 
-        for (i, &id) in dense.iter().enumerate() {
+        for &id in &topo {
             let node = model.graph.node(id)?;
-            let name = node.name.clone();
-            let (f_in, _) = node.dense_dims().unwrap();
-            let tiling = node.attrs.tiling.with_context(|| format!("{name}: no tiling"))?;
-            let geo = node.attrs.cascade.with_context(|| format!("{name}: no cascade"))?;
-            let q = node.attrs.quant.unwrap();
+            match node.op {
+                OpKind::Dense { .. } => {
+                    let name = node.name.clone();
+                    let (f_in, _) = node.dense_dims().unwrap();
+                    let tiling = node.attrs.tiling.with_context(|| format!("{name}: no tiling"))?;
+                    let geo = node.attrs.cascade.with_context(|| format!("{name}: no cascade"))?;
+                    let q = node.attrs.quant.unwrap();
 
-            // Producer side: network input (row-major, modeled as 1xK tiles)
-            // or the previous dense layer's {M, N} store tiles.
-            let (write_tiler, prod_dtype) = if i == 0 {
-                (Tiler2d::new(batch, f_in, 1, tiling.k), q.input.dtype)
-            } else {
-                let prev = model.graph.node(dense[i - 1])?;
-                let pt = prev.attrs.tiling.unwrap();
-                let pq = prev.attrs.quant.unwrap();
-                let (_, prev_out) = prev.dense_dims().unwrap();
-                (Tiler2d::new(batch, prev_out, pt.m, pt.n), pq.output.dtype)
-            };
-            if prod_dtype != q.input.dtype {
-                bail!(
-                    "edge into '{name}': producer dtype {} != consumer input dtype {}",
-                    prod_dtype,
-                    q.input.dtype
-                );
+                    let preds = model.graph.predecessors(id);
+                    if preds.len() != 1 {
+                        bail!("layer '{name}' has {} inputs; dense layers take one", preds.len());
+                    }
+                    let (write_tiler, prod_spec) =
+                        producer_side(model, preds[0], batch, tiling.k, input_spec, &merge_specs)?;
+                    if let Some(spec) = prod_spec {
+                        if spec.dtype != q.input.dtype {
+                            bail!(
+                                "edge into '{name}': producer dtype {} != consumer input dtype {}",
+                                spec.dtype,
+                                q.input.dtype
+                            );
+                        }
+                    }
+                    // Consumer side: read {M, K} tiles over the *padded*
+                    // input extent (zero padding injected by the mem-tile DMA).
+                    let read_tiler = Tiler2d::new(batch, geo.f_in_padded(), tiling.m, tiling.k);
+                    let buffer_bytes = batch * f_in * q.input.dtype.bytes();
+                    program.input_plans.insert(
+                        id,
+                        MemTilePlan {
+                            mem_col: 0, // finalized by Emission after Placement
+                            write_tiler,
+                            read_tiler,
+                            buffer_bytes,
+                            ping_pong: true,
+                            dtype: q.input.dtype,
+                            columns: geo.cas_len,
+                        },
+                    );
+                }
+                OpKind::Add { features } | OpKind::Concat { features } => {
+                    let name = node.name.clone();
+                    let is_add = matches!(node.op, OpKind::Add { .. });
+                    let preds = model.graph.predecessors(id);
+                    if preds.len() < 2 {
+                        bail!("merge '{name}' has {} inputs; merges take at least two", preds.len());
+                    }
+                    let mut spec: Option<QuantSpec> = None;
+                    let mut write_tilers = Vec::with_capacity(preds.len());
+                    for &p in &preds {
+                        let pf = model
+                            .graph
+                            .produced_features(p)
+                            .with_context(|| format!("merge '{name}': producer has no width"))?;
+                        let (wt, pspec) = producer_side(model, p, batch, pf, input_spec, &merge_specs)?;
+                        write_tilers.push(wt);
+                        if let Some(ps) = pspec {
+                            match spec {
+                                None => spec = Some(ps),
+                                Some(s) if s == ps => {}
+                                Some(s) => bail!(
+                                    "merge '{name}': input quantization disagrees \
+                                     ({} frac {} vs {} frac {})",
+                                    s.dtype,
+                                    s.frac_bits,
+                                    ps.dtype,
+                                    ps.frac_bits
+                                ),
+                            }
+                        }
+                    }
+                    let spec = spec.with_context(|| {
+                        format!("merge '{name}': every input is the raw network input")
+                    })?;
+                    if is_add && spec.dtype == Dtype::I32 {
+                        bail!("merge '{name}': i32 activations cannot be re-stored");
+                    }
+                    merge_specs.insert(id, spec);
+                    program.merge_plans.insert(
+                        id,
+                        MergePlan {
+                            mem_col: 0, // finalized by Emission after Placement
+                            write_tilers,
+                            features,
+                            buffer_bytes: batch * features * spec.dtype.bytes(),
+                            ping_pong: true,
+                            quant: spec,
+                            columns: 1,
+                        },
+                    );
+                }
+                _ => {}
             }
-            // Consumer side: read {M, K} tiles over the *padded* input extent
-            // (zero padding injected by the mem-tile DMA).
-            let read_tiler = Tiler2d::new(batch, geo.f_in_padded(), tiling.m, tiling.k);
-            let buffer_bytes = batch * f_in * q.input.dtype.bytes();
-            program.input_plans.insert(
-                id,
-                MemTilePlan {
-                    mem_col: 0, // finalized by Emission after Placement
-                    write_tiler,
-                    read_tiler,
-                    buffer_bytes,
-                    ping_pong: true,
-                    dtype: q.input.dtype,
-                    columns: geo.cas_len,
-                },
-            );
         }
 
-        // Output drain: last layer's {M, N} tiles back to row-major.
-        let last = model.graph.node(*dense.last().unwrap())?;
-        let lt = last.attrs.tiling.unwrap();
-        let lq = last.attrs.quant.unwrap();
-        let (_, f_out) = last.dense_dims().unwrap();
-        let last_geo = last.attrs.cascade.unwrap();
-        program.output_plan = Some(MemTilePlan {
-            mem_col: 0,
-            write_tiler: Tiler2d::new(batch, f_out, lt.m, lt.n),
-            read_tiler: Tiler2d::new(batch, f_out, 1, f_out.max(1)),
-            buffer_bytes: batch * f_out * lq.output.dtype.bytes(),
-            ping_pong: true,
-            dtype: lq.output.dtype,
-            columns: last_geo.cas_num.max(1),
-        });
+        // Output drain: the unique sink's store order back to row-major.
+        let sink = model.graph.output_producer()?;
+        let sink_node = model.graph.node(sink)?;
+        let output_plan = match sink_node.op {
+            OpKind::Dense { .. } => {
+                let lt = sink_node.attrs.tiling.unwrap();
+                let lq = sink_node.attrs.quant.unwrap();
+                let (_, f_out) = sink_node.dense_dims().unwrap();
+                let last_geo = sink_node.attrs.cascade.unwrap();
+                MemTilePlan {
+                    mem_col: 0,
+                    write_tiler: Tiler2d::new(batch, f_out, lt.m, lt.n),
+                    read_tiler: Tiler2d::new(batch, f_out, 1, f_out.max(1)),
+                    buffer_bytes: batch * f_out * lq.output.dtype.bytes(),
+                    ping_pong: true,
+                    dtype: lq.output.dtype,
+                    columns: last_geo.cas_num.max(1),
+                }
+            }
+            OpKind::Add { features } | OpKind::Concat { features } => {
+                let spec = merge_specs[&sink];
+                MemTilePlan {
+                    mem_col: 0,
+                    write_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
+                    read_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
+                    buffer_bytes: batch * features * spec.dtype.bytes(),
+                    ping_pong: true,
+                    dtype: spec.dtype,
+                    columns: 1,
+                }
+            }
+            _ => bail!(
+                "network output must be produced by a dense or merge node, not '{}'",
+                sink_node.name
+            ),
+        };
+        program.output_plan = Some(output_plan);
 
-        // Capacity check: the buffer is sharded across the cascade columns'
-        // memory tiles (512 KiB each); every shard's ping-pong pair must
-        // fit a single tile's SRAM.
+        // Capacity check: each buffer is sharded across its memory-tile
+        // columns (512 KiB each); every shard's ping-pong pair must fit a
+        // single tile's SRAM.
         for (id, plan) in &program.input_plans {
             if plan.per_column_bytes() > model.device.mem_tile_bytes {
                 let name = &model.graph.node(*id)?.name;
                 bail!(
                     "layer '{name}': mem-tile shard {} B exceeds capacity {} B \
+                     (reduce batch or split the activation)",
+                    plan.per_column_bytes(),
+                    model.device.mem_tile_bytes
+                );
+            }
+        }
+        for (id, plan) in &program.merge_plans {
+            if plan.per_column_bytes() > model.device.mem_tile_bytes {
+                let name = &model.graph.node(*id)?.name;
+                bail!(
+                    "merge '{name}': mem-tile buffer {} B exceeds capacity {} B \
                      (reduce batch or split the activation)",
                     plan.per_column_bytes(),
                     model.device.mem_tile_bytes
@@ -125,11 +277,11 @@ mod tests {
 
     use crate::frontend::JsonLayer;
 
-    fn planned(layers: Vec<JsonLayer>, batch: usize) -> Model {
-        let jm = JsonModel::new("m", layers);
+    fn run_through_planning(jm: &JsonModel, batch: usize) -> Result<Model> {
         let mut c = CompileConfig::default();
         c.batch = batch;
-        let mut m = Model::new("m", jm.to_graph().unwrap(), c).unwrap();
+        let graph = jm.to_graph().map_err(anyhow::Error::from)?;
+        let mut m = Model::new("m", graph, c)?;
         for p in [
             &Lowering as &dyn Pass,
             &Quantization,
@@ -137,9 +289,13 @@ mod tests {
             &Packing,
             &GraphPlanning,
         ] {
-            p.run(&mut m).unwrap();
+            p.run(&mut m)?;
         }
-        m
+        Ok(m)
+    }
+
+    fn planned(layers: Vec<JsonLayer>, batch: usize) -> Model {
+        run_through_planning(&JsonModel::new("m", layers), batch).unwrap()
     }
 
     fn layer(name: &str, fin: usize, fout: usize, act: &str) -> JsonLayer {
@@ -165,6 +321,7 @@ mod tests {
         );
         let prog = m.memtile_plans.as_ref().unwrap();
         assert_eq!(prog.input_plans.len(), 2);
+        assert!(prog.merge_plans.is_empty());
         assert!(prog.output_plan.is_some());
     }
 
@@ -196,26 +353,99 @@ mod tests {
             "m",
             vec![layer("fc1", 64, 64, "int8"), layer("fc2", 64, 64, "int16")],
         );
-        let mut m = Model::new("m", jm.to_graph().unwrap(), CompileConfig::default()).unwrap();
-        Lowering.run(&mut m).unwrap();
-        Quantization.run(&mut m).unwrap();
-        Resolve.run(&mut m).unwrap();
-        Packing.run(&mut m).unwrap();
         // fc1 stores int8 but fc2 expects int16 inputs -> planning must fail.
-        assert!(GraphPlanning.run(&mut m).is_err());
+        assert!(run_through_planning(&jm, 8).is_err());
     }
 
     #[test]
     fn oversized_buffer_rejected() {
         // batch 4096 x 8192 int8 activations = 32 MiB >> 512 KiB mem tile.
         let jm = JsonModel::new("m", vec![layer("fc1", 8192, 64, "int8")]);
-        let mut c = CompileConfig::default();
-        c.batch = 4096;
-        let mut m = Model::new("m", jm.to_graph().unwrap(), c).unwrap();
-        Lowering.run(&mut m).unwrap();
-        Quantization.run(&mut m).unwrap();
-        Resolve.run(&mut m).unwrap();
-        Packing.run(&mut m).unwrap();
-        assert!(GraphPlanning.run(&mut m).is_err());
+        assert!(run_through_planning(&jm, 4096).is_err());
+    }
+
+    fn residual_layers() -> Vec<JsonLayer> {
+        vec![
+            layer("fc1", 64, 96, "int8"),
+            JsonLayer::dense("fc2", 96, 64, true, false, "int8", "int8", 0, vec![0; 96 * 64], vec![0; 64]),
+            JsonLayer::residual_add("res", 64, "int8", 0, &["input", "fc2"]),
+            JsonLayer::dense("head", 64, 10, true, false, "int8", "int8", 0, vec![0; 640], vec![0; 10])
+                .with_inputs(&["res"]),
+        ]
+    }
+
+    #[test]
+    fn merge_node_planned_as_multi_input_buffer() {
+        let m = planned(residual_layers(), 16);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        assert_eq!(prog.input_plans.len(), 3); // fc1, fc2, head
+        assert_eq!(prog.merge_plans.len(), 1);
+        let res = m.graph.nodes.iter().find(|n| n.name == "res").unwrap().id;
+        let mp = &prog.merge_plans[&res];
+        // Two writers: the network input (row-major) and fc2 ({M,N} tiles).
+        assert_eq!(mp.write_tilers.len(), 2);
+        assert_eq!(mp.features, 64);
+        assert_eq!(mp.buffer_bytes, 16 * 64);
+        let fc2 = m.graph.nodes.iter().find(|n| n.name == "fc2").unwrap();
+        let t2 = fc2.attrs.tiling.unwrap();
+        assert!(mp
+            .write_tilers
+            .iter()
+            .any(|w| (w.tile_rows, w.tile_cols) == (t2.m, t2.n)));
+        // The head reads the merge buffer through a row-major write side.
+        let head = m.graph.nodes.iter().find(|n| n.name == "head").unwrap().id;
+        let hp = &prog.input_plans[&head];
+        assert_eq!(hp.write_tiler.tile_rows, 1);
+        assert_eq!(hp.write_tiler.cols, 64);
+    }
+
+    #[test]
+    fn merge_quant_disagreement_rejected() {
+        // Branch `a` stores int8, branch `b` int16 -> the shared merge
+        // buffer cannot reconcile the two store specs. The frontend gate
+        // rejects this before planning (and planning re-checks internally
+        // for IR-built graphs).
+        let layers = vec![
+            layer("a", 32, 32, "int8"),
+            JsonLayer::dense("b", 32, 32, true, false, "int16", "int16", 0, vec![0; 1024], vec![0; 32])
+                .with_inputs(&["input"]),
+            JsonLayer::residual_add("res", 32, "int8", 0, &["a", "b"]),
+        ];
+        let jm = JsonModel::new("m", layers);
+        let err = run_through_planning(&jm, 8).unwrap_err().to_string();
+        assert!(err.contains("quantization disagrees"), "{err}");
+    }
+
+    #[test]
+    fn merge_input_arm_quant_checked() {
+        // The raw-input skip arm participates in the agreement check too:
+        // fc2 stores frac 2 while the network input is frac 0.
+        let layers = vec![
+            JsonLayer::dense("fc1", 16, 16, true, false, "int8", "int8", 0, vec![0; 256], vec![0; 16]),
+            JsonLayer::dense("fc2", 16, 16, true, false, "int8", "int8", 2, vec![0; 256], vec![0; 16]),
+            JsonLayer::residual_add("res", 16, "int8", 2, &["input", "fc2"]),
+        ];
+        let jm = JsonModel::new("m", layers);
+        let err = run_through_planning(&jm, 4).unwrap_err().to_string();
+        assert!(err.contains("quantization disagrees"), "{err}");
+    }
+
+    #[test]
+    fn concat_buffer_covers_total_width() {
+        let layers = vec![
+            layer("a", 32, 48, "int8"),
+            JsonLayer::dense("b", 32, 16, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 16])
+                .with_inputs(&["input"]),
+            JsonLayer::concat("cat", 64, "int8", 0, &["a", "b"]),
+            JsonLayer::dense("head", 64, 8, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 8])
+                .with_inputs(&["cat"]),
+        ];
+        let m = planned(layers, 8);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let cat = m.graph.nodes.iter().find(|n| n.name == "cat").unwrap().id;
+        let mp = &prog.merge_plans[&cat];
+        assert_eq!(mp.features, 64);
+        assert_eq!(mp.write_tilers.len(), 2);
+        assert_eq!(mp.buffer_bytes, 8 * 64);
     }
 }

@@ -22,7 +22,11 @@ impl Pass for Lowering {
         // Every remaining node must be mappable.
         for n in &model.graph.nodes {
             match n.op {
-                OpKind::Input { .. } | OpKind::Dense { .. } | OpKind::Output => {}
+                OpKind::Input { .. }
+                | OpKind::Dense { .. }
+                | OpKind::Add { .. }
+                | OpKind::Concat { .. }
+                | OpKind::Output => {}
                 OpKind::ReLU => {
                     bail!(
                         "node '{}': standalone ReLU without a preceding dense layer \

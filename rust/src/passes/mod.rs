@@ -11,9 +11,11 @@
 //! 4. **Packing** — reorganizes stationary tensors into tiled, aligned
 //!    layouts expected by the `aie::mmul` intrinsics.
 //! 5. **Graph-planning** — determines explicit connections between compute
-//!    graphs and memory tiles (write/read tiler pairs).
+//!    graphs and memory tiles: one write/read tiler pair per DAG edge,
+//!    merge nodes (residual Add / Concat) as multi-input buffers.
 //! 6. **Placement** — maps layers onto the physical 2D grid via
-//!    branch-and-bound search.
+//!    branch-and-bound search over the block-graph edges (fan-out blocks
+//!    pay one Eq. 2 hop term per consumer).
 //! 7. **Project emission** — instantiates layer templates and renders the
 //!    firmware package.
 
@@ -31,7 +33,10 @@ use crate::frontend::{CompileConfig, JsonModel};
 use crate::ir::Graph;
 use anyhow::Result;
 
-pub use placement::{greedy_above, greedy_right, place_bnb, PlacementReport, PlacementStrategy};
+pub use placement::{
+    dense_block_edges, graph_cost, greedy_above, greedy_above_graph, greedy_right,
+    greedy_right_graph, place_bnb, place_bnb_graph, PlacementReport, PlacementStrategy,
+};
 
 /// The mutable compilation state threaded through the pass pipeline.
 #[derive(Debug, Clone)]

@@ -2,19 +2,24 @@
 //!
 //! Each layer is a rectangular block (width = CAS_LEN, height = CAS_NUM).
 //! The branch-and-bound search enumerates feasible, non-overlapping
-//! placements, incrementally accumulating the weighted objective (Eq. 2)
+//! placements, incrementally accumulating the weighted objective (Eq. 2),
+//! generalized from consecutive layer pairs to the **edges of the block
+//! graph** — a block with several successors (fan-out) pays one hop term
+//! per consumer, and a fan-in block pays one per producer:
 //!
 //! ```text
-//! J = Σᵢ ( |c_out^i − c_in^{i+1}| + λ·|r_out^i − r_in^{i+1}| + µ·r_top^i )
+//! J = Σᵢ µ·r_top^i  +  Σ_{(p,c) ∈ E} ( |c_out^p − c_in^c| + λ·|r_out^p − r_in^c| )
 //! ```
 //!
-//! and prunes partial assignments as soon as they cannot improve on the
-//! incumbent. Constrained coordinates from the user config are hard
-//! constraints. Two greedy baselines (always-right, always-above) reproduce
-//! the comparison in Fig. 3.
+//! A chain is the degenerate graph with E = {(i, i+1)}, for which the
+//! objective (and the search trajectory) reduce exactly to the original
+//! formulation. The search prunes partial assignments as soon as they
+//! cannot improve on the incumbent. Constrained coordinates from the user
+//! config are hard constraints. Two greedy baselines (always-right,
+//! always-above) reproduce the comparison in Fig. 3.
 
 use super::{Model, Pass};
-use crate::ir::PlacementRect;
+use crate::ir::{Graph, NodeId, PlacementRect};
 use anyhow::{bail, Result};
 use std::time::Instant;
 
@@ -72,28 +77,65 @@ pub struct PlacementProblem {
     pub max_nodes: usize,
 }
 
-/// Total Eq. 2 cost of a full placement (chain order).
-pub fn chain_cost(rects: &[PlacementRect], lambda: f64, mu: f64) -> f64 {
+/// The degenerate edge set of a chain: every block feeds the next.
+pub fn chain_edges(n: usize) -> Vec<(usize, usize)> {
+    (1..n).map(|i| (i - 1, i)).collect()
+}
+
+/// Total Eq. 2 cost of a full placement over an explicit block-graph edge
+/// set (`edges[(p, c)]` = block `p` feeds block `c`).
+pub fn graph_cost(
+    rects: &[PlacementRect],
+    edges: &[(usize, usize)],
+    lambda: f64,
+    mu: f64,
+) -> f64 {
     let mut j = 0.0;
-    for (i, r) in rects.iter().enumerate() {
+    for r in rects {
         j += mu * r.top_row() as f64;
-        if i + 1 < rects.len() {
-            let next = &rects[i + 1];
-            j += (r.output_col() as f64 - next.input_col() as f64).abs();
-            j += lambda * (r.output_row() as f64 - next.input_row() as f64).abs();
-        }
+    }
+    for &(p, c) in edges {
+        j += (rects[p].output_col() as f64 - rects[c].input_col() as f64).abs();
+        j += lambda * (rects[p].output_row() as f64 - rects[c].input_row() as f64).abs();
     }
     j
 }
 
-/// Incremental cost of appending `rect` after `prev` (if any).
-fn incremental_cost(prev: Option<&PlacementRect>, rect: &PlacementRect, lambda: f64, mu: f64) -> f64 {
+/// Total Eq. 2 cost of a full placement (chain order).
+pub fn chain_cost(rects: &[PlacementRect], lambda: f64, mu: f64) -> f64 {
+    graph_cost(rects, &chain_edges(rects.len()), lambda, mu)
+}
+
+/// Incremental cost of placing `rect`: its row term plus the hop cost of
+/// every edge from an already-placed producer (blocks are placed in
+/// topological order, so all of `preds` are in `current`).
+fn incremental_cost(
+    current: &[PlacementRect],
+    preds: &[usize],
+    rect: &PlacementRect,
+    lambda: f64,
+    mu: f64,
+) -> f64 {
     let mut c = mu * rect.top_row() as f64;
-    if let Some(p) = prev {
-        c += (p.output_col() as f64 - rect.input_col() as f64).abs();
-        c += lambda * (p.output_row() as f64 - rect.input_row() as f64).abs();
+    for &p in preds {
+        let pr = &current[p];
+        c += (pr.output_col() as f64 - rect.input_col() as f64).abs();
+        c += lambda * (pr.output_row() as f64 - rect.input_row() as f64).abs();
     }
     c
+}
+
+/// Per-block producer lists from an edge set; errors unless every edge is
+/// forward (`p < c`) so the DFS can cost edges as soon as `c` is placed.
+fn preds_per_block(n: usize, edges: &[(usize, usize)]) -> Result<Vec<Vec<usize>>> {
+    let mut preds = vec![Vec::new(); n];
+    for &(p, c) in edges {
+        if c >= n || p >= c {
+            bail!("block-graph edge ({p}, {c}) is not a forward edge over {n} blocks");
+        }
+        preds[c].push(p);
+    }
+    Ok(preds)
 }
 
 /// Occupancy grid for overlap tests: one u64 column bitmask per row
@@ -130,10 +172,24 @@ impl Occupancy {
     }
 }
 
-/// Branch-and-bound placement over a chain of blocks.
+/// Branch-and-bound placement over a chain of blocks (the degenerate
+/// block graph; see [`place_bnb_graph`]).
 pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<PlacementReport> {
+    place_bnb_graph(blocks, &chain_edges(blocks.len()), prob)
+}
+
+/// Branch-and-bound placement over an explicit block graph: `edges[(p, c)]`
+/// means block `p`'s output feeds block `c`'s input, and the Eq. 2 hop
+/// terms are summed over exactly these edges (fan-out blocks appear as `p`
+/// in several edges, fan-in blocks as `c`).
+pub fn place_bnb_graph(
+    blocks: &[BlockSpec],
+    edges: &[(usize, usize)],
+    prob: &PlacementProblem,
+) -> Result<PlacementReport> {
     let t0 = Instant::now();
     validate_blocks(blocks, prob)?;
+    let preds_of = preds_per_block(blocks.len(), edges)?;
 
     // Lower bound on the cost contribution of each not-yet-placed block:
     // at best it sits at row 0 (r_top = height-1) with zero hop cost.
@@ -149,6 +205,7 @@ pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<Placem
         blocks: &'a [BlockSpec],
         prob: &'a PlacementProblem,
         tail_bound: &'a [f64],
+        preds_of: &'a [Vec<usize>],
         occ: Occupancy,
         current: Vec<PlacementRect>,
         best: Option<(f64, Vec<PlacementRect>)>,
@@ -159,7 +216,7 @@ pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<Placem
     impl Search<'_> {
         fn candidates(&self, idx: usize, cost: f64) -> Vec<(f64, PlacementRect)> {
             let b = &self.blocks[idx];
-            let prev = self.current.last();
+            let preds = &self.preds_of[idx];
             // Only candidates strictly below the incumbent bound can matter;
             // filtering before the sort keeps the hot path small.
             let threshold = self
@@ -186,7 +243,7 @@ pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<Placem
                 if !rect.fits(self.prob.cols, self.prob.rows) || !self.occ.is_free(&rect) {
                     continue;
                 }
-                let c = incremental_cost(prev, &rect, self.prob.lambda, self.prob.mu);
+                let c = incremental_cost(&self.current, preds, &rect, self.prob.lambda, self.prob.mu);
                 if c < threshold - 1e-12 {
                     out.push((c, rect));
                 }
@@ -238,6 +295,7 @@ pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<Placem
         blocks,
         prob,
         tail_bound: &tail_bound,
+        preds_of: &preds_of,
         occ: Occupancy::new(prob.cols, prob.rows),
         current: Vec::with_capacity(blocks.len()),
         best: None,
@@ -254,7 +312,7 @@ pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<Placem
         // Take the best of whatever succeeded so B&B never returns a
         // placement worse than its own baselines.
         for strat in [PlacementStrategy::GreedyRight, PlacementStrategy::GreedyAbove] {
-            if let Ok(g) = greedy(blocks, prob, strat) {
+            if let Ok(g) = greedy(blocks, edges, prob, strat) {
                 if best.as_ref().map(|(c, _)| g.cost < *c).unwrap_or(true) {
                     best = Some((g.cost, g.rects));
                 }
@@ -278,22 +336,42 @@ pub fn place_bnb(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<Placem
 /// right of the previous one (same row); on column overflow, start a new
 /// band above everything placed so far.
 pub fn greedy_right(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<PlacementReport> {
-    greedy(blocks, prob, PlacementStrategy::GreedyRight)
+    greedy(blocks, &chain_edges(blocks.len()), prob, PlacementStrategy::GreedyRight)
 }
 
 /// Greedy baseline (c): always place the next graph directly above the
 /// previous one; on row overflow, move right past the previous block.
 pub fn greedy_above(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<PlacementReport> {
-    greedy(blocks, prob, PlacementStrategy::GreedyAbove)
+    greedy(blocks, &chain_edges(blocks.len()), prob, PlacementStrategy::GreedyAbove)
+}
+
+/// [`greedy_right`] with an explicit block-graph edge set for the cost.
+pub fn greedy_right_graph(
+    blocks: &[BlockSpec],
+    edges: &[(usize, usize)],
+    prob: &PlacementProblem,
+) -> Result<PlacementReport> {
+    greedy(blocks, edges, prob, PlacementStrategy::GreedyRight)
+}
+
+/// [`greedy_above`] with an explicit block-graph edge set for the cost.
+pub fn greedy_above_graph(
+    blocks: &[BlockSpec],
+    edges: &[(usize, usize)],
+    prob: &PlacementProblem,
+) -> Result<PlacementReport> {
+    greedy(blocks, edges, prob, PlacementStrategy::GreedyAbove)
 }
 
 fn greedy(
     blocks: &[BlockSpec],
+    edges: &[(usize, usize)],
     prob: &PlacementProblem,
     strategy: PlacementStrategy,
 ) -> Result<PlacementReport> {
     let t0 = Instant::now();
     validate_blocks(blocks, prob)?;
+    preds_per_block(blocks.len(), edges)?;
     let mut occ = Occupancy::new(prob.cols, prob.rows);
     let mut rects: Vec<PlacementRect> = Vec::with_capacity(blocks.len());
     for (i, b) in blocks.iter().enumerate() {
@@ -316,7 +394,7 @@ fn greedy(
         occ.set(&rect, true);
         rects.push(rect);
     }
-    let cost = chain_cost(&rects, prob.lambda, prob.mu);
+    let cost = graph_cost(&rects, edges, prob.lambda, prob.mu);
     Ok(PlacementReport {
         strategy,
         rects,
@@ -407,7 +485,28 @@ fn validate_blocks(blocks: &[BlockSpec], prob: &PlacementProblem) -> Result<()> 
     Ok(())
 }
 
-/// The IR pass: build blocks from dense layers, solve, attach rects.
+/// Block-graph edges between dense layers, as (producer, consumer) index
+/// pairs into `dense`. Dataflow is traced through merge nodes: the merge
+/// buffer sits below its consumer's input column, so every dense ancestor
+/// of a consumer's input pays a hop term to the consumer. A dense layer
+/// with several (transitive) dense consumers yields several edges —
+/// fan-out in the Eq. 2 objective.
+pub fn dense_block_edges(graph: &Graph, dense: &[NodeId]) -> Vec<(usize, usize)> {
+    let index: std::collections::HashMap<NodeId, usize> =
+        dense.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    let mut edges = std::collections::BTreeSet::new();
+    for (ci, &c) in dense.iter().enumerate() {
+        for p in graph.dense_ancestors(c) {
+            if let Some(&pi) = index.get(&p) {
+                edges.insert((pi, ci));
+            }
+        }
+    }
+    edges.into_iter().collect()
+}
+
+/// The IR pass: build blocks from dense layers, solve over the block-graph
+/// edges, attach rects.
 pub struct Placement;
 
 impl Pass for Placement {
@@ -430,6 +529,7 @@ impl Pass for Placement {
                 }
             })
             .collect();
+        let edges = dense_block_edges(&model.graph, &dense);
         let prob = PlacementProblem {
             cols: model.device.placeable_cols(),
             rows: model.device.rows,
@@ -438,7 +538,7 @@ impl Pass for Placement {
             start: model.config.start,
             max_nodes: model.config.bnb_max_nodes,
         };
-        let report = place_bnb(&blocks, &prob)?;
+        let report = place_bnb_graph(&blocks, &edges, &prob)?;
         for (&id, (rect, block)) in dense.iter().zip(report.rects.iter().zip(&blocks)) {
             let node = model.graph.node_mut(id)?;
             node.attrs.placement = Some(*rect);
@@ -581,5 +681,104 @@ mod tests {
         let rep = place_bnb(&bs, &p).unwrap();
         assert!(!rep.optimal);
         assert_eq!(rep.rects.len(), 5);
+    }
+
+    #[test]
+    fn chain_edges_reproduce_chain_cost_and_search() {
+        // The chain is the degenerate DAG: the graph solver over chain
+        // edges must return the identical placement and cost.
+        let bs = blocks(&[(4, 4), (8, 2), (4, 4), (6, 3)]);
+        let p = prob();
+        let a = place_bnb(&bs, &p).unwrap();
+        let b = place_bnb_graph(&bs, &chain_edges(bs.len()), &p).unwrap();
+        assert_eq!(a.rects, b.rects);
+        assert!((a.cost - b.cost).abs() < 1e-12);
+        assert_eq!(a.nodes_explored, b.nodes_explored);
+    }
+
+    #[test]
+    fn diamond_edges_shape_the_optimum() {
+        // Block 0 fans out to 1 and 2, which fan back into 3. The optimal
+        // layout keeps both branches adjacent to 0 and 3; a pure-chain
+        // objective would not know 3 reads 1 *and* 2.
+        let bs = blocks(&[(4, 4), (4, 4), (4, 4), (4, 4)]);
+        let edges = vec![(0, 1), (0, 2), (1, 3), (2, 3)];
+        let p = prob();
+        let rep = place_bnb_graph(&bs, &edges, &p).unwrap();
+        assert!(rep.optimal);
+        // Legal + disjoint.
+        for (i, a) in rep.rects.iter().enumerate() {
+            assert!(a.fits(p.cols, p.rows));
+            for b in &rep.rects[i + 1..] {
+                assert!(!a.overlaps(b));
+            }
+        }
+        // Reported cost matches the edge-weighted recomputation.
+        assert!((rep.cost - graph_cost(&rep.rects, &edges, p.lambda, p.mu)).abs() < 1e-9);
+        // Never worse than either greedy under the same objective.
+        let gr = greedy_right_graph(&bs, &edges, &p).unwrap();
+        let ga = greedy_above_graph(&bs, &edges, &p).unwrap();
+        assert!(rep.cost <= gr.cost + 1e-9);
+        assert!(rep.cost <= ga.cost + 1e-9);
+    }
+
+    #[test]
+    fn fanout_edges_penalize_distant_consumers() {
+        // One producer, two consumers: placing the consumers on opposite
+        // sides of the producer beats stacking them far away. Verify the
+        // cost model counts both outgoing edges.
+        let bs = blocks(&[(2, 2), (2, 2), (2, 2)]);
+        let edges = vec![(0, 1), (0, 2)];
+        let p = prob();
+        let rep = place_bnb_graph(&bs, &edges, &p).unwrap();
+        let cost_manual = graph_cost(&rep.rects, &edges, p.lambda, p.mu);
+        assert!((rep.cost - cost_manual).abs() < 1e-9);
+        // Moving consumer 2 far away must strictly increase the objective.
+        let mut far = rep.rects.clone();
+        far[2] = PlacementRect { col: 30, row: 5, width: 2, height: 2 };
+        assert!(graph_cost(&far, &edges, p.lambda, p.mu) > rep.cost + 1.0);
+    }
+
+    #[test]
+    fn non_forward_edges_rejected() {
+        let bs = blocks(&[(4, 4), (4, 4)]);
+        assert!(place_bnb_graph(&bs, &[(1, 0)], &prob()).is_err());
+        assert!(place_bnb_graph(&bs, &[(0, 5)], &prob()).is_err());
+    }
+
+    #[test]
+    fn dense_block_edges_trace_through_merges() {
+        use crate::ir::{residual_block, OpKind};
+        let g = residual_block(64, 128);
+        let dense = g.dense_order().unwrap();
+        // fc1 -> fc2 directly; no dense consumer after the sink merge.
+        assert_eq!(dense_block_edges(&g, &dense), vec![(0, 1)]);
+        // A diamond: stem -> {a, b} -> add -> head.
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 16 });
+        let dense_op = |fin: usize, fout: usize| OpKind::Dense {
+            in_features: fin,
+            out_features: fout,
+            use_bias: false,
+            fused_relu: false,
+        };
+        let stem = g.add_node("stem", dense_op(16, 16));
+        let a = g.add_node("a", dense_op(16, 16));
+        let b = g.add_node("b", dense_op(16, 16));
+        let add = g.add_node("res", OpKind::Add { features: 16 });
+        let head = g.add_node("head", dense_op(16, 4));
+        let out = g.add_node("out", OpKind::Output);
+        g.connect(i, stem);
+        g.connect(stem, a);
+        g.connect(stem, b);
+        g.connect(a, add);
+        g.connect(b, add);
+        g.connect(add, head);
+        g.connect(head, out);
+        let dense = g.dense_order().unwrap();
+        assert_eq!(
+            dense_block_edges(&g, &dense),
+            vec![(0, 1), (0, 2), (1, 3), (2, 3)]
+        );
     }
 }

@@ -6,7 +6,11 @@
 //! exporter JSON directly through [`reference_dense`] — unpacked row-major
 //! weights, wide accumulation, the same quantize → SRS → saturate → ReLU
 //! chain — sharing **no** code with the packed per-tile path the firmware
-//! simulator runs. Any divergence between the two implementations trips the
+//! simulator runs. The oracle executes the model as a **DAG**: layers name
+//! their producers (`inputs`, defaulting to the previous layer), residual
+//! `add` merges sum in wrapping i32 and saturate, `concat` merges splice
+//! features — mirroring the IR semantics without touching the pass
+//! pipeline. Any divergence between the two implementations trips the
 //! `oracle_bitexact` gate on a fresh checkout, without artifacts.
 //!
 //! With `--features pjrt` the AOT-compiled JAX/XLA artifact provides a third,
@@ -14,33 +18,59 @@
 
 use crate::arch::{Dtype, PrecisionPair};
 use crate::frontend::JsonModel;
-use crate::ir::{derive_shift, QuantSpec};
+use crate::ir::{derive_shift, srs_i32, QuantSpec};
 use crate::sim::functional::{reference_dense, Activation};
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 
 use super::oracle::OracleBackend;
 
-/// One dense layer in logical (unpacked) form.
-struct RefLayer {
-    name: String,
+/// Where a reference node reads an operand from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RefSource {
+    /// The network input batch.
+    Input,
+    /// The output of an earlier node (index into `ReferenceOracle::nodes`).
+    Node(usize),
+}
+
+/// A dense layer in logical (unpacked) form.
+struct RefDense {
     in_features: usize,
-    out_features: usize,
     /// Row-major `[out_features][in_features]`, exactly as exported.
     weights: Vec<i32>,
     bias: Option<Vec<i64>>,
-    input: QuantSpec,
-    output: QuantSpec,
     acc_dtype: Dtype,
     shift: u32,
     relu: bool,
 }
 
-/// The reference model: a chain of [`RefLayer`]s built straight from the
+enum RefOp {
+    Dense(RefDense),
+    /// Residual add: wrapping i32 sum, SRS(0) saturating store.
+    Add,
+    /// Feature concatenation in input order.
+    Concat,
+}
+
+/// One node of the reference DAG.
+struct RefNode {
+    name: String,
+    op: RefOp,
+    inputs: Vec<RefSource>,
+    out_features: usize,
+    output: QuantSpec,
+}
+
+/// The reference model: a DAG of [`RefNode`]s built straight from the
 /// exporter JSON (no pass pipeline involved).
 pub struct ReferenceOracle {
     name: String,
-    layers: Vec<RefLayer>,
+    nodes: Vec<RefNode>,
+    input_features: usize,
+    input_spec: QuantSpec,
+    /// The unique unconsumed node — the network output.
+    output_node: usize,
 }
 
 impl ReferenceOracle {
@@ -50,27 +80,111 @@ impl ReferenceOracle {
     /// the logical tensors, independent of tiling/packing/placement.
     pub fn from_model(json: &JsonModel) -> Result<ReferenceOracle> {
         json.validate().context("reference oracle: invalid model")?;
-        let mut layers = Vec::with_capacity(json.layers.len());
-        for l in &json.layers {
-            let input = l.quant.input.to_spec(&l.name)?;
-            let weight = l.quant.weight.to_spec(&l.name)?;
-            let output = l.quant.output.to_spec(&l.name)?;
-            let pair = PrecisionPair::new(input.dtype, weight.dtype);
-            layers.push(RefLayer {
-                name: l.name.clone(),
-                in_features: l.in_features,
-                out_features: l.out_features,
-                weights: l.weights.clone(),
-                bias: if l.use_bias { Some(l.bias.clone()) } else { None },
-                input,
-                output,
-                acc_dtype: pair.acc_dtype(),
-                shift: derive_shift(input.frac_bits, weight.frac_bits, output.frac_bits),
-                relu: l.relu,
-            });
+        let mut nodes: Vec<RefNode> = Vec::with_capacity(json.layers.len());
+        let mut by_name: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+        let input_spec = json.layers[0].quant.input.to_spec(&json.layers[0].name)?;
+        for (i, l) in json.layers.iter().enumerate() {
+            // Resolve producers: explicit names, or the previous layer.
+            let inputs: Vec<RefSource> = if l.inputs.is_empty() {
+                if i == 0 {
+                    vec![RefSource::Input]
+                } else {
+                    vec![RefSource::Node(i - 1)]
+                }
+            } else {
+                l.inputs
+                    .iter()
+                    .map(|src| {
+                        if src == "input" {
+                            Ok(RefSource::Input)
+                        } else {
+                            by_name.get(src.as_str()).copied().map(RefSource::Node).with_context(
+                                || format!("reference oracle: layer '{}' reads unknown '{src}'", l.name),
+                            )
+                        }
+                    })
+                    .collect::<Result<_>>()?
+            };
+            let node = match l.ty.as_str() {
+                "dense" => {
+                    let input = l.quant.input.to_spec(&l.name)?;
+                    let weight = l.quant.weight.to_spec(&l.name)?;
+                    let output = l.quant.output.to_spec(&l.name)?;
+                    let pair = PrecisionPair::new(input.dtype, weight.dtype);
+                    RefNode {
+                        name: l.name.clone(),
+                        op: RefOp::Dense(RefDense {
+                            in_features: l.in_features,
+                            weights: l.weights.clone(),
+                            bias: if l.use_bias { Some(l.bias.clone()) } else { None },
+                            acc_dtype: pair.acc_dtype(),
+                            shift: derive_shift(input.frac_bits, weight.frac_bits, output.frac_bits),
+                            relu: l.relu,
+                        }),
+                        inputs,
+                        out_features: l.out_features,
+                        output,
+                    }
+                }
+                "add" | "concat" => {
+                    // The merge's store spec comes from its producers (the
+                    // raw network input contributes the model input spec).
+                    let mut spec: Option<QuantSpec> = None;
+                    for src in &inputs {
+                        let s = match src {
+                            RefSource::Input => input_spec,
+                            RefSource::Node(j) => nodes[*j].output,
+                        };
+                        match spec {
+                            None => spec = Some(s),
+                            Some(prev) if prev == s => {}
+                            Some(prev) => bail!(
+                                "reference oracle: merge '{}' input quantization disagrees \
+                                 ({} frac {} vs {} frac {})",
+                                l.name,
+                                prev.dtype,
+                                prev.frac_bits,
+                                s.dtype,
+                                s.frac_bits
+                            ),
+                        }
+                    }
+                    let output = spec.context("reference oracle: merge has no inputs")?;
+                    RefNode {
+                        name: l.name.clone(),
+                        op: if l.ty == "add" { RefOp::Add } else { RefOp::Concat },
+                        inputs,
+                        out_features: l.out_features,
+                        output,
+                    }
+                }
+                other => bail!("reference oracle: unsupported layer type '{other}'"),
+            };
+            nodes.push(node);
+            by_name.insert(json.layers[i].name.as_str(), i);
         }
-        ensure!(!layers.is_empty(), "reference oracle: model has no layers");
-        Ok(ReferenceOracle { name: json.name.clone(), layers })
+        // The network output is the unique unconsumed node.
+        let mut consumed = vec![false; nodes.len()];
+        for n in &nodes {
+            for src in &n.inputs {
+                if let RefSource::Node(j) = src {
+                    consumed[*j] = true;
+                }
+            }
+        }
+        let sinks: Vec<usize> = (0..nodes.len()).filter(|&i| !consumed[i]).collect();
+        ensure!(
+            sinks.len() == 1,
+            "reference oracle: {} output sinks; exactly one is supported",
+            sinks.len()
+        );
+        Ok(ReferenceOracle {
+            name: json.name.clone(),
+            input_features: json.layers[0].in_features,
+            input_spec,
+            output_node: sinks[0],
+            nodes,
+        })
     }
 
     /// Build from a model JSON file.
@@ -86,14 +200,14 @@ impl ReferenceOracle {
     }
 
     pub fn input_features(&self) -> usize {
-        self.layers[0].in_features
+        self.input_features
     }
 
     pub fn output_features(&self) -> usize {
-        self.layers.last().unwrap().out_features
+        self.nodes[self.output_node].out_features
     }
 
-    /// Execute the whole chain on an integer batch.
+    /// Execute the whole DAG on an integer batch.
     pub fn execute(&self, input: &Activation) -> Result<Activation> {
         ensure!(
             input.features == self.input_features(),
@@ -101,33 +215,92 @@ impl ReferenceOracle {
             input.features,
             self.input_features()
         );
-        let (lo, hi) = self.layers[0].input.dtype.range();
+        let (lo, hi) = self.input_spec.dtype.range();
         ensure!(
             input.data.iter().all(|&x| (x as i64) >= lo && (x as i64) <= hi),
             "reference oracle: input values outside {} range",
-            self.layers[0].input.dtype
+            self.input_spec.dtype
         );
-        let mut act = input.clone();
-        for l in &self.layers {
-            ensure!(
-                act.features == l.in_features,
-                "reference oracle: layer '{}' expects {} features, got {}",
-                l.name,
-                l.in_features,
-                act.features
-            );
-            act = reference_dense(
-                &act,
-                &l.weights,
-                l.bias.as_deref(),
-                l.out_features,
-                l.shift,
-                l.output.dtype,
-                l.acc_dtype,
-                l.relu,
-            );
+        let mut outs: Vec<Option<Activation>> = (0..self.nodes.len()).map(|_| None).collect();
+        for (i, n) in self.nodes.iter().enumerate() {
+            let mut ins: Vec<&Activation> = Vec::with_capacity(n.inputs.len());
+            for src in &n.inputs {
+                ins.push(match src {
+                    RefSource::Input => input,
+                    RefSource::Node(j) => outs
+                        .get(*j)
+                        .and_then(|o| o.as_ref())
+                        .context("reference oracle: node order not topological")?,
+                });
+            }
+            let out = match &n.op {
+                RefOp::Dense(d) => {
+                    let a = ins[0];
+                    ensure!(
+                        a.features == d.in_features,
+                        "reference oracle: layer '{}' expects {} features, got {}",
+                        n.name,
+                        d.in_features,
+                        a.features
+                    );
+                    reference_dense(
+                        a,
+                        &d.weights,
+                        d.bias.as_deref(),
+                        n.out_features,
+                        d.shift,
+                        n.output.dtype,
+                        d.acc_dtype,
+                        d.relu,
+                    )
+                }
+                RefOp::Add => {
+                    let batch = ins[0].batch;
+                    for a in &ins {
+                        ensure!(
+                            a.features == n.out_features && a.batch == batch,
+                            "reference oracle: merge '{}' input shape mismatch",
+                            n.name
+                        );
+                    }
+                    let mut data = vec![0i32; batch * n.out_features];
+                    for a in &ins {
+                        for (acc, v) in data.iter_mut().zip(&a.data) {
+                            *acc = acc.wrapping_add(*v);
+                        }
+                    }
+                    for v in &mut data {
+                        *v = srs_i32(*v, 0, n.output.dtype);
+                    }
+                    Activation { batch, features: n.out_features, data }
+                }
+                RefOp::Concat => {
+                    let batch = ins[0].batch;
+                    let total: usize = ins.iter().map(|a| a.features).sum();
+                    ensure!(
+                        total == n.out_features && ins.iter().all(|a| a.batch == batch),
+                        "reference oracle: merge '{}' input shape mismatch",
+                        n.name
+                    );
+                    let mut data = vec![0i32; batch * n.out_features];
+                    let mut off = 0usize;
+                    for a in &ins {
+                        for b in 0..batch {
+                            data[b * n.out_features + off..b * n.out_features + off + a.features]
+                                .copy_from_slice(a.row(b));
+                        }
+                        off += a.features;
+                    }
+                    Activation { batch, features: n.out_features, data }
+                }
+            };
+            drop(ins);
+            outs[i] = Some(out);
         }
-        Ok(act)
+        outs
+            .get_mut(self.output_node)
+            .and_then(Option::take)
+            .context("reference oracle: output node missing")
     }
 }
 
@@ -198,6 +371,57 @@ mod tests {
         m.layers[0].quant.output.dtype = "int16".into();
         m.layers[1].quant.input.dtype = "int16".into();
         let oracle = ReferenceOracle::from_model(&m).unwrap();
-        assert_eq!(oracle.layers[0].acc_dtype, Dtype::I32);
+        match &oracle.nodes[0].op {
+            RefOp::Dense(d) => assert_eq!(d.acc_dtype, Dtype::I32),
+            _ => panic!("fc1 is dense"),
+        }
+    }
+
+    #[test]
+    fn executes_hand_checked_residual() {
+        // Identity fc (shift 0), then add(input, fc): y = sat(x + x) = 2x,
+        // saturating at the int8 rails.
+        let m = JsonModel::new(
+            "res",
+            vec![
+                JsonLayer::dense("fc", 2, 2, false, false, "int8", "int8", 0, vec![1, 0, 0, 1], vec![]),
+                JsonLayer::residual_add("res", 2, "int8", 0, &["input", "fc"]),
+            ],
+        );
+        let oracle = ReferenceOracle::from_model(&m).unwrap();
+        assert_eq!(oracle.output_features(), 2);
+        let x = Activation::new(1, 2, vec![30, 100]).unwrap();
+        let y = oracle.execute(&x).unwrap();
+        assert_eq!(y.data, vec![60, 127]); // 200 saturates to 127
+    }
+
+    #[test]
+    fn executes_hand_checked_concat() {
+        let m = JsonModel::new(
+            "cat",
+            vec![
+                JsonLayer::dense("a", 2, 1, false, false, "int8", "int8", 0, vec![1, 0], vec![]),
+                JsonLayer::dense("b", 2, 1, false, false, "int8", "int8", 0, vec![0, 1], vec![])
+                    .with_inputs(&["input"]),
+                JsonLayer::concat("cat", 2, "int8", 0, &["a", "b"]),
+            ],
+        );
+        let oracle = ReferenceOracle::from_model(&m).unwrap();
+        let x = Activation::new(2, 2, vec![5, -7, 9, 11]).unwrap();
+        let y = oracle.execute(&x).unwrap();
+        assert_eq!(y.data, vec![5, -7, 9, 11]);
+    }
+
+    #[test]
+    fn multiple_sinks_rejected() {
+        let m = JsonModel::new(
+            "two",
+            vec![
+                JsonLayer::dense("a", 2, 1, false, false, "int8", "int8", 0, vec![1, 0], vec![]),
+                JsonLayer::dense("b", 2, 1, false, false, "int8", "int8", 0, vec![0, 1], vec![])
+                    .with_inputs(&["input"]),
+            ],
+        );
+        assert!(ReferenceOracle::from_model(&m).is_err());
     }
 }

@@ -1,17 +1,22 @@
 //! Steady-state pipeline performance model over compiled firmware.
 //!
-//! Layers execute as a pipeline connected by double-buffered memory-tile
-//! buffers: while layer *i* computes batch *t*, layer *i+1* computes batch
+//! Stages execute as a pipeline connected by double-buffered memory-tile
+//! buffers: while stage *i* computes batch *t*, its consumers compute batch
 //! *t−1* and the mem-tile DMAs move batch *t+1* (ping-pong overlap,
-//! paper §III-C). The steady-state **output interval** is the slowest
-//! stage; **latency** is the sum of stage fill times along the chain.
+//! paper §III-C). The model runs over the firmware **stage DAG**: the
+//! steady-state **output interval** is the slowest stage anywhere in the
+//! DAG (every stage processes every batch), and **latency** is the longest
+//! fill path from the network input to the output stage — a fan-in waits
+//! for its slowest branch, and for a chain the longest path degenerates to
+//! the sum of stage fills, exactly the old model.
 //!
-//! Per-stage time is the max of (a) the cascade-tail kernel cycles for the
-//! batch (tails do strictly more work than heads/mids), (b) input DMA
-//! cycles through the memory-tile read channels, (c) output DMA cycles.
+//! Per-dense-stage time is the max of (a) the cascade-tail kernel cycles
+//! for the batch (tails do strictly more work than heads/mids), (b) input
+//! DMA cycles through the memory-tile read channels, (c) output DMA cycles.
+//! Merge stages are pure DMA work on the shared multi-input buffer.
 
 use crate::arch::Device;
-use crate::codegen::firmware::{Firmware, FirmwareLayer};
+use crate::codegen::firmware::{Firmware, FirmwareLayer, MergeStage, StageRef, StageSource};
 use crate::passes::resolve::batch_chunk;
 use crate::sim::cycles::{batch_cycles, CycleModel, KernelWorkload};
 
@@ -182,23 +187,71 @@ fn layer_perf(
     }
 }
 
+/// Analyze one merge stage: pure DMA work — every producer lands its slice
+/// in the shared buffer and the merged activation streams out again. An
+/// Add receives one *full-width* slice per producer (the arms overlap), so
+/// inbound traffic scales with the fan-in arity; a Concat's arms partition
+/// the width, so inbound equals the merged size.
+fn merge_perf(m: &MergeStage, device: &Device, batch: usize, model: &EngineModel) -> LayerPerf {
+    use crate::codegen::firmware::MergeOp;
+    let out_bytes = (batch * m.features * m.quant.dtype.bytes()) as f64;
+    let in_bytes = match m.op {
+        MergeOp::Add => out_bytes * m.plan.write_tilers.len() as f64,
+        MergeOp::Concat => out_bytes,
+    };
+    let dma_in = in_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
+    let dma_out = out_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
+    let stage = if model.ping_pong { dma_in.max(dma_out) } else { dma_in + dma_out };
+    LayerPerf {
+        name: m.name.clone(),
+        tiles: 0,
+        compute_cycles: 0.0,
+        dma_in_cycles: dma_in,
+        dma_out_cycles: dma_out,
+        stage_cycles: stage,
+        fill_cycles: dma_in,
+        bottleneck: Bottleneck::DmaIn,
+    }
+}
+
 /// Run the steady-state analysis over compiled firmware.
 pub fn analyze(fw: &Firmware, model: &EngineModel) -> PerfReport {
     let device = &fw.device;
     let batch = fw.batch;
+    // Per-stage performance in stage (topological) order — dense and merge
+    // stages both occupy pipeline slots.
     let layers: Vec<LayerPerf> = fw
-        .layers
+        .stages
         .iter()
-        .map(|l| layer_perf(l, device, batch, model))
+        .map(|s| match s.op {
+            StageRef::Layer(li) => layer_perf(&fw.layers[li], device, batch, model),
+            StageRef::Merge(mi) => merge_perf(&fw.merges[mi], device, batch, model),
+        })
         .collect();
+    // Interval: the slowest stage anywhere in the DAG.
     let interval_cycles = layers.iter().map(|l| l.stage_cycles).fold(0.0, f64::max);
     // Placement-dependent interconnect latency: static routes from every
-    // cascade tail to the next layer's memory tile.
+    // cascade tail to each consumer's memory tile.
     let routing = crate::sim::interconnect::route_firmware(fw);
     let route_latency =
         crate::sim::interconnect::interconnect_latency_cycles(&routing, model.route_hop);
+    // Latency: the longest fill path through the DAG (fan-in waits for its
+    // slowest branch; a chain reduces to the plain sum of fills).
+    let mut path = vec![0.0f64; fw.stages.len()];
+    for (i, s) in fw.stages.iter().enumerate() {
+        let upstream = s
+            .inputs
+            .iter()
+            .map(|src| match src {
+                StageSource::Input => 0.0,
+                StageSource::Stage(j) => path[*j],
+            })
+            .fold(0.0, f64::max);
+        path[i] = upstream + layers[i].fill_cycles;
+    }
+    let fill_path = path.get(fw.output_stage).copied().unwrap_or(0.0);
     let latency_cycles = model.graph_init as f64
-        + layers.iter().map(|l| l.fill_cycles).sum::<f64>()
+        + fill_path
         + route_latency
         + fw.output_plan.buffer_bytes as f64 / device.mem_tile_port_bytes as f64
         + model.dma_setup as f64;
@@ -317,5 +370,62 @@ mod tests {
         let (reps, tops) = replicated_tops(&f, &r);
         assert!(reps >= 2);
         assert!((tops / r.throughput_tops - reps as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dag_interval_is_max_stage_and_latency_is_longest_path() {
+        use crate::harness::models::residual_mlp_model;
+        let json = residual_mlp_model("perf_res", 128, 256, 32, 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 32;
+        let f = compile(&json, cfg).unwrap().firmware.unwrap();
+        assert!(!f.merges.is_empty());
+        let r = analyze(&f, &EngineModel::default());
+        // One perf row per stage: 3 dense + 1 merge.
+        assert_eq!(r.layers.len(), f.stages.len());
+        let max_stage = r.layers.iter().map(|l| l.stage_cycles).fold(0.0, f64::max);
+        assert_eq!(r.interval_cycles, max_stage);
+        // The longest fill path runs input->fc1->fc2->res->head: it must be
+        // at least the fill of that chain's slowest member and at most the
+        // sum of all fills.
+        let total: f64 = r.layers.iter().map(|l| l.fill_cycles).sum();
+        assert!(r.latency_cycles > 0.0);
+        let graph_overhead = EngineModel::default().graph_init as f64;
+        assert!(r.latency_cycles >= graph_overhead);
+        assert!(
+            r.latency_cycles
+                <= graph_overhead
+                    + total
+                    + 1e6 // routing + drain slack
+        );
+        // The merge stage reports as DMA work with no tiles.
+        let merge_row = r.layers.iter().find(|l| l.name == "res").unwrap();
+        assert_eq!(merge_row.tiles, 0);
+        assert_eq!(merge_row.bottleneck, Bottleneck::DmaIn);
+    }
+
+    #[test]
+    fn parallel_branches_fill_concurrently() {
+        // A diamond's two branches fill in parallel: latency tracks the
+        // slower branch, not the sum of both. Compare against a chain with
+        // the same stages laid end to end.
+        use crate::harness::models::diamond_mlp_model;
+        let json = diamond_mlp_model("perf_diamond", 128, 128, 32, 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 16;
+        let f = compile(&json, cfg).unwrap().firmware.unwrap();
+        let r = analyze(&f, &EngineModel::default());
+        let fills: std::collections::HashMap<&str, f64> =
+            r.layers.iter().map(|l| (l.name.as_str(), l.fill_cycles)).collect();
+        let chain_sum: f64 = r.layers.iter().map(|l| l.fill_cycles).sum();
+        // Longest path excludes the faster of the two branches.
+        let branch_min = fills["a"].min(fills["b"]);
+        let overhead = r.latency_cycles
+            - (chain_sum - branch_min)
+            - EngineModel::default().graph_init as f64;
+        // Remaining terms (routing + output drain + dma setup) are positive
+        // and small relative to compute.
+        assert!(overhead > 0.0, "latency must include routing/drain overhead");
+        assert!(r.latency_cycles < EngineModel::default().graph_init as f64 + chain_sum + 1e6);
     }
 }

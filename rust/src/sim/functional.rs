@@ -7,6 +7,13 @@
 //! partial sums cascade west→east per row, the tail tile adds bias,
 //! applies ReLU in the epilogue and stores through SRS.
 //!
+//! Execution walks the firmware **stage DAG** in topological order, keeping
+//! every stage's activation alive for its consumers: fan-out re-reads a
+//! producer's buffer, residual `Add` merges sum their inputs in wrapping
+//! i32 and store through SRS(0) (pure saturation), `Concat` merges splice
+//! features in input order. A chain is the degenerate DAG and executes
+//! exactly as before.
+//!
 //! Accumulator semantics match the hardware (and `jnp` int arithmetic):
 //! exact accumulation reduced modulo the accumulator width (i32 wraps for
 //! the 8/16-bit paths, i64 for i16×i16), saturation only at the SRS store.
@@ -14,7 +21,7 @@
 //! monotone with srs(0)=0; we apply `max(srs(acc), 0)`.
 
 use crate::arch::Dtype;
-use crate::codegen::firmware::{Firmware, FirmwareLayer};
+use crate::codegen::firmware::{Firmware, FirmwareLayer, MergeOp, MergeStage, StageRef, StageSource};
 use crate::ir::{srs, srs_i32};
 use crate::sim::dma::Tiler2d;
 use anyhow::{ensure, Result};
@@ -50,7 +57,7 @@ impl Activation {
 }
 
 /// Execute the whole firmware on an input batch. The input must be within
-/// the first layer's input dtype range (checked).
+/// the network input dtype range (checked).
 pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
     ensure!(
         input.features == fw.input_features(),
@@ -58,22 +65,114 @@ pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
         input.features,
         fw.input_features()
     );
-    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+    let (lo, hi) = fw.input_quant.dtype.range();
     ensure!(
         input.data.iter().all(|&x| (x as i64) >= lo && (x as i64) <= hi),
         "input values outside {} range",
-        fw.layers[0].quant.input.dtype
+        fw.input_quant.dtype
     );
-    let mut act = input.clone();
-    for layer in &fw.layers {
-        act = execute_layer(layer, &act)?;
+    // Walk the stage DAG in topological order; a stage's inputs always
+    // reference earlier stages (or the network input buffer).
+    let mut outs: Vec<Option<Activation>> = vec![None; fw.stages.len()];
+    for (i, stage) in fw.stages.iter().enumerate() {
+        let mut ins: Vec<&Activation> = Vec::with_capacity(stage.inputs.len());
+        for src in &stage.inputs {
+            ins.push(match src {
+                StageSource::Input => input,
+                StageSource::Stage(j) => outs
+                    .get(*j)
+                    .and_then(|o| o.as_ref())
+                    .ok_or_else(|| anyhow::anyhow!("stage {i} consumes unexecuted stage {j}"))?,
+            });
+        }
+        let out = match stage.op {
+            StageRef::Layer(li) => {
+                let layer = &fw.layers[li];
+                ensure!(ins.len() == 1, "layer '{}' expects exactly one input", layer.name);
+                execute_layer(layer, ins[0])?
+            }
+            StageRef::Merge(mi) => execute_merge(&fw.merges[mi], &ins)?,
+        };
+        drop(ins);
+        outs[i] = Some(out);
     }
+    let act = outs
+        .get_mut(fw.output_stage)
+        .and_then(Option::take)
+        .ok_or_else(|| anyhow::anyhow!("output stage {} missing", fw.output_stage))?;
     // Output drain through the output mem-tile plan (round-trip through the
     // write tiler models the final store order; values unchanged).
     let plan = &fw.output_plan;
     let stream = plan.write_tiler.tile(&act.data);
     let data = plan.write_tiler.untile(&stream);
     Activation::new(act.batch, act.features, data)
+}
+
+/// Execute one merge stage (residual Add / Concat) bit-exactly. Every
+/// input models its mem-tile landing (write-tiler round trip), matching
+/// the DMA order the hardware buffer sees.
+pub fn execute_merge(m: &MergeStage, inputs: &[&Activation]) -> Result<Activation> {
+    ensure!(
+        inputs.len() == m.plan.write_tilers.len() && inputs.len() >= 2,
+        "merge '{}': {} inputs for {} write tilers",
+        m.name,
+        inputs.len(),
+        m.plan.write_tilers.len()
+    );
+    let batch = inputs[0].batch;
+    ensure!(
+        inputs.iter().all(|a| a.batch == batch),
+        "merge '{}': input batch sizes disagree",
+        m.name
+    );
+    match m.op {
+        MergeOp::Add => {
+            for a in inputs {
+                ensure!(
+                    a.features == m.features,
+                    "merge '{}': input features {} != {}",
+                    m.name,
+                    a.features,
+                    m.features
+                );
+            }
+            // Wrapping i32 accumulation (the hardware adder is modular),
+            // then an SRS with shift 0 — a pure saturating store, since all
+            // operands share one binary point.
+            let mut data = vec![0i32; batch * m.features];
+            for (a, wt) in inputs.iter().zip(&m.plan.write_tilers) {
+                let linear = wt.untile(&wt.tile(&a.data));
+                for (acc, v) in data.iter_mut().zip(&linear) {
+                    *acc = acc.wrapping_add(*v);
+                }
+            }
+            for v in &mut data {
+                *v = srs_i32(*v, 0, m.quant.dtype);
+            }
+            Activation::new(batch, m.features, data)
+        }
+        MergeOp::Concat => {
+            let total: usize = inputs.iter().map(|a| a.features).sum();
+            ensure!(
+                total == m.features,
+                "merge '{}': concatenated widths {} != {}",
+                m.name,
+                total,
+                m.features
+            );
+            let mut data = vec![0i32; batch * m.features];
+            let mut off = 0usize;
+            for (a, wt) in inputs.iter().zip(&m.plan.write_tilers) {
+                let linear = wt.untile(&wt.tile(&a.data));
+                for b in 0..batch {
+                    data[b * m.features + off..b * m.features + off + a.features]
+                        .copy_from_slice(&linear[b * a.features..(b + 1) * a.features]);
+                }
+                off += a.features;
+            }
+            Activation::new(batch, m.features, data)
+        }
+    }
 }
 
 /// Execute one layer bit-exactly.
@@ -264,7 +363,7 @@ pub fn reference_dense(
 
 /// Quantize a float batch at the model boundary (optional float I/O).
 pub fn quantize_input(fw: &Firmware, x: &[f64], batch: usize) -> Result<Activation> {
-    let q = fw.layers[0].quant.input;
+    let q = fw.input_quant;
     let features = fw.input_features();
     ensure!(x.len() == batch * features, "float input length");
     let data = x.iter().map(|&v| q.quantize(v) as i32).collect();
@@ -273,7 +372,7 @@ pub fn quantize_input(fw: &Firmware, x: &[f64], batch: usize) -> Result<Activati
 
 /// Dequantize the output batch back to floats.
 pub fn dequantize_output(fw: &Firmware, y: &Activation) -> Vec<f64> {
-    let q = fw.layers.last().unwrap().quant.output;
+    let q = fw.output_quant();
     y.data.iter().map(|&v| q.dequantize(v as i64)).collect()
 }
 
@@ -476,5 +575,128 @@ mod tests {
         let yf = dequantize_output(&fw, &y);
         assert_eq!(yf.len(), 2 * 16);
         assert!(yf.iter().all(|v| v.is_finite()));
+    }
+
+    /// Independent saturating-add reference for merge checks.
+    fn sat_add(a: &Activation, b: &Activation, dtype: Dtype) -> Activation {
+        let data = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(&x, &y)| crate::ir::srs_i32(x.wrapping_add(y), 0, dtype))
+            .collect();
+        Activation { batch: a.batch, features: a.features, data }
+    }
+
+    fn residual_fw(seed: u64, batch: usize) -> (Firmware, JsonModel) {
+        let mut r = Pcg32::seed_from_u64(seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| r.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| r.gen_range_i64(-500, 500)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let jm = JsonModel::new(
+            "res",
+            vec![
+                dense("fc1", 48, 64, true),
+                dense("fc2", 64, 48, false),
+                JsonLayer::residual_add("res", 48, "int8", 6, &["input", "fc2"]),
+                dense("head", 48, 12, false).with_inputs(&["res"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = batch;
+        cfg.tiles_per_layer = Some(4);
+        let fw = compile(&jm, cfg).unwrap().firmware.unwrap();
+        (fw, jm)
+    }
+
+    #[test]
+    fn residual_packed_path_matches_reference() {
+        let (fw, jm) = residual_fw(0xDA6, 6);
+        fw.check_invariants().unwrap();
+        let mut r = rng();
+        let x = random_input(6, 48, Dtype::I8, &mut r);
+        let got = execute(&fw, &x).unwrap();
+        // Manual logical-tensor path: fc1 -> fc2, saturating skip add, head.
+        let layer = |i: usize, a: &Activation| {
+            let l = &jm.layers[i];
+            reference_dense(
+                a,
+                &l.weights,
+                Some(&l.bias),
+                l.out_features,
+                6, // frac 6 in, 6 wgt, 6 out -> shift 6
+                Dtype::I8,
+                Dtype::I32,
+                l.relu,
+            )
+        };
+        let h1 = layer(0, &x);
+        let h2 = layer(1, &h1);
+        let merged = sat_add(&x, &h2, Dtype::I8);
+        let want = layer(3, &merged);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn concat_packed_path_matches_reference() {
+        let mut r = Pcg32::seed_from_u64(0xCA7);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| r.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| r.gen_range_i64(-500, 500)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let jm = JsonModel::new(
+            "cat",
+            vec![
+                dense("a", 32, 24, true),
+                dense("b", 32, 8, false).with_inputs(&["input"]),
+                JsonLayer::concat("cat", 32, "int8", 6, &["a", "b"]),
+                dense("head", 32, 5, false).with_inputs(&["cat"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 4;
+        cfg.tiles_per_layer = Some(2);
+        let fw = compile(&jm, cfg).unwrap().firmware.unwrap();
+        fw.check_invariants().unwrap();
+        let mut rr = rng();
+        let x = random_input(4, 32, Dtype::I8, &mut rr);
+        let got = execute(&fw, &x).unwrap();
+        let layer = |i: usize, a: &Activation| {
+            let l = &jm.layers[i];
+            reference_dense(a, &l.weights, Some(&l.bias), l.out_features, 6, Dtype::I8, Dtype::I32, l.relu)
+        };
+        let ha = layer(0, &x);
+        let hb = layer(1, &x);
+        let mut cat = vec![0i32; 4 * 32];
+        for b in 0..4 {
+            cat[b * 32..b * 32 + 24].copy_from_slice(ha.row(b));
+            cat[b * 32 + 24..(b + 1) * 32].copy_from_slice(hb.row(b));
+        }
+        let merged = Activation::new(4, 32, cat).unwrap();
+        let want = layer(3, &merged);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn residual_add_saturates_at_rails() {
+        // Two rail-high activations summed must pin at +127, not wrap.
+        let (fw, _) = residual_fw(0x5A7, 2);
+        let mi = match fw.stages.iter().find_map(|s| match s.op {
+            StageRef::Merge(mi) => Some(mi),
+            _ => None,
+        }) {
+            Some(mi) => mi,
+            None => panic!("residual firmware has no merge stage"),
+        };
+        let m = &fw.merges[mi];
+        let hot = Activation::new(2, m.features, vec![120; 2 * m.features]).unwrap();
+        let y = execute_merge(m, &[&hot, &hot]).unwrap();
+        assert!(y.data.iter().all(|&v| v == 127), "{:?}", &y.data[..4]);
+        let cold = Activation::new(2, m.features, vec![-120; 2 * m.features]).unwrap();
+        let y = execute_merge(m, &[&cold, &cold]).unwrap();
+        assert!(y.data.iter().all(|&v| v == -128));
     }
 }

@@ -12,7 +12,7 @@
 //! scheme on mesh NoCs and a faithful stand-in for the AIE stream-switch
 //! static routes the `aiecompiler` derives.
 
-use crate::codegen::firmware::Firmware;
+use crate::codegen::firmware::{Firmware, StageRef};
 use crate::ir::PlacementRect;
 
 /// One static route: from a producer tile through the array to a memory
@@ -50,8 +50,10 @@ impl Route {
 }
 
 /// Static routing of one compiled firmware: every cascade-tail tile routes
-/// its output slice to the consumer's memory-tile column; every memory tile
-/// broadcasts up its column (vertical links).
+/// its output slice to each consumer's memory-tile column (a fan-out
+/// producer gets one route per consumer); merge buffers forward along the
+/// memory-tile row to their consumers; every memory tile broadcasts up its
+/// column (vertical links).
 #[derive(Debug, Clone)]
 pub struct RoutingPlan {
     pub routes: Vec<Route>,
@@ -61,20 +63,40 @@ pub struct RoutingPlan {
     pub total_hops: usize,
 }
 
-/// Build the routing plan from placements.
+/// Build the routing plan from placements, walking the stage DAG: each
+/// stage drains to the mem-tile column of every consumer stage (the output
+/// plan's column when it is the network output).
 pub fn route_firmware(fw: &Firmware) -> RoutingPlan {
     let mut routes = Vec::new();
-    for (i, layer) in fw.layers.iter().enumerate() {
-        // Output drain target: the next layer's input column (or the output
-        // plan's column for the last layer).
-        let mc = if i + 1 < fw.layers.len() {
-            fw.layers[i + 1].input_plan.mem_col
+    for (si, stage) in fw.stages.iter().enumerate() {
+        let consumers = fw.stage_consumers(si);
+        let targets: Vec<usize> = if consumers.is_empty() {
+            vec![fw.output_plan.mem_col]
         } else {
-            fw.output_plan.mem_col
+            consumers
+                .iter()
+                .map(|&c| match fw.stages[c].op {
+                    StageRef::Layer(li) => fw.layers[li].input_plan.mem_col,
+                    StageRef::Merge(mi) => fw.merges[mi].plan.mem_col,
+                })
+                .collect()
         };
-        for k in &layer.kernels {
-            if k.is_tail {
-                routes.push(Route::dimension_ordered(k.col, k.row, mc));
+        match stage.op {
+            StageRef::Layer(li) => {
+                for k in &fw.layers[li].kernels {
+                    if k.is_tail {
+                        for &mc in &targets {
+                            routes.push(Route::dimension_ordered(k.col, k.row, mc));
+                        }
+                    }
+                }
+            }
+            StageRef::Merge(mi) => {
+                // Mem-tile to mem-tile forwarding along the south row.
+                let from = fw.merges[mi].plan.mem_col;
+                for &mc in &targets {
+                    routes.push(Route::dimension_ordered(from, 0, mc));
+                }
             }
         }
     }
@@ -190,5 +212,27 @@ mod tests {
         let b = PlacementRect { col: 6, row: 1, width: 2, height: 2 };
         // |out_col(a)=3 - in_col(b)=6| + |0 - 1| = 4
         assert_eq!(chain_wirelength(&[a, b]), 4);
+    }
+
+    #[test]
+    fn dag_routing_covers_every_placed_edge() {
+        use crate::frontend::CompileConfig;
+        use crate::harness::models::residual_mlp_model;
+        let json = residual_mlp_model("route_res", 64, 96, 16, 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        let m = crate::passes::compile(&json, cfg).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        let plan = route_firmware(fw);
+        // Every dense stage routes its tails once per consumer; the merge
+        // buffer adds one forwarding route per consumer. fc2 feeds only the
+        // merge, fc1 only fc2, head only the output drain — so route count
+        // is all tails plus one merge route.
+        let tails: usize = fw
+            .layers
+            .iter()
+            .map(|l| l.kernels.iter().filter(|k| k.is_tail).count())
+            .sum();
+        assert_eq!(plan.routes.len(), tails + fw.merges.len());
     }
 }

@@ -43,7 +43,7 @@ fn compile_entry(entry: &ZooEntry) -> (JsonModel, Firmware) {
 }
 
 fn random_input(fw: &Firmware, seed: u64) -> Activation {
-    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+    let (lo, hi) = fw.input_quant.dtype.range();
     let mut rng = Pcg32::seed_from_u64(seed);
     Activation::new(
         fw.batch,
@@ -103,6 +103,20 @@ zoo_test!(token_mixer_bit_exact, "token_mixer", 33);
 zoo_test!(mixed_precision_bit_exact, "mlp_i16i8", 44);
 
 #[test]
+fn residual_mlp_bit_exact() {
+    // The DAG gate: fan-out + residual Add fan-in through packed firmware
+    // vs the logical reference oracle. Looked up leniently because
+    // Python-written (or pre-DAG) manifests omit the Rust-only entry.
+    let Some(e) = zoo_entries().iter().find(|e| e.name == "residual_mlp") else {
+        eprintln!(
+            "skipping: manifest predates DAG support — regenerate with `aie4ml zoo --force`"
+        );
+        return;
+    };
+    check_model(e, 55);
+}
+
+#[test]
 fn oracle_detects_corruption() {
     // Negative control: poison one tail tile's bias after compilation and
     // feed zeros — the firmware saturates to the rail while the oracle stays
@@ -147,8 +161,9 @@ fn predict_modes_agree() {
 fn manifest_is_python_compatible() {
     // The manifest the generator writes parses with the same minimal schema
     // the Python exporter produces, and every referenced model validates.
+    // (>= 4: Python-written manifests omit the Rust-only residual entry.)
     let entries = zoo_entries();
-    assert_eq!(entries.len(), 4);
+    assert!(entries.len() >= 4, "zoo has {} entries", entries.len());
     for e in entries {
         let json = JsonModel::from_file(&e.model).expect("model JSON");
         json.validate().unwrap();

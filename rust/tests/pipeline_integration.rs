@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn random_input(fw: &aie4ml::codegen::Firmware, seed: u64) -> Activation {
-    let (lo, hi) = fw.layers[0].quant.input.dtype.range();
+    let (lo, hi) = fw.input_quant.dtype.range();
     let mut rng = Pcg32::seed_from_u64(seed);
     Activation::new(
         fw.batch,

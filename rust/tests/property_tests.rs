@@ -307,6 +307,96 @@ fn prop_firmware_matches_reference() {
     });
 }
 
+/// Random small DAGs — plain chains and fan-out/fan-in diamonds (Add or
+/// Concat merges) — must round-trip through compile → packed-firmware
+/// execution bit-exact against the independent reference oracle.
+#[test]
+fn prop_dag_firmware_matches_reference_oracle() {
+    use aie4ml::runtime::ReferenceOracle;
+    #[derive(Clone)]
+    struct Case {
+        d: usize,
+        m: usize,
+        k: usize,
+        batch: usize,
+        seed: u64,
+        diamond: bool,
+        concat: bool,
+    }
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "d={} m={} k={} batch={} seed={:#x} diamond={} concat={}",
+                self.d, self.m, self.k, self.batch, self.seed, self.diamond, self.concat
+            )
+        }
+    }
+    let strat = Strategy::new(|r: &mut Pcg32| Case {
+        d: r.gen_range_usize(1, 64),
+        m: r.gen_range_usize(1, 64),
+        k: r.gen_range_usize(1, 32),
+        batch: r.gen_range_usize(1, 8),
+        seed: r.next_u64(),
+        diamond: r.gen_bool(0.7),
+        concat: r.gen_bool(0.4),
+    });
+    check("dag_vs_oracle", 30, &strat, |case| {
+        let mut rng = Pcg32::seed_from_u64(case.seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let layers = if case.diamond {
+            // stem -> {a, b} -> merge -> head: fan-out plus Add/Concat fan-in.
+            let merged = if case.concat { 2 * case.m } else { case.m };
+            let merge = if case.concat {
+                JsonLayer::concat("merge", merged, "int8", 6, &["a", "b"])
+            } else {
+                JsonLayer::residual_add("merge", case.m, "int8", 6, &["a", "b"])
+            };
+            vec![
+                dense("stem", case.d, case.m, true),
+                dense("a", case.m, case.m, true).with_inputs(&["stem"]),
+                dense("b", case.m, case.m, false).with_inputs(&["stem"]),
+                merge,
+                dense("head", merged, case.k, false).with_inputs(&["merge"]),
+            ]
+        } else {
+            vec![dense("fc1", case.d, case.m, true), dense("fc2", case.m, case.k, false)]
+        };
+        let jm = JsonModel::new("dag_prop", layers);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = case.batch;
+        cfg.tiles_per_layer = Some(rng.gen_range_usize(1, 8));
+        let model = compile(&jm, cfg).map_err(|e| format!("compile: {e:#}"))?;
+        let fw = model.firmware.as_ref().unwrap();
+        fw.check_invariants().map_err(|e| format!("invariants: {e:#}"))?;
+
+        let x = Activation::new(
+            case.batch,
+            case.d,
+            (0..case.batch * case.d).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+        )
+        .unwrap();
+        let got = execute(fw, &x).map_err(|e| format!("execute: {e:#}"))?;
+        let oracle = ReferenceOracle::from_model(&jm).map_err(|e| format!("oracle: {e:#}"))?;
+        let want = oracle.execute(&x).map_err(|e| format!("oracle exec: {e:#}"))?;
+        if got.data != want.data {
+            let idx = got.data.iter().zip(&want.data).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "mismatch at {idx}: fw {} vs oracle {}",
+                got.data[idx], want.data[idx]
+            ));
+        }
+        if got.features != oracle.output_features() {
+            return Err("output width disagrees".into());
+        }
+        Ok(())
+    });
+}
+
 // ---------- Serving invariants ------------------------------------------------
 
 #[test]

@@ -12,11 +12,13 @@
 #   make fmt        rustfmt check (what CI runs)
 #   make clippy     clippy over every target, warnings are errors (what CI runs)
 #   make bench      regenerate every paper table/figure with timings
+#   make bench-smoke single-iteration run of the fig3 placement and
+#                   partition-scaling benches (what CI's bench smoke job runs)
 
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: build test zoo artifacts fmt clippy bench clean
+.PHONY: build test zoo artifacts fmt clippy bench bench-smoke clean
 
 build:
 	$(CARGO) build --release
@@ -41,6 +43,10 @@ clippy:
 
 bench: build
 	$(CARGO) bench
+
+bench-smoke:
+	$(CARGO) bench --bench fig3_placement -- --smoke
+	$(CARGO) bench --bench partition_scaling -- --smoke
 
 clean:
 	$(CARGO) clean

@@ -3,20 +3,24 @@
 //! Also covers the edge-weighted objective on a branching block graph
 //! (fan-out + residual fan-in), recording nodes explored so the search
 //! cost stays visible as the objective generalizes.
+//!
+//! `--smoke` runs single timed iterations (CI's bench smoke job).
 use aie4ml::harness::fig3;
 use aie4ml::passes::placement::{place_bnb, place_bnb_graph};
 use aie4ml::util::bench;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (short, long) = if smoke { (1, 1) } else { (5, 3) };
     let blocks = fig3::example_blocks();
     let prob = fig3::problem();
-    bench::run("fig3_bnb_search", 5, || place_bnb(&blocks, &prob).unwrap().cost);
-    let (figure, _) = bench::run("fig3_full_comparison", 3, || fig3::render().unwrap());
+    bench::run("fig3_bnb_search", short, || place_bnb(&blocks, &prob).unwrap().cost);
+    let (figure, _) = bench::run("fig3_full_comparison", long, || fig3::render().unwrap());
     println!("\n{figure}");
 
     // Branching scenario: the same solver over an explicit edge set.
     let (bblocks, edges) = fig3::branching_blocks();
-    bench::run("fig3_bnb_branching_search", 5, || {
+    bench::run("fig3_bnb_branching_search", short, || {
         place_bnb_graph(&bblocks, &edges, &prob).unwrap().cost
     });
     let rep = place_bnb_graph(&bblocks, &edges, &prob).unwrap();
@@ -24,7 +28,7 @@ fn main() {
         "branching B&B: J = {:.2}, {} nodes explored, optimal = {}",
         rep.cost, rep.nodes_explored, rep.optimal
     );
-    let (bfigure, _) = bench::run("fig3_branching_comparison", 3, || {
+    let (bfigure, _) = bench::run("fig3_branching_comparison", long, || {
         fig3::render_branching().unwrap()
     });
     println!("\n{bfigure}");

@@ -1,0 +1,54 @@
+//! Bench: multi-array partition scaling — compile the 7-layer hermetic
+//! MLP as a K-partition pipeline for K = 1, 2, 4 and report steady-state
+//! interval, fill latency and sustained throughput per depth, plus the
+//! partitioner's own compile time.
+//!
+//! Deeper pipelines re-balance the same layers over more arrays, so every
+//! layer gets a bigger cascade: interval (the slowest partition) shrinks
+//! while latency picks up the inter-array link hops — the trade the
+//! coordinator's pipeline server exploits for throughput.
+//!
+//! `--smoke` runs a single timed iteration (CI's bench smoke job).
+
+use aie4ml::arch::Dtype;
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::partition::{analyze_pipeline, compile_partitioned, PartitionOptions};
+use aie4ml::sim::engine::EngineModel;
+use aie4ml::util::bench;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let json = synth_model("partition_scaling", &mlp_spec(&[256; 8], Dtype::I8), 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 32;
+
+    println!("partition scaling — {} batch {}\n", json.name, cfg.batch);
+    println!(
+        "{:>2} {:>12} {:>14} {:>14} {:>12} {:>10}",
+        "K", "interval cyc", "latency cyc", "link cyc", "TOPS", "tiles"
+    );
+    let mut rows = Vec::new();
+    for k in [1usize, 2, 4] {
+        let opts = PartitionOptions { partitions: Some(k), ..Default::default() };
+        let label = format!("partition_compile_k{k}");
+        let (pm, _) = bench::run(&label, iters, || {
+            compile_partitioned(&json, cfg.clone(), &opts).expect("partitioned compile")
+        });
+        let rep = analyze_pipeline(&pm.firmware, &EngineModel::default());
+        rows.push(format!(
+            "{:>2} {:>12.0} {:>14.0} {:>14.0} {:>12.2} {:>10}",
+            rep.k,
+            rep.interval_cycles,
+            rep.latency_cycles,
+            rep.link_cycles,
+            rep.throughput_tops,
+            rep.tiles_used
+        ));
+    }
+    println!();
+    for r in &rows {
+        println!("{r}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Multi-array partitioning end-to-end: compile a model that cannot fit
+//! one VEK280 into a pipelined multi-array deployment and prove it is
+//! bit-exact against the unpartitioned reference oracle.
+//!
+//! 1. Build the deterministic `wide_mlp_2x` model (4× 512-wide layers) at
+//!    its throughput configuration — 128 tiles per layer, 512 compute
+//!    tiles total, far beyond the 296 placeable tiles of one array — and
+//!    show the single-array compile genuinely failing.
+//! 2. Run the auto partitioner: cut search over the layer DAG, bottleneck
+//!    balancing, per-partition compile (tiling, graph planning, Eq. 2
+//!    branch-and-bound placement re-optimized per array), typed
+//!    inter-partition links.
+//! 3. Execute a real batch through the partition pipeline and require
+//!    **bit-exact** agreement with the reference oracle running the
+//!    original, uncut model.
+//! 4. Report pipeline performance: interval = slowest partition (or
+//!    link), latency = sum of fills + link hops.
+//!
+//!     cargo run --release --example wide_mlp_2x
+
+use aie4ml::harness::models::{wide_mlp_2x_config, wide_mlp_2x_model};
+use aie4ml::partition::{
+    analyze_pipeline, compile_partitioned, execute_partitioned, PartitionOptions,
+};
+use aie4ml::passes::compile;
+use aie4ml::runtime::ReferenceOracle;
+use aie4ml::sim::engine::EngineModel;
+use aie4ml::sim::functional::Activation;
+use aie4ml::util::Pcg32;
+use anyhow::{ensure, Result};
+
+fn main() -> Result<()> {
+    // --- the model genuinely does not fit one array -----------------------
+    let json = wide_mlp_2x_model("wide_mlp_2x");
+    let cfg = wide_mlp_2x_config();
+    match compile(&json, cfg.clone()) {
+        Err(e) => println!("single-array compile fails (as it must):\n  {e:#}\n"),
+        Ok(_) => anyhow::bail!("wide_mlp_2x unexpectedly fit one array"),
+    }
+
+    // --- auto partitioner: smallest K whose slices all place --------------
+    let pm = compile_partitioned(&json, cfg, &PartitionOptions::default())?;
+    let pfw = &pm.firmware;
+    pfw.check_invariants()?;
+    println!(
+        "partitioned '{}' into {} pipeline partitions (cuts after layers {:?}):",
+        pfw.model_name,
+        pfw.k(),
+        pm.cuts
+    );
+    for (i, fw) in pfw.partitions.iter().enumerate() {
+        let link = pfw.links.get(i).map(|l| format!(" -> link '{}' ({} feat)", l.tensor, l.features));
+        println!(
+            "  partition {i}: {} layers, {} tiles on {}{}",
+            fw.layers.len(),
+            fw.tiles_used(),
+            fw.device.name,
+            link.unwrap_or_default()
+        );
+    }
+
+    // --- bit-exactness: pipeline vs the unpartitioned oracle --------------
+    let mut rng = Pcg32::seed_from_u64(0x2A77);
+    let input = Activation::new(
+        pfw.batch(),
+        pfw.input_features(),
+        (0..pfw.batch() * pfw.input_features()).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+    )?;
+    let got = execute_partitioned(pfw, &input)?;
+    let oracle = ReferenceOracle::from_model(&json)?;
+    let want = oracle.execute(&input)?;
+    let mismatches = got[0].data.iter().zip(&want.data).filter(|(a, b)| a != b).count();
+    println!(
+        "\noracle [reference({})]: {} elements compared, {mismatches} mismatches -> {}",
+        oracle.name(),
+        want.data.len(),
+        if mismatches == 0 { "BIT-EXACT" } else { "MISMATCH" }
+    );
+    ensure!(mismatches == 0, "partitioned pipeline diverges from the reference oracle");
+
+    // --- pipeline performance ---------------------------------------------
+    let rep = analyze_pipeline(pfw, &EngineModel::default());
+    println!();
+    println!("pipeline depth K                      : {}", rep.k);
+    println!("interval (slowest partition or link)  : {:.3} µs / batch of {}", rep.interval_us, rep.batch);
+    println!("latency  (sum of fills + link hops)   : {:.2} µs", rep.latency_us);
+    println!("link transfer cycles                  : {:.0}", rep.link_cycles);
+    println!("sustained throughput                  : {:.2} TOPS over {} tiles", rep.throughput_tops, rep.tiles_used);
+    for p in &rep.partitions {
+        println!(
+            "  {:<18} {:>2} layers {:>4} tiles  interval {:>9.0} cyc  fill {:>9.0} cyc",
+            p.name, p.layers, p.tiles, p.interval_cycles, p.latency_cycles
+        );
+    }
+    Ok(())
+}

@@ -32,6 +32,63 @@ def _dtype_range(dtype: str):
     return {"int8": (-128, 127), "int16": (-32768, 32767)}[dtype]
 
 
+def make_residual_spec(name, features, hidden, classes, *, act_dtype="int8",
+                       frac_bits=6, weight_scale=0.25):
+    """Build a skip-connection MLP spec (the DAG analog of ``make_spec``):
+    ``input -> fc1(ReLU) -> fc2``, residual ``add(input, fc2)``, then a
+    dense head reading the merged activation. Layers wire into a DAG via
+    per-layer ``inputs`` entries naming earlier layers (or ``"input"``),
+    exactly the frontend contract of ``rust/src/frontend/json_model.rs``.
+    """
+    rng = np.random.default_rng(fnv1a(name))
+    wlo, whi = _dtype_range(act_dtype)
+    wlo, whi = int(wlo * weight_scale), int(whi * weight_scale)
+
+    def quant():
+        return {
+            "input": {"dtype": act_dtype, "frac_bits": frac_bits},
+            "weight": {"dtype": act_dtype, "frac_bits": frac_bits},
+            "output": {"dtype": act_dtype, "frac_bits": frac_bits},
+        }
+
+    def dense(lname, fin, fout, relu, inputs=None):
+        layer = {
+            "name": lname,
+            "type": "dense",
+            "in_features": int(fin),
+            "out_features": int(fout),
+            "use_bias": True,
+            "relu": bool(relu),
+            "quant": quant(),
+            "weights": [int(v) for v in
+                        rng.integers(wlo, whi + 1, size=(fout, fin)).reshape(-1)],
+            "bias": [int(v) for v in rng.integers(-512, 513, size=(fout,))],
+        }
+        if inputs:
+            layer["inputs"] = list(inputs)
+        return layer
+
+    merge = {
+        "name": "res",
+        "type": "add",
+        "in_features": int(features),
+        "out_features": int(features),
+        "use_bias": False,
+        "relu": False,
+        "quant": quant(),
+        "weights": [],
+        "bias": [],
+        "inputs": ["input", "fc2"],
+    }
+    layers = [
+        dense("fc1", features, hidden, True),
+        dense("fc2", hidden, features, False),
+        merge,
+        dense("head", features, classes, False, inputs=["res"]),
+    ]
+    return {"name": name, "device": "vek280", "layers": layers}
+
+
 def make_spec(name, dims, *, act_dtype="int8", wgt_dtype=None, frac_bits=6,
               relu=True, weight_scale=0.25):
     """Build a model spec dict (JSON-shaped) with deterministic weights.
@@ -85,12 +142,22 @@ MODEL_ZOO = [
 ]
 
 
+# DAG zoo entries built by make_residual_spec: (name, features, hidden,
+# classes, batch). Mirrors the Rust zoo's `residual_mlp` in name/topology/
+# batch; payload agreement goes through the written JSON.
+RESIDUAL_ZOO = [
+    ("residual_mlp", 128, 256, 32, 16),
+]
+
+
 def zoo_specs():
     out = []
     for name, dims, act, batch in MODEL_ZOO:
         wgt = "int8" if act == "int16" else act
         spec = make_spec(name, dims, act_dtype=act, wgt_dtype=wgt)
         out.append((spec, batch))
+    for name, features, hidden, classes, batch in RESIDUAL_ZOO:
+        out.append((make_residual_spec(name, features, hidden, classes), batch))
     return out
 
 

@@ -35,7 +35,10 @@ def parse_dtype(name):
 
 @dataclasses.dataclass
 class LayerSpec:
-    """One dense layer, mirroring the exporter JSON entry."""
+    """One layer, mirroring the exporter JSON entry. ``type`` is
+    ``"dense"``, ``"add"`` (residual merge) or ``"concat"``; ``inputs``
+    names the producing layers (or ``"input"``), empty meaning the
+    previous layer — the chain default."""
 
     name: str
     in_features: int
@@ -49,6 +52,8 @@ class LayerSpec:
     out_frac: int
     weights: np.ndarray  # [out, in] row-major, like the JSON
     bias: np.ndarray  # [out] at accumulator scale
+    type: str = "dense"
+    inputs: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def shift(self) -> int:
@@ -64,9 +69,29 @@ class LayerSpec:
         return jnp.int32
 
 
+def _effective_inputs(layers: List[LayerSpec]) -> List[List[str]]:
+    """Resolve the chain default: empty ``inputs`` means the previous
+    layer (the network input for layer 0)."""
+    out = []
+    for i, spec in enumerate(layers):
+        if spec.inputs:
+            out.append(list(spec.inputs))
+        elif i == 0:
+            out.append(["input"])
+        else:
+            out.append([layers[i - 1].name])
+    return out
+
+
+def _sink_names(layers: List[LayerSpec]) -> List[str]:
+    """Unconsumed layers (the network outputs), in layer order."""
+    consumed = {s for ins in _effective_inputs(layers) for s in ins}
+    return [l.name for l in layers if l.name not in consumed]
+
+
 @dataclasses.dataclass
 class QuantModel:
-    """A chain of quantized dense layers."""
+    """A DAG of quantized layers (a chain is the degenerate DAG)."""
 
     name: str
     layers: List[LayerSpec]
@@ -80,22 +105,45 @@ class QuantModel:
         return self.layers[-1].out_features
 
     def forward(self, x_i32, *, use_pallas=True, bm=32, bk=64, bn=64):
-        """Forward pass on an int32 [batch, f_in] tensor -> int32 tensor."""
-        act = x_i32.astype(parse_dtype(self.layers[0].act_dtype))
-        for spec in self.layers:
-            w = jnp.asarray(spec.weights.T)  # [in, out] for x @ w
-            b = jnp.asarray(spec.bias) if spec.use_bias else None
-            fn = pallas_linear if use_pallas else ref_linear
-            kwargs = dict(
-                shift=spec.shift,
-                relu=spec.relu,
-                acc_dtype=spec.acc_dtype,
-                out_dtype=parse_dtype(spec.act_dtype),
-            )
-            if use_pallas:
-                kwargs.update(bm=bm, bk=bk, bn=bn)
-            act = fn(act, w, b, **kwargs)
-        return act.astype(jnp.int32)
+        """Forward pass on an int32 [batch, f_in] tensor -> int32 tensor
+        (the primary network output — the first unconsumed layer).
+
+        Executes the layer DAG in order: dense layers go through the
+        Pallas (or reference jnp) kernel, ``add`` merges sum in int32 and
+        saturate at the activation dtype's rails (bit-exact with the
+        Rust ``srs_i32(_, 0, dtype)`` store), ``concat`` merges splice
+        features in input order.
+        """
+        inp = x_i32.astype(parse_dtype(self.layers[0].act_dtype))
+        inputs = _effective_inputs(self.layers)
+        acts = {}
+        for spec, srcs in zip(self.layers, inputs):
+            ops = [inp if s == "input" else acts[s] for s in srcs]
+            if spec.type == "dense":
+                w = jnp.asarray(spec.weights.T)  # [in, out] for x @ w
+                b = jnp.asarray(spec.bias) if spec.use_bias else None
+                fn = pallas_linear if use_pallas else ref_linear
+                kwargs = dict(
+                    shift=spec.shift,
+                    relu=spec.relu,
+                    acc_dtype=spec.acc_dtype,
+                    out_dtype=parse_dtype(spec.act_dtype),
+                )
+                if use_pallas:
+                    kwargs.update(bm=bm, bk=bk, bn=bn)
+                act = fn(ops[0], w, b, **kwargs)
+            elif spec.type == "add":
+                acc = ops[0].astype(jnp.int32)
+                for o in ops[1:]:
+                    acc = acc + o.astype(jnp.int32)
+                lo, hi = (-128, 127) if spec.act_dtype == "int8" else (-32768, 32767)
+                act = jnp.clip(acc, lo, hi).astype(parse_dtype(spec.act_dtype))
+            elif spec.type == "concat":
+                act = jnp.concatenate(ops, axis=1)
+            else:
+                raise ValueError(f"unsupported layer type '{spec.type}'")
+            acts[spec.name] = act
+        return acts[_sink_names(self.layers)[0]].astype(jnp.int32)
 
     def aot_fn(self, *, use_pallas=True):
         """The function ``aot.py`` lowers: x_i32 -> (y_i32,)."""
@@ -108,9 +156,17 @@ class QuantModel:
 
 def model_from_spec(spec: dict) -> QuantModel:
     """Build a QuantModel from the exporter's python-side dict (same
-    structure as the JSON file)."""
+    structure as the JSON file). Merge layers (``add``/``concat``) carry
+    no payload; DAG wiring arrives through each layer's ``inputs``."""
     layers = []
     for l in spec["layers"]:
+        ty = l.get("type", "dense")
+        if ty == "dense":
+            weights = np.asarray(l["weights"], np.int32).reshape(
+                l["out_features"], l["in_features"]
+            )
+        else:
+            weights = np.zeros((0, 0), np.int32)
         layers.append(
             LayerSpec(
                 name=l["name"],
@@ -123,12 +179,12 @@ def model_from_spec(spec: dict) -> QuantModel:
                 in_frac=l["quant"]["input"]["frac_bits"],
                 w_frac=l["quant"]["weight"]["frac_bits"],
                 out_frac=l["quant"]["output"]["frac_bits"],
-                weights=np.asarray(l["weights"], np.int32).reshape(
-                    l["out_features"], l["in_features"]
-                ),
+                weights=weights,
                 bias=np.asarray(l["bias"], np.int64)
                 if l["use_bias"]
                 else np.zeros(l["out_features"], np.int64),
+                type=ty,
+                inputs=list(l.get("inputs", [])),
             )
         )
     return QuantModel(name=spec["name"], layers=layers)
@@ -142,25 +198,40 @@ def random_input(model: QuantModel, batch: int, seed: int = 0) -> np.ndarray:
 
 
 # Reference NumPy forward (third implementation, NumPy-only — used in tests
-# to triangulate jnp/Pallas disagreements).
+# to triangulate jnp/Pallas disagreements). Executes the same layer DAG as
+# ``QuantModel.forward`` and returns the primary network output.
 def numpy_forward(model: QuantModel, x_i32: np.ndarray) -> np.ndarray:
-    act = x_i32.astype(np.int64)
-    for spec in model.layers:
-        acc_bits = 64 if spec.acc_dtype == jnp.int64 else 32
-        acc = act.astype(np.int64) @ spec.weights.T.astype(np.int64)
-        if spec.use_bias:
-            acc = acc + spec.bias
-        if acc_bits == 32:
-            acc = acc.astype(np.int32)  # wrap like the hardware accumulator
-        s = spec.shift
-        if s > 0:
-            if acc_bits == 32:
-                acc = (acc + np.int32(1 << (s - 1))) >> np.int32(s)
-            else:
-                acc = (acc + np.int64(1 << (s - 1))) >> np.int64(s)
+    inputs = _effective_inputs(model.layers)
+    acts = {}
+    inp = x_i32.astype(np.int64)
+    for spec, srcs in zip(model.layers, inputs):
+        ops = [inp if s == "input" else acts[s] for s in srcs]
         lo, hi = (-128, 127) if spec.act_dtype == "int8" else (-32768, 32767)
-        y = np.clip(acc.astype(np.int64), lo, hi)
-        if spec.relu:
-            y = np.maximum(y, 0)
-        act = y
-    return act.astype(np.int32)
+        if spec.type == "dense":
+            acc_bits = 64 if spec.acc_dtype == jnp.int64 else 32
+            acc = ops[0].astype(np.int64) @ spec.weights.T.astype(np.int64)
+            if spec.use_bias:
+                acc = acc + spec.bias
+            if acc_bits == 32:
+                acc = acc.astype(np.int32)  # wrap like the hardware accumulator
+            s = spec.shift
+            if s > 0:
+                if acc_bits == 32:
+                    acc = (acc + np.int32(1 << (s - 1))) >> np.int32(s)
+                else:
+                    acc = (acc + np.int64(1 << (s - 1))) >> np.int64(s)
+            y = np.clip(acc.astype(np.int64), lo, hi)
+            if spec.relu:
+                y = np.maximum(y, 0)
+        elif spec.type == "add":
+            # Wrapping int32 sum, saturating store — rust's srs_i32(_, 0, dt).
+            acc = np.zeros_like(ops[0], dtype=np.int32)
+            for o in ops:
+                acc = acc + o.astype(np.int32)
+            y = np.clip(acc.astype(np.int64), lo, hi)
+        elif spec.type == "concat":
+            y = np.concatenate([o.astype(np.int64) for o in ops], axis=1)
+        else:
+            raise ValueError(f"unsupported layer type '{spec.type}'")
+        acts[spec.name] = y
+    return acts[_sink_names(model.layers)[0]].astype(np.int32)

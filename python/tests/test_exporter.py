@@ -4,7 +4,7 @@ the Rust side (`rust/src/harness/zoo.rs`, `frontend::json_model`)."""
 
 import json
 
-from compile.exporter import MODEL_ZOO, fnv1a, make_spec, zoo_specs
+from compile.exporter import MODEL_ZOO, fnv1a, make_residual_spec, make_spec, zoo_specs
 
 
 def test_fnv1a_pinned_vector():
@@ -47,10 +47,14 @@ def test_weights_within_dtype_range():
 
 
 def test_zoo_names_match_rust_zoo():
-    # rust/src/harness/zoo.rs mirrors these names and batches; the two sides
-    # share payloads through the written JSON, not parallel generation.
+    # rust/src/harness/zoo.rs mirrors these names and batches (its extra
+    # `wide_mlp_2x` entry is Rust-only — it exists to exercise the
+    # multi-array partitioner); the two sides share payloads through the
+    # written JSON, not parallel generation.
     names = [name for name, _, _, _ in MODEL_ZOO]
     assert names == ["quickstart", "mlp7", "token_mixer", "mlp_i16i8"]
+    all_names = [spec["name"] for spec, _ in zoo_specs()]
+    assert all_names == ["quickstart", "mlp7", "token_mixer", "mlp_i16i8", "residual_mlp"]
     for spec, batch in zoo_specs():
         assert batch > 0
         assert spec["layers"], spec["name"]
@@ -59,3 +63,30 @@ def test_zoo_names_match_rust_zoo():
             q = spec["layers"][0]["quant"]
             assert q["input"]["dtype"] == "int16"
             assert q["weight"]["dtype"] == "int8"
+
+
+def test_residual_spec_is_a_dag():
+    spec = make_residual_spec("res_t", 16, 32, 8)
+    layers = {l["name"]: l for l in spec["layers"]}
+    assert [l["name"] for l in spec["layers"]] == ["fc1", "fc2", "res", "head"]
+    assert layers["res"]["type"] == "add"
+    assert layers["res"]["inputs"] == ["input", "fc2"]
+    assert layers["res"]["weights"] == [] and layers["res"]["bias"] == []
+    assert layers["head"]["inputs"] == ["res"]
+    # The skip arm preserves width; chain layers carry no `inputs` key.
+    assert layers["res"]["in_features"] == layers["res"]["out_features"] == 16
+    assert "inputs" not in layers["fc1"] and "inputs" not in layers["fc2"]
+    # Deterministic and JSON-round-trippable, like every exporter spec.
+    assert make_residual_spec("res_t", 16, 32, 8) == spec
+    assert json.loads(json.dumps(spec)) == spec
+
+
+def test_residual_zoo_entry_matches_rust_topology():
+    # The Rust zoo's residual_mlp is (features 128, hidden 256, classes 32,
+    # batch 16); the exported artifact must agree so the PJRT oracle leg
+    # covers the same DAG.
+    spec, batch = next((s, b) for s, b in zoo_specs() if s["name"] == "residual_mlp")
+    assert batch == 16
+    assert spec["layers"][0]["in_features"] == 128
+    assert spec["layers"][0]["out_features"] == 256
+    assert spec["layers"][-1]["out_features"] == 32

@@ -190,6 +190,20 @@ pub struct FirmwareStage {
     pub inputs: Vec<StageSource>,
 }
 
+/// One network output: a sink stage drained to the host through its own
+/// mem-tile buffer. Multi-sink graphs carry one entry per sink, in
+/// frontend layer order; the first entry is the *primary* output mirrored
+/// by [`Firmware::output_stage`] / [`Firmware::output_plan`].
+#[derive(Debug, Clone)]
+pub struct FirmwareOutput {
+    /// Name of the producing stage (the sink layer/merge's name).
+    pub name: String,
+    /// Index into [`Firmware::stages`] of the producing stage.
+    pub stage: usize,
+    /// Mem-tile program draining this output.
+    pub plan: MemTilePlan,
+}
+
 /// The complete firmware package for one model.
 ///
 /// Execution structure is a **stage DAG**, not a layer chain: `stages`
@@ -209,14 +223,20 @@ pub struct Firmware {
     /// The stage DAG in topological order: a stage's inputs always
     /// reference lower stage indices (or the network input).
     pub stages: Vec<FirmwareStage>,
-    /// Index into `stages` of the stage producing the network output.
+    /// Index into `stages` of the stage producing the *primary* network
+    /// output — always `outputs[0].stage` (kept as a field so single-output
+    /// callers and serialization stay unchanged).
     pub output_stage: usize,
     /// Network input width.
     pub in_features: usize,
     /// Quantization of the network input buffer.
     pub input_quant: QuantSpec,
-    /// Mem-tile program draining the output stage.
+    /// Mem-tile program draining the primary output stage — always a copy
+    /// of `outputs[0].plan`.
     pub output_plan: MemTilePlan,
+    /// Every network output, one per graph sink, in frontend layer order.
+    /// Single-sink firmware has exactly one entry (the primary output).
+    pub outputs: Vec<FirmwareOutput>,
     /// Steady-state batch size the pipeline is configured for.
     pub batch: usize,
 }
@@ -248,12 +268,28 @@ impl Firmware {
             .unwrap_or(0)
     }
 
-    /// Quantization of the network output (the output stage's store spec).
+    /// Quantization of the primary network output (the output stage's
+    /// store spec).
     pub fn output_quant(&self) -> QuantSpec {
-        match self.stages[self.output_stage].op {
+        self.stage_quant(self.output_stage)
+    }
+
+    /// Store spec of stage `i`.
+    pub fn stage_quant(&self, i: usize) -> QuantSpec {
+        match self.stages[i].op {
             StageRef::Layer(li) => self.layers[li].quant.output,
             StageRef::Merge(mi) => self.merges[mi].quant,
         }
+    }
+
+    /// Feature count of network output `i` (index into [`Firmware::outputs`]).
+    pub fn output_features_of(&self, i: usize) -> usize {
+        self.stage_out_features(self.outputs[i].stage)
+    }
+
+    /// Names of every network output, in output order.
+    pub fn output_names(&self) -> Vec<&str> {
+        self.outputs.iter().map(|o| o.name.as_str()).collect()
     }
 
     /// Feature count produced by stage `i`.
@@ -376,6 +412,33 @@ impl Firmware {
             self.merges.len()
         );
         ensure!(self.output_stage < self.stages.len(), "output stage out of range");
+        // Per-sink outputs: non-empty, primary mirrors outputs[0], every
+        // entry names a distinct in-range stage nothing else consumes.
+        ensure!(!self.outputs.is_empty(), "firmware has no network outputs");
+        ensure!(
+            self.outputs[0].stage == self.output_stage,
+            "primary output stage {} != outputs[0].stage {}",
+            self.output_stage,
+            self.outputs[0].stage
+        );
+        for (i, o) in self.outputs.iter().enumerate() {
+            ensure!(o.stage < self.stages.len(), "output '{}' stage out of range", o.name);
+            for other in &self.outputs[i + 1..] {
+                ensure!(
+                    other.stage != o.stage,
+                    "outputs '{}' and '{}' drain the same stage",
+                    o.name,
+                    other.name
+                );
+            }
+            ensure!(
+                o.plan.per_column_bytes() <= self.device.mem_tile_bytes,
+                "output '{}': drain buffer {} B exceeds {} B",
+                o.name,
+                o.plan.per_column_bytes(),
+                self.device.mem_tile_bytes
+            );
+        }
         for (i, s) in self.stages.iter().enumerate() {
             for src in &s.inputs {
                 if let StageSource::Stage(j) = src {
@@ -543,6 +606,25 @@ impl Firmware {
                 fields.insert("merges".to_string(), Value::Array(merges));
                 fields.insert("stages".to_string(), Value::Array(stages));
                 fields.insert("output_stage".to_string(), Value::from(self.output_stage));
+            }
+        }
+        // Multi-sink firmware names every output drain; single-output
+        // firmware keeps the exact pre-multi-sink JSON shape.
+        if self.outputs.len() > 1 {
+            let outs: Vec<Value> = self
+                .outputs
+                .iter()
+                .map(|o| {
+                    obj([
+                        ("name", Value::from(o.name.as_str())),
+                        ("stage", Value::from(o.stage)),
+                        ("features", Value::from(self.stage_out_features(o.stage))),
+                        ("mem_col", Value::from(o.plan.mem_col)),
+                    ])
+                })
+                .collect();
+            if let Value::Object(fields) = &mut top {
+                fields.insert("outputs".to_string(), Value::Array(outs));
             }
         }
         Ok(top.to_string_pretty())

@@ -4,7 +4,7 @@ pub mod firmware;
 pub mod render;
 
 pub use firmware::{
-    Firmware, FirmwareLayer, FirmwareStage, KernelInst, MemTilePlan, MergeOp, MergePlan,
-    MergeStage, StageRef, StageSource,
+    Firmware, FirmwareLayer, FirmwareOutput, FirmwareStage, KernelInst, MemTilePlan, MergeOp,
+    MergePlan, MergeStage, StageRef, StageSource,
 };
 pub use render::{render_floorplan, render_graph, render_kernel, write_project};

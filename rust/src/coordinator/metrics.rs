@@ -1,6 +1,18 @@
-//! Serving metrics: latency percentiles, throughput, batch occupancy.
+//! Serving metrics: latency percentiles, throughput, batch occupancy, and
+//! per-partition pipeline-stage health (queue depth, busy fraction) for
+//! multi-array deployments.
 
 use std::time::Duration;
+
+/// Accumulator for one pipeline stage (one partition / array).
+#[derive(Debug, Default, Clone)]
+struct StageAccum {
+    batches: usize,
+    depth_sum: usize,
+    max_depth: usize,
+    busy_us: f64,
+    span_us: f64,
+}
 
 /// Streaming metrics accumulator.
 #[derive(Debug, Default)]
@@ -10,6 +22,25 @@ pub struct Metrics {
     requests: usize,
     padded_rows: usize,
     device_busy_us: f64,
+    stages: Vec<StageAccum>,
+}
+
+/// Per-partition pipeline-stage snapshot: how deep its input queue runs
+/// and what fraction of wall time the stage spends executing — the two
+/// numbers that make pipeline imbalance observable (a stage with a rising
+/// queue and ~1.0 busy fraction is the bottleneck array).
+#[derive(Debug, Clone)]
+pub struct StageMetricsReport {
+    /// Partition (pipeline stage) index.
+    pub partition: usize,
+    /// Batches this stage executed.
+    pub batches: usize,
+    /// Deepest its input queue ever ran (jobs waiting at dequeue time).
+    pub max_queue_depth: usize,
+    /// Mean input-queue depth observed at dequeue time.
+    pub mean_queue_depth: f64,
+    /// Fraction of the stage's wall-clock span spent executing batches.
+    pub busy_fraction: f64,
 }
 
 /// A point-in-time snapshot.
@@ -22,6 +53,8 @@ pub struct MetricsReport {
     pub p99_latency_us: f64,
     pub max_latency_us: f64,
     pub device_busy_us: f64,
+    /// Per-partition pipeline-stage metrics; empty for single-array servers.
+    pub stages: Vec<StageMetricsReport>,
 }
 
 impl Metrics {
@@ -37,6 +70,28 @@ impl Metrics {
         for l in latencies {
             self.latencies_us.push(l.as_secs_f64() * 1e6);
         }
+    }
+
+    /// Record one batch through pipeline stage `partition`: the input-queue
+    /// depth observed when the batch was dequeued, the stage's cumulative
+    /// execution time, and its wall-clock span so far (the latter two
+    /// overwrite — callers report running totals).
+    pub fn record_stage_batch(
+        &mut self,
+        partition: usize,
+        queue_depth: usize,
+        busy_us: f64,
+        span_us: f64,
+    ) {
+        if self.stages.len() <= partition {
+            self.stages.resize(partition + 1, StageAccum::default());
+        }
+        let s = &mut self.stages[partition];
+        s.batches += 1;
+        s.depth_sum += queue_depth;
+        s.max_depth = s.max_depth.max(queue_depth);
+        s.busy_us = busy_us;
+        s.span_us = span_us;
     }
 
     pub fn report(&self) -> MetricsReport {
@@ -63,6 +118,26 @@ impl Metrics {
             p99_latency_us: pct(0.99),
             max_latency_us: sorted.last().copied().unwrap_or(0.0),
             device_busy_us: self.device_busy_us,
+            stages: self
+                .stages
+                .iter()
+                .enumerate()
+                .map(|(i, s)| StageMetricsReport {
+                    partition: i,
+                    batches: s.batches,
+                    max_queue_depth: s.max_depth,
+                    mean_queue_depth: if s.batches == 0 {
+                        0.0
+                    } else {
+                        s.depth_sum as f64 / s.batches as f64
+                    },
+                    busy_fraction: if s.span_us > 0.0 {
+                        (s.busy_us / s.span_us).clamp(0.0, 1.0)
+                    } else {
+                        0.0
+                    },
+                })
+                .collect(),
         }
     }
 }
@@ -89,5 +164,31 @@ mod tests {
         let r = Metrics::new().report();
         assert_eq!(r.requests, 0);
         assert_eq!(r.p99_latency_us, 0.0);
+        assert!(r.stages.is_empty());
+    }
+
+    #[test]
+    fn stage_metrics_expose_queue_depth_and_busy_fraction() {
+        let mut m = Metrics::new();
+        // Stage 0: two batches at depths 1 and 3, busy 30 of 100 µs.
+        m.record_stage_batch(0, 1, 10.0, 50.0);
+        m.record_stage_batch(0, 3, 30.0, 100.0);
+        // Stage 1: one batch, empty queue, busy 90 of 100 µs (bottleneck).
+        m.record_stage_batch(1, 0, 90.0, 100.0);
+        let r = m.report();
+        assert_eq!(r.stages.len(), 2);
+        assert_eq!(r.stages[0].partition, 0);
+        assert_eq!(r.stages[0].batches, 2);
+        assert_eq!(r.stages[0].max_queue_depth, 3);
+        assert!((r.stages[0].mean_queue_depth - 2.0).abs() < 1e-12);
+        assert!((r.stages[0].busy_fraction - 0.3).abs() < 1e-12);
+        assert!((r.stages[1].busy_fraction - 0.9).abs() < 1e-12);
+        // The busier stage is identifiable as the pipeline bottleneck.
+        let bottleneck = r
+            .stages
+            .iter()
+            .max_by(|a, b| a.busy_fraction.partial_cmp(&b.busy_fraction).unwrap())
+            .unwrap();
+        assert_eq!(bottleneck.partition, 1);
     }
 }

@@ -9,10 +9,12 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, BatchPolicy, Batcher, Request};
-pub use metrics::{Metrics, MetricsReport};
+pub use metrics::{Metrics, MetricsReport, StageMetricsReport};
+pub use pipeline::{PipelineClient, PipelineServer};
 pub use router::Router;
 pub use server::{Client, Server};

@@ -1,0 +1,347 @@
+//! Pipelined multi-array serving: one thread per partition, batches
+//! overlapping across arrays.
+//!
+//! [`PipelineServer`] is the multi-array sibling of [`super::Server`]: a
+//! front batcher drains the request queue exactly like the single-array
+//! loop, but instead of executing the whole model in place it hands each
+//! flushed batch to a chain of *stage threads* — one per partition, i.e.
+//! one per simulated array. Stage `i` executes its partition's firmware,
+//! keeps any final model outputs the batch produced there, and forwards
+//! the link activation to stage `i + 1`, so while array 1 computes batch
+//! `t`, array 0 is already computing batch `t + 1` — the steady-state
+//! interval is governed by the slowest partition, exactly as
+//! [`crate::partition::analyze_pipeline`] models it.
+//!
+//! Each stage records per-partition metrics — input-queue depth at
+//! dequeue time and the fraction of wall-clock time spent executing — so
+//! pipeline imbalance is observable in the final [`MetricsReport`]
+//! (`stages[i].busy_fraction` ≈ 1 marks the bottleneck array).
+
+use super::batcher::{BatchPolicy, Batcher, Request};
+use super::metrics::{Metrics, MetricsReport};
+use crate::partition::{analyze_pipeline, PartitionedFirmware};
+use crate::sim::engine::EngineModel;
+use crate::sim::functional::{execute_all, Activation};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Replies carry one feature vector per final model output (sink), in
+/// [`PartitionedFirmware::outputs`] order.
+type Reply = SyncSender<Vec<Vec<i32>>>;
+
+enum Msg {
+    Req(Request, Reply),
+    Shutdown,
+}
+
+/// One batch traversing the pipeline.
+struct StageJob {
+    ids: Vec<u64>,
+    occupancy: usize,
+    replies: Vec<(u64, Reply)>,
+    queue_delays: Vec<Duration>,
+    flushed_at: Instant,
+    /// Input activation for the next stage (the link tensor).
+    act: Activation,
+    /// Final model outputs produced by earlier stages:
+    /// `(index into outputs, activation)`.
+    finals: Vec<(usize, Activation)>,
+}
+
+/// A client handle to the pipeline (cheap to clone; thread-safe).
+#[derive(Clone)]
+pub struct PipelineClient {
+    tx: SyncSender<Msg>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl PipelineClient {
+    /// Submit one sample and wait for the primary (first) model output.
+    pub fn infer(&self, features: Vec<i32>) -> Result<Vec<i32>> {
+        let mut outs = self.infer_multi(features)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Submit one sample and wait for every model output, in sink order.
+    pub fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
+        let (tx, rx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Req(Request { id, features, enqueued: Instant::now() }, tx))
+            .map_err(|_| anyhow::anyhow!("pipeline server stopped"))?;
+        Ok(rx.recv()?)
+    }
+}
+
+/// The running multi-array pipeline server.
+pub struct PipelineServer {
+    pub client: PipelineClient,
+    metrics: Arc<Mutex<Metrics>>,
+    front: std::thread::JoinHandle<()>,
+    stages: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PipelineServer {
+    /// Spawn the front batcher plus one stage thread per partition.
+    pub fn spawn(
+        pfw: Arc<PartitionedFirmware>,
+        max_wait: Duration,
+        queue_depth: usize,
+    ) -> PipelineServer {
+        let k = pfw.k();
+        let policy = BatchPolicy { batch: pfw.batch(), max_wait };
+        let features = pfw.input_features();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        // Simulated device time per batch for the whole pipeline.
+        let device_us = analyze_pipeline(&pfw, &EngineModel::default()).interval_us;
+
+        // Stage channels: front -> stage 0 -> ... -> stage k-1. Each has a
+        // shared depth counter so stages can report queue pressure.
+        let mut txs: Vec<SyncSender<StageJob>> = Vec::with_capacity(k);
+        let mut rxs: Vec<Receiver<StageJob>> = Vec::with_capacity(k);
+        let depths: Vec<Arc<AtomicUsize>> =
+            (0..k).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        for _ in 0..k {
+            let (tx, rx) = sync_channel(queue_depth.max(1));
+            txs.push(tx);
+            rxs.push(rx);
+        }
+
+        // Stage threads, last to first so each can own its forward sender.
+        let mut stages = Vec::with_capacity(k);
+        let mut forward: Option<SyncSender<StageJob>> = None;
+        let mut forward_depth: Option<Arc<AtomicUsize>> = None;
+        for i in (0..k).rev() {
+            let rx = rxs.pop().expect("stage receiver");
+            let next_tx = forward.take();
+            let next_depth = forward_depth.take();
+            let my_depth = depths[i].clone();
+            let pfw = pfw.clone();
+            let metrics = metrics.clone();
+            let handle = std::thread::spawn(move || {
+                stage_loop(i, &pfw, rx, next_tx, next_depth, my_depth, metrics, device_us)
+            });
+            stages.push(handle);
+            forward = Some(txs[i].clone());
+            forward_depth = Some(depths[i].clone());
+        }
+        stages.reverse();
+        let stage0_tx = forward.expect("stage 0 sender");
+        let stage0_depth = forward_depth.expect("stage 0 depth");
+
+        let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(queue_depth.max(1));
+        let front = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(policy, features);
+            let mut waiters: Vec<(u64, Reply)> = Vec::new();
+            let flush =
+                |batcher: &mut Batcher, waiters: &mut Vec<(u64, Reply)>| {
+                    let Some(batch) = batcher.flush(Instant::now()) else { return };
+                    let mut replies = Vec::with_capacity(batch.ids.len());
+                    for id in &batch.ids {
+                        if let Some(pos) = waiters.iter().position(|(wid, _)| wid == id) {
+                            replies.push(waiters.swap_remove(pos));
+                        }
+                    }
+                    let job = StageJob {
+                        ids: batch.ids,
+                        occupancy: batch.occupancy,
+                        replies,
+                        queue_delays: batch.queue_delays,
+                        flushed_at: Instant::now(),
+                        act: batch.activation,
+                        finals: Vec::new(),
+                    };
+                    stage0_depth.fetch_add(1, Ordering::Relaxed);
+                    if stage0_tx.send(job).is_err() {
+                        stage0_depth.fetch_sub(1, Ordering::Relaxed);
+                    }
+                };
+            loop {
+                let timeout = batcher
+                    .next_deadline(Instant::now())
+                    .unwrap_or(Duration::from_secs(3600));
+                match rx.recv_timeout(timeout) {
+                    Ok(Msg::Req(req, reply)) => {
+                        waiters.push((req.id, reply));
+                        batcher.push(req);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                        while !batcher.is_empty() {
+                            flush(&mut batcher, &mut waiters);
+                        }
+                        return; // dropping stage0_tx unwinds the stages
+                    }
+                }
+                while batcher.ready(Instant::now()) {
+                    flush(&mut batcher, &mut waiters);
+                }
+            }
+        });
+
+        PipelineServer {
+            client: PipelineClient { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            metrics,
+            front,
+            stages,
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsReport {
+        self.metrics.lock().unwrap().report()
+    }
+
+    /// Stop accepting requests, drain in-flight batches through every
+    /// stage, and join all threads.
+    pub fn shutdown(self) -> MetricsReport {
+        let _ = self.client.tx.send(Msg::Shutdown);
+        drop(self.client);
+        let _ = self.front.join();
+        for h in self.stages {
+            let _ = h.join();
+        }
+        let report = self.metrics.lock().unwrap().report();
+        report
+    }
+}
+
+/// One stage thread: execute this partition's firmware on each incoming
+/// batch, collect final outputs, forward the link activation (or reply at
+/// the pipeline tail).
+#[allow(clippy::too_many_arguments)]
+fn stage_loop(
+    i: usize,
+    pfw: &PartitionedFirmware,
+    rx: Receiver<StageJob>,
+    next_tx: Option<SyncSender<StageJob>>,
+    next_depth: Option<Arc<AtomicUsize>>,
+    my_depth: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    device_us: f64,
+) {
+    let fw = &pfw.partitions[i];
+    let started = Instant::now();
+    let mut busy = Duration::ZERO;
+    while let Ok(mut job) = rx.recv() {
+        let depth = my_depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+        let t0 = Instant::now();
+        let mut outs = execute_all(fw, &job.act).expect("partition execution failed");
+        busy += t0.elapsed();
+        for (slot, o) in pfw.outputs.iter().enumerate() {
+            if o.partition == i {
+                job.finals.push((slot, outs[o.output].clone()));
+            }
+        }
+        metrics.lock().unwrap().record_stage_batch(
+            i,
+            depth,
+            busy.as_secs_f64() * 1e6,
+            started.elapsed().as_secs_f64() * 1e6,
+        );
+        match (&next_tx, &next_depth) {
+            (Some(tx), Some(depth_ctr)) => {
+                job.act = outs.swap_remove(pfw.links[i].from_output);
+                depth_ctr.fetch_add(1, Ordering::Relaxed);
+                if tx.send(job).is_err() {
+                    depth_ctr.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            _ => {
+                // Pipeline tail: assemble per-output rows and reply.
+                job.finals.sort_by_key(|(slot, _)| *slot);
+                let exec = job.flushed_at.elapsed();
+                for (id, reply) in &job.replies {
+                    let Some(slot) = job.ids.iter().position(|jid| jid == id) else { continue };
+                    let out: Vec<Vec<i32>> = job
+                        .finals
+                        .iter()
+                        .map(|(_, act)| act.row(slot).to_vec())
+                        .collect();
+                    let _ = reply.send(out);
+                }
+                let delays: Vec<Duration> =
+                    job.queue_delays.iter().map(|d| *d + exec).collect();
+                metrics.lock().unwrap().record_batch(
+                    job.occupancy,
+                    pfw.batch(),
+                    &delays,
+                    device_us,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{mlp_spec, synth_model};
+    use crate::partition::{compile_partitioned, execute_partitioned, PartitionOptions};
+    use crate::util::Pcg32;
+
+    fn pipeline(k: usize) -> Arc<PartitionedFirmware> {
+        let json = synth_model("pipe_srv", &mlp_spec(&[32, 24, 16, 8], crate::arch::Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 4;
+        cfg.tiles_per_layer = Some(1);
+        let opts = PartitionOptions { partitions: Some(k), ..Default::default() };
+        Arc::new(compile_partitioned(&json, cfg, &opts).unwrap().firmware)
+    }
+
+    #[test]
+    fn pipelined_responses_match_direct_execution() {
+        let pfw = pipeline(2);
+        let server = PipelineServer::spawn(pfw.clone(), Duration::from_millis(2), 32);
+        let mut rng = Pcg32::seed_from_u64(3);
+        let x: Vec<i32> = (0..32).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let got = server.client.infer(x.clone()).unwrap();
+        let mut data = vec![0i32; 4 * 32];
+        data[..32].copy_from_slice(&x);
+        let direct =
+            execute_partitioned(&pfw, &Activation::new(4, 32, data).unwrap()).unwrap();
+        assert_eq!(got, direct[0].row(0));
+        let m = server.shutdown();
+        assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn batches_overlap_and_metrics_cover_every_stage() {
+        let pfw = pipeline(3);
+        let server = PipelineServer::spawn(pfw.clone(), Duration::from_millis(1), 64);
+        let mut handles = Vec::new();
+        for i in 0..24 {
+            let c = server.client.clone();
+            handles.push(std::thread::spawn(move || c.infer(vec![i % 5; 32]).unwrap()));
+        }
+        let outs: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Identical inputs give identical outputs regardless of batch slot.
+        assert_eq!(outs[0], outs[5]);
+        assert_eq!(outs[1], outs[6]);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 24);
+        assert!(m.batches >= 6); // batch 4, 24 requests
+        // Per-partition stage metrics: one row per array, sane values.
+        assert_eq!(m.stages.len(), 3);
+        for s in &m.stages {
+            assert_eq!(s.batches, m.batches);
+            assert!((0.0..=1.0).contains(&s.busy_fraction));
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_batches() {
+        let pfw = pipeline(2);
+        let server = PipelineServer::spawn(pfw, Duration::from_secs(10), 16);
+        let c = server.client.clone();
+        let h = std::thread::spawn(move || c.infer(vec![1; 32]).unwrap());
+        std::thread::sleep(Duration::from_millis(50));
+        let m = server.shutdown();
+        let out = h.join().unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(m.requests, 1);
+    }
+}

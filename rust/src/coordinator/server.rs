@@ -14,14 +14,16 @@ use super::batcher::{BatchPolicy, Batcher, Request};
 use super::metrics::{Metrics, MetricsReport};
 use crate::codegen::firmware::Firmware;
 use crate::sim::engine::{analyze, EngineModel};
-use crate::sim::functional::execute;
+use crate::sim::functional::execute_all;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-type Reply = SyncSender<Vec<i32>>;
+/// Replies carry one feature vector per network output (sink), in
+/// [`Firmware::outputs`] order; single-sink models reply with one entry.
+type Reply = SyncSender<Vec<Vec<i32>>>;
 
 enum Msg {
     Req(Request, Reply),
@@ -36,8 +38,16 @@ pub struct Client {
 }
 
 impl Client {
-    /// Submit one sample and wait for the output feature vector.
+    /// Submit one sample and wait for the *primary* output feature vector
+    /// (the first network output; the only one for single-sink models).
     pub fn infer(&self, features: Vec<i32>) -> Result<Vec<i32>> {
+        let mut outs = self.infer_multi(features)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Submit one sample and wait for **every** network output, one
+    /// feature vector per sink in firmware output order.
+    pub fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
         let (tx, rx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -124,20 +134,20 @@ fn run_batch(
 ) {
     let Some(batch) = batcher.flush(Instant::now()) else { return };
     let started = Instant::now();
-    let out = execute(fw, &batch.activation).expect("firmware execution failed");
+    let outs = execute_all(fw, &batch.activation).expect("firmware execution failed");
     let exec_time = started.elapsed();
     let mut delays = Vec::with_capacity(batch.occupancy);
     for (slot, id) in batch.ids.iter().enumerate() {
         if let Some(pos) = waiters.iter().position(|(wid, _)| wid == id) {
             let (_, reply) = waiters.swap_remove(pos);
-            let _ = reply.send(out.row(slot).to_vec());
+            let _ = reply.send(outs.iter().map(|o| o.row(slot).to_vec()).collect());
         }
         delays.push(batch.queue_delays[slot] + exec_time);
     }
     metrics
         .lock()
         .unwrap()
-        .record_batch(batch.occupancy, out.batch, &delays, device_us);
+        .record_batch(batch.occupancy, outs[0].batch, &delays, device_us);
 }
 
 #[cfg(test)]
@@ -195,9 +205,41 @@ mod tests {
         let via_server = server.client.infer(x.clone()).unwrap();
         let mut data = vec![0i32; 2 * 32];
         data[..32].copy_from_slice(&x);
-        let direct = execute(&fw, &crate::sim::functional::Activation::new(2, 32, data).unwrap())
-            .unwrap();
+        let direct = crate::sim::functional::execute(
+            &fw,
+            &crate::sim::functional::Activation::new(2, 32, data).unwrap(),
+        )
+        .unwrap();
         assert_eq!(via_server, direct.row(0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_sink_model_replies_per_output() {
+        // Two heads off one trunk: infer_multi returns one vector per sink
+        // (in layer order); infer returns the primary head only.
+        let jm = JsonModel::new(
+            "srv_heads",
+            vec![
+                JsonLayer::dense("trunk", 16, 16, false, false, "int8", "int8", 0, vec![1; 256], vec![]),
+                JsonLayer::dense("head_a", 16, 8, false, false, "int8", "int8", 0, vec![1; 128], vec![])
+                    .with_inputs(&["trunk"]),
+                JsonLayer::dense("head_b", 16, 2, false, false, "int8", "int8", 0, vec![-1; 32], vec![])
+                    .with_inputs(&["trunk"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 2;
+        cfg.tiles_per_layer = Some(1);
+        let fw = Arc::new(compile(&jm, cfg).unwrap().firmware.unwrap());
+        assert_eq!(fw.outputs.len(), 2);
+        let server = Server::spawn(fw.clone(), Duration::from_millis(2), 8);
+        let outs = server.client.infer_multi(vec![1; 16]).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), 8);
+        assert_eq!(outs[1].len(), 2);
+        let primary = server.client.infer(vec![1; 16]).unwrap();
+        assert_eq!(primary, outs[0]);
         server.shutdown();
     }
 

@@ -39,6 +39,11 @@ pub struct CompileConfig {
     pub batch: usize,
     /// Branch-and-bound node budget (safety valve for pathological graphs).
     pub bnb_max_nodes: usize,
+    /// Layer names to drain to the host *in addition to* the graph's sinks.
+    /// The multi-array partitioner uses this to turn an interior node into
+    /// a partition output when a cut edge crosses it; plain compiles leave
+    /// it empty.
+    pub extra_outputs: Vec<String>,
     /// Per-layer overrides keyed by layer name.
     pub layers: HashMap<String, LayerConfig>,
 }
@@ -53,6 +58,7 @@ impl Default for CompileConfig {
             tiles_per_layer: None,
             batch: 128,
             bnb_max_nodes: 150_000,
+            extra_outputs: Vec::new(),
             layers: HashMap::new(),
         }
     }
@@ -96,6 +102,13 @@ impl CompileConfig {
         }
         if let Some(n) = v.get("bnb_max_nodes") {
             c.bnb_max_nodes = n.as_usize()?;
+        }
+        if let Some(e) = v.get("extra_outputs") {
+            c.extra_outputs = e
+                .as_array()?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect::<Result<_, _>>()?;
         }
         if let Some(layers) = v.get("layers") {
             for (name, lv) in layers.as_object()? {
@@ -150,6 +163,9 @@ impl CompileConfig {
         ];
         if let Some(t) = self.tiles_per_layer {
             fields.push(("tiles_per_layer", Value::from(t)));
+        }
+        if !self.extra_outputs.is_empty() {
+            fields.push(("extra_outputs", Value::from(self.extra_outputs.clone())));
         }
         Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
             .to_string_pretty()
@@ -218,6 +234,15 @@ mod tests {
         let r = c.pinned_rect("fc1", &geo).unwrap();
         assert_eq!((r.col, r.row, r.width, r.height), (3, 1, 4, 2));
         assert!(c.pinned_rect("fc2", &geo).is_none());
+    }
+
+    #[test]
+    fn extra_outputs_roundtrip() {
+        let mut c = CompileConfig::default();
+        c.extra_outputs = vec!["fc2".into()];
+        let c2 = CompileConfig::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(c2.extra_outputs, vec!["fc2".to_string()]);
+        assert!(CompileConfig::from_json_str("{}").unwrap().extra_outputs.is_empty());
     }
 
     #[test]

@@ -425,14 +425,48 @@ impl JsonModel {
         Ok(())
     }
 
+    /// Effective producers of every layer with the chain default resolved:
+    /// an empty `inputs` list means the previous layer (the literal
+    /// `"input"` for layer 0). This is the single statement of the wiring
+    /// rule — [`JsonModel::to_graph`] connects exactly these edges, and the
+    /// partitioner's cut search computes liveness over the same lists.
+    pub fn effective_inputs(&self) -> Vec<Vec<String>> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if !l.inputs.is_empty() {
+                    l.inputs.clone()
+                } else if i == 0 {
+                    vec!["input".to_string()]
+                } else {
+                    vec![self.layers[i - 1].name.clone()]
+                }
+            })
+            .collect()
+    }
+
+    /// Names of the model's sinks (layers no other layer consumes), in
+    /// layer order — the network outputs, matching the graph's
+    /// [`crate::ir::Graph::output_producers`] for JSON-built graphs.
+    pub fn sink_names(&self) -> Vec<String> {
+        let inputs = self.effective_inputs();
+        self.layers
+            .iter()
+            .filter(|l| !inputs.iter().any(|ins| ins.iter().any(|s| s == &l.name)))
+            .map(|l| l.name.clone())
+            .collect()
+    }
+
     /// Build the frontend IR graph (ReLU still standalone; quantizers and
     /// weights attached to nodes; AIE attrs untouched).
     ///
-    /// Layers with an empty `inputs` list chain onto the previous layer;
-    /// explicit `inputs` entries resolve to earlier layers' post-activation
-    /// outputs (or `"input"`), so fan-out and fan-in topologies are
-    /// expressible while chain JSONs build the same graph as before. The
-    /// last layer is the network output.
+    /// Layers wire by their [`JsonModel::effective_inputs`]: an empty
+    /// `inputs` list chains onto the previous layer; explicit entries
+    /// resolve to earlier layers' post-activation outputs (or `"input"`),
+    /// so fan-out and fan-in topologies are expressible while chain JSONs
+    /// build the same graph as before. The last layer is the network
+    /// output.
     pub fn to_graph(&self) -> Result<Graph, FrontendError> {
         self.validate()?;
         let mut g = Graph::new();
@@ -444,7 +478,8 @@ impl JsonModel {
         // separate activation follows, so consumers see post-activation data).
         let mut handles: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
         let mut prev = input;
-        for l in &self.layers {
+        let effective = self.effective_inputs();
+        for (l, srcs) in self.layers.iter().zip(&effective) {
             let id = match l.ty.as_str() {
                 "dense" => {
                     let id = g.add_node(
@@ -474,22 +509,18 @@ impl JsonModel {
                 "add" => g.add_node(l.name.clone(), OpKind::Add { features: l.out_features }),
                 _ => g.add_node(l.name.clone(), OpKind::Concat { features: l.out_features }),
             };
-            if l.inputs.is_empty() {
-                g.connect(prev, id);
-            } else {
-                for src in &l.inputs {
-                    let from = if src == "input" {
-                        input
-                    } else {
-                        *handles.get(src.as_str()).ok_or_else(|| FrontendError::BadTopology {
-                            layer: l.name.clone(),
-                            detail: format!(
-                                "unknown input '{src}' (inputs must name an earlier layer or 'input')"
-                            ),
-                        })?
-                    };
-                    g.connect(from, id);
-                }
+            for src in srcs {
+                let from = if src == "input" {
+                    input
+                } else {
+                    *handles.get(src.as_str()).ok_or_else(|| FrontendError::BadTopology {
+                        layer: l.name.clone(),
+                        detail: format!(
+                            "unknown input '{src}' (inputs must name an earlier layer or 'input')"
+                        ),
+                    })?
+                };
+                g.connect(from, id);
             }
             prev = id;
             if l.relu {
@@ -633,6 +664,30 @@ mod tests {
         m2.to_graph().unwrap();
         // Chain layers keep writing no `inputs` key at all.
         assert!(!tiny_model().to_json_string().contains("inputs"));
+    }
+
+    #[test]
+    fn effective_inputs_and_sinks_resolve_chain_defaults() {
+        // The single wiring rule shared by to_graph and the partitioner's
+        // cut search: empty `inputs` means the previous layer.
+        let m = residual_model();
+        assert_eq!(
+            m.effective_inputs(),
+            vec![
+                vec!["input".to_string()],
+                vec!["fc1".to_string()],
+                vec!["input".to_string(), "fc2".to_string()],
+                vec!["res".to_string()],
+            ]
+        );
+        assert_eq!(m.sink_names(), vec!["head"]);
+        // Multi-sink: two unconsumed layers surface in layer order.
+        let mut two = residual_model();
+        two.layers.push(
+            JsonLayer::dense("aux", 4, 3, false, false, "int8", "int8", 4, vec![1; 12], vec![])
+                .with_inputs(&["res"]),
+        );
+        assert_eq!(two.sink_names(), vec!["head", "aux"]);
     }
 
     #[test]

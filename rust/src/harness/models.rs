@@ -154,6 +154,40 @@ pub fn diamond_mlp_model(
     m
 }
 
+/// The over-capacity zoo model: a 4-layer 512-wide MLP (2× the hermetic
+/// `mlp7` width) deployed at the throughput configuration
+/// [`wide_mlp_2x_config`] — 128 tiles per layer, 512 compute tiles total,
+/// far beyond one VEK280's 296 placeable tiles. A single-array compile
+/// provably fails at placement, so the model must ship through the
+/// multi-array partitioner (K ≥ 2 pipeline partitions).
+pub fn wide_mlp_2x_model(name: &str) -> JsonModel {
+    let dims = [512usize; 5];
+    let specs: Vec<LayerSpec> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| LayerSpec {
+            name: format!("fc{}", i + 1),
+            in_features: w[0],
+            out_features: w[1],
+            relu: i + 2 < dims.len(),
+            dtype_act: Dtype::I8,
+            dtype_wgt: Dtype::I8,
+        })
+        .collect();
+    synth_model(name, &specs, 6)
+}
+
+/// The deployment configuration `wide_mlp_2x` ships with: every layer on a
+/// 128-tile cascade for throughput. 4 layers × 128 = 512 tiles on a
+/// 296-tile array — infeasible on one VEK280 by construction, which is
+/// exactly what [`crate::partition::compile_partitioned`] exists for.
+pub fn wide_mlp_2x_config() -> CompileConfig {
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 16;
+    cfg.tiles_per_layer = Some(128);
+    cfg
+}
+
 /// The paper's cross-device workload: 7-layer 512×512 MLP, int8
 /// (Table III row 5 / Table V).
 pub fn seven_layer_mlp(batch: usize) -> Result<Model> {
@@ -231,6 +265,24 @@ mod tests {
         fw.check_invariants().unwrap();
         assert_eq!(fw.layers.len(), 4);
         assert_eq!(fw.merges.len(), 1);
+    }
+
+    #[test]
+    fn wide_mlp_2x_overflows_one_array_and_partitions() {
+        use crate::partition::{compile_partitioned, PartitionOptions};
+        let json = wide_mlp_2x_model("models_wide2x");
+        json.validate().unwrap();
+        let cfg = wide_mlp_2x_config();
+        // Single-array compile must fail: 512 tiles on a 296-tile array.
+        let err = compile(&json, cfg.clone()).unwrap_err().to_string();
+        assert!(err.contains("tiles"), "unexpected failure: {err}");
+        // The auto partitioner finds the smallest feasible pipeline depth.
+        let pm = compile_partitioned(&json, cfg, &PartitionOptions::default()).unwrap();
+        assert!(pm.firmware.k() >= 2, "expected >= 2 partitions, got {}", pm.firmware.k());
+        for fw in &pm.firmware.partitions {
+            assert!(fw.tiles_used() <= fw.device.placeable_tiles());
+        }
+        assert_eq!(pm.firmware.tiles_used(), 4 * 128);
     }
 
     #[test]

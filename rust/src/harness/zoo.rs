@@ -5,9 +5,10 @@
 //! Mirrors `python/compile/exporter.py::MODEL_ZOO` in names, topology and
 //! batch (the hermetic `mlp7` is width-reduced to keep `cargo test` fast;
 //! `make artifacts` regenerates the paper-scale set plus HLO artifacts).
-//! The `residual_mlp` entry is Rust-only for now: the Python exporter has
-//! no DAG export yet, so Python-written manifests simply omit it (tests
-//! that need it look it up leniently).
+//! The `residual_mlp` DAG entry is mirrored by the Python exporter (which
+//! emits per-layer `inputs` wiring); `wide_mlp_2x` is Rust-only — it only
+//! exists to exercise the multi-array partitioner, so Python-written
+//! manifests may omit it (tests that need it look it up leniently).
 //! Weights come from the seeded PCG stream (`harness::models::synth_model`,
 //! seeded by the FNV-1a name hash) — payload agreement between the firmware
 //! and any oracle goes through the written JSON, never through parallel
@@ -20,7 +21,7 @@
 
 use crate::arch::Dtype;
 use crate::frontend::JsonModel;
-use crate::harness::models::{residual_mlp_model, synth_model, LayerSpec};
+use crate::harness::models::{residual_mlp_model, synth_model, wide_mlp_2x_model, LayerSpec};
 use crate::util::json::{obj, Value};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -69,6 +70,10 @@ pub fn zoo_models() -> Vec<(JsonModel, usize)> {
         (synth_model("mlp_i16i8", &layer_specs(&[128, 128, 64], Dtype::I16, Dtype::I8), 6), 16),
         // Skip-connection MLP: fan-out + residual Add fan-in (DAG gate).
         (residual_mlp_model("residual_mlp", 128, 256, 32, 6), 16),
+        // Over-capacity model: at its throughput config (128 tiles/layer,
+        // `models::wide_mlp_2x_config`) it cannot place on one VEK280 and
+        // must compile through the multi-array partitioner (K >= 2).
+        (wide_mlp_2x_model("wide_mlp_2x"), 16),
     ]
 }
 
@@ -195,21 +200,24 @@ mod tests {
     fn zoo_is_deterministic() {
         let a = zoo_models();
         let b = zoo_models();
-        assert_eq!(a.len(), 5);
+        assert_eq!(a.len(), 6);
         for ((ma, _), (mb, _)) in a.iter().zip(&b) {
             assert_eq!(ma.name, mb.name);
             assert_eq!(ma.layers[0].weights, mb.layers[0].weights);
         }
         // Mirrors the Python MODEL_ZOO names, plus the Rust-only DAG entry.
         let names: Vec<&str> = a.iter().map(|(m, _)| m.name.as_str()).collect();
-        assert_eq!(names, ["quickstart", "mlp7", "token_mixer", "mlp_i16i8", "residual_mlp"]);
+        assert_eq!(
+            names,
+            ["quickstart", "mlp7", "token_mixer", "mlp_i16i8", "residual_mlp", "wide_mlp_2x"]
+        );
     }
 
     #[test]
     fn ensure_zoo_writes_and_reuses() {
         let dir = ScratchDir::new("zoo").unwrap();
         let first = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(first.len(), 5);
+        assert_eq!(first.len(), 6);
         for e in &first {
             assert!(e.model.exists(), "{} missing", e.model.display());
             // Written models parse back into valid exporter JSON.
@@ -219,7 +227,7 @@ mod tests {
         }
         // Second call reuses the manifest (same paths, no rewrite needed).
         let second = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(second.len(), 5);
+        assert_eq!(second.len(), 6);
         assert_eq!(second[0].model, first[0].model);
     }
 
@@ -237,8 +245,9 @@ mod tests {
         )
         .unwrap();
         let entries = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(entries.len(), 5);
+        assert_eq!(entries.len(), 6);
         assert!(entries.iter().any(|e| e.name == "residual_mlp"));
+        assert!(entries.iter().any(|e| e.name == "wide_mlp_2x"));
         // With the HLO artifact actually present, the same truncated
         // manifest is an AOT set and must be preserved verbatim.
         std::fs::write(

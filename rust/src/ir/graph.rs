@@ -6,8 +6,12 @@
 //! with explicit merge nodes — [`OpKind::Add`] for residual connections
 //! (elementwise i32 add, saturating store) and [`OpKind::Concat`] for
 //! feature concatenation. Merge inputs are ordered by edge insertion.
-//! The network output is the graph's *unique sink*; multi-output graphs
-//! are rejected until multi-output drains land.
+//! Network outputs are the graph's *sinks*: every node without a consumer
+//! drains to the host through its own output buffer
+//! ([`Graph::output_producers`], id order — frontend layer order). The
+//! single-output accessors ([`Graph::output_node`] and friends) keep their
+//! unique-sink contract for callers that mean "the" output, erroring with
+//! [`GraphError::MultipleSinks`] on genuinely multi-output graphs.
 
 use super::node::{Node, NodeId, OpKind};
 use std::collections::HashMap;
@@ -196,15 +200,47 @@ impl Graph {
         None // cycle of ReLU nodes
     }
 
-    /// The unique sink node (no outgoing edges). Errors when the graph has
-    /// no sink or more than one (multi-output models are not supported yet).
-    pub fn output_node(&self) -> Result<NodeId, GraphError> {
-        let sinks: Vec<NodeId> = self
-            .nodes
+    /// All sink nodes (no outgoing edges), in node-id order — which is the
+    /// frontend's layer order for JSON-built graphs, so per-sink outputs
+    /// line up with what the model author wrote.
+    pub fn sink_nodes(&self) -> Vec<NodeId> {
+        self.nodes
             .iter()
             .filter(|n| self.successors(n.id).is_empty())
             .map(|n| n.id)
-            .collect();
+            .collect()
+    }
+
+    /// The nodes whose values are the network outputs: every sink, with
+    /// `Output` markers skipped back to their single predecessor, in id
+    /// order. This is the multi-output generalization of
+    /// [`Graph::output_producer`]; single-sink graphs yield one entry.
+    pub fn output_producers(&self) -> Result<Vec<NodeId>, GraphError> {
+        let sinks = self.sink_nodes();
+        if sinks.is_empty() {
+            return Err(GraphError::NoOutput);
+        }
+        let mut out = Vec::with_capacity(sinks.len());
+        for sink in sinks {
+            if !matches!(self.nodes[sink].op, OpKind::Output) {
+                out.push(sink);
+                continue;
+            }
+            let preds = self.predecessors(sink);
+            match preds.len() {
+                1 => out.push(preds[0]),
+                _ => return Err(GraphError::NoOutput),
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// The unique sink node (no outgoing edges). Errors when the graph has
+    /// no sink or more than one (callers that support multi-output graphs
+    /// use [`Graph::output_producers`] instead).
+    pub fn output_node(&self) -> Result<NodeId, GraphError> {
+        let sinks = self.sink_nodes();
         match sinks.len() {
             0 => Err(GraphError::NoOutput),
             1 => Ok(sinks[0]),
@@ -515,8 +551,10 @@ mod tests {
     }
 
     #[test]
-    fn multiple_sinks_rejected() {
-        // Two unconsumed dense layers -> no unique network output.
+    fn multiple_sinks_enumerate_per_sink_producers() {
+        // Two unconsumed dense layers: the single-output accessors keep
+        // erroring (no unique network output), while the multi-output query
+        // names both sinks in id (= layer) order.
         let mut g = Graph::new();
         let i = g.add_node("in", OpKind::Input { features: 8 });
         let a = g.add_node(
@@ -530,5 +568,11 @@ mod tests {
         g.connect(i, a);
         g.connect(i, b);
         assert!(matches!(g.output_features(), Err(GraphError::MultipleSinks(2))));
+        assert_eq!(g.output_producers().unwrap(), vec![a, b]);
+        assert_eq!(g.sink_nodes(), vec![a, b]);
+        // An Output marker is skipped back to its producer.
+        let out = g.add_node("output", OpKind::Output);
+        g.connect(b, out);
+        assert_eq!(g.output_producers().unwrap(), vec![a, b]);
     }
 }

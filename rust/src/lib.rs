@@ -10,6 +10,9 @@
 //!   ingestion, AIE-IR, the 7-stage pass pipeline (lowering, quantization,
 //!   resolve, packing, graph planning, branch-and-bound placement, project
 //!   emission).
+//! * [`partition`] — the multi-array partitioner: shards a DAG model into
+//!   pipelined partitions (one array each) with typed inter-partition
+//!   links when it exceeds a single array's tile/mem-tile budget.
 //! * [`sim`] — the simulator substrate: bit-exact functional execution and
 //!   a calibrated cycle-approximate performance model.
 //! * [`runtime`] — bit-exactness oracles: the hermetic pure-Rust reference
@@ -27,6 +30,7 @@ pub mod coordinator;
 pub mod frontend;
 pub mod harness;
 pub mod ir;
+pub mod partition;
 pub mod passes;
 pub mod runtime;
 pub mod sim;

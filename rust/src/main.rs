@@ -19,6 +19,7 @@ USAGE:
   aie4ml compile <model.json> [--config <cfg.json>] [--out <dir>] [--batch N] [--verify]
   aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
   aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
+  aie4ml partition <model.json> [--config <cfg.json>] [--batch N] [--parts K] [--max-parts K]
   aie4ml oracle  <model.json> [--config <cfg.json>] [--batch N] [--seed N]
   aie4ml zoo     [--dir <artifacts-dir>] [--force]
   aie4ml bench   [table1|table2|fig3|fig4|table3|table4|table5|all]
@@ -188,6 +189,77 @@ fn main() -> Result<()> {
             let cfg = load_config(&args, 128)?;
             let compiled = compile(&json, cfg)?;
             print_perf(&analyze(compiled.firmware.as_ref().unwrap(), &EngineModel::default()));
+        }
+        "partition" => {
+            // Multi-array pipeline: cut the model into K partitions (auto
+            // when --parts is omitted: the smallest K that places), verify
+            // the pipeline bit-exactly against the reference oracle, and
+            // report steady-state pipeline performance.
+            let args = Args::parse(rest, &[])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)
+                .with_context(|| format!("loading {model_path}"))?;
+            let cfg = load_config(&args, 16)?;
+            let parts = match args.flags.get("parts") {
+                Some(v) => Some(v.parse::<usize>().context("--parts must be an integer")?),
+                None => None,
+            };
+            let opts = aie4ml::partition::PartitionOptions {
+                partitions: parts,
+                max_partitions: args.get_usize("max-parts", 8)?,
+            };
+            let pm = aie4ml::partition::compile_partitioned(&json, cfg, &opts)?;
+            let pfw = &pm.firmware;
+            pfw.check_invariants()?;
+            println!(
+                "partitioned '{}' into {} pipeline partition(s), cuts after layers {:?}",
+                pfw.model_name,
+                pfw.k(),
+                pm.cuts
+            );
+            for (i, fw) in pfw.partitions.iter().enumerate() {
+                let link = pfw
+                    .links
+                    .get(i)
+                    .map(|l| format!("  -> '{}' ({} feat, {})", l.tensor, l.features, l.quant.dtype))
+                    .unwrap_or_default();
+                println!(
+                    "  partition {i}: {} layers, {} tiles on {}{}",
+                    fw.layers.len(),
+                    fw.tiles_used(),
+                    fw.device.name,
+                    link
+                );
+            }
+            // Bit-exactness gate vs the unpartitioned reference oracle.
+            let batch = pfw.batch();
+            let mut rng = Pcg32::seed_from_u64(7);
+            let (lo, hi) = pfw.partitions[0].input_quant.dtype.range();
+            let x = Activation::new(
+                batch,
+                pfw.input_features(),
+                (0..batch * pfw.input_features()).map(|_| rng.gen_i32_in(lo, hi)).collect(),
+            )?;
+            let got = aie4ml::partition::execute_partitioned(pfw, &x)?;
+            let oracle = aie4ml::runtime::ReferenceOracle::from_model(&json)?;
+            let want = oracle.execute_all(&x)?;
+            let mut mismatches = 0usize;
+            for (g, w) in got.iter().zip(&want) {
+                mismatches += g.data.iter().zip(&w.data).filter(|(a, b)| a != b).count();
+            }
+            println!(
+                "oracle: {} outputs compared, {mismatches} mismatches -> {}",
+                got.len(),
+                if mismatches == 0 { "BIT-EXACT" } else { "MISMATCH" }
+            );
+            if mismatches > 0 {
+                bail!("partitioned pipeline is not bit-exact against the reference oracle");
+            }
+            let rep = aie4ml::partition::analyze_pipeline(pfw, &EngineModel::default());
+            println!(
+                "pipeline: interval {:.3} µs / batch of {}   latency {:.2} µs   {:.2} TOPS over {} tiles",
+                rep.interval_us, rep.batch, rep.latency_us, rep.throughput_tops, rep.tiles_used
+            );
         }
         "oracle" => {
             // Hermetic bit-exactness gate: compile the model, execute the

@@ -1,0 +1,271 @@
+//! Cut search: where a model's layer DAG may be sliced into pipeline
+//! partitions, and which cuts balance the pipeline best.
+//!
+//! Layers in the exporter JSON are listed in a valid topological order
+//! (every `inputs` entry names an *earlier* layer), so a partition is a
+//! contiguous run of layers and a cut is a position between two layers.
+//! A position qualifies as a [`CutCandidate`] only when exactly **one**
+//! tensor is live across it — the single value produced at or before the
+//! cut that any later layer still reads. That tensor becomes the typed
+//! inter-partition link: the upstream partition drains it through an
+//! output buffer (multi-sink emission), the downstream partition ingests
+//! it as its network input. Residual skips therefore cut *after* their
+//! merge, never inside the skip window, and a diamond cuts before its
+//! fan-out or after its fan-in — exactly the synchronization points where
+//! an array-to-array hop is physically a single stream.
+//!
+//! [`choose_cuts`] picks `k − 1` candidates minimizing the heaviest
+//! partition (MACs as the stage-time proxy), the pipeline analog of the
+//! Eq. 2 objective: steady-state interval is governed by the slowest
+//! partition, so the bottleneck weight is what the search must flatten.
+//! Each partition is then compiled with the full pass pipeline, so the
+//! Eq. 2 placement objective is re-optimized per partition.
+
+use crate::frontend::JsonModel;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// One legal cut position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CutCandidate {
+    /// The cut sits after `layers[after]` (0-based layer index).
+    pub after: usize,
+    /// Name of the single tensor crossing the cut (the link tensor).
+    pub tensor: String,
+}
+
+/// Enumerate every legal cut position. A position `after` qualifies when:
+/// exactly one layer-produced tensor is consumed across it, the raw
+/// network input is not read beyond it, and the first downstream layer is
+/// dense (it becomes the downstream partition's input-consuming layer).
+/// Liveness is computed over [`JsonModel::effective_inputs`] — the same
+/// wiring rule `to_graph` connects, so a legal cut here is a legal cut in
+/// the compiled graph.
+pub fn cut_candidates(json: &JsonModel) -> Vec<CutCandidate> {
+    let inputs = json.effective_inputs();
+    let n = json.layers.len();
+    let index_of = |name: &str| json.layers.iter().position(|l| l.name == name);
+    let mut out = Vec::new();
+    for after in 0..n.saturating_sub(1) {
+        // Tensors produced at or before the cut but read after it.
+        let mut crossing: BTreeSet<&str> = BTreeSet::new();
+        let mut input_crosses = false;
+        for consumer in after + 1..n {
+            for src in &inputs[consumer] {
+                if src == "input" {
+                    input_crosses = true;
+                } else if index_of(src).map(|p| p <= after).unwrap_or(false) {
+                    crossing.insert(src.as_str());
+                }
+            }
+        }
+        if input_crosses || crossing.len() != 1 {
+            continue;
+        }
+        if json.layers[after + 1].ty != "dense" {
+            continue; // the downstream partition's first layer must be dense
+        }
+        out.push(CutCandidate {
+            after,
+            tensor: (*crossing.iter().next().unwrap()).to_string(),
+        });
+    }
+    out
+}
+
+/// MACs per layer (merge layers are free), the per-partition weight the
+/// balance objective sums.
+fn layer_macs(json: &JsonModel) -> Vec<u64> {
+    json.layers
+        .iter()
+        .map(|l| {
+            if l.ty == "dense" {
+                (l.in_features * l.out_features) as u64
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// Choose `k - 1` cut positions (a subset of `candidates`) minimizing the
+/// heaviest partition's MAC weight — the pipeline bottleneck. Returns the
+/// chosen `after` indices in ascending order. Classic contiguous-partition
+/// DP over the candidate boundaries (tiny inputs; exactness is free).
+pub fn choose_cuts(json: &JsonModel, candidates: &[CutCandidate], k: usize) -> Result<Vec<usize>> {
+    let n = json.layers.len();
+    if k == 0 {
+        bail!("cannot partition into zero partitions");
+    }
+    if k == 1 {
+        return Ok(Vec::new());
+    }
+    if candidates.len() < k - 1 {
+        bail!(
+            "model '{}' has {} legal cut points; {} partitions need {}",
+            json.name,
+            candidates.len(),
+            k,
+            k - 1
+        );
+    }
+    let macs = layer_macs(json);
+    let prefix: Vec<u64> = std::iter::once(0)
+        .chain(macs.iter().scan(0u64, |acc, &m| {
+            *acc += m;
+            Some(*acc)
+        }))
+        .collect();
+    // Segment weight between boundary positions (exclusive layer ranges):
+    // boundaries are "after layer b" cut points plus the virtual ends
+    // before layer 0 and after layer n-1.
+    let bounds: Vec<usize> = std::iter::once(0)
+        .chain(candidates.iter().map(|c| c.after + 1))
+        .chain(std::iter::once(n))
+        .collect();
+    let seg = |a: usize, b: usize| prefix[bounds[b]] - prefix[bounds[a]];
+    let m = bounds.len() - 1; // number of atomic segments
+    // dp[j][i]: minimal bottleneck splitting segments 0..i into j parts.
+    let mut dp = vec![vec![u64::MAX; m + 1]; k + 1];
+    let mut back = vec![vec![0usize; m + 1]; k + 1];
+    for i in 1..=m {
+        dp[1][i] = seg(0, i);
+    }
+    for j in 2..=k {
+        for i in j..=m {
+            for split in j - 1..i {
+                if dp[j - 1][split] == u64::MAX {
+                    continue;
+                }
+                let cost = dp[j - 1][split].max(seg(split, i));
+                if cost < dp[j][i] {
+                    dp[j][i] = cost;
+                    back[j][i] = split;
+                }
+            }
+        }
+    }
+    if dp[k][m] == u64::MAX {
+        bail!("model '{}' cannot be split into {k} partitions", json.name);
+    }
+    // Recover the chosen boundary indices, then map back to `after` values.
+    let mut cuts = Vec::with_capacity(k - 1);
+    let mut i = m;
+    for j in (2..=k).rev() {
+        let split = back[j][i];
+        cuts.push(bounds[split] - 1); // boundary before segment `split` = after layer
+        i = split;
+    }
+    cuts.reverse();
+    Ok(cuts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::JsonLayer;
+
+    fn dense(name: &str, fin: usize, fout: usize) -> JsonLayer {
+        JsonLayer::dense(name, fin, fout, false, false, "int8", "int8", 0, vec![0; fin * fout], vec![])
+    }
+
+    fn chain(dims: &[usize]) -> JsonModel {
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| dense(&format!("fc{}", i + 1), w[0], w[1]))
+            .collect();
+        JsonModel::new("chain", layers)
+    }
+
+    #[test]
+    fn every_chain_boundary_is_a_candidate() {
+        let m = chain(&[8, 8, 8, 8]);
+        let c = cut_candidates(&m);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0], CutCandidate { after: 0, tensor: "fc1".into() });
+        assert_eq!(c[1], CutCandidate { after: 1, tensor: "fc2".into() });
+    }
+
+    #[test]
+    fn residual_skip_window_is_uncuttable() {
+        // input -> fc1 -> fc2, add(input, fc2), head: the raw input stays
+        // live until the merge, so the only legal cut is after the merge.
+        let m = JsonModel::new(
+            "res",
+            vec![
+                dense("fc1", 8, 16),
+                dense("fc2", 16, 8),
+                JsonLayer::residual_add("res", 8, "int8", 0, &["input", "fc2"]),
+                dense("head", 8, 4).with_inputs(&["res"]),
+            ],
+        );
+        let c = cut_candidates(&m);
+        assert_eq!(c, vec![CutCandidate { after: 2, tensor: "res".into() }]);
+    }
+
+    #[test]
+    fn diamond_cuts_at_fanout_and_fanin() {
+        let m = JsonModel::new(
+            "dia",
+            vec![
+                dense("stem", 8, 8),
+                dense("a", 8, 8).with_inputs(&["stem"]),
+                dense("b", 8, 8).with_inputs(&["stem"]),
+                JsonLayer::residual_add("merge", 8, "int8", 0, &["a", "b"]),
+                dense("head", 8, 4).with_inputs(&["merge"]),
+            ],
+        );
+        let c = cut_candidates(&m);
+        let afters: Vec<usize> = c.iter().map(|c| c.after).collect();
+        // After the stem (only `stem` crosses) and after the merge; inside
+        // the branch window two tensors are live, so no cut exists there.
+        assert_eq!(afters, vec![0, 3]);
+    }
+
+    #[test]
+    fn multi_sink_cuts_keep_stranded_heads_as_upstream_outputs() {
+        // head_a is unconsumed (a network sink). Cutting after it is legal
+        // because only `trunk` crosses — head_a simply becomes an output of
+        // the upstream partition (multi-sink drains make that expressible).
+        let m = JsonModel::new(
+            "heads",
+            vec![
+                dense("trunk", 8, 8),
+                dense("head_a", 8, 4).with_inputs(&["trunk"]),
+                dense("head_b", 8, 2).with_inputs(&["trunk"]),
+            ],
+        );
+        let c = cut_candidates(&m);
+        assert_eq!(
+            c,
+            vec![
+                CutCandidate { after: 0, tensor: "trunk".into() },
+                CutCandidate { after: 1, tensor: "trunk".into() },
+            ]
+        );
+        assert_eq!(m.sink_names(), vec!["head_a", "head_b"]);
+    }
+
+    #[test]
+    fn dp_balances_bottleneck() {
+        // Weights 64, 64, 64, 192 (by MACs): the balanced 2-way split puts
+        // the heavy tail alone.
+        let m = chain(&[8, 8, 8, 8, 24]);
+        let c = cut_candidates(&m);
+        let cuts = choose_cuts(&m, &c, 2).unwrap();
+        assert_eq!(cuts, vec![2]); // {fc1,fc2,fc3} | {fc4}
+        let three = choose_cuts(&m, &c, 3).unwrap();
+        assert_eq!(three.len(), 2);
+        assert!(three[0] < three[1]);
+    }
+
+    #[test]
+    fn too_many_partitions_rejected() {
+        let m = chain(&[8, 8, 8]);
+        let c = cut_candidates(&m);
+        assert!(choose_cuts(&m, &c, 4).is_err());
+        assert!(choose_cuts(&m, &c, 2).is_ok());
+        assert!(choose_cuts(&m, &c, 1).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,535 @@
+//! Multi-array model partitioner: shard a DAG model into pipelined
+//! partitions when it exceeds one AIE-ML array (or when the user asks for
+//! a fixed pipeline depth for throughput).
+//!
+//! One VEK280 tops out at 296 placeable tiles and ~19 MiB of memory-tile
+//! SRAM; production models and throughput targets outgrow both. This
+//! module slices the model's layer DAG at *single-tensor* synchronization
+//! points ([`cut::cut_candidates`]), balances the slices with a bottleneck
+//! DP ([`cut::choose_cuts`]), and compiles each slice through the full
+//! 7-pass pipeline — so tiling, mem-tile planning and the Eq. 2
+//! branch-and-bound placement are re-optimized *per array*. Cut edges turn
+//! interior nodes into partition outputs (drained through the multi-sink
+//! output machinery via `CompileConfig::extra_outputs`), and each cut
+//! becomes a typed [`PartitionLink`]: the upstream firmware names which of
+//! its output drains feeds the downstream array's input, with width and
+//! quantization carried along.
+//!
+//! Execution semantics are unchanged: [`execute_partitioned`] runs the
+//! arrays back-to-back and is bit-exact with the unpartitioned model (the
+//! link hop is a pure row-major store/load). Steady-state behaviour is a
+//! K-stage pipeline — interval = slowest partition (or link), latency =
+//! sum of partition fills plus link hops — modeled by
+//! [`pipeline::analyze_pipeline`] and driven for real by
+//! [`crate::coordinator::PipelineServer`].
+
+pub mod cut;
+pub mod pipeline;
+
+use crate::codegen::firmware::Firmware;
+use crate::frontend::{CompileConfig, JsonModel};
+use crate::ir::QuantSpec;
+use crate::passes::{compile, Model};
+use crate::sim::functional::{execute_all, Activation};
+use anyhow::{bail, ensure, Context, Result};
+
+pub use cut::{choose_cuts, cut_candidates, CutCandidate};
+pub use pipeline::{analyze_pipeline, PartitionPerf, PipelinePerfReport};
+
+/// How to partition.
+#[derive(Debug, Clone)]
+pub struct PartitionOptions {
+    /// Explicit partition count, or `None` to search for the smallest K
+    /// whose partitions all compile on one array each.
+    pub partitions: Option<usize>,
+    /// Largest K the auto search tries.
+    pub max_partitions: usize,
+}
+
+impl Default for PartitionOptions {
+    fn default() -> Self {
+        PartitionOptions { partitions: None, max_partitions: 8 }
+    }
+}
+
+/// A typed inter-partition edge: which output drain of partition `i`
+/// feeds partition `i + 1`'s network input.
+#[derive(Debug, Clone)]
+pub struct PartitionLink {
+    /// Index into the upstream partition's `Firmware::outputs`.
+    pub from_output: usize,
+    /// Name of the crossing tensor (the producing layer).
+    pub tensor: String,
+    /// Activation width crossing the link.
+    pub features: usize,
+    /// Quantization of the crossing activation.
+    pub quant: QuantSpec,
+}
+
+/// One final model output, located in whichever partition produced it.
+#[derive(Debug, Clone)]
+pub struct PipelineOutput {
+    /// Partition index holding the producing sink.
+    pub partition: usize,
+    /// Index into that partition's `Firmware::outputs`.
+    pub output: usize,
+    /// Sink layer name.
+    pub name: String,
+}
+
+/// The compiled multi-array artifact: one [`Firmware`] per partition plus
+/// the typed links wiring them into a linear pipeline. `links[i]` connects
+/// partition `i` to `i + 1`; `outputs` lists the original model's sinks in
+/// frontend layer order, each resolved to the partition that produces it.
+#[derive(Debug, Clone)]
+pub struct PartitionedFirmware {
+    pub model_name: String,
+    pub partitions: Vec<Firmware>,
+    pub links: Vec<PartitionLink>,
+    pub outputs: Vec<PipelineOutput>,
+}
+
+impl PartitionedFirmware {
+    /// Pipeline depth (number of arrays).
+    pub fn k(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Compute tiles used summed over every array.
+    pub fn tiles_used(&self) -> usize {
+        self.partitions.iter().map(|p| p.tiles_used()).sum()
+    }
+
+    /// Total MACs per sample across the pipeline.
+    pub fn macs_per_sample(&self) -> usize {
+        self.partitions.iter().map(|p| p.macs_per_sample()).sum()
+    }
+
+    /// Steady-state batch every partition is specialized to.
+    pub fn batch(&self) -> usize {
+        self.partitions[0].batch
+    }
+
+    /// Network input width (partition 0's input).
+    pub fn input_features(&self) -> usize {
+        self.partitions[0].input_features()
+    }
+
+    /// Feature count of final output `i` (index into `outputs`).
+    pub fn output_features_of(&self, i: usize) -> usize {
+        let o = &self.outputs[i];
+        self.partitions[o.partition].output_features_of(o.output)
+    }
+
+    /// Sanity invariants over the assembled pipeline.
+    pub fn check_invariants(&self) -> Result<()> {
+        ensure!(!self.partitions.is_empty(), "pipeline has no partitions");
+        ensure!(
+            self.links.len() + 1 == self.partitions.len(),
+            "{} links for {} partitions",
+            self.links.len(),
+            self.partitions.len()
+        );
+        ensure!(!self.outputs.is_empty(), "pipeline has no final outputs");
+        let batch = self.batch();
+        for (i, fw) in self.partitions.iter().enumerate() {
+            fw.check_invariants()?;
+            ensure!(fw.batch == batch, "partition {i} batch {} != {batch}", fw.batch);
+        }
+        for (i, link) in self.links.iter().enumerate() {
+            let up = &self.partitions[i];
+            let down = &self.partitions[i + 1];
+            ensure!(
+                link.from_output < up.outputs.len(),
+                "link {i}: output index {} out of range",
+                link.from_output
+            );
+            ensure!(
+                up.output_features_of(link.from_output) == down.input_features(),
+                "link {i} ('{}'): {} features into a {}-feature input",
+                link.tensor,
+                up.output_features_of(link.from_output),
+                down.input_features()
+            );
+            ensure!(
+                link.quant.dtype == down.input_quant.dtype,
+                "link {i} ('{}'): dtype {} into {} input",
+                link.tensor,
+                link.quant.dtype,
+                down.input_quant.dtype
+            );
+        }
+        for o in &self.outputs {
+            ensure!(o.partition < self.partitions.len(), "output '{}' partition oob", o.name);
+            ensure!(
+                o.output < self.partitions[o.partition].outputs.len(),
+                "output '{}' index oob",
+                o.name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Result of a partitioned compile: the assembled pipeline firmware plus
+/// the per-partition [`Model`]s (placement reports etc. intact).
+pub struct PartitionedModel {
+    pub firmware: PartitionedFirmware,
+    pub models: Vec<Model>,
+    /// The chosen cut positions (`after` layer indices) in the original model.
+    pub cuts: Vec<usize>,
+}
+
+/// One sub-model produced by [`split_model`].
+struct SubModel {
+    model: JsonModel,
+    /// Crossing tensor this partition must drain for the next one.
+    link_tensor: Option<String>,
+}
+
+/// Slice `json` at the chosen cut positions into K sub-models. Each cut's
+/// crossing tensor becomes the upstream sub-model's extra output and the
+/// downstream sub-model's network input (references renamed to
+/// `"input"`). Layer payloads, quantizers and per-layer names are
+/// preserved, so per-layer config overrides keep applying.
+fn split_model(
+    json: &JsonModel,
+    candidates: &[CutCandidate],
+    cuts: &[usize],
+) -> Result<Vec<SubModel>> {
+    let tensor_of = |after: usize| -> Result<&str> {
+        candidates
+            .iter()
+            .find(|c| c.after == after)
+            .map(|c| c.tensor.as_str())
+            .with_context(|| format!("cut after layer {after} is not a legal cut point"))
+    };
+    let index_of = |name: &str| json.layers.iter().position(|l| l.name == name);
+    let mut subs = Vec::with_capacity(cuts.len() + 1);
+    let mut lo = 0usize;
+    for i in 0..=cuts.len() {
+        let hi = if i < cuts.len() { cuts[i] } else { json.layers.len() - 1 };
+        ensure!(lo <= hi, "cut positions must be strictly increasing");
+        // The tensor entering this partition (renamed to "input" inside).
+        let incoming: Option<&str> = if i == 0 { None } else { Some(tensor_of(cuts[i - 1])?) };
+        let mut layers = Vec::with_capacity(hi - lo + 1);
+        for g in lo..=hi {
+            let mut l = json.layers[g].clone();
+            if !l.inputs.is_empty() {
+                for src in &mut l.inputs {
+                    if Some(src.as_str()) == incoming {
+                        *src = "input".to_string();
+                    } else if src != "input" {
+                        let p = index_of(src).with_context(|| {
+                            format!("layer '{}' reads unknown '{src}'", l.name)
+                        })?;
+                        ensure!(
+                            (lo..g).contains(&p),
+                            "cut after layer {} severs edge '{}' -> '{}' (not the link tensor)",
+                            lo.saturating_sub(1),
+                            src,
+                            l.name
+                        );
+                    } else {
+                        ensure!(
+                            i == 0,
+                            "layer '{}' reads the raw network input across a cut",
+                            l.name
+                        );
+                    }
+                }
+            }
+            layers.push(l);
+        }
+        let link_tensor = if i < cuts.len() {
+            let t = tensor_of(cuts[i])?;
+            let p = index_of(t).context("link tensor names no layer")?;
+            ensure!(
+                (lo..=hi).contains(&p),
+                "link tensor '{t}' is not produced inside partition {i} \
+                 (an intermediate partition produces nothing the pipeline consumes)"
+            );
+            Some(t.to_string())
+        } else {
+            None
+        };
+        // K = 1 keeps the original model name (it *is* the original model);
+        // real slices are suffixed with their pipeline position.
+        let sub_name =
+            if cuts.is_empty() { json.name.clone() } else { format!("{}.p{i}", json.name) };
+        let mut model = JsonModel::new(&sub_name, layers);
+        model.device = json.device.clone();
+        subs.push(SubModel { model, link_tensor });
+        lo = hi + 1;
+    }
+    Ok(subs)
+}
+
+/// Compile one partitioning attempt at a fixed K.
+fn try_k(
+    json: &JsonModel,
+    cfg: &CompileConfig,
+    candidates: &[CutCandidate],
+    k: usize,
+) -> Result<PartitionedModel> {
+    let cuts = choose_cuts(json, candidates, k)?;
+    let subs = split_model(json, candidates, &cuts)?;
+    let mut models = Vec::with_capacity(subs.len());
+    for (i, sub) in subs.iter().enumerate() {
+        let mut sub_cfg = cfg.clone();
+        // Keep any user-requested extra drains that live in this slice
+        // (a drain can only land in the partition that owns the layer),
+        // and add the link tensor on top.
+        sub_cfg
+            .extra_outputs
+            .retain(|name| sub.model.layers.iter().any(|l| &l.name == name));
+        if let Some(t) = &sub.link_tensor {
+            if !sub_cfg.extra_outputs.contains(t) {
+                sub_cfg.extra_outputs.push(t.clone());
+            }
+        }
+        let model = compile(&sub.model, sub_cfg)
+            .with_context(|| format!("partition {i} ('{}')", sub.model.name))?;
+        models.push(model);
+    }
+    let partitions: Vec<Firmware> = models
+        .iter()
+        .map(|m| m.firmware.clone().context("partition compiled without firmware"))
+        .collect::<Result<_>>()?;
+    // Typed links: resolve each crossing tensor to its drain index.
+    let mut links = Vec::with_capacity(subs.len().saturating_sub(1));
+    for (i, sub) in subs.iter().enumerate().take(subs.len() - 1) {
+        let tensor = sub.link_tensor.as_ref().context("non-final partition without a link")?;
+        let fw = &partitions[i];
+        let from_output = fw
+            .outputs
+            .iter()
+            .position(|o| &o.name == tensor)
+            .with_context(|| format!("partition {i} does not drain link tensor '{tensor}'"))?;
+        links.push(PartitionLink {
+            from_output,
+            tensor: tensor.clone(),
+            features: fw.output_features_of(from_output),
+            quant: fw.stage_quant(fw.outputs[from_output].stage),
+        });
+    }
+    // Final model outputs: the original sinks, wherever they landed.
+    let mut outputs = Vec::new();
+    for name in json.sink_names() {
+        let mut found = None;
+        for (pi, fw) in partitions.iter().enumerate() {
+            if let Some(oi) = fw.outputs.iter().position(|o| o.name == name) {
+                found = Some(PipelineOutput { partition: pi, output: oi, name: name.clone() });
+                break;
+            }
+        }
+        outputs.push(found.with_context(|| format!("model output '{name}' drained nowhere"))?);
+    }
+    let firmware = PartitionedFirmware {
+        model_name: json.name.clone(),
+        partitions,
+        links,
+        outputs,
+    };
+    firmware.check_invariants()?;
+    Ok(PartitionedModel { firmware, models, cuts })
+}
+
+/// Compile `json` into a pipelined multi-array deployment.
+///
+/// With `opts.partitions = Some(k)` the model is cut into exactly `k`
+/// partitions (error if impossible). In auto mode the smallest K whose
+/// partitions *all* compile within one array each is chosen — K = 1 is the
+/// plain single-array compile, so models that fit produce a degenerate
+/// one-partition pipeline with identical firmware.
+pub fn compile_partitioned(
+    json: &JsonModel,
+    cfg: CompileConfig,
+    opts: &PartitionOptions,
+) -> Result<PartitionedModel> {
+    json.validate()?;
+    let candidates = cut_candidates(json);
+    let ks: Vec<usize> = match opts.partitions {
+        Some(0) => bail!("partition count must be positive"),
+        Some(k) => vec![k],
+        None => (1..=opts.max_partitions.max(1)).collect(),
+    };
+    let mut last_err: Option<anyhow::Error> = None;
+    for k in ks {
+        match try_k(json, &cfg, &candidates, k) {
+            Ok(pm) => return Ok(pm),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow::anyhow!("no partition count attempted"))
+        .context(format!(
+            "model '{}' does not fit {} (tried up to {} partitions)",
+            json.name,
+            cfg.device,
+            opts.max_partitions.max(1)
+        )))
+}
+
+/// Execute the pipeline end to end on one batch and return the final model
+/// outputs (sink order). Bit-exact with the unpartitioned model: the link
+/// hop is a row-major store/load of an already-quantized activation.
+pub fn execute_partitioned(
+    pfw: &PartitionedFirmware,
+    input: &Activation,
+) -> Result<Vec<Activation>> {
+    let mut finals: Vec<Option<Activation>> = vec![None; pfw.outputs.len()];
+    let mut carry: Option<Activation> = None;
+    for (i, fw) in pfw.partitions.iter().enumerate() {
+        let x = carry.as_ref().unwrap_or(input);
+        let mut outs = execute_all(fw, x)?;
+        for (slot, o) in pfw.outputs.iter().enumerate() {
+            if o.partition == i {
+                finals[slot] = Some(outs[o.output].clone());
+            }
+        }
+        if i + 1 < pfw.partitions.len() {
+            carry = Some(outs.swap_remove(pfw.links[i].from_output));
+        }
+    }
+    finals
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.with_context(|| format!("output '{}' never produced", pfw.outputs[i].name)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::models::{diamond_mlp_model, mlp_spec, residual_mlp_model, synth_model};
+    use crate::runtime::ReferenceOracle;
+    use crate::util::Pcg32;
+
+    fn cfg(batch: usize, tiles: usize) -> CompileConfig {
+        let mut c = CompileConfig::default();
+        c.batch = batch;
+        c.tiles_per_layer = Some(tiles);
+        c
+    }
+
+    fn random_input(features: usize, batch: usize, seed: u64) -> Activation {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        Activation::new(
+            batch,
+            features,
+            (0..batch * features).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn k1_wraps_the_plain_compile() {
+        let json = synth_model("part_k1", &mlp_spec(&[64, 48, 16], crate::arch::Dtype::I8), 6);
+        let pm = compile_partitioned(&json, cfg(4, 2), &PartitionOptions::default()).unwrap();
+        assert_eq!(pm.firmware.k(), 1);
+        assert!(pm.cuts.is_empty());
+        assert!(pm.firmware.links.is_empty());
+        // Degenerate pipeline executes exactly like the plain firmware.
+        let plain = compile(&json, cfg(4, 2)).unwrap().firmware.unwrap();
+        let x = random_input(64, 4, 1);
+        let got = execute_partitioned(&pm.firmware, &x).unwrap();
+        let want = crate::sim::functional::execute(&plain, &x).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].data, want.data);
+    }
+
+    #[test]
+    fn explicit_k2_chain_is_bit_exact() {
+        let json = synth_model("part_k2", &mlp_spec(&[96, 64, 48, 32], crate::arch::Dtype::I8), 6);
+        let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
+        let pm = compile_partitioned(&json, cfg(6, 2), &opts).unwrap();
+        assert_eq!(pm.firmware.k(), 2);
+        assert_eq!(pm.firmware.links.len(), 1);
+        let x = random_input(96, 6, 7);
+        let got = execute_partitioned(&pm.firmware, &x).unwrap();
+        let oracle = ReferenceOracle::from_model(&json).unwrap();
+        let want = oracle.execute(&x).unwrap();
+        assert_eq!(got[0].data, want.data);
+        // The link is typed: width and dtype of the crossing tensor.
+        let link = &pm.firmware.links[0];
+        assert_eq!(link.features, pm.firmware.partitions[1].input_features());
+        assert_eq!(link.quant.dtype, pm.firmware.partitions[1].input_quant.dtype);
+    }
+
+    #[test]
+    fn residual_dag_partitions_after_the_merge() {
+        let json = residual_mlp_model("part_res", 64, 96, 16, 6);
+        let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
+        let pm = compile_partitioned(&json, cfg(4, 2), &opts).unwrap();
+        assert_eq!(pm.cuts, vec![2]); // the only legal cut: after the merge
+        assert_eq!(pm.firmware.links[0].tensor, "res");
+        let x = random_input(64, 4, 3);
+        let got = execute_partitioned(&pm.firmware, &x).unwrap();
+        let want = ReferenceOracle::from_model(&json).unwrap().execute(&x).unwrap();
+        assert_eq!(got[0].data, want.data);
+    }
+
+    #[test]
+    fn diamond_k3_is_bit_exact() {
+        let json = diamond_mlp_model("part_dia", 48, 48, 8, 6);
+        let opts = PartitionOptions { partitions: Some(3), ..Default::default() };
+        let pm = compile_partitioned(&json, cfg(4, 2), &opts).unwrap();
+        assert_eq!(pm.firmware.k(), 3);
+        let x = random_input(48, 4, 9);
+        let got = execute_partitioned(&pm.firmware, &x).unwrap();
+        let want = ReferenceOracle::from_model(&json).unwrap().execute(&x).unwrap();
+        assert_eq!(got[0].data, want.data);
+    }
+
+    #[test]
+    fn stranded_multi_sink_head_drains_from_its_partition() {
+        // trunk -> {head_a, head_b}; cut after head_a strands it upstream:
+        // the final outputs still surface in model sink order, head_a from
+        // partition 0 and head_b from partition 1, and `trunk` is drained
+        // as an *interior* extra output feeding the link.
+        use crate::frontend::JsonLayer;
+        let mut r = Pcg32::seed_from_u64(0xFA7);
+        let mut dense = |name: &str, fin: usize, fout: usize| {
+            let w: Vec<i32> = (0..fin * fout).map(|_| r.gen_i32_in(-128, 127)).collect();
+            JsonLayer::dense(name, fin, fout, false, false, "int8", "int8", 6, w, vec![])
+        };
+        // head_b is by far the heaviest layer, so the balanced 2-way cut
+        // lands *after* head_a — stranding it upstream and forcing `trunk`
+        // (consumed by head_a inside partition 0) to drain as an interior
+        // extra output feeding the link.
+        let json = JsonModel::new(
+            "strand",
+            vec![
+                dense("trunk", 16, 16),
+                dense("head_a", 16, 16).with_inputs(&["trunk"]),
+                dense("head_b", 16, 256).with_inputs(&["trunk"]),
+            ],
+        );
+        let candidates = cut_candidates(&json);
+        assert_eq!(candidates.len(), 2);
+        let subs = split_model(&json, &candidates, &[1]).unwrap();
+        assert_eq!(subs[0].link_tensor.as_deref(), Some("trunk"));
+        let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
+        let pm = compile_partitioned(&json, cfg(4, 1), &opts).unwrap();
+        assert_eq!(pm.cuts, vec![1]);
+        // Partition 0 drains the interior trunk (the link) plus head_a.
+        assert_eq!(pm.firmware.partitions[0].output_names(), vec!["trunk", "head_a"]);
+        assert_eq!(pm.firmware.links[0].tensor, "trunk");
+        let names: Vec<&str> = pm.firmware.outputs.iter().map(|o| o.name.as_str()).collect();
+        assert_eq!(names, vec!["head_a", "head_b"]);
+        let x = random_input(16, 4, 5);
+        let got = execute_partitioned(&pm.firmware, &x).unwrap();
+        let want = ReferenceOracle::from_model(&json).unwrap().execute_all(&x).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].data, want[0].data);
+        assert_eq!(got[1].data, want[1].data);
+    }
+
+    #[test]
+    fn impossible_k_rejected() {
+        let json = synth_model("part_bad", &mlp_spec(&[32, 16], crate::arch::Dtype::I8), 6);
+        let opts = PartitionOptions { partitions: Some(3), ..Default::default() };
+        assert!(compile_partitioned(&json, cfg(2, 1), &opts).is_err());
+    }
+}

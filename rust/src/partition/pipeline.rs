@@ -1,0 +1,189 @@
+//! Steady-state performance model of a partitioned, multi-array pipeline.
+//!
+//! Each partition occupies its own AIE-ML array and the arrays form a
+//! K-stage macro-pipeline connected by inter-array links (on real silicon:
+//! the NoC / PL stream between packages; modeled as a mem-tile-rate DMA
+//! transfer plus one descriptor setup, since the link ingests from and
+//! lands into memory-tile buffers on both sides). Double buffering on the
+//! link buffers means batches overlap across arrays, so:
+//!
+//! * **interval** — the slowest pipeline stage: the worst per-partition
+//!   steady-state interval, or the slowest link transfer if the wire is
+//!   the bottleneck;
+//! * **latency** — the sum of every partition's fill latency plus every
+//!   link hop (a batch must traverse all K arrays before its first output
+//!   appears).
+//!
+//! A one-partition pipeline degenerates to [`crate::sim::engine::analyze`]
+//! exactly — same interval, same latency.
+
+use super::PartitionedFirmware;
+use crate::sim::engine::{analyze, EngineModel};
+
+/// Per-partition summary row.
+#[derive(Debug, Clone)]
+pub struct PartitionPerf {
+    pub name: String,
+    /// Dense stages in this partition.
+    pub layers: usize,
+    pub tiles: usize,
+    /// Steady-state interval of this partition alone (cycles/batch).
+    pub interval_cycles: f64,
+    /// Fill latency of this partition alone (cycles).
+    pub latency_cycles: f64,
+}
+
+/// Whole-pipeline performance report.
+#[derive(Debug, Clone)]
+pub struct PipelinePerfReport {
+    pub model_name: String,
+    /// Pipeline depth (number of arrays).
+    pub k: usize,
+    pub batch: usize,
+    /// Tiles summed over every array.
+    pub tiles_used: usize,
+    /// Steady-state cycles between consecutive batch outputs.
+    pub interval_cycles: f64,
+    /// End-to-end cycles for one batch through the empty pipeline.
+    pub latency_cycles: f64,
+    pub interval_us: f64,
+    pub latency_us: f64,
+    /// Steady-state per-sample output interval, µs.
+    pub interval_per_sample_us: f64,
+    /// Sustained throughput over the whole deployment, TOPS.
+    pub throughput_tops: f64,
+    /// Total link-hop cycles charged to latency.
+    pub link_cycles: f64,
+    pub partitions: Vec<PartitionPerf>,
+}
+
+impl PipelinePerfReport {
+    /// The partition bounding the steady-state interval.
+    pub fn bottleneck_partition(&self) -> Option<&PartitionPerf> {
+        self.partitions
+            .iter()
+            .max_by(|a, b| a.interval_cycles.partial_cmp(&b.interval_cycles).unwrap())
+    }
+}
+
+/// Cycles for one inter-partition link transfer of `bytes`.
+fn link_transfer_cycles(bytes: usize, port_bytes: usize, model: &EngineModel) -> f64 {
+    bytes as f64 / port_bytes.max(1) as f64 + model.dma_setup as f64
+}
+
+/// Analyze a partitioned pipeline under the engine's cost model.
+pub fn analyze_pipeline(pfw: &PartitionedFirmware, model: &EngineModel) -> PipelinePerfReport {
+    let batch = pfw.batch();
+    let mut partitions = Vec::with_capacity(pfw.partitions.len());
+    let mut interval = 0.0f64;
+    let mut latency = 0.0f64;
+    for fw in &pfw.partitions {
+        let rep = analyze(fw, model);
+        interval = interval.max(rep.interval_cycles);
+        latency += rep.latency_cycles;
+        partitions.push(PartitionPerf {
+            name: fw.model_name.clone(),
+            layers: fw.layers.len(),
+            tiles: fw.tiles_used(),
+            interval_cycles: rep.interval_cycles,
+            latency_cycles: rep.latency_cycles,
+        });
+    }
+    let mut link_cycles = 0.0f64;
+    for (i, link) in pfw.links.iter().enumerate() {
+        let device = &pfw.partitions[i].device;
+        let bytes = batch * link.features * link.quant.dtype.bytes();
+        let hop = link_transfer_cycles(bytes, device.mem_tile_port_bytes, model);
+        // A link is a pipeline stage of its own: it bounds the interval
+        // when the wire is slower than every array, and every hop adds to
+        // the fill latency.
+        interval = interval.max(hop);
+        link_cycles += hop;
+    }
+    latency += link_cycles;
+    let freq_hz = pfw.partitions[0].device.freq_ghz * 1e9;
+    let interval_us = interval / freq_hz * 1e6;
+    let latency_us = latency / freq_hz * 1e6;
+    let ops = pfw.partitions.iter().map(|p| p.ops_per_sample()).sum::<usize>() as f64
+        * batch as f64;
+    let throughput_tops =
+        if interval > 0.0 { ops / (interval / freq_hz) / 1e12 } else { 0.0 };
+    PipelinePerfReport {
+        model_name: pfw.model_name.clone(),
+        k: pfw.k(),
+        batch,
+        tiles_used: pfw.tiles_used(),
+        interval_cycles: interval,
+        latency_cycles: latency,
+        interval_us,
+        latency_us,
+        interval_per_sample_us: interval_us / batch as f64,
+        throughput_tops,
+        link_cycles,
+        partitions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{mlp_spec, synth_model};
+    use crate::partition::{compile_partitioned, PartitionOptions};
+
+    fn cfg(batch: usize) -> CompileConfig {
+        let mut c = CompileConfig::default();
+        c.batch = batch;
+        c
+    }
+
+    #[test]
+    fn k1_report_matches_engine_analyze() {
+        let json = synth_model("pipe_k1", &mlp_spec(&[128, 128, 64], crate::arch::Dtype::I8), 6);
+        let mut c = cfg(16);
+        c.tiles_per_layer = Some(4);
+        let pm = compile_partitioned(&json, c.clone(), &PartitionOptions::default()).unwrap();
+        assert_eq!(pm.firmware.k(), 1);
+        let pipe = analyze_pipeline(&pm.firmware, &EngineModel::default());
+        let plain = analyze(&pm.firmware.partitions[0], &EngineModel::default());
+        assert_eq!(pipe.interval_cycles, plain.interval_cycles);
+        assert_eq!(pipe.latency_cycles, plain.latency_cycles);
+        assert_eq!(pipe.link_cycles, 0.0);
+    }
+
+    #[test]
+    fn deeper_pipelines_trade_latency_for_interval() {
+        // Re-balancing layers over more arrays gives every layer more
+        // tiles, so the bottleneck stage (interval) shrinks while the fill
+        // path (latency) picks up link hops. Wide layers + a real batch
+        // keep the arrays compute-bound, so the inter-array link is not
+        // the pipeline bottleneck at K = 2.
+        let json = synth_model("pipe_scale", &mlp_spec(&[512; 8], crate::arch::Dtype::I8), 6);
+        let k1 = compile_partitioned(
+            &json,
+            cfg(64),
+            &PartitionOptions { partitions: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        let k2 = compile_partitioned(
+            &json,
+            cfg(64),
+            &PartitionOptions { partitions: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let r1 = analyze_pipeline(&k1.firmware, &EngineModel::default());
+        let r2 = analyze_pipeline(&k2.firmware, &EngineModel::default());
+        assert_eq!(r2.k, 2);
+        assert!(r2.link_cycles > 0.0);
+        assert!(
+            r2.interval_cycles <= r1.interval_cycles,
+            "K=2 interval {} vs K=1 {}",
+            r2.interval_cycles,
+            r1.interval_cycles
+        );
+        assert!(r2.throughput_tops >= r1.throughput_tops);
+        // Per-partition rows cover every array.
+        assert_eq!(r2.partitions.len(), 2);
+        assert!(r2.bottleneck_partition().is_some());
+    }
+}

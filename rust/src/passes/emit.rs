@@ -11,7 +11,8 @@
 
 use super::{resolve::batch_chunk, Model, Pass};
 use crate::codegen::firmware::{
-    Firmware, FirmwareLayer, FirmwareStage, KernelInst, MergeOp, MergeStage, StageRef, StageSource,
+    Firmware, FirmwareLayer, FirmwareOutput, FirmwareStage, KernelInst, MergeOp, MergeStage,
+    StageRef, StageSource,
 };
 use crate::ir::{Graph, NodeId, OpKind, QuantSpec};
 use anyhow::{bail, ensure, Context, Result};
@@ -193,9 +194,9 @@ impl Pass for Emission {
                 _ => {}
             }
         }
-        let sink = model.graph.output_producer()?;
+        let sinks = super::graph_plan::output_producer_ids(model)?;
         let output_stage = *stage_of
-            .get(&sink)
+            .get(&sinks[0])
             .context("network output is not produced by an emitted stage")?;
 
         // Network input width + quantization: every dense layer fed directly
@@ -220,12 +221,37 @@ impl Pass for Emission {
         }
         let input_quant = input_quant.context("no dense layer consumes the network input")?;
 
-        let mut output_plan = program.output_plan.context("graph-planning: output plan")?;
-        output_plan.mem_col = match stages[output_stage].op {
-            StageRef::Layer(li) => layers[li].placement.output_col(),
-            StageRef::Merge(mi) => merges[mi].plan.mem_col,
+        // One output drain per sink (graph planning emitted them in the
+        // same producer order): the drain buffer sits below the producing
+        // stage's output column.
+        ensure!(
+            program.output_plans.len() == sinks.len(),
+            "graph-planning emitted {} output plans for {} sinks",
+            program.output_plans.len(),
+            sinks.len()
+        );
+        let mut outputs = Vec::with_capacity(sinks.len());
+        for (&sink, (plan_sink, plan)) in sinks.iter().zip(&program.output_plans) {
+            ensure!(
+                *plan_sink == sink,
+                "graph-planning output order diverged from the sink order"
+            );
+            let stage = *stage_of
+                .get(&sink)
+                .context("network output is not produced by an emitted stage")?;
+            let mut plan = plan.clone();
+            plan.mem_col = match stages[stage].op {
+                StageRef::Layer(li) => layers[li].placement.output_col(),
+                StageRef::Merge(mi) => merges[mi].plan.mem_col,
+            }
+            .min(model.device.mem_tiles.saturating_sub(1));
+            outputs.push(FirmwareOutput {
+                name: model.graph.node(sink)?.name.clone(),
+                stage,
+                plan,
+            });
         }
-        .min(model.device.mem_tiles.saturating_sub(1));
+        let output_plan = outputs[0].plan.clone();
 
         // --- Memory-tile allocation audit --------------------------------
         // A buffer is sharded over `columns` memory tiles starting at its
@@ -246,7 +272,9 @@ impl Pass for Emission {
             for m in &merges {
                 charge(m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes());
             }
-            charge(output_plan.mem_col, output_plan.columns, output_plan.per_column_bytes());
+            for o in &outputs {
+                charge(o.plan.mem_col, o.plan.columns, o.plan.per_column_bytes());
+            }
         }
         for (col, bytes) in &usage {
             if *bytes > model.device.mem_tile_bytes {
@@ -267,6 +295,7 @@ impl Pass for Emission {
             in_features,
             input_quant,
             output_plan,
+            outputs,
             batch: model.config.batch,
         });
         Ok(())
@@ -349,6 +378,37 @@ mod tests {
         assert!(matches!(fw.stages[0].op, StageRef::Layer(0)));
         assert_eq!(fw.output_stage, 1);
         assert_eq!(fw.input_quant.dtype, crate::arch::Dtype::I8);
+    }
+
+    #[test]
+    fn multi_sink_emits_per_sink_drains() {
+        use crate::frontend::JsonLayer;
+        let json = JsonModel::new(
+            "two_heads",
+            vec![
+                JsonLayer::dense("trunk", 64, 96, true, true, "int8", "int8", 6, vec![1; 64 * 96], vec![0; 96]),
+                JsonLayer::dense("head_a", 96, 10, true, false, "int8", "int8", 6, vec![1; 960], vec![0; 10])
+                    .with_inputs(&["trunk"]),
+                JsonLayer::dense("head_b", 96, 4, true, false, "int8", "int8", 6, vec![1; 384], vec![0; 4])
+                    .with_inputs(&["trunk"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+        fw.check_invariants().unwrap();
+        assert_eq!(fw.outputs.len(), 2);
+        assert_eq!(fw.output_names(), vec!["head_a", "head_b"]);
+        assert_eq!(fw.output_stage, fw.outputs[0].stage);
+        assert_eq!(fw.output_features_of(0), 10);
+        assert_eq!(fw.output_features_of(1), 4);
+        // Each drain sits below its own head's output column.
+        for o in &fw.outputs {
+            let l = fw.layers.iter().find(|l| l.name == o.name).unwrap();
+            assert_eq!(o.plan.mem_col, l.placement.output_col().min(fw.device.mem_tiles - 1));
+        }
+        // firmware.json names the outputs only for multi-sink models.
+        assert!(fw.to_json().unwrap().contains("\"outputs\""));
     }
 
     #[test]

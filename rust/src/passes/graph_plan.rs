@@ -28,12 +28,39 @@ pub struct GraphPlanning;
 
 /// All mem-tile programs of a model: one input plan per dense layer
 /// (keyed by consumer node id), one multi-input buffer per merge node
-/// (keyed by the merge node id), plus the network output drain.
+/// (keyed by the merge node id), plus one output drain **per sink** —
+/// multi-output graphs get one buffer for each unconsumed node, in
+/// producer-id (frontend layer) order.
 #[derive(Debug, Clone, Default)]
 pub struct MemTileProgram {
     pub input_plans: HashMap<usize, MemTilePlan>,
     pub merge_plans: HashMap<usize, MergePlan>,
-    pub output_plan: Option<MemTilePlan>,
+    /// `(producer node id, drain plan)` per network output sink.
+    pub output_plans: Vec<(usize, MemTilePlan)>,
+}
+
+/// Resolved network-output producers: the graph's sinks plus any
+/// `config.extra_outputs` layers (the partitioner's cut tensors — interior
+/// nodes drained to the host as partition outputs), deduplicated, in
+/// node-id (frontend layer) order. Graph planning and emission must agree
+/// on this list, so both call here.
+pub(crate) fn output_producer_ids(model: &Model) -> Result<Vec<NodeId>> {
+    let mut ids = model.graph.output_producers()?;
+    for name in &model.config.extra_outputs {
+        let node = model
+            .graph
+            .nodes
+            .iter()
+            .find(|n| n.name == *name)
+            .with_context(|| format!("extra output '{name}' names no layer"))?;
+        if !(node.op.is_dense() || node.op.is_merge()) {
+            bail!("extra output '{name}' is not a dense or merge layer");
+        }
+        ids.push(node.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    Ok(ids)
 }
 
 /// The network input's quantization, taken from the first dense layer fed
@@ -200,43 +227,46 @@ impl Pass for GraphPlanning {
             }
         }
 
-        // Output drain: the unique sink's store order back to row-major.
-        let sink = model.graph.output_producer()?;
-        let sink_node = model.graph.node(sink)?;
-        let output_plan = match sink_node.op {
-            OpKind::Dense { .. } => {
-                let lt = sink_node.attrs.tiling.unwrap();
-                let lq = sink_node.attrs.quant.unwrap();
-                let (_, f_out) = sink_node.dense_dims().unwrap();
-                let last_geo = sink_node.attrs.cascade.unwrap();
-                MemTilePlan {
-                    mem_col: 0,
-                    write_tiler: Tiler2d::new(batch, f_out, lt.m, lt.n),
-                    read_tiler: Tiler2d::new(batch, f_out, 1, f_out.max(1)),
-                    buffer_bytes: batch * f_out * lq.output.dtype.bytes(),
-                    ping_pong: true,
-                    dtype: lq.output.dtype,
-                    columns: last_geo.cas_num.max(1),
+        // Output drains: every network output's store order back to
+        // row-major — one buffer per sink (plus any extra-output interior
+        // node the partitioner drains); single-sink graphs get exactly one.
+        for sink in output_producer_ids(model)? {
+            let sink_node = model.graph.node(sink)?;
+            let output_plan = match sink_node.op {
+                OpKind::Dense { .. } => {
+                    let lt = sink_node.attrs.tiling.unwrap();
+                    let lq = sink_node.attrs.quant.unwrap();
+                    let (_, f_out) = sink_node.dense_dims().unwrap();
+                    let last_geo = sink_node.attrs.cascade.unwrap();
+                    MemTilePlan {
+                        mem_col: 0,
+                        write_tiler: Tiler2d::new(batch, f_out, lt.m, lt.n),
+                        read_tiler: Tiler2d::new(batch, f_out, 1, f_out.max(1)),
+                        buffer_bytes: batch * f_out * lq.output.dtype.bytes(),
+                        ping_pong: true,
+                        dtype: lq.output.dtype,
+                        columns: last_geo.cas_num.max(1),
+                    }
                 }
-            }
-            OpKind::Add { features } | OpKind::Concat { features } => {
-                let spec = merge_specs[&sink];
-                MemTilePlan {
-                    mem_col: 0,
-                    write_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
-                    read_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
-                    buffer_bytes: batch * features * spec.dtype.bytes(),
-                    ping_pong: true,
-                    dtype: spec.dtype,
-                    columns: 1,
+                OpKind::Add { features } | OpKind::Concat { features } => {
+                    let spec = merge_specs[&sink];
+                    MemTilePlan {
+                        mem_col: 0,
+                        write_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
+                        read_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
+                        buffer_bytes: batch * features * spec.dtype.bytes(),
+                        ping_pong: true,
+                        dtype: spec.dtype,
+                        columns: 1,
+                    }
                 }
-            }
-            _ => bail!(
-                "network output must be produced by a dense or merge node, not '{}'",
-                sink_node.name
-            ),
-        };
-        program.output_plan = Some(output_plan);
+                _ => bail!(
+                    "network output must be produced by a dense or merge node, not '{}'",
+                    sink_node.name
+                ),
+            };
+            program.output_plans.push((sink, output_plan));
+        }
 
         // Capacity check: each buffer is sharded across its memory-tile
         // columns (512 KiB each); every shard's ping-pong pair must fit a
@@ -322,7 +352,7 @@ mod tests {
         let prog = m.memtile_plans.as_ref().unwrap();
         assert_eq!(prog.input_plans.len(), 2);
         assert!(prog.merge_plans.is_empty());
-        assert!(prog.output_plan.is_some());
+        assert_eq!(prog.output_plans.len(), 1);
     }
 
     #[test]
@@ -428,6 +458,28 @@ mod tests {
         let jm = JsonModel::new("m", layers);
         let err = run_through_planning(&jm, 4).unwrap_err().to_string();
         assert!(err.contains("quantization disagrees"), "{err}");
+    }
+
+    #[test]
+    fn multi_sink_graphs_get_one_drain_per_sink() {
+        // Two unconsumed heads reading the same trunk: planning emits two
+        // output drains, in layer order, each sized to its own sink.
+        let layers = vec![
+            layer("trunk", 32, 48, "int8"),
+            JsonLayer::dense("head_a", 48, 8, true, false, "int8", "int8", 0, vec![0; 48 * 8], vec![0; 8])
+                .with_inputs(&["trunk"]),
+            JsonLayer::dense("head_b", 48, 4, true, false, "int8", "int8", 0, vec![0; 48 * 4], vec![0; 4])
+                .with_inputs(&["trunk"]),
+        ];
+        let m = planned(layers, 8);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        assert_eq!(prog.output_plans.len(), 2);
+        let a = m.graph.nodes.iter().find(|n| n.name == "head_a").unwrap().id;
+        let b = m.graph.nodes.iter().find(|n| n.name == "head_b").unwrap().id;
+        assert_eq!(prog.output_plans[0].0, a);
+        assert_eq!(prog.output_plans[1].0, b);
+        assert_eq!(prog.output_plans[0].1.buffer_bytes, 8 * 8);
+        assert_eq!(prog.output_plans[1].1.buffer_bytes, 8 * 4);
     }
 
     #[test]

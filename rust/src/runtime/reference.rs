@@ -69,8 +69,9 @@ pub struct ReferenceOracle {
     nodes: Vec<RefNode>,
     input_features: usize,
     input_spec: QuantSpec,
-    /// The unique unconsumed node — the network output.
-    output_node: usize,
+    /// The unconsumed nodes — the network outputs, in layer order. The
+    /// first entry is the primary output (single-sink models have one).
+    output_nodes: Vec<usize>,
 }
 
 impl ReferenceOracle {
@@ -163,7 +164,9 @@ impl ReferenceOracle {
             nodes.push(node);
             by_name.insert(json.layers[i].name.as_str(), i);
         }
-        // The network output is the unique unconsumed node.
+        // The network outputs are the unconsumed nodes, in layer order —
+        // the same per-sink ordering the compiled firmware's output drains
+        // use, so multi-output comparisons line up sink by sink.
         let mut consumed = vec![false; nodes.len()];
         for n in &nodes {
             for src in &n.inputs {
@@ -173,16 +176,12 @@ impl ReferenceOracle {
             }
         }
         let sinks: Vec<usize> = (0..nodes.len()).filter(|&i| !consumed[i]).collect();
-        ensure!(
-            sinks.len() == 1,
-            "reference oracle: {} output sinks; exactly one is supported",
-            sinks.len()
-        );
+        ensure!(!sinks.is_empty(), "reference oracle: model has no output sink");
         Ok(ReferenceOracle {
             name: json.name.clone(),
             input_features: json.layers[0].in_features,
             input_spec,
-            output_node: sinks[0],
+            output_nodes: sinks,
             nodes,
         })
     }
@@ -203,12 +202,30 @@ impl ReferenceOracle {
         self.input_features
     }
 
+    /// Feature count of the primary (first) network output.
     pub fn output_features(&self) -> usize {
-        self.nodes[self.output_node].out_features
+        self.nodes[self.output_nodes[0]].out_features
     }
 
-    /// Execute the whole DAG on an integer batch.
+    /// Number of network outputs (sinks).
+    pub fn output_count(&self) -> usize {
+        self.output_nodes.len()
+    }
+
+    /// Names of every network output, in output order.
+    pub fn output_names(&self) -> Vec<&str> {
+        self.output_nodes.iter().map(|&i| self.nodes[i].name.as_str()).collect()
+    }
+
+    /// Execute the whole DAG on an integer batch and return the primary
+    /// (first) output; use [`ReferenceOracle::execute_all`] for every sink.
     pub fn execute(&self, input: &Activation) -> Result<Activation> {
+        Ok(self.execute_all(input)?.swap_remove(0))
+    }
+
+    /// Execute the whole DAG and return every network output, one per
+    /// sink, in output order.
+    pub fn execute_all(&self, input: &Activation) -> Result<Vec<Activation>> {
         ensure!(
             input.features == self.input_features(),
             "reference oracle: input features {} != model {}",
@@ -297,10 +314,14 @@ impl ReferenceOracle {
             drop(ins);
             outs[i] = Some(out);
         }
-        outs
-            .get_mut(self.output_node)
-            .and_then(Option::take)
-            .context("reference oracle: output node missing")
+        self.output_nodes
+            .iter()
+            .map(|&o| {
+                outs.get_mut(o)
+                    .and_then(Option::take)
+                    .context("reference oracle: output node missing")
+            })
+            .collect()
     }
 }
 
@@ -413,7 +434,9 @@ mod tests {
     }
 
     #[test]
-    fn multiple_sinks_rejected() {
+    fn multi_sink_returns_every_output() {
+        // Two unconsumed projections of the input: execute_all yields both
+        // sinks in layer order; execute returns the primary (first).
         let m = JsonModel::new(
             "two",
             vec![
@@ -422,6 +445,13 @@ mod tests {
                     .with_inputs(&["input"]),
             ],
         );
-        assert!(ReferenceOracle::from_model(&m).is_err());
+        let oracle = ReferenceOracle::from_model(&m).unwrap();
+        assert_eq!(oracle.output_count(), 2);
+        assert_eq!(oracle.output_names(), vec!["a", "b"]);
+        let x = Activation::new(1, 2, vec![7, -3]).unwrap();
+        let all = oracle.execute_all(&x).unwrap();
+        assert_eq!(all[0].data, vec![7]);
+        assert_eq!(all[1].data, vec![-3]);
+        assert_eq!(oracle.execute(&x).unwrap().data, vec![7]);
     }
 }

@@ -249,12 +249,29 @@ pub fn analyze(fw: &Firmware, model: &EngineModel) -> PerfReport {
             .fold(0.0, f64::max);
         path[i] = upstream + layers[i].fill_cycles;
     }
-    let fill_path = path.get(fw.output_stage).copied().unwrap_or(0.0);
-    let latency_cycles = model.graph_init as f64
-        + fill_path
-        + route_latency
-        + fw.output_plan.buffer_bytes as f64 / device.mem_tile_port_bytes as f64
-        + model.dma_setup as f64;
+    // Single-output firmware keeps the exact historical expression (term
+    // order preserved so results stay bit-identical); multi-sink firmware
+    // takes the slowest (fill + drain) over its outputs — the host has the
+    // full result only when the last drain lands.
+    let latency_cycles = if fw.outputs.len() <= 1 {
+        let fill_path = path.get(fw.output_stage).copied().unwrap_or(0.0);
+        model.graph_init as f64
+            + fill_path
+            + route_latency
+            + fw.output_plan.buffer_bytes as f64 / device.mem_tile_port_bytes as f64
+            + model.dma_setup as f64
+    } else {
+        fw.outputs
+            .iter()
+            .map(|o| {
+                model.graph_init as f64
+                    + path.get(o.stage).copied().unwrap_or(0.0)
+                    + route_latency
+                    + o.plan.buffer_bytes as f64 / device.mem_tile_port_bytes as f64
+                    + model.dma_setup as f64
+            })
+            .fold(0.0, f64::max)
+    };
     let freq_hz = device.freq_ghz * 1e9;
     let interval_us = interval_cycles / freq_hz * 1e6;
     let latency_us = latency_cycles / freq_hz * 1e6;

@@ -21,7 +21,9 @@
 //! monotone with srs(0)=0; we apply `max(srs(acc), 0)`.
 
 use crate::arch::Dtype;
-use crate::codegen::firmware::{Firmware, FirmwareLayer, MergeOp, MergeStage, StageRef, StageSource};
+use crate::codegen::firmware::{
+    Firmware, FirmwareLayer, MemTilePlan, MergeOp, MergeStage, StageRef, StageSource,
+};
 use crate::ir::{srs, srs_i32};
 use crate::sim::dma::Tiler2d;
 use anyhow::{ensure, Result};
@@ -56,9 +58,47 @@ impl Activation {
     }
 }
 
-/// Execute the whole firmware on an input batch. The input must be within
-/// the network input dtype range (checked).
+/// Execute the whole firmware on an input batch and return the *primary*
+/// network output (the first sink). The input must be within the network
+/// input dtype range (checked). Multi-sink firmware callers use
+/// [`execute_all`] to receive every output.
 pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
+    let mut outs = run_stages(fw, input)?;
+    let act = outs
+        .get_mut(fw.output_stage)
+        .and_then(Option::take)
+        .ok_or_else(|| anyhow::anyhow!("output stage {} missing", fw.output_stage))?;
+    drain_output(&fw.output_plan, act)
+}
+
+/// Execute the whole firmware and return **every** network output, one per
+/// sink, in [`Firmware::outputs`] order (frontend layer order). Single-sink
+/// firmware yields one activation, identical to [`execute`].
+pub fn execute_all(fw: &Firmware, input: &Activation) -> Result<Vec<Activation>> {
+    let mut outs = run_stages(fw, input)?;
+    let mut drained = Vec::with_capacity(fw.outputs.len());
+    for o in &fw.outputs {
+        let act = outs
+            .get_mut(o.stage)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow::anyhow!("output stage {} ('{}') missing", o.stage, o.name))?;
+        drained.push(drain_output(&o.plan, act)?);
+    }
+    Ok(drained)
+}
+
+/// Output drain through an output mem-tile plan (round-trip through the
+/// write tiler models the final store order; values unchanged).
+fn drain_output(plan: &MemTilePlan, act: Activation) -> Result<Activation> {
+    let stream = plan.write_tiler.tile(&act.data);
+    let data = plan.write_tiler.untile(&stream);
+    Activation::new(act.batch, act.features, data)
+}
+
+/// Walk the stage DAG in topological order, returning every stage's
+/// activation; a stage's inputs always reference earlier stages (or the
+/// network input buffer).
+fn run_stages(fw: &Firmware, input: &Activation) -> Result<Vec<Option<Activation>>> {
     ensure!(
         input.features == fw.input_features(),
         "input features {} != model {}",
@@ -71,8 +111,6 @@ pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
         "input values outside {} range",
         fw.input_quant.dtype
     );
-    // Walk the stage DAG in topological order; a stage's inputs always
-    // reference earlier stages (or the network input buffer).
     let mut outs: Vec<Option<Activation>> = vec![None; fw.stages.len()];
     for (i, stage) in fw.stages.iter().enumerate() {
         let mut ins: Vec<&Activation> = Vec::with_capacity(stage.inputs.len());
@@ -96,16 +134,7 @@ pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
         drop(ins);
         outs[i] = Some(out);
     }
-    let act = outs
-        .get_mut(fw.output_stage)
-        .and_then(Option::take)
-        .ok_or_else(|| anyhow::anyhow!("output stage {} missing", fw.output_stage))?;
-    // Output drain through the output mem-tile plan (round-trip through the
-    // write tiler models the final store order; values unchanged).
-    let plan = &fw.output_plan;
-    let stream = plan.write_tiler.tile(&act.data);
-    let data = plan.write_tiler.untile(&stream);
-    Activation::new(act.batch, act.features, data)
+    Ok(outs)
 }
 
 /// Execute one merge stage (residual Add / Concat) bit-exactly. Every
@@ -678,6 +707,46 @@ mod tests {
         let merged = Activation::new(4, 32, cat).unwrap();
         let want = layer(3, &merged);
         assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn multi_sink_execute_all_returns_every_output() {
+        // Two heads off one trunk: execute_all yields both, in layer order,
+        // and execute returns the primary (first) one.
+        let mut r = Pcg32::seed_from_u64(0x51D);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| r.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| r.gen_range_i64(-500, 500)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let jm = JsonModel::new(
+            "heads",
+            vec![
+                dense("trunk", 32, 48, true),
+                dense("head_a", 48, 10, false).with_inputs(&["trunk"]),
+                dense("head_b", 48, 4, false).with_inputs(&["trunk"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 4;
+        cfg.tiles_per_layer = Some(2);
+        let fw = compile(&jm, cfg).unwrap().firmware.unwrap();
+        fw.check_invariants().unwrap();
+        let mut rr = rng();
+        let x = random_input(4, 32, Dtype::I8, &mut rr);
+        let all = execute_all(&fw, &x).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!((all[0].features, all[1].features), (10, 4));
+        let primary = execute(&fw, &x).unwrap();
+        assert_eq!(primary.data, all[0].data);
+        // Each head agrees with the independent logical-tensor reference.
+        let layer = |i: usize, a: &Activation| {
+            let l = &jm.layers[i];
+            reference_dense(a, &l.weights, Some(&l.bias), l.out_features, 6, Dtype::I8, Dtype::I32, l.relu)
+        };
+        let t = layer(0, &x);
+        assert_eq!(all[0].data, layer(1, &t).data);
+        assert_eq!(all[1].data, layer(2, &t).data);
     }
 
     #[test]

@@ -70,17 +70,21 @@ pub fn route_firmware(fw: &Firmware) -> RoutingPlan {
     let mut routes = Vec::new();
     for (si, stage) in fw.stages.iter().enumerate() {
         let consumers = fw.stage_consumers(si);
-        let targets: Vec<usize> = if consumers.is_empty() {
-            vec![fw.output_plan.mem_col]
-        } else {
-            consumers
-                .iter()
-                .map(|&c| match fw.stages[c].op {
-                    StageRef::Layer(li) => fw.layers[li].input_plan.mem_col,
-                    StageRef::Merge(mi) => fw.merges[mi].plan.mem_col,
-                })
-                .collect()
-        };
+        // Downstream consumers' buffer columns, plus this stage's own
+        // output drain(s) — sink stages have only drains, and an interior
+        // node promoted to a partition output drains *in addition to*
+        // feeding its consumers.
+        let mut targets: Vec<usize> = consumers
+            .iter()
+            .map(|&c| match fw.stages[c].op {
+                StageRef::Layer(li) => fw.layers[li].input_plan.mem_col,
+                StageRef::Merge(mi) => fw.merges[mi].plan.mem_col,
+            })
+            .collect();
+        targets.extend(fw.outputs.iter().filter(|o| o.stage == si).map(|o| o.plan.mem_col));
+        if targets.is_empty() {
+            targets.push(fw.output_plan.mem_col);
+        }
         match stage.op {
             StageRef::Layer(li) => {
                 for k in &fw.layers[li].kernels {

@@ -20,6 +20,6 @@ pub use cycles::{
 pub use dma::{AddressGenerator, DimStep, Retiler, Tiler2d};
 pub use engine::{analyze, replicated_tops, EngineModel, PerfReport};
 pub use functional::{
-    dequantize_output, execute, execute_layer, execute_merge, quantize_input, reference_dense,
-    Activation,
+    dequantize_output, execute, execute_all, execute_layer, execute_merge, quantize_input,
+    reference_dense, Activation,
 };

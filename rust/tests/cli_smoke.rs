@@ -103,6 +103,29 @@ fn cli_oracle_reference_gate() {
 }
 
 #[test]
+fn cli_partition_pipeline_gate() {
+    // Multi-array partitioning is reachable from the CLI: explicit K = 2
+    // on a chain model, with the built-in oracle gate passing.
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_model(&dir);
+    let Some(out) = run(&[
+        "partition",
+        model.to_str().unwrap(),
+        "--batch",
+        "4",
+        "--parts",
+        "2",
+    ]) else {
+        return;
+    };
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("2 pipeline partition"), "{stdout}");
+    assert!(stdout.contains("BIT-EXACT"), "{stdout}");
+    assert!(stdout.contains("interval"), "{stdout}");
+}
+
+#[test]
 fn cli_info_devices() {
     if bin().is_none() {
         eprintln!("skipping: aie4ml binary not built (run `cargo build` first)");

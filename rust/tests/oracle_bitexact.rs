@@ -117,6 +117,47 @@ fn residual_mlp_bit_exact() {
 }
 
 #[test]
+fn wide_mlp_2x_partitioned_bit_exact() {
+    // The multi-array gate: a model that cannot place on one VEK280 at its
+    // throughput configuration must compile into >= 2 pipeline partitions
+    // and execute bit-exactly against the reference oracle running the
+    // original, uncut model. Looked up leniently because Python-written
+    // manifests omit the Rust-only entry.
+    use aie4ml::harness::models::wide_mlp_2x_config;
+    use aie4ml::partition::{compile_partitioned, execute_partitioned, PartitionOptions};
+    let Some(e) = zoo_entries().iter().find(|e| e.name == "wide_mlp_2x") else {
+        eprintln!(
+            "skipping: manifest predates the partitioner — regenerate with `aie4ml zoo --force`"
+        );
+        return;
+    };
+    let json = JsonModel::from_file(&e.model).expect("model JSON");
+    let cfg = wide_mlp_2x_config();
+    assert_eq!(cfg.batch, e.batch, "zoo batch and deployment config diverged");
+    // Single-array compile must genuinely fail.
+    assert!(compile(&json, cfg.clone()).is_err(), "wide_mlp_2x unexpectedly fit one array");
+    let pm = compile_partitioned(&json, cfg, &PartitionOptions::default())
+        .expect("partitioned compile");
+    let pfw = &pm.firmware;
+    pfw.check_invariants().unwrap();
+    assert!(pfw.k() >= 2, "expected >= 2 partitions, got {}", pfw.k());
+    let mut rng = Pcg32::seed_from_u64(66);
+    let input = Activation::new(
+        pfw.batch(),
+        pfw.input_features(),
+        (0..pfw.batch() * pfw.input_features()).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+    )
+    .unwrap();
+    let got = execute_partitioned(pfw, &input).expect("pipeline execution");
+    let want = ReferenceOracle::from_model(&json)
+        .expect("reference oracle")
+        .execute(&input)
+        .expect("oracle execution");
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].data, want.data, "partitioned pipeline diverges from the oracle");
+}
+
+#[test]
 fn oracle_detects_corruption() {
     // Negative control: poison one tail tile's bias after compilation and
     // feed zeros — the firmware saturates to the rail while the oracle stays

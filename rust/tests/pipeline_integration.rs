@@ -135,6 +135,72 @@ fn serving_loop_end_to_end() {
 }
 
 #[test]
+fn single_sink_firmware_shape_is_pinned() {
+    // Multi-sink support must not change single-sink firmware: exactly one
+    // output mirroring the legacy primary fields, and a firmware.json
+    // without the multi-sink "outputs" key — the exact pre-multi-sink
+    // shape, pinned so single-device zoo models stay byte-identical.
+    for dims in [vec![64usize, 32, 8], vec![128, 128]] {
+        let m = compile_mlp("pin_single", &dims, Dtype::I8, 8, Some((2, 2))).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        assert_eq!(fw.outputs.len(), 1);
+        assert_eq!(fw.outputs[0].stage, fw.output_stage);
+        assert_eq!(fw.outputs[0].plan.mem_col, fw.output_plan.mem_col);
+        let js = fw.to_json().unwrap();
+        assert!(!js.contains("\"outputs\""), "single-sink firmware.json grew a key");
+    }
+    // A single-sink DAG (merge stages, one sink) keeps its shape too.
+    let json = aie4ml::harness::models::residual_mlp_model("pin_res", 64, 96, 16, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+    assert_eq!(fw.outputs.len(), 1);
+    let js = fw.to_json().unwrap();
+    assert!(js.contains("\"merges\"") && !js.contains("\"outputs\""));
+    // Determinism: two compiles of one model render identical JSON.
+    let a = compile_mlp("pin_det", &[64, 32], Dtype::I8, 8, None).unwrap();
+    let b = compile_mlp("pin_det", &[64, 32], Dtype::I8, 8, None).unwrap();
+    assert_eq!(
+        a.firmware.as_ref().unwrap().to_json().unwrap(),
+        b.firmware.as_ref().unwrap().to_json().unwrap()
+    );
+}
+
+#[test]
+fn pipelined_serving_matches_single_array_server() {
+    // The same model served single-array and as a 2-partition pipeline
+    // must answer identically; the pipeline additionally reports
+    // per-partition stage metrics.
+    use aie4ml::coordinator::PipelineServer;
+    use aie4ml::partition::{compile_partitioned, PartitionOptions};
+    let spec = mlp_spec(&[48, 32, 16, 8], Dtype::I8);
+    let json = synth_model("pipe_vs_single", &spec, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 4;
+    cfg.tiles_per_layer = Some(2);
+    let plain = Arc::new(compile(&json, cfg.clone()).unwrap().firmware.unwrap());
+    let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
+    let pfw = Arc::new(compile_partitioned(&json, cfg, &opts).unwrap().firmware);
+    let single = aie4ml::coordinator::Server::spawn(plain, Duration::from_millis(2), 64);
+    let piped = PipelineServer::spawn(pfw, Duration::from_millis(2), 64);
+    let mut rng = Pcg32::seed_from_u64(0x9E);
+    for _ in 0..6 {
+        let x: Vec<i32> = (0..48).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let a = single.client.infer(x.clone()).unwrap();
+        let b = piped.client.infer(x).unwrap();
+        assert_eq!(a, b);
+    }
+    single.shutdown();
+    let m = piped.shutdown();
+    assert_eq!(m.requests, 6);
+    assert_eq!(m.stages.len(), 2);
+    for s in &m.stages {
+        assert!(s.batches > 0);
+        assert!((0.0..=1.0).contains(&s.busy_fraction));
+    }
+}
+
+#[test]
 fn user_overrides_respected_end_to_end() {
     let spec = mlp_spec(&[128, 128], Dtype::I8);
     let json = synth_model("overrides", &spec, 6);

@@ -397,6 +397,178 @@ fn prop_dag_firmware_matches_reference_oracle() {
     });
 }
 
+/// Random diamond DAGs executed as a K-partition pipeline (K ∈ {2, 3})
+/// must be bit-exact with the unpartitioned compile of the same model —
+/// the partition cuts and inter-array links are pure data movement.
+#[test]
+fn prop_partitioned_diamond_matches_unpartitioned() {
+    use aie4ml::partition::{
+        compile_partitioned, cut_candidates, execute_partitioned, PartitionOptions,
+    };
+    #[derive(Clone)]
+    struct Case {
+        d: usize,
+        m: usize,
+        k_out: usize,
+        batch: usize,
+        seed: u64,
+        concat: bool,
+        parts: usize,
+    }
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "d={} m={} k_out={} batch={} seed={:#x} concat={} parts={}",
+                self.d, self.m, self.k_out, self.batch, self.seed, self.concat, self.parts
+            )
+        }
+    }
+    let strat = Strategy::new(|r: &mut Pcg32| Case {
+        d: r.gen_range_usize(1, 48),
+        m: r.gen_range_usize(1, 48),
+        k_out: r.gen_range_usize(1, 24),
+        batch: r.gen_range_usize(1, 6),
+        seed: r.next_u64(),
+        concat: r.gen_bool(0.4),
+        parts: r.gen_range_usize(2, 3),
+    });
+    check("partitioned_vs_unpartitioned", 20, &strat, |case| {
+        let mut rng = Pcg32::seed_from_u64(case.seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let merged = if case.concat { 2 * case.m } else { case.m };
+        let merge = if case.concat {
+            JsonLayer::concat("merge", merged, "int8", 6, &["a", "b"])
+        } else {
+            JsonLayer::residual_add("merge", case.m, "int8", 6, &["a", "b"])
+        };
+        let jm = JsonModel::new(
+            "part_prop",
+            vec![
+                dense("stem", case.d, case.m, true),
+                dense("a", case.m, case.m, true).with_inputs(&["stem"]),
+                dense("b", case.m, case.m, false).with_inputs(&["stem"]),
+                merge,
+                dense("head", merged, case.k_out, false).with_inputs(&["merge"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = case.batch;
+        cfg.tiles_per_layer = Some(rng.gen_range_usize(1, 6));
+        // Diamonds always expose 2 cut points (after the stem, after the
+        // merge); clamp anyway so the property never conflates "cannot
+        // cut" with "cut wrongly".
+        let parts = case.parts.min(cut_candidates(&jm).len() + 1);
+        let plain = compile(&jm, cfg.clone()).map_err(|e| format!("compile: {e:#}"))?;
+        let fw = plain.firmware.as_ref().unwrap();
+        let opts = PartitionOptions { partitions: Some(parts), ..Default::default() };
+        let pm = compile_partitioned(&jm, cfg, &opts)
+            .map_err(|e| format!("partitioned compile: {e:#}"))?;
+        pm.firmware.check_invariants().map_err(|e| format!("invariants: {e:#}"))?;
+        if pm.firmware.k() != parts {
+            return Err(format!("asked for {parts} partitions, got {}", pm.firmware.k()));
+        }
+        let x = Activation::new(
+            case.batch,
+            case.d,
+            (0..case.batch * case.d).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+        )
+        .unwrap();
+        let want = execute(fw, &x).map_err(|e| format!("plain execute: {e:#}"))?;
+        let got = execute_partitioned(&pm.firmware, &x)
+            .map_err(|e| format!("pipeline execute: {e:#}"))?;
+        if got.len() != 1 {
+            return Err(format!("{} final outputs for a single-sink model", got.len()));
+        }
+        if got[0].data != want.data {
+            let idx = got[0].data.iter().zip(&want.data).position(|(a, b)| a != b).unwrap();
+            return Err(format!(
+                "mismatch at {idx}: pipeline {} vs plain {}",
+                got[0].data[idx], want.data[idx]
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Random multi-sink graphs (one trunk, 2–3 unconsumed heads) must agree
+/// sink-by-sink between the packed firmware's per-sink output drains and
+/// the independent reference oracle.
+#[test]
+fn prop_multi_sink_firmware_matches_reference_per_sink() {
+    use aie4ml::runtime::ReferenceOracle;
+    use aie4ml::sim::functional::execute_all;
+    #[derive(Clone)]
+    struct Case {
+        d: usize,
+        m: usize,
+        heads: usize,
+        batch: usize,
+        seed: u64,
+    }
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "d={} m={} heads={} batch={} seed={:#x}",
+                self.d, self.m, self.heads, self.batch, self.seed
+            )
+        }
+    }
+    let strat = Strategy::new(|r: &mut Pcg32| Case {
+        d: r.gen_range_usize(1, 48),
+        m: r.gen_range_usize(1, 48),
+        heads: r.gen_range_usize(2, 3),
+        batch: r.gen_range_usize(1, 6),
+        seed: r.next_u64(),
+    });
+    check("multi_sink_vs_reference", 25, &strat, |case| {
+        let mut rng = Pcg32::seed_from_u64(case.seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let mut layers = vec![dense("trunk", case.d, case.m, true)];
+        for h in 0..case.heads {
+            let fout = 1 + (h * 7 + 3) % 24;
+            layers.push(dense(&format!("head{h}"), case.m, fout, false).with_inputs(&["trunk"]));
+        }
+        let jm = JsonModel::new("sink_prop", layers);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = case.batch;
+        cfg.tiles_per_layer = Some(rng.gen_range_usize(1, 6));
+        let model = compile(&jm, cfg).map_err(|e| format!("compile: {e:#}"))?;
+        let fw = model.firmware.as_ref().unwrap();
+        fw.check_invariants().map_err(|e| format!("invariants: {e:#}"))?;
+        if fw.outputs.len() != case.heads {
+            return Err(format!("{} drains for {} heads", fw.outputs.len(), case.heads));
+        }
+        let x = Activation::new(
+            case.batch,
+            case.d,
+            (0..case.batch * case.d).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+        )
+        .unwrap();
+        let got = execute_all(fw, &x).map_err(|e| format!("execute_all: {e:#}"))?;
+        let oracle = ReferenceOracle::from_model(&jm).map_err(|e| format!("oracle: {e:#}"))?;
+        let want = oracle.execute_all(&x).map_err(|e| format!("oracle exec: {e:#}"))?;
+        if got.len() != want.len() {
+            return Err(format!("firmware {} sinks vs oracle {}", got.len(), want.len()));
+        }
+        for (si, (g, w)) in got.iter().zip(&want).enumerate() {
+            if g.data != w.data {
+                return Err(format!("sink {si} ('{}') diverges", fw.outputs[si].name));
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------- Serving invariants ------------------------------------------------
 
 #[test]

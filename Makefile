@@ -12,8 +12,9 @@
 #   make fmt        rustfmt check (what CI runs)
 #   make clippy     clippy over every target, warnings are errors (what CI runs)
 #   make bench      regenerate every paper table/figure with timings
-#   make bench-smoke single-iteration run of the fig3 placement and
-#                   partition-scaling benches (what CI's bench smoke job runs)
+#   make bench-smoke single-iteration run of the fig3 placement,
+#                   partition-scaling and deploy-scaling benches (what CI's
+#                   bench smoke job runs)
 
 CARGO ?= cargo
 PY ?= python3
@@ -47,6 +48,7 @@ bench: build
 bench-smoke:
 	$(CARGO) bench --bench fig3_placement -- --smoke
 	$(CARGO) bench --bench partition_scaling -- --smoke
+	$(CARGO) bench --bench deploy_scaling -- --smoke
 
 clean:
 	$(CARGO) clean

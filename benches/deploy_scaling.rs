@@ -1,0 +1,77 @@
+//! Bench: replicated fleet scaling — predicted vs. served samples/s for
+//! R = 1, 2, 4 replicas of one compiled pipeline behind the least-loaded
+//! dispatcher.
+//!
+//! *Predicted* is the planner's device-time model (R x batch / interval);
+//! *served* is wall-clock throughput of the simulated fleet on this host,
+//! which is CPU-bound — the interesting signal is the served-rate scaling
+//! across R (linear until the host runs out of cores), mirroring what the
+//! planner promises for real arrays.
+//!
+//! `--smoke` runs a reduced request count (CI's bench smoke job).
+
+use aie4ml::arch::Dtype;
+use aie4ml::deploy::FleetServer;
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::partition::{analyze_pipeline, PartitionedFirmware};
+use aie4ml::sim::engine::EngineModel;
+use aie4ml::util::Pcg32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let requests: usize = if smoke { 64 } else { 1024 };
+    let clients = 8usize;
+    let json = synth_model("deploy_scaling", &mlp_spec(&[128, 128, 64], Dtype::I8), 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 16;
+    cfg.tiles_per_layer = Some(4);
+    let fw = aie4ml::passes::compile(&json, cfg.clone()).expect("compile").firmware.unwrap();
+    let pfw = Arc::new(PartitionedFirmware::from_single(fw));
+    let rep = analyze_pipeline(&pfw, &EngineModel::default());
+    let per_replica_sps = cfg.batch as f64 * 1e6 / rep.interval_us;
+    let features = pfw.input_features();
+
+    println!(
+        "deploy scaling — {} batch {}, {} requests, {} client threads\n",
+        json.name, cfg.batch, requests, clients
+    );
+    println!(
+        "{:>2} {:>16} {:>16} {:>10} {:>10}",
+        "R", "predicted sps", "served sps", "speedup", "batches"
+    );
+    let mut base_served: Option<f64> = None;
+    for r in [1usize, 2, 4] {
+        let fleet = FleetServer::spawn(pfw.clone(), r, Duration::from_micros(200), 4096)
+            .expect("fleet spawn");
+        let started = Instant::now();
+        std::thread::scope(|scope| {
+            for t in 0..clients {
+                let client = fleet.client();
+                let share = requests / clients;
+                scope.spawn(move || {
+                    let mut rng = Pcg32::seed_from_u64(t as u64);
+                    for _ in 0..share {
+                        let x: Vec<i32> =
+                            (0..features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+                        client.infer(x).expect("fleet infer");
+                    }
+                });
+            }
+        });
+        let elapsed = started.elapsed().as_secs_f64();
+        let served = requests as f64 / elapsed;
+        let m = fleet.shutdown();
+        let speedup = served / *base_served.get_or_insert(served);
+        println!(
+            "{:>2} {:>16.0} {:>16.0} {:>9.2}x {:>10}",
+            r,
+            per_replica_sps * r as f64,
+            served,
+            speedup,
+            m.merged.batches
+        );
+    }
+}

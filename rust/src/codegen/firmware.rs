@@ -204,6 +204,50 @@ pub struct FirmwareOutput {
     pub plan: MemTilePlan,
 }
 
+/// The rectangular array region a placed firmware actually occupies, plus
+/// its worst-case memory-tile residency — the unit of replication.
+///
+/// Replicating a compiled block (paper §V-B) means stamping the same
+/// relative placement elsewhere on the array, so the copy needs the full
+/// bounding box of the original — including any tiles the placer left idle
+/// inside it — not just `tiles_used()`. Copies stacked vertically in the
+/// same columns additionally share those columns' memory tiles, so the
+/// per-column buffer residency bounds how many rows-worth of copies one
+/// column stack can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacementFootprint {
+    /// Column span of the bounding box (compute rects and mem-tile shards).
+    pub cols: usize,
+    /// Row span of the bounding box.
+    pub rows: usize,
+    /// Worst per-column memory-tile residency in bytes (every buffer shard
+    /// landing in one column summed, ping-pong included).
+    pub mem_bytes_per_col: usize,
+}
+
+impl PlacementFootprint {
+    /// Tiles inside the bounding box (≥ `Firmware::tiles_used()`).
+    pub fn tiles(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    /// How many non-overlapping copies of this footprint fit on `device`:
+    /// horizontal stampings across the placeable columns times vertical
+    /// stampings, the latter limited by both the row count and the
+    /// memory-tile capacity the stacked copies share per column. Always at
+    /// least 1 (the firmware itself is placed).
+    pub fn replicas_on(&self, device: &Device) -> usize {
+        let horizontal = device.placeable_cols() / self.cols.max(1);
+        let by_rows = device.rows / self.rows.max(1);
+        let by_mem = if self.mem_bytes_per_col == 0 {
+            by_rows
+        } else {
+            device.mem_tile_bytes / self.mem_bytes_per_col
+        };
+        (horizontal * by_rows.min(by_mem)).max(1)
+    }
+}
+
 /// The complete firmware package for one model.
 ///
 /// Execution structure is a **stage DAG**, not a layer chain: `stages`
@@ -250,6 +294,56 @@ impl Firmware {
     /// Total MACs per sample.
     pub fn macs_per_sample(&self) -> usize {
         self.layers.iter().map(|l| l.macs_per_sample()).sum()
+    }
+
+    /// The placed bounding box + per-column memory-tile residency — what a
+    /// replica of this firmware actually costs on the array (see
+    /// [`PlacementFootprint`]). Spans cover the compute rects *and* every
+    /// mem-tile shard column (input plans, merge buffers, output drains);
+    /// residency sums all shards landing in the worst column.
+    pub fn placement_footprint(&self) -> PlacementFootprint {
+        let mut col_lo = usize::MAX;
+        let mut col_hi = 0usize;
+        let mut row_lo = usize::MAX;
+        let mut row_hi = 0usize;
+        // Every mem-tile shard: (west-most column, columns spanned, bytes
+        // per column).
+        let mut shards: Vec<(usize, usize, usize)> = Vec::new();
+        for l in &self.layers {
+            col_lo = col_lo.min(l.placement.col);
+            col_hi = col_hi.max(l.placement.col + l.placement.width - 1);
+            row_lo = row_lo.min(l.placement.row);
+            row_hi = row_hi.max(l.placement.row + l.placement.height);
+            shards.push((
+                l.input_plan.mem_col,
+                l.input_plan.columns,
+                l.input_plan.per_column_bytes(),
+            ));
+        }
+        for m in &self.merges {
+            shards.push((m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes()));
+        }
+        for o in &self.outputs {
+            shards.push((o.plan.mem_col, o.plan.columns, o.plan.per_column_bytes()));
+        }
+        if col_lo == usize::MAX {
+            // No layers (cannot happen for emitted firmware) — empty box.
+            return PlacementFootprint { cols: 0, rows: 0, mem_bytes_per_col: 0 };
+        }
+        let mut per_col = std::collections::BTreeMap::<usize, usize>::new();
+        for (mem_col, columns, bytes) in shards {
+            let n = columns.max(1);
+            col_lo = col_lo.min(mem_col);
+            col_hi = col_hi.max(mem_col + n - 1);
+            for c in mem_col..mem_col + n {
+                *per_col.entry(c).or_insert(0) += bytes;
+            }
+        }
+        PlacementFootprint {
+            cols: col_hi - col_lo + 1,
+            rows: row_hi - row_lo.min(row_hi),
+            mem_bytes_per_col: per_col.values().copied().max().unwrap_or(0),
+        }
     }
 
     /// Total ops per sample (2 per MAC).

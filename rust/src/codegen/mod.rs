@@ -5,6 +5,6 @@ pub mod render;
 
 pub use firmware::{
     Firmware, FirmwareLayer, FirmwareOutput, FirmwareStage, KernelInst, MemTilePlan, MergeOp,
-    MergePlan, MergeStage, StageRef, StageSource,
+    MergePlan, MergeStage, PlacementFootprint, StageRef, StageSource,
 };
 pub use render::{render_floorplan, render_graph, render_kernel, write_project};

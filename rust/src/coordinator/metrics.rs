@@ -57,6 +57,48 @@ pub struct MetricsReport {
     pub stages: Vec<StageMetricsReport>,
 }
 
+impl MetricsReport {
+    /// An empty report (no traffic yet) — the identity of [`merged`].
+    ///
+    /// [`merged`]: MetricsReport::merged
+    pub fn empty() -> MetricsReport {
+        MetricsReport {
+            requests: 0,
+            batches: 0,
+            mean_batch_occupancy: 0.0,
+            p50_latency_us: 0.0,
+            p99_latency_us: 0.0,
+            max_latency_us: 0.0,
+            device_busy_us: 0.0,
+            stages: Vec::new(),
+        }
+    }
+
+    /// Aggregate per-replica reports into one fleet-level view: requests,
+    /// batches and device time sum; occupancy is batch-weighted; latency
+    /// percentiles take the worst replica (conservative — exact percentile
+    /// merging would need the raw samples, and an SLO check cares about the
+    /// slowest replica anyway). Per-stage rows are dropped: stage indices
+    /// are per-replica pipeline positions, not fleet-wide entities.
+    pub fn merged(reports: &[MetricsReport]) -> MetricsReport {
+        let mut out = MetricsReport::empty();
+        let mut occupancy_weighted = 0.0;
+        for r in reports {
+            out.requests += r.requests;
+            out.batches += r.batches;
+            out.device_busy_us += r.device_busy_us;
+            occupancy_weighted += r.mean_batch_occupancy * r.batches as f64;
+            out.p50_latency_us = out.p50_latency_us.max(r.p50_latency_us);
+            out.p99_latency_us = out.p99_latency_us.max(r.p99_latency_us);
+            out.max_latency_us = out.max_latency_us.max(r.max_latency_us);
+        }
+        if out.batches > 0 {
+            out.mean_batch_occupancy = occupancy_weighted / out.batches as f64;
+        }
+        out
+    }
+}
+
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
@@ -165,6 +207,28 @@ mod tests {
         assert_eq!(r.requests, 0);
         assert_eq!(r.p99_latency_us, 0.0);
         assert!(r.stages.is_empty());
+    }
+
+    #[test]
+    fn merged_reports_sum_and_take_worst_latency() {
+        let mut a = Metrics::new();
+        a.record_batch(4, 4, &[Duration::from_micros(10); 4], 100.0);
+        let mut b = Metrics::new();
+        b.record_batch(2, 4, &[Duration::from_micros(50); 2], 80.0);
+        b.record_batch(4, 4, &[Duration::from_micros(20); 4], 80.0);
+        let m = MetricsReport::merged(&[a.report(), b.report()]);
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.batches, 3);
+        assert!((m.device_busy_us - 260.0).abs() < 1e-9);
+        // Worst replica's percentiles dominate the merged view.
+        assert_eq!(m.max_latency_us, 50.0);
+        assert!(m.p99_latency_us >= 20.0);
+        // Batch-weighted occupancy: (4*1 + 3*2) / 3 batches = 10/3.
+        assert!((m.mean_batch_occupancy - 10.0 / 3.0).abs() < 1e-9);
+        // Identity on the empty set.
+        let e = MetricsReport::merged(&[]);
+        assert_eq!(e.requests, 0);
+        assert_eq!(e.p99_latency_us, 0.0);
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod server;
 pub use batcher::{Batch, BatchPolicy, Batcher, Request};
 pub use metrics::{Metrics, MetricsReport, StageMetricsReport};
 pub use pipeline::{PipelineClient, PipelineServer};
-pub use router::Router;
+pub use router::{least_loaded, LeastLoaded, Router};
 pub use server::{Client, Server};

@@ -79,6 +79,7 @@ impl PipelineClient {
 /// The running multi-array pipeline server.
 pub struct PipelineServer {
     pub client: PipelineClient,
+    pfw: Arc<PartitionedFirmware>,
     metrics: Arc<Mutex<Metrics>>,
     front: std::thread::JoinHandle<()>,
     stages: Vec<std::thread::JoinHandle<()>>,
@@ -184,10 +185,16 @@ impl PipelineServer {
 
         PipelineServer {
             client: PipelineClient { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            pfw,
             metrics,
             front,
             stages,
         }
+    }
+
+    /// The partitioned firmware this pipeline executes.
+    pub fn firmware(&self) -> &Arc<PartitionedFirmware> {
+        &self.pfw
     }
 
     pub fn metrics(&self) -> MetricsReport {

@@ -2,24 +2,72 @@
 //! firmware instances (the vLLM-router shape, scaled to the trigger world).
 //!
 //! A trigger farm runs several classifiers concurrently (e.g. jet tagging,
-//! muon ID, anomaly scoring) on the same host; the router owns one
-//! [`Server`] per model, routes requests by model name, and aggregates
-//! metrics. Registration is dynamic: models can be added while serving
-//! (the paper's RTP-reload story — new coefficients without rebuilds —
-//! corresponds to re-registering a model under the same name).
+//! muon ID, anomaly scoring) on the same host; the router owns one entry
+//! per model name, routes requests by name, and aggregates metrics. Each
+//! entry holds one **or more** [`Server`] replicas behind least-loaded
+//! dispatch ([`least_loaded`]): a request lands on the replica with the
+//! fewest in-flight requests, ties rotating round-robin, so no replica
+//! sits idle while another queues. Registration is dynamic: models can be
+//! added while serving (the paper's RTP-reload story — new coefficients
+//! without rebuilds — corresponds to re-registering a model under the same
+//! name). The replicated-fleet deployment layer
+//! ([`crate::deploy::FleetServer`]) builds on the same dispatch policy.
 
 use super::metrics::MetricsReport;
 use super::server::Server;
 use crate::codegen::firmware::Firmware;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
-/// Routing table entry.
-struct Entry {
+/// Pick the least-loaded replica: the index with the smallest in-flight
+/// count. `rotate` breaks ties fairly — among equally loaded replicas the
+/// `rotate % ties`-th one is chosen, so an idle fleet still spreads
+/// requests round-robin instead of hammering replica 0.
+pub fn least_loaded(inflight: &[usize], rotate: usize) -> Option<usize> {
+    let min = *inflight.iter().min()?;
+    let ties: Vec<usize> = inflight
+        .iter()
+        .enumerate()
+        .filter(|(_, &load)| load == min)
+        .map(|(i, _)| i)
+        .collect();
+    Some(ties[rotate % ties.len()])
+}
+
+/// The dispatch policy's mutable state: [`least_loaded`] selection plus
+/// the rotation counter that keeps tie-breaking fair across calls. One
+/// instance per replica set — [`Router`] entries and
+/// [`crate::deploy::FleetServer`] share this exact state machine.
+#[derive(Debug, Default)]
+pub struct LeastLoaded {
+    rotate: AtomicUsize,
+}
+
+impl LeastLoaded {
+    pub fn new() -> LeastLoaded {
+        LeastLoaded::default()
+    }
+
+    /// Pick the replica for one dispatch, advancing the tie rotation.
+    pub fn pick(&self, loads: &[usize]) -> Option<usize> {
+        least_loaded(loads, self.rotate.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// One server replica plus its in-flight request counter.
+struct Replica {
     server: Server,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// Routing table entry: R ≥ 1 replicas of one model.
+struct Entry {
+    replicas: Vec<Replica>,
     features: usize,
+    policy: LeastLoaded,
 }
 
 /// The router. Cheap to share (`Arc<Router>`); all methods take `&self`.
@@ -34,22 +82,43 @@ impl Router {
         Router { table: RwLock::new(HashMap::new()), max_wait, queue_depth }
     }
 
-    /// Register (or replace) a model. Replacing drains the old server.
+    /// Register (or replace) a model with a single replica.
     pub fn register(&self, name: &str, fw: Arc<Firmware>) -> Result<()> {
+        self.register_replicated(name, fw, 1)
+    }
+
+    /// Register (or replace) a model served by `replicas` identical
+    /// servers behind least-loaded dispatch. Replacing drains every old
+    /// replica after the new entry is installed.
+    pub fn register_replicated(
+        &self,
+        name: &str,
+        fw: Arc<Firmware>,
+        replicas: usize,
+    ) -> Result<()> {
+        ensure!(replicas >= 1, "model '{name}': replica count must be >= 1");
         let features = fw.input_features();
-        let server = Server::spawn(fw, self.max_wait, self.queue_depth);
-        let old = self
-            .table
-            .write()
-            .unwrap()
-            .insert(name.to_string(), Entry { server, features });
+        let entry = Entry {
+            replicas: (0..replicas)
+                .map(|_| Replica {
+                    server: Server::spawn(fw.clone(), self.max_wait, self.queue_depth),
+                    inflight: Arc::new(AtomicUsize::new(0)),
+                })
+                .collect(),
+            features,
+            policy: LeastLoaded::new(),
+        };
+        let old = self.table.write().unwrap().insert(name.to_string(), entry);
         if let Some(e) = old {
-            e.server.shutdown();
+            for r in e.replicas {
+                r.server.shutdown();
+            }
         }
         Ok(())
     }
 
-    /// Deregister a model, draining its server; returns its final metrics.
+    /// Deregister a model, draining its replicas; returns the merged final
+    /// metrics across all of them.
     pub fn deregister(&self, name: &str) -> Result<MetricsReport> {
         let entry = self
             .table
@@ -57,7 +126,9 @@ impl Router {
             .unwrap()
             .remove(name)
             .with_context(|| format!("model '{name}' not registered"))?;
-        Ok(entry.server.shutdown())
+        let reports: Vec<MetricsReport> =
+            entry.replicas.into_iter().map(|r| r.server.shutdown()).collect();
+        Ok(MetricsReport::merged(&reports))
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -66,12 +137,13 @@ impl Router {
         v
     }
 
-    /// Route one request to `model`. Blocks until the batch it lands in
-    /// completes (same contract as [`super::Client::infer`]).
+    /// Route one request to `model`, landing it on the least-loaded
+    /// replica. Blocks until the batch it lands in completes (same
+    /// contract as [`super::Client::infer`]).
     pub fn infer(&self, model: &str, features: Vec<i32>) -> Result<Vec<i32>> {
-        // Clone the client under the read lock, then release it before the
-        // (potentially long) inference wait.
-        let client = {
+        // Pick a replica and clone its client under the read lock, then
+        // release the lock before the (potentially long) inference wait.
+        let (client, inflight) = {
             let table = self.table.read().unwrap();
             let Some(entry) = table.get(model) else {
                 bail!("model '{model}' not registered (have: {:?})", {
@@ -87,18 +159,29 @@ impl Router {
                     features.len()
                 );
             }
-            entry.server.client.clone()
+            let loads: Vec<usize> =
+                entry.replicas.iter().map(|r| r.inflight.load(Ordering::Relaxed)).collect();
+            let pick = entry.policy.pick(&loads).expect("entry has at least one replica");
+            let replica = &entry.replicas[pick];
+            replica.inflight.fetch_add(1, Ordering::Relaxed);
+            (replica.server.client.clone(), replica.inflight.clone())
         };
-        client.infer(features)
+        let out = client.infer(features);
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        out
     }
 
-    /// Per-model metrics snapshot.
+    /// Per-model metrics snapshot (replicas merged).
     pub fn metrics(&self) -> HashMap<String, MetricsReport> {
         self.table
             .read()
             .unwrap()
             .iter()
-            .map(|(k, e)| (k.clone(), e.server.metrics()))
+            .map(|(k, e)| {
+                let reports: Vec<MetricsReport> =
+                    e.replicas.iter().map(|r| r.server.metrics()).collect();
+                (k.clone(), MetricsReport::merged(&reports))
+            })
             .collect()
     }
 
@@ -108,7 +191,11 @@ impl Router {
             .into_inner()
             .unwrap()
             .into_iter()
-            .map(|(k, e)| (k, e.server.shutdown()))
+            .map(|(k, e)| {
+                let reports: Vec<MetricsReport> =
+                    e.replicas.into_iter().map(|r| r.server.shutdown()).collect();
+                (k, MetricsReport::merged(&reports))
+            })
             .collect()
     }
 }
@@ -126,6 +213,21 @@ mod tests {
                 .firmware
                 .unwrap(),
         )
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum_and_rotates_ties() {
+        assert_eq!(least_loaded(&[], 0), None);
+        assert_eq!(least_loaded(&[2, 0, 1], 0), Some(1));
+        assert_eq!(least_loaded(&[2, 0, 1], 7), Some(1));
+        // All idle: rotation spreads across every replica.
+        assert_eq!(least_loaded(&[0, 0, 0], 0), Some(0));
+        assert_eq!(least_loaded(&[0, 0, 0], 1), Some(1));
+        assert_eq!(least_loaded(&[0, 0, 0], 5), Some(2));
+        // Two-way tie among replicas 0 and 2.
+        assert_eq!(least_loaded(&[1, 3, 1], 1), Some(2));
+        // Work conservation: an idle replica always beats a queued one.
+        assert_eq!(least_loaded(&[4, 1, 0, 1], 3), Some(2));
     }
 
     #[test]
@@ -149,6 +251,7 @@ mod tests {
         router.register("only", fw("only", &[8, 4], 2)).unwrap();
         assert!(router.infer("nope", vec![0; 8]).is_err());
         assert!(router.infer("only", vec![0; 7]).is_err());
+        assert!(router.register_replicated("only", fw("only", &[8, 4], 2), 0).is_err());
         router.shutdown();
     }
 
@@ -163,6 +266,30 @@ mod tests {
         assert_eq!(y1.len(), y2.len());
         assert_ne!(y1, y2, "new weights must change outputs");
         router.shutdown();
+    }
+
+    #[test]
+    fn replicated_entry_spreads_requests_and_answers_consistently() {
+        let router = Router::new(Duration::from_millis(1), 64);
+        router.register_replicated("rep", fw("rep", &[8, 4], 2), 3).unwrap();
+        // Identical inputs must produce identical outputs whichever replica
+        // (and batch slot) serves them.
+        let golden = router.infer("rep", vec![3; 8]).unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let r = &router;
+                let golden = &golden;
+                scope.spawn(move || {
+                    for _ in 0..6 {
+                        assert_eq!(&r.infer("rep", vec![3; 8]).unwrap(), golden);
+                    }
+                });
+            }
+        });
+        let m = router.shutdown();
+        // Replica metrics merge into one per-model report.
+        assert_eq!(m["rep"].requests, 25);
+        assert!(m["rep"].batches >= 13, "batch 2 => at least ceil(25/2) batches");
     }
 
     #[test]

@@ -60,6 +60,7 @@ impl Client {
 /// The running server.
 pub struct Server {
     pub client: Client,
+    fw: Arc<Firmware>,
     metrics: Arc<Mutex<Metrics>>,
     handle: std::thread::JoinHandle<()>,
 }
@@ -76,7 +77,9 @@ impl Server {
         // for a fixed firmware).
         let device_us_per_batch = analyze(&fw, &EngineModel::default()).interval_us;
 
+        let fw_task = fw.clone();
         let handle = std::thread::spawn(move || {
+            let fw = fw_task;
             let mut batcher = Batcher::new(policy, features);
             let mut waiters: Vec<(u64, Reply)> = Vec::new();
             loop {
@@ -106,9 +109,15 @@ impl Server {
 
         Server {
             client: Client { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            fw,
             metrics,
             handle,
         }
+    }
+
+    /// The firmware this server executes.
+    pub fn firmware(&self) -> &Arc<Firmware> {
+        &self.fw
     }
 
     pub fn metrics(&self) -> MetricsReport {

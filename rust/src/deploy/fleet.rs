@@ -1,0 +1,568 @@
+//! Replicated fleet serving: execute a [`DeploymentPlan`].
+//!
+//! [`FleetServer`] runs R identical replicas of the compiled pipeline —
+//! each a plain [`Server`] (K = 1) or a [`PipelineServer`] (K > 1) — and
+//! dispatches every request to the replica with the fewest in-flight
+//! requests (the router's [`LeastLoaded`] policy, ties rotating
+//! round-robin). Dispatch is work-conserving by construction: a request
+//! only lands on a busy replica when every replica is at least as busy.
+//!
+//! Operations the single-server coordinator cannot offer:
+//!
+//! * **aggregated metrics** — per-replica dispatch counts and
+//!   [`MetricsReport`]s plus a fleet-level merge
+//!   ([`MetricsReport::merged`]);
+//! * **drain-and-replace hot reload** — [`FleetServer::reload`] swaps in
+//!   new firmware (the paper's RTP story: new coefficients, same graph)
+//!   one replica at a time, so the fleet keeps serving throughout;
+//! * **replica-by-replica bit-exactness** —
+//!   [`FleetServer::verify_bit_exact`] probes every replica directly
+//!   against [`ReferenceOracle::execute_all`], so a corrupted replica
+//!   cannot hide behind its healthy peers.
+
+use super::planner::DeploymentPlan;
+use crate::coordinator::{LeastLoaded, MetricsReport, PipelineServer, Server};
+use crate::partition::PartitionedFirmware;
+use crate::runtime::ReferenceOracle;
+use crate::sim::functional::Activation;
+use crate::util::Pcg32;
+use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// One replica's serving backend: the degenerate K = 1 pipeline runs the
+/// plain single-array server (same firmware bytes, same metrics shape);
+/// deeper pipelines run the multi-array stage-thread server.
+enum ReplicaBackend {
+    Single(Server),
+    Pipelined(PipelineServer),
+}
+
+impl ReplicaBackend {
+    fn spawn(
+        pfw: &Arc<PartitionedFirmware>,
+        max_wait: Duration,
+        queue_depth: usize,
+    ) -> ReplicaBackend {
+        if pfw.k() == 1 {
+            let fw = Arc::new(pfw.partitions[0].clone());
+            ReplicaBackend::Single(Server::spawn(fw, max_wait, queue_depth))
+        } else {
+            ReplicaBackend::Pipelined(PipelineServer::spawn(pfw.clone(), max_wait, queue_depth))
+        }
+    }
+
+    fn client(&self) -> ReplicaClient {
+        match self {
+            ReplicaBackend::Single(s) => ReplicaClient::Single(s.client.clone()),
+            ReplicaBackend::Pipelined(p) => ReplicaClient::Pipelined(p.client.clone()),
+        }
+    }
+
+    fn input_features(&self) -> usize {
+        match self {
+            ReplicaBackend::Single(s) => s.firmware().input_features(),
+            ReplicaBackend::Pipelined(p) => p.firmware().input_features(),
+        }
+    }
+
+    fn metrics(&self) -> MetricsReport {
+        match self {
+            ReplicaBackend::Single(s) => s.metrics(),
+            ReplicaBackend::Pipelined(p) => p.metrics(),
+        }
+    }
+
+    fn shutdown(self) -> MetricsReport {
+        match self {
+            ReplicaBackend::Single(s) => s.shutdown(),
+            ReplicaBackend::Pipelined(p) => p.shutdown(),
+        }
+    }
+}
+
+/// A cloned handle into one replica's request queue.
+enum ReplicaClient {
+    Single(crate::coordinator::Client),
+    Pipelined(crate::coordinator::PipelineClient),
+}
+
+impl ReplicaClient {
+    fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
+        match self {
+            ReplicaClient::Single(c) => c.infer_multi(features),
+            ReplicaClient::Pipelined(c) => c.infer_multi(features),
+        }
+    }
+}
+
+/// One live replica slot.
+struct ReplicaSlot {
+    backend: ReplicaBackend,
+    inflight: Arc<AtomicUsize>,
+    dispatched: Arc<AtomicU64>,
+}
+
+impl ReplicaSlot {
+    fn new(backend: ReplicaBackend) -> ReplicaSlot {
+        ReplicaSlot {
+            backend,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            dispatched: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// State shared between the fleet and its client handles.
+struct FleetInner {
+    slots: RwLock<Vec<ReplicaSlot>>,
+    current: RwLock<Arc<PartitionedFirmware>>,
+    policy: LeastLoaded,
+}
+
+/// A client handle to the fleet (cheap to clone; thread-safe). Each call
+/// picks the least-loaded replica at dispatch time, so concurrent clients
+/// spread across the fleet automatically.
+#[derive(Clone)]
+pub struct FleetClient {
+    inner: Arc<FleetInner>,
+}
+
+impl FleetClient {
+    /// Submit one sample and wait for the primary (first) model output.
+    pub fn infer(&self, features: Vec<i32>) -> Result<Vec<i32>> {
+        let mut outs = self.infer_multi(features)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Submit one sample and wait for every model output, in sink order.
+    ///
+    /// A replica picked here can retire between the pick and the send (a
+    /// concurrent [`FleetServer::reload`] drains what that replica already
+    /// queued, then stops accepting); the only error a replica client can
+    /// return is that stopped-replica condition — execution itself never
+    /// surfaces as `Err` — so the request is transparently re-dispatched
+    /// to a live replica instead of the swap leaking to the caller.
+    pub fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
+        const DISPATCH_RETRIES: usize = 4;
+        let mut last_err = None;
+        // Slot indices that already failed this request: a stopped replica
+        // has 0 in-flight, so without masking the least-loaded pick would
+        // deterministically re-select it on every retry.
+        let mut failed: Vec<usize> = Vec::new();
+        for _ in 0..DISPATCH_RETRIES {
+            // Pick under the read lock, then release it before the blocking
+            // inference wait (a hot reload may swap the slots meanwhile;
+            // our cloned client keeps the old replica alive through its
+            // drain).
+            let (pick, client, inflight) = {
+                let slots = self.inner.slots.read().unwrap();
+                ensure!(!slots.is_empty(), "fleet is shut down");
+                let expect = slots[0].backend.input_features();
+                ensure!(
+                    features.len() == expect,
+                    "fleet expects {expect} features, got {}",
+                    features.len()
+                );
+                let loads: Vec<usize> = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        if failed.contains(&i) {
+                            usize::MAX
+                        } else {
+                            s.inflight.load(Ordering::Relaxed)
+                        }
+                    })
+                    .collect();
+                let pick = self.inner.policy.pick(&loads).expect("non-empty fleet");
+                if loads[pick] == usize::MAX {
+                    // Every replica already failed this request.
+                    break;
+                }
+                let slot = &slots[pick];
+                slot.inflight.fetch_add(1, Ordering::Relaxed);
+                slot.dispatched.fetch_add(1, Ordering::Relaxed);
+                (pick, slot.backend.client(), slot.inflight.clone())
+            };
+            let out = client.infer_multi(features.clone());
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            match out {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    last_err = Some(e);
+                    failed.push(pick);
+                }
+            }
+        }
+        Err(last_err.expect("retry loop ran").context("no live replica answered"))
+    }
+}
+
+/// One replica's slice of the fleet metrics.
+#[derive(Debug, Clone)]
+pub struct ReplicaMetrics {
+    /// Slot index.
+    pub replica: usize,
+    /// Requests the dispatcher sent this slot.
+    pub dispatched: u64,
+    /// The replica server's own report.
+    pub report: MetricsReport,
+}
+
+/// Fleet metrics: per-replica detail plus the merged fleet-level view.
+#[derive(Debug, Clone)]
+pub struct FleetMetricsReport {
+    pub replicas: Vec<ReplicaMetrics>,
+    pub merged: MetricsReport,
+}
+
+/// The running fleet.
+pub struct FleetServer {
+    inner: Arc<FleetInner>,
+    max_wait: Duration,
+    queue_depth: usize,
+}
+
+impl FleetServer {
+    /// Spawn `replicas` servers for one compiled pipeline. `queue_depth`
+    /// is the per-replica request-channel bound (in requests).
+    pub fn spawn(
+        pfw: Arc<PartitionedFirmware>,
+        replicas: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+    ) -> Result<FleetServer> {
+        ensure!(replicas >= 1, "fleet needs at least one replica");
+        pfw.check_invariants()?;
+        let slots: Vec<ReplicaSlot> = (0..replicas)
+            .map(|_| ReplicaSlot::new(ReplicaBackend::spawn(&pfw, max_wait, queue_depth)))
+            .collect();
+        Ok(FleetServer {
+            inner: Arc::new(FleetInner {
+                slots: RwLock::new(slots),
+                current: RwLock::new(pfw),
+                policy: LeastLoaded::new(),
+            }),
+            max_wait,
+            queue_depth,
+        })
+    }
+
+    /// Execute a planner [`DeploymentPlan`]: R replicas at the plan's
+    /// batching deadline, channel depth sized from the plan's queue depth
+    /// (in batches) times its firmware batch.
+    pub fn launch(plan: &DeploymentPlan) -> Result<FleetServer> {
+        let max_wait = Duration::from_secs_f64(plan.max_wait_us.max(1.0) / 1e6);
+        let depth = (plan.queue_depth * plan.batch).max(16);
+        FleetServer::spawn(plan.firmware.clone(), plan.r, max_wait, depth)
+    }
+
+    /// A dispatch handle (cheap to clone; thread-safe).
+    pub fn client(&self) -> FleetClient {
+        FleetClient { inner: self.inner.clone() }
+    }
+
+    /// The firmware generation currently being rolled out / served.
+    pub fn firmware(&self) -> Arc<PartitionedFirmware> {
+        self.inner.current.read().unwrap().clone()
+    }
+
+    /// Live replica count.
+    pub fn replicas(&self) -> usize {
+        self.inner.slots.read().unwrap().len()
+    }
+
+    /// Point-in-time metrics: per-replica dispatch counts and reports,
+    /// plus the merged fleet view.
+    pub fn metrics(&self) -> FleetMetricsReport {
+        let slots = self.inner.slots.read().unwrap();
+        let replicas: Vec<ReplicaMetrics> = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ReplicaMetrics {
+                replica: i,
+                dispatched: s.dispatched.load(Ordering::Relaxed),
+                report: s.backend.metrics(),
+            })
+            .collect();
+        let merged =
+            MetricsReport::merged(&replicas.iter().map(|r| r.report.clone()).collect::<Vec<_>>());
+        FleetMetricsReport { replicas, merged }
+    }
+
+    /// Drain-and-replace hot reload: swap every replica to `new` firmware
+    /// one slot at a time — the paper's RTP reload (new coefficients
+    /// without a rebuild) at fleet scope. The new firmware must keep the
+    /// serving contract (input width, batch, output shapes); each old
+    /// replica drains fully (in-flight requests are answered with the old
+    /// weights) while its peers keep serving. Returns the final metrics of
+    /// every retired replica.
+    pub fn reload(&self, new: Arc<PartitionedFirmware>) -> Result<Vec<MetricsReport>> {
+        new.check_invariants()?;
+        {
+            let cur = self.inner.current.read().unwrap();
+            ensure!(
+                new.input_features() == cur.input_features(),
+                "reload changes input width {} -> {}",
+                cur.input_features(),
+                new.input_features()
+            );
+            ensure!(
+                new.batch() == cur.batch(),
+                "reload changes firmware batch {} -> {}",
+                cur.batch(),
+                new.batch()
+            );
+            ensure!(
+                new.outputs.len() == cur.outputs.len(),
+                "reload changes output count {} -> {}",
+                cur.outputs.len(),
+                new.outputs.len()
+            );
+            for i in 0..new.outputs.len() {
+                ensure!(
+                    new.output_features_of(i) == cur.output_features_of(i),
+                    "reload changes output {i} width {} -> {}",
+                    cur.output_features_of(i),
+                    new.output_features_of(i)
+                );
+            }
+        }
+        let count = self.replicas();
+        let mut retired = Vec::with_capacity(count);
+        for i in 0..count {
+            let fresh =
+                ReplicaSlot::new(ReplicaBackend::spawn(&new, self.max_wait, self.queue_depth));
+            let old = {
+                let mut slots = self.inner.slots.write().unwrap();
+                if i >= slots.len() {
+                    bail!("fleet shrank during reload");
+                }
+                std::mem::replace(&mut slots[i], fresh)
+            };
+            // Outside the lock: the rest of the fleet serves while this
+            // replica drains.
+            retired.push(old.backend.shutdown());
+        }
+        *self.inner.current.write().unwrap() = new;
+        Ok(retired)
+    }
+
+    /// Verify every replica bit-exactly against the reference oracle:
+    /// `samples` random single-sample probes are sent *directly* to each
+    /// replica (bypassing dispatch, so no replica can hide) and every
+    /// output is compared element-wise to [`ReferenceOracle::execute_all`].
+    pub fn verify_bit_exact(
+        &self,
+        oracle: &ReferenceOracle,
+        samples: usize,
+        seed: u64,
+    ) -> Result<()> {
+        let (clients, features, range) = {
+            let slots = self.inner.slots.read().unwrap();
+            ensure!(!slots.is_empty(), "fleet is shut down");
+            let cur = self.inner.current.read().unwrap();
+            let range = cur.partitions[0].input_quant.dtype.range();
+            (
+                slots.iter().map(|s| s.backend.client()).collect::<Vec<_>>(),
+                cur.input_features(),
+                range,
+            )
+        };
+        ensure!(
+            oracle.input_features() == features,
+            "oracle expects {} input features, fleet serves {features}",
+            oracle.input_features()
+        );
+        for (i, client) in clients.iter().enumerate() {
+            let mut rng = Pcg32::seed_from_u64(seed.wrapping_add(i as u64));
+            for s in 0..samples {
+                let x: Vec<i32> =
+                    (0..features).map(|_| rng.gen_i32_in(range.0, range.1)).collect();
+                let got = client.infer_multi(x.clone())?;
+                let want = oracle.execute_all(&Activation::new(1, features, x)?)?;
+                ensure!(
+                    got.len() == want.len(),
+                    "replica {i}: {} outputs vs oracle's {}",
+                    got.len(),
+                    want.len()
+                );
+                for (o, (g, w)) in got.iter().zip(&want).enumerate() {
+                    ensure!(
+                        g == &w.data,
+                        "replica {i} diverges from the reference oracle on probe {s}, output {o}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop accepting requests, drain every replica and return the final
+    /// fleet metrics.
+    pub fn shutdown(self) -> FleetMetricsReport {
+        let drained: Vec<ReplicaSlot> = {
+            let mut slots = self.inner.slots.write().unwrap();
+            slots.drain(..).collect()
+        };
+        let replicas: Vec<ReplicaMetrics> = drained
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| ReplicaMetrics {
+                replica: i,
+                dispatched: s.dispatched.load(Ordering::Relaxed),
+                report: s.backend.shutdown(),
+            })
+            .collect();
+        let merged =
+            MetricsReport::merged(&replicas.iter().map(|r| r.report.clone()).collect::<Vec<_>>());
+        FleetMetricsReport { replicas, merged }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dtype;
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{mlp_spec, synth_model};
+    use crate::partition::{compile_partitioned, PartitionOptions};
+
+    fn pipeline(name: &str, k: usize, batch: usize) -> Arc<PartitionedFirmware> {
+        let json = synth_model(name, &mlp_spec(&[24, 16, 8], Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = batch;
+        cfg.tiles_per_layer = Some(1);
+        let opts = PartitionOptions { partitions: Some(k), max_partitions: k };
+        Arc::new(compile_partitioned(&json, cfg, &opts).unwrap().firmware)
+    }
+
+    fn oracle(name: &str) -> ReferenceOracle {
+        let json = synth_model(name, &mlp_spec(&[24, 16, 8], Dtype::I8), 6);
+        ReferenceOracle::from_model(&json).unwrap()
+    }
+
+    #[test]
+    fn single_replica_fleet_serves_and_degenerates_to_server_metrics() {
+        let pfw = pipeline("fleet_one", 1, 2);
+        let fleet =
+            FleetServer::spawn(pfw.clone(), 1, Duration::from_millis(2), 16).unwrap();
+        let out = fleet.client().infer(vec![1; 24]).unwrap();
+        assert_eq!(out.len(), 8);
+        let m = fleet.shutdown();
+        assert_eq!(m.replicas.len(), 1);
+        assert_eq!(m.replicas[0].dispatched, 1);
+        assert_eq!(m.merged.requests, 1);
+        // K=1 replica runs the plain Server: no pipeline stage rows.
+        assert!(m.replicas[0].report.stages.is_empty());
+    }
+
+    #[test]
+    fn replicas_agree_with_each_other_and_the_oracle() {
+        for k in [1usize, 2] {
+            let pfw = pipeline("fleet_agree", k, 2);
+            let fleet =
+                FleetServer::spawn(pfw, 3, Duration::from_millis(1), 32).unwrap();
+            fleet.verify_bit_exact(&oracle("fleet_agree"), 3, 0xF00D).unwrap();
+            // Identical input through dispatch: same answer every time,
+            // whichever replica serves it.
+            let c = fleet.client();
+            let golden = c.infer(vec![2; 24]).unwrap();
+            for _ in 0..5 {
+                assert_eq!(c.infer(vec![2; 24]).unwrap(), golden);
+            }
+            // Round-robin tie-breaking spread the probes: every replica saw
+            // traffic (3 direct probes each + 6 dispatched).
+            let m = fleet.shutdown();
+            assert_eq!(m.replicas.len(), 3);
+            for r in &m.replicas {
+                assert!(r.report.requests >= 3, "replica {} starved", r.replica);
+            }
+            assert_eq!(m.merged.requests, 3 * 3 + 6);
+        }
+    }
+
+    #[test]
+    fn dispatch_is_work_conserving_under_concurrency() {
+        let pfw = pipeline("fleet_wc", 1, 2);
+        let fleet = FleetServer::spawn(pfw, 2, Duration::from_millis(1), 64).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let c = fleet.client();
+                scope.spawn(move || {
+                    for i in 0..8 {
+                        let out = c.infer(vec![(t + i) % 7; 24]).unwrap();
+                        assert_eq!(out.len(), 8);
+                    }
+                });
+            }
+        });
+        let m = fleet.shutdown();
+        let total: u64 = m.replicas.iter().map(|r| r.dispatched).sum();
+        assert_eq!(total, 32);
+        // Least-loaded + rotating ties: neither replica starves while the
+        // other queues 32 requests.
+        for r in &m.replicas {
+            assert!(
+                r.dispatched >= 4,
+                "replica {} got {} of 32 requests",
+                r.replica,
+                r.dispatched
+            );
+        }
+        assert_eq!(m.merged.requests, 32);
+    }
+
+    #[test]
+    fn hot_reload_swaps_weights_without_dropping_service() {
+        // v1 and v2 share topology but not weights (name seeds the PCG
+        // weight stream).
+        let v1 = pipeline("fleet_v1", 1, 2);
+        let v2 = pipeline("fleet_v2", 1, 2);
+        let fleet = FleetServer::spawn(v1, 2, Duration::from_millis(2), 16).unwrap();
+        let c = fleet.client();
+        let before = c.infer(vec![3; 24]).unwrap();
+        let retired = fleet.reload(v2).unwrap();
+        assert_eq!(retired.len(), 2);
+        assert_eq!(retired.iter().map(|r| r.requests).sum::<usize>(), 1);
+        assert_eq!(fleet.replicas(), 2, "fleet keeps its replica count across reload");
+        let after = c.infer(vec![3; 24]).unwrap();
+        assert_ne!(before, after, "new weights must change outputs");
+        // The new generation is what verify checks against.
+        fleet.verify_bit_exact(&oracle("fleet_v2"), 2, 7).unwrap();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn reload_rejects_contract_changes() {
+        let fleet =
+            FleetServer::spawn(pipeline("fleet_c1", 1, 2), 1, Duration::from_millis(2), 8)
+                .unwrap();
+        // Different input width: 32 != 24.
+        let other = {
+            let json = synth_model("fleet_c2", &mlp_spec(&[32, 8], Dtype::I8), 6);
+            let mut cfg = CompileConfig::default();
+            cfg.batch = 2;
+            cfg.tiles_per_layer = Some(1);
+            let opts = PartitionOptions { partitions: Some(1), max_partitions: 1 };
+            Arc::new(compile_partitioned(&json, cfg, &opts).unwrap().firmware)
+        };
+        assert!(fleet.reload(other).is_err());
+        // Same topology, different batch.
+        let rebatched = pipeline("fleet_c1", 1, 4);
+        assert!(fleet.reload(rebatched).is_err());
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn shutdown_then_dispatch_errors_cleanly() {
+        let fleet =
+            FleetServer::spawn(pipeline("fleet_dn", 1, 2), 1, Duration::from_millis(1), 8)
+                .unwrap();
+        let c = fleet.client();
+        fleet.shutdown();
+        assert!(c.infer(vec![0; 24]).is_err());
+    }
+}

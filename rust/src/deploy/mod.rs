@@ -1,0 +1,238 @@
+//! SLO-driven deployment: turn a compiled model into a concrete,
+//! executable serving fleet.
+//!
+//! The compile pipeline answers "how fast is one copy of this model on one
+//! array"; this subsystem answers the production question on top of it —
+//! *how many copies, cut how, batched how, on which arrays, to serve a
+//! target load within a latency budget*. It has two halves:
+//!
+//! * [`planner`] — the capacity planner. Given a model, a [`Fleet`]
+//!   description (array count per device generation) and an [`Slo`]
+//!   (target samples/s + latency budget), it searches deployment
+//!   candidates — partition count K (via [`crate::partition`]),
+//!   replication factor R, firmware batch, queue depth — scoring each with
+//!   the calibrated [`crate::sim::engine`] /
+//!   [`crate::partition::analyze_pipeline`] models and the *placed* tile
+//!   footprint ([`crate::codegen::firmware::PlacementFootprint`], not the
+//!   old tile-count approximation), and returns ranked
+//!   [`DeploymentPlan`]s or an [`Infeasibility`] diagnosis.
+//! * [`fleet`] — the executor. [`FleetServer`] runs a plan: R replicas of
+//!   [`crate::coordinator::Server`] / [`crate::coordinator::PipelineServer`]
+//!   behind the router's least-loaded dispatch policy
+//!   ([`crate::coordinator::least_loaded`]), with per-replica metrics,
+//!   drain-and-replace hot reload (the paper's RTP-reload story lifted to
+//!   fleet scope) and replica-by-replica bit-exactness verification
+//!   against [`crate::runtime::ReferenceOracle`].
+//!
+//! An R = 1 / K = 1 plan degenerates to the plain single-array
+//! [`crate::coordinator::Server`] — same firmware bytes, same metrics
+//! shape — so the fleet layer adds no cost until replication is asked for.
+
+pub mod fleet;
+pub mod planner;
+
+pub use fleet::{FleetClient, FleetMetricsReport, FleetServer, ReplicaMetrics};
+pub use planner::{plan, DeploymentPlan, PlannerOptions};
+
+use crate::arch::Device;
+use anyhow::{ensure, Result};
+
+/// The service-level objective a deployment must meet.
+///
+/// * `target_sps` — sustained samples/second the fleet must absorb.
+/// * `latency_budget_us` — bound on the planner's per-request latency
+///   model: batch assembly at the target arrival rate, plus one
+///   head-of-line batch interval, plus the empty-pipeline fill latency.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub target_sps: f64,
+    pub latency_budget_us: f64,
+}
+
+impl Slo {
+    pub fn new(target_sps: f64, latency_budget_us: f64) -> Slo {
+        Slo { target_sps, latency_budget_us }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.target_sps.is_finite() && self.target_sps > 0.0,
+            "SLO target must be a positive samples/s rate, got {}",
+            self.target_sps
+        );
+        ensure!(
+            self.latency_budget_us.is_finite() && self.latency_budget_us > 0.0,
+            "SLO latency budget must be positive µs, got {}",
+            self.latency_budget_us
+        );
+        Ok(())
+    }
+}
+
+/// A pool of identical arrays of one device generation.
+#[derive(Debug, Clone)]
+pub struct FleetGroup {
+    /// Device name resolvable by [`Device::by_name`] ("vek280", "vek385").
+    pub device: String,
+    /// Arrays of that device available to the deployment.
+    pub arrays: usize,
+}
+
+/// The hardware the planner may deploy onto: one or more device groups
+/// (the per-generation AIE-ML / AIE-MLv2 mix).
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub groups: Vec<FleetGroup>,
+}
+
+impl Fleet {
+    /// A fleet of `arrays` identical `device` arrays.
+    pub fn homogeneous(device: &str, arrays: usize) -> Fleet {
+        Fleet { groups: vec![FleetGroup { device: device.to_string(), arrays }] }
+    }
+
+    pub fn total_arrays(&self) -> usize {
+        self.groups.iter().map(|g| g.arrays).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.groups.is_empty(), "fleet has no device groups");
+        for g in &self.groups {
+            ensure!(
+                Device::by_name(&g.device).is_some(),
+                "fleet names unknown device '{}'",
+                g.device
+            );
+            ensure!(g.arrays >= 1, "fleet group '{}' has no arrays", g.device);
+        }
+        Ok(())
+    }
+}
+
+/// What the planner concluded.
+#[derive(Debug, Clone)]
+pub enum PlanOutcome {
+    /// Ranked plans, best first. Never empty.
+    Feasible(Vec<DeploymentPlan>),
+    /// No candidate met the SLO; the diagnosis says how close the best
+    /// ones came and why each candidate fell short.
+    Infeasible(Infeasibility),
+}
+
+impl PlanOutcome {
+    /// The top-ranked plan, if any candidate met the SLO.
+    pub fn best(&self) -> Option<&DeploymentPlan> {
+        match self {
+            PlanOutcome::Feasible(plans) => plans.first(),
+            PlanOutcome::Infeasible(_) => None,
+        }
+    }
+}
+
+/// Why no deployment met the SLO, with the closest the search came on
+/// each axis — enough to tell a throughput-bound miss ("buy more arrays
+/// or relax target_sps") from a latency-bound one ("no configuration
+/// fills, queues and drains a batch inside the budget").
+#[derive(Debug, Clone)]
+pub struct Infeasibility {
+    pub target_sps: f64,
+    pub latency_budget_us: f64,
+    /// Best sustained samples/s any candidate reaches within the fleet's
+    /// array budget (0 when nothing compiled).
+    pub best_sps: f64,
+    /// Lowest modeled per-request latency among candidates whose
+    /// throughput fits the fleet (0 when none does) — so a latency-bound
+    /// diagnosis always quotes a latency that genuinely misses the budget.
+    pub best_latency_us: f64,
+    /// Candidates that compiled and were scored.
+    pub candidates: usize,
+    /// One line per rejected candidate: compile failure or the SLO axis
+    /// it missed.
+    pub reasons: Vec<String>,
+}
+
+impl Infeasibility {
+    /// Which axis binds: true when even the best candidate's throughput
+    /// falls short of the target (add arrays / relax target); false when
+    /// throughput is reachable but latency is not.
+    pub fn throughput_bound(&self) -> bool {
+        self.best_sps < self.target_sps
+    }
+}
+
+impl std::fmt::Display for Infeasibility {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "no deployment meets SLO {:.0} samples/s within {:.1} µs ({} candidate(s) scored)",
+            self.target_sps, self.latency_budget_us, self.candidates
+        )?;
+        if self.candidates == 0 {
+            writeln!(f, "  nothing compiled for this fleet:")?;
+        } else if self.throughput_bound() {
+            writeln!(
+                f,
+                "  throughput-bound: best achievable {:.0} samples/s ({:.1}% of target) — \
+                 add arrays, allow more partitions, or relax the target",
+                self.best_sps,
+                100.0 * self.best_sps / self.target_sps
+            )?;
+        } else {
+            writeln!(
+                f,
+                "  latency-bound: throughput is reachable but the best modeled latency is \
+                 {:.1} µs against a {:.1} µs budget — shrink the batch or relax the budget",
+                self.best_latency_us, self.latency_budget_us
+            )?;
+        }
+        for r in &self.reasons {
+            writeln!(f, "  - {r}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_and_fleet_validation() {
+        assert!(Slo::new(1e6, 100.0).validate().is_ok());
+        assert!(Slo::new(0.0, 100.0).validate().is_err());
+        assert!(Slo::new(1e6, -1.0).validate().is_err());
+        assert!(Slo::new(f64::NAN, 100.0).validate().is_err());
+        assert!(Fleet::homogeneous("vek280", 4).validate().is_ok());
+        assert!(Fleet::homogeneous("h100", 4).validate().is_err());
+        assert!(Fleet::homogeneous("vek280", 0).validate().is_err());
+        assert!(Fleet { groups: vec![] }.validate().is_err());
+        let mixed = Fleet {
+            groups: vec![
+                FleetGroup { device: "vek280".into(), arrays: 2 },
+                FleetGroup { device: "vek385".into(), arrays: 3 },
+            ],
+        };
+        assert!(mixed.validate().is_ok());
+        assert_eq!(mixed.total_arrays(), 5);
+    }
+
+    #[test]
+    fn infeasibility_diagnosis_names_the_binding_axis() {
+        let mut d = Infeasibility {
+            target_sps: 1e6,
+            latency_budget_us: 50.0,
+            best_sps: 2e5,
+            best_latency_us: 40.0,
+            candidates: 3,
+            reasons: vec!["vek280/K=1/batch=16: needs R=5, capacity 2".into()],
+        };
+        assert!(d.throughput_bound());
+        let text = d.to_string();
+        assert!(text.contains("throughput-bound"), "{text}");
+        assert!(text.contains("needs R=5"), "{text}");
+        d.best_sps = 2e6;
+        d.best_latency_us = 80.0;
+        assert!(!d.throughput_bound());
+        assert!(d.to_string().contains("latency-bound"));
+    }
+}

@@ -19,6 +19,9 @@
 //!   backend (default), plus the PJRT backend (`--features pjrt`) that
 //!   executes the AOT-lowered JAX model built by `python/compile/aot.py`.
 //! * [`coordinator`] — async serving driver (trigger-system companion).
+//! * [`deploy`] — SLO-driven deployment: the capacity planner that sizes a
+//!   replicated, partitioned fleet against a samples/s + latency SLO, and
+//!   the [`deploy::FleetServer`] that executes the chosen plan.
 //! * [`baselines`] — analytical models for prior-framework and cross-device
 //!   comparisons (Tables IV, V).
 //! * [`harness`] — regenerates every table and figure of the paper.
@@ -27,6 +30,7 @@ pub mod arch;
 pub mod baselines;
 pub mod codegen;
 pub mod coordinator;
+pub mod deploy;
 pub mod frontend;
 pub mod harness;
 pub mod ir;

@@ -20,6 +20,9 @@ USAGE:
   aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
   aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
   aie4ml partition <model.json> [--config <cfg.json>] [--batch N] [--parts K] [--max-parts K]
+  aie4ml deploy  <model.json> --target-sps N --latency-us N [--arrays N] [--device NAME]
+                 [--config <cfg.json>] [--batch N] [--batches a,b,..] [--max-parts K]
+                 [--max-replicas N] [--verify]
   aie4ml oracle  <model.json> [--config <cfg.json>] [--batch N] [--seed N]
   aie4ml zoo     [--dir <artifacts-dir>] [--force]
   aie4ml bench   [table1|table2|fig3|fig4|table3|table4|table5|all]
@@ -62,6 +65,11 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
             None => Ok(default),
         }
+    }
+
+    fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.flags.get(name).with_context(|| format!("--{name} is required"))?;
+        v.parse().with_context(|| format!("--{name} must be a number"))
     }
 }
 
@@ -260,6 +268,88 @@ fn main() -> Result<()> {
                 "pipeline: interval {:.3} µs / batch of {}   latency {:.2} µs   {:.2} TOPS over {} tiles",
                 rep.interval_us, rep.batch, rep.latency_us, rep.throughput_tops, rep.tiles_used
             );
+        }
+        "deploy" => {
+            // SLO-driven deployment planning: search partitioning /
+            // replication / batch candidates against a samples/s target and
+            // latency budget, print the ranked plan table, and (--verify)
+            // launch the best plan's fleet to prove it bit-exact against
+            // the reference oracle.
+            use aie4ml::deploy::{plan, Fleet, PlanOutcome, PlannerOptions, Slo};
+            let args = Args::parse(rest, &["verify"])?;
+            let model_path = args.positional.first().context("missing <model.json>")?;
+            let json = JsonModel::from_file(model_path)
+                .with_context(|| format!("loading {model_path}"))?;
+            let cfg = load_config(&args, 16)?;
+            let slo = Slo::new(args.get_f64("target-sps")?, args.get_f64("latency-us")?);
+            let device = args
+                .flags
+                .get("device")
+                .cloned()
+                .unwrap_or_else(|| cfg.device.clone());
+            let fleet = Fleet::homogeneous(&device, args.get_usize("arrays", 4)?);
+            let mut opts = PlannerOptions::default();
+            opts.max_partitions = args.get_usize("max-parts", 2)?;
+            opts.max_replicas = args.get_usize("max-replicas", 64)?;
+            if let Some(list) = args.flags.get("batches") {
+                opts.batches = list
+                    .split(',')
+                    .map(|b| b.trim().parse::<usize>().context("--batches must be integers"))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            println!(
+                "planning '{}' for SLO {:.0} samples/s within {:.1} µs on {}x {}",
+                json.name,
+                slo.target_sps,
+                slo.latency_budget_us,
+                fleet.total_arrays(),
+                device
+            );
+            let plans = match plan(&json, &cfg, &fleet, &slo, &opts)? {
+                PlanOutcome::Feasible(plans) => plans,
+                PlanOutcome::Infeasible(diag) => {
+                    eprint!("{diag}");
+                    bail!("SLO infeasible for this fleet");
+                }
+            };
+            println!(
+                "{:>4} {:>8} {:>3} {:>3} {:>6} {:>6} {:>12} {:>12} {:>12} {:>7} {:>8}",
+                "rank", "device", "K", "R", "batch", "queue", "interval µs", "latency µs",
+                "samples/s", "arrays", "tiles/R"
+            );
+            for (i, p) in plans.iter().enumerate() {
+                println!(
+                    "{:>4} {:>8} {:>3} {:>3} {:>6} {:>6} {:>12.3} {:>12.1} {:>12.0} {:>7} {:>8}",
+                    i + 1,
+                    p.device,
+                    p.k,
+                    p.r,
+                    p.batch,
+                    p.queue_depth,
+                    p.interval_us,
+                    p.slo_latency_us,
+                    p.predicted_sps,
+                    p.arrays_used,
+                    p.tiles_per_replica
+                );
+            }
+            let best = &plans[0];
+            println!(
+                "best plan: {} replica(s) of a K={} pipeline, {:.1}x throughput headroom",
+                best.r,
+                best.k,
+                best.headroom(&slo)
+            );
+            if args.switches.contains("verify") {
+                let fleet_srv = aie4ml::deploy::FleetServer::launch(best)?;
+                let oracle = aie4ml::runtime::ReferenceOracle::from_model(&json)?;
+                fleet_srv.verify_bit_exact(&oracle, 2, 7)?;
+                println!(
+                    "fleet: {} replica(s) BIT-EXACT vs reference oracle",
+                    fleet_srv.replicas()
+                );
+                fleet_srv.shutdown();
+            }
         }
         "oracle" => {
             // Hermetic bit-exactness gate: compile the model, execute the

@@ -90,6 +90,26 @@ pub struct PartitionedFirmware {
 }
 
 impl PartitionedFirmware {
+    /// Wrap a plain single-array compile as the degenerate K = 1 pipeline:
+    /// no links, and every firmware output surfaces as a final pipeline
+    /// output in drain order. The firmware bytes are untouched — this is
+    /// exactly what `compile_partitioned` produces for a model that fits
+    /// one array.
+    pub fn from_single(fw: Firmware) -> PartitionedFirmware {
+        let outputs = fw
+            .outputs
+            .iter()
+            .enumerate()
+            .map(|(i, o)| PipelineOutput { partition: 0, output: i, name: o.name.clone() })
+            .collect();
+        PartitionedFirmware {
+            model_name: fw.model_name.clone(),
+            partitions: vec![fw],
+            links: Vec::new(),
+            outputs,
+        }
+    }
+
     /// Pipeline depth (number of arrays).
     pub fn k(&self) -> usize {
         self.partitions.len()
@@ -524,6 +544,21 @@ mod tests {
         assert_eq!(got.len(), 2);
         assert_eq!(got[0].data, want[0].data);
         assert_eq!(got[1].data, want[1].data);
+    }
+
+    #[test]
+    fn from_single_wraps_plain_firmware_unchanged() {
+        let json = synth_model("part_wrap", &mlp_spec(&[48, 32, 8], crate::arch::Dtype::I8), 6);
+        let plain = compile(&json, cfg(4, 2)).unwrap().firmware.unwrap();
+        let pfw = PartitionedFirmware::from_single(plain.clone());
+        pfw.check_invariants().unwrap();
+        assert_eq!(pfw.k(), 1);
+        assert!(pfw.links.is_empty());
+        assert_eq!(pfw.outputs.len(), plain.outputs.len());
+        let x = random_input(48, 4, 11);
+        let got = execute_partitioned(&pfw, &x).unwrap();
+        let want = crate::sim::functional::execute(&plain, &x).unwrap();
+        assert_eq!(got[0].data, want.data);
     }
 
     #[test]

@@ -294,8 +294,16 @@ pub fn analyze(fw: &Firmware, model: &EngineModel) -> PerfReport {
 /// Throughput when the whole model graph is replicated across spare tiles
 /// (paper §V-B: "when resources permit, the MLP block can be replicated
 /// across the AI Engine array").
+///
+/// The replica count comes from the *placed* footprint
+/// ([`Firmware::placement_footprint`]): each copy stamps the block's full
+/// bounding box (idle tiles inside it included) and stacked copies share
+/// their columns' memory tiles — not from the old
+/// `placeable_tiles / tiles_used` approximation, which over-counted
+/// whenever the placement left gaps or the memory tiles filled up before
+/// the compute tiles did.
 pub fn replicated_tops(fw: &Firmware, report: &PerfReport) -> (usize, f64) {
-    let replicas = (fw.device.placeable_tiles() / fw.tiles_used().max(1)).max(1);
+    let replicas = fw.placement_footprint().replicas_on(&fw.device);
     (replicas, report.throughput_tops * replicas as f64)
 }
 
@@ -387,6 +395,34 @@ mod tests {
         let (reps, tops) = replicated_tops(&f, &r);
         assert!(reps >= 2);
         assert!((tops / r.throughput_tops - reps as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replication_counts_footprints_not_tiles() {
+        // The old estimate divided placeable tiles by tiles_used; the new
+        // one stamps the placed bounding box (with its mem-tile residency)
+        // across the array. Pin both values and their divergence: a replica
+        // costs the whole box, so the footprint count is strictly below the
+        // tile-count estimate whenever the box spans don't divide the array
+        // evenly or the memory tiles saturate first.
+        let f = fw(&[128, 128], 128, Some((2, 2)));
+        let r = analyze(&f, &EngineModel::default());
+        let old_estimate = (f.device.placeable_tiles() / f.tiles_used().max(1)).max(1);
+        let (new_estimate, _) = replicated_tops(&f, &r);
+        let fp = f.placement_footprint();
+        // The footprint covers both placed 2x2 layers and at least their
+        // 8 compute tiles.
+        assert!(fp.tiles() >= f.tiles_used(), "bbox {} < tiles {}", fp.tiles(), f.tiles_used());
+        assert!(fp.mem_bytes_per_col > 0);
+        // New count is exactly what the footprint says fits on the device…
+        assert_eq!(new_estimate, fp.replicas_on(&f.device));
+        // …and the naive tile-count estimate provably over-counted.
+        assert_eq!(old_estimate, 37, "2 layers x 4 tiles on 296 placeable tiles");
+        assert!(
+            new_estimate < old_estimate,
+            "footprint estimate {new_estimate} must diverge below tile estimate {old_estimate}"
+        );
+        assert!(new_estimate >= 2, "a 2-layer 2x2 block still replicates many times");
     }
 
     #[test]

@@ -126,6 +126,53 @@ fn cli_partition_pipeline_gate() {
 }
 
 #[test]
+fn cli_deploy_plans_and_verifies_fleet() {
+    // SLO planning is reachable from the CLI: a modest target on a small
+    // model plans (R=1/K=1 is enough), and --verify proves the launched
+    // fleet bit-exact against the reference oracle.
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_model(&dir);
+    let Some(out) = run(&[
+        "deploy",
+        model.to_str().unwrap(),
+        "--batch",
+        "8",
+        "--target-sps",
+        "100000",
+        "--latency-us",
+        "100000",
+        "--arrays",
+        "2",
+        "--verify",
+    ]) else {
+        return;
+    };
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("rank"), "{stdout}");
+    assert!(stdout.contains("best plan"), "{stdout}");
+    assert!(stdout.contains("BIT-EXACT"), "{stdout}");
+
+    // An absurd target is diagnosed, not silently planned.
+    let out = run(&[
+        "deploy",
+        model.to_str().unwrap(),
+        "--batch",
+        "8",
+        "--target-sps",
+        "1e15",
+        "--latency-us",
+        "100000",
+        "--arrays",
+        "2",
+    ])
+    .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no deployment meets SLO"), "{stderr}");
+}
+
+#[test]
 fn cli_info_devices() {
     if bin().is_none() {
         eprintln!("skipping: aie4ml binary not built (run `cargo build` first)");

@@ -604,6 +604,150 @@ fn prop_batcher_never_loses_or_reorders() {
     });
 }
 
+// ---------- Replicated fleet serving -----------------------------------------
+
+/// A [`FleetServer`] with R ∈ {2,3} replicas over random diamond DAG
+/// models (optionally cut into a K = 2 pipeline) must answer interleaved
+/// concurrent clients bit-identically to `ReferenceOracle::execute_all`,
+/// and the least-loaded dispatcher must be work-conserving: with rotating
+/// tie-breaks, every replica serves traffic — none sits idle while the
+/// others absorb the whole queue.
+#[test]
+fn prop_fleet_serving_matches_reference_oracle() {
+    use aie4ml::deploy::FleetServer;
+    use aie4ml::partition::{compile_partitioned, cut_candidates, PartitionOptions};
+    use aie4ml::runtime::ReferenceOracle;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[derive(Clone)]
+    struct Case {
+        d: usize,
+        m: usize,
+        k_out: usize,
+        batch: usize,
+        seed: u64,
+        concat: bool,
+        r: usize,
+        parts: usize,
+    }
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "d={} m={} k_out={} batch={} seed={:#x} concat={} r={} parts={}",
+                self.d, self.m, self.k_out, self.batch, self.seed, self.concat, self.r, self.parts
+            )
+        }
+    }
+    let strat = Strategy::new(|r: &mut Pcg32| Case {
+        d: r.gen_range_usize(1, 16),
+        m: r.gen_range_usize(1, 16),
+        k_out: r.gen_range_usize(1, 8),
+        batch: r.gen_range_usize(1, 4),
+        seed: r.next_u64(),
+        concat: r.gen_bool(0.4),
+        r: r.gen_range_usize(2, 3),
+        parts: r.gen_range_usize(1, 2),
+    });
+    check("fleet_vs_reference_oracle", 8, &strat, |case| {
+        let mut rng = Pcg32::seed_from_u64(case.seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let merged = if case.concat { 2 * case.m } else { case.m };
+        let merge = if case.concat {
+            JsonLayer::concat("merge", merged, "int8", 6, &["a", "b"])
+        } else {
+            JsonLayer::residual_add("merge", case.m, "int8", 6, &["a", "b"])
+        };
+        let jm = JsonModel::new(
+            "fleet_prop",
+            vec![
+                dense("stem", case.d, case.m, true),
+                dense("a", case.m, case.m, true).with_inputs(&["stem"]),
+                dense("b", case.m, case.m, false).with_inputs(&["stem"]),
+                merge,
+                dense("head", merged, case.k_out, false).with_inputs(&["merge"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = case.batch;
+        cfg.tiles_per_layer = Some(rng.gen_range_usize(1, 4));
+        let parts = case.parts.min(cut_candidates(&jm).len() + 1);
+        let opts = PartitionOptions { partitions: Some(parts), max_partitions: parts };
+        let pm = compile_partitioned(&jm, cfg, &opts)
+            .map_err(|e| format!("partitioned compile: {e:#}"))?;
+        let pfw = Arc::new(pm.firmware);
+        let oracle = ReferenceOracle::from_model(&jm).map_err(|e| format!("oracle: {e:#}"))?;
+        let fleet = FleetServer::spawn(pfw, case.r, Duration::from_millis(1), 64)
+            .map_err(|e| format!("fleet spawn: {e:#}"))?;
+
+        // Interleaved concurrent clients: r+1 threads x 3 requests, inputs
+        // pre-generated so the oracle comparison is deterministic.
+        let threads = case.r + 1;
+        let workloads: Vec<Vec<Vec<i32>>> = (0..threads)
+            .map(|t| {
+                let mut r = Pcg32::seed_from_u64(case.seed.wrapping_add(1 + t as u64));
+                (0..3)
+                    .map(|_| (0..case.d).map(|_| r.gen_i32_in(-128, 127)).collect())
+                    .collect()
+            })
+            .collect();
+        let failure: Option<String> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for work in &workloads {
+                let client = fleet.client();
+                let oracle = &oracle;
+                let d = case.d;
+                handles.push(scope.spawn(move || -> Result<(), String> {
+                    for x in work {
+                        let got = client
+                            .infer_multi(x.clone())
+                            .map_err(|e| format!("fleet infer: {e:#}"))?;
+                        let probe = Activation::new(1, d, x.clone()).unwrap();
+                        let want = oracle
+                            .execute_all(&probe)
+                            .map_err(|e| format!("oracle execute: {e:#}"))?;
+                        if got.len() != want.len() {
+                            return Err(format!(
+                                "{} outputs vs oracle's {}",
+                                got.len(),
+                                want.len()
+                            ));
+                        }
+                        for (o, (g, w)) in got.iter().zip(&want).enumerate() {
+                            if g != &w.data {
+                                return Err(format!("output {o} diverges from the oracle"));
+                            }
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            handles.into_iter().find_map(|h| h.join().unwrap().err())
+        });
+        if let Some(msg) = failure {
+            return Err(msg);
+        }
+        let m = fleet.shutdown();
+        let total: u64 = m.replicas.iter().map(|rep| rep.dispatched).sum();
+        if total != (threads * 3) as u64 {
+            return Err(format!("dispatched {total} of {} requests", threads * 3));
+        }
+        // Work conservation: least-loaded dispatch with rotating ties must
+        // not starve any replica across 3(r+1) >= 9 requests.
+        for rep in &m.replicas {
+            if rep.dispatched == 0 {
+                return Err(format!("replica {} idle while others queued", rep.replica));
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------- JSON parser fuzz ---------------------------------------------------
 
 #[test]

@@ -87,7 +87,7 @@ fn ablation_placement() {
     );
     for (name, m) in [("B&B", &bnb), ("scattered", &scattered)] {
         let fw = m.firmware.as_ref().unwrap();
-        let plan = route_firmware(fw);
+        let plan = route_firmware(fw).unwrap();
         let perf = analyze(fw, &EngineModel::default());
         println!(
             "{:<12} {:>8.2} {:>12} {:>14} {:>14.3}",
@@ -98,10 +98,10 @@ fn ablation_placement() {
             perf.latency_us
         );
     }
-    let hops_bnb = route_firmware(bnb.firmware.as_ref().unwrap()).total_hops;
-    let hops_sc = route_firmware(scattered.firmware.as_ref().unwrap()).total_hops;
+    let hops_bnb = route_firmware(bnb.firmware.as_ref().unwrap()).unwrap().total_hops;
+    let hops_sc = route_firmware(scattered.firmware.as_ref().unwrap()).unwrap().total_hops;
     assert!(hops_bnb < hops_sc, "B&B routes must be shorter: {hops_bnb} vs {hops_sc}");
-    let plan = route_firmware(bnb.firmware.as_ref().unwrap());
+    let plan = route_firmware(bnb.firmware.as_ref().unwrap()).unwrap();
     let _ = interconnect_latency_cycles(&plan, 1);
 }
 

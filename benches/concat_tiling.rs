@@ -1,0 +1,83 @@
+//! Bench: concat-aware offset tiling — staged (row-major merge buffer /
+//! row-major link landing) vs offset-tiled (branches and links land
+//! directly in the consumer's {M, K} read tiles).
+//!
+//! Two workloads:
+//! * the `concat_mlp` zoo topology on one array — the Concat's staging
+//!   copy vs direct landing (interval, latency, interconnect hops);
+//! * `wide_mlp_2x` as a K = 2 pipeline — row-major vs offset-tiled link
+//!   landings (interval, latency, link cycles, pipeline hops).
+//!
+//! The staged numbers come from `staged_variant()` (same compile, tilers
+//! stripped), so the comparison isolates the data-layout contract.
+//!
+//! `--smoke` runs a single timed iteration (CI's bench smoke job).
+
+use aie4ml::frontend::{CompileConfig, LayerConfig};
+use aie4ml::harness::models::{concat_mlp_model, wide_mlp_2x_config, wide_mlp_2x_model};
+use aie4ml::partition::{
+    analyze_pipeline, compile_partitioned, pipeline_total_hops, PartitionOptions,
+};
+use aie4ml::passes::compile;
+use aie4ml::sim::engine::{analyze, EngineModel};
+use aie4ml::sim::interconnect::route_firmware;
+use aie4ml::util::bench;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let model = EngineModel::default();
+
+    // --- Concat merge: staged vs offset on one array ---------------------
+    let json = concat_mlp_model("concat_tiling_bench", 96, 64, 32, 16, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 16;
+    for name in ["fc_a", "fc_b", "head"] {
+        cfg.layers
+            .insert(name.into(), LayerConfig { cascade: Some((2, 2)), ..Default::default() });
+    }
+    let (m, _) = bench::run("concat_compile", iters, || {
+        compile(&json, cfg.clone()).expect("concat compile")
+    });
+    let fw = m.firmware.as_ref().unwrap();
+    let staged = fw.staged_variant();
+    println!("\nconcat merge — {} batch {}\n", json.name, fw.batch);
+    println!(
+        "{:<8} {:>12} {:>14} {:>12} {:>14}",
+        "path", "interval cyc", "latency cyc", "total hops", "max link load"
+    );
+    for (name, f) in [("offset", fw), ("staged", &staged)] {
+        let perf = analyze(f, &model);
+        let plan = route_firmware(f).expect("routing");
+        println!(
+            "{:<8} {:>12.0} {:>14.0} {:>12} {:>14}",
+            name, perf.interval_cycles, perf.latency_cycles, plan.total_hops, plan.max_link_load
+        );
+    }
+
+    // --- Partition links: staged vs offset landings at K = 2 -------------
+    let json = wide_mlp_2x_model("concat_tiling_wide2x");
+    let wcfg = wide_mlp_2x_config();
+    let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
+    let (pm, _) = bench::run("wide2x_k2_compile", iters, || {
+        compile_partitioned(&json, wcfg.clone(), &opts).expect("partitioned compile")
+    });
+    let pfw = &pm.firmware;
+    let staged = pfw.staged_variant();
+    println!("\npartition links — {} K=2 batch {}\n", json.name, pfw.batch());
+    println!(
+        "{:<8} {:>12} {:>14} {:>12} {:>14}",
+        "path", "interval cyc", "latency cyc", "link cyc", "pipeline hops"
+    );
+    for (name, p) in [("offset", pfw), ("staged", &staged)] {
+        let perf = analyze_pipeline(p, &model);
+        println!(
+            "{:<8} {:>12.0} {:>14.0} {:>12.0} {:>14}",
+            name,
+            perf.interval_cycles,
+            perf.latency_cycles,
+            perf.link_cycles,
+            pipeline_total_hops(p)
+        );
+    }
+}

@@ -8,7 +8,7 @@
 
 use crate::arch::{Device, Dtype, MmulTiling};
 use crate::ir::{CascadeGeometry, DenseQuant, NodeId, PlacementRect, QuantSpec};
-use crate::sim::dma::Tiler2d;
+use crate::sim::dma::{OffsetTiler, Tiler2d};
 
 /// One compute-tile kernel instance.
 #[derive(Debug, Clone)]
@@ -84,6 +84,14 @@ pub struct MergePlan {
     pub mem_col: usize,
     /// One producer-side write tiler per input edge, in input order.
     pub write_tilers: Vec<Tiler2d>,
+    /// **Offset tilers** (`Concat` only): when non-empty (one per input, in
+    /// input order), every producer writes its feature band directly into
+    /// the single dense consumer's {M, K} read-tile buffer — this plan then
+    /// describes no buffer of its own (the merge's bytes live in the
+    /// consumer's input plan) and the staged row-major copy is gone. Empty
+    /// means the legacy staged path: producers land in this buffer through
+    /// `write_tilers` and consumers re-read it row-major.
+    pub offset_tilers: Vec<OffsetTiler>,
     /// Merged activation width.
     pub features: usize,
     /// Buffer bytes (whole merged activation, single buffer).
@@ -105,6 +113,12 @@ impl MergePlan {
         } else {
             shard
         }
+    }
+
+    /// Whether the producers write straight into the consumer's read-tile
+    /// buffer (no staged merge buffer of its own).
+    pub fn offset_tiled(&self) -> bool {
+        !self.offset_tilers.is_empty()
     }
 }
 
@@ -202,6 +216,13 @@ pub struct FirmwareOutput {
     pub stage: usize,
     /// Mem-tile program draining this output.
     pub plan: MemTilePlan,
+    /// Offset tiler landing this drain directly in a downstream consumer's
+    /// {M, K} read layout — set by the partitioner on the drain feeding a
+    /// [`crate::partition::PartitionLink`], so the crossing activation
+    /// never stages row-major on the downstream array. `None` (the
+    /// emission default) is the legacy row-major drain; serialization
+    /// skips it, so single-array firmware.json is unchanged.
+    pub write_tiler: Option<OffsetTiler>,
 }
 
 /// The rectangular array region a placed firmware actually occupies, plus
@@ -321,7 +342,11 @@ impl Firmware {
             ));
         }
         for m in &self.merges {
-            shards.push((m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes()));
+            // Offset-tiled merges own no buffer: their bytes live in the
+            // consumer's input plan, already counted above.
+            if !m.plan.offset_tiled() {
+                shards.push((m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes()));
+            }
         }
         for o in &self.outputs {
             shards.push((o.plan.mem_col, o.plan.columns, o.plan.per_column_bytes()));
@@ -415,6 +440,22 @@ impl Firmware {
             .filter(|(_, s)| s.inputs.contains(&StageSource::Stage(i)))
             .map(|(j, _)| j)
             .collect()
+    }
+
+    /// The same firmware with every offset tiler stripped — the legacy
+    /// **staged** data path (row-major merge buffers, row-major drains).
+    /// Bit-exactness is unaffected (the tilers only change data layout);
+    /// benches and tests use this for staged-vs-offset comparisons of the
+    /// performance and routing models.
+    pub fn staged_variant(&self) -> Firmware {
+        let mut fw = self.clone();
+        for m in &mut fw.merges {
+            m.plan.offset_tilers.clear();
+        }
+        for o in &mut fw.outputs {
+            o.write_tiler = None;
+        }
+        fw
     }
 
     /// Sanity invariants the emission pass guarantees; exercised by tests
@@ -589,13 +630,53 @@ impl Firmware {
                             );
                         }
                     }
-                    ensure!(
-                        m.plan.per_column_bytes() <= self.device.mem_tile_bytes,
-                        "merge '{}': buffer {} B exceeds {} B",
-                        m.name,
-                        m.plan.per_column_bytes(),
-                        self.device.mem_tile_bytes
-                    );
+                    if m.plan.offset_tiled() {
+                        // Offset tilers: Concat only, one per input, bands
+                        // tiling the merged width exactly in input order.
+                        ensure!(
+                            m.op == MergeOp::Concat,
+                            "merge '{}': offset tilers on a non-concat merge",
+                            m.name
+                        );
+                        ensure!(
+                            m.plan.offset_tilers.len() == s.inputs.len(),
+                            "merge '{}': {} offset tilers for {} inputs",
+                            m.name,
+                            m.plan.offset_tilers.len(),
+                            s.inputs.len()
+                        );
+                        let mut off = 0usize;
+                        for (t, &w) in m.plan.offset_tilers.iter().zip(&widths) {
+                            ensure!(
+                                t.offset == off && t.stride == m.features,
+                                "merge '{}': offset tiler band ({}, {}) misplaced \
+                                 (expected offset {off}, stride {})",
+                                m.name,
+                                t.offset,
+                                t.stride,
+                                m.features
+                            );
+                            off += w;
+                        }
+                        ensure!(
+                            off == m.features,
+                            "merge '{}': offset bands cover {} of {} features",
+                            m.name,
+                            off,
+                            m.features
+                        );
+                    } else {
+                        // Staged merges own the buffer: its shard must fit
+                        // one memory tile (offset-tiled merges have no
+                        // buffer — the consumer's input plan is checked).
+                        ensure!(
+                            m.plan.per_column_bytes() <= self.device.mem_tile_bytes,
+                            "merge '{}': buffer {} B exceeds {} B",
+                            m.name,
+                            m.plan.per_column_bytes(),
+                            self.device.mem_tile_bytes
+                        );
+                    }
                 }
             }
         }
@@ -661,7 +742,7 @@ impl Firmware {
                 .merges
                 .iter()
                 .map(|m| {
-                    obj([
+                    let mut v = obj([
                         ("name", Value::from(m.name.as_str())),
                         (
                             "op",
@@ -673,8 +754,41 @@ impl Firmware {
                         ("features", Value::from(m.features)),
                         ("dtype", Value::from(m.quant.dtype.to_string())),
                         ("mem_col", Value::from(m.plan.mem_col)),
-                        ("mem_bytes", Value::from(m.plan.per_column_bytes())),
-                    ])
+                        // An offset-tiled merge owns no buffer: its bytes
+                        // live in the consumer's input plan (reporting the
+                        // staged size here would double-count the column).
+                        (
+                            "mem_bytes",
+                            Value::from(if m.plan.offset_tiled() {
+                                0
+                            } else {
+                                m.plan.per_column_bytes()
+                            }),
+                        ),
+                    ]);
+                    // Offset-tiled concats describe their direct-landing
+                    // descriptors; staged merges keep the exact legacy
+                    // shape (no key), so pre-offset firmware.json is
+                    // byte-identical.
+                    if m.plan.offset_tiled() {
+                        if let Value::Object(fields) = &mut v {
+                            fields.insert(
+                                "write_tilers".to_string(),
+                                Value::Array(
+                                    m.plan
+                                        .offset_tilers
+                                        .iter()
+                                        .map(|t| {
+                                            Value::from(vec![
+                                                t.offset, t.stride, t.tile_m, t.tile_k,
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            );
+                        }
+                    }
+                    v
                 })
                 .collect();
             let stages: Vec<Value> = self
@@ -709,12 +823,22 @@ impl Firmware {
                 .outputs
                 .iter()
                 .map(|o| {
-                    obj([
+                    let mut v = obj([
                         ("name", Value::from(o.name.as_str())),
                         ("stage", Value::from(o.stage)),
                         ("features", Value::from(self.stage_out_features(o.stage))),
                         ("mem_col", Value::from(o.plan.mem_col)),
-                    ])
+                    ]);
+                    // Only drains re-targeted by the partitioner carry a
+                    // landing descriptor; plain drains keep the legacy
+                    // shape byte-for-byte.
+                    if let (Value::Object(fields), Some(t)) = (&mut v, &o.write_tiler) {
+                        fields.insert(
+                            "write_tiler".to_string(),
+                            Value::from(vec![t.offset, t.stride, t.tile_m, t.tile_k]),
+                        );
+                    }
+                    v
                 })
                 .collect();
             if let Value::Object(fields) = &mut top {

@@ -75,25 +75,44 @@ impl MetricsReport {
     }
 
     /// Aggregate per-replica reports into one fleet-level view: requests,
-    /// batches and device time sum; occupancy is batch-weighted; latency
-    /// percentiles take the worst replica (conservative — exact percentile
-    /// merging would need the raw samples, and an SLO check cares about the
-    /// slowest replica anyway). Per-stage rows are dropped: stage indices
-    /// are per-replica pipeline positions, not fleet-wide entities.
+    /// batches and device time sum; occupancy is batch-weighted.
+    ///
+    /// Latency semantics (exact fleet percentiles would need the pooled
+    /// raw samples, which replicas do not ship):
+    /// * **p50** is merged *request-weighted* — each replica's median
+    ///   contributes proportionally to the requests it served. Taking the
+    ///   worst replica (the old rule) badly overstated the fleet median
+    ///   under skewed load: one replica serving a handful of slow requests
+    ///   dominated the p50 of a fleet that answered thousands quickly.
+    /// * **p99** stays the *worst replica's* p99 — a request-weighted mean
+    ///   would understate the pooled tail whenever a slow replica serves a
+    ///   small share of traffic (10 requests at 100 µs next to 100 at
+    ///   10 µs pool to a 100 µs p99, not 18 µs), and an SLO check on the
+    ///   tail must not pass on an average. The max is an upper bound of
+    ///   the pooled p99 and exact when the slow replica carries ≥ 1% of
+    ///   the traffic.
+    /// * **max_latency_us** is a true maximum over replicas.
+    ///
+    /// Per-stage rows are dropped: stage indices are per-replica pipeline
+    /// positions, not fleet-wide entities.
     pub fn merged(reports: &[MetricsReport]) -> MetricsReport {
         let mut out = MetricsReport::empty();
         let mut occupancy_weighted = 0.0;
+        let mut p50_weighted = 0.0;
         for r in reports {
             out.requests += r.requests;
             out.batches += r.batches;
             out.device_busy_us += r.device_busy_us;
             occupancy_weighted += r.mean_batch_occupancy * r.batches as f64;
-            out.p50_latency_us = out.p50_latency_us.max(r.p50_latency_us);
+            p50_weighted += r.p50_latency_us * r.requests as f64;
             out.p99_latency_us = out.p99_latency_us.max(r.p99_latency_us);
             out.max_latency_us = out.max_latency_us.max(r.max_latency_us);
         }
         if out.batches > 0 {
             out.mean_batch_occupancy = occupancy_weighted / out.batches as f64;
+        }
+        if out.requests > 0 {
+            out.p50_latency_us = p50_weighted / out.requests as f64;
         }
         out
     }
@@ -210,7 +229,7 @@ mod tests {
     }
 
     #[test]
-    fn merged_reports_sum_and_take_worst_latency() {
+    fn merged_reports_sum_and_weight_latency() {
         let mut a = Metrics::new();
         a.record_batch(4, 4, &[Duration::from_micros(10); 4], 100.0);
         let mut b = Metrics::new();
@@ -220,15 +239,45 @@ mod tests {
         assert_eq!(m.requests, 10);
         assert_eq!(m.batches, 3);
         assert!((m.device_busy_us - 260.0).abs() < 1e-9);
-        // Worst replica's percentiles dominate the merged view.
+        // The tail (p99, max) is conservative; the median is
+        // request-weighted.
         assert_eq!(m.max_latency_us, 50.0);
-        assert!(m.p99_latency_us >= 20.0);
+        let (pa, pb) = (a.report(), b.report());
+        assert_eq!(m.p99_latency_us, pa.p99_latency_us.max(pb.p99_latency_us));
+        let want_p50 = (pa.p50_latency_us * 4.0 + pb.p50_latency_us * 6.0) / 10.0;
+        assert!((m.p50_latency_us - want_p50).abs() < 1e-9);
         // Batch-weighted occupancy: (4*1 + 3*2) / 3 batches = 10/3.
         assert!((m.mean_batch_occupancy - 10.0 / 3.0).abs() < 1e-9);
         // Identity on the empty set.
         let e = MetricsReport::merged(&[]);
         assert_eq!(e.requests, 0);
         assert_eq!(e.p99_latency_us, 0.0);
+    }
+
+    #[test]
+    fn merged_percentiles_track_load_not_the_worst_replica() {
+        // Regression for the worst-replica merge rule: replica `fast`
+        // serves 100 requests at 10 µs, replica `slow` serves 10 at
+        // 100 µs. The fleet *median* must sit near the traffic (~18 µs),
+        // not jump to the slow replica's 100 µs — while the tail (p99,
+        // max) must stay at 100 µs: pooled, the slowest ~9% of requests
+        // all took 100 µs, so a request-weighted p99 of 18 µs would let a
+        // 50 µs SLO check pass with >1% of traffic in violation.
+        let mut fast = Metrics::new();
+        for _ in 0..25 {
+            fast.record_batch(4, 4, &[Duration::from_micros(10); 4], 40.0);
+        }
+        let mut slow = Metrics::new();
+        for _ in 0..5 {
+            slow.record_batch(2, 2, &[Duration::from_micros(100); 2], 200.0);
+        }
+        let m = MetricsReport::merged(&[fast.report(), slow.report()]);
+        assert_eq!(m.requests, 110);
+        let want = (10.0 * 100.0 + 100.0 * 10.0) / 110.0; // ≈ 18.18 µs
+        assert!((m.p50_latency_us - want).abs() < 1e-9, "p50 {}", m.p50_latency_us);
+        assert!(m.p50_latency_us < 100.0, "median must not be the worst replica");
+        assert_eq!(m.p99_latency_us, 100.0, "tail percentile must stay conservative");
+        assert_eq!(m.max_latency_us, 100.0);
     }
 
     #[test]

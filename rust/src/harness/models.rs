@@ -126,6 +126,38 @@ pub fn residual_mlp_model(
     m
 }
 
+/// A concat-merge MLP (`residual_mlp`'s `Concat` sibling): two parallel
+/// branches of *different* widths read the input and are spliced by a
+/// `Concat`, then a dense head consumes the merged activation — exactly
+/// the topology whose merge the offset tilers compile without a staging
+/// copy (each branch lands at a feature offset of the head's read-tile
+/// buffer). Deterministic weights from the name-seeded PCG stream.
+pub fn concat_mlp_model(
+    name: &str,
+    features: usize,
+    branch_a: usize,
+    branch_b: usize,
+    classes: usize,
+    frac_bits: i32,
+) -> JsonModel {
+    let mut rng = Pcg32::seed_from_u64(name_seed(name));
+    let mut dense = |lname: &str, fin: usize, fout: usize, relu: bool| -> JsonLayer {
+        let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-512, 512)).collect();
+        JsonLayer::dense(lname, fin, fout, true, relu, "int8", "int8", frac_bits, weights, bias)
+    };
+    let merged = branch_a + branch_b;
+    let layers = vec![
+        dense("fc_a", features, branch_a, true),
+        dense("fc_b", features, branch_b, false).with_inputs(&["input"]),
+        JsonLayer::concat("cat", merged, "int8", frac_bits, &["fc_a", "fc_b"]),
+        dense("head", merged, classes, false).with_inputs(&["cat"]),
+    ];
+    let mut m = JsonModel::new(name, layers);
+    m.device = Some("vek280".to_string());
+    m
+}
+
 /// A diamond: `input -> stem`, which fans out into two parallel branches
 /// `a` and `b` that re-merge through a residual add, then a dense head —
 /// the smallest topology exercising fan-out *and* fan-in.

@@ -21,7 +21,9 @@
 
 use crate::arch::Dtype;
 use crate::frontend::JsonModel;
-use crate::harness::models::{residual_mlp_model, synth_model, wide_mlp_2x_model, LayerSpec};
+use crate::harness::models::{
+    concat_mlp_model, residual_mlp_model, synth_model, wide_mlp_2x_model, LayerSpec,
+};
 use crate::util::json::{obj, Value};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -70,6 +72,10 @@ pub fn zoo_models() -> Vec<(JsonModel, usize)> {
         (synth_model("mlp_i16i8", &layer_specs(&[128, 128, 64], Dtype::I16, Dtype::I8), 6), 16),
         // Skip-connection MLP: fan-out + residual Add fan-in (DAG gate).
         (residual_mlp_model("residual_mlp", 128, 256, 32, 6), 16),
+        // Concat-head MLP: uneven-width branches spliced by a Concat whose
+        // producers land at feature offsets of the head's read-tile buffer
+        // (the offset-tiler gate). Rust-only, like wide_mlp_2x.
+        (concat_mlp_model("concat_mlp", 96, 64, 32, 16, 6), 16),
         // Over-capacity model: at its throughput config (128 tiles/layer,
         // `models::wide_mlp_2x_config`) it cannot place on one VEK280 and
         // must compile through the multi-array partitioner (K >= 2).
@@ -200,16 +206,24 @@ mod tests {
     fn zoo_is_deterministic() {
         let a = zoo_models();
         let b = zoo_models();
-        assert_eq!(a.len(), 6);
+        assert_eq!(a.len(), 7);
         for ((ma, _), (mb, _)) in a.iter().zip(&b) {
             assert_eq!(ma.name, mb.name);
             assert_eq!(ma.layers[0].weights, mb.layers[0].weights);
         }
-        // Mirrors the Python MODEL_ZOO names, plus the Rust-only DAG entry.
+        // Mirrors the Python MODEL_ZOO names, plus the Rust-only DAG entries.
         let names: Vec<&str> = a.iter().map(|(m, _)| m.name.as_str()).collect();
         assert_eq!(
             names,
-            ["quickstart", "mlp7", "token_mixer", "mlp_i16i8", "residual_mlp", "wide_mlp_2x"]
+            [
+                "quickstart",
+                "mlp7",
+                "token_mixer",
+                "mlp_i16i8",
+                "residual_mlp",
+                "concat_mlp",
+                "wide_mlp_2x"
+            ]
         );
     }
 
@@ -217,7 +231,7 @@ mod tests {
     fn ensure_zoo_writes_and_reuses() {
         let dir = ScratchDir::new("zoo").unwrap();
         let first = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(first.len(), 6);
+        assert_eq!(first.len(), 7);
         for e in &first {
             assert!(e.model.exists(), "{} missing", e.model.display());
             // Written models parse back into valid exporter JSON.
@@ -227,7 +241,7 @@ mod tests {
         }
         // Second call reuses the manifest (same paths, no rewrite needed).
         let second = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(second.len(), 6);
+        assert_eq!(second.len(), 7);
         assert_eq!(second[0].model, first[0].model);
     }
 
@@ -245,8 +259,9 @@ mod tests {
         )
         .unwrap();
         let entries = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(entries.len(), 6);
+        assert_eq!(entries.len(), 7);
         assert!(entries.iter().any(|e| e.name == "residual_mlp"));
+        assert!(entries.iter().any(|e| e.name == "concat_mlp"));
         assert!(entries.iter().any(|e| e.name == "wide_mlp_2x"));
         // With the HLO artifact actually present, the same truncated
         // manifest is an AOT set and must be preserved verbatim.
@@ -274,6 +289,25 @@ mod tests {
         let back = JsonModel::from_str(&text).unwrap();
         back.to_graph().unwrap();
         assert_eq!(back.layers[2].inputs, vec!["input", "fc2"]);
+    }
+
+    #[test]
+    fn concat_zoo_entry_merges_uneven_branches() {
+        let zoo = zoo_models();
+        let (m, batch) = &zoo[5];
+        assert_eq!(m.name, "concat_mlp");
+        assert_eq!(*batch, 16);
+        assert_eq!(m.layers[2].ty, "concat");
+        assert_eq!(m.layers[2].inputs, vec!["fc_a", "fc_b"]);
+        // Uneven branches: the merged width is their sum.
+        assert_ne!(m.layers[0].out_features, m.layers[1].out_features);
+        assert_eq!(
+            m.layers[0].out_features + m.layers[1].out_features,
+            m.layers[2].out_features
+        );
+        // Round-trips through the written JSON as a DAG.
+        let back = JsonModel::from_str(&m.to_json_string()).unwrap();
+        back.to_graph().unwrap();
     }
 
     #[test]

@@ -26,15 +26,16 @@
 pub mod cut;
 pub mod pipeline;
 
-use crate::codegen::firmware::Firmware;
+use crate::codegen::firmware::{Firmware, StageRef, StageSource};
 use crate::frontend::{CompileConfig, JsonModel};
 use crate::ir::QuantSpec;
 use crate::passes::{compile, Model};
+use crate::sim::dma::OffsetTiler;
 use crate::sim::functional::{execute_all, Activation};
 use anyhow::{bail, ensure, Context, Result};
 
 pub use cut::{choose_cuts, cut_candidates, CutCandidate};
-pub use pipeline::{analyze_pipeline, PartitionPerf, PipelinePerfReport};
+pub use pipeline::{analyze_pipeline, pipeline_total_hops, PartitionPerf, PipelinePerfReport};
 
 /// How to partition.
 #[derive(Debug, Clone)]
@@ -64,6 +65,12 @@ pub struct PartitionLink {
     pub features: usize,
     /// Quantization of the crossing activation.
     pub quant: QuantSpec,
+    /// Offset tiler landing the crossing activation directly in the
+    /// downstream array's {M, K} read-tile input buffer (mirrored onto the
+    /// upstream drain's [`crate::codegen::firmware::FirmwareOutput`]).
+    /// `None` when the downstream input fans out to several readers — the
+    /// link then lands row-major and stages, as before.
+    pub write_tiler: Option<OffsetTiler>,
 }
 
 /// One final model output, located in whichever partition produced it.
@@ -141,6 +148,19 @@ impl PartitionedFirmware {
         self.partitions[o.partition].output_features_of(o.output)
     }
 
+    /// The same pipeline with every offset tiler stripped — the legacy
+    /// **staged** data path (row-major link landings and merge buffers),
+    /// bit-exact with the tiled pipeline; benches and tests use it for
+    /// staged-vs-offset comparisons of the performance/routing models.
+    pub fn staged_variant(&self) -> PartitionedFirmware {
+        let mut p = self.clone();
+        p.partitions = p.partitions.iter().map(Firmware::staged_variant).collect();
+        for l in &mut p.links {
+            l.write_tiler = None;
+        }
+        p
+    }
+
     /// Sanity invariants over the assembled pipeline.
     pub fn check_invariants(&self) -> Result<()> {
         ensure!(!self.partitions.is_empty(), "pipeline has no partitions");
@@ -178,6 +198,22 @@ impl PartitionedFirmware {
                 link.quant.dtype,
                 down.input_quant.dtype
             );
+            if let Some(t) = &link.write_tiler {
+                ensure!(
+                    t.offset == 0 && t.stride == down.input_features(),
+                    "link {i} ('{}'): landing tiler band ({}, {}) does not cover the \
+                     downstream {}-feature input",
+                    link.tensor,
+                    t.offset,
+                    t.stride,
+                    down.input_features()
+                );
+                ensure!(
+                    up.outputs[link.from_output].write_tiler.as_ref() == Some(t),
+                    "link {i} ('{}'): upstream drain tiler diverged from the link tiler",
+                    link.tensor
+                );
+            }
         }
         for o in &self.outputs {
             ensure!(o.partition < self.partitions.len(), "output '{}' partition oob", o.name);
@@ -285,6 +321,25 @@ fn split_model(
     Ok(subs)
 }
 
+/// The offset tiler landing an inter-partition link directly in `down`'s
+/// {M, K} read-tile input buffer: available when exactly one dense layer
+/// reads the downstream network input (its tiling defines the read blocks).
+/// Several readers — or a merge reading the raw input — keep the legacy
+/// row-major landing (`None`).
+fn link_landing_tiler(down: &Firmware) -> Option<OffsetTiler> {
+    let mut fed: Option<usize> = None;
+    for s in &down.stages {
+        if s.inputs.contains(&StageSource::Input) {
+            match s.op {
+                StageRef::Layer(li) if fed.is_none() => fed = Some(li),
+                _ => return None,
+            }
+        }
+    }
+    let l = &down.layers[fed?];
+    Some(OffsetTiler::new(0, down.in_features, l.tiling.m, l.tiling.k))
+}
+
 /// Compile one partitioning attempt at a fixed K.
 fn try_k(
     json: &JsonModel,
@@ -312,7 +367,7 @@ fn try_k(
             .with_context(|| format!("partition {i} ('{}')", sub.model.name))?;
         models.push(model);
     }
-    let partitions: Vec<Firmware> = models
+    let mut partitions: Vec<Firmware> = models
         .iter()
         .map(|m| m.firmware.clone().context("partition compiled without firmware"))
         .collect::<Result<_>>()?;
@@ -331,7 +386,23 @@ fn try_k(
             tensor: tensor.clone(),
             features: fw.output_features_of(from_output),
             quant: fw.stage_quant(fw.outputs[from_output].stage),
+            write_tiler: None,
         });
+    }
+    // Offset-tile the links: each crossing activation lands straight in
+    // the downstream array's {M, K} read-tile input buffer (when a single
+    // dense layer reads it), so the link never stages row-major. The same
+    // tiler is stamped onto the upstream drain — both the pipeline's copy
+    // and the per-partition `Model`'s firmware, so serializing either view
+    // carries the landing descriptor.
+    for (i, link) in links.iter_mut().enumerate() {
+        if let Some(t) = link_landing_tiler(&partitions[i + 1]) {
+            link.write_tiler = Some(t);
+            partitions[i].outputs[link.from_output].write_tiler = Some(t);
+            if let Some(fw) = models[i].firmware.as_mut() {
+                fw.outputs[link.from_output].write_tiler = Some(t);
+            }
+        }
     }
     // Final model outputs: the original sinks, wherever they landed.
     let mut outputs = Vec::new();

@@ -17,7 +17,8 @@
 //! A one-partition pipeline degenerates to [`crate::sim::engine::analyze`]
 //! exactly — same interval, same latency.
 
-use super::PartitionedFirmware;
+use super::{PartitionLink, PartitionedFirmware};
+use crate::codegen::firmware::{Firmware, StageRef, StageSource};
 use crate::sim::engine::{analyze, EngineModel};
 
 /// Per-partition summary row.
@@ -67,8 +68,79 @@ impl PipelinePerfReport {
 }
 
 /// Cycles for one inter-partition link transfer of `bytes`.
-fn link_transfer_cycles(bytes: usize, port_bytes: usize, model: &EngineModel) -> f64 {
-    bytes as f64 / port_bytes.max(1) as f64 + model.dma_setup as f64
+///
+/// An offset-tiled link ([`PartitionLink::write_tiler`]) is a single wire
+/// transfer: the upstream drain already holds the activation in the
+/// downstream consumer's {M, K} read layout, so it lands directly in the
+/// input buffer. A staged (row-major) link pays one more buffer pass at
+/// memory-tile rate on the downstream side — the landing image must be
+/// re-tiled into the consumer's read layout before the first read can
+/// broadcast up the cascade columns. That staging copy was previously
+/// unmodeled; the tiled path costs exactly what the old formula charged.
+fn link_transfer_cycles(
+    link: &PartitionLink,
+    bytes: usize,
+    port_bytes: usize,
+    model: &EngineModel,
+) -> f64 {
+    let wire = bytes as f64 / port_bytes.max(1) as f64 + model.dma_setup as f64;
+    if link.write_tiler.is_some() {
+        wire
+    } else {
+        wire + bytes as f64 / port_bytes.max(1) as f64 + model.dma_setup as f64
+    }
+}
+
+/// Landing hops of one link on its downstream array: switch traversals
+/// along the memory-tile row from the shim entry (column 0) into the
+/// downstream input buffer. An **offset-tiled** link streams its {M, K}
+/// blocks in a single pass from the entry out to the farthest shard
+/// column of the consumer's read buffer. A **staged** link lands its
+/// row-major image at the entry column (a local store, no row hops) and
+/// then pays a buffer-to-buffer re-tile pass into every shard column —
+/// charged from the image's location, exactly how
+/// [`crate::sim::interconnect::route_firmware`] charges a staged merge's
+/// forwarding, so the staged-vs-offset comparison measures only the extra
+/// pass the offset tiler eliminates.
+fn link_landing_hops(link: &PartitionLink, down: &Firmware) -> usize {
+    // The input buffer(s): every stage reading the network input.
+    let mut hops = 0usize;
+    for s in &down.stages {
+        if !s.inputs.contains(&StageSource::Input) {
+            continue;
+        }
+        let (mem_col, columns) = match s.op {
+            StageRef::Layer(li) => {
+                let p = &down.layers[li].input_plan;
+                (p.mem_col, p.columns.max(1))
+            }
+            StageRef::Merge(mi) => (down.merges[mi].plan.mem_col, 1),
+        };
+        if link.write_tiler.is_some() {
+            // Direct landing: one pass to the farthest shard column.
+            hops += mem_col + columns - 1;
+        } else {
+            // Staged: re-tile the entry-column image into each shard.
+            hops += (0..columns).map(|shard| mem_col + shard).sum::<usize>();
+        }
+    }
+    hops
+}
+
+/// Total interconnect hops of a pipeline: every partition's static routes
+/// ([`crate::sim::interconnect::route_firmware`]) plus each link's landing
+/// hops on its downstream array — the number the offset tilers shrink.
+pub fn pipeline_total_hops(pfw: &PartitionedFirmware) -> usize {
+    let mut total = 0usize;
+    for fw in &pfw.partitions {
+        total += crate::sim::interconnect::route_firmware(fw)
+            .expect("partitioned firmware drains every sink (check_invariants)")
+            .total_hops;
+    }
+    for (i, link) in pfw.links.iter().enumerate() {
+        total += link_landing_hops(link, &pfw.partitions[i + 1]);
+    }
+    total
 }
 
 /// Analyze a partitioned pipeline under the engine's cost model.
@@ -93,7 +165,7 @@ pub fn analyze_pipeline(pfw: &PartitionedFirmware, model: &EngineModel) -> Pipel
     for (i, link) in pfw.links.iter().enumerate() {
         let device = &pfw.partitions[i].device;
         let bytes = batch * link.features * link.quant.dtype.bytes();
-        let hop = link_transfer_cycles(bytes, device.mem_tile_port_bytes, model);
+        let hop = link_transfer_cycles(link, bytes, device.mem_tile_port_bytes, model);
         // A link is a pipeline stage of its own: it bounds the interval
         // when the wire is slower than every array, and every hop adds to
         // the fill latency.

@@ -165,8 +165,29 @@ impl Pass for Emission {
                         .get(&id)
                         .cloned()
                         .with_context(|| format!("merge '{}': no mem-tile plan", node.name))?;
-                    plan.mem_col = merge_mem_col(&model.graph, id, &layer_idx, &layers)
-                        .min(model.device.mem_tiles.saturating_sub(1));
+                    // An offset-tiled concat has no buffer of its own: its
+                    // branches land straight in the single dense consumer's
+                    // input buffer, so the merge's column *is* that
+                    // consumer's input column (graph planning guaranteed
+                    // exactly one dense consumer). Staged merges keep the
+                    // transitive-descendant placement.
+                    plan.mem_col = if plan.offset_tiled() {
+                        let succs = model.graph.successors(id);
+                        ensure!(
+                            succs.len() == 1,
+                            "merge '{}': offset tilers without a single consumer",
+                            node.name
+                        );
+                        layer_idx
+                            .get(&succs[0])
+                            .map(|&li| layers[li].placement.input_col())
+                            .with_context(|| {
+                                format!("merge '{}': offset-tiled consumer is not dense", node.name)
+                            })?
+                    } else {
+                        merge_mem_col(&model.graph, id, &layer_idx, &layers)
+                    }
+                    .min(model.device.mem_tiles.saturating_sub(1));
                     let inputs = model
                         .graph
                         .predecessors(id)
@@ -249,6 +270,9 @@ impl Pass for Emission {
                 name: model.graph.node(sink)?.name.clone(),
                 stage,
                 plan,
+                // Row-major drain; the partitioner re-targets link drains
+                // with an offset tiler after all partitions are compiled.
+                write_tiler: None,
             });
         }
         let output_plan = outputs[0].plan.clone();
@@ -270,7 +294,12 @@ impl Pass for Emission {
                 charge(l.input_plan.mem_col, l.input_plan.columns, l.input_plan.per_column_bytes());
             }
             for m in &merges {
-                charge(m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes());
+                // Offset-tiled merges share the consumer's input buffer
+                // (charged through its input plan above) — charging the
+                // merge too would double-count the bytes.
+                if !m.plan.offset_tiled() {
+                    charge(m.plan.mem_col, m.plan.columns, m.plan.per_column_bytes());
+                }
             }
             for o in &outputs {
                 charge(o.plan.mem_col, o.plan.columns, o.plan.per_column_bytes());

@@ -20,7 +20,7 @@ use super::{Model, Pass};
 use crate::arch::Dtype;
 use crate::codegen::firmware::{MemTilePlan, MergePlan};
 use crate::ir::{NodeId, OpKind, QuantSpec};
-use crate::sim::dma::Tiler2d;
+use crate::sim::dma::{OffsetTiler, Tiler2d};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -61,6 +61,39 @@ pub(crate) fn output_producer_ids(model: &Model) -> Result<Vec<NodeId>> {
     ids.sort_unstable();
     ids.dedup();
     Ok(ids)
+}
+
+/// Offset tilers for a `Concat` node, when the topology admits them: every
+/// producer branch writes its feature band straight into the consumer's
+/// {M, K} read-tile buffer, killing the staged row-major merge buffer (and
+/// its copy). Eligibility — the concat must feed **exactly one dense
+/// layer** (its buffer is the landing target) and must not itself be
+/// drained to the host (a drain needs the row-major image): otherwise
+/// `None`, and the merge keeps the staged path.
+fn concat_offset_tilers(model: &Model, id: NodeId, preds: &[NodeId]) -> Option<Vec<OffsetTiler>> {
+    let node = model.graph.node(id).ok()?;
+    if model.config.extra_outputs.iter().any(|n| *n == node.name) {
+        return None;
+    }
+    let succs = model.graph.successors(id);
+    if succs.len() != 1 {
+        return None;
+    }
+    let consumer = model.graph.node(succs[0]).ok()?;
+    if !consumer.op.is_dense() {
+        return None;
+    }
+    let ct = consumer.attrs.tiling?;
+    let features = model.graph.produced_features(id)?;
+    let mut tilers = Vec::with_capacity(preds.len());
+    let mut offset = 0usize;
+    for &p in preds {
+        let w = model.graph.produced_features(p)?;
+        tilers.push(OffsetTiler::new(offset, features, ct.m, ct.k));
+        offset += w;
+    }
+    debug_assert_eq!(offset, features);
+    Some(tilers)
 }
 
 /// The network input's quantization, taken from the first dense layer fed
@@ -210,11 +243,21 @@ impl Pass for GraphPlanning {
                         bail!("merge '{name}': i32 activations cannot be re-stored");
                     }
                     merge_specs.insert(id, spec);
+                    // Concat fan-in with a single dense consumer lands each
+                    // branch at a feature offset of the consumer's read-tile
+                    // buffer instead of staging row-major; Add always stages
+                    // (the merge buffer is where the accumulation happens).
+                    let offset_tilers = if is_add {
+                        Vec::new()
+                    } else {
+                        concat_offset_tilers(model, id, &preds).unwrap_or_default()
+                    };
                     program.merge_plans.insert(
                         id,
                         MergePlan {
                             mem_col: 0, // finalized by Emission after Placement
                             write_tilers,
+                            offset_tilers,
                             features,
                             buffer_bytes: batch * features * spec.dtype.bytes(),
                             ping_pong: true,
@@ -283,6 +326,11 @@ impl Pass for GraphPlanning {
             }
         }
         for (id, plan) in &program.merge_plans {
+            // Offset-tiled merges own no buffer — their bytes live in the
+            // consumer's input plan, capacity-checked above.
+            if plan.offset_tiled() {
+                continue;
+            }
             if plan.per_column_bytes() > model.device.mem_tile_bytes {
                 let name = &model.graph.node(*id)?.name;
                 bail!(
@@ -499,5 +547,71 @@ mod tests {
         assert_eq!(mp.features, 64);
         assert_eq!(mp.write_tilers.len(), 2);
         assert_eq!(mp.buffer_bytes, 8 * 64);
+    }
+
+    #[test]
+    fn single_consumer_concat_plans_offset_tilers() {
+        // A concat feeding one dense layer lands each branch at a feature
+        // offset of the consumer's {M, K} read-tile buffer.
+        let layers = vec![
+            layer("a", 32, 48, "int8"),
+            JsonLayer::dense("b", 32, 16, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 16])
+                .with_inputs(&["input"]),
+            JsonLayer::concat("cat", 64, "int8", 0, &["a", "b"]),
+            JsonLayer::dense("head", 64, 8, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 8])
+                .with_inputs(&["cat"]),
+        ];
+        let m = planned(layers, 8);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let cat = m.graph.nodes.iter().find(|n| n.name == "cat").unwrap().id;
+        let mp = &prog.merge_plans[&cat];
+        assert!(mp.offset_tiled());
+        assert_eq!(mp.offset_tilers.len(), 2);
+        assert_eq!((mp.offset_tilers[0].offset, mp.offset_tilers[1].offset), (0, 48));
+        assert!(mp.offset_tilers.iter().all(|t| t.stride == 64));
+        // Tile blocks are the consumer's {M, K}.
+        let head = m.graph.nodes.iter().find(|n| n.name == "head").unwrap();
+        let ht = head.attrs.tiling.unwrap();
+        assert!(mp
+            .offset_tilers
+            .iter()
+            .all(|t| (t.tile_m, t.tile_k) == (ht.m, ht.k)));
+    }
+
+    #[test]
+    fn fanned_out_or_sink_concat_stays_staged() {
+        // Two consumers: the landing target is ambiguous, so the merge
+        // keeps its staged row-major buffer.
+        let layers = vec![
+            layer("a", 32, 48, "int8"),
+            JsonLayer::dense("b", 32, 16, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 16])
+                .with_inputs(&["input"]),
+            JsonLayer::concat("cat", 64, "int8", 0, &["a", "b"]),
+            JsonLayer::dense("h1", 64, 8, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 8])
+                .with_inputs(&["cat"]),
+            JsonLayer::dense("h2", 64, 4, true, false, "int8", "int8", 0, vec![0; 256], vec![0; 4])
+                .with_inputs(&["cat"]),
+        ];
+        let m = planned(layers, 8);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let cat = m.graph.nodes.iter().find(|n| n.name == "cat").unwrap().id;
+        assert!(!prog.merge_plans[&cat].offset_tiled());
+        // A sink concat (no consumer at all) stays staged too — the drain
+        // needs the row-major image.
+        let sink_layers = vec![
+            layer("a", 32, 48, "int8"),
+            JsonLayer::dense("b", 32, 16, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 16])
+                .with_inputs(&["input"]),
+            JsonLayer::concat("cat", 64, "int8", 0, &["a", "b"]),
+        ];
+        let m = planned(sink_layers, 8);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let cat = m.graph.nodes.iter().find(|n| n.name == "cat").unwrap().id;
+        assert!(!prog.merge_plans[&cat].offset_tiled());
+        // Residual Add merges never offset-tile (the buffer accumulates).
+        let m = planned(residual_layers(), 16);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let res = m.graph.nodes.iter().find(|n| n.name == "res").unwrap().id;
+        assert!(!prog.merge_plans[&res].offset_tiled());
     }
 }

@@ -214,6 +214,89 @@ impl Tiler2d {
     }
 }
 
+/// An **offset tiler**: lands one producer branch directly inside a
+/// consumer's {M, K} read-tile buffer at a feature (column) offset,
+/// instead of staging the merged activation row-major and re-tiling it.
+///
+/// This is the memory-tile tiling-parameter scheme of the paper applied to
+/// fan-in: a `Concat` consumer's input buffer is one logical
+/// `batch × stride` matrix read in `{tile_m, tile_k}` blocks; each branch
+/// of the concat owns the column band `[offset, offset + branch_width)`
+/// and its producer's DMA descriptor walks exactly the blocks of that band
+/// — so the merged activation materializes in the consumer's read layout
+/// without ever existing row-major. The same descriptor shape lets an
+/// inter-partition link land an activation straight into the downstream
+/// array's read tiles (`offset = 0`, `stride = features`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffsetTiler {
+    /// First column of the band this branch writes.
+    pub offset: usize,
+    /// Full row width of the consumer's buffer (the merged feature count).
+    pub stride: usize,
+    /// Consumer read-tile rows (its mmul M).
+    pub tile_m: usize,
+    /// Consumer read-tile columns (its mmul K).
+    pub tile_k: usize,
+}
+
+impl OffsetTiler {
+    pub fn new(offset: usize, stride: usize, tile_m: usize, tile_k: usize) -> Self {
+        assert!(tile_m > 0 && tile_k > 0, "degenerate tile shape");
+        OffsetTiler { offset, stride, tile_m, tile_k }
+    }
+
+    /// Scatter a row-major branch activation (`batch × features`) into the
+    /// consumer's row-major image (`batch × stride`) at the feature offset,
+    /// visiting elements in the consumer's `{tile_m, tile_k}` traversal
+    /// restricted to the branch's column band — the exact descriptor order
+    /// the memory-tile DMA executes. The visit order is a permutation of
+    /// the band, so the landed image equals a plain columnwise copy; the
+    /// walk is modeled for DMA-descriptor fidelity.
+    pub fn scatter(&self, batch: usize, features: usize, branch: &[i32], dest: &mut [i32]) {
+        debug_assert_eq!(branch.len(), batch * features);
+        debug_assert_eq!(dest.len(), batch * self.stride);
+        debug_assert!(self.offset + features <= self.stride, "band exceeds buffer row");
+        if features == 0 || batch == 0 {
+            return;
+        }
+        let col_lo = self.offset;
+        let col_hi = self.offset + features;
+        let first_block = col_lo / self.tile_k;
+        let last_block = (col_hi - 1) / self.tile_k;
+        for br in 0..batch.div_ceil(self.tile_m) {
+            for bc in first_block..=last_block {
+                for r in 0..self.tile_m {
+                    let row = br * self.tile_m + r;
+                    if row >= batch {
+                        continue;
+                    }
+                    let c0 = (bc * self.tile_k).max(col_lo);
+                    let c1 = ((bc + 1) * self.tile_k).min(col_hi);
+                    if c0 >= c1 {
+                        continue;
+                    }
+                    let src = row * features + (c0 - col_lo);
+                    let dst = row * self.stride + c0;
+                    dest[dst..dst + (c1 - c0)].copy_from_slice(&branch[src..src + (c1 - c0)]);
+                }
+            }
+        }
+    }
+
+    /// Read the branch's band back out of the consumer image (row-major) —
+    /// the inverse of [`scatter`](OffsetTiler::scatter) over the band.
+    pub fn gather(&self, batch: usize, features: usize, image: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(image.len(), batch * self.stride);
+        debug_assert!(self.offset + features <= self.stride);
+        let mut out = vec![0i32; batch * features];
+        for b in 0..batch {
+            let src = b * self.stride + self.offset;
+            out[b * features..(b + 1) * features].copy_from_slice(&image[src..src + features]);
+        }
+        out
+    }
+}
+
 /// A re-tiling between two layouts through a memory tile: producer writes in
 /// `write` tile order, consumer reads in `read` tile order. Models the
 /// independent write/read tilers of one memory-tile buffer (paper §III-C).
@@ -316,6 +399,43 @@ mod tests {
         assert_eq!(retiled, r.tile(&m));
         // 1x4 tiles of a 4x4 row-major matrix are just its rows.
         assert_eq!(retiled, m);
+    }
+
+    #[test]
+    fn offset_tilers_compose_a_concat_image() {
+        // Two branches (3 + 5 features) landing in an 8-wide consumer
+        // buffer read in 2x4 tiles: the composed image equals the plain
+        // row-major concatenation, whatever the tile walk order.
+        let batch = 5;
+        let a: Vec<i32> = (0..batch as i32 * 3).collect();
+        let b: Vec<i32> = (100..100 + batch as i32 * 5).collect();
+        let ta = OffsetTiler::new(0, 8, 2, 4);
+        let tb = OffsetTiler::new(3, 8, 2, 4);
+        let mut image = vec![0i32; batch * 8];
+        ta.scatter(batch, 3, &a, &mut image);
+        tb.scatter(batch, 5, &b, &mut image);
+        for r in 0..batch {
+            assert_eq!(&image[r * 8..r * 8 + 3], &a[r * 3..(r + 1) * 3]);
+            assert_eq!(&image[r * 8 + 3..(r + 1) * 8], &b[r * 5..(r + 1) * 5]);
+        }
+        // gather() inverts scatter() over each band.
+        assert_eq!(ta.gather(batch, 3, &image), a);
+        assert_eq!(tb.gather(batch, 5, &image), b);
+    }
+
+    #[test]
+    fn offset_tiler_band_narrower_than_one_tile() {
+        // A 2-feature band strictly inside one 8-column tile block.
+        let t = OffsetTiler::new(3, 16, 4, 8);
+        let branch = vec![7i32; 3 * 2];
+        let mut image = vec![0i32; 3 * 16];
+        t.scatter(3, 2, &branch, &mut image);
+        for r in 0..3 {
+            for c in 0..16 {
+                let want = if (3..5).contains(&c) { 7 } else { 0 };
+                assert_eq!(image[r * 16 + c], want, "row {r} col {c}");
+            }
+        }
     }
 
     #[test]

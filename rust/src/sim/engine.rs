@@ -192,8 +192,27 @@ fn layer_perf(
 /// Add receives one *full-width* slice per producer (the arms overlap), so
 /// inbound traffic scales with the fan-in arity; a Concat's arms partition
 /// the width, so inbound equals the merged size.
+///
+/// An **offset-tiled** concat costs nothing here: its branches land inside
+/// the consumer's input buffer during the producers' own output DMA
+/// (charged at each producer's stage) and the consumer reads that buffer
+/// through its own input DMA (charged at the consumer's stage) — there is
+/// no staging buffer left to fill or re-stream, so the merge occupies no
+/// pipeline slot and adds nothing to the fill path.
 fn merge_perf(m: &MergeStage, device: &Device, batch: usize, model: &EngineModel) -> LayerPerf {
     use crate::codegen::firmware::MergeOp;
+    if m.plan.offset_tiled() {
+        return LayerPerf {
+            name: m.name.clone(),
+            tiles: 0,
+            compute_cycles: 0.0,
+            dma_in_cycles: 0.0,
+            dma_out_cycles: 0.0,
+            stage_cycles: 0.0,
+            fill_cycles: 0.0,
+            bottleneck: Bottleneck::DmaIn,
+        };
+    }
     let out_bytes = (batch * m.features * m.quant.dtype.bytes()) as f64;
     let in_bytes = match m.op {
         MergeOp::Add => out_bytes * m.plan.write_tilers.len() as f64,
@@ -232,7 +251,8 @@ pub fn analyze(fw: &Firmware, model: &EngineModel) -> PerfReport {
     let interval_cycles = layers.iter().map(|l| l.stage_cycles).fold(0.0, f64::max);
     // Placement-dependent interconnect latency: static routes from every
     // cascade tail to each consumer's memory tile.
-    let routing = crate::sim::interconnect::route_firmware(fw);
+    let routing = crate::sim::interconnect::route_firmware(fw)
+        .expect("emitted firmware drains every sink (check_invariants)");
     let route_latency =
         crate::sim::interconnect::interconnect_latency_cycles(&routing, model.route_hop);
     // Latency: the longest fill path through the DAG (fan-in waits for its

@@ -22,7 +22,7 @@
 
 use crate::arch::Dtype;
 use crate::codegen::firmware::{
-    Firmware, FirmwareLayer, MemTilePlan, MergeOp, MergeStage, StageRef, StageSource,
+    Firmware, FirmwareLayer, FirmwareOutput, MergeOp, MergeStage, StageRef, StageSource,
 };
 use crate::ir::{srs, srs_i32};
 use crate::sim::dma::Tiler2d;
@@ -68,7 +68,7 @@ pub fn execute(fw: &Firmware, input: &Activation) -> Result<Activation> {
         .get_mut(fw.output_stage)
         .and_then(Option::take)
         .ok_or_else(|| anyhow::anyhow!("output stage {} missing", fw.output_stage))?;
-    drain_output(&fw.output_plan, act)
+    drain_output(&fw.outputs[0], act)
 }
 
 /// Execute the whole firmware and return **every** network output, one per
@@ -82,16 +82,25 @@ pub fn execute_all(fw: &Firmware, input: &Activation) -> Result<Vec<Activation>>
             .get_mut(o.stage)
             .and_then(Option::take)
             .ok_or_else(|| anyhow::anyhow!("output stage {} ('{}') missing", o.stage, o.name))?;
-        drained.push(drain_output(&o.plan, act)?);
+        drained.push(drain_output(o, act)?);
     }
     Ok(drained)
 }
 
 /// Output drain through an output mem-tile plan (round-trip through the
-/// write tiler models the final store order; values unchanged).
-fn drain_output(plan: &MemTilePlan, act: Activation) -> Result<Activation> {
-    let stream = plan.write_tiler.tile(&act.data);
-    let data = plan.write_tiler.untile(&stream);
+/// write tiler models the final store order; values unchanged). A drain
+/// re-targeted by the partitioner additionally executes its offset-tiler
+/// landing — the scatter into (and read back out of) the downstream
+/// consumer's {M, K} read image — so the direct-landing DMA program runs
+/// under the bit-exactness gates too.
+fn drain_output(out: &FirmwareOutput, act: Activation) -> Result<Activation> {
+    let stream = out.plan.write_tiler.tile(&act.data);
+    let mut data = out.plan.write_tiler.untile(&stream);
+    if let Some(t) = &out.write_tiler {
+        let mut image = vec![0i32; act.batch * t.stride];
+        t.scatter(act.batch, act.features, &data, &mut image);
+        data = t.gather(act.batch, act.features, &image);
+    }
     Activation::new(act.batch, act.features, data)
 }
 
@@ -190,14 +199,33 @@ pub fn execute_merge(m: &MergeStage, inputs: &[&Activation]) -> Result<Activatio
                 m.features
             );
             let mut data = vec![0i32; batch * m.features];
-            let mut off = 0usize;
-            for (a, wt) in inputs.iter().zip(&m.plan.write_tilers) {
-                let linear = wt.untile(&wt.tile(&a.data));
-                for b in 0..batch {
-                    data[b * m.features + off..b * m.features + off + a.features]
-                        .copy_from_slice(&linear[b * a.features..(b + 1) * a.features]);
+            if m.plan.offset_tiled() {
+                // Offset tilers: every branch scatters its feature band
+                // straight into the consumer's read image in {M, K}
+                // descriptor order — the merged activation never exists as
+                // a separate row-major staging buffer.
+                ensure!(
+                    m.plan.offset_tilers.len() == inputs.len(),
+                    "merge '{}': {} offset tilers for {} inputs",
+                    m.name,
+                    m.plan.offset_tilers.len(),
+                    inputs.len()
+                );
+                for (a, t) in inputs.iter().zip(&m.plan.offset_tilers) {
+                    t.scatter(batch, a.features, &a.data, &mut data);
                 }
-                off += a.features;
+            } else {
+                // Staged path: land each branch through its write tiler,
+                // splice row-major.
+                let mut off = 0usize;
+                for (a, wt) in inputs.iter().zip(&m.plan.write_tilers) {
+                    let linear = wt.untile(&wt.tile(&a.data));
+                    for b in 0..batch {
+                        data[b * m.features + off..b * m.features + off + a.features]
+                            .copy_from_slice(&linear[b * a.features..(b + 1) * a.features]);
+                    }
+                    off += a.features;
+                }
             }
             Activation::new(batch, m.features, data)
         }

@@ -14,6 +14,7 @@
 
 use crate::codegen::firmware::{Firmware, StageRef};
 use crate::ir::PlacementRect;
+use anyhow::{ensure, Result};
 
 /// One static route: from a producer tile through the array to a memory
 /// tile column (memory tiles sit below row 0).
@@ -64,29 +65,52 @@ pub struct RoutingPlan {
 }
 
 /// Build the routing plan from placements, walking the stage DAG: each
-/// stage drains to the mem-tile column of every consumer stage (the output
-/// plan's column when it is the network output).
-pub fn route_firmware(fw: &Firmware) -> RoutingPlan {
+/// stage drains to the mem-tile column of every consumer stage, plus its
+/// own output drain(s) — sink stages have only drains, and an interior
+/// node promoted to a partition output drains *in addition to* feeding its
+/// consumers. A stage with neither is a hard error: emission guarantees
+/// every sink appears in [`Firmware::outputs`], and silently re-routing an
+/// unmatched sink to `outputs[0]`'s column (the old fallback) sent
+/// multi-sink drains to the wrong array column.
+///
+/// Merge stages route at buffer fidelity:
+/// * a **staged** merge holds the merged row-major image and forwards it
+///   along the memory-tile row into *every shard column* of each
+///   consumer's input buffer — the staging copy, made explicit;
+/// * an **offset-tiled** concat forwards nothing: its branches already
+///   landed inside the consumer's read-tile buffer (whose column the
+///   producers target directly), so only its own drains route.
+///
+/// Granularity rule, so staged-vs-offset comparisons measure the data
+/// path and not an accounting artifact: a producer's *store* costs one
+/// route per (tail, destination buffer) — the landing DMA is a single
+/// pass whether the buffer is the staged merge image or the consumer's
+/// sharded read buffer (any intra-buffer spread rides the same pass).
+/// Per-shard routes are charged only for **buffer-to-buffer copies** (the
+/// staged re-tile), because that second pass re-reads the full image and
+/// re-writes each shard — exactly the traffic offset tiling eliminates.
+pub fn route_firmware(fw: &Firmware) -> Result<RoutingPlan> {
+    let clamp = |c: usize| c.min(fw.device.mem_tiles.saturating_sub(1));
     let mut routes = Vec::new();
     for (si, stage) in fw.stages.iter().enumerate() {
         let consumers = fw.stage_consumers(si);
-        // Downstream consumers' buffer columns, plus this stage's own
-        // output drain(s) — sink stages have only drains, and an interior
-        // node promoted to a partition output drains *in addition to*
-        // feeding its consumers.
-        let mut targets: Vec<usize> = consumers
-            .iter()
-            .map(|&c| match fw.stages[c].op {
-                StageRef::Layer(li) => fw.layers[li].input_plan.mem_col,
-                StageRef::Merge(mi) => fw.merges[mi].plan.mem_col,
-            })
-            .collect();
-        targets.extend(fw.outputs.iter().filter(|o| o.stage == si).map(|o| o.plan.mem_col));
-        if targets.is_empty() {
-            targets.push(fw.output_plan.mem_col);
-        }
+        let drains: Vec<usize> =
+            fw.outputs.iter().filter(|o| o.stage == si).map(|o| o.plan.mem_col).collect();
+        ensure!(
+            !consumers.is_empty() || !drains.is_empty(),
+            "stage '{}' has no consumers and no output drain — firmware outputs are incomplete",
+            fw.stage_name(si)
+        );
         match stage.op {
             StageRef::Layer(li) => {
+                let mut targets: Vec<usize> = consumers
+                    .iter()
+                    .map(|&c| match fw.stages[c].op {
+                        StageRef::Layer(lj) => fw.layers[lj].input_plan.mem_col,
+                        StageRef::Merge(mj) => fw.merges[mj].plan.mem_col,
+                    })
+                    .collect();
+                targets.extend(drains);
                 for k in &fw.layers[li].kernels {
                     if k.is_tail {
                         for &mc in &targets {
@@ -97,8 +121,30 @@ pub fn route_firmware(fw: &Firmware) -> RoutingPlan {
             }
             StageRef::Merge(mi) => {
                 // Mem-tile to mem-tile forwarding along the south row.
-                let from = fw.merges[mi].plan.mem_col;
-                for &mc in &targets {
+                let m = &fw.merges[mi];
+                let from = m.plan.mem_col;
+                if !m.plan.offset_tiled() {
+                    for &c in &consumers {
+                        match fw.stages[c].op {
+                            StageRef::Layer(lj) => {
+                                let p = &fw.layers[lj].input_plan;
+                                for s in 0..p.columns.max(1) {
+                                    routes.push(Route::dimension_ordered(
+                                        from,
+                                        0,
+                                        clamp(p.mem_col + s),
+                                    ));
+                                }
+                            }
+                            StageRef::Merge(mj) => routes.push(Route::dimension_ordered(
+                                from,
+                                0,
+                                fw.merges[mj].plan.mem_col,
+                            )),
+                        }
+                    }
+                }
+                for &mc in &drains {
                     routes.push(Route::dimension_ordered(from, 0, mc));
                 }
             }
@@ -112,18 +158,22 @@ pub fn route_firmware(fw: &Firmware) -> RoutingPlan {
             *link_load.entry((w[0], w[1])).or_insert(0usize) += 1;
         }
     }
-    RoutingPlan {
+    Ok(RoutingPlan {
         routes,
         max_link_load: link_load.values().copied().max().unwrap_or(0),
         total_hops: total,
-    }
+    })
 }
 
 /// Interconnect latency contribution of a placement (cycles): the longest
-/// route, plus a serialization penalty on the most-contended link.
+/// route plus a serialization penalty on the most-contended link, **both**
+/// in units of `hop_cycles` — each extra route sharing the hottest link
+/// stalls one switch traversal behind it. (The penalty used to be charged
+/// in raw route count, so contention became negligible relative to
+/// distance whenever a hop cost more than one cycle.)
 pub fn interconnect_latency_cycles(plan: &RoutingPlan, hop_cycles: usize) -> f64 {
     let longest = plan.routes.iter().map(Route::len).max().unwrap_or(0);
-    (longest * hop_cycles) as f64 + plan.max_link_load.saturating_sub(1) as f64
+    ((longest + plan.max_link_load.saturating_sub(1)) * hop_cycles) as f64
 }
 
 /// Sum of Manhattan distances between consecutive layers' out/in columns —
@@ -172,7 +222,7 @@ mod tests {
     fn firmware_routing_covers_all_tails() {
         let m = compile_mlp("route", &[128, 128, 64], Dtype::I8, 8, Some((2, 4))).unwrap();
         let fw = m.firmware.as_ref().unwrap();
-        let plan = route_firmware(fw);
+        let plan = route_firmware(fw).unwrap();
         let tails: usize = fw
             .layers
             .iter()
@@ -201,8 +251,9 @@ mod tests {
         cfg.layers.get_mut("fc1").unwrap().place_at = Some((0, 0));
         cfg.layers.get_mut("fc2").unwrap().place_at = Some((30, 4));
         let scattered = crate::passes::compile(&json, cfg).unwrap();
-        let hops_compact = route_firmware(compact.firmware.as_ref().unwrap()).total_hops;
-        let hops_scattered = route_firmware(scattered.firmware.as_ref().unwrap()).total_hops;
+        let hops_compact = route_firmware(compact.firmware.as_ref().unwrap()).unwrap().total_hops;
+        let hops_scattered =
+            route_firmware(scattered.firmware.as_ref().unwrap()).unwrap().total_hops;
         assert!(
             hops_compact < hops_scattered,
             "compact {hops_compact} !< scattered {hops_scattered}"
@@ -227,16 +278,55 @@ mod tests {
         cfg.batch = 8;
         let m = crate::passes::compile(&json, cfg).unwrap();
         let fw = m.firmware.as_ref().unwrap();
-        let plan = route_firmware(fw);
-        // Every dense stage routes its tails once per consumer; the merge
-        // buffer adds one forwarding route per consumer. fc2 feeds only the
-        // merge, fc1 only fc2, head only the output drain — so route count
-        // is all tails plus one merge route.
+        let plan = route_firmware(fw).unwrap();
+        // Every dense stage routes its tails once per consumer; the staged
+        // (Add) merge buffer forwards its row-major image into every shard
+        // column of each consumer's input buffer. fc2 feeds only the merge,
+        // fc1 only fc2, head only the output drain — so route count is all
+        // tails plus the head's input-buffer shard count.
         let tails: usize = fw
             .layers
             .iter()
             .map(|l| l.kernels.iter().filter(|k| k.is_tail).count())
             .sum();
-        assert_eq!(plan.routes.len(), tails + fw.merges.len());
+        let head = fw.layers.iter().find(|l| l.name == "head").unwrap();
+        assert_eq!(plan.routes.len(), tails + head.input_plan.columns.max(1));
+    }
+
+    #[test]
+    fn unmatched_sink_is_a_hard_error() {
+        // A sink stage missing from `fw.outputs` used to fall back to the
+        // legacy output_plan column — in multi-sink firmware that silently
+        // routed a drain to outputs[0]'s array column. Now it refuses.
+        let m = compile_mlp("route_err", &[64, 32], Dtype::I8, 4, Some((1, 2))).unwrap();
+        let mut fw = m.firmware.clone().unwrap();
+        assert!(route_firmware(&fw).is_ok());
+        fw.outputs.clear();
+        let err = route_firmware(&fw).unwrap_err().to_string();
+        assert!(err.contains("no output drain"), "{err}");
+    }
+
+    #[test]
+    fn contention_penalty_scales_with_hop_cost() {
+        // Old formula: longest*hop + (load-1)*1 — contention vanished
+        // relative to distance whenever a hop cost more than a cycle. New:
+        // (longest + load - 1)*hop. Pin both on a hand-built plan.
+        let plan = RoutingPlan {
+            routes: vec![
+                Route::dimension_ordered(0, 2, 3),
+                Route::dimension_ordered(0, 2, 3),
+                Route::dimension_ordered(0, 2, 3),
+            ],
+            max_link_load: 3,
+            total_hops: 15,
+        };
+        // hop_cycles = 1: old and new agree (5 + 2).
+        assert_eq!(interconnect_latency_cycles(&plan, 1), 7.0);
+        // hop_cycles = 4: old was 5*4 + 2 = 22; new charges the two stalled
+        // routes a full traversal each: (5 + 2) * 4 = 28.
+        let old = (5 * 4 + 2) as f64;
+        let new = interconnect_latency_cycles(&plan, 4);
+        assert_eq!(new, 28.0);
+        assert!(new > old, "contention must not shrink relative to hop cost");
     }
 }

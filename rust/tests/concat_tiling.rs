@@ -1,0 +1,166 @@
+//! Acceptance gates for concat-aware offset tiling: the merge consumers
+//! and inter-partition links of the zoo models must take the direct
+//! {M, K}-landing path (strictly fewer interconnect hops, modeled
+//! interval/latency no worse than the staged data path), while staying
+//! bit-exact and leaving no-concat, no-partition firmware.json
+//! byte-identical to the pre-offset-tiler output.
+
+use aie4ml::frontend::{CompileConfig, LayerConfig};
+use aie4ml::harness::models::{
+    compile_mlp, concat_mlp_model, residual_mlp_model, wide_mlp_2x_config, wide_mlp_2x_model,
+};
+use aie4ml::partition::{
+    analyze_pipeline, compile_partitioned, execute_partitioned, pipeline_total_hops,
+    PartitionOptions,
+};
+use aie4ml::passes::compile;
+use aie4ml::runtime::ReferenceOracle;
+use aie4ml::sim::engine::{analyze, EngineModel};
+use aie4ml::sim::functional::{execute, Activation};
+use aie4ml::sim::interconnect::route_firmware;
+use aie4ml::util::Pcg32;
+
+fn random_input(features: usize, batch: usize, seed: u64) -> Activation {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    Activation::new(
+        batch,
+        features,
+        (0..batch * features).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn concat_zoo_model_offset_beats_staged() {
+    // The concat zoo model, pinned to multi-column cascades so the staged
+    // path's per-shard forwarding is visible. The compiled firmware takes
+    // the offset-tiled path; its staged variant (same placement, tilers
+    // stripped) is the pre-change data path.
+    let json = concat_mlp_model("concat_gate", 96, 64, 32, 16, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 16;
+    for name in ["fc_a", "fc_b", "head"] {
+        cfg.layers
+            .insert(name.into(), LayerConfig { cascade: Some((2, 2)), ..Default::default() });
+    }
+    let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+    fw.check_invariants().unwrap();
+    let cat = fw.merges.iter().find(|m| m.name == "cat").unwrap();
+    assert!(cat.plan.offset_tiled(), "zoo concat must compile to offset tilers");
+    assert_eq!(cat.plan.offset_tilers.len(), 2);
+    assert_eq!(cat.plan.offset_tilers[0].offset, 0);
+    assert_eq!(cat.plan.offset_tilers[1].offset, 64);
+    assert_eq!(cat.plan.offset_tilers[1].stride, 96);
+
+    let staged = fw.staged_variant();
+    staged.check_invariants().unwrap();
+
+    // Strictly fewer interconnect hops: the staged merge forwards its
+    // row-major image into every shard column of the head's input buffer;
+    // the offset-tiled branches land there directly.
+    let hops = route_firmware(&fw).unwrap().total_hops;
+    let hops_staged = route_firmware(&staged).unwrap().total_hops;
+    assert!(hops < hops_staged, "offset {hops} hops !< staged {hops_staged}");
+
+    // Modeled interval no worse, latency strictly better (the staged
+    // merge's buffer fill leaves the critical path).
+    let model = EngineModel::default();
+    let perf = analyze(&fw, &model);
+    let perf_staged = analyze(&staged, &model);
+    assert!(
+        perf.interval_cycles <= perf_staged.interval_cycles,
+        "interval {} !<= staged {}",
+        perf.interval_cycles,
+        perf_staged.interval_cycles
+    );
+    assert!(
+        perf.latency_cycles < perf_staged.latency_cycles,
+        "latency {} !< staged {}",
+        perf.latency_cycles,
+        perf_staged.latency_cycles
+    );
+    // The offset-tiled merge occupies no pipeline slot.
+    let row = perf.layers.iter().find(|l| l.name == "cat").unwrap();
+    assert_eq!(row.stage_cycles, 0.0);
+    assert_eq!(row.fill_cycles, 0.0);
+
+    // Offset tiling is pure data layout: bit-exact against both the
+    // staged variant and the independent reference oracle.
+    let x = random_input(96, 16, 0xCA7);
+    let y = execute(&fw, &x).unwrap();
+    assert_eq!(y.data, execute(&staged, &x).unwrap().data);
+    let want = ReferenceOracle::from_model(&json).unwrap().execute(&x).unwrap();
+    assert_eq!(y.data, want.data);
+}
+
+#[test]
+fn wide_mlp_2x_k2_offset_links_beat_staged() {
+    // The over-capacity zoo model as an explicit K = 2 pipeline: every
+    // link drain lands offset-tiled in the downstream array, so the
+    // pipeline routes strictly fewer hops and models strictly lower
+    // latency than the staged (row-major landing) variant, at an interval
+    // no worse.
+    let json = wide_mlp_2x_model("wide2x_gate");
+    let cfg = wide_mlp_2x_config();
+    let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
+    let pm = compile_partitioned(&json, cfg, &opts).unwrap();
+    let pfw = &pm.firmware;
+    pfw.check_invariants().unwrap();
+    assert_eq!(pfw.k(), 2);
+    for link in &pfw.links {
+        let t = link.write_tiler.expect("chain link must be offset-tiled");
+        assert_eq!(t.offset, 0);
+        assert_eq!(t.stride, 512);
+    }
+
+    let staged = pfw.staged_variant();
+    staged.check_invariants().unwrap();
+    let hops = pipeline_total_hops(pfw);
+    let hops_staged = pipeline_total_hops(&staged);
+    assert!(hops < hops_staged, "offset {hops} hops !< staged {hops_staged}");
+
+    let model = EngineModel::default();
+    let perf = analyze_pipeline(pfw, &model);
+    let perf_staged = analyze_pipeline(&staged, &model);
+    assert!(perf.link_cycles < perf_staged.link_cycles, "link hops must shrink");
+    assert!(perf.interval_cycles <= perf_staged.interval_cycles);
+    assert!(perf.latency_cycles < perf_staged.latency_cycles);
+
+    // The landing tiler is pure layout: pipeline outputs are identical
+    // with and without it, and match the uncut reference oracle.
+    let x = random_input(512, pfw.batch(), 0x2B);
+    let got = execute_partitioned(pfw, &x).unwrap();
+    let got_staged = execute_partitioned(&staged, &x).unwrap();
+    assert_eq!(got[0].data, got_staged[0].data);
+    let want = ReferenceOracle::from_model(&json).unwrap().execute(&x).unwrap();
+    assert_eq!(got[0].data, want.data);
+}
+
+#[test]
+fn no_concat_no_partition_firmware_json_is_pinned() {
+    // Byte-identity gate: models without a concat or a partition must
+    // serialize the exact pre-offset-tiler firmware.json. The serializer
+    // only emits tiler keys for non-trivial plans, so pinning the key
+    // sets (and the absence of the new keys) pins the bytes.
+    use aie4ml::util::json::Value;
+    let m = compile_mlp("pin_offset", &[128, 64, 32], aie4ml::arch::Dtype::I8, 8, Some((2, 2)))
+        .unwrap();
+    let js = m.firmware.as_ref().unwrap().to_json().unwrap();
+    assert!(!js.contains("write_tiler"), "chain firmware.json grew a tiler key");
+    let v = Value::parse(&js).unwrap();
+    let keys: Vec<&str> = v.as_object().unwrap().keys().map(|k| k.as_str()).collect();
+    let mut want = vec!["batch", "device", "layers", "macs_per_sample", "model", "tiles_used"];
+    want.sort_unstable();
+    assert_eq!(keys, want, "single-sink chain key set changed");
+
+    // A DAG with a staged (Add) merge keeps its exact pre-change shape
+    // too: merges/stages/output_stage, and no tiler keys anywhere.
+    let json = residual_mlp_model("pin_offset_res", 64, 96, 16, 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+    assert!(fw.merges.iter().all(|mg| !mg.plan.offset_tiled()));
+    let js = fw.to_json().unwrap();
+    assert!(js.contains("\"merges\""));
+    assert!(!js.contains("write_tiler"), "residual firmware.json grew a tiler key");
+}

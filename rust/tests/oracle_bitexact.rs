@@ -117,6 +117,28 @@ fn residual_mlp_bit_exact() {
 }
 
 #[test]
+fn concat_mlp_bit_exact() {
+    // The offset-tiler gate: a Concat whose branches land at feature
+    // offsets of the head's read-tile buffer (no staged merge buffer) must
+    // stay bit-exact against the logical reference oracle. Looked up
+    // leniently because Python-written manifests omit the Rust-only entry.
+    let Some(e) = zoo_entries().iter().find(|e| e.name == "concat_mlp") else {
+        eprintln!(
+            "skipping: manifest predates offset tilers — regenerate with `aie4ml zoo --force`"
+        );
+        return;
+    };
+    // The compiled zoo model must actually take the offset-tiled path.
+    let (_, fw) = compile_entry(e);
+    let cat = fw.merges.iter().find(|m| m.name == "cat").expect("concat stage");
+    assert!(
+        cat.plan.offset_tiled(),
+        "concat_mlp's merge must compile to offset tilers (single dense consumer)"
+    );
+    check_model(e, 88);
+}
+
+#[test]
 fn wide_mlp_2x_partitioned_bit_exact() {
     // The multi-array gate: a model that cannot place on one VEK280 at its
     // throughput configuration must compile into >= 2 pipeline partitions
@@ -141,6 +163,11 @@ fn wide_mlp_2x_partitioned_bit_exact() {
     let pfw = &pm.firmware;
     pfw.check_invariants().unwrap();
     assert!(pfw.k() >= 2, "expected >= 2 partitions, got {}", pfw.k());
+    // Chain cuts have a single downstream reader, so every link must land
+    // through an offset tiler (no row-major staging on the next array).
+    for (i, link) in pfw.links.iter().enumerate() {
+        assert!(link.write_tiler.is_some(), "link {i} ('{}') is not offset-tiled", link.tensor);
+    }
     let mut rng = Pcg32::seed_from_u64(66);
     let input = Activation::new(
         pfw.batch(),

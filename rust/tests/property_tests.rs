@@ -569,6 +569,108 @@ fn prop_multi_sink_firmware_matches_reference_per_sink() {
     });
 }
 
+/// Concat models with random, *uneven* branch widths must be bit-exact
+/// against the reference oracle on every sink — both single-array (the
+/// merge compiles to offset tilers landing each branch at a feature
+/// offset of the head's read-tile buffer) and as K ∈ {2, 3} pipelines
+/// (link drains land offset-tiled in the downstream array; a cut before
+/// the fan-out leaves a multi-reader input and exercises the staged
+/// landing instead).
+#[test]
+fn prop_concat_offset_tiling_bit_exact() {
+    use aie4ml::partition::{
+        compile_partitioned, cut_candidates, execute_partitioned, PartitionOptions,
+    };
+    use aie4ml::runtime::ReferenceOracle;
+    use aie4ml::sim::functional::execute_all;
+    #[derive(Clone)]
+    struct Case {
+        d: usize,
+        m: usize,
+        wa: usize,
+        wb: usize,
+        k_out: usize,
+        batch: usize,
+        seed: u64,
+        parts: usize,
+    }
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "d={} m={} wa={} wb={} k_out={} batch={} seed={:#x} parts={}",
+                self.d, self.m, self.wa, self.wb, self.k_out, self.batch, self.seed, self.parts
+            )
+        }
+    }
+    let strat = Strategy::new(|r: &mut Pcg32| Case {
+        d: r.gen_range_usize(1, 48),
+        m: r.gen_range_usize(1, 48),
+        wa: r.gen_range_usize(1, 48),
+        wb: r.gen_range_usize(1, 48),
+        k_out: r.gen_range_usize(1, 24),
+        batch: r.gen_range_usize(1, 6),
+        seed: r.next_u64(),
+        parts: r.gen_range_usize(2, 3),
+    });
+    check("concat_offset_tiling", 25, &strat, |case| {
+        let mut rng = Pcg32::seed_from_u64(case.seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let merged = case.wa + case.wb;
+        let jm = JsonModel::new(
+            "concat_prop",
+            vec![
+                dense("stem", case.d, case.m, true),
+                dense("fc_a", case.m, case.wa, true).with_inputs(&["stem"]),
+                dense("fc_b", case.m, case.wb, false).with_inputs(&["stem"]),
+                JsonLayer::concat("cat", merged, "int8", 6, &["fc_a", "fc_b"]),
+                dense("head", merged, case.k_out, false).with_inputs(&["cat"]),
+            ],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = case.batch;
+        cfg.tiles_per_layer = Some(rng.gen_range_usize(1, 6));
+        let x = Activation::new(
+            case.batch,
+            case.d,
+            (0..case.batch * case.d).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+        )
+        .unwrap();
+        let oracle = ReferenceOracle::from_model(&jm).map_err(|e| format!("oracle: {e:#}"))?;
+        let want = oracle.execute_all(&x).map_err(|e| format!("oracle exec: {e:#}"))?;
+
+        // Single array: the concat must take the offset-tiled path.
+        let model = compile(&jm, cfg.clone()).map_err(|e| format!("compile: {e:#}"))?;
+        let fw = model.firmware.as_ref().unwrap();
+        fw.check_invariants().map_err(|e| format!("invariants: {e:#}"))?;
+        let cat = fw.merges.iter().find(|m| m.name == "cat").ok_or("no merge stage")?;
+        if !cat.plan.offset_tiled() {
+            return Err("single-consumer concat did not offset-tile".into());
+        }
+        let got = execute_all(fw, &x).map_err(|e| format!("execute_all: {e:#}"))?;
+        if got.len() != want.len() || got[0].data != want[0].data {
+            return Err("single-array concat diverges from the oracle".into());
+        }
+
+        // Partitioned K ∈ {2, 3}: link drains land in the next array.
+        let parts = case.parts.min(cut_candidates(&jm).len() + 1);
+        let opts = PartitionOptions { partitions: Some(parts), ..Default::default() };
+        let pm = compile_partitioned(&jm, cfg, &opts)
+            .map_err(|e| format!("partitioned compile: {e:#}"))?;
+        pm.firmware.check_invariants().map_err(|e| format!("pipeline invariants: {e:#}"))?;
+        let got = execute_partitioned(&pm.firmware, &x)
+            .map_err(|e| format!("pipeline execute: {e:#}"))?;
+        if got.len() != want.len() || got[0].data != want[0].data {
+            return Err(format!("K={} concat pipeline diverges from the oracle", parts));
+        }
+        Ok(())
+    });
+}
+
 // ---------- Serving invariants ------------------------------------------------
 
 #[test]

@@ -1,0 +1,317 @@
+//! Bench: trace-driven serving under open-loop load — continuous batching
+//! + admission control + SLO-burn autoscaling vs. a static synchronous
+//! fleet.
+//!
+//! One seeded bursty (MMPP) trace at 90% of the planner's capacity drives
+//! both serving paths:
+//!
+//! * **async** — [`ContinuousServer`] starting at R = 1 with an
+//!   [`Autoscaler`] growing it toward the planner-predicted R, shedding at
+//!   the door when the projected sojourn would bust the budget. Served
+//!   p99 must stay inside the latency budget.
+//! * **baseline** — a static [`FleetServer`] at the planned R with
+//!   per-replica deadline batchers and blocking clients. Burst backlog
+//!   drains one flush at a time, so scheduled-to-completion p99 blows the
+//!   same budget.
+//!
+//! A final overload phase (Poisson at 1.6x planned capacity) shows the
+//! admission path shedding instead of queueing unboundedly while served
+//! p99 stays bounded.
+//!
+//! The rate is *host-calibrated* (the functional simulator is the
+//! backend), so the shapes hold on fast and slow machines alike.
+//! `--smoke` shortens the traces and skips the timing assertions (CI's
+//! bench smoke job); the full run asserts them.
+
+use aie4ml::arch::Dtype;
+use aie4ml::coordinator::{AdmissionConfig, AdmissionError, ContinuousPolicy, ContinuousServer};
+use aie4ml::deploy::{plan, Autoscaler, AutoscalerConfig, Fleet, FleetServer, PlannerOptions, Slo};
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::harness::traffic::{summarize, TraceSpec};
+use aie4ml::partition::{analyze_pipeline, execute_partitioned, PartitionedFirmware};
+use aie4ml::sim::engine::EngineModel;
+use aie4ml::sim::functional::Activation;
+use aie4ml::util::Pcg32;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Linear-interpolated percentile (matches coordinator::metrics).
+fn percentile(lats: &mut [f64], p: f64) -> f64 {
+    if lats.is_empty() {
+        return 0.0;
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let rank = (lats.len() - 1) as f64 * p;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        lats[lo]
+    } else {
+        lats[lo] + (lats[hi] - lats[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Sleep (coarse) then spin (fine) until `at` past `start`.
+fn pace(start: Instant, at: Duration) {
+    loop {
+        let now = start.elapsed();
+        if now >= at {
+            return;
+        }
+        let gap = at - now;
+        if gap > Duration::from_micros(200) {
+            std::thread::sleep(gap - Duration::from_micros(150));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Open-loop driver: submit every event at its offset (non-blocking),
+/// then wait all admitted tickets. Returns (served, shed).
+fn drive(
+    server: &ContinuousServer,
+    events: &[Duration],
+    features: usize,
+    seed: u64,
+) -> (usize, usize) {
+    let client = server.client();
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let mut tickets = Vec::with_capacity(events.len());
+    let mut shed = 0usize;
+    let start = Instant::now();
+    for &at in events {
+        pace(start, at);
+        let x: Vec<i32> = (0..features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        match client.submit(x) {
+            Ok(t) => tickets.push(t),
+            Err(AdmissionError::QueueFull { .. } | AdmissionError::DeadlineRisk { .. }) => {
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected admission rejection: {e}"),
+        }
+    }
+    let served = tickets.len();
+    for t in tickets {
+        t.wait().expect("every admitted request must be answered");
+    }
+    (served, shed)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (trace_secs, over_secs) = if smoke { (0.3, 0.15) } else { (2.0, 1.0) };
+
+    // --- Plan: K = 1, batch fixed, so R comes straight from the costed
+    // per-replica rate (target 3.5x one replica -> R = 4).
+    let json = synth_model("load_harness", &mlp_spec(&[256, 256, 128], Dtype::I8), 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    cfg.tiles_per_layer = Some(2);
+    let fw = aie4ml::passes::compile(&json, cfg.clone()).expect("compile").firmware.unwrap();
+    let probe = Arc::new(PartitionedFirmware::from_single(fw));
+    let model_rep = analyze_pipeline(&probe, &EngineModel::default());
+    let model_sps = cfg.batch as f64 * 1e6 / model_rep.interval_us;
+    let slo = Slo::new(3.5 * model_sps, 60.0 * model_rep.interval_us);
+    let opts = PlannerOptions {
+        batches: vec![cfg.batch],
+        max_partitions: 1,
+        ..Default::default()
+    };
+    let outcome = plan(&json, &cfg, &Fleet::homogeneous("vek280", 8), &slo, &opts).expect("plan");
+    let best = outcome.best().expect("the load-harness SLO must be plannable").clone();
+    let pfw = best.firmware.clone();
+    let features = pfw.input_features();
+
+    // --- Host calibration: the serving backend is the functional
+    // simulator, so capacity and budgets are wall-clock, not model-time.
+    let mut rng = Pcg32::seed_from_u64(1);
+    let probe_data: Vec<i32> =
+        (0..cfg.batch * features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+    let act = Activation::new(cfg.batch, features, probe_data).expect("probe activation");
+    for _ in 0..3 {
+        execute_partitioned(&pfw, &act).expect("warmup");
+    }
+    let t0 = Instant::now();
+    let iters = 8;
+    for _ in 0..iters {
+        execute_partitioned(&pfw, &act).expect("calibration");
+    }
+    let batch_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let host_sps = cfg.batch as f64 * 1e6 / batch_us;
+    let budget_us = (24.0 * batch_us).max(5_000.0);
+    let rate = 0.9 * best.r as f64 * host_sps;
+
+    println!(
+        "load harness — {} batch {}, planned R={} (model {:.0} sps/replica), \
+         host {:.0} sps/replica ({:.0} µs/batch)",
+        json.name, best.batch, best.r, model_sps, host_sps, batch_us
+    );
+    println!(
+        "offered: bursty {:.0} sps mean (90% of planned capacity), budget {:.0} µs{}\n",
+        rate,
+        budget_us,
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let spec = TraceSpec::bursty(rate, Duration::from_secs_f64(trace_secs), 3.0, 42);
+    let events = spec.generate();
+    let s = summarize(&events, spec.duration, Duration::from_millis(50));
+    println!(
+        "trace: {} events, mean {:.0}/s, 50 ms-window peak {:.0}/s",
+        s.events, s.mean_sps, s.peak_sps
+    );
+
+    // --- Async path: continuous batching from R = 1 under the autoscaler.
+    let policy = ContinuousPolicy {
+        max_wait: Duration::from_micros(200),
+        admission: AdmissionConfig {
+            queue_capacity: 4096,
+            latency_budget_us: Some(0.6 * budget_us),
+        },
+        record_batches: false,
+    };
+    let server = ContinuousServer::spawn(pfw.clone(), 1, policy).expect("continuous spawn");
+    let mut scaler = Autoscaler::from_plan(
+        &best,
+        budget_us,
+        AutoscalerConfig {
+            max_replicas: best.r,
+            headroom: 1.1,
+            cooldown: Duration::from_millis(30),
+            ..Default::default()
+        },
+    );
+    let stop = AtomicBool::new(false);
+    let (served, shed, peak_r, transitions) = std::thread::scope(|scope| {
+        let server_ref = &server;
+        let stop_ref = &stop;
+        let scaler_thread = scope.spawn(move || {
+            let mut peak = 1usize;
+            let mut transitions: Vec<usize> = Vec::new();
+            while !stop_ref.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(10));
+                let snap = server_ref.snapshot();
+                if let Some(to) = scaler.observe(Instant::now(), &snap).target() {
+                    server_ref.scale_to(to).expect("scale transition");
+                    transitions.push(to);
+                    peak = peak.max(to);
+                }
+            }
+            (peak, transitions)
+        });
+        let (served, shed) = drive(server_ref, &events, features, 7);
+        stop.store(true, Ordering::Relaxed);
+        let (peak, transitions) = scaler_thread.join().expect("autoscaler thread");
+        (served, shed, peak, transitions)
+    });
+    let (report, admission) = server.shutdown();
+    assert_eq!(admission.submitted as usize, events.len(), "every event submitted once");
+    assert_eq!(admission.admitted as usize, served, "no ticket lost or duplicated");
+    assert_eq!(admission.shed() as usize, shed, "shed accounting is consistent");
+    assert_eq!(report.requests, served, "every admitted request was served");
+    println!(
+        "async:    served {} / shed {} ({:.1}%), p50 {:.0} µs, p99 {:.0} µs, \
+         peak R {} via {:?}",
+        served,
+        shed,
+        100.0 * shed as f64 / events.len() as f64,
+        report.p50_latency_us,
+        report.p99_latency_us,
+        peak_r,
+        transitions
+    );
+
+    // --- Baseline: static synchronous fleet at the planned R. Latency is
+    // scheduled-to-completion, so client-side stalls (the backlog the sync
+    // path cannot shed) count against it.
+    let fleet =
+        FleetServer::spawn(pfw.clone(), best.r, Duration::from_micros(200), 4096).expect("fleet");
+    let next = AtomicUsize::new(0);
+    let clients = 64usize;
+    let mut lats: Vec<f64> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        let start = Instant::now();
+        for t in 0..clients {
+            let client = fleet.client();
+            let events = &events;
+            let next = &next;
+            handles.push(scope.spawn(move || {
+                let mut rng = Pcg32::seed_from_u64(100 + t as u64);
+                let mut lats = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= events.len() {
+                        return lats;
+                    }
+                    let sched = events[i];
+                    let now = start.elapsed();
+                    if sched > now {
+                        std::thread::sleep(sched - now);
+                    }
+                    let x: Vec<i32> =
+                        (0..features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+                    client.infer(x).expect("fleet infer");
+                    lats.push((start.elapsed() - sched).as_secs_f64() * 1e6);
+                }
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let base = fleet.shutdown();
+    assert_eq!(base.merged.requests, events.len(), "baseline serves everything, just late");
+    let base_p99 = percentile(&mut lats, 0.99);
+    println!(
+        "baseline: served {} / shed 0, p50 {:.0} µs, p99 {:.0} µs (static R={})",
+        base.merged.requests,
+        percentile(&mut lats, 0.50),
+        base_p99,
+        best.r
+    );
+
+    // --- Overload: 1.6x planned capacity. The admission path must shed —
+    // boundedly — instead of queueing without limit.
+    let over_spec =
+        TraceSpec::poisson(1.6 * best.r as f64 * host_sps, Duration::from_secs_f64(over_secs), 43);
+    let over_events = over_spec.generate();
+    let over = ContinuousServer::spawn(pfw, best.r, policy).expect("overload spawn");
+    let (over_served, over_shed) = drive(&over, &over_events, features, 9);
+    let (over_report, over_admission) = over.shutdown();
+    assert_eq!(over_served + over_shed, over_events.len(), "overload requests all accounted");
+    assert_eq!(over_admission.shed() as usize, over_shed);
+    println!(
+        "overload: served {} / shed {} ({:.1}%) at 1.6x capacity, served p99 {:.0} µs",
+        over_served,
+        over_shed,
+        100.0 * over_shed as f64 / over_events.len() as f64,
+        over_report.p99_latency_us
+    );
+
+    if smoke {
+        println!("\nsmoke OK (structural invariants only)");
+        return;
+    }
+    assert!(
+        report.p99_latency_us <= budget_us,
+        "async served p99 {:.0} µs must hold the {:.0} µs budget",
+        report.p99_latency_us,
+        budget_us
+    );
+    assert!(
+        base_p99 > budget_us,
+        "baseline p99 {:.0} µs should violate the {:.0} µs budget under bursts",
+        base_p99,
+        budget_us
+    );
+    assert_eq!(peak_r, best.r, "autoscaler must reach the planner-predicted R");
+    assert!(over_shed > 0, "overload must shed instead of queueing unboundedly");
+    assert!(
+        over_report.p99_latency_us <= budget_us,
+        "overload served p99 {:.0} µs must stay inside {:.0} µs (shed keeps it bounded)",
+        over_report.p99_latency_us,
+        budget_us
+    );
+    println!("\nPASS: async holds p99 under burst + overload; sync baseline does not");
+}

@@ -1,0 +1,242 @@
+//! Admission control for the async serving path: bounded-queue
+//! backpressure with typed shed errors.
+//!
+//! The synchronous servers apply backpressure by blocking the sender on a
+//! full channel — fine for closed-loop clients, fatal for an open-loop
+//! trigger stream where events keep arriving whether or not the fleet can
+//! absorb them. The continuous-batching path instead *decides* at submit
+//! time: a request is admitted only if the queue has room **and** its
+//! projected sojourn time fits the latency budget; otherwise it is shed
+//! immediately with a typed [`AdmissionError`], so the caller (or the
+//! upstream trigger) can degrade deliberately instead of watching tail
+//! latency grow without bound.
+//!
+//! Every decision is counted in [`AdmissionStats`]; the deploy layer's
+//! autoscaler consumes windowed deltas of the resulting
+//! [`AdmissionReport`] as its SLO-burn signal.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use thiserror::Error;
+
+/// Why a request was not admitted. `QueueFull` and `DeadlineRisk` are
+/// *sheds* (a well-formed request the server chose not to serve);
+/// `FeatureMismatch` is a malformed request; `Stopped` is a server
+/// lifecycle error.
+#[derive(Debug, Error, Clone, PartialEq)]
+pub enum AdmissionError {
+    #[error("queue full: {depth} queued requests at capacity {capacity} — request shed")]
+    QueueFull { depth: usize, capacity: usize },
+    #[error(
+        "projected queue delay {projected_us:.1} µs busts the {budget_us:.1} µs latency \
+         budget — request shed"
+    )]
+    DeadlineRisk { projected_us: f64, budget_us: f64 },
+    #[error("request carries {got} features, model expects {expected}")]
+    FeatureMismatch { expected: usize, got: usize },
+    #[error("server stopped")]
+    Stopped,
+}
+
+/// Admission knobs for the continuous-batching queue.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Hard bound on queued (not yet executing) requests; submissions
+    /// beyond it are shed with [`AdmissionError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Latency budget in µs: once the projected queue delay plus service
+    /// time would bust it, requests are shed with
+    /// [`AdmissionError::DeadlineRisk`]. `None` disables delay shedding
+    /// (the queue bound still applies).
+    pub latency_budget_us: Option<f64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_capacity: 1024, latency_budget_us: None }
+    }
+}
+
+/// Projected sojourn time, in µs, of a request admitted at queue position
+/// `depth`: the batches already queued ahead of it drain across `workers`
+/// replicas at the observed per-batch service time, then its own batch
+/// executes. Deliberately simple — an M/D/c delay bound, not a simulator —
+/// because it only has to be right about *order of magnitude* to keep the
+/// tail inside the budget.
+pub fn projected_latency_us(depth: usize, batch: usize, workers: usize, batch_us: f64) -> f64 {
+    let batches_ahead = (depth / batch.max(1)) as f64;
+    batches_ahead * batch_us / workers.max(1) as f64 + batch_us
+}
+
+/// The admission decision for one well-formed request, given queue state.
+/// `observed_batch_us` is the serving loop's EWMA of wall-clock batch
+/// service time; until the first batch completes (0.0) delay shedding is
+/// skipped because there is nothing credible to project from.
+pub fn admit(
+    cfg: &AdmissionConfig,
+    depth: usize,
+    batch: usize,
+    workers: usize,
+    observed_batch_us: f64,
+) -> Result<(), AdmissionError> {
+    if depth >= cfg.queue_capacity {
+        return Err(AdmissionError::QueueFull { depth, capacity: cfg.queue_capacity });
+    }
+    if let Some(budget_us) = cfg.latency_budget_us {
+        if observed_batch_us > 0.0 {
+            let projected_us = projected_latency_us(depth, batch, workers, observed_batch_us);
+            if projected_us > budget_us {
+                return Err(AdmissionError::DeadlineRisk { projected_us, budget_us });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Atomic counters for every admission decision a server makes.
+#[derive(Debug, Default)]
+pub struct AdmissionStats {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    shed_queue_full: AtomicU64,
+    shed_deadline: AtomicU64,
+    rejected_malformed: AtomicU64,
+}
+
+impl AdmissionStats {
+    pub fn new() -> AdmissionStats {
+        AdmissionStats::default()
+    }
+
+    /// Count one admitted request.
+    pub fn admit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one rejected request under the matching counter.
+    pub fn reject(&self, err: &AdmissionError) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        match err {
+            AdmissionError::QueueFull { .. } => {
+                self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+            }
+            AdmissionError::DeadlineRisk { .. } => {
+                self.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            }
+            AdmissionError::FeatureMismatch { .. } => {
+                self.rejected_malformed.fetch_add(1, Ordering::Relaxed);
+            }
+            AdmissionError::Stopped => {}
+        }
+    }
+
+    pub fn report(&self) -> AdmissionReport {
+        AdmissionReport {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            rejected_malformed: self.rejected_malformed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time snapshot of [`AdmissionStats`]. Counters are
+/// cumulative; [`AdmissionReport::delta`] turns two snapshots into a
+/// window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AdmissionReport {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub shed_queue_full: u64,
+    pub shed_deadline: u64,
+    pub rejected_malformed: u64,
+}
+
+impl AdmissionReport {
+    /// Well-formed requests the server chose not to serve.
+    pub fn shed(&self) -> u64 {
+        self.shed_queue_full + self.shed_deadline
+    }
+
+    /// Shed fraction of everything submitted (0.0 when idle).
+    pub fn shed_ratio(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.submitted as f64
+        }
+    }
+
+    /// The window between an `earlier` snapshot and this one.
+    pub fn delta(&self, earlier: &AdmissionReport) -> AdmissionReport {
+        AdmissionReport {
+            submitted: self.submitted.saturating_sub(earlier.submitted),
+            admitted: self.admitted.saturating_sub(earlier.admitted),
+            shed_queue_full: self.shed_queue_full.saturating_sub(earlier.shed_queue_full),
+            shed_deadline: self.shed_deadline.saturating_sub(earlier.shed_deadline),
+            rejected_malformed: self
+                .rejected_malformed
+                .saturating_sub(earlier.rejected_malformed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_bound_is_hard() {
+        let cfg = AdmissionConfig { queue_capacity: 4, latency_budget_us: None };
+        assert!(admit(&cfg, 3, 8, 1, 0.0).is_ok());
+        match admit(&cfg, 4, 8, 1, 0.0) {
+            Err(AdmissionError::QueueFull { depth: 4, capacity: 4 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_shedding_projects_queue_drain() {
+        let cfg = AdmissionConfig { queue_capacity: 1024, latency_budget_us: Some(1000.0) };
+        // Empty queue: one batch time (400 µs) fits the 1000 µs budget.
+        assert!(admit(&cfg, 0, 8, 1, 400.0).is_ok());
+        // 2 full batches ahead on 1 worker: 2*400 + 400 busts it.
+        match admit(&cfg, 16, 8, 1, 400.0) {
+            Err(AdmissionError::DeadlineRisk { projected_us, budget_us }) => {
+                assert!((projected_us - 1200.0).abs() < 1e-9);
+                assert!((budget_us - 1000.0).abs() < 1e-9);
+            }
+            other => panic!("expected DeadlineRisk, got {other:?}"),
+        }
+        // Same backlog across 4 workers drains in parallel: admitted.
+        assert!(admit(&cfg, 16, 8, 4, 400.0).is_ok());
+        // No observation yet: delay shedding stands down, queue bound holds.
+        assert!(admit(&cfg, 512, 8, 1, 0.0).is_ok());
+    }
+
+    #[test]
+    fn stats_partition_by_outcome() {
+        let stats = AdmissionStats::new();
+        stats.admit();
+        stats.admit();
+        stats.reject(&AdmissionError::QueueFull { depth: 1, capacity: 1 });
+        stats.reject(&AdmissionError::DeadlineRisk { projected_us: 2.0, budget_us: 1.0 });
+        stats.reject(&AdmissionError::FeatureMismatch { expected: 8, got: 7 });
+        let r = stats.report();
+        assert_eq!(r.submitted, 5);
+        assert_eq!(r.admitted, 2);
+        assert_eq!(r.shed_queue_full, 1);
+        assert_eq!(r.shed_deadline, 1);
+        assert_eq!(r.rejected_malformed, 1);
+        assert_eq!(r.shed(), 2);
+        assert!((r.shed_ratio() - 0.4).abs() < 1e-12);
+        // Windows difference cleanly.
+        stats.admit();
+        let w = stats.report().delta(&r);
+        assert_eq!(w.submitted, 1);
+        assert_eq!(w.admitted, 1);
+        assert_eq!(w.shed(), 0);
+        assert_eq!(w.shed_ratio(), 0.0);
+    }
+}

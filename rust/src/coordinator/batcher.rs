@@ -7,6 +7,7 @@
 //! the firmware batch (padding rows are discarded on the way out; the
 //! mem-tile zero-pad makes this free on hardware).
 
+use super::admission::AdmissionError;
 use crate::sim::functional::Activation;
 use std::time::{Duration, Instant};
 
@@ -51,9 +52,19 @@ impl Batcher {
         Batcher { policy, features, pending: Vec::with_capacity(policy.batch) }
     }
 
-    pub fn push(&mut self, req: Request) {
-        debug_assert_eq!(req.features.len(), self.features);
+    /// Queue one request. The feature width is a hard contract: a
+    /// mis-sized request is rejected with a typed error instead of
+    /// silently corrupting neighboring rows of the flushed batch (the old
+    /// `debug_assert_eq!` vanished in release builds).
+    pub fn push(&mut self, req: Request) -> Result<(), AdmissionError> {
+        if req.features.len() != self.features {
+            return Err(AdmissionError::FeatureMismatch {
+                expected: self.features,
+                got: req.features.len(),
+            });
+        }
         self.pending.push(req);
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -130,10 +141,10 @@ mod tests {
             8,
         );
         for i in 0..3 {
-            b.push(req(i, 8, now));
+            b.push(req(i, 8, now)).unwrap();
         }
         assert!(!b.ready(now));
-        b.push(req(3, 8, now));
+        b.push(req(3, 8, now)).unwrap();
         assert!(b.ready(now));
         let batch = b.flush(now).unwrap();
         assert_eq!(batch.occupancy, 4);
@@ -148,7 +159,7 @@ mod tests {
             BatchPolicy { batch: 8, max_wait: Duration::from_millis(1) },
             4,
         );
-        b.push(req(42, 4, start));
+        b.push(req(42, 4, start)).unwrap();
         let later = start + Duration::from_millis(2);
         assert!(b.ready(later));
         let batch = b.flush(later).unwrap();
@@ -167,12 +178,33 @@ mod tests {
             1,
         );
         for i in 0..5 {
-            b.push(req(i, 1, now));
+            b.push(req(i, 1, now)).unwrap();
         }
         assert_eq!(b.flush(now).unwrap().ids, vec![0, 1]);
         assert_eq!(b.flush(now).unwrap().ids, vec![2, 3]);
         assert_eq!(b.flush(now).unwrap().ids, vec![4]);
         assert!(b.flush(now).is_none());
+    }
+
+    #[test]
+    fn mis_sized_push_rejected_without_corrupting_neighbors() {
+        let now = Instant::now();
+        let mut b = Batcher::new(
+            BatchPolicy { batch: 4, max_wait: Duration::from_secs(1) },
+            4,
+        );
+        b.push(req(0, 4, now)).unwrap();
+        // Wrong width: typed rejection, queue untouched.
+        let err = b.push(req(1, 3, now)).unwrap_err();
+        assert_eq!(err, AdmissionError::FeatureMismatch { expected: 4, got: 3 });
+        assert_eq!(b.len(), 1);
+        // A well-formed request still lands, and the flushed rows carry
+        // exactly the admitted payloads.
+        b.push(req(2, 4, now)).unwrap();
+        let batch = b.flush(now).unwrap();
+        assert_eq!(batch.ids, vec![0, 2]);
+        assert_eq!(batch.activation.row(0), &[0, 0, 0, 0]);
+        assert_eq!(batch.activation.row(1), &[2, 2, 2, 2]);
     }
 
     #[test]
@@ -183,7 +215,7 @@ mod tests {
             1,
         );
         assert!(b.next_deadline(start).is_none());
-        b.push(req(0, 1, start));
+        b.push(req(0, 1, start)).unwrap();
         let d = b.next_deadline(start + Duration::from_millis(40)).unwrap();
         assert!(d <= Duration::from_millis(60));
     }

@@ -1,0 +1,510 @@
+//! Continuous batch formation: a shared admission-controlled queue in
+//! front of R replica workers.
+//!
+//! The deadline batcher ([`super::Server`]) binds every request to *one*
+//! batcher flush: a replica sits idle until its own queue fills or its
+//! deadline fires, and under an open-loop burst the backlog it accumulates
+//! is drained one flush at a time. [`ContinuousServer`] inverts the
+//! control flow — replicas *pull*: every worker that finishes a batch
+//! immediately claims up to `batch` requests from the front of one shared
+//! FIFO queue (zero-padding partial claims exactly like the batcher), so
+//! each firmware slot refills the moment a replica frees up instead of
+//! blocking on a per-replica flush cycle.
+//!
+//! Intake is non-blocking and admission-controlled
+//! ([`super::admission`]): a submission either returns an [`InferTicket`]
+//! or a typed [`AdmissionError`] immediately — the queue is bounded and a
+//! request whose projected sojourn would bust the latency budget is shed
+//! at the door rather than served late. The replica count is live:
+//! [`ContinuousServer::scale_to`] grows by spawning workers onto the same
+//! queue and shrinks by retiring them between batches, which is what the
+//! deploy layer's autoscaler drives.
+
+use super::admission::{admit, AdmissionConfig, AdmissionError, AdmissionReport, AdmissionStats};
+use super::batcher::Request;
+use super::metrics::{Metrics, MetricsReport};
+use crate::partition::{analyze_pipeline, execute_partitioned, PartitionedFirmware};
+use crate::sim::engine::EngineModel;
+use crate::sim::functional::Activation;
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Replies carry one feature vector per model output (sink), in
+/// [`PartitionedFirmware::outputs`] order.
+type Reply = SyncSender<Vec<Vec<i32>>>;
+
+/// How long an idle worker sleeps between queue polls. Wake-ups are
+/// condvar-driven; this only bounds shutdown/retire latency if a notify
+/// is missed.
+const IDLE_POLL: Duration = Duration::from_millis(25);
+
+/// Policy knobs for the continuous-batching server.
+#[derive(Debug, Clone, Copy)]
+pub struct ContinuousPolicy {
+    /// Max time the oldest queued request may wait before a worker flushes
+    /// a partial (zero-padded) batch.
+    pub max_wait: Duration,
+    /// Admission control: queue bound + latency-budget shedding.
+    pub admission: AdmissionConfig,
+    /// Keep a log of each executed batch's request ids (admission order).
+    /// Test instrumentation — off in production policies.
+    pub record_batches: bool,
+}
+
+impl Default for ContinuousPolicy {
+    fn default() -> Self {
+        ContinuousPolicy {
+            max_wait: Duration::from_micros(200),
+            admission: AdmissionConfig::default(),
+            record_batches: false,
+        }
+    }
+}
+
+/// One admitted request waiting in the shared queue.
+struct Pending {
+    req: Request,
+    reply: Reply,
+}
+
+/// Mutable queue state, guarded by one mutex (submissions and batch
+/// claims both touch it, so the lock also serializes admission decisions
+/// against queue depth).
+struct QueueState {
+    pending: VecDeque<Pending>,
+    stopped: bool,
+    /// Worker threads currently attached to the queue.
+    live: usize,
+    /// Workers asked to retire at their next batch boundary (≤ live - 1
+    /// while running, so the queue always keeps one worker).
+    retiring: usize,
+    /// EWMA of wall-clock batch service time, µs; 0 until the first batch
+    /// completes. Feeds the admission projection and the autoscaler's
+    /// live per-replica capacity estimate.
+    batch_us_ewma: f64,
+}
+
+struct Shared {
+    pfw: Arc<PartitionedFirmware>,
+    features: usize,
+    batch: usize,
+    policy: ContinuousPolicy,
+    /// Simulated device time per batch, from the cycle model.
+    device_us: f64,
+    state: Mutex<QueueState>,
+    work: Condvar,
+    stats: AdmissionStats,
+    metrics: Mutex<Metrics>,
+    next_id: AtomicU64,
+    batch_log: Mutex<Vec<Vec<u64>>>,
+}
+
+/// A pending reply for one admitted request. Dropping the ticket abandons
+/// the reply (the request still executes).
+pub struct InferTicket {
+    id: u64,
+    rx: Receiver<Vec<Vec<i32>>>,
+}
+
+impl InferTicket {
+    /// The queue-assigned request id (monotone in admission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request's batch completes; one feature vector per
+    /// model output.
+    pub fn wait(self) -> Result<Vec<Vec<i32>>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("continuous server dropped the reply (worker died)"))
+    }
+}
+
+/// A client handle to the continuous-batching queue (cheap to clone;
+/// thread-safe). Submission never blocks: it either admits and returns a
+/// ticket or rejects with a typed error.
+#[derive(Clone)]
+pub struct ContinuousClient {
+    shared: Arc<Shared>,
+}
+
+impl ContinuousClient {
+    /// Submit one sample. Non-blocking: admission is decided immediately.
+    pub fn submit(&self, features: Vec<i32>) -> Result<InferTicket, AdmissionError> {
+        if features.len() != self.shared.features {
+            let err = AdmissionError::FeatureMismatch {
+                expected: self.shared.features,
+                got: features.len(),
+            };
+            self.shared.stats.reject(&err);
+            return Err(err);
+        }
+        let (tx, rx) = sync_channel(1);
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.stopped {
+                let err = AdmissionError::Stopped;
+                self.shared.stats.reject(&err);
+                return Err(err);
+            }
+            let workers = st.live.saturating_sub(st.retiring).max(1);
+            if let Err(err) = admit(
+                &self.shared.policy.admission,
+                st.pending.len(),
+                self.shared.batch,
+                workers,
+                st.batch_us_ewma,
+            ) {
+                self.shared.stats.reject(&err);
+                return Err(err);
+            }
+            st.pending.push_back(Pending {
+                req: Request { id, features, enqueued: Instant::now() },
+                reply: tx,
+            });
+            self.shared.stats.admit();
+        }
+        self.shared.work.notify_all();
+        Ok(InferTicket { id, rx })
+    }
+
+    /// Submit and wait for every model output, in sink order.
+    pub fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
+        let ticket = self.submit(features)?;
+        ticket.wait()
+    }
+
+    /// Submit and wait for the primary (first) model output.
+    pub fn infer(&self, features: Vec<i32>) -> Result<Vec<i32>> {
+        let mut outs = self.infer_multi(features)?;
+        Ok(outs.swap_remove(0))
+    }
+}
+
+/// Everything the autoscaler needs from one observation instant.
+#[derive(Debug, Clone)]
+pub struct ServingSnapshot {
+    pub metrics: MetricsReport,
+    pub admission: AdmissionReport,
+    /// Requests queued (admitted, not yet claimed by a worker).
+    pub queued: usize,
+    /// The admission queue bound.
+    pub queue_capacity: usize,
+    /// Effective worker count (live minus pending retirements).
+    pub replicas: usize,
+    /// Firmware batch each worker executes.
+    pub batch: usize,
+    /// EWMA wall-clock batch service time, µs (0 before the first batch).
+    pub batch_us: f64,
+}
+
+/// The running continuous-batching server.
+pub struct ContinuousServer {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ContinuousServer {
+    /// Spawn `replicas` worker threads pulling from one shared queue.
+    pub fn spawn(
+        pfw: Arc<PartitionedFirmware>,
+        replicas: usize,
+        policy: ContinuousPolicy,
+    ) -> Result<ContinuousServer> {
+        ensure!(replicas >= 1, "continuous server needs at least one replica worker");
+        ensure!(policy.admission.queue_capacity >= 1, "queue capacity must be >= 1");
+        pfw.check_invariants()?;
+        let device_us = analyze_pipeline(&pfw, &EngineModel::default()).interval_us;
+        let shared = Arc::new(Shared {
+            features: pfw.input_features(),
+            batch: pfw.batch(),
+            pfw,
+            policy,
+            device_us,
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                stopped: false,
+                live: replicas,
+                retiring: 0,
+                batch_us_ewma: 0.0,
+            }),
+            work: Condvar::new(),
+            stats: AdmissionStats::new(),
+            metrics: Mutex::new(Metrics::new()),
+            next_id: AtomicU64::new(0),
+            batch_log: Mutex::new(Vec::new()),
+        });
+        let mut handles = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let s = shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&s)));
+        }
+        Ok(ContinuousServer { shared, handles: Mutex::new(handles) })
+    }
+
+    /// A submission handle (cheap to clone; thread-safe).
+    pub fn client(&self) -> ContinuousClient {
+        ContinuousClient { shared: self.shared.clone() }
+    }
+
+    /// The pipeline every worker executes.
+    pub fn firmware(&self) -> &Arc<PartitionedFirmware> {
+        &self.shared.pfw
+    }
+
+    /// Effective worker count (live minus pending retirements).
+    pub fn replicas(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.live.saturating_sub(st.retiring)
+    }
+
+    /// Requests currently queued (admitted, not yet claimed).
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().pending.len()
+    }
+
+    pub fn metrics(&self) -> MetricsReport {
+        self.shared.metrics.lock().unwrap().report()
+    }
+
+    pub fn admission(&self) -> AdmissionReport {
+        self.shared.stats.report()
+    }
+
+    /// One consistent observation for the autoscaler.
+    pub fn snapshot(&self) -> ServingSnapshot {
+        let (queued, replicas, batch_us) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.pending.len(), st.live.saturating_sub(st.retiring), st.batch_us_ewma)
+        };
+        ServingSnapshot {
+            metrics: self.metrics(),
+            admission: self.shared.stats.report(),
+            queued,
+            queue_capacity: self.shared.policy.admission.queue_capacity,
+            replicas,
+            batch: self.shared.batch,
+            batch_us,
+        }
+    }
+
+    /// The per-batch request-id log (admission order within each executed
+    /// batch). Empty unless the policy set `record_batches`.
+    pub fn batch_log(&self) -> Vec<Vec<u64>> {
+        self.shared.batch_log.lock().unwrap().clone()
+    }
+
+    /// Grow or shrink the effective worker count to `replicas` (≥ 1).
+    /// Growth spawns workers onto the same queue immediately; shrinkage
+    /// marks workers to retire at their next batch boundary, so in-flight
+    /// and queued requests are never dropped by a scale-down.
+    pub fn scale_to(&self, replicas: usize) -> Result<()> {
+        ensure!(replicas >= 1, "continuous server needs at least one replica worker");
+        let to_spawn = {
+            let mut st = self.shared.state.lock().unwrap();
+            ensure!(!st.stopped, "continuous server is shut down");
+            let effective = st.live.saturating_sub(st.retiring);
+            if replicas > effective {
+                let mut grow = replicas - effective;
+                // Cancel pending retirements before spawning new threads.
+                let cancel = grow.min(st.retiring);
+                st.retiring -= cancel;
+                grow -= cancel;
+                st.live += grow;
+                grow
+            } else {
+                st.retiring += effective - replicas;
+                self.shared.work.notify_all();
+                0
+            }
+        };
+        for _ in 0..to_spawn {
+            let s = self.shared.clone();
+            let h = std::thread::spawn(move || worker_loop(&s));
+            self.handles.lock().unwrap().push(h);
+        }
+        Ok(())
+    }
+
+    /// Stop intake, drain the queue through the workers, join them all and
+    /// return the final metrics and admission accounting.
+    pub fn shutdown(self) -> (MetricsReport, AdmissionReport) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stopped = true;
+        }
+        self.shared.work.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let report = self.shared.metrics.lock().unwrap().report();
+        (report, self.shared.stats.report())
+    }
+}
+
+/// One replica worker: claim up to one firmware batch from the queue
+/// front (waiting for batch-full, the oldest request's deadline, or
+/// shutdown), execute, reply per row, repeat — until retired or the
+/// stopped queue runs dry.
+fn worker_loop(shared: &Shared) {
+    let batch = shared.batch;
+    loop {
+        let taken: Vec<Pending> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                // Scale-down retires workers between batches; shutdown
+                // drains first, so retirement yields to the stop flag.
+                if st.retiring > 0 && !st.stopped {
+                    st.retiring -= 1;
+                    st.live -= 1;
+                    return;
+                }
+                if st.stopped && st.pending.is_empty() {
+                    st.live = st.live.saturating_sub(1);
+                    return;
+                }
+                let n = st.pending.len();
+                if n >= batch || (st.stopped && n > 0) {
+                    break;
+                }
+                if n > 0 {
+                    let age = st.pending.front().expect("n > 0").req.enqueued.elapsed();
+                    if age >= shared.policy.max_wait {
+                        break;
+                    }
+                    let (guard, _) = shared
+                        .work
+                        .wait_timeout(st, shared.policy.max_wait - age)
+                        .expect("queue lock poisoned");
+                    st = guard;
+                } else {
+                    let (guard, _) =
+                        shared.work.wait_timeout(st, IDLE_POLL).expect("queue lock poisoned");
+                    st = guard;
+                }
+            }
+            let take = st.pending.len().min(batch);
+            st.pending.drain(..take).collect()
+        };
+        let occupancy = taken.len();
+        let t0 = Instant::now();
+        let mut data = vec![0i32; batch * shared.features];
+        for (i, p) in taken.iter().enumerate() {
+            data[i * shared.features..(i + 1) * shared.features]
+                .copy_from_slice(&p.req.features);
+        }
+        let act = Activation::new(batch, shared.features, data)
+            .expect("admission guarantees request shapes");
+        let outs = execute_partitioned(&shared.pfw, &act).expect("pipeline execution failed");
+        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.batch_us_ewma = if st.batch_us_ewma == 0.0 {
+                exec_us
+            } else {
+                0.7 * st.batch_us_ewma + 0.3 * exec_us
+            };
+        }
+        if shared.policy.record_batches {
+            shared
+                .batch_log
+                .lock()
+                .unwrap()
+                .push(taken.iter().map(|p| p.req.id).collect());
+        }
+        let mut delays = Vec::with_capacity(occupancy);
+        for (slot, p) in taken.into_iter().enumerate() {
+            let _ = p.reply.send(outs.iter().map(|o| o.row(slot).to_vec()).collect());
+            delays.push(p.req.enqueued.elapsed());
+        }
+        shared
+            .metrics
+            .lock()
+            .unwrap()
+            .record_batch(occupancy, batch, &delays, shared.device_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{mlp_spec, synth_model};
+    use crate::partition::{compile_partitioned, PartitionOptions};
+
+    fn pipeline(name: &str, k: usize, batch: usize) -> Arc<PartitionedFirmware> {
+        let json = synth_model(name, &mlp_spec(&[24, 16, 8], crate::arch::Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = batch;
+        cfg.tiles_per_layer = Some(1);
+        let opts = PartitionOptions { partitions: Some(k), max_partitions: k };
+        Arc::new(compile_partitioned(&json, cfg, &opts).unwrap().firmware)
+    }
+
+    #[test]
+    fn serves_and_accounts_admissions() {
+        let server = ContinuousServer::spawn(
+            pipeline("cont_basic", 1, 4),
+            2,
+            ContinuousPolicy { max_wait: Duration::from_millis(2), ..Default::default() },
+        )
+        .unwrap();
+        let c = server.client();
+        let golden = c.infer(vec![3; 24]).unwrap();
+        assert_eq!(golden.len(), 8);
+        for _ in 0..7 {
+            assert_eq!(c.infer(vec![3; 24]).unwrap(), golden);
+        }
+        let (m, a) = server.shutdown();
+        assert_eq!(m.requests, 8);
+        assert_eq!(a.submitted, 8);
+        assert_eq!(a.admitted, 8);
+        assert_eq!(a.shed(), 0);
+    }
+
+    #[test]
+    fn scale_transitions_keep_one_worker_and_update_counts() {
+        let server = ContinuousServer::spawn(
+            pipeline("cont_scale", 1, 2),
+            1,
+            ContinuousPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(server.replicas(), 1);
+        server.scale_to(3).unwrap();
+        assert_eq!(server.replicas(), 3);
+        // Shrink marks retirements immediately; the effective count drops
+        // even before the threads reach their next batch boundary.
+        server.scale_to(1).unwrap();
+        assert_eq!(server.replicas(), 1);
+        assert!(server.scale_to(0).is_err());
+        let c = server.client();
+        assert_eq!(c.infer(vec![1; 24]).unwrap().len(), 8);
+        let (m, _) = server.shutdown();
+        assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn mis_sized_and_post_shutdown_submissions_get_typed_errors() {
+        let server = ContinuousServer::spawn(
+            pipeline("cont_typed", 2, 2),
+            1,
+            ContinuousPolicy::default(),
+        )
+        .unwrap();
+        let c = server.client();
+        match c.submit(vec![0; 7]) {
+            Err(AdmissionError::FeatureMismatch { expected: 24, got: 7 }) => {}
+            other => panic!("expected FeatureMismatch, got {:?}", other.map(|t| t.id())),
+        }
+        server.shutdown();
+        assert!(matches!(c.submit(vec![0; 24]), Err(AdmissionError::Stopped)));
+    }
+}

@@ -158,12 +158,22 @@ impl Metrics {
     pub fn report(&self) -> MetricsReport {
         let mut sorted = self.latencies_us.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Nearest-rank with linear interpolation between the straddling
+        // samples. The old `((n-1)*p).round()` collapsed p99 onto the max
+        // for any window under ~50 samples and biased p50 on even-length
+        // windows (both pinned by `percentile_interpolation_small_windows`).
         let pct = |p: f64| -> f64 {
             if sorted.is_empty() {
                 return 0.0;
             }
-            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-            sorted[idx]
+            let rank = (sorted.len() - 1) as f64 * p;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+            }
         };
         MetricsReport {
             requests: self.requests,
@@ -218,6 +228,35 @@ mod tests {
         assert!((r.p99_latency_us - 99.0).abs() <= 1.5);
         assert_eq!(r.max_latency_us, 100.0);
         assert_eq!(r.device_busy_us, 500.0);
+    }
+
+    #[test]
+    fn percentile_interpolation_small_windows() {
+        // Regression for the `((n-1)*p).round()` index: with 10 samples it
+        // returned sorted[9] for p99 — the max — hiding every sub-max tail
+        // sample in small windows. Interpolated rank 8.91 sits just below.
+        let mut m = Metrics::new();
+        let lat: Vec<Duration> = (1..=10).map(Duration::from_micros).collect();
+        m.record_batch(10, 16, &lat, 0.0);
+        let r = m.report();
+        assert!((r.p99_latency_us - 9.91).abs() < 1e-6, "p99 {}", r.p99_latency_us);
+        assert!(
+            r.p99_latency_us < r.max_latency_us,
+            "p99 must not collapse onto the max in small windows"
+        );
+        // Even-length window: the median is the mean of the two middle
+        // samples, not whichever one rounding lands on.
+        let mut m = Metrics::new();
+        let lat: Vec<Duration> = (1..=4).map(Duration::from_micros).collect();
+        m.record_batch(4, 4, &lat, 0.0);
+        let r = m.report();
+        assert!((r.p50_latency_us - 2.5).abs() < 1e-6, "p50 {}", r.p50_latency_us);
+        // A single sample is every percentile.
+        let mut m = Metrics::new();
+        m.record_batch(1, 1, &[Duration::from_micros(7)], 0.0);
+        let r = m.report();
+        assert!((r.p50_latency_us - 7.0).abs() < 1e-6);
+        assert!((r.p99_latency_us - 7.0).abs() < 1e-6);
     }
 
     #[test]

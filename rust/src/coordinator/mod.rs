@@ -7,14 +7,20 @@
 //! metrics. Rust owns the event loop; the firmware package (and on real
 //! hardware, the AIE array) does the math.
 
+pub mod admission;
 pub mod batcher;
+pub mod continuous;
 pub mod metrics;
 pub mod pipeline;
 pub mod router;
 pub mod server;
 
+pub use admission::{AdmissionConfig, AdmissionError, AdmissionReport, AdmissionStats};
 pub use batcher::{Batch, BatchPolicy, Batcher, Request};
+pub use continuous::{
+    ContinuousClient, ContinuousPolicy, ContinuousServer, InferTicket, ServingSnapshot,
+};
 pub use metrics::{Metrics, MetricsReport, StageMetricsReport};
 pub use pipeline::{PipelineClient, PipelineServer};
 pub use router::{least_loaded, LeastLoaded, Router};
-pub use server::{Client, Server};
+pub use server::{Client, InferHandle, Server};

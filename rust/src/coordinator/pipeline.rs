@@ -17,6 +17,7 @@
 //! pipeline imbalance is observable in the final [`MetricsReport`]
 //! (`stages[i].busy_fraction` ≈ 1 marks the bottleneck array).
 
+use super::admission::AdmissionError;
 use super::batcher::{BatchPolicy, Batcher, Request};
 use super::metrics::{Metrics, MetricsReport};
 use crate::partition::{analyze_pipeline, PartitionedFirmware};
@@ -56,6 +57,7 @@ struct StageJob {
 pub struct PipelineClient {
     tx: SyncSender<Msg>,
     next_id: Arc<AtomicU64>,
+    features: usize,
 }
 
 impl PipelineClient {
@@ -66,7 +68,15 @@ impl PipelineClient {
     }
 
     /// Submit one sample and wait for every model output, in sink order.
+    /// Mis-sized requests are rejected with the typed admission error.
     pub fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
+        if features.len() != self.features {
+            return Err(AdmissionError::FeatureMismatch {
+                expected: self.features,
+                got: features.len(),
+            }
+            .into());
+        }
         let (tx, rx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -166,8 +176,14 @@ impl PipelineServer {
                     .unwrap_or(Duration::from_secs(3600));
                 match rx.recv_timeout(timeout) {
                     Ok(Msg::Req(req, reply)) => {
-                        waiters.push((req.id, reply));
-                        batcher.push(req);
+                        let id = req.id;
+                        match batcher.push(req) {
+                            // Defense in depth behind the client-side
+                            // check: dropping the reply surfaces the
+                            // rejection to the waiting caller.
+                            Ok(()) => waiters.push((id, reply)),
+                            Err(_) => drop(reply),
+                        }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
                     Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
@@ -184,7 +200,7 @@ impl PipelineServer {
         });
 
         PipelineServer {
-            client: PipelineClient { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            client: PipelineClient { tx, next_id: Arc::new(AtomicU64::new(0)), features },
             pfw,
             metrics,
             front,

@@ -13,6 +13,7 @@
 //! name). The replicated-fleet deployment layer
 //! ([`crate::deploy::FleetServer`]) builds on the same dispatch policy.
 
+use super::admission::AdmissionError;
 use super::metrics::MetricsReport;
 use super::server::Server;
 use crate::codegen::firmware::Firmware;
@@ -153,11 +154,11 @@ impl Router {
                 })
             };
             if features.len() != entry.features {
-                bail!(
-                    "model '{model}' expects {} features, got {}",
-                    entry.features,
-                    features.len()
-                );
+                return Err(AdmissionError::FeatureMismatch {
+                    expected: entry.features,
+                    got: features.len(),
+                })
+                .with_context(|| format!("model '{model}' rejected the request"));
             }
             let loads: Vec<usize> =
                 entry.replicas.iter().map(|r| r.inflight.load(Ordering::Relaxed)).collect();

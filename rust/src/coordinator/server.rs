@@ -10,6 +10,7 @@
 //! channel. Python is never involved: the firmware package is
 //! self-contained.
 
+use super::admission::AdmissionError;
 use super::batcher::{BatchPolicy, Batcher, Request};
 use super::metrics::{Metrics, MetricsReport};
 use crate::codegen::firmware::Firmware;
@@ -30,11 +31,25 @@ enum Msg {
     Shutdown,
 }
 
+/// A pending reply for one enqueued request.
+pub struct InferHandle {
+    rx: Receiver<Vec<Vec<i32>>>,
+}
+
+impl InferHandle {
+    /// Block until the request's batch completes; one feature vector per
+    /// network output.
+    pub fn wait(self) -> Result<Vec<Vec<i32>>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))
+    }
+}
+
 /// A client handle to the serving loop (cheap to clone; thread-safe).
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Msg>,
     next_id: Arc<AtomicU64>,
+    features: usize,
 }
 
 impl Client {
@@ -48,12 +63,28 @@ impl Client {
     /// Submit one sample and wait for **every** network output, one
     /// feature vector per sink in firmware output order.
     pub fn infer_multi(&self, features: Vec<i32>) -> Result<Vec<Vec<i32>>> {
+        self.submit(features)?.wait()
+    }
+
+    /// Enqueue one sample without waiting for its batch: the returned
+    /// handle collects the reply later, so one open-loop driver thread can
+    /// keep many requests in flight. Blocks only if the request channel is
+    /// at its configured depth (classic sender backpressure); mis-sized
+    /// requests are rejected here with the typed admission error.
+    pub fn submit(&self, features: Vec<i32>) -> Result<InferHandle> {
+        if features.len() != self.features {
+            return Err(AdmissionError::FeatureMismatch {
+                expected: self.features,
+                got: features.len(),
+            }
+            .into());
+        }
         let (tx, rx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Msg::Req(Request { id, features, enqueued: Instant::now() }, tx))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx.recv()?)
+        Ok(InferHandle { rx })
     }
 }
 
@@ -89,8 +120,14 @@ impl Server {
                     .unwrap_or(Duration::from_secs(3600));
                 match rx.recv_timeout(timeout) {
                     Ok(Msg::Req(req, reply)) => {
-                        waiters.push((req.id, reply));
-                        batcher.push(req);
+                        let id = req.id;
+                        match batcher.push(req) {
+                            // Defense in depth behind the client-side
+                            // check: dropping the reply channel surfaces
+                            // the rejection to the waiting caller.
+                            Ok(()) => waiters.push((id, reply)),
+                            Err(_) => drop(reply),
+                        }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
                     Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
@@ -108,7 +145,7 @@ impl Server {
         });
 
         Server {
-            client: Client { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            client: Client { tx, next_id: Arc::new(AtomicU64::new(0)), features },
             fw,
             metrics,
             handle,
@@ -250,6 +287,24 @@ mod tests {
         let primary = server.client.infer(vec![1; 16]).unwrap();
         assert_eq!(primary, outs[0]);
         server.shutdown();
+    }
+
+    #[test]
+    fn submit_overlaps_requests_and_rejects_mis_sized_ones() {
+        let fw = small_fw(4);
+        let server = Server::spawn(fw.clone(), Duration::from_millis(2), 64);
+        // Typed rejection at the client edge, before the queue.
+        let err = server.client.submit(vec![1; 31]).unwrap_err();
+        let typed = err.downcast_ref::<AdmissionError>().expect("typed admission error");
+        assert_eq!(*typed, AdmissionError::FeatureMismatch { expected: 32, got: 31 });
+        // One driver thread keeps several requests in flight.
+        let handles: Vec<InferHandle> =
+            (0..6).map(|i| server.client.submit(vec![i % 3; 32]).unwrap()).collect();
+        let outs: Vec<Vec<Vec<i32>>> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        assert_eq!(outs[0], outs[3]);
+        assert_eq!(outs[1], outs[4]);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 6);
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! SLO-burn autoscaling: grow or shrink the replication factor R from
+//! live serving signals.
+//!
+//! The planner ([`super::planner`]) answers the *static* question — how
+//! many replicas for a target rate — from costed candidates. The
+//! autoscaler answers it *continuously*: it differences consecutive
+//! [`ServingSnapshot`]s (cumulative [`crate::coordinator::MetricsReport`]
+//! + [`AdmissionReport`] counters) into observation windows, distills each
+//! window into [`SloBurn`] signals, and emits [`ScaleDecision`]s that the
+//! caller applies through `ContinuousServer::scale_to` /
+//! `FleetServer::scale_to` — the same drain-and-replace machinery hot
+//! reload uses, so scale transitions never drop admitted requests.
+//!
+//! Target selection is demand-driven and burn-boosted:
+//!
+//! * **demand** — the window's arrival rate divided by per-replica
+//!   capacity. Capacity prefers the *live* estimate (firmware batch over
+//!   the observed EWMA batch service time, which tracks host contention);
+//!   before any batch has completed it falls back to the plan's costed
+//!   [`DeploymentPlan::per_replica_sps`].
+//! * **burn boost** — when the window shed requests, the queue is running
+//!   deep, or the served p99 is burning the budget while arrivals outpace
+//!   service, the target is raised to at least `current + 1` regardless
+//!   of demand: the SLO is already bleeding, capacity math comes second.
+//! * **scale-down hysteresis** — shrinking requires a clean window (no
+//!   sheds, shallow queue, p99 comfortably inside the budget), and every
+//!   transition starts a cooldown so the fleet does not flap.
+
+use super::planner::DeploymentPlan;
+use crate::coordinator::{AdmissionReport, ServingSnapshot};
+use std::time::{Duration, Instant};
+
+/// Autoscaler knobs.
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// p99/budget ratio at or above which the fleet is burning its SLO
+    /// (scale-up pressure, gated on arrivals outpacing service so a
+    /// one-off historical tail cannot ratchet R upward forever).
+    pub burn_up: f64,
+    /// p99/budget ratio the window must stay below before scale-down.
+    pub burn_down: f64,
+    /// Window shed fraction at or above which the fleet scales up.
+    pub shed_up: f64,
+    /// Queue depth as a fraction of capacity at or above which the fleet
+    /// scales up (backlog pressure before sheds even start).
+    pub queue_up: f64,
+    /// Queue fraction that must not be exceeded for scale-down.
+    pub queue_down: f64,
+    /// Multiplier on the demand-derived replica count (capacity margin).
+    pub headroom: f64,
+    /// Minimum time between scale transitions.
+    pub cooldown: Duration,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            min_replicas: 1,
+            max_replicas: 64,
+            burn_up: 1.0,
+            burn_down: 0.7,
+            shed_up: 0.01,
+            queue_up: 0.5,
+            queue_down: 0.1,
+            headroom: 1.0,
+            cooldown: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One observation window distilled into SLO-burn signals.
+#[derive(Debug, Clone, Copy)]
+pub struct SloBurn {
+    /// Submitted requests per second in the window (offered load).
+    pub arrival_sps: f64,
+    /// Served requests per second in the window.
+    pub served_sps: f64,
+    /// Cumulative served p99 over the latency budget.
+    pub p99_ratio: f64,
+    /// Window shed fraction (shed / submitted).
+    pub shed_ratio: f64,
+    /// Instantaneous queue depth over queue capacity.
+    pub queue_ratio: f64,
+    /// Live per-replica capacity estimate, samples/s (plan fallback when
+    /// no batch has completed yet).
+    pub per_replica_sps: f64,
+}
+
+/// What the autoscaler wants done with the replica count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    Up { from: usize, to: usize, reason: String },
+    Down { from: usize, to: usize, reason: String },
+}
+
+impl ScaleDecision {
+    /// The replica count to apply, if any change is wanted.
+    pub fn target(&self) -> Option<usize> {
+        match self {
+            ScaleDecision::Hold => None,
+            ScaleDecision::Up { to, .. } | ScaleDecision::Down { to, .. } => Some(*to),
+        }
+    }
+}
+
+/// The autoscaler. Owns the previous-window baselines; one instance per
+/// served deployment.
+pub struct Autoscaler {
+    /// Per-replica capacity used before any live estimate exists,
+    /// samples/s (the planner's costed rate, or a caller-measured one).
+    fallback_sps: f64,
+    /// The R the planner predicted, when built from a plan.
+    plan_r: Option<usize>,
+    budget_us: f64,
+    cfg: AutoscalerConfig,
+    prev_admission: AdmissionReport,
+    prev_requests: usize,
+    prev_at: Option<Instant>,
+    last_scale_at: Option<Instant>,
+}
+
+impl Autoscaler {
+    /// Build on a planner candidate: the plan supplies the costed
+    /// per-replica fallback rate and documents the R the planner predicted
+    /// for its SLO ([`Autoscaler::plan_r`]).
+    pub fn from_plan(plan: &DeploymentPlan, budget_us: f64, cfg: AutoscalerConfig) -> Autoscaler {
+        Autoscaler::build(plan.per_replica_sps(), Some(plan.r), budget_us, cfg)
+    }
+
+    /// Build from a directly measured (or assumed) per-replica rate — the
+    /// CLI path, where no planner run happened.
+    pub fn from_rate(per_replica_sps: f64, budget_us: f64, cfg: AutoscalerConfig) -> Autoscaler {
+        Autoscaler::build(per_replica_sps, None, budget_us, cfg)
+    }
+
+    fn build(
+        fallback_sps: f64,
+        plan_r: Option<usize>,
+        budget_us: f64,
+        cfg: AutoscalerConfig,
+    ) -> Autoscaler {
+        Autoscaler {
+            fallback_sps,
+            plan_r,
+            budget_us,
+            cfg,
+            prev_admission: AdmissionReport::default(),
+            prev_requests: 0,
+            prev_at: None,
+            last_scale_at: None,
+        }
+    }
+
+    /// The replication factor the planner predicted, when known.
+    pub fn plan_r(&self) -> Option<usize> {
+        self.plan_r
+    }
+
+    /// Ingest one snapshot, closing the current observation window.
+    /// Returns `Hold` until two observations exist (no window yet).
+    pub fn observe(&mut self, now: Instant, snap: &ServingSnapshot) -> ScaleDecision {
+        let window = snap.admission.delta(&self.prev_admission);
+        let served = snap.metrics.requests.saturating_sub(self.prev_requests);
+        let elapsed = self.prev_at.map(|t| now.saturating_duration_since(t).as_secs_f64());
+        self.prev_admission = snap.admission;
+        self.prev_requests = snap.metrics.requests;
+        self.prev_at = Some(now);
+        let Some(elapsed) = elapsed else { return ScaleDecision::Hold };
+        if elapsed <= 0.0 {
+            return ScaleDecision::Hold;
+        }
+        let burn = SloBurn {
+            arrival_sps: window.submitted as f64 / elapsed,
+            served_sps: served as f64 / elapsed,
+            p99_ratio: if self.budget_us > 0.0 {
+                snap.metrics.p99_latency_us / self.budget_us
+            } else {
+                0.0
+            },
+            shed_ratio: window.shed_ratio(),
+            queue_ratio: if snap.queue_capacity > 0 {
+                snap.queued as f64 / snap.queue_capacity as f64
+            } else {
+                0.0
+            },
+            per_replica_sps: if snap.batch_us > 0.0 {
+                snap.batch as f64 * 1e6 / snap.batch_us
+            } else {
+                self.fallback_sps
+            },
+        };
+        self.decide(now, &burn, snap.replicas)
+    }
+
+    /// Pure decision logic (separated for testability; `now` only gates
+    /// the cooldown).
+    pub fn decide(&mut self, now: Instant, burn: &SloBurn, current_r: usize) -> ScaleDecision {
+        if let Some(t) = self.last_scale_at {
+            if now.saturating_duration_since(t) < self.cfg.cooldown {
+                return ScaleDecision::Hold;
+            }
+        }
+        let demand = if burn.per_replica_sps > 0.0 {
+            let want = burn.arrival_sps * self.cfg.headroom / burn.per_replica_sps;
+            (want.ceil() as usize).max(1)
+        } else {
+            current_r
+        };
+        let burning = burn.shed_ratio >= self.cfg.shed_up
+            || burn.queue_ratio >= self.cfg.queue_up
+            || (burn.p99_ratio >= self.cfg.burn_up && burn.arrival_sps > burn.served_sps);
+        let mut target = demand;
+        if burning {
+            target = target.max(current_r + 1);
+        }
+        let target = target.clamp(self.cfg.min_replicas, self.cfg.max_replicas.max(1));
+        if target > current_r {
+            self.last_scale_at = Some(now);
+            ScaleDecision::Up {
+                from: current_r,
+                to: target,
+                reason: format!(
+                    "demand {demand} replica(s) at {:.0} samples/s offered \
+                     ({:.0}/replica); p99 burn {:.2}, shed {:.1}%, queue {:.0}%",
+                    burn.arrival_sps,
+                    burn.per_replica_sps,
+                    burn.p99_ratio,
+                    100.0 * burn.shed_ratio,
+                    100.0 * burn.queue_ratio
+                ),
+            }
+        } else if target < current_r
+            && burn.shed_ratio == 0.0
+            && burn.queue_ratio <= self.cfg.queue_down
+            && burn.p99_ratio <= self.cfg.burn_down
+        {
+            self.last_scale_at = Some(now);
+            ScaleDecision::Down {
+                from: current_r,
+                to: target,
+                reason: format!(
+                    "demand {demand} replica(s) at {:.0} samples/s offered; clean window \
+                     (no sheds, queue {:.0}%, p99 burn {:.2})",
+                    burn.arrival_sps,
+                    100.0 * burn.queue_ratio,
+                    burn.p99_ratio
+                ),
+            }
+        } else {
+            ScaleDecision::Hold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dtype;
+    use crate::deploy::{plan, Fleet, PlannerOptions, Slo};
+    use crate::frontend::CompileConfig;
+    use crate::harness::models::{mlp_spec, synth_model};
+
+    fn test_plan() -> DeploymentPlan {
+        let json = synth_model("autoscale_plan", &mlp_spec(&[32, 16, 8], Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        cfg.tiles_per_layer = Some(2);
+        let out = plan(
+            &json,
+            &cfg,
+            &Fleet::homogeneous("vek280", 4),
+            &Slo::new(1e5, 100_000.0),
+            &PlannerOptions::default(),
+        )
+        .unwrap();
+        out.best().expect("test SLO must be plannable").clone()
+    }
+
+    fn burn(arrival: f64, per_replica: f64) -> SloBurn {
+        SloBurn {
+            arrival_sps: arrival,
+            served_sps: arrival,
+            p99_ratio: 0.2,
+            shed_ratio: 0.0,
+            queue_ratio: 0.0,
+            per_replica_sps: per_replica,
+        }
+    }
+
+    #[test]
+    fn demand_tracks_arrival_rate_and_cooldown_gates_flapping() {
+        let mut a = Autoscaler::from_plan(
+            &test_plan(),
+            1000.0,
+            AutoscalerConfig { cooldown: Duration::from_millis(200), ..Default::default() },
+        );
+        let t0 = Instant::now();
+        // 2.5 replicas' worth of offered load at 1k/replica -> R=3.
+        match a.decide(t0, &burn(2500.0, 1000.0), 1) {
+            ScaleDecision::Up { from: 1, to: 3, .. } => {}
+            d => panic!("expected Up to 3, got {d:?}"),
+        }
+        // Inside the cooldown nothing moves, even under pressure.
+        assert_eq!(a.decide(t0 + Duration::from_millis(10), &burn(9000.0, 1000.0), 3),
+            ScaleDecision::Hold);
+        // After the cooldown a clean low-demand window shrinks the fleet.
+        match a.decide(t0 + Duration::from_millis(300), &burn(800.0, 1000.0), 3) {
+            ScaleDecision::Down { from: 3, to: 1, .. } => {}
+            d => panic!("expected Down to 1, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn burn_signals_boost_past_demand() {
+        let mut a = Autoscaler::from_plan(
+            &test_plan(),
+            1000.0,
+            AutoscalerConfig { cooldown: Duration::ZERO, ..Default::default() },
+        );
+        let t = Instant::now();
+        // Demand says 1 replica, but the window shed traffic: up anyway.
+        let mut b = burn(500.0, 1000.0);
+        b.shed_ratio = 0.05;
+        match a.decide(t, &b, 2) {
+            ScaleDecision::Up { from: 2, to: 3, .. } => {}
+            d => panic!("expected shed-driven Up, got {d:?}"),
+        }
+        // Deep queue alone is enough.
+        let mut b = burn(500.0, 1000.0);
+        b.queue_ratio = 0.8;
+        assert!(matches!(a.decide(t, &b, 2), ScaleDecision::Up { to: 3, .. }));
+        // A historical p99 spike with arrivals <= service must NOT ratchet
+        // R upward (the cumulative-p99 trap).
+        let mut b = burn(500.0, 1000.0);
+        b.p99_ratio = 2.0;
+        assert_eq!(a.decide(t, &b, 2), ScaleDecision::Hold);
+        // …but p99 burn while arrivals outpace service does.
+        let mut b = burn(1500.0, 1000.0);
+        b.p99_ratio = 2.0;
+        b.served_sps = 900.0;
+        assert!(matches!(a.decide(t, &b, 2), ScaleDecision::Up { to: 3, .. }));
+    }
+
+    #[test]
+    fn dirty_windows_block_scale_down_and_bounds_clamp() {
+        let mut a = Autoscaler::from_plan(
+            &test_plan(),
+            1000.0,
+            AutoscalerConfig {
+                cooldown: Duration::ZERO,
+                max_replicas: 4,
+                min_replicas: 2,
+                ..Default::default()
+            },
+        );
+        let t = Instant::now();
+        // Sheds in the window: no shrink even at low demand.
+        let mut b = burn(100.0, 1000.0);
+        b.shed_ratio = 0.02;
+        // (also not an up: current 4 == max)
+        assert_eq!(a.decide(t, &b, 4), ScaleDecision::Hold);
+        // Clean window shrinks, but only to min_replicas.
+        match a.decide(t, &burn(100.0, 1000.0), 4) {
+            ScaleDecision::Down { from: 4, to: 2, .. } => {}
+            d => panic!("expected Down to min 2, got {d:?}"),
+        }
+        // Demand beyond max clamps to max.
+        match a.decide(t, &burn(100_000.0, 1000.0), 2) {
+            ScaleDecision::Up { from: 2, to: 4, .. } => {}
+            d => panic!("expected Up clamped to 4, got {d:?}"),
+        }
+    }
+}

@@ -101,6 +101,9 @@ impl ReplicaClient {
 struct ReplicaSlot {
     backend: ReplicaBackend,
     inflight: Arc<AtomicUsize>,
+    /// Dispatch attempts routed here, including ones lost to a reload race.
+    attempts: Arc<AtomicU64>,
+    /// Requests this slot actually answered.
     dispatched: Arc<AtomicU64>,
 }
 
@@ -109,6 +112,7 @@ impl ReplicaSlot {
         ReplicaSlot {
             backend,
             inflight: Arc::new(AtomicUsize::new(0)),
+            attempts: Arc::new(AtomicU64::new(0)),
             dispatched: Arc::new(AtomicU64::new(0)),
         }
     }
@@ -156,7 +160,7 @@ impl FleetClient {
             // inference wait (a hot reload may swap the slots meanwhile;
             // our cloned client keeps the old replica alive through its
             // drain).
-            let (pick, client, inflight) = {
+            let (pick, client, inflight, served) = {
                 let slots = self.inner.slots.read().unwrap();
                 ensure!(!slots.is_empty(), "fleet is shut down");
                 let expect = slots[0].backend.input_features();
@@ -183,13 +187,20 @@ impl FleetClient {
                 }
                 let slot = &slots[pick];
                 slot.inflight.fetch_add(1, Ordering::Relaxed);
-                slot.dispatched.fetch_add(1, Ordering::Relaxed);
-                (pick, slot.backend.client(), slot.inflight.clone())
+                // Attempts count at pick time; completions only after the
+                // replica answers — a retried request must not inflate the
+                // served-traffic view (`dispatched` used to count both,
+                // so reload-race retries showed dispatched > served).
+                slot.attempts.fetch_add(1, Ordering::Relaxed);
+                (pick, slot.backend.client(), slot.inflight.clone(), slot.dispatched.clone())
             };
             let out = client.infer_multi(features.clone());
             inflight.fetch_sub(1, Ordering::Relaxed);
             match out {
-                Ok(v) => return Ok(v),
+                Ok(v) => {
+                    served.fetch_add(1, Ordering::Relaxed);
+                    return Ok(v);
+                }
                 Err(e) => {
                     last_err = Some(e);
                     failed.push(pick);
@@ -205,7 +216,11 @@ impl FleetClient {
 pub struct ReplicaMetrics {
     /// Slot index.
     pub replica: usize,
-    /// Requests the dispatcher sent this slot.
+    /// Dispatch attempts routed to this slot, including attempts that
+    /// failed against a retiring replica and were re-dispatched.
+    pub attempts: u64,
+    /// Requests this slot completed (`attempts - dispatched` is the
+    /// reload-race retry count; always 0 outside a reload window).
     pub dispatched: u64,
     /// The replica server's own report.
     pub report: MetricsReport,
@@ -283,6 +298,7 @@ impl FleetServer {
             .enumerate()
             .map(|(i, s)| ReplicaMetrics {
                 replica: i,
+                attempts: s.attempts.load(Ordering::Relaxed),
                 dispatched: s.dispatched.load(Ordering::Relaxed),
                 report: s.backend.metrics(),
             })
@@ -350,6 +366,43 @@ impl FleetServer {
         Ok(retired)
     }
 
+    /// Grow or shrink the live replica count to `r` (≥ 1) using the same
+    /// slot machinery as [`FleetServer::reload`]: growth pushes fresh
+    /// replicas of the current firmware generation; shrinkage retires the
+    /// highest slots one at a time, each draining *outside* the slots lock
+    /// so the remaining replicas keep serving throughout (in-flight
+    /// requests on a retiring replica are answered, and a request racing
+    /// the retirement re-dispatches like a reload race). Returns the final
+    /// metrics of every retired replica.
+    pub fn scale_to(&self, r: usize) -> Result<Vec<MetricsReport>> {
+        ensure!(r >= 1, "fleet needs at least one replica");
+        let fw = self.firmware();
+        let mut retired = Vec::new();
+        loop {
+            let shrink = {
+                let mut slots = self.inner.slots.write().unwrap();
+                ensure!(!slots.is_empty(), "fleet is shut down");
+                if slots.len() < r {
+                    let fresh = ReplicaSlot::new(ReplicaBackend::spawn(
+                        &fw,
+                        self.max_wait,
+                        self.queue_depth,
+                    ));
+                    slots.push(fresh);
+                    None
+                } else if slots.len() > r {
+                    Some(slots.pop().expect("len > r >= 1"))
+                } else {
+                    break;
+                }
+            };
+            if let Some(old) = shrink {
+                retired.push(old.backend.shutdown());
+            }
+        }
+        Ok(retired)
+    }
+
     /// Verify every replica bit-exactly against the reference oracle:
     /// `samples` random single-sample probes are sent *directly* to each
     /// replica (bypassing dispatch, so no replica can hide) and every
@@ -412,6 +465,7 @@ impl FleetServer {
             .enumerate()
             .map(|(i, s)| ReplicaMetrics {
                 replica: i,
+                attempts: s.attempts.load(Ordering::Relaxed),
                 dispatched: s.dispatched.load(Ordering::Relaxed),
                 report: s.backend.shutdown(),
             })
@@ -533,6 +587,89 @@ mod tests {
         // The new generation is what verify checks against.
         fleet.verify_bit_exact(&oracle("fleet_v2"), 2, 7).unwrap();
         fleet.shutdown();
+    }
+
+    #[test]
+    fn dispatch_counters_separate_attempts_from_completions() {
+        // Regression for retry-inflated `dispatched`: under reload churn a
+        // request that races a retiring replica is retried elsewhere, and
+        // only the replica that *answered* may count it as served.
+        let v1 = pipeline("fleet_cnt_v1", 1, 2);
+        let v2 = pipeline("fleet_cnt_v2", 1, 2);
+        let fleet = FleetServer::spawn(v1, 2, Duration::from_millis(1), 32).unwrap();
+        let requests = 48u64;
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let c = fleet.client();
+                scope.spawn(move || {
+                    for i in 0..requests / 4 {
+                        c.infer(vec![((t + i) % 7) as i32; 24]).unwrap();
+                    }
+                });
+            }
+            // Two reloads while traffic flows, to provoke retry races.
+            let f = &fleet;
+            let v2 = v2.clone();
+            scope.spawn(move || {
+                f.reload(v2.clone()).unwrap();
+                f.reload(v2).unwrap();
+            });
+        });
+        let m = fleet.shutdown();
+        let attempts: u64 = m.replicas.iter().map(|r| r.attempts).sum();
+        let dispatched: u64 = m.replicas.iter().map(|r| r.dispatched).sum();
+        // Completions on the final slots plus requests the retired
+        // generations answered account for every submitted request; the
+        // live-slot completion count alone can never exceed it.
+        assert!(attempts >= dispatched, "attempts {attempts} < completions {dispatched}");
+        assert!(dispatched <= requests);
+        for r in &m.replicas {
+            assert!(
+                r.attempts >= r.dispatched,
+                "replica {}: attempts {} < completions {}",
+                r.replica,
+                r.attempts,
+                r.dispatched
+            );
+        }
+    }
+
+    #[test]
+    fn scale_to_grows_and_shrinks_without_dropping_service() {
+        let fleet =
+            FleetServer::spawn(pipeline("fleet_scale", 1, 2), 1, Duration::from_millis(1), 32)
+                .unwrap();
+        let c = fleet.client();
+        let golden = c.infer(vec![4; 24]).unwrap();
+        // Grow under traffic.
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let c = fleet.client();
+                let golden = &golden;
+                scope.spawn(move || {
+                    for _ in 0..6 {
+                        assert_eq!(&c.infer(vec![4; 24]).unwrap(), golden);
+                    }
+                });
+            }
+            let retired = fleet.scale_to(3).unwrap();
+            assert!(retired.is_empty(), "growth retires nobody");
+        });
+        assert_eq!(fleet.replicas(), 3);
+        // Shrink back; the retired replicas' final metrics come back.
+        let retired = fleet.scale_to(1).unwrap();
+        assert_eq!(retired.len(), 2);
+        assert_eq!(fleet.replicas(), 1);
+        // Still serving, same weights.
+        assert_eq!(c.infer(vec![4; 24]).unwrap(), golden);
+        assert!(fleet.scale_to(0).is_err());
+        let m = fleet.shutdown();
+        assert_eq!(m.replicas.len(), 1);
+        // Every request was answered exactly once somewhere: live-slot
+        // completions + retired-replica requests == all submissions.
+        let live_served: usize = m.merged.requests;
+        let retired_served: usize = retired.iter().map(|r| r.requests).sum();
+        assert_eq!(live_served + retired_served, 1 + 18 + 1);
     }
 
     #[test]

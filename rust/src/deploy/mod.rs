@@ -4,7 +4,7 @@
 //! The compile pipeline answers "how fast is one copy of this model on one
 //! array"; this subsystem answers the production question on top of it —
 //! *how many copies, cut how, batched how, on which arrays, to serve a
-//! target load within a latency budget*. It has two halves:
+//! target load within a latency budget*. It has three parts:
 //!
 //! * [`planner`] — the capacity planner. Given a model, a [`Fleet`]
 //!   description (array count per device generation) and an [`Slo`]
@@ -23,14 +23,21 @@
 //!   drain-and-replace hot reload (the paper's RTP-reload story lifted to
 //!   fleet scope) and replica-by-replica bit-exactness verification
 //!   against [`crate::runtime::ReferenceOracle`].
+//! * [`autoscale`] — the feedback loop. [`Autoscaler`] differences live
+//!   serving snapshots into SLO-burn windows (arrival rate, shed ratio,
+//!   queue depth, p99-over-budget) and decides when to grow or shrink R,
+//!   reusing the planner's costed per-replica rate as its capacity prior
+//!   and the fleet/continuous servers' `scale_to` drain machinery to act.
 //!
 //! An R = 1 / K = 1 plan degenerates to the plain single-array
 //! [`crate::coordinator::Server`] — same firmware bytes, same metrics
 //! shape — so the fleet layer adds no cost until replication is asked for.
 
+pub mod autoscale;
 pub mod fleet;
 pub mod planner;
 
+pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision, SloBurn};
 pub use fleet::{FleetClient, FleetMetricsReport, FleetServer, ReplicaMetrics};
 pub use planner::{plan, DeploymentPlan, PlannerOptions};
 

@@ -110,6 +110,22 @@ impl DeploymentPlan {
     pub fn meets(&self, slo: &Slo) -> bool {
         self.predicted_sps >= slo.target_sps && self.slo_latency_us <= slo.latency_budget_us
     }
+
+    /// Modeled sustained rate of one replica, samples/s.
+    pub fn per_replica_sps(&self) -> f64 {
+        self.batch as f64 * 1e6 / self.interval_us
+    }
+
+    /// Replicas needed for an arrival rate of `sps`, from this plan's
+    /// costed per-replica candidate — the autoscaler's demand target.
+    /// Clamped to `[1, cap]`.
+    pub fn replicas_for_rate(&self, sps: f64, cap: usize) -> usize {
+        let per = self.per_replica_sps();
+        if !per.is_finite() || per <= 0.0 || !sps.is_finite() || sps <= 0.0 {
+            return 1;
+        }
+        ((sps / per).ceil() as usize).clamp(1, cap.max(1))
+    }
 }
 
 /// Arrays a deployment of `r` replicas occupies.
@@ -382,6 +398,25 @@ mod tests {
             assert!(p.meets(&Slo::new(one * 0.2, 100_000.0)));
             assert!(p.queue_depth >= 1);
         }
+    }
+
+    #[test]
+    fn replicas_for_rate_follows_the_costed_candidate() {
+        let json = small_model();
+        let cfg = base_cfg(8);
+        let one = one_replica_sps(&json, &cfg);
+        let slo = Slo::new(one * 0.5, 100_000.0);
+        let fleet = Fleet::homogeneous("vek280", 4);
+        let out = plan(&json, &cfg, &fleet, &slo, &PlannerOptions::default()).unwrap();
+        let best = out.best().unwrap().clone();
+        assert!((best.per_replica_sps() - one).abs() / one < 0.2);
+        let per = best.per_replica_sps();
+        assert_eq!(best.replicas_for_rate(per * 0.3, 64), 1);
+        assert_eq!(best.replicas_for_rate(per * 2.5, 64), 3);
+        // The cap binds; degenerate rates fall back to 1.
+        assert_eq!(best.replicas_for_rate(per * 100.0, 8), 8);
+        assert_eq!(best.replicas_for_rate(0.0, 8), 1);
+        assert_eq!(best.replicas_for_rate(f64::NAN, 8), 1);
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod table2;
 pub mod table3;
 pub mod table4;
 pub mod table5;
+pub mod traffic;
 pub mod zoo;
 
 use anyhow::Result;

@@ -27,6 +27,8 @@ USAGE:
   aie4ml zoo     [--dir <artifacts-dir>] [--force]
   aie4ml bench   [table1|table2|fig3|fig4|table3|table4|table5|all]
   aie4ml serve   <model.json> [--batch N] [--requests N] [--max-wait-us N]
+                 [--trace poisson|bursty|diurnal] [--rate-sps F] [--duration-ms N] [--seed N]
+                 [--replicas R] [--budget-us F] [--queue N] [--autoscale] [--max-replicas N]
   aie4ml info    [device]
 ";
 
@@ -108,6 +110,181 @@ fn print_perf(rep: &PerfReport) {
             format!("{:?}", l.bottleneck)
         );
     }
+}
+
+/// `serve --trace`: open-loop trace-driven serving on the continuous
+/// batcher, with admission-controlled shedding and (optionally) the
+/// SLO-burn autoscaler growing/shrinking the replica pool live.
+fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) -> Result<()> {
+    use aie4ml::coordinator::{
+        AdmissionConfig, AdmissionError, ContinuousPolicy, ContinuousServer,
+    };
+    use aie4ml::deploy::{Autoscaler, AutoscalerConfig};
+    use aie4ml::harness::traffic::{summarize, TraceSpec};
+    use aie4ml::partition::{execute_partitioned, PartitionedFirmware};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::{Duration, Instant};
+
+    let replicas = args.get_usize("replicas", 1)?;
+    let duration = Duration::from_millis(args.get_usize("duration-ms", 1000)? as u64);
+    let seed = args.get_usize("seed", 42)? as u64;
+    let queue = args.get_usize("queue", 1024)?;
+    let max_replicas = args.get_usize("max-replicas", 8)?;
+    let max_wait = Duration::from_micros(args.get_usize("max-wait-us", 200)? as u64);
+    let autoscale = args.switches.contains("autoscale");
+
+    let compiled = compile(json, cfg.clone())?;
+    let fw = compiled.firmware.clone().unwrap();
+    let (lo, hi) = fw.input_quant.dtype.range();
+    let pfw = std::sync::Arc::new(PartitionedFirmware::from_single(fw));
+    let features = pfw.input_features();
+
+    // Calibrate the host batch service time: offered rate and latency
+    // budget default to fractions of the *measured* capacity, so the same
+    // invocation stresses fast and slow machines alike.
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let probe: Vec<i32> = (0..cfg.batch * features).map(|_| rng.gen_i32_in(lo, hi)).collect();
+    let act = Activation::new(cfg.batch, features, probe)?;
+    execute_partitioned(&pfw, &act)?;
+    let t0 = Instant::now();
+    for _ in 0..4 {
+        execute_partitioned(&pfw, &act)?;
+    }
+    let batch_us = t0.elapsed().as_secs_f64() * 1e6 / 4.0;
+    let per_replica_sps = cfg.batch as f64 * 1e6 / batch_us;
+    let rate = match args.flags.get("rate-sps") {
+        Some(v) => v.parse::<f64>().context("--rate-sps must be a number")?,
+        None => 0.9 * replicas.max(1) as f64 * per_replica_sps,
+    };
+    let budget_us = match args.flags.get("budget-us") {
+        Some(v) => v.parse::<f64>().context("--budget-us must be a number")?,
+        None => (24.0 * batch_us).max(5_000.0),
+    };
+
+    let spec = match kind {
+        "poisson" => TraceSpec::poisson(rate, duration, seed),
+        "bursty" => TraceSpec::bursty(rate, duration, 3.0, seed),
+        "diurnal" => TraceSpec::diurnal(rate, duration, 0.5, duration.div_f64(2.0), seed),
+        other => bail!("unknown trace kind '{other}' (want poisson|bursty|diurnal)"),
+    };
+    let events = spec.generate();
+    let s = summarize(&events, duration, Duration::from_millis(50));
+    println!(
+        "trace {kind}: {} events over {:.2} s, mean {:.0}/s, 50 ms peak {:.0}/s",
+        s.events,
+        duration.as_secs_f64(),
+        s.mean_sps,
+        s.peak_sps
+    );
+    println!(
+        "capacity {:.0}/s per replica ({:.0} µs/batch), budget {:.0} µs, R {}{}",
+        per_replica_sps,
+        batch_us,
+        budget_us,
+        replicas,
+        if autoscale { format!(" (autoscaling to ≤{max_replicas})") } else { String::new() }
+    );
+
+    let server = ContinuousServer::spawn(
+        pfw,
+        replicas,
+        ContinuousPolicy {
+            max_wait,
+            admission: AdmissionConfig {
+                queue_capacity: queue,
+                latency_budget_us: Some(0.6 * budget_us),
+            },
+            record_batches: false,
+        },
+    )?;
+    let stop = AtomicBool::new(false);
+    type DriveOutcome = Result<(usize, usize, Vec<usize>)>;
+    let (served, shed, transitions) = std::thread::scope(|scope| -> DriveOutcome {
+        let server_ref = &server;
+        let stop_ref = &stop;
+        let scaler_thread = autoscale.then(|| {
+            let mut scaler = Autoscaler::from_rate(
+                per_replica_sps,
+                budget_us,
+                AutoscalerConfig { max_replicas, ..Default::default() },
+            );
+            scope.spawn(move || {
+                let mut transitions = Vec::new();
+                while !stop_ref.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(10));
+                    let snap = server_ref.snapshot();
+                    if let Some(to) = scaler.observe(Instant::now(), &snap).target() {
+                        if server_ref.scale_to(to).is_ok() {
+                            transitions.push(to);
+                        }
+                    }
+                }
+                transitions
+            })
+        });
+        let client = server.client();
+        let mut tickets = Vec::with_capacity(events.len());
+        let mut shed = 0usize;
+        let mut failure = None;
+        let start = Instant::now();
+        for &at in &events {
+            loop {
+                let now = start.elapsed();
+                if now >= at {
+                    break;
+                }
+                let gap = at - now;
+                if gap > Duration::from_micros(200) {
+                    std::thread::sleep(gap - Duration::from_micros(150));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+            let x: Vec<i32> = (0..features).map(|_| rng.gen_i32_in(lo, hi)).collect();
+            match client.submit(x) {
+                Ok(t) => tickets.push(t),
+                Err(AdmissionError::QueueFull { .. } | AdmissionError::DeadlineRisk { .. }) => {
+                    shed += 1;
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        let served = tickets.len();
+        let mut wait_err = None;
+        for t in tickets {
+            if let Err(e) = t.wait() {
+                wait_err.get_or_insert(e);
+            }
+        }
+        // The scaler thread must see the stop flag before any early
+        // return, or scope teardown would join it forever.
+        stop.store(true, Ordering::Relaxed);
+        if let Some(e) = failure {
+            bail!("admission rejected a well-formed request: {e}");
+        }
+        if let Some(e) = wait_err {
+            return Err(e);
+        }
+        let transitions = match scaler_thread {
+            Some(h) => h.join().expect("autoscaler thread"),
+            None => Vec::new(),
+        };
+        Ok((served, shed, transitions))
+    })?;
+    let final_r = server.replicas();
+    let (m, a) = server.shutdown();
+    let mut trajectory = vec![replicas.to_string()];
+    trajectory.extend(transitions.iter().map(|r| r.to_string()));
+    println!(
+        "served {served} / shed {shed} ({} queue-full, {} deadline-risk)  \
+         p50 {:.1} µs  p99 {:.1} µs",
+        a.shed_queue_full, a.shed_deadline, m.p50_latency_us, m.p99_latency_us
+    );
+    println!("replicas: {} (final {final_r})", trajectory.join(" -> "));
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -433,10 +610,14 @@ fn main() -> Result<()> {
             println!("{out}");
         }
         "serve" => {
-            let args = Args::parse(rest, &[])?;
+            let args = Args::parse(rest, &["autoscale"])?;
             let model_path = args.positional.first().context("missing <model.json>")?;
             let json = JsonModel::from_file(model_path)?;
             let cfg = load_config(&args, 16)?;
+            if let Some(kind) = args.flags.get("trace") {
+                serve_trace(&args, &json, cfg, kind)?;
+                return Ok(());
+            }
             let requests = args.get_usize("requests", 256)?;
             let max_wait_us = args.get_usize("max-wait-us", 200)?;
             let compiled = compile(&json, cfg)?;

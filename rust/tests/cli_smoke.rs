@@ -173,6 +173,51 @@ fn cli_deploy_plans_and_verifies_fleet() {
 }
 
 #[test]
+fn cli_serve_trace_autoscales() {
+    // Trace-driven serving is reachable from the CLI: a short bursty
+    // trace on the continuous batcher with the autoscaler enabled prints
+    // the served/shed split and the replica trajectory.
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_model(&dir);
+    let Some(out) = run(&[
+        "serve",
+        model.to_str().unwrap(),
+        "--batch",
+        "4",
+        "--trace",
+        "bursty",
+        "--duration-ms",
+        "200",
+        "--seed",
+        "5",
+        "--autoscale",
+        "--max-replicas",
+        "3",
+    ]) else {
+        return;
+    };
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("trace bursty"), "{stdout}");
+    assert!(stdout.contains("served"), "{stdout}");
+    assert!(stdout.contains("replicas:"), "{stdout}");
+
+    // Unknown trace kinds are diagnosed, not silently defaulted.
+    let out = run(&[
+        "serve",
+        model.to_str().unwrap(),
+        "--trace",
+        "lumpy",
+        "--duration-ms",
+        "10",
+    ])
+    .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown trace kind"), "{stderr}");
+}
+
+#[test]
 fn cli_info_devices() {
     if bin().is_none() {
         eprintln!("skipping: aie4ml binary not built (run `cargo build` first)");

@@ -13,8 +13,9 @@
 #   make clippy     clippy over every target, warnings are errors (what CI runs)
 #   make bench      regenerate every paper table/figure with timings
 #   make bench-smoke single-iteration run of the fig3 placement,
-#                   partition-scaling, deploy-scaling, concat-tiling and
-#                   load-harness benches (what CI's bench smoke job runs)
+#                   partition-scaling, deploy-scaling, concat-tiling,
+#                   load-harness and compile-throughput benches (what
+#                   CI's bench smoke job runs)
 
 CARGO ?= cargo
 PY ?= python3
@@ -51,6 +52,7 @@ bench-smoke:
 	$(CARGO) bench --bench deploy_scaling -- --smoke
 	$(CARGO) bench --bench concat_tiling -- --smoke
 	$(CARGO) bench --bench load_harness -- --smoke
+	$(CARGO) bench --bench compile_throughput -- --smoke
 
 clean:
 	$(CARGO) clean

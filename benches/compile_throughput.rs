@@ -1,0 +1,172 @@
+//! Bench: compile-in-the-loop throughput — the firmware cache and the
+//! interval-balancing cut DP, measured end to end.
+//!
+//! Part 1 times the deployment planner's full candidate sweep (device x
+//! batch x K, including the cut DP's slice compiles) cold against a fresh
+//! `FirmwareCache`, then re-plans against the warm cache. The re-plan is
+//! the autoscaler's steady-state path, so it must be at least 5x faster
+//! than the cold sweep — asserted, not just reported.
+//!
+//! Part 2 sweeps every zoo model at K = 2 and compares the interval-
+//! balanced cuts against the MAC-balancing proxy: the modeled pipeline
+//! interval must never be worse, and at least one model (`funnel_mlp`,
+//! whose narrow waist the MAC proxy places the cut before) must improve
+//! strictly.
+//!
+//! Emits a JSON summary on stdout after the human-readable tables.
+//! `--smoke` narrows the planner sweep to one batch (CI's bench smoke job).
+
+use std::time::Instant;
+
+use aie4ml::cache::FirmwareCache;
+use aie4ml::deploy::{plan_with, Fleet, PlannerOptions, Slo};
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::zoo::zoo_models;
+use aie4ml::partition::{
+    analyze_pipeline, choose_cuts_by_macs, choose_cuts_explained, compile_partitioned_at,
+    cut_candidates,
+};
+use aie4ml::sim::engine::EngineModel;
+use aie4ml::util::json::{obj, Value};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // ---- Part 1: cold vs warm planner sweep --------------------------------
+    let (json, batch) =
+        zoo_models().into_iter().find(|(m, _)| m.name == "mlp7").expect("zoo has mlp7");
+    let mut cfg = CompileConfig::default();
+    cfg.batch = batch;
+    let fleet = Fleet::homogeneous("vek280", 4);
+    let slo = Slo::new(1.0, 1e9); // trivially feasible: the sweep cost is what we time
+    let mut opts = PlannerOptions::default();
+    if !smoke {
+        opts.batches = vec![batch / 2, batch];
+    }
+
+    let cache = FirmwareCache::new();
+    let t = Instant::now();
+    let cold_out = plan_with(&json, &cfg, &fleet, &slo, &opts, &cache).expect("cold plan");
+    let cold_us = t.elapsed().as_secs_f64() * 1e6;
+    let cold_stats = cache.stats();
+
+    let t = Instant::now();
+    let warm_out = plan_with(&json, &cfg, &fleet, &slo, &opts, &cache).expect("warm plan");
+    let warm_us = t.elapsed().as_secs_f64() * 1e6;
+    let warm_stats = cache.stats();
+
+    let speedup = cold_us / warm_us.max(1e-9);
+    println!("compile throughput — {} batch {batch}, fleet 4x vek280\n", json.name);
+    println!("  cold sweep: {cold_us:>10.0} us  ({cold_stats})");
+    println!("  warm sweep: {warm_us:>10.0} us  ({warm_stats})");
+    println!("  speedup:    {speedup:>10.1}x");
+    assert!(
+        warm_stats.misses == cold_stats.misses,
+        "warm re-plan must be all cache hits ({warm_stats})"
+    );
+    let (cb, wb) = (cold_out.best().expect("feasible"), warm_out.best().expect("feasible"));
+    assert_eq!((cb.k, cb.r, cb.batch), (wb.k, wb.r, wb.batch), "warm plan must match cold");
+    assert!(
+        cb.interval_us.to_bits() == wb.interval_us.to_bits(),
+        "warm re-plan changed the modeled interval"
+    );
+    assert!(
+        cold_us >= 5.0 * warm_us,
+        "warm re-plan only {speedup:.1}x faster than cold ({cold_us:.0} us vs {warm_us:.0} us)"
+    );
+
+    // ---- Part 2: interval cuts vs the MAC proxy across the zoo -------------
+    println!("\ncuts quality at K = 2 — interval DP vs MAC balancing\n");
+    println!(
+        "{:>16} {:>6} {:>14} {:>14} {:>8}  cuts",
+        "model", "cands", "interval cyc", "mac cyc", "delta"
+    );
+    let engine = EngineModel::default();
+    let cuts_cache = FirmwareCache::new();
+    let mut rows: Vec<Value> = Vec::new();
+    let mut improved = 0usize;
+    for (zm, zbatch) in zoo_models() {
+        let candidates = cut_candidates(&zm);
+        if candidates.is_empty() {
+            println!("{:>16} {:>6} (uncuttable, skipped)", zm.name, 0);
+            continue;
+        }
+        let mut zcfg = CompileConfig::default();
+        zcfg.batch = zbatch;
+        let plan = choose_cuts_explained(&zm, &zcfg, &candidates, 2, &cuts_cache)
+            .expect("interval cuts");
+        let mac_cuts = choose_cuts_by_macs(&zm, &candidates, 2).expect("mac cuts");
+        let int_pm = compile_partitioned_at(&zm, &zcfg, &candidates, &plan.cuts, &cuts_cache)
+            .expect("interval cuts compile");
+        let mac_pm = match compile_partitioned_at(&zm, &zcfg, &candidates, &mac_cuts, &cuts_cache)
+        {
+            Ok(pm) => pm,
+            Err(e) => {
+                // The MAC proxy picked a cut that does not even compile —
+                // an automatic win for the interval DP, but nothing to
+                // compare against.
+                let n = candidates.len();
+                println!("{:>16} {n:>6} (mac cuts do not compile: {e:#})", zm.name);
+                continue;
+            }
+        };
+        let int_perf = analyze_pipeline(&int_pm.firmware, &engine);
+        let mac_perf = analyze_pipeline(&mac_pm.firmware, &engine);
+        assert!(
+            int_perf.interval_cycles <= mac_perf.interval_cycles + 1e-6,
+            "{}: interval cuts {:?} model {} cyc, worse than mac cuts {:?} at {} cyc",
+            zm.name,
+            plan.cuts,
+            int_perf.interval_cycles,
+            mac_cuts,
+            mac_perf.interval_cycles
+        );
+        let strictly_better = int_perf.interval_cycles < mac_perf.interval_cycles - 1e-6;
+        improved += strictly_better as usize;
+        println!(
+            "{:>16} {:>6} {:>14.0} {:>14.0} {:>7.1}%  {:?} vs {:?}",
+            zm.name,
+            candidates.len(),
+            int_perf.interval_cycles,
+            mac_perf.interval_cycles,
+            100.0 * (mac_perf.interval_cycles - int_perf.interval_cycles)
+                / mac_perf.interval_cycles,
+            plan.cuts,
+            mac_cuts
+        );
+        rows.push(obj([
+            ("model", zm.name.as_str().into()),
+            ("candidates", candidates.len().into()),
+            ("interval_cycles", int_perf.interval_cycles.into()),
+            ("mac_interval_cycles", mac_perf.interval_cycles.into()),
+            ("cuts", plan.cuts.clone().into()),
+            ("mac_cuts", mac_cuts.into()),
+            ("used_macs_fallback", plan.used_macs_fallback.into()),
+            ("strictly_better", strictly_better.into()),
+        ]));
+    }
+    assert!(
+        improved >= 1,
+        "interval balancing must strictly beat the MAC proxy on at least one zoo model"
+    );
+    println!("\n{improved} model(s) strictly improved; cut-slice cache: {}", cuts_cache.stats());
+
+    let summary = obj([
+        ("bench", "compile_throughput".into()),
+        ("smoke", smoke.into()),
+        (
+            "planner",
+            obj([
+                ("model", json.name.as_str().into()),
+                ("cold_us", cold_us.into()),
+                ("warm_us", warm_us.into()),
+                ("speedup", speedup.into()),
+                ("cold_compiles", cold_stats.misses.into()),
+                ("warm_hits", (warm_stats.hits - cold_stats.hits).into()),
+            ]),
+        ),
+        ("cuts", Value::Array(rows)),
+        ("improved_models", improved.into()),
+    ]);
+    println!("\n{}", summary.to_string_compact());
+}

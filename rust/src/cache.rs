@@ -1,0 +1,403 @@
+//! Content-addressed firmware cache: memoized 7-pass compiles.
+//!
+//! Compile-in-the-loop partitioning ([`crate::partition::choose_cuts`]),
+//! the deploy planner's (device group × batch × K) candidate sweep and any
+//! autoscaler re-planning all evaluate *many* candidate compiles of the
+//! same slices — compile throughput becomes a serving-path latency once
+//! plans are recomputed under live traffic. Compiles are pure functions of
+//! (model structure, [`CompileConfig`], device), so this module caches
+//! them under a structural content hash:
+//!
+//! * the key covers every compile-relevant input — layer payloads
+//!   (weights, bias), shapes, quantizers, DAG wiring (resolved through
+//!   [`JsonModel::effective_inputs`], so chain-default and explicit wiring
+//!   hash identically) and the canonical [`CompileConfig::to_json_string`]
+//!   serialization (which includes the target device);
+//! * the **model name is excluded**: a partition slice compiled while the
+//!   cut DP scored candidates is byte-identical firmware to the same slice
+//!   compiled as `model.p0` later, so a hit rehydrates the cached
+//!   [`Model`] under the requested name;
+//! * failures are cached too — an over-capacity K = 1 candidate rejected
+//!   once is rejected from cache on every later sweep;
+//! * cold compiles fan out across a bounded thread pool
+//!   ([`FirmwareCache::compile_many`]) — compiles share no state, so the
+//!   planner's candidate sweep and the cut DP's slice grid parallelize
+//!   freely.
+//!
+//! `util::rng`'s FNV-1a seeds names; it is *not* the cache hasher. Keys
+//! here are 128-bit structural digests over length-delimited field streams
+//! (two independently-seeded FNV-64 lanes, one with positional rotation),
+//! so accidental collisions between near-identical models — same shapes,
+//! one weight changed — are not a practical concern.
+
+use crate::frontend::{CompileConfig, JsonModel};
+use crate::passes::{compile, Model};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// 128-bit structural digest of (model structure, config, device).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl std::fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+/// Two independent FNV-64 lanes over a length-delimited byte stream. The
+/// second lane rotates its state per byte, so the lanes decorrelate and
+/// the combined digest behaves as a 128-bit hash for non-adversarial use.
+struct StructuralHasher {
+    a: u64,
+    b: u64,
+}
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl StructuralHasher {
+    fn new() -> StructuralHasher {
+        StructuralHasher { a: 0xcbf2_9ce4_8422_2325, b: 0x6c62_272e_07bb_0142 }
+    }
+
+    fn byte(&mut self, x: u8) {
+        self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+        self.b = (self.b.rotate_left(5) ^ x as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    fn bytes(&mut self, xs: &[u8]) {
+        for &x in xs {
+            self.byte(x);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    /// Length-delimited string (length first, so "ab"+"c" != "a"+"bc").
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    fn finish(&self) -> CacheKey {
+        CacheKey { lo: self.a, hi: self.b }
+    }
+}
+
+/// The structural cache key of one compile request. Everything the 7-pass
+/// pipeline reads goes in **except the model name** — see the module doc.
+pub fn structural_key(json: &JsonModel, cfg: &CompileConfig) -> CacheKey {
+    let mut h = StructuralHasher::new();
+    // The canonical config serialization covers device, batch, placement
+    // weights, tiles_per_layer, extra_outputs and per-layer overrides.
+    h.str(&cfg.to_json_string());
+    let inputs = json.effective_inputs();
+    h.u64(json.layers.len() as u64);
+    for (l, srcs) in json.layers.iter().zip(&inputs) {
+        h.str(&l.name);
+        h.str(&l.ty);
+        h.u64(l.in_features as u64);
+        h.u64(l.out_features as u64);
+        h.byte(l.use_bias as u8);
+        h.byte(l.relu as u8);
+        for q in [&l.quant.input, &l.quant.weight, &l.quant.output] {
+            h.str(&q.dtype);
+            h.u64(q.frac_bits as u64);
+        }
+        h.u64(l.weights.len() as u64);
+        for &w in &l.weights {
+            h.bytes(&w.to_le_bytes());
+        }
+        h.u64(l.bias.len() as u64);
+        for &b in &l.bias {
+            h.bytes(&b.to_le_bytes());
+        }
+        h.u64(srcs.len() as u64);
+        for s in srcs {
+            h.str(s);
+        }
+    }
+    h.finish()
+}
+
+/// Hit/miss counters of a cache (hits + misses = compile requests served).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn requests(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Hit ratio in [0, 1]; 0 for an unused cache.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.requests() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests() as f64
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} hits / {} compiles ({:.0}% hit rate, {} cached)",
+            self.hits,
+            self.requests(),
+            100.0 * self.hit_ratio(),
+            self.entries
+        )
+    }
+}
+
+/// Compiled outcome as stored: successes keep the whole [`Model`]
+/// (placement report, firmware, memtile plans); failures keep the
+/// flattened error text so later requests fail identically without
+/// re-running the pass pipeline.
+type CachedCompile = std::result::Result<Model, String>;
+
+/// The content-addressed firmware cache. Cheap to construct, internally
+/// synchronized — share one per planning session (`&FirmwareCache`
+/// everywhere; wrap in `Arc` to share across threads you spawn yourself).
+#[derive(Default)]
+pub struct FirmwareCache {
+    entries: Mutex<HashMap<CacheKey, CachedCompile>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl FirmwareCache {
+    pub fn new() -> FirmwareCache {
+        FirmwareCache::default()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().unwrap().len(),
+        }
+    }
+
+    /// Rehydrate a cached outcome under the requested identity: the model
+    /// name is the one field outside the key, so a hit renames the clone
+    /// (and its firmware) to what this caller asked for — firmware bytes
+    /// are otherwise identical to a fresh compile.
+    fn rehydrate(entry: &CachedCompile, json: &JsonModel, cfg: &CompileConfig) -> Result<Model> {
+        match entry {
+            Ok(m) => {
+                let mut m = m.clone();
+                m.name = json.name.clone();
+                m.config = cfg.clone();
+                if let Some(fw) = m.firmware.as_mut() {
+                    fw.model_name = json.name.clone();
+                }
+                Ok(m)
+            }
+            Err(msg) => Err(anyhow::anyhow!("{msg}")),
+        }
+    }
+
+    /// Compile `json` under `cfg`, serving from cache when the structural
+    /// key is known. Exactly [`crate::passes::compile`] semantics
+    /// otherwise (including failures, which are cached by content too).
+    pub fn compile(&self, json: &JsonModel, cfg: CompileConfig) -> Result<Model> {
+        let key = structural_key(json, &cfg);
+        if let Some(entry) = self.entries.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Self::rehydrate(entry, json, &cfg);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = compile(json, cfg);
+        let stored: CachedCompile = match &result {
+            Ok(m) => Ok(m.clone()),
+            Err(e) => Err(format!("{e:#}")),
+        };
+        self.entries.lock().unwrap().insert(key, stored);
+        result
+    }
+
+    /// Compile a batch of requests, running the **cold** ones across a
+    /// bounded thread pool (compiles are pure; results land in the cache
+    /// exactly as sequential [`FirmwareCache::compile`] calls would).
+    /// Returns one outcome per request, in order.
+    pub fn compile_many(&self, jobs: &[(JsonModel, CompileConfig)]) -> Vec<Result<Model>> {
+        let keys: Vec<CacheKey> = jobs.iter().map(|(j, c)| structural_key(j, c)).collect();
+        // Unique keys not yet cached, each with one representative job.
+        let mut cold: Vec<usize> = Vec::new();
+        {
+            let entries = self.entries.lock().unwrap();
+            let mut seen: HashMap<CacheKey, ()> = HashMap::new();
+            for (i, k) in keys.iter().enumerate() {
+                if !entries.contains_key(k) && seen.insert(*k, ()).is_none() {
+                    cold.push(i);
+                }
+            }
+        }
+        self.misses.fetch_add(cold.len(), Ordering::Relaxed);
+        self.hits.fetch_add(jobs.len() - cold.len(), Ordering::Relaxed);
+        if !cold.is_empty() {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(1, 8)
+                .min(cold.len());
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let slot = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(&i) = cold.get(slot) else { break };
+                        let (json, cfg) = &jobs[i];
+                        let result = compile(json, cfg.clone());
+                        let stored: CachedCompile = match result {
+                            Ok(m) => Ok(m),
+                            Err(e) => Err(format!("{e:#}")),
+                        };
+                        self.entries.lock().unwrap().insert(keys[i], stored);
+                    });
+                }
+            });
+        }
+        let entries = self.entries.lock().unwrap();
+        jobs.iter()
+            .zip(&keys)
+            .map(|((json, cfg), key)| {
+                let entry = entries.get(key).expect("every job compiled above");
+                Self::rehydrate(entry, json, cfg)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dtype;
+    use crate::harness::models::{mlp_spec, synth_model};
+
+    fn cfg(batch: usize) -> CompileConfig {
+        let mut c = CompileConfig::default();
+        c.batch = batch;
+        c.tiles_per_layer = Some(2);
+        c
+    }
+
+    #[test]
+    fn key_ignores_name_but_sees_everything_else() {
+        let a = synth_model("cache_a", &mlp_spec(&[32, 16, 8], Dtype::I8), 6);
+        let mut renamed = a.clone();
+        renamed.name = "cache_b".into();
+        let c = cfg(4);
+        assert_eq!(structural_key(&a, &c), structural_key(&renamed, &c));
+
+        // One weight flipped -> different key.
+        let mut tweaked = a.clone();
+        tweaked.layers[0].weights[0] = tweaked.layers[0].weights[0].wrapping_add(1);
+        assert_ne!(structural_key(&a, &c), structural_key(&tweaked, &c));
+
+        // Different batch, device or extra outputs -> different key.
+        assert_ne!(structural_key(&a, &c), structural_key(&a, &cfg(8)));
+        let mut dev = cfg(4);
+        dev.device = "vek385".into();
+        assert_ne!(structural_key(&a, &c), structural_key(&a, &dev));
+        let mut extra = cfg(4);
+        extra.extra_outputs = vec!["fc1".into()];
+        assert_ne!(structural_key(&a, &c), structural_key(&a, &extra));
+    }
+
+    #[test]
+    fn key_resolves_chain_default_wiring() {
+        // A chain with empty `inputs` and the same chain wired explicitly
+        // compile identically, so they must share a key.
+        let implicit = synth_model("cache_wire", &mlp_spec(&[24, 16, 8], Dtype::I8), 6);
+        let mut explicit = implicit.clone();
+        explicit.layers[1].inputs = vec!["fc1".into()];
+        assert_eq!(structural_key(&implicit, &cfg(4)), structural_key(&explicit, &cfg(4)));
+    }
+
+    #[test]
+    fn hit_rehydrates_under_the_requested_name() {
+        let a = synth_model("cache_hit_a", &mlp_spec(&[32, 16], Dtype::I8), 6);
+        let mut b = a.clone();
+        b.name = "cache_hit_b".into();
+        let cache = FirmwareCache::new();
+        let ma = cache.compile(&a, cfg(4)).unwrap();
+        let mb = cache.compile(&b, cfg(4)).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.entries), (1, 1, 1));
+        assert_eq!(mb.name, "cache_hit_b");
+        assert_eq!(mb.firmware.as_ref().unwrap().model_name, "cache_hit_b");
+        // Identical apart from the identity fields.
+        let ja = ma.firmware.unwrap().to_json().unwrap();
+        let jb = mb.firmware.unwrap().to_json().unwrap();
+        assert_eq!(ja.replace("cache_hit_a", "X"), jb.replace("cache_hit_b", "X"));
+    }
+
+    #[test]
+    fn failures_are_cached() {
+        let mut m = synth_model("cache_fail", &mlp_spec(&[32, 16], Dtype::I8), 6);
+        m.layers.clear(); // empty model: validation fails in to_graph
+        let cache = FirmwareCache::new();
+        let e1 = cache.compile(&m, cfg(4)).unwrap_err().to_string();
+        let e2 = cache.compile(&m, cfg(4)).unwrap_err().to_string();
+        assert_eq!(e1, e2);
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits), (1, 1));
+    }
+
+    #[test]
+    fn compile_many_deduplicates_and_parallelizes() {
+        let a = synth_model("cache_many_a", &mlp_spec(&[32, 16, 8], Dtype::I8), 6);
+        let b = synth_model("cache_many_b", &mlp_spec(&[48, 24, 8], Dtype::I8), 6);
+        let mut a_alias = a.clone();
+        a_alias.name = "cache_many_alias".into();
+        let cache = FirmwareCache::new();
+        let jobs = vec![
+            (a.clone(), cfg(4)),
+            (b.clone(), cfg(4)),
+            (a_alias.clone(), cfg(4)), // same content as `a`
+        ];
+        let out = cache.compile_many(&jobs);
+        assert_eq!(out.len(), 3);
+        for (i, r) in out.iter().enumerate() {
+            assert!(r.is_ok(), "job {i} failed: {:?}", r.as_ref().err());
+        }
+        assert_eq!(out[2].as_ref().unwrap().name, "cache_many_alias");
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.entries), (2, 1, 2));
+        // A second sweep is all hits.
+        let again = cache.compile_many(&jobs);
+        assert!(again.iter().all(|r| r.is_ok()));
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits), (2, 4));
+    }
+
+    #[test]
+    fn cached_compile_is_byte_identical_to_fresh() {
+        // Determinism gate: same key -> byte-identical firmware.json, and
+        // the cache round trip changes nothing against a fresh compile.
+        let m = synth_model("cache_det", &mlp_spec(&[64, 32, 8], Dtype::I8), 6);
+        let fresh = crate::passes::compile(&m, cfg(8)).unwrap();
+        let cache = FirmwareCache::new();
+        let cold = cache.compile(&m, cfg(8)).unwrap();
+        let warm = cache.compile(&m, cfg(8)).unwrap();
+        let j = |model: &Model| model.firmware.as_ref().unwrap().to_json().unwrap();
+        assert_eq!(j(&fresh), j(&cold));
+        assert_eq!(j(&cold), j(&warm));
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

@@ -84,13 +84,16 @@ pub struct MergePlan {
     pub mem_col: usize,
     /// One producer-side write tiler per input edge, in input order.
     pub write_tilers: Vec<Tiler2d>,
-    /// **Offset tilers** (`Concat` only): when non-empty (one per input, in
-    /// input order), every producer writes its feature band directly into
-    /// the single dense consumer's {M, K} read-tile buffer — this plan then
-    /// describes no buffer of its own (the merge's bytes live in the
-    /// consumer's input plan) and the staged row-major copy is gone. Empty
-    /// means the legacy staged path: producers land in this buffer through
-    /// `write_tilers` and consumers re-read it row-major.
+    /// **Offset tilers** (`Concat` only): when non-empty, every producer
+    /// writes its feature band directly into each dense consumer's {M, K}
+    /// read-tile buffer — this plan then describes no buffer of its own
+    /// (the merge's bytes live in the consumers' input plans) and the
+    /// staged row-major copy is gone. The layout is consumer-major: one
+    /// group of `inputs.len()` tilers per consumer, in consumer order, so
+    /// `len == n_inputs × n_consumers` and group `c` is
+    /// `offset_tilers[c*n_inputs..(c+1)*n_inputs]`. Empty means the legacy
+    /// staged path: producers land in this buffer through `write_tilers`
+    /// and consumers re-read it row-major.
     pub offset_tilers: Vec<OffsetTiler>,
     /// Merged activation width.
     pub features: usize,
@@ -631,40 +634,60 @@ impl Firmware {
                         }
                     }
                     if m.plan.offset_tiled() {
-                        // Offset tilers: Concat only, one per input, bands
-                        // tiling the merged width exactly in input order.
+                        // Offset tilers: Concat only, consumer-major groups
+                        // of one tiler per input, each group's bands tiling
+                        // the merged width exactly in input order, one
+                        // group per dense consumer stage.
                         ensure!(
                             m.op == MergeOp::Concat,
                             "merge '{}': offset tilers on a non-concat merge",
                             m.name
                         );
                         ensure!(
-                            m.plan.offset_tilers.len() == s.inputs.len(),
-                            "merge '{}': {} offset tilers for {} inputs",
+                            m.plan.offset_tilers.len() % s.inputs.len() == 0,
+                            "merge '{}': {} offset tilers not a multiple of {} inputs",
                             m.name,
                             m.plan.offset_tilers.len(),
                             s.inputs.len()
                         );
-                        let mut off = 0usize;
-                        for (t, &w) in m.plan.offset_tilers.iter().zip(&widths) {
+                        let consumers = self.stage_consumers(i);
+                        let groups = m.plan.offset_tilers.len() / s.inputs.len();
+                        ensure!(
+                            groups == consumers.len(),
+                            "merge '{}': {} offset-tiler groups for {} consumers",
+                            m.name,
+                            groups,
+                            consumers.len()
+                        );
+                        for &c in &consumers {
                             ensure!(
-                                t.offset == off && t.stride == m.features,
-                                "merge '{}': offset tiler band ({}, {}) misplaced \
-                                 (expected offset {off}, stride {})",
+                                matches!(self.stages[c].op, StageRef::Layer(_)),
+                                "merge '{}': offset-tiled consumer stage {c} is not dense",
+                                m.name
+                            );
+                        }
+                        for group in m.plan.offset_tilers.chunks(s.inputs.len()) {
+                            let mut off = 0usize;
+                            for (t, &w) in group.iter().zip(&widths) {
+                                ensure!(
+                                    t.offset == off && t.stride == m.features,
+                                    "merge '{}': offset tiler band ({}, {}) misplaced \
+                                     (expected offset {off}, stride {})",
+                                    m.name,
+                                    t.offset,
+                                    t.stride,
+                                    m.features
+                                );
+                                off += w;
+                            }
+                            ensure!(
+                                off == m.features,
+                                "merge '{}': offset bands cover {} of {} features",
                                 m.name,
-                                t.offset,
-                                t.stride,
+                                off,
                                 m.features
                             );
-                            off += w;
                         }
-                        ensure!(
-                            off == m.features,
-                            "merge '{}': offset bands cover {} of {} features",
-                            m.name,
-                            off,
-                            m.features
-                        );
                     } else {
                         // Staged merges own the buffer: its shard must fit
                         // one memory tile (offset-tiled merges have no

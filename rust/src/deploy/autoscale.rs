@@ -26,8 +26,12 @@
 //!   sheds, shallow queue, p99 comfortably inside the budget), and every
 //!   transition starts a cooldown so the fleet does not flap.
 
-use super::planner::DeploymentPlan;
+use super::planner::{plan_with, DeploymentPlan, PlannerOptions};
+use super::{Fleet, PlanOutcome, Slo};
+use crate::cache::{CacheStats, FirmwareCache};
 use crate::coordinator::{AdmissionReport, ServingSnapshot};
+use crate::frontend::{CompileConfig, JsonModel};
+use anyhow::Result;
 use std::time::{Duration, Instant};
 
 /// Autoscaler knobs.
@@ -106,6 +110,35 @@ impl ScaleDecision {
     }
 }
 
+/// Everything needed to re-run the capacity planner under live traffic,
+/// with the content-addressed firmware cache that makes doing so cheap:
+/// the first plan pays the candidate compiles, every re-plan at a new
+/// observed rate is almost entirely cache hits (only the rate math and
+/// the ranking change).
+pub struct ReplanContext {
+    json: JsonModel,
+    base: CompileConfig,
+    fleet: Fleet,
+    opts: PlannerOptions,
+    cache: FirmwareCache,
+}
+
+impl ReplanContext {
+    pub fn new(
+        json: JsonModel,
+        base: CompileConfig,
+        fleet: Fleet,
+        opts: PlannerOptions,
+    ) -> ReplanContext {
+        ReplanContext { json, base, fleet, opts, cache: FirmwareCache::new() }
+    }
+
+    /// Compile/hit counters of the shared cache across every plan so far.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
 /// The autoscaler. Owns the previous-window baselines; one instance per
 /// served deployment.
 pub struct Autoscaler {
@@ -116,6 +149,9 @@ pub struct Autoscaler {
     plan_r: Option<usize>,
     budget_us: f64,
     cfg: AutoscalerConfig,
+    /// Present when the autoscaler may re-run the planner
+    /// ([`Autoscaler::with_replanning`]).
+    replan: Option<ReplanContext>,
     prev_admission: AdmissionReport,
     prev_requests: usize,
     prev_at: Option<Instant>,
@@ -147,6 +183,7 @@ impl Autoscaler {
             plan_r,
             budget_us,
             cfg,
+            replan: None,
             prev_admission: AdmissionReport::default(),
             prev_requests: 0,
             prev_at: None,
@@ -154,9 +191,51 @@ impl Autoscaler {
         }
     }
 
+    /// Arm the autoscaler with a [`ReplanContext`]: [`Autoscaler::replan`]
+    /// may then re-run the full capacity planner at a freshly observed
+    /// rate. The context's firmware cache persists across re-plans, so
+    /// only the *first* plan pays candidate compiles.
+    pub fn with_replanning(mut self, ctx: ReplanContext) -> Autoscaler {
+        self.replan = Some(ctx);
+        self
+    }
+
     /// The replication factor the planner predicted, when known.
     pub fn plan_r(&self) -> Option<usize> {
         self.plan_r
+    }
+
+    /// Cache counters of the re-planning context, when armed.
+    pub fn replan_cache_stats(&self) -> Option<CacheStats> {
+        self.replan.as_ref().map(|c| c.cache_stats())
+    }
+
+    /// Re-run the capacity planner at `target_sps` (e.g. the last
+    /// window's observed arrival rate) against the armed
+    /// [`ReplanContext`]. On a feasible outcome the best plan's costed
+    /// per-replica rate and predicted R replace the autoscaler's
+    /// fallbacks, and the plan is returned so the caller can swap
+    /// firmware/batching if the winning candidate changed. Returns
+    /// `Ok(None)` when no context is armed or the target is infeasible
+    /// (the current deployment keeps serving either way). Every compile
+    /// behind this is memoized: re-planning under live traffic costs
+    /// cache lookups, not pass-pipeline runs.
+    pub fn replan(&mut self, target_sps: f64) -> Result<Option<DeploymentPlan>> {
+        let Some(ctx) = self.replan.as_ref() else { return Ok(None) };
+        if !(target_sps.is_finite() && target_sps > 0.0) {
+            return Ok(None);
+        }
+        let slo = Slo::new(target_sps, self.budget_us);
+        let outcome = plan_with(&ctx.json, &ctx.base, &ctx.fleet, &slo, &ctx.opts, &ctx.cache)?;
+        match outcome {
+            PlanOutcome::Feasible(plans) => {
+                let best = plans.into_iter().next().expect("feasible outcome has a plan");
+                self.fallback_sps = best.per_replica_sps();
+                self.plan_r = Some(best.r);
+                Ok(Some(best))
+            }
+            PlanOutcome::Infeasible(_) => Ok(None),
+        }
     }
 
     /// Ingest one snapshot, closing the current observation window.
@@ -288,6 +367,39 @@ mod tests {
             queue_ratio: 0.0,
             per_replica_sps: per_replica,
         }
+    }
+
+    #[test]
+    fn replanning_reuses_the_firmware_cache() {
+        let json = synth_model("autoscale_replan", &mlp_spec(&[32, 16, 8], Dtype::I8), 6);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 8;
+        cfg.tiles_per_layer = Some(2);
+        let plan0 = test_plan();
+        let one = plan0.per_replica_sps();
+        let mut a = Autoscaler::from_plan(&plan0, 100_000.0, AutoscalerConfig::default())
+            .with_replanning(ReplanContext::new(
+                json,
+                cfg,
+                Fleet::homogeneous("vek280", 4),
+                PlannerOptions::default(),
+            ));
+        // First re-plan pays the candidate compiles…
+        let p1 = a.replan(one * 0.5).unwrap().expect("0.5x rate must be plannable");
+        let cold = a.replan_cache_stats().unwrap();
+        assert!(cold.misses > 0);
+        // …every later re-plan (new observed rate) is pure cache hits.
+        let p2 = a.replan(one * 2.5).unwrap().expect("2.5x rate must be plannable");
+        let warm = a.replan_cache_stats().unwrap();
+        assert_eq!(warm.misses, cold.misses, "re-plan recompiled firmware");
+        assert!(warm.hits > cold.hits);
+        // The new plan's sizing lands in the autoscaler's fallbacks.
+        assert!(p2.r >= p1.r);
+        assert_eq!(a.plan_r(), Some(p2.r));
+        // Degenerate targets and unarmed autoscalers are no-ops.
+        assert!(a.replan(f64::NAN).unwrap().is_none());
+        let mut bare = Autoscaler::from_rate(1000.0, 1000.0, AutoscalerConfig::default());
+        assert!(bare.replan(1000.0).unwrap().is_none());
     }
 
     #[test]

@@ -37,9 +37,9 @@ pub mod autoscale;
 pub mod fleet;
 pub mod planner;
 
-pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision, SloBurn};
+pub use autoscale::{Autoscaler, AutoscalerConfig, ReplanContext, ScaleDecision, SloBurn};
 pub use fleet::{FleetClient, FleetMetricsReport, FleetServer, ReplicaMetrics};
-pub use planner::{plan, DeploymentPlan, PlannerOptions};
+pub use planner::{plan, plan_with, DeploymentPlan, PlannerOptions};
 
 use crate::arch::Device;
 use anyhow::{ensure, Result};

@@ -1,9 +1,12 @@
 //! The capacity planner: search deployment candidates against an SLO.
 //!
 //! A candidate is a (device group, firmware batch, partition count K)
-//! triple, compiled through [`crate::partition::compile_partitioned`] so
-//! every score rests on real firmware — the Eq. 2 placement, the mem-tile
-//! plans, the calibrated cycle model — not on peak-TOPS arithmetic. From
+//! triple, compiled through [`crate::partition::compile_partitioned_with`]
+//! against a content-addressed [`crate::cache::FirmwareCache`], so every
+//! score rests on real firmware — the Eq. 2 placement, the mem-tile
+//! plans, the calibrated cycle model — not on peak-TOPS arithmetic —
+//! while fleet groups sharing a device, the cut DP's slice compiles, and
+//! any re-plan of the same model dedupe to one compile each. From
 //! each candidate's [`analyze_pipeline`] report the planner derives:
 //!
 //! * **per-replica rate** — `batch / interval` (one batch per steady-state
@@ -25,9 +28,10 @@
 //! planner reports *why* per candidate ([`Infeasibility`]).
 
 use super::{Fleet, Infeasibility, PlanOutcome, Slo};
+use crate::cache::FirmwareCache;
 use crate::frontend::{CompileConfig, JsonModel};
 use crate::partition::{
-    analyze_pipeline, compile_partitioned, PartitionOptions, PartitionedFirmware,
+    analyze_pipeline, compile_partitioned_with, PartitionOptions, PartitionedFirmware,
 };
 use crate::sim::engine::EngineModel;
 use anyhow::Result;
@@ -151,6 +155,23 @@ pub fn plan(
     slo: &Slo,
     opts: &PlannerOptions,
 ) -> Result<PlanOutcome> {
+    plan_with(json, base, fleet, slo, opts, &FirmwareCache::new())
+}
+
+/// [`plan`] against a caller-owned firmware cache. The sweep's compiles —
+/// the cut DP's candidate slices, every (device group × batch × K)
+/// candidate, and candidates that *fail* to compile — are memoized by
+/// content, so fleet groups sharing a device dedupe to one compile each
+/// and a re-plan of the same model (autoscaler, SLO revision, warm bench)
+/// is almost entirely cache hits.
+pub fn plan_with(
+    json: &JsonModel,
+    base: &CompileConfig,
+    fleet: &Fleet,
+    slo: &Slo,
+    opts: &PlannerOptions,
+    cache: &FirmwareCache,
+) -> Result<PlanOutcome> {
     slo.validate()?;
     fleet.validate()?;
     let batches: Vec<usize> =
@@ -169,7 +190,7 @@ pub fn plan(
                 cfg.device = group.device.clone();
                 cfg.batch = batch;
                 let popts = PartitionOptions { partitions: Some(k), max_partitions: k };
-                let pm = match compile_partitioned(json, cfg, &popts) {
+                let pm = match compile_partitioned_with(json, cfg, &popts, cache) {
                     Ok(pm) => pm,
                     Err(e) => {
                         reasons.push(format!("{tag}: does not compile ({e:#})"));
@@ -417,6 +438,43 @@ mod tests {
         assert_eq!(best.replicas_for_rate(per * 100.0, 8), 8);
         assert_eq!(best.replicas_for_rate(0.0, 8), 1);
         assert_eq!(best.replicas_for_rate(f64::NAN, 8), 1);
+    }
+
+    #[test]
+    fn duplicate_device_groups_and_replans_share_compiles() {
+        // The double-compile fix: a fleet with two groups on the same
+        // device must compile each (batch, K) candidate exactly once, and
+        // a re-plan against the same cache must add zero compiles.
+        let json = small_model();
+        let cfg = base_cfg(8);
+        let one = one_replica_sps(&json, &cfg);
+        let slo = Slo::new(one * 0.5, 100_000.0);
+        let opts = PlannerOptions::default();
+
+        let single = Fleet::homogeneous("vek280", 2);
+        let cache_single = FirmwareCache::new();
+        plan_with(&json, &cfg, &single, &slo, &opts, &cache_single).unwrap();
+        let baseline = cache_single.stats().misses;
+        assert!(baseline > 0);
+
+        let double = Fleet {
+            groups: vec![
+                FleetGroup { device: "vek280".into(), arrays: 2 },
+                FleetGroup { device: "vek280".into(), arrays: 2 },
+            ],
+        };
+        let cache = FirmwareCache::new();
+        let out = plan_with(&json, &cfg, &double, &slo, &opts, &cache).unwrap();
+        assert!(out.best().is_some());
+        let first = cache.stats();
+        assert_eq!(first.misses, baseline, "second identical group recompiled");
+        assert!(first.hits > 0);
+
+        let out2 = plan_with(&json, &cfg, &double, &slo, &opts, &cache).unwrap();
+        assert!(out2.best().is_some());
+        let second = cache.stats();
+        assert_eq!(second.misses, first.misses, "re-plan recompiled");
+        assert!(second.hits > first.hits);
     }
 
     #[test]

@@ -80,6 +80,13 @@ pub fn zoo_models() -> Vec<(JsonModel, usize)> {
         // `models::wide_mlp_2x_config`) it cannot place on one VEK280 and
         // must compile through the multi-array partitioner (K >= 2).
         (wide_mlp_2x_model("wide_mlp_2x"), 16),
+        // Funnel chain: two wide 512x512 layers draining through a 512->32
+        // bottleneck into a narrow tail. MAC balancing cuts after fc1 (the
+        // only split that evens the MAC load) and pays a 512-wide link;
+        // interval balancing finds the 32-wide crossing after fc3 instead —
+        // the zoo's witness that compile-in-the-loop cut choice strictly
+        // beats the MAC proxy. Rust-only, like wide_mlp_2x.
+        (synth_model("funnel_mlp", &layer_specs(&[512, 512, 512, 32, 32], Dtype::I8, Dtype::I8), 6), 16),
     ]
 }
 
@@ -206,7 +213,7 @@ mod tests {
     fn zoo_is_deterministic() {
         let a = zoo_models();
         let b = zoo_models();
-        assert_eq!(a.len(), 7);
+        assert_eq!(a.len(), 8);
         for ((ma, _), (mb, _)) in a.iter().zip(&b) {
             assert_eq!(ma.name, mb.name);
             assert_eq!(ma.layers[0].weights, mb.layers[0].weights);
@@ -222,7 +229,8 @@ mod tests {
                 "mlp_i16i8",
                 "residual_mlp",
                 "concat_mlp",
-                "wide_mlp_2x"
+                "wide_mlp_2x",
+                "funnel_mlp"
             ]
         );
     }
@@ -231,7 +239,7 @@ mod tests {
     fn ensure_zoo_writes_and_reuses() {
         let dir = ScratchDir::new("zoo").unwrap();
         let first = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(first.len(), 7);
+        assert_eq!(first.len(), 8);
         for e in &first {
             assert!(e.model.exists(), "{} missing", e.model.display());
             // Written models parse back into valid exporter JSON.
@@ -241,7 +249,7 @@ mod tests {
         }
         // Second call reuses the manifest (same paths, no rewrite needed).
         let second = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(second.len(), 7);
+        assert_eq!(second.len(), 8);
         assert_eq!(second[0].model, first[0].model);
     }
 
@@ -259,10 +267,11 @@ mod tests {
         )
         .unwrap();
         let entries = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(entries.len(), 7);
+        assert_eq!(entries.len(), 8);
         assert!(entries.iter().any(|e| e.name == "residual_mlp"));
         assert!(entries.iter().any(|e| e.name == "concat_mlp"));
         assert!(entries.iter().any(|e| e.name == "wide_mlp_2x"));
+        assert!(entries.iter().any(|e| e.name == "funnel_mlp"));
         // With the HLO artifact actually present, the same truncated
         // manifest is an AOT set and must be preserved verbatim.
         std::fs::write(

@@ -12,7 +12,12 @@
 //!   emission).
 //! * [`partition`] — the multi-array partitioner: shards a DAG model into
 //!   pipelined partitions (one array each) with typed inter-partition
-//!   links when it exceeds a single array's tile/mem-tile budget.
+//!   links when it exceeds a single array's tile/mem-tile budget. Cut
+//!   selection is compile-in-the-loop: candidate slices are compiled and
+//!   scored by their modeled interval.
+//! * [`cache`] — the content-addressed firmware cache that memoizes
+//!   compiles for the cut search, the deploy planner's candidate sweep,
+//!   and autoscaler re-planning.
 //! * [`sim`] — the simulator substrate: bit-exact functional execution and
 //!   a calibrated cycle-approximate performance model.
 //! * [`runtime`] — bit-exactness oracles: the hermetic pure-Rust reference
@@ -28,6 +33,7 @@
 
 pub mod arch;
 pub mod baselines;
+pub mod cache;
 pub mod codegen;
 pub mod coordinator;
 pub mod deploy;

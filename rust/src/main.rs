@@ -20,6 +20,7 @@ USAGE:
   aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
   aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
   aie4ml partition <model.json> [--config <cfg.json>] [--batch N] [--parts K] [--max-parts K]
+                 [--explain]
   aie4ml deploy  <model.json> --target-sps N --latency-us N [--arrays N] [--device NAME]
                  [--config <cfg.json>] [--batch N] [--batches a,b,..] [--max-parts K]
                  [--max-replicas N] [--verify]
@@ -116,10 +117,11 @@ fn print_perf(rep: &PerfReport) {
 /// batcher, with admission-controlled shedding and (optionally) the
 /// SLO-burn autoscaler growing/shrinking the replica pool live.
 fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) -> Result<()> {
+    use aie4ml::cache::CacheStats;
     use aie4ml::coordinator::{
         AdmissionConfig, AdmissionError, ContinuousPolicy, ContinuousServer,
     };
-    use aie4ml::deploy::{Autoscaler, AutoscalerConfig};
+    use aie4ml::deploy::{Autoscaler, AutoscalerConfig, Fleet, PlannerOptions, ReplanContext};
     use aie4ml::harness::traffic::{summarize, TraceSpec};
     use aie4ml::partition::{execute_partitioned, PartitionedFirmware};
     use std::sync::atomic::{AtomicBool, Ordering};
@@ -198,20 +200,47 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
         },
     )?;
     let stop = AtomicBool::new(false);
-    type DriveOutcome = Result<(usize, usize, Vec<usize>)>;
-    let (served, shed, transitions) = std::thread::scope(|scope| -> DriveOutcome {
+    type DriveOutcome = Result<(usize, usize, Vec<usize>, usize, Option<CacheStats>)>;
+    let (served, shed, transitions, replans, replan_stats) =
+        std::thread::scope(|scope| -> DriveOutcome {
         let server_ref = &server;
         let stop_ref = &stop;
         let scaler_thread = autoscale.then(|| {
+            let mut popts = PlannerOptions::default();
+            popts.max_replicas = max_replicas;
             let mut scaler = Autoscaler::from_rate(
                 per_replica_sps,
                 budget_us,
                 AutoscalerConfig { max_replicas, ..Default::default() },
-            );
+            )
+            .with_replanning(ReplanContext::new(
+                json.clone(),
+                cfg.clone(),
+                Fleet::homogeneous(&cfg.device, max_replicas),
+                popts,
+            ));
+            // Seed the modeled capacity plan before traffic starts: this
+            // pays the candidate compiles once, so re-plans under live
+            // traffic below are firmware-cache hits. An infeasible or
+            // failing plan is non-fatal — serving proceeds on the
+            // host-measured rate either way.
+            let mut replans = 0usize;
+            if let Ok(Some(p)) = scaler.replan(rate) {
+                replans += 1;
+                println!(
+                    "modeled plan at {rate:.0}/s offered: K={} R={} ({:.0} samples/s predicted)",
+                    p.k, p.r, p.predicted_sps
+                );
+            }
             scope.spawn(move || {
                 let mut transitions = Vec::new();
+                let mut tick = 0usize;
                 while !stop_ref.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(10));
+                    tick += 1;
+                    if tick % 32 == 0 && matches!(scaler.replan(rate), Ok(Some(_))) {
+                        replans += 1;
+                    }
                     let snap = server_ref.snapshot();
                     if let Some(to) = scaler.observe(Instant::now(), &snap).target() {
                         if server_ref.scale_to(to).is_ok() {
@@ -219,7 +248,7 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
                         }
                     }
                 }
-                transitions
+                (transitions, replans, scaler.replan_cache_stats())
             })
         });
         let client = server.client();
@@ -268,11 +297,11 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
         if let Some(e) = wait_err {
             return Err(e);
         }
-        let transitions = match scaler_thread {
+        let (transitions, replans, replan_stats) = match scaler_thread {
             Some(h) => h.join().expect("autoscaler thread"),
-            None => Vec::new(),
+            None => (Vec::new(), 0, None),
         };
-        Ok((served, shed, transitions))
+        Ok((served, shed, transitions, replans, replan_stats))
     })?;
     let final_r = server.replicas();
     let (m, a) = server.shutdown();
@@ -284,6 +313,9 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
         a.shed_queue_full, a.shed_deadline, m.p50_latency_us, m.p99_latency_us
     );
     println!("replicas: {} (final {final_r})", trajectory.join(" -> "));
+    if let Some(stats) = replan_stats {
+        println!("re-planner: {replans} modeled plan(s) under live traffic, firmware cache: {stats}");
+    }
     Ok(())
 }
 
@@ -379,8 +411,10 @@ fn main() -> Result<()> {
             // Multi-array pipeline: cut the model into K partitions (auto
             // when --parts is omitted: the smallest K that places), verify
             // the pipeline bit-exactly against the reference oracle, and
-            // report steady-state pipeline performance.
-            let args = Args::parse(rest, &[])?;
+            // report steady-state pipeline performance. Cut selection is
+            // compile-in-the-loop (every candidate slice really compiled,
+            // scored by modeled interval); --explain shows its work.
+            let args = Args::parse(rest, &["explain"])?;
             let model_path = args.positional.first().context("missing <model.json>")?;
             let json = JsonModel::from_file(model_path)
                 .with_context(|| format!("loading {model_path}"))?;
@@ -393,7 +427,11 @@ fn main() -> Result<()> {
                 partitions: parts,
                 max_partitions: args.get_usize("max-parts", 8)?,
             };
-            let pm = aie4ml::partition::compile_partitioned(&json, cfg, &opts)?;
+            let cache = aie4ml::cache::FirmwareCache::new();
+            let t0 = std::time::Instant::now();
+            let pm =
+                aie4ml::partition::compile_partitioned_with(&json, cfg.clone(), &opts, &cache)?;
+            let search_ms = t0.elapsed().as_secs_f64() * 1e3;
             let pfw = &pm.firmware;
             pfw.check_invariants()?;
             println!(
@@ -402,6 +440,45 @@ fn main() -> Result<()> {
                 pfw.k(),
                 pm.cuts
             );
+            println!(
+                "cut search + compile: {search_ms:.1} ms  (firmware cache: {})",
+                cache.stats()
+            );
+            if args.switches.contains("explain") {
+                let candidates = aie4ml::partition::cut_candidates(&json);
+                let plan = aie4ml::partition::choose_cuts_explained(
+                    &json,
+                    &cfg,
+                    &candidates,
+                    pfw.k(),
+                    &cache,
+                )?;
+                if plan.cuts.is_empty() {
+                    println!("cut plan: single partition, nothing to balance");
+                } else {
+                    println!(
+                        "cut plan over {} candidate boundaries:",
+                        candidates.len()
+                    );
+                    println!(
+                        "  interval-balanced cuts {:?}   (MAC-balanced would cut {:?}{})",
+                        plan.cuts,
+                        plan.mac_cuts,
+                        if plan.used_macs_fallback {
+                            "; interval DP fell back to MAC balancing"
+                        } else {
+                            ""
+                        }
+                    );
+                    for (i, c) in plan.segment_cycles.iter().enumerate() {
+                        println!(
+                            "  partition {i}: modeled interval {:.0} cycles/batch{}",
+                            c,
+                            if *c == plan.bottleneck_cycles { "  <- bottleneck" } else { "" }
+                        );
+                    }
+                }
+            }
             for (i, fw) in pfw.partitions.iter().enumerate() {
                 let link = pfw
                     .links
@@ -452,7 +529,7 @@ fn main() -> Result<()> {
             // latency budget, print the ranked plan table, and (--verify)
             // launch the best plan's fleet to prove it bit-exact against
             // the reference oracle.
-            use aie4ml::deploy::{plan, Fleet, PlanOutcome, PlannerOptions, Slo};
+            use aie4ml::deploy::{plan_with, Fleet, PlanOutcome, PlannerOptions, Slo};
             let args = Args::parse(rest, &["verify"])?;
             let model_path = args.positional.first().context("missing <model.json>")?;
             let json = JsonModel::from_file(model_path)
@@ -482,7 +559,15 @@ fn main() -> Result<()> {
                 fleet.total_arrays(),
                 device
             );
-            let plans = match plan(&json, &cfg, &fleet, &slo, &opts)? {
+            let cache = aie4ml::cache::FirmwareCache::new();
+            let t0 = std::time::Instant::now();
+            let outcome = plan_with(&json, &cfg, &fleet, &slo, &opts, &cache)?;
+            let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "candidate sweep: {sweep_ms:.1} ms  (firmware cache: {})",
+                cache.stats()
+            );
+            let plans = match outcome {
                 PlanOutcome::Feasible(plans) => plans,
                 PlanOutcome::Infeasible(diag) => {
                     eprint!("{diag}");

@@ -14,15 +14,28 @@
 //! fan-out or after its fan-in — exactly the synchronization points where
 //! an array-to-array hop is physically a single stream.
 //!
-//! [`choose_cuts`] picks `k − 1` candidates minimizing the heaviest
-//! partition (MACs as the stage-time proxy), the pipeline analog of the
-//! Eq. 2 objective: steady-state interval is governed by the slowest
-//! partition, so the bottleneck weight is what the search must flatten.
-//! Each partition is then compiled with the full pass pipeline, so the
-//! Eq. 2 placement objective is re-optimized per partition.
+//! [`choose_cuts`] is **compile-in-the-loop**: every candidate slice is
+//! compiled through the real 7-pass pipeline (memoized in the
+//! content-addressed [`FirmwareCache`], cold compiles fanned out across a
+//! bounded thread pool) and scored by its *modeled steady-state interval*
+//! plus the cost of the link feeding it — the same numbers
+//! [`super::analyze_pipeline`] reports for the assembled pipeline. A
+//! bottleneck DP then picks the `k − 1` cuts minimizing the slowest
+//! pipeline stage. MAC balancing ([`choose_cuts_by_macs`], the previous
+//! policy) survives as the tie-breaker and the fallback when no slice set
+//! compiles: raw MACs mistrack DMA-bound and merge-heavy models whose
+//! true bottleneck is data movement, which the compiled interval sees.
+//!
+//! The DP builds its slices with exactly the machinery `split_model` uses
+//! ([`super::slice_submodel`] / [`super::slice_config`]), so when the
+//! chosen partitioning is compiled for real, every per-partition compile
+//! is a cache hit — scoring is not paid twice.
 
-use crate::frontend::JsonModel;
-use anyhow::{bail, Result};
+use crate::arch::{Device, Dtype};
+use crate::cache::FirmwareCache;
+use crate::frontend::{CompileConfig, JsonModel};
+use crate::sim::engine::{analyze, EngineModel};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeSet;
 
 /// One legal cut position.
@@ -74,7 +87,7 @@ pub fn cut_candidates(json: &JsonModel) -> Vec<CutCandidate> {
 }
 
 /// MACs per layer (merge layers are free), the per-partition weight the
-/// balance objective sums.
+/// MAC balance objective sums.
 fn layer_macs(json: &JsonModel) -> Vec<u64> {
     json.layers
         .iter()
@@ -88,19 +101,22 @@ fn layer_macs(json: &JsonModel) -> Vec<u64> {
         .collect()
 }
 
-/// Choose `k - 1` cut positions (a subset of `candidates`) minimizing the
-/// heaviest partition's MAC weight — the pipeline bottleneck. Returns the
-/// chosen `after` indices in ascending order. Classic contiguous-partition
-/// DP over the candidate boundaries (tiny inputs; exactness is free).
-pub fn choose_cuts(json: &JsonModel, candidates: &[CutCandidate], k: usize) -> Result<Vec<usize>> {
-    let n = json.layers.len();
+/// The `bounds` array over cut candidates: boundary `i` sits before layer
+/// `bounds[i]`, with the virtual ends before layer 0 and after the last
+/// layer. Segment `(a, b)` spans `layers[bounds[a]..bounds[b]]`.
+fn boundary_positions(json: &JsonModel, candidates: &[CutCandidate]) -> Vec<usize> {
+    std::iter::once(0)
+        .chain(candidates.iter().map(|c| c.after + 1))
+        .chain(std::iter::once(json.layers.len()))
+        .collect()
+}
+
+/// Shared preconditions of both cut policies.
+fn check_arity(json: &JsonModel, candidates: &[CutCandidate], k: usize) -> Result<()> {
     if k == 0 {
         bail!("cannot partition into zero partitions");
     }
-    if k == 1 {
-        return Ok(Vec::new());
-    }
-    if candidates.len() < k - 1 {
+    if k > 1 && candidates.len() < k - 1 {
         bail!(
             "model '{}' has {} legal cut points; {} partitions need {}",
             json.name,
@@ -109,6 +125,24 @@ pub fn choose_cuts(json: &JsonModel, candidates: &[CutCandidate], k: usize) -> R
             k - 1
         );
     }
+    Ok(())
+}
+
+/// Choose `k - 1` cut positions (a subset of `candidates`) minimizing the
+/// heaviest partition's MAC weight. Returns the chosen `after` indices in
+/// ascending order. Classic contiguous-partition DP over the candidate
+/// boundaries (tiny inputs; exactness is free). This is the pre-compile
+/// proxy policy: [`choose_cuts`] uses it as tie-breaker and fallback, and
+/// benches compare against it to measure what interval balancing buys.
+pub fn choose_cuts_by_macs(
+    json: &JsonModel,
+    candidates: &[CutCandidate],
+    k: usize,
+) -> Result<Vec<usize>> {
+    check_arity(json, candidates, k)?;
+    if k == 1 {
+        return Ok(Vec::new());
+    }
     let macs = layer_macs(json);
     let prefix: Vec<u64> = std::iter::once(0)
         .chain(macs.iter().scan(0u64, |acc, &m| {
@@ -116,13 +150,7 @@ pub fn choose_cuts(json: &JsonModel, candidates: &[CutCandidate], k: usize) -> R
             Some(*acc)
         }))
         .collect();
-    // Segment weight between boundary positions (exclusive layer ranges):
-    // boundaries are "after layer b" cut points plus the virtual ends
-    // before layer 0 and after layer n-1.
-    let bounds: Vec<usize> = std::iter::once(0)
-        .chain(candidates.iter().map(|c| c.after + 1))
-        .chain(std::iter::once(n))
-        .collect();
+    let bounds = boundary_positions(json, candidates);
     let seg = |a: usize, b: usize| prefix[bounds[b]] - prefix[bounds[a]];
     let m = bounds.len() - 1; // number of atomic segments
     // dp[j][i]: minimal bottleneck splitting segments 0..i into j parts.
@@ -160,6 +188,222 @@ pub fn choose_cuts(json: &JsonModel, candidates: &[CutCandidate], k: usize) -> R
     Ok(cuts)
 }
 
+/// The interval DP's verdict, with everything `partition --explain` shows.
+#[derive(Debug, Clone)]
+pub struct CutPlan {
+    /// Chosen cut positions (`after` layer indices), ascending.
+    pub cuts: Vec<usize>,
+    /// Modeled bottleneck of the chosen pipeline, cycles/batch: the
+    /// slowest of any partition's steady-state interval or link transfer.
+    pub bottleneck_cycles: f64,
+    /// Per-partition score (its interval max'd with its incoming link
+    /// cost), one entry per partition in pipeline order.
+    pub segment_cycles: Vec<f64>,
+    /// What the MAC-balancing proxy would have chosen, for comparison.
+    pub mac_cuts: Vec<usize>,
+    /// True when no candidate slice set compiled and the MAC cuts were
+    /// returned unchanged (`try_k` then surfaces the real compile error).
+    pub used_macs_fallback: bool,
+}
+
+/// One scored segment: the modeled bottleneck contribution in cycles,
+/// with the segment's MAC weight as lexicographic tie-breaker (equal
+/// modeled intervals fall back to MAC balance, keeping the DP
+/// deterministic where the cycle model cannot distinguish).
+#[derive(Clone, Copy, PartialEq)]
+struct Score {
+    cycles: f64,
+    macs: u64,
+}
+
+impl Score {
+    fn better_than(self, other: Score) -> bool {
+        self.cycles < other.cycles || (self.cycles == other.cycles && self.macs < other.macs)
+    }
+
+    fn bottleneck(self, other: Score) -> Score {
+        Score { cycles: self.cycles.max(other.cycles), macs: self.macs.max(other.macs) }
+    }
+}
+
+/// Is segment `(a, b)` of `m` usable as one part of a `k`-way contiguous
+/// split? (Each part takes ≥ 1 segment; part 1 must start at 0 and part
+/// `k` must end at `m`.) Pruning the slice grid to usable segments keeps
+/// the common K = 2 case down to prefixes and suffixes.
+fn segment_usable(a: usize, b: usize, m: usize, k: usize) -> bool {
+    match (a == 0, b == m) {
+        (true, true) => k == 1,
+        (true, false) => m - b >= k - 1,
+        (false, true) => a >= k - 1,
+        (false, false) => k >= 3 && a + (m - b) >= k - 1,
+    }
+}
+
+/// Compile-in-the-loop cut choice: pick the `k - 1` cuts minimizing the
+/// modeled pipeline bottleneck (see [`choose_cuts_explained`]; this
+/// returns just the cuts).
+pub fn choose_cuts(
+    json: &JsonModel,
+    cfg: &CompileConfig,
+    candidates: &[CutCandidate],
+    k: usize,
+    cache: &FirmwareCache,
+) -> Result<Vec<usize>> {
+    Ok(choose_cuts_explained(json, cfg, candidates, k, cache)?.cuts)
+}
+
+/// Compile-in-the-loop cut choice with the full [`CutPlan`] explanation.
+///
+/// Every usable candidate slice is compiled (through `cache`) and scored
+/// `max(slice interval, incoming link cycles)` — the slice's contribution
+/// to [`super::analyze_pipeline`]'s pipeline interval, computed with the
+/// same formulas (link cost knows whether the slice's input landing is
+/// offset-tiled or staged, from the compiled firmware). A min-max DP over
+/// the scored segments is therefore *exact* for the modeled objective:
+/// the chosen cuts' assembled pipeline interval equals the DP bottleneck,
+/// and no other cut set models faster. Slices that fail to compile score
+/// infinite; if no finite k-way split exists the MAC cuts are returned so
+/// the caller's real compile surfaces the underlying error.
+pub fn choose_cuts_explained(
+    json: &JsonModel,
+    cfg: &CompileConfig,
+    candidates: &[CutCandidate],
+    k: usize,
+    cache: &FirmwareCache,
+) -> Result<CutPlan> {
+    let mac_cuts = choose_cuts_by_macs(json, candidates, k)?;
+    if k == 1 {
+        return Ok(CutPlan {
+            cuts: Vec::new(),
+            bottleneck_cycles: 0.0,
+            segment_cycles: Vec::new(),
+            mac_cuts,
+            used_macs_fallback: false,
+        });
+    }
+    let engine = EngineModel::default();
+    let device = Device::by_name(&cfg.device)
+        .with_context(|| format!("unknown device '{}'", cfg.device))?;
+    let port = device.mem_tile_port_bytes.max(1);
+    let bounds = boundary_positions(json, candidates);
+    let m = bounds.len() - 1;
+    let macs = layer_macs(json);
+    let mac_prefix: Vec<u64> = std::iter::once(0)
+        .chain(macs.iter().scan(0u64, |acc, &w| {
+            *acc += w;
+            Some(*acc)
+        }))
+        .collect();
+    let seg_macs = |a: usize, b: usize| mac_prefix[bounds[b]] - mac_prefix[bounds[a]];
+    // Wire cycles of the link crossing boundary `s` (1..m): one DMA pass
+    // of the crossing activation at memory-tile port rate. Matches
+    // `pipeline::link_transfer_cycles` — a staged landing pays it twice.
+    let wire_at = |s: usize| -> f64 {
+        let c = &candidates[s - 1];
+        let bytes = json
+            .layers
+            .iter()
+            .find(|l| l.name == c.tensor)
+            .map(|l| {
+                let db = Dtype::parse(&l.quant.output.dtype).map(|d| d.bytes()).unwrap_or(1);
+                cfg.batch * l.out_features * db
+            })
+            .unwrap_or(0);
+        bytes as f64 / port as f64 + engine.dma_setup as f64
+    };
+    // The usable slice grid, compiled in one batch (cold slices across the
+    // cache's thread pool). Slice content mirrors `split_model` exactly so
+    // the winning cuts' real compiles are cache hits.
+    let mut grid: Vec<(usize, usize)> = Vec::new();
+    let mut jobs: Vec<(JsonModel, CompileConfig)> = Vec::new();
+    for a in 0..m {
+        for b in a + 1..=m {
+            if !segment_usable(a, b, m, k) {
+                continue;
+            }
+            let incoming = if a > 0 { Some(candidates[a - 1].tensor.as_str()) } else { None };
+            let link = if b < m { Some(candidates[b - 1].tensor.as_str()) } else { None };
+            let name = format!("{}.s{a}x{b}", json.name);
+            let Ok(model) = super::slice_submodel(json, incoming, bounds[a], bounds[b] - 1, &name)
+            else {
+                continue; // defensively skip: an illegal slice can never win
+            };
+            let sub_cfg = super::slice_config(cfg, &model, link);
+            grid.push((a, b));
+            jobs.push((model, sub_cfg));
+        }
+    }
+    let compiled = cache.compile_many(&jobs);
+    // Score every compiled segment: its own steady-state interval, max'd
+    // with the cost of the link feeding it (which depends on whether this
+    // slice's compiled input landing is offset-tiled or staged).
+    let mut score = vec![vec![None::<Score>; m + 1]; m];
+    for ((a, b), outcome) in grid.iter().zip(&compiled) {
+        let Ok(model) = outcome else { continue };
+        let Some(fw) = model.firmware.as_ref() else { continue };
+        let mut cycles = analyze(fw, &engine).interval_cycles;
+        if *a > 0 {
+            let wire = wire_at(*a);
+            let link_cycles =
+                if super::link_landing_tiler(fw).is_some() { wire } else { 2.0 * wire };
+            cycles = cycles.max(link_cycles);
+        }
+        score[*a][*b] = Some(Score { cycles, macs: seg_macs(*a, *b) });
+    }
+    // Min-max DP over scored segments, with backpointers.
+    let mut dp = vec![vec![None::<Score>; m + 1]; k + 1];
+    let mut back = vec![vec![0usize; m + 1]; k + 1];
+    for i in 1..=m {
+        dp[1][i] = score[0][i];
+    }
+    for j in 2..=k {
+        for i in j..=m {
+            for split in j - 1..i {
+                let (Some(prev), Some(seg)) = (dp[j - 1][split], score[split][i]) else {
+                    continue;
+                };
+                let cost = prev.bottleneck(seg);
+                if dp[j][i].map(|cur| cost.better_than(cur)).unwrap_or(true) {
+                    dp[j][i] = Some(cost);
+                    back[j][i] = split;
+                }
+            }
+        }
+    }
+    let Some(best) = dp[k][m] else {
+        // No candidate slice set compiles at this K. Hand back the MAC
+        // cuts: the caller's real compile then reports *why* (the actual
+        // per-partition compile error), instead of a bare "no cuts".
+        return Ok(CutPlan {
+            cuts: mac_cuts.clone(),
+            bottleneck_cycles: f64::INFINITY,
+            segment_cycles: Vec::new(),
+            mac_cuts,
+            used_macs_fallback: true,
+        });
+    };
+    // Recover boundaries and per-part scores, last part first.
+    let mut cuts = Vec::with_capacity(k - 1);
+    let mut segment_cycles = Vec::with_capacity(k);
+    let mut i = m;
+    for j in (2..=k).rev() {
+        let split = back[j][i];
+        segment_cycles.push(score[split][i].expect("chosen segment was scored").cycles);
+        cuts.push(bounds[split] - 1);
+        i = split;
+    }
+    segment_cycles.push(score[0][i].expect("first segment was scored").cycles);
+    cuts.reverse();
+    segment_cycles.reverse();
+    Ok(CutPlan {
+        cuts,
+        bottleneck_cycles: best.cycles,
+        segment_cycles,
+        mac_cuts,
+        used_macs_fallback: false,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +420,12 @@ mod tests {
             .map(|(i, w)| dense(&format!("fc{}", i + 1), w[0], w[1]))
             .collect();
         JsonModel::new("chain", layers)
+    }
+
+    fn cfg() -> CompileConfig {
+        let mut c = CompileConfig::default();
+        c.batch = 4;
+        c
     }
 
     #[test]
@@ -248,24 +498,61 @@ mod tests {
     }
 
     #[test]
-    fn dp_balances_bottleneck() {
+    fn mac_dp_balances_bottleneck() {
         // Weights 64, 64, 64, 192 (by MACs): the balanced 2-way split puts
         // the heavy tail alone.
         let m = chain(&[8, 8, 8, 8, 24]);
         let c = cut_candidates(&m);
-        let cuts = choose_cuts(&m, &c, 2).unwrap();
+        let cuts = choose_cuts_by_macs(&m, &c, 2).unwrap();
         assert_eq!(cuts, vec![2]); // {fc1,fc2,fc3} | {fc4}
-        let three = choose_cuts(&m, &c, 3).unwrap();
+        let three = choose_cuts_by_macs(&m, &c, 3).unwrap();
         assert_eq!(three.len(), 2);
         assert!(three[0] < three[1]);
+    }
+
+    #[test]
+    fn interval_dp_matches_macs_on_a_heavy_tail_chain() {
+        // Uniform tiny stages with one heavy tail: the compiled intervals
+        // agree with the MAC proxy here (compute-bound chain), so both
+        // policies isolate the tail — and the plan carries the comparison.
+        let m = chain(&[8, 8, 8, 8, 24]);
+        let c = cut_candidates(&m);
+        let cache = FirmwareCache::new();
+        let plan = choose_cuts_explained(&m, &cfg(), &c, 2, &cache).unwrap();
+        assert!(!plan.used_macs_fallback);
+        assert_eq!(plan.cuts, vec![2]);
+        assert_eq!(plan.mac_cuts, vec![2]);
+        assert_eq!(plan.segment_cycles.len(), 2);
+        assert!(plan.bottleneck_cycles.is_finite() && plan.bottleneck_cycles > 0.0);
+        assert_eq!(
+            plan.bottleneck_cycles,
+            plan.segment_cycles.iter().cloned().fold(0.0, f64::max)
+        );
+    }
+
+    #[test]
+    fn interval_dp_slices_hit_cache_on_repeat() {
+        let m = chain(&[16, 16, 16, 16]);
+        let c = cut_candidates(&m);
+        let cache = FirmwareCache::new();
+        let first = choose_cuts(&m, &cfg(), &c, 2, &cache).unwrap();
+        let cold = cache.stats();
+        assert!(cold.misses > 0);
+        let second = choose_cuts(&m, &cfg(), &c, 2, &cache).unwrap();
+        let warm = cache.stats();
+        assert_eq!(first, second);
+        assert_eq!(warm.misses, cold.misses, "second search recompiled");
+        assert!(warm.hits > cold.hits);
     }
 
     #[test]
     fn too_many_partitions_rejected() {
         let m = chain(&[8, 8, 8]);
         let c = cut_candidates(&m);
-        assert!(choose_cuts(&m, &c, 4).is_err());
-        assert!(choose_cuts(&m, &c, 2).is_ok());
-        assert!(choose_cuts(&m, &c, 1).unwrap().is_empty());
+        let cache = FirmwareCache::new();
+        assert!(choose_cuts(&m, &cfg(), &c, 4, &cache).is_err());
+        assert!(choose_cuts_by_macs(&m, &c, 4).is_err());
+        assert!(choose_cuts(&m, &cfg(), &c, 2, &cache).is_ok());
+        assert!(choose_cuts(&m, &cfg(), &c, 1, &cache).unwrap().is_empty());
     }
 }

@@ -5,10 +5,13 @@
 //! One VEK280 tops out at 296 placeable tiles and ~19 MiB of memory-tile
 //! SRAM; production models and throughput targets outgrow both. This
 //! module slices the model's layer DAG at *single-tensor* synchronization
-//! points ([`cut::cut_candidates`]), balances the slices with a bottleneck
-//! DP ([`cut::choose_cuts`]), and compiles each slice through the full
-//! 7-pass pipeline — so tiling, mem-tile planning and the Eq. 2
-//! branch-and-bound placement are re-optimized *per array*. Cut edges turn
+//! points ([`cut::cut_candidates`]), balances the slices with a
+//! compile-in-the-loop bottleneck DP ([`cut::choose_cuts`]) scored by each
+//! slice's *modeled interval* (candidate slices are compiled through the
+//! real pipeline, memoized in the content-addressed
+//! [`crate::cache::FirmwareCache`]), and compiles each chosen slice
+//! through the full 7-pass pipeline — so tiling, mem-tile planning and
+//! the Eq. 2 branch-and-bound placement are re-optimized *per array*. Cut edges turn
 //! interior nodes into partition outputs (drained through the multi-sink
 //! output machinery via `CompileConfig::extra_outputs`), and each cut
 //! becomes a typed [`PartitionLink`]: the upstream firmware names which of
@@ -26,15 +29,18 @@
 pub mod cut;
 pub mod pipeline;
 
+use crate::cache::FirmwareCache;
 use crate::codegen::firmware::{Firmware, StageRef, StageSource};
 use crate::frontend::{CompileConfig, JsonModel};
 use crate::ir::QuantSpec;
-use crate::passes::{compile, Model};
+use crate::passes::Model;
 use crate::sim::dma::OffsetTiler;
 use crate::sim::functional::{execute_all, Activation};
 use anyhow::{bail, ensure, Context, Result};
 
-pub use cut::{choose_cuts, cut_candidates, CutCandidate};
+pub use cut::{
+    choose_cuts, choose_cuts_by_macs, choose_cuts_explained, cut_candidates, CutCandidate, CutPlan,
+};
 pub use pipeline::{analyze_pipeline, pipeline_total_hops, PartitionPerf, PipelinePerfReport};
 
 /// How to partition.
@@ -243,11 +249,79 @@ struct SubModel {
     link_tensor: Option<String>,
 }
 
+/// Build the contiguous sub-model covering `layers[lo..=hi]` under `name`,
+/// with `incoming` (the tensor crossing the upstream cut, if any) renamed
+/// to `"input"`. Layer payloads, quantizers and per-layer names are
+/// preserved, so per-layer config overrides keep applying.
+///
+/// Shared by [`split_model`] and the cut DP ([`cut::choose_cuts`]): both
+/// must produce *identical* slice content, so the DP's candidate compiles
+/// are content-addressed cache hits when the chosen partitioning compiles
+/// for real.
+pub(crate) fn slice_submodel(
+    json: &JsonModel,
+    incoming: Option<&str>,
+    lo: usize,
+    hi: usize,
+    name: &str,
+) -> Result<JsonModel> {
+    let index_of = |name: &str| json.layers.iter().position(|l| l.name == name);
+    let mut layers = Vec::with_capacity(hi - lo + 1);
+    for g in lo..=hi {
+        let mut l = json.layers[g].clone();
+        if !l.inputs.is_empty() {
+            for src in &mut l.inputs {
+                if Some(src.as_str()) == incoming {
+                    *src = "input".to_string();
+                } else if src != "input" {
+                    let p = index_of(src)
+                        .with_context(|| format!("layer '{}' reads unknown '{src}'", l.name))?;
+                    ensure!(
+                        (lo..g).contains(&p),
+                        "cut after layer {} severs edge '{}' -> '{}' (not the link tensor)",
+                        lo.saturating_sub(1),
+                        src,
+                        l.name
+                    );
+                } else {
+                    ensure!(
+                        incoming.is_none(),
+                        "layer '{}' reads the raw network input across a cut",
+                        l.name
+                    );
+                }
+            }
+        }
+        layers.push(l);
+    }
+    let mut model = JsonModel::new(name, layers);
+    model.device = json.device.clone();
+    Ok(model)
+}
+
+/// The per-slice compile config: keep any user-requested extra drains that
+/// live in this slice (a drain can only land in the partition that owns
+/// the layer), and add the link tensor on top. Shared by [`try_k`] and the
+/// cut DP for the same cache-identity reason as [`slice_submodel`].
+pub(crate) fn slice_config(
+    cfg: &CompileConfig,
+    model: &JsonModel,
+    link_tensor: Option<&str>,
+) -> CompileConfig {
+    let mut sub = cfg.clone();
+    sub.extra_outputs.retain(|name| model.layers.iter().any(|l| &l.name == name));
+    if let Some(t) = link_tensor {
+        if !sub.extra_outputs.iter().any(|x| x == t) {
+            sub.extra_outputs.push(t.to_string());
+        }
+    }
+    sub
+}
+
 /// Slice `json` at the chosen cut positions into K sub-models. Each cut's
 /// crossing tensor becomes the upstream sub-model's extra output and the
 /// downstream sub-model's network input (references renamed to
-/// `"input"`). Layer payloads, quantizers and per-layer names are
-/// preserved, so per-layer config overrides keep applying.
+/// `"input"`).
 fn split_model(
     json: &JsonModel,
     candidates: &[CutCandidate],
@@ -268,35 +342,11 @@ fn split_model(
         ensure!(lo <= hi, "cut positions must be strictly increasing");
         // The tensor entering this partition (renamed to "input" inside).
         let incoming: Option<&str> = if i == 0 { None } else { Some(tensor_of(cuts[i - 1])?) };
-        let mut layers = Vec::with_capacity(hi - lo + 1);
-        for g in lo..=hi {
-            let mut l = json.layers[g].clone();
-            if !l.inputs.is_empty() {
-                for src in &mut l.inputs {
-                    if Some(src.as_str()) == incoming {
-                        *src = "input".to_string();
-                    } else if src != "input" {
-                        let p = index_of(src).with_context(|| {
-                            format!("layer '{}' reads unknown '{src}'", l.name)
-                        })?;
-                        ensure!(
-                            (lo..g).contains(&p),
-                            "cut after layer {} severs edge '{}' -> '{}' (not the link tensor)",
-                            lo.saturating_sub(1),
-                            src,
-                            l.name
-                        );
-                    } else {
-                        ensure!(
-                            i == 0,
-                            "layer '{}' reads the raw network input across a cut",
-                            l.name
-                        );
-                    }
-                }
-            }
-            layers.push(l);
-        }
+        // K = 1 keeps the original model name (it *is* the original model);
+        // real slices are suffixed with their pipeline position.
+        let sub_name =
+            if cuts.is_empty() { json.name.clone() } else { format!("{}.p{i}", json.name) };
+        let model = slice_submodel(json, incoming, lo, hi, &sub_name)?;
         let link_tensor = if i < cuts.len() {
             let t = tensor_of(cuts[i])?;
             let p = index_of(t).context("link tensor names no layer")?;
@@ -309,12 +359,6 @@ fn split_model(
         } else {
             None
         };
-        // K = 1 keeps the original model name (it *is* the original model);
-        // real slices are suffixed with their pipeline position.
-        let sub_name =
-            if cuts.is_empty() { json.name.clone() } else { format!("{}.p{i}", json.name) };
-        let mut model = JsonModel::new(&sub_name, layers);
-        model.device = json.device.clone();
         subs.push(SubModel { model, link_tensor });
         lo = hi + 1;
     }
@@ -326,7 +370,7 @@ fn split_model(
 /// reads the downstream network input (its tiling defines the read blocks).
 /// Several readers — or a merge reading the raw input — keep the legacy
 /// row-major landing (`None`).
-fn link_landing_tiler(down: &Firmware) -> Option<OffsetTiler> {
+pub(crate) fn link_landing_tiler(down: &Firmware) -> Option<OffsetTiler> {
     let mut fed: Option<usize> = None;
     for s in &down.stages {
         if s.inputs.contains(&StageSource::Input) {
@@ -346,24 +390,31 @@ fn try_k(
     cfg: &CompileConfig,
     candidates: &[CutCandidate],
     k: usize,
+    cache: &FirmwareCache,
 ) -> Result<PartitionedModel> {
-    let cuts = choose_cuts(json, candidates, k)?;
-    let subs = split_model(json, candidates, &cuts)?;
+    let cuts = choose_cuts(json, cfg, candidates, k, cache)?;
+    compile_partitioned_at(json, cfg, candidates, &cuts, cache)
+}
+
+/// Compile `json` at an explicit set of cut positions (each must be a
+/// legal [`CutCandidate`] boundary). This is the assembly half of
+/// [`compile_partitioned`] without the cut search — benches and tests use
+/// it to compare cut policies (e.g. interval-balanced vs MAC-balanced) on
+/// identical machinery, and the cut DP's slice compiles make the chosen
+/// partitioning's compiles here cache hits.
+pub fn compile_partitioned_at(
+    json: &JsonModel,
+    cfg: &CompileConfig,
+    candidates: &[CutCandidate],
+    cuts: &[usize],
+    cache: &FirmwareCache,
+) -> Result<PartitionedModel> {
+    let subs = split_model(json, candidates, cuts)?;
     let mut models = Vec::with_capacity(subs.len());
     for (i, sub) in subs.iter().enumerate() {
-        let mut sub_cfg = cfg.clone();
-        // Keep any user-requested extra drains that live in this slice
-        // (a drain can only land in the partition that owns the layer),
-        // and add the link tensor on top.
-        sub_cfg
-            .extra_outputs
-            .retain(|name| sub.model.layers.iter().any(|l| &l.name == name));
-        if let Some(t) = &sub.link_tensor {
-            if !sub_cfg.extra_outputs.contains(t) {
-                sub_cfg.extra_outputs.push(t.clone());
-            }
-        }
-        let model = compile(&sub.model, sub_cfg)
+        let sub_cfg = slice_config(cfg, &sub.model, sub.link_tensor.as_deref());
+        let model = cache
+            .compile(&sub.model, sub_cfg)
             .with_context(|| format!("partition {i} ('{}')", sub.model.name))?;
         models.push(model);
     }
@@ -423,7 +474,7 @@ fn try_k(
         outputs,
     };
     firmware.check_invariants()?;
-    Ok(PartitionedModel { firmware, models, cuts })
+    Ok(PartitionedModel { firmware, models, cuts: cuts.to_vec() })
 }
 
 /// Compile `json` into a pipelined multi-array deployment.
@@ -438,6 +489,20 @@ pub fn compile_partitioned(
     cfg: CompileConfig,
     opts: &PartitionOptions,
 ) -> Result<PartitionedModel> {
+    compile_partitioned_with(json, cfg, opts, &FirmwareCache::new())
+}
+
+/// [`compile_partitioned`] against a caller-owned firmware cache: the cut
+/// DP's slice compiles, the auto-K search's repeated slices and any later
+/// re-plan of the same model all hit the cache instead of re-running the
+/// pass pipeline. The deploy planner and autoscaler thread one cache
+/// through their whole candidate sweep.
+pub fn compile_partitioned_with(
+    json: &JsonModel,
+    cfg: CompileConfig,
+    opts: &PartitionOptions,
+    cache: &FirmwareCache,
+) -> Result<PartitionedModel> {
     json.validate()?;
     let candidates = cut_candidates(json);
     let ks: Vec<usize> = match opts.partitions {
@@ -447,7 +512,7 @@ pub fn compile_partitioned(
     };
     let mut last_err: Option<anyhow::Error> = None;
     for k in ks {
-        match try_k(json, &cfg, &candidates, k) {
+        match try_k(json, &cfg, &candidates, k, cache) {
             Ok(pm) => return Ok(pm),
             Err(e) => last_err = Some(e),
         }
@@ -494,6 +559,7 @@ pub fn execute_partitioned(
 mod tests {
     use super::*;
     use crate::harness::models::{diamond_mlp_model, mlp_spec, residual_mlp_model, synth_model};
+    use crate::passes::compile;
     use crate::runtime::ReferenceOracle;
     use crate::util::Pcg32;
 

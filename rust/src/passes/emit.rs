@@ -166,24 +166,24 @@ impl Pass for Emission {
                         .cloned()
                         .with_context(|| format!("merge '{}': no mem-tile plan", node.name))?;
                     // An offset-tiled concat has no buffer of its own: its
-                    // branches land straight in the single dense consumer's
-                    // input buffer, so the merge's column *is* that
-                    // consumer's input column (graph planning guaranteed
-                    // exactly one dense consumer). Staged merges keep the
+                    // branches land straight in each dense consumer's input
+                    // buffer, so the merge's column is the leftmost of those
+                    // consumers' input columns (graph planning guaranteed
+                    // every consumer is dense). Staged merges keep the
                     // transitive-descendant placement.
                     plan.mem_col = if plan.offset_tiled() {
                         let succs = model.graph.successors(id);
                         ensure!(
-                            succs.len() == 1,
-                            "merge '{}': offset tilers without a single consumer",
+                            !succs.is_empty() && succs.iter().all(|s| layer_idx.contains_key(s)),
+                            "merge '{}': offset tilers without dense consumers",
                             node.name
                         );
-                        layer_idx
-                            .get(&succs[0])
+                        succs
+                            .iter()
+                            .filter_map(|s| layer_idx.get(s))
                             .map(|&li| layers[li].placement.input_col())
-                            .with_context(|| {
-                                format!("merge '{}': offset-tiled consumer is not dense", node.name)
-                            })?
+                            .min()
+                            .unwrap()
                     } else {
                         merge_mem_col(&model.graph, id, &layer_idx, &layers)
                     }

@@ -64,35 +64,40 @@ pub(crate) fn output_producer_ids(model: &Model) -> Result<Vec<NodeId>> {
 }
 
 /// Offset tilers for a `Concat` node, when the topology admits them: every
-/// producer branch writes its feature band straight into the consumer's
+/// producer branch writes its feature band straight into each consumer's
 /// {M, K} read-tile buffer, killing the staged row-major merge buffer (and
-/// its copy). Eligibility — the concat must feed **exactly one dense
-/// layer** (its buffer is the landing target) and must not itself be
-/// drained to the host (a drain needs the row-major image): otherwise
-/// `None`, and the merge keeps the staged path.
+/// its copy). Eligibility — **every** consumer of the concat must be a
+/// dense layer (each gets its own landing group, since each reads through
+/// its own tiling), and the concat must not itself be drained to the host
+/// (a drain needs the row-major image): otherwise `None`, and the merge
+/// keeps the staged path. The returned tilers are flattened
+/// consumer-major: group `c` is `tilers[c*preds.len()..(c+1)*preds.len()]`,
+/// one band per producer in input order, shaped by consumer `c`'s {M, K}.
 fn concat_offset_tilers(model: &Model, id: NodeId, preds: &[NodeId]) -> Option<Vec<OffsetTiler>> {
     let node = model.graph.node(id).ok()?;
     if model.config.extra_outputs.iter().any(|n| *n == node.name) {
         return None;
     }
     let succs = model.graph.successors(id);
-    if succs.len() != 1 {
+    if succs.is_empty() {
         return None;
     }
-    let consumer = model.graph.node(succs[0]).ok()?;
-    if !consumer.op.is_dense() {
-        return None;
-    }
-    let ct = consumer.attrs.tiling?;
     let features = model.graph.produced_features(id)?;
-    let mut tilers = Vec::with_capacity(preds.len());
-    let mut offset = 0usize;
-    for &p in preds {
-        let w = model.graph.produced_features(p)?;
-        tilers.push(OffsetTiler::new(offset, features, ct.m, ct.k));
-        offset += w;
+    let mut tilers = Vec::with_capacity(preds.len() * succs.len());
+    for &s in &succs {
+        let consumer = model.graph.node(s).ok()?;
+        if !consumer.op.is_dense() {
+            return None;
+        }
+        let ct = consumer.attrs.tiling?;
+        let mut offset = 0usize;
+        for &p in preds {
+            let w = model.graph.produced_features(p)?;
+            tilers.push(OffsetTiler::new(offset, features, ct.m, ct.k));
+            offset += w;
+        }
+        debug_assert_eq!(offset, features);
     }
-    debug_assert_eq!(offset, features);
     Some(tilers)
 }
 
@@ -243,10 +248,11 @@ impl Pass for GraphPlanning {
                         bail!("merge '{name}': i32 activations cannot be re-stored");
                     }
                     merge_specs.insert(id, spec);
-                    // Concat fan-in with a single dense consumer lands each
-                    // branch at a feature offset of the consumer's read-tile
-                    // buffer instead of staging row-major; Add always stages
-                    // (the merge buffer is where the accumulation happens).
+                    // Concat fan-in whose consumers are all dense lands each
+                    // branch at a feature offset of every consumer's
+                    // read-tile buffer instead of staging row-major; Add
+                    // always stages (the merge buffer is where the
+                    // accumulation happens).
                     let offset_tilers = if is_add {
                         Vec::new()
                     } else {
@@ -579,9 +585,9 @@ mod tests {
     }
 
     #[test]
-    fn fanned_out_or_sink_concat_stays_staged() {
-        // Two consumers: the landing target is ambiguous, so the merge
-        // keeps its staged row-major buffer.
+    fn multi_consumer_concat_plans_one_landing_group_per_consumer() {
+        // Two dense consumers: each gets its own landing group (one band
+        // per producer, in consumer-major order) shaped by its own {M, K}.
         let layers = vec![
             layer("a", 32, 48, "int8"),
             JsonLayer::dense("b", 32, 16, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 16])
@@ -595,7 +601,47 @@ mod tests {
         let m = planned(layers, 8);
         let prog = m.memtile_plans.as_ref().unwrap();
         let cat = m.graph.nodes.iter().find(|n| n.name == "cat").unwrap().id;
-        assert!(!prog.merge_plans[&cat].offset_tiled());
+        let mp = &prog.merge_plans[&cat];
+        assert!(mp.offset_tiled());
+        assert_eq!(mp.offset_tilers.len(), 4); // 2 consumers x 2 inputs
+        // Every group tiles the merged width in input order.
+        for group in mp.offset_tilers.chunks(2) {
+            assert_eq!((group[0].offset, group[1].offset), (0, 48));
+            assert!(group.iter().all(|t| t.stride == 64));
+        }
+        // Each group carries one consumer's read-tile shape.
+        let shapes: Vec<(usize, usize)> = mp
+            .offset_tilers
+            .chunks(2)
+            .map(|g| (g[0].tile_m, g[0].tile_k))
+            .collect();
+        for name in ["h1", "h2"] {
+            let t = m.graph.nodes.iter().find(|n| n.name == name).unwrap().attrs.tiling.unwrap();
+            assert!(shapes.contains(&(t.m, t.k)), "{name} {:?} not in {shapes:?}", (t.m, t.k));
+        }
+    }
+
+    #[test]
+    fn fanned_out_or_sink_concat_stays_staged() {
+        // A concat feeding a non-dense consumer (another merge) keeps its
+        // staged row-major buffer — there is no read-tile buffer to land in.
+        let layers = vec![
+            layer("a", 32, 48, "int8"),
+            JsonLayer::dense("b", 32, 16, true, false, "int8", "int8", 0, vec![0; 512], vec![0; 16])
+                .with_inputs(&["input"]),
+            JsonLayer::concat("cat", 64, "int8", 0, &["a", "b"]),
+            JsonLayer::dense("c", 32, 64, true, false, "int8", "int8", 0, vec![0; 2048], vec![0; 64])
+                .with_inputs(&["input"]),
+            JsonLayer::concat("cat2", 128, "int8", 0, &["cat", "c"]),
+            JsonLayer::dense("head", 128, 8, true, false, "int8", "int8", 0, vec![0; 1024], vec![0; 8])
+                .with_inputs(&["cat2"]),
+        ];
+        let m = planned(layers, 8);
+        let prog = m.memtile_plans.as_ref().unwrap();
+        let cat = m.graph.nodes.iter().find(|n| n.name == "cat").unwrap().id;
+        assert!(!prog.merge_plans[&cat].offset_tiled(), "merge-fed concat must stage");
+        let cat2 = m.graph.nodes.iter().find(|n| n.name == "cat2").unwrap().id;
+        assert!(prog.merge_plans[&cat2].offset_tiled(), "dense-fed concat must land");
         // A sink concat (no consumer at all) stays staged too — the drain
         // needs the row-major image.
         let sink_layers = vec![

@@ -201,17 +201,21 @@ pub fn execute_merge(m: &MergeStage, inputs: &[&Activation]) -> Result<Activatio
             let mut data = vec![0i32; batch * m.features];
             if m.plan.offset_tiled() {
                 // Offset tilers: every branch scatters its feature band
-                // straight into the consumer's read image in {M, K}
+                // straight into a consumer's read image in {M, K}
                 // descriptor order — the merged activation never exists as
-                // a separate row-major staging buffer.
+                // a separate row-major staging buffer. Each consumer's
+                // group lands the identical logical image (scatter is a
+                // permutation copy), so replaying the first group suffices
+                // for bit-exactness.
                 ensure!(
-                    m.plan.offset_tilers.len() == inputs.len(),
+                    !m.plan.offset_tilers.is_empty()
+                        && m.plan.offset_tilers.len() % inputs.len() == 0,
                     "merge '{}': {} offset tilers for {} inputs",
                     m.name,
                     m.plan.offset_tilers.len(),
                     inputs.len()
                 );
-                for (a, t) in inputs.iter().zip(&m.plan.offset_tilers) {
+                for (a, t) in inputs.iter().zip(&m.plan.offset_tilers[..inputs.len()]) {
                     t.scatter(batch, a.features, &a.data, &mut data);
                 }
             } else {

@@ -78,8 +78,8 @@ pub struct RoutingPlan {
 ///   along the memory-tile row into *every shard column* of each
 ///   consumer's input buffer — the staging copy, made explicit;
 /// * an **offset-tiled** concat forwards nothing: its branches already
-///   landed inside the consumer's read-tile buffer (whose column the
-///   producers target directly), so only its own drains route.
+///   landed inside each dense consumer's read-tile buffer (whose columns
+///   the producers target directly), so only its own drains route.
 ///
 /// Granularity rule, so staged-vs-offset comparisons measure the data
 /// path and not an accounting artifact: a producer's *store* costs one
@@ -103,13 +103,23 @@ pub fn route_firmware(fw: &Firmware) -> Result<RoutingPlan> {
         );
         match stage.op {
             StageRef::Layer(li) => {
-                let mut targets: Vec<usize> = consumers
-                    .iter()
-                    .map(|&c| match fw.stages[c].op {
-                        StageRef::Layer(lj) => fw.layers[lj].input_plan.mem_col,
-                        StageRef::Merge(mj) => fw.merges[mj].plan.mem_col,
-                    })
-                    .collect();
+                let mut targets: Vec<usize> = Vec::new();
+                for &c in &consumers {
+                    match fw.stages[c].op {
+                        StageRef::Layer(lj) => targets.push(fw.layers[lj].input_plan.mem_col),
+                        StageRef::Merge(mj) if fw.merges[mj].plan.offset_tiled() => {
+                            // The branch lands straight in each dense
+                            // consumer's read-tile buffer: one store per
+                            // destination buffer.
+                            for cc in fw.stage_consumers(c) {
+                                if let StageRef::Layer(lk) = fw.stages[cc].op {
+                                    targets.push(fw.layers[lk].input_plan.mem_col);
+                                }
+                            }
+                        }
+                        StageRef::Merge(mj) => targets.push(fw.merges[mj].plan.mem_col),
+                    }
+                }
                 targets.extend(drains);
                 for k in &fw.layers[li].kernels {
                     if k.is_tail {
@@ -134,6 +144,20 @@ pub fn route_firmware(fw: &Firmware) -> Result<RoutingPlan> {
                                         0,
                                         clamp(p.mem_col + s),
                                     ));
+                                }
+                            }
+                            StageRef::Merge(mj) if fw.merges[mj].plan.offset_tiled() => {
+                                // The downstream concat has no buffer: land
+                                // in each of its dense consumers' read-tile
+                                // buffers directly.
+                                for cc in fw.stage_consumers(c) {
+                                    if let StageRef::Layer(lk) = fw.stages[cc].op {
+                                        routes.push(Route::dimension_ordered(
+                                            from,
+                                            0,
+                                            clamp(fw.layers[lk].input_plan.mem_col),
+                                        ));
+                                    }
                                 }
                             }
                             StageRef::Merge(mj) => routes.push(Route::dimension_ordered(

@@ -137,6 +137,73 @@ fn wide_mlp_2x_k2_offset_links_beat_staged() {
 }
 
 #[test]
+fn multi_consumer_concat_offset_beats_staged() {
+    // A concat feeding *two* dense heads: each head gets its own landing
+    // group (one offset tiler per branch), so the staged copy disappears
+    // for both consumers at once while the outputs stay bit-exact.
+    use aie4ml::frontend::{JsonLayer, JsonModel};
+    let mut rng = Pcg32::seed_from_u64(0xFA2);
+    let mut dense = |lname: &str, fin: usize, fout: usize, relu: bool| -> JsonLayer {
+        let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-512, 512)).collect();
+        JsonLayer::dense(lname, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+    };
+    let layers = vec![
+        dense("fc_a", 96, 64, true),
+        dense("fc_b", 96, 32, false).with_inputs(&["input"]),
+        JsonLayer::concat("cat", 96, "int8", 6, &["fc_a", "fc_b"]),
+        dense("h1", 96, 32, true).with_inputs(&["cat"]),
+        dense("h2", 96, 32, false).with_inputs(&["cat"]),
+        JsonLayer::residual_add("out", 32, "int8", 6, &["h1", "h2"]),
+    ];
+    let mut json = JsonModel::new("concat_fanout_gate", layers);
+    json.device = Some("vek280".to_string());
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 16;
+    let fw = compile(&json, cfg).unwrap().firmware.unwrap();
+    fw.check_invariants().unwrap();
+
+    // One landing group per head, each tiling the 96-wide merge at the
+    // branch offsets; the residual add downstream stays staged.
+    let cat = fw.merges.iter().find(|m| m.name == "cat").unwrap();
+    assert!(cat.plan.offset_tiled(), "multi-consumer concat must compile to offset tilers");
+    assert_eq!(cat.plan.offset_tilers.len(), 4, "2 branches x 2 consumers");
+    for group in cat.plan.offset_tilers.chunks(2) {
+        assert_eq!(group[0].offset, 0);
+        assert_eq!(group[1].offset, 64);
+        assert_eq!(group[1].stride, 96);
+    }
+    let out = fw.merges.iter().find(|m| m.name == "out").unwrap();
+    assert!(!out.plan.offset_tiled());
+
+    let staged = fw.staged_variant();
+    staged.check_invariants().unwrap();
+
+    // Each branch now stores once per consumer buffer (no staging copy in
+    // between), so both routings must validate; the modeled engine cost is
+    // what the offset path must win on — the staged merge's buffer fill
+    // leaves the critical path while the landing stores are one DMA pass
+    // per destination either way.
+    route_firmware(&fw).unwrap();
+    route_firmware(&staged).unwrap();
+    let model = EngineModel::default();
+    let perf = analyze(&fw, &model);
+    let perf_staged = analyze(&staged, &model);
+    assert!(perf.interval_cycles <= perf_staged.interval_cycles);
+    assert!(perf.latency_cycles < perf_staged.latency_cycles);
+    let row = perf.layers.iter().find(|l| l.name == "cat").unwrap();
+    assert_eq!(row.stage_cycles, 0.0);
+    assert_eq!(row.fill_cycles, 0.0);
+
+    // Pure layout: bit-exact against the staged variant and the oracle.
+    let x = random_input(96, 16, 0xFA2);
+    let y = execute(&fw, &x).unwrap();
+    assert_eq!(y.data, execute(&staged, &x).unwrap().data);
+    let want = ReferenceOracle::from_model(&json).unwrap().execute(&x).unwrap();
+    assert_eq!(y.data, want.data);
+}
+
+#[test]
 fn no_concat_no_partition_firmware_json_is_pinned() {
     // Byte-identity gate: models without a concat or a partition must
     // serialize the exact pre-offset-tiler firmware.json. The serializer

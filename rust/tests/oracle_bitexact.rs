@@ -139,6 +139,71 @@ fn concat_mlp_bit_exact() {
 }
 
 #[test]
+fn funnel_mlp_bit_exact_and_interval_cuts_beat_mac_cuts() {
+    // The cut-choice gate: the funnel chain is built so MAC balancing cuts
+    // at a 512-wide tensor while interval balancing finds the 32-wide
+    // crossing. Both partitionings must stay bit-exact, and the interval
+    // cuts must model a strictly lower pipeline bottleneck. Looked up
+    // leniently because Python-written manifests omit the Rust-only entry.
+    use aie4ml::cache::FirmwareCache;
+    use aie4ml::partition::{
+        analyze_pipeline, choose_cuts_by_macs, choose_cuts_explained, compile_partitioned_at,
+        cut_candidates, execute_partitioned,
+    };
+    use aie4ml::sim::engine::EngineModel;
+    let Some(e) = zoo_entries().iter().find(|e| e.name == "funnel_mlp") else {
+        eprintln!(
+            "skipping: manifest predates the cut-choice gate — regenerate with `aie4ml zoo --force`"
+        );
+        return;
+    };
+    check_model(e, 99); // single-array bit-exactness first
+
+    let json = JsonModel::from_file(&e.model).expect("model JSON");
+    let mut cfg = CompileConfig::default();
+    cfg.batch = e.batch;
+    let candidates = cut_candidates(&json);
+    assert!(candidates.len() >= 3, "funnel chain must expose every boundary");
+    let cache = FirmwareCache::new();
+    let plan = choose_cuts_explained(&json, &cfg, &candidates, 2, &cache).expect("interval cuts");
+    assert!(!plan.used_macs_fallback, "interval DP must not fall back on a fitting chain");
+    let mac_cuts = choose_cuts_by_macs(&json, &candidates, 2).expect("mac cuts");
+    assert_ne!(plan.cuts, mac_cuts, "the funnel must split the two policies");
+
+    let engine = EngineModel::default();
+    let int_pm =
+        compile_partitioned_at(&json, &cfg, &candidates, &plan.cuts, &cache).expect("interval");
+    let mac_pm =
+        compile_partitioned_at(&json, &cfg, &candidates, &mac_cuts, &cache).expect("mac");
+    let int_perf = analyze_pipeline(&int_pm.firmware, &engine);
+    let mac_perf = analyze_pipeline(&mac_pm.firmware, &engine);
+    assert!(
+        int_perf.interval_cycles < mac_perf.interval_cycles,
+        "interval cuts {:?} ({} cyc) must strictly beat MAC cuts {:?} ({} cyc)",
+        plan.cuts,
+        int_perf.interval_cycles,
+        mac_cuts,
+        mac_perf.interval_cycles
+    );
+
+    // Both pipelines are pure data movement around the same layers:
+    // bit-exact against the oracle running the uncut model.
+    let mut rng = Pcg32::seed_from_u64(99);
+    let input = Activation::new(
+        e.batch,
+        512,
+        (0..e.batch * 512).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+    )
+    .unwrap();
+    let want = ReferenceOracle::from_model(&json).unwrap().execute(&input).unwrap();
+    for pm in [&int_pm, &mac_pm] {
+        pm.firmware.check_invariants().unwrap();
+        let got = execute_partitioned(&pm.firmware, &input).expect("pipeline execution");
+        assert_eq!(got[0].data, want.data, "partitioned funnel diverges from the oracle");
+    }
+}
+
+#[test]
 fn wide_mlp_2x_partitioned_bit_exact() {
     // The multi-array gate: a model that cannot place on one VEK280 at its
     // throughput configuration must compile into >= 2 pipeline partitions

@@ -671,6 +671,176 @@ fn prop_concat_offset_tiling_bit_exact() {
     });
 }
 
+// ---------- Compile-in-the-loop cut choice -----------------------------------
+
+/// On random chain and diamond DAGs, the interval-balancing cut DP must
+/// never model a worse pipeline interval than the MAC-balancing proxy:
+/// both cut sets are assembled through identical machinery
+/// (`compile_partitioned_at`) and scored by `analyze_pipeline`, and the
+/// DP optimizes exactly that objective, so MAC cuts can tie but never win.
+#[test]
+fn prop_interval_cuts_never_worse_than_mac_cuts() {
+    use aie4ml::cache::FirmwareCache;
+    use aie4ml::partition::{
+        analyze_pipeline, choose_cuts, choose_cuts_by_macs, compile_partitioned_at,
+        cut_candidates,
+    };
+    use aie4ml::sim::engine::EngineModel;
+    #[derive(Clone)]
+    struct Case {
+        d: usize,
+        m: usize,
+        k_out: usize,
+        batch: usize,
+        seed: u64,
+        diamond: bool,
+        concat: bool,
+        parts: usize,
+    }
+    impl std::fmt::Debug for Case {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "d={} m={} k_out={} batch={} seed={:#x} diamond={} concat={} parts={}",
+                self.d, self.m, self.k_out, self.batch, self.seed, self.diamond, self.concat,
+                self.parts
+            )
+        }
+    }
+    let strat = Strategy::new(|r: &mut Pcg32| Case {
+        d: r.gen_range_usize(1, 48),
+        m: r.gen_range_usize(1, 48),
+        k_out: r.gen_range_usize(1, 24),
+        batch: r.gen_range_usize(1, 6),
+        seed: r.next_u64(),
+        diamond: r.gen_bool(0.6),
+        concat: r.gen_bool(0.4),
+        parts: r.gen_range_usize(2, 3),
+    });
+    check("interval_vs_mac_cuts", 15, &strat, |case| {
+        let mut rng = Pcg32::seed_from_u64(case.seed);
+        let mut dense = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let layers = if case.diamond {
+            let merged = if case.concat { 2 * case.m } else { case.m };
+            let merge = if case.concat {
+                JsonLayer::concat("merge", merged, "int8", 6, &["a", "b"])
+            } else {
+                JsonLayer::residual_add("merge", case.m, "int8", 6, &["a", "b"])
+            };
+            vec![
+                dense("stem", case.d, case.m, true),
+                dense("a", case.m, case.m, true).with_inputs(&["stem"]),
+                dense("b", case.m, case.m, false).with_inputs(&["stem"]),
+                merge,
+                dense("head", merged, case.k_out, false).with_inputs(&["merge"]),
+            ]
+        } else {
+            vec![
+                dense("fc1", case.d, case.m, true),
+                dense("fc2", case.m, case.m, true),
+                dense("fc3", case.m, case.k_out, false),
+            ]
+        };
+        let jm = JsonModel::new("cutprop", layers);
+        let mut cfg = CompileConfig::default();
+        cfg.batch = case.batch;
+        cfg.tiles_per_layer = Some(rng.gen_range_usize(1, 6));
+        let candidates = cut_candidates(&jm);
+        let k = case.parts.min(candidates.len() + 1);
+        if k < 2 {
+            return Ok(());
+        }
+        let cache = FirmwareCache::new();
+        let int_cuts = choose_cuts(&jm, &cfg, &candidates, k, &cache)
+            .map_err(|e| format!("choose_cuts: {e:#}"))?;
+        let mac_cuts =
+            choose_cuts_by_macs(&jm, &candidates, k).map_err(|e| format!("mac cuts: {e:#}"))?;
+        // If even the MAC baseline cannot compile this instance, there is
+        // nothing to compare.
+        let Ok(mac_pm) = compile_partitioned_at(&jm, &cfg, &candidates, &mac_cuts, &cache) else {
+            return Ok(());
+        };
+        let int_pm = compile_partitioned_at(&jm, &cfg, &candidates, &int_cuts, &cache)
+            .map_err(|e| format!("interval cuts failed to compile: {e:#}"))?;
+        let engine = EngineModel::default();
+        let int_perf = analyze_pipeline(&int_pm.firmware, &engine);
+        let mac_perf = analyze_pipeline(&mac_pm.firmware, &engine);
+        if int_perf.interval_cycles > mac_perf.interval_cycles + 1e-6 {
+            return Err(format!(
+                "interval cuts {:?} model {} cycles/batch, MAC cuts {:?} model {}",
+                int_cuts, int_perf.interval_cycles, mac_cuts, mac_perf.interval_cycles
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The firmware cache must be deterministic and content-addressed: a
+/// repeat compile of the same (model, config) is a hit returning
+/// byte-identical firmware JSON, and renaming the model — which is
+/// excluded from the structural key — still hits, rehydrating the
+/// firmware under the new name.
+#[test]
+fn prop_firmware_cache_deterministic_and_name_blind() {
+    use aie4ml::cache::FirmwareCache;
+    let strat = Strategy::new(|r: &mut Pcg32| {
+        (
+            r.gen_range_usize(1, 64),
+            r.gen_range_usize(1, 64),
+            r.gen_range_usize(1, 32),
+            r.gen_range_usize(1, 8),
+            r.next_u64(),
+        )
+    });
+    check("cache_determinism", 20, &strat, |&(d0, d1, d2, batch, seed)| {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let mut layer = |name: &str, fin: usize, fout: usize, relu: bool| {
+            let weights: Vec<i32> = (0..fin * fout).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            let bias: Vec<i64> = (0..fout).map(|_| rng.gen_range_i64(-2048, 2048)).collect();
+            JsonLayer::dense(name, fin, fout, true, relu, "int8", "int8", 6, weights, bias)
+        };
+        let jm = JsonModel::new(
+            "cacheprop",
+            vec![layer("fc1", d0, d1, true), layer("fc2", d1, d2, false)],
+        );
+        let mut cfg = CompileConfig::default();
+        cfg.batch = batch;
+        let cache = FirmwareCache::new();
+        let m1 = cache.compile(&jm, cfg.clone()).map_err(|e| format!("compile: {e:#}"))?;
+        let s0 = cache.stats();
+        if s0.hits != 0 || s0.misses != 1 {
+            return Err(format!("first compile: {s0}"));
+        }
+        let m2 = cache.compile(&jm, cfg.clone()).map_err(|e| format!("recompile: {e:#}"))?;
+        let s1 = cache.stats();
+        if s1.hits != 1 || s1.misses != 1 {
+            return Err(format!("second compile must hit: {s1}"));
+        }
+        let j1 = m1.firmware.as_ref().unwrap().to_json().unwrap();
+        let j2 = m2.firmware.as_ref().unwrap().to_json().unwrap();
+        if j1 != j2 {
+            return Err("cache hit returned different firmware bytes".into());
+        }
+        // Same structure under a different name: still a hit, firmware
+        // rehydrated under the new name.
+        let mut renamed = jm.clone();
+        renamed.name = "cacheprop_renamed".to_string();
+        let m3 = cache.compile(&renamed, cfg).map_err(|e| format!("renamed: {e:#}"))?;
+        let s2 = cache.stats();
+        if s2.hits != 2 || s2.misses != 1 {
+            return Err(format!("renamed compile must hit: {s2}"));
+        }
+        if m3.firmware.as_ref().unwrap().model_name != "cacheprop_renamed" {
+            return Err("rehydrated firmware kept the cached name".into());
+        }
+        Ok(())
+    });
+}
+
 // ---------- Serving invariants ------------------------------------------------
 
 #[test]

@@ -14,13 +14,16 @@
 #   make bench      regenerate every paper table/figure with timings
 #   make bench-smoke single-iteration run of the fig3 placement,
 #                   partition-scaling, deploy-scaling, concat-tiling,
-#                   load-harness and compile-throughput benches (what
-#                   CI's bench smoke job runs)
+#                   load-harness, compile-throughput and obs-overhead
+#                   benches (what CI's bench smoke job runs)
+#   make trace-demo serve the zoo's funnel_mlp under a bursty trace with the
+#                   autoscaler on, exporting a Perfetto-loadable Chrome trace
+#                   and a Prometheus scrape under rust/artifacts/obs/
 
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: build test zoo artifacts fmt clippy bench bench-smoke clean
+.PHONY: build test zoo artifacts fmt clippy bench bench-smoke trace-demo clean
 
 build:
 	$(CARGO) build --release
@@ -53,6 +56,15 @@ bench-smoke:
 	$(CARGO) bench --bench concat_tiling -- --smoke
 	$(CARGO) bench --bench load_harness -- --smoke
 	$(CARGO) bench --bench compile_throughput -- --smoke
+	$(CARGO) bench --bench obs_overhead -- --smoke
+
+trace-demo: zoo
+	mkdir -p rust/artifacts/obs
+	target/release/aie4ml serve rust/artifacts/models/funnel_mlp.json \
+		--trace bursty --duration-ms 500 --autoscale \
+		--trace-out rust/artifacts/obs/funnel_mlp.trace.json \
+		--metrics-out rust/artifacts/obs/funnel_mlp.prom
+	@echo "open rust/artifacts/obs/funnel_mlp.trace.json at https://ui.perfetto.dev"
 
 clean:
 	$(CARGO) clean

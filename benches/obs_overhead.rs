@@ -1,0 +1,117 @@
+//! Bench: observability hot-path overhead budget.
+//!
+//! The serving and compile hot paths are instrumented *unconditionally* —
+//! every span site always executes, and the tracer decides at run time
+//! whether to record. This bench pins the cost of that decision:
+//!
+//! * **disabled** — one relaxed atomic load and an inert guard. Budget:
+//!   the spans a request passes through must cost **< 1%** of the
+//!   host-measured per-request service time.
+//! * **enabled** — clock read + record allocation + one sharded ring
+//!   push. Budget: **< 5%** of per-request service time.
+//!
+//! The per-request service time is measured on this host (the functional
+//! simulator is CPU-bound), so the ratios are machine-independent: a slow
+//! machine has proportionally slower spans *and* slower batches.
+//!
+//! `--smoke` shrinks the iteration counts and skips the ratio assertions
+//! (CI's bench smoke job runs it on noisy shared runners); the full run
+//! asserts the budgets.
+
+use aie4ml::arch::Dtype;
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::obs::Tracer;
+use aie4ml::partition::{compile_partitioned, execute_partitioned, PartitionOptions};
+use aie4ml::sim::functional::Activation;
+use aie4ml::util::Pcg32;
+use std::time::Instant;
+
+/// Span sites one request crosses end to end: submit, queue-wait,
+/// batch-form share, batch-execute share, per-partition stage share,
+/// dispatch share, completion instant. Deliberately generous.
+const SPANS_PER_REQUEST: usize = 8;
+
+/// Nanoseconds per span open+drop (with two attached args) on `tracer`.
+fn span_cost_ns(tracer: &Tracer, iters: usize) -> f64 {
+    // Warm up the thread-local track allocation and the shard lock.
+    for _ in 0..1000 {
+        let _s = tracer.span("bench", "warmup");
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let _s = tracer
+            .span("bench", "probe")
+            .with_arg("i", i)
+            .with_arg("occupancy", 16usize);
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / iters as f64
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 20_000 } else { 1_000_000 };
+
+    // Host-measured per-request service time on a realistic small model.
+    let json = synth_model("obs_probe", &mlp_spec(&[64, 64, 32], Dtype::I8), 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 16;
+    cfg.tiles_per_layer = Some(2);
+    let pfw = compile_partitioned(&json, cfg.clone(), &PartitionOptions::default())
+        .expect("probe model compiles")
+        .firmware;
+    let features = pfw.input_features();
+    let mut rng = Pcg32::seed_from_u64(11);
+    let data: Vec<i32> = (0..cfg.batch * features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+    let act = Activation::new(cfg.batch, features, data).expect("probe activation");
+    execute_partitioned(&pfw, &act).expect("warmup batch");
+    let reps = if smoke { 4 } else { 20 };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        execute_partitioned(&pfw, &act).expect("probe batch");
+    }
+    let batch_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+    let request_us = batch_us / cfg.batch as f64;
+
+    // Primitive span cost, disabled and enabled, on private tracers (the
+    // code path is identical to the global tracer's).
+    let disabled = Tracer::new();
+    let disabled_ns = span_cost_ns(&disabled, iters);
+    assert!(disabled.drain().records.is_empty(), "disabled tracer recorded");
+
+    let enabled = Tracer::new();
+    enabled.enable();
+    let enabled_ns = span_cost_ns(&enabled, iters);
+    let batch = enabled.drain();
+    assert!(
+        batch.records.len() as u64 + batch.dropped >= iters as u64,
+        "enabled tracer lost records: {} + {} < {iters}",
+        batch.records.len(),
+        batch.dropped
+    );
+
+    let disabled_pct = 100.0 * SPANS_PER_REQUEST as f64 * disabled_ns / (request_us * 1e3);
+    let enabled_pct = 100.0 * SPANS_PER_REQUEST as f64 * enabled_ns / (request_us * 1e3);
+
+    println!("# obs_overhead — tracing hot-path budget");
+    println!("per-request service time: {request_us:.2} µs ({batch_us:.1} µs / batch of {})", cfg.batch);
+    println!("span cost disabled: {disabled_ns:.1} ns   enabled: {enabled_ns:.1} ns");
+    println!(
+        "per-request overhead at {SPANS_PER_REQUEST} spans: \
+         disabled {disabled_pct:.3}% (budget 1%)   enabled {enabled_pct:.3}% (budget 5%)"
+    );
+
+    if smoke {
+        println!("smoke mode: budgets reported, not asserted");
+        return;
+    }
+    assert!(
+        disabled_pct < 1.0,
+        "disabled tracing costs {disabled_pct:.3}% of request service time (budget 1%)"
+    );
+    assert!(
+        enabled_pct < 5.0,
+        "enabled tracing costs {enabled_pct:.3}% of request service time (budget 5%)"
+    );
+    println!("budgets: OK");
+}

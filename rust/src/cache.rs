@@ -128,11 +128,14 @@ pub fn structural_key(json: &JsonModel, cfg: &CompileConfig) -> CacheKey {
 }
 
 /// Hit/miss counters of a cache (hits + misses = compile requests served).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: usize,
     pub misses: usize,
     pub entries: usize,
+    /// Cached *failures* (infeasible candidates remembered so later
+    /// sweeps reject them without re-running the pass pipeline).
+    pub negative_entries: usize,
 }
 
 impl CacheStats {
@@ -154,11 +157,12 @@ impl std::fmt::Display for CacheStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} hits / {} compiles ({:.0}% hit rate, {} cached)",
+            "{} hits / {} compiles ({:.0}% hit rate, {} cached, {} negative)",
             self.hits,
             self.requests(),
             100.0 * self.hit_ratio(),
-            self.entries
+            self.entries,
+            self.negative_entries
         )
     }
 }
@@ -185,10 +189,12 @@ impl FirmwareCache {
     }
 
     pub fn stats(&self) -> CacheStats {
+        let entries = self.entries.lock().unwrap();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.entries.lock().unwrap().len(),
+            entries: entries.len(),
+            negative_entries: entries.values().filter(|e| e.is_err()).count(),
         }
     }
 
@@ -218,9 +224,16 @@ impl FirmwareCache {
         let key = structural_key(json, &cfg);
         if let Some(entry) = self.entries.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::tracer()
+                .instant("cache", "fw_cache_hit")
+                .with_arg("key", key.to_string())
+                .with_arg("negative", entry.is_err());
             return Self::rehydrate(entry, json, &cfg);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        let _span = crate::obs::tracer()
+            .span("cache", "fw_cache_miss_compile")
+            .with_arg("key", key.to_string());
         let result = compile(json, cfg);
         let stored: CachedCompile = match &result {
             Ok(m) => Ok(m.clone()),
@@ -249,6 +262,10 @@ impl FirmwareCache {
         }
         self.misses.fetch_add(cold.len(), Ordering::Relaxed);
         self.hits.fetch_add(jobs.len() - cold.len(), Ordering::Relaxed);
+        let _span = crate::obs::tracer()
+            .span("cache", "fw_cache_compile_many")
+            .with_arg("jobs", jobs.len())
+            .with_arg("cold", cold.len());
         if !cold.is_empty() {
             let workers = std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -357,6 +374,7 @@ mod tests {
         assert_eq!(e1, e2);
         let s = cache.stats();
         assert_eq!((s.misses, s.hits), (1, 1));
+        assert_eq!(s.negative_entries, 1, "a cached failure is a negative entry");
     }
 
     #[test]

@@ -100,6 +100,7 @@ pub struct AdmissionStats {
     shed_queue_full: AtomicU64,
     shed_deadline: AtomicU64,
     rejected_malformed: AtomicU64,
+    rejected_stopped: AtomicU64,
 }
 
 impl AdmissionStats {
@@ -126,7 +127,13 @@ impl AdmissionStats {
             AdmissionError::FeatureMismatch { .. } => {
                 self.rejected_malformed.fetch_add(1, Ordering::Relaxed);
             }
-            AdmissionError::Stopped => {}
+            AdmissionError::Stopped => {
+                // Counted under its own reason: without this, `submitted`
+                // drifts ahead of the per-reason sum and the conservation
+                // identity submitted == admitted + shed + rejected breaks
+                // whenever a request races server shutdown.
+                self.rejected_stopped.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
@@ -137,6 +144,7 @@ impl AdmissionStats {
             shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
             shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
             rejected_malformed: self.rejected_malformed.load(Ordering::Relaxed),
+            rejected_stopped: self.rejected_stopped.load(Ordering::Relaxed),
         }
     }
 }
@@ -151,12 +159,25 @@ pub struct AdmissionReport {
     pub shed_queue_full: u64,
     pub shed_deadline: u64,
     pub rejected_malformed: u64,
+    pub rejected_stopped: u64,
 }
 
 impl AdmissionReport {
     /// Well-formed requests the server chose not to serve.
     pub fn shed(&self) -> u64 {
         self.shed_queue_full + self.shed_deadline
+    }
+
+    /// Requests refused for non-load reasons (malformed or server
+    /// stopped).
+    pub fn rejected(&self) -> u64 {
+        self.rejected_malformed + self.rejected_stopped
+    }
+
+    /// The conservation identity every snapshot must satisfy: each
+    /// submitted request landed in exactly one outcome bucket.
+    pub fn is_conserved(&self) -> bool {
+        self.submitted == self.admitted + self.shed() + self.rejected()
     }
 
     /// Shed fraction of everything submitted (0.0 when idle).
@@ -178,6 +199,7 @@ impl AdmissionReport {
             rejected_malformed: self
                 .rejected_malformed
                 .saturating_sub(earlier.rejected_malformed),
+            rejected_stopped: self.rejected_stopped.saturating_sub(earlier.rejected_stopped),
         }
     }
 }
@@ -223,20 +245,29 @@ mod tests {
         stats.reject(&AdmissionError::QueueFull { depth: 1, capacity: 1 });
         stats.reject(&AdmissionError::DeadlineRisk { projected_us: 2.0, budget_us: 1.0 });
         stats.reject(&AdmissionError::FeatureMismatch { expected: 8, got: 7 });
+        stats.reject(&AdmissionError::Stopped);
         let r = stats.report();
-        assert_eq!(r.submitted, 5);
+        assert_eq!(r.submitted, 6);
         assert_eq!(r.admitted, 2);
         assert_eq!(r.shed_queue_full, 1);
         assert_eq!(r.shed_deadline, 1);
         assert_eq!(r.rejected_malformed, 1);
+        assert_eq!(r.rejected_stopped, 1);
         assert_eq!(r.shed(), 2);
-        assert!((r.shed_ratio() - 0.4).abs() < 1e-12);
+        assert_eq!(r.rejected(), 2);
+        // Conservation holds even with Stopped rejections in the mix
+        // (regression: Stopped used to bump `submitted` with no reason
+        // counter, leaving the identity short by one per occurrence).
+        assert!(r.is_conserved());
+        assert!((r.shed_ratio() - 2.0 / 6.0).abs() < 1e-12);
         // Windows difference cleanly.
         stats.admit();
         let w = stats.report().delta(&r);
         assert_eq!(w.submitted, 1);
         assert_eq!(w.admitted, 1);
         assert_eq!(w.shed(), 0);
+        assert_eq!(w.rejected(), 0);
+        assert!(w.is_conserved());
         assert_eq!(w.shed_ratio(), 0.0);
     }
 }

@@ -23,6 +23,8 @@
 use super::admission::{admit, AdmissionConfig, AdmissionError, AdmissionReport, AdmissionStats};
 use super::batcher::Request;
 use super::metrics::{Metrics, MetricsReport};
+use crate::cache::{CacheStats, FirmwareCache};
+use crate::obs;
 use crate::partition::{analyze_pipeline, execute_partitioned, PartitionedFirmware};
 use crate::sim::engine::EngineModel;
 use crate::sim::functional::Activation;
@@ -69,6 +71,9 @@ impl Default for ContinuousPolicy {
 struct Pending {
     req: Request,
     reply: Reply,
+    /// Tracer-timeline admission timestamp (µs); the claiming worker
+    /// closes the queue-wait span with it. 0 while tracing is disabled.
+    enqueued_us: u64,
 }
 
 /// Mutable queue state, guarded by one mutex (submissions and batch
@@ -101,6 +106,14 @@ struct Shared {
     metrics: Mutex<Metrics>,
     next_id: AtomicU64,
     batch_log: Mutex<Vec<Vec<u64>>>,
+    /// Logical trace track the per-request queue-wait spans land on
+    /// (their start and end are observed on different threads).
+    queue_track: u32,
+    /// Worker labels for trace tracks ("worker-0", "worker-1", …).
+    worker_seq: AtomicU64,
+    /// Firmware cache whose counters this server surfaces in snapshots
+    /// (attached when an autoscaler re-plans against one).
+    cache: Mutex<Option<Arc<FirmwareCache>>>,
 }
 
 /// A pending reply for one admitted request. Dropping the ticket abandons
@@ -136,12 +149,15 @@ pub struct ContinuousClient {
 impl ContinuousClient {
     /// Submit one sample. Non-blocking: admission is decided immediately.
     pub fn submit(&self, features: Vec<i32>) -> Result<InferTicket, AdmissionError> {
+        let tr = obs::tracer();
+        let mut span = tr.span("serve", "submit");
         if features.len() != self.shared.features {
             let err = AdmissionError::FeatureMismatch {
                 expected: self.shared.features,
                 got: features.len(),
             };
             self.shared.stats.reject(&err);
+            span.arg("outcome", "rejected_malformed");
             return Err(err);
         }
         let (tx, rx) = sync_channel(1);
@@ -151,6 +167,7 @@ impl ContinuousClient {
             if st.stopped {
                 let err = AdmissionError::Stopped;
                 self.shared.stats.reject(&err);
+                span.arg("outcome", "rejected_stopped");
                 return Err(err);
             }
             let workers = st.live.saturating_sub(st.retiring).max(1);
@@ -162,13 +179,26 @@ impl ContinuousClient {
                 st.batch_us_ewma,
             ) {
                 self.shared.stats.reject(&err);
+                span.arg(
+                    "outcome",
+                    match &err {
+                        AdmissionError::QueueFull { .. } => "shed_queue_full",
+                        AdmissionError::DeadlineRisk { .. } => "shed_deadline",
+                        _ => "rejected",
+                    },
+                );
+                span.arg("queued", st.pending.len());
                 return Err(err);
             }
             st.pending.push_back(Pending {
                 req: Request { id, features, enqueued: Instant::now() },
                 reply: tx,
+                enqueued_us: tr.now_us(),
             });
             self.shared.stats.admit();
+            span.arg("outcome", "admitted");
+            span.arg("id", id);
+            span.arg("queued", st.pending.len());
         }
         self.shared.work.notify_all();
         Ok(InferTicket { id, rx })
@@ -202,6 +232,10 @@ pub struct ServingSnapshot {
     pub batch: usize,
     /// EWMA wall-clock batch service time, µs (0 before the first batch).
     pub batch_us: f64,
+    /// Firmware-cache counters, when a cache is attached
+    /// ([`ContinuousServer::attach_cache`]) — surfaces re-planning
+    /// hit/miss/negative-entry behaviour next to the serving signals.
+    pub cache: Option<CacheStats>,
 }
 
 /// The running continuous-batching server.
@@ -239,6 +273,9 @@ impl ContinuousServer {
             metrics: Mutex::new(Metrics::new()),
             next_id: AtomicU64::new(0),
             batch_log: Mutex::new(Vec::new()),
+            queue_track: obs::tracer().logical_track("queue"),
+            worker_seq: AtomicU64::new(0),
+            cache: Mutex::new(None),
         });
         let mut handles = Vec::with_capacity(replicas);
         for _ in 0..replicas {
@@ -277,6 +314,14 @@ impl ContinuousServer {
         self.shared.stats.report()
     }
 
+    /// Surface a firmware cache's counters in every later
+    /// [`ContinuousServer::snapshot`] (typically the autoscaler's
+    /// re-planning cache, so serve-loop summaries show hit/miss/negative
+    /// counts next to the admission funnel).
+    pub fn attach_cache(&self, cache: Arc<FirmwareCache>) {
+        *self.shared.cache.lock().unwrap() = Some(cache);
+    }
+
     /// One consistent observation for the autoscaler.
     pub fn snapshot(&self) -> ServingSnapshot {
         let (queued, replicas, batch_us) = {
@@ -291,6 +336,7 @@ impl ContinuousServer {
             replicas,
             batch: self.shared.batch,
             batch_us,
+            cache: self.shared.cache.lock().unwrap().as_ref().map(|c| c.stats()),
         }
     }
 
@@ -355,7 +401,13 @@ impl ContinuousServer {
 /// stopped queue runs dry.
 fn worker_loop(shared: &Shared) {
     let batch = shared.batch;
+    let tr = obs::tracer();
+    tr.set_track_name(format!(
+        "worker-{}",
+        shared.worker_seq.fetch_add(1, Ordering::Relaxed)
+    ));
     loop {
+        let form_start_us = tr.now_us();
         let taken: Vec<Pending> = {
             let mut st = shared.state.lock().unwrap();
             loop {
@@ -394,6 +446,33 @@ fn worker_loop(shared: &Shared) {
             st.pending.drain(..take).collect()
         };
         let occupancy = taken.len();
+        if tr.is_enabled() {
+            let now = tr.now_us();
+            // The wait for a claimable batch, on this worker's track.
+            tr.record_span(
+                "serve",
+                "batch_form",
+                tr.current_track(),
+                form_start_us,
+                now,
+                vec![("occupancy", occupancy.into())],
+            );
+            // Each claimed request's queue residency, on the queue track.
+            for p in &taken {
+                tr.record_span(
+                    "serve",
+                    "queue_wait",
+                    shared.queue_track,
+                    p.enqueued_us,
+                    now,
+                    vec![("id", p.req.id.into())],
+                );
+            }
+        }
+        let exec_span = tr
+            .span("serve", "batch_execute")
+            .with_arg("occupancy", occupancy)
+            .with_arg("batch", batch);
         let t0 = Instant::now();
         let mut data = vec![0i32; batch * shared.features];
         for (i, p) in taken.iter().enumerate() {
@@ -404,6 +483,7 @@ fn worker_loop(shared: &Shared) {
             .expect("admission guarantees request shapes");
         let outs = execute_partitioned(&shared.pfw, &act).expect("pipeline execution failed");
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+        drop(exec_span);
         {
             let mut st = shared.state.lock().unwrap();
             st.batch_us_ewma = if st.batch_us_ewma == 0.0 {
@@ -419,11 +499,18 @@ fn worker_loop(shared: &Shared) {
                 .unwrap()
                 .push(taken.iter().map(|p| p.req.id).collect());
         }
+        let dispatch_span = tr.span("serve", "dispatch").with_arg("occupancy", occupancy);
         let mut delays = Vec::with_capacity(occupancy);
         for (slot, p) in taken.into_iter().enumerate() {
             let _ = p.reply.send(outs.iter().map(|o| o.row(slot).to_vec()).collect());
             delays.push(p.req.enqueued.elapsed());
+            if tr.is_enabled() {
+                tr.instant("serve", "complete")
+                    .with_arg("id", p.req.id)
+                    .with_arg("latency_us", p.req.enqueued.elapsed().as_secs_f64() * 1e6);
+            }
         }
+        drop(dispatch_span);
         shared
             .metrics
             .lock()

@@ -1,7 +1,15 @@
-//! Serving metrics: latency percentiles, throughput, batch occupancy, and
-//! per-partition pipeline-stage health (queue depth, busy fraction) for
-//! multi-array deployments.
+//! Serving metrics: latency distributions, throughput, batch occupancy,
+//! and per-partition pipeline-stage health (queue depth, busy fraction)
+//! for multi-array deployments.
+//!
+//! Latencies accumulate into a mergeable log-bucketed
+//! [`LatencyHistogram`] (bounded memory under sustained load) instead of
+//! an unbounded sorted-sample vector. Reports *carry* the histogram, so
+//! fleet-level [`MetricsReport::merged`] percentiles are computed from
+//! the pooled distribution — exact by construction, not a worst-replica
+//! or request-weighted approximation.
 
+use crate::obs::LatencyHistogram;
 use std::time::Duration;
 
 /// Accumulator for one pipeline stage (one partition / array).
@@ -17,7 +25,7 @@ struct StageAccum {
 /// Streaming metrics accumulator.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    latencies_us: Vec<f64>,
+    latency: LatencyHistogram,
     batches: usize,
     requests: usize,
     padded_rows: usize,
@@ -49,6 +57,10 @@ pub struct MetricsReport {
     pub requests: usize,
     pub batches: usize,
     pub mean_batch_occupancy: f64,
+    /// The full latency distribution this report was derived from.
+    /// Carried so merges pool distributions instead of approximating from
+    /// summary points; also feeds the Prometheus histogram exposition.
+    pub latency: LatencyHistogram,
     pub p50_latency_us: f64,
     pub p99_latency_us: f64,
     pub max_latency_us: f64,
@@ -66,6 +78,7 @@ impl MetricsReport {
             requests: 0,
             batches: 0,
             mean_batch_occupancy: 0.0,
+            latency: LatencyHistogram::new(),
             p50_latency_us: 0.0,
             p99_latency_us: 0.0,
             max_latency_us: 0.0,
@@ -74,46 +87,40 @@ impl MetricsReport {
         }
     }
 
+    fn quantiles_from_hist(&mut self) {
+        self.p50_latency_us = self.latency.quantile_us(0.50);
+        self.p99_latency_us = self.latency.quantile_us(0.99);
+        self.max_latency_us = self.latency.max_us();
+    }
+
     /// Aggregate per-replica reports into one fleet-level view: requests,
     /// batches and device time sum; occupancy is batch-weighted.
     ///
-    /// Latency semantics (exact fleet percentiles would need the pooled
-    /// raw samples, which replicas do not ship):
-    /// * **p50** is merged *request-weighted* — each replica's median
-    ///   contributes proportionally to the requests it served. Taking the
-    ///   worst replica (the old rule) badly overstated the fleet median
-    ///   under skewed load: one replica serving a handful of slow requests
-    ///   dominated the p50 of a fleet that answered thousands quickly.
-    /// * **p99** stays the *worst replica's* p99 — a request-weighted mean
-    ///   would understate the pooled tail whenever a slow replica serves a
-    ///   small share of traffic (10 requests at 100 µs next to 100 at
-    ///   10 µs pool to a 100 µs p99, not 18 µs), and an SLO check on the
-    ///   tail must not pass on an average. The max is an upper bound of
-    ///   the pooled p99 and exact when the slow replica carries ≥ 1% of
-    ///   the traffic.
-    /// * **max_latency_us** is a true maximum over replicas.
+    /// Latency percentiles are computed on the element-wise **merged
+    /// histogram** — bit-identical to pooling every replica's samples
+    /// into one histogram. This replaces two historical approximations
+    /// that are now regression-pinned: a request-weighted p50 (biased
+    /// whenever replicas are asymmetric) and a worst-replica p99, which
+    /// over-estimated the fleet tail whenever the slow replica carried
+    /// less than 1% of traffic (10 requests at 100 µs next to 990 at
+    /// 10 µs pool to a ~10 µs p99, not 100 µs).
     ///
     /// Per-stage rows are dropped: stage indices are per-replica pipeline
     /// positions, not fleet-wide entities.
     pub fn merged(reports: &[MetricsReport]) -> MetricsReport {
         let mut out = MetricsReport::empty();
         let mut occupancy_weighted = 0.0;
-        let mut p50_weighted = 0.0;
         for r in reports {
             out.requests += r.requests;
             out.batches += r.batches;
             out.device_busy_us += r.device_busy_us;
             occupancy_weighted += r.mean_batch_occupancy * r.batches as f64;
-            p50_weighted += r.p50_latency_us * r.requests as f64;
-            out.p99_latency_us = out.p99_latency_us.max(r.p99_latency_us);
-            out.max_latency_us = out.max_latency_us.max(r.max_latency_us);
+            out.latency.merge(&r.latency);
         }
         if out.batches > 0 {
             out.mean_batch_occupancy = occupancy_weighted / out.batches as f64;
         }
-        if out.requests > 0 {
-            out.p50_latency_us = p50_weighted / out.requests as f64;
-        }
+        out.quantiles_from_hist();
         out
     }
 }
@@ -129,7 +136,7 @@ impl Metrics {
         self.padded_rows += batch - occupancy;
         self.device_busy_us += device_us;
         for l in latencies {
-            self.latencies_us.push(l.as_secs_f64() * 1e6);
+            self.latency.record(*l);
         }
     }
 
@@ -156,26 +163,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> MetricsReport {
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        // Nearest-rank with linear interpolation between the straddling
-        // samples. The old `((n-1)*p).round()` collapsed p99 onto the max
-        // for any window under ~50 samples and biased p50 on even-length
-        // windows (both pinned by `percentile_interpolation_small_windows`).
-        let pct = |p: f64| -> f64 {
-            if sorted.is_empty() {
-                return 0.0;
-            }
-            let rank = (sorted.len() - 1) as f64 * p;
-            let lo = rank.floor() as usize;
-            let hi = rank.ceil() as usize;
-            if lo == hi {
-                sorted[lo]
-            } else {
-                sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
-            }
-        };
-        MetricsReport {
+        let mut out = MetricsReport {
             requests: self.requests,
             batches: self.batches,
             mean_batch_occupancy: if self.batches == 0 {
@@ -185,9 +173,10 @@ impl Metrics {
                     * (self.requests + self.padded_rows) as f64
                     / self.batches as f64
             },
-            p50_latency_us: pct(0.50),
-            p99_latency_us: pct(0.99),
-            max_latency_us: sorted.last().copied().unwrap_or(0.0),
+            latency: self.latency.clone(),
+            p50_latency_us: 0.0,
+            p99_latency_us: 0.0,
+            max_latency_us: 0.0,
             device_busy_us: self.device_busy_us,
             stages: self
                 .stages
@@ -209,7 +198,9 @@ impl Metrics {
                     },
                 })
                 .collect(),
-        }
+        };
+        out.quantiles_from_hist();
+        out
     }
 }
 
@@ -224,39 +215,34 @@ mod tests {
         m.record_batch(100, 128, &lat, 500.0);
         let r = m.report();
         assert_eq!(r.requests, 100);
-        assert!((r.p50_latency_us - 50.0).abs() <= 1.5);
-        assert!((r.p99_latency_us - 99.0).abs() <= 1.5);
+        // Histogram buckets grow by 2^(1/8): quantiles are within ±5%.
+        assert!((r.p50_latency_us - 50.0).abs() / 50.0 < 0.05, "p50 {}", r.p50_latency_us);
+        assert!((r.p99_latency_us - 99.0).abs() / 99.0 < 0.05, "p99 {}", r.p99_latency_us);
+        // Min/max/count/sum are exact.
         assert_eq!(r.max_latency_us, 100.0);
+        assert_eq!(r.latency.count(), 100);
+        assert!((r.latency.sum_us() - 5050.0).abs() < 1e-6);
         assert_eq!(r.device_busy_us, 500.0);
     }
 
     #[test]
-    fn percentile_interpolation_small_windows() {
-        // Regression for the `((n-1)*p).round()` index: with 10 samples it
-        // returned sorted[9] for p99 — the max — hiding every sub-max tail
-        // sample in small windows. Interpolated rank 8.91 sits just below.
+    fn small_window_percentiles_stay_inside_the_samples() {
+        // Histogram quantiles are clamped into [min, max]: a single
+        // sample is every percentile exactly, and p99 never exceeds the
+        // observed max in small windows.
+        let mut m = Metrics::new();
+        m.record_batch(1, 1, &[Duration::from_micros(7)], 0.0);
+        let r = m.report();
+        assert_eq!(r.p50_latency_us, 7.0);
+        assert_eq!(r.p99_latency_us, 7.0);
+        assert_eq!(r.max_latency_us, 7.0);
+
         let mut m = Metrics::new();
         let lat: Vec<Duration> = (1..=10).map(Duration::from_micros).collect();
         m.record_batch(10, 16, &lat, 0.0);
         let r = m.report();
-        assert!((r.p99_latency_us - 9.91).abs() < 1e-6, "p99 {}", r.p99_latency_us);
-        assert!(
-            r.p99_latency_us < r.max_latency_us,
-            "p99 must not collapse onto the max in small windows"
-        );
-        // Even-length window: the median is the mean of the two middle
-        // samples, not whichever one rounding lands on.
-        let mut m = Metrics::new();
-        let lat: Vec<Duration> = (1..=4).map(Duration::from_micros).collect();
-        m.record_batch(4, 4, &lat, 0.0);
-        let r = m.report();
-        assert!((r.p50_latency_us - 2.5).abs() < 1e-6, "p50 {}", r.p50_latency_us);
-        // A single sample is every percentile.
-        let mut m = Metrics::new();
-        m.record_batch(1, 1, &[Duration::from_micros(7)], 0.0);
-        let r = m.report();
-        assert!((r.p50_latency_us - 7.0).abs() < 1e-6);
-        assert!((r.p99_latency_us - 7.0).abs() < 1e-6);
+        assert!(r.p99_latency_us <= r.max_latency_us);
+        assert!(r.p50_latency_us >= 1.0 && r.p50_latency_us <= 10.0);
     }
 
     #[test]
@@ -265,10 +251,11 @@ mod tests {
         assert_eq!(r.requests, 0);
         assert_eq!(r.p99_latency_us, 0.0);
         assert!(r.stages.is_empty());
+        assert!(r.latency.is_empty());
     }
 
     #[test]
-    fn merged_reports_sum_and_weight_latency() {
+    fn merged_reports_pool_distributions_exactly() {
         let mut a = Metrics::new();
         a.record_batch(4, 4, &[Duration::from_micros(10); 4], 100.0);
         let mut b = Metrics::new();
@@ -278,13 +265,19 @@ mod tests {
         assert_eq!(m.requests, 10);
         assert_eq!(m.batches, 3);
         assert!((m.device_busy_us - 260.0).abs() < 1e-9);
-        // The tail (p99, max) is conservative; the median is
-        // request-weighted.
         assert_eq!(m.max_latency_us, 50.0);
-        let (pa, pb) = (a.report(), b.report());
-        assert_eq!(m.p99_latency_us, pa.p99_latency_us.max(pb.p99_latency_us));
-        let want_p50 = (pa.p50_latency_us * 4.0 + pb.p50_latency_us * 6.0) / 10.0;
-        assert!((m.p50_latency_us - want_p50).abs() < 1e-9);
+
+        // The merged report is bit-identical to recording every sample
+        // into one accumulator.
+        let mut pooled = Metrics::new();
+        pooled.record_batch(4, 4, &[Duration::from_micros(10); 4], 100.0);
+        pooled.record_batch(2, 4, &[Duration::from_micros(50); 2], 80.0);
+        pooled.record_batch(4, 4, &[Duration::from_micros(20); 4], 80.0);
+        let p = pooled.report();
+        assert_eq!(m.latency, p.latency);
+        assert_eq!(m.p50_latency_us.to_bits(), p.p50_latency_us.to_bits());
+        assert_eq!(m.p99_latency_us.to_bits(), p.p99_latency_us.to_bits());
+
         // Batch-weighted occupancy: (4*1 + 3*2) / 3 batches = 10/3.
         assert!((m.mean_batch_occupancy - 10.0 / 3.0).abs() < 1e-9);
         // Identity on the empty set.
@@ -294,29 +287,59 @@ mod tests {
     }
 
     #[test]
-    fn merged_percentiles_track_load_not_the_worst_replica() {
-        // Regression for the worst-replica merge rule: replica `fast`
-        // serves 100 requests at 10 µs, replica `slow` serves 10 at
-        // 100 µs. The fleet *median* must sit near the traffic (~18 µs),
-        // not jump to the slow replica's 100 µs — while the tail (p99,
-        // max) must stay at 100 µs: pooled, the slowest ~9% of requests
-        // all took 100 µs, so a request-weighted p99 of 18 µs would let a
-        // 50 µs SLO check pass with >1% of traffic in violation.
+    fn merged_tail_is_pooled_not_worst_replica() {
+        // Regression for the old worst-replica p99 merge rule. Replica
+        // `fast` serves 990 requests at 10 µs; replica `slow` serves 10
+        // at 100 µs — 1% of traffic. Pooled, the p99 sits at ~10 µs (99%
+        // of requests finished in 10 µs); the old rule reported the slow
+        // replica's 100 µs, a 10× over-estimate that would page an
+        // operator for a fleet comfortably inside its SLO.
         let mut fast = Metrics::new();
-        for _ in 0..25 {
-            fast.record_batch(4, 4, &[Duration::from_micros(10); 4], 40.0);
+        for _ in 0..99 {
+            fast.record_batch(10, 10, &[Duration::from_micros(10); 10], 100.0);
         }
         let mut slow = Metrics::new();
-        for _ in 0..5 {
-            slow.record_batch(2, 2, &[Duration::from_micros(100); 2], 200.0);
-        }
-        let m = MetricsReport::merged(&[fast.report(), slow.report()]);
-        assert_eq!(m.requests, 110);
-        let want = (10.0 * 100.0 + 100.0 * 10.0) / 110.0; // ≈ 18.18 µs
-        assert!((m.p50_latency_us - want).abs() < 1e-9, "p50 {}", m.p50_latency_us);
-        assert!(m.p50_latency_us < 100.0, "median must not be the worst replica");
-        assert_eq!(m.p99_latency_us, 100.0, "tail percentile must stay conservative");
+        slow.record_batch(10, 10, &[Duration::from_micros(100); 10], 1000.0);
+        let (fr, sr) = (fast.report(), slow.report());
+        let worst_replica_p99 = fr.p99_latency_us.max(sr.p99_latency_us);
+        assert_eq!(worst_replica_p99, 100.0, "old rule: worst replica dominates");
+
+        let m = MetricsReport::merged(&[fr, sr]);
+        assert_eq!(m.requests, 1000);
+        assert!(
+            (m.p50_latency_us - 10.0).abs() / 10.0 < 0.05,
+            "pooled median ~10 µs, got {}",
+            m.p50_latency_us
+        );
+        assert!(
+            (m.p99_latency_us - 10.0).abs() / 10.0 < 0.05,
+            "pooled p99 ~10 µs (990 of 1000 at rank 990), got {}",
+            m.p99_latency_us
+        );
+        assert!(
+            m.p99_latency_us < worst_replica_p99 / 5.0,
+            "exact merged p99 must undercut the worst-replica over-estimate"
+        );
+        // The true maximum is still exact.
         assert_eq!(m.max_latency_us, 100.0);
+    }
+
+    #[test]
+    fn merged_tail_stays_conservative_when_slow_traffic_is_over_one_percent() {
+        // 100 fast requests at 10 µs + 10 slow at 100 µs: the slowest 9%
+        // of pooled traffic took 100 µs, so pooled p99 must report it.
+        let mut fast = Metrics::new();
+        for _ in 0..10 {
+            fast.record_batch(10, 10, &[Duration::from_micros(10); 10], 100.0);
+        }
+        let mut slow = Metrics::new();
+        slow.record_batch(10, 10, &[Duration::from_micros(100); 10], 1000.0);
+        let m = MetricsReport::merged(&[fast.report(), slow.report()]);
+        assert!(
+            (m.p99_latency_us - 100.0).abs() / 100.0 < 0.05,
+            "pooled p99 ~100 µs, got {}",
+            m.p99_latency_us
+        );
     }
 
     #[test]

@@ -246,12 +246,21 @@ fn stage_loop(
     device_us: f64,
 ) {
     let fw = &pfw.partitions[i];
+    let tr = crate::obs::tracer();
+    tr.set_track_name(format!("stage-{i}"));
     let started = Instant::now();
     let mut busy = Duration::ZERO;
     while let Ok(mut job) = rx.recv() {
         let depth = my_depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
         let t0 = Instant::now();
-        let mut outs = execute_all(fw, &job.act).expect("partition execution failed");
+        let mut outs = {
+            let _span = tr
+                .span("serve", "stage")
+                .with_arg("partition", i)
+                .with_arg("occupancy", job.occupancy)
+                .with_arg("queue_depth", depth);
+            execute_all(fw, &job.act).expect("partition execution failed")
+        };
         busy += t0.elapsed();
         for (slot, o) in pfw.outputs.iter().enumerate() {
             if o.partition == i {

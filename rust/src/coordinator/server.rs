@@ -180,7 +180,13 @@ fn run_batch(
 ) {
     let Some(batch) = batcher.flush(Instant::now()) else { return };
     let started = Instant::now();
-    let outs = execute_all(fw, &batch.activation).expect("firmware execution failed");
+    let outs = {
+        let _span = crate::obs::tracer()
+            .span("serve", "batch_execute")
+            .with_arg("occupancy", batch.occupancy)
+            .with_arg("batch", fw.batch);
+        execute_all(fw, &batch.activation).expect("firmware execution failed")
+    };
     let exec_time = started.elapsed();
     let mut delays = Vec::with_capacity(batch.occupancy);
     for (slot, id) in batch.ids.iter().enumerate() {

@@ -32,6 +32,7 @@ use crate::cache::{CacheStats, FirmwareCache};
 use crate::coordinator::{AdmissionReport, ServingSnapshot};
 use crate::frontend::{CompileConfig, JsonModel};
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Autoscaler knobs.
@@ -120,7 +121,7 @@ pub struct ReplanContext {
     base: CompileConfig,
     fleet: Fleet,
     opts: PlannerOptions,
-    cache: FirmwareCache,
+    cache: Arc<FirmwareCache>,
 }
 
 impl ReplanContext {
@@ -130,12 +131,19 @@ impl ReplanContext {
         fleet: Fleet,
         opts: PlannerOptions,
     ) -> ReplanContext {
-        ReplanContext { json, base, fleet, opts, cache: FirmwareCache::new() }
+        ReplanContext { json, base, fleet, opts, cache: Arc::new(FirmwareCache::new()) }
     }
 
     /// Compile/hit counters of the shared cache across every plan so far.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// The shared firmware cache itself — `Arc` so a serving snapshot
+    /// source (e.g. `ContinuousServer::attach_cache`) can surface the
+    /// same counters the re-planner drives.
+    pub fn cache(&self) -> &Arc<FirmwareCache> {
+        &self.cache
     }
 }
 
@@ -226,6 +234,9 @@ impl Autoscaler {
             return Ok(None);
         }
         let slo = Slo::new(target_sps, self.budget_us);
+        let _span = crate::obs::tracer()
+            .span("deploy", "replan")
+            .with_arg("target_sps", target_sps);
         let outcome = plan_with(&ctx.json, &ctx.base, &ctx.fleet, &slo, &ctx.opts, &ctx.cache)?;
         match outcome {
             PlanOutcome::Feasible(plans) => {
@@ -296,7 +307,7 @@ impl Autoscaler {
             target = target.max(current_r + 1);
         }
         let target = target.clamp(self.cfg.min_replicas, self.cfg.max_replicas.max(1));
-        if target > current_r {
+        let decision = if target > current_r {
             self.last_scale_at = Some(now);
             ScaleDecision::Up {
                 from: current_r,
@@ -330,7 +341,31 @@ impl Autoscaler {
             }
         } else {
             ScaleDecision::Hold
+        };
+        // Every decision becomes a trace instant carrying the window
+        // signals that triggered it — the "why did it scale at t=3.2s"
+        // answer lives in the trace, not in a log line to correlate.
+        let tr = crate::obs::tracer();
+        if tr.is_enabled() {
+            tr.instant(
+                "autoscale",
+                match &decision {
+                    ScaleDecision::Hold => "autoscale_hold",
+                    ScaleDecision::Up { .. } => "autoscale_up",
+                    ScaleDecision::Down { .. } => "autoscale_down",
+                },
+            )
+            .with_arg("current_r", current_r)
+            .with_arg("target", decision.target().unwrap_or(current_r))
+            .with_arg("demand", demand)
+            .with_arg("arrival_sps", burn.arrival_sps)
+            .with_arg("served_sps", burn.served_sps)
+            .with_arg("p99_ratio", burn.p99_ratio)
+            .with_arg("shed_ratio", burn.shed_ratio)
+            .with_arg("queue_ratio", burn.queue_ratio)
+            .with_arg("per_replica_sps", burn.per_replica_sps);
         }
+        decision
     }
 }
 

@@ -174,6 +174,12 @@ pub fn plan_with(
 ) -> Result<PlanOutcome> {
     slo.validate()?;
     fleet.validate()?;
+    let tr = crate::obs::tracer();
+    let mut sweep_span = tr
+        .span("deploy", "plan_sweep")
+        .with_arg("model", json.name.clone())
+        .with_arg("target_sps", slo.target_sps)
+        .with_arg("latency_budget_us", slo.latency_budget_us);
     let batches: Vec<usize> =
         if opts.batches.is_empty() { vec![base.batch] } else { opts.batches.clone() };
     let mut plans: Vec<DeploymentPlan> = Vec::new();
@@ -186,6 +192,7 @@ pub fn plan_with(
         for &batch in &batches {
             for k in 1..=opts.max_partitions.max(1) {
                 let tag = format!("{}/K={k}/batch={batch}", group.device);
+                let mut cand_span = tr.span("deploy", "candidate").with_arg("tag", tag.clone());
                 let mut cfg = base.clone();
                 cfg.device = group.device.clone();
                 cfg.batch = batch;
@@ -193,6 +200,7 @@ pub fn plan_with(
                 let pm = match compile_partitioned_with(json, cfg, &popts, cache) {
                     Ok(pm) => pm,
                     Err(e) => {
+                        cand_span.arg("outcome", "compile_error");
                         reasons.push(format!("{tag}: does not compile ({e:#})"));
                         continue;
                     }
@@ -201,6 +209,7 @@ pub fn plan_with(
                 let pfw = Arc::new(pm.firmware);
                 let rep = analyze_pipeline(&pfw, &opts.engine);
                 if rep.interval_us <= 0.0 || !rep.interval_us.is_finite() {
+                    cand_span.arg("outcome", "degenerate_interval");
                     reasons.push(format!("{tag}: degenerate zero interval"));
                     continue;
                 }
@@ -229,6 +238,7 @@ pub fn plan_with(
                     .min(opts.max_wait_us);
                 let slo_latency_us = assemble_us + rep.interval_us + rep.latency_us;
                 if r_needed > r_max {
+                    cand_span.arg("outcome", "capacity_bound");
                     reasons.push(format!(
                         "{tag}: needs R={r_needed} for {:.0} samples/s, capacity is R={r_max} \
                          ({} arrays x {replicas_per_array} replica(s)/array)",
@@ -243,6 +253,7 @@ pub fn plan_with(
                 // would be unreachable anyway).
                 best_latency = best_latency.min(slo_latency_us);
                 if slo_latency_us > slo.latency_budget_us {
+                    cand_span.arg("outcome", "latency_bound");
                     reasons.push(format!(
                         "{tag}: modeled latency {slo_latency_us:.1} µs exceeds the \
                          {:.1} µs budget",
@@ -255,6 +266,9 @@ pub fn plan_with(
                 let spare = slo.latency_budget_us - slo_latency_us;
                 let queue_depth =
                     (1 + (spare / rep.interval_us) as usize).min(opts.queue_depth_cap.max(1));
+                cand_span.arg("outcome", "feasible");
+                cand_span.arg("per_replica_sps", per_replica_sps);
+                cand_span.arg("r", r_needed);
                 plans.push(DeploymentPlan {
                     model_name: json.name.clone(),
                     device: group.device.clone(),
@@ -276,6 +290,8 @@ pub fn plan_with(
         }
     }
 
+    sweep_span.arg("compiled_candidates", candidates);
+    sweep_span.arg("feasible_plans", plans.len());
     if plans.is_empty() {
         return Ok(PlanOutcome::Infeasible(Infeasibility {
             target_sps: slo.target_sps,

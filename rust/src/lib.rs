@@ -23,6 +23,9 @@
 //! * [`runtime`] — bit-exactness oracles: the hermetic pure-Rust reference
 //!   backend (default), plus the PJRT backend (`--features pjrt`) that
 //!   executes the AOT-lowered JAX model built by `python/compile/aot.py`.
+//! * [`obs`] — the observability spine: span tracing with injected
+//!   clocks, mergeable latency histograms, Chrome-trace (Perfetto) and
+//!   Prometheus exporters.
 //! * [`coordinator`] — async serving driver (trigger-system companion).
 //! * [`deploy`] — SLO-driven deployment: the capacity planner that sizes a
 //!   replicated, partitioned fleet against a samples/s + latency SLO, and
@@ -40,6 +43,7 @@ pub mod deploy;
 pub mod frontend;
 pub mod harness;
 pub mod ir;
+pub mod obs;
 pub mod partition;
 pub mod passes;
 pub mod runtime;

@@ -17,6 +17,7 @@ aie4ml — end-to-end NN compiler + simulator for AMD AIE-ML
 
 USAGE:
   aie4ml compile <model.json> [--config <cfg.json>] [--out <dir>] [--batch N] [--verify]
+                 [--profile] [--trace-out <trace.json>]
   aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
   aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
   aie4ml partition <model.json> [--config <cfg.json>] [--batch N] [--parts K] [--max-parts K]
@@ -30,6 +31,7 @@ USAGE:
   aie4ml serve   <model.json> [--batch N] [--requests N] [--max-wait-us N]
                  [--trace poisson|bursty|diurnal] [--rate-sps F] [--duration-ms N] [--seed N]
                  [--replicas R] [--budget-us F] [--queue N] [--autoscale] [--max-replicas N]
+                 [--trace-out <trace.json>] [--metrics-out <metrics.prom>]
   aie4ml info    [device]
 ";
 
@@ -113,6 +115,38 @@ fn print_perf(rep: &PerfReport) {
     }
 }
 
+/// Drain the global tracer into a Chrome trace-event (Perfetto-loadable)
+/// JSON file, self-checking that the emitted text parses before reporting
+/// success.
+fn write_trace_json(path: &str) -> Result<()> {
+    let batch = aie4ml::obs::tracer().drain();
+    let text = aie4ml::obs::to_chrome_json(&batch);
+    aie4ml::util::json::Value::parse(&text)
+        .with_context(|| format!("emitted trace JSON failed its self-check ({path})"))?;
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    println!(
+        "trace: {} event(s) -> {path}{}",
+        batch.records.len(),
+        if batch.dropped > 0 {
+            format!("  ({} oldest dropped by the bounded rings)", batch.dropped)
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
+/// Render a serving snapshot as Prometheus text exposition, self-check it
+/// through the bundled parser, and write it out.
+fn write_metrics_prom(path: &str, snap: &aie4ml::coordinator::ServingSnapshot) -> Result<()> {
+    let text = aie4ml::obs::to_prometheus(snap);
+    let series = aie4ml::obs::parse_prometheus(&text)
+        .map_err(|e| anyhow::anyhow!("emitted metrics failed their self-check: {e}"))?;
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    println!("metrics: {} series -> {path}", series.len());
+    Ok(())
+}
+
 /// `serve --trace`: open-loop trace-driven serving on the continuous
 /// batcher, with admission-controlled shedding and (optionally) the
 /// SLO-burn autoscaler growing/shrinking the replica pool live.
@@ -134,6 +168,12 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
     let max_replicas = args.get_usize("max-replicas", 8)?;
     let max_wait = Duration::from_micros(args.get_usize("max-wait-us", 200)? as u64);
     let autoscale = args.switches.contains("autoscale");
+    let trace_out = args.flags.get("trace-out").cloned();
+    let metrics_out = args.flags.get("metrics-out").cloned();
+    if trace_out.is_some() {
+        aie4ml::obs::tracer().enable();
+        aie4ml::obs::tracer().set_track_name("driver");
+    }
 
     let compiled = compile(json, cfg.clone())?;
     let fw = compiled.firmware.clone().unwrap();
@@ -208,17 +248,21 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
         let scaler_thread = autoscale.then(|| {
             let mut popts = PlannerOptions::default();
             popts.max_replicas = max_replicas;
+            let ctx = ReplanContext::new(
+                json.clone(),
+                cfg.clone(),
+                Fleet::homogeneous(&cfg.device, max_replicas),
+                popts,
+            );
+            // Surface the re-planner's firmware-cache counters through
+            // serving snapshots (and the Prometheus exposition).
+            server_ref.attach_cache(ctx.cache().clone());
             let mut scaler = Autoscaler::from_rate(
                 per_replica_sps,
                 budget_us,
                 AutoscalerConfig { max_replicas, ..Default::default() },
             )
-            .with_replanning(ReplanContext::new(
-                json.clone(),
-                cfg.clone(),
-                Fleet::homogeneous(&cfg.device, max_replicas),
-                popts,
-            ));
+            .with_replanning(ctx);
             // Seed the modeled capacity plan before traffic starts: this
             // pays the candidate compiles once, so re-plans under live
             // traffic below are firmware-cache hits. An infeasible or
@@ -233,6 +277,7 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
                 );
             }
             scope.spawn(move || {
+                aie4ml::obs::tracer().set_track_name("autoscaler");
                 let mut transitions = Vec::new();
                 let mut tick = 0usize;
                 while !stop_ref.load(Ordering::Relaxed) {
@@ -304,6 +349,7 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
         Ok((served, shed, transitions, replans, replan_stats))
     })?;
     let final_r = server.replicas();
+    let final_snap = server.snapshot();
     let (m, a) = server.shutdown();
     let mut trajectory = vec![replicas.to_string()];
     trajectory.extend(transitions.iter().map(|r| r.to_string()));
@@ -312,9 +358,33 @@ fn serve_trace(args: &Args, json: &JsonModel, cfg: CompileConfig, kind: &str) ->
          p50 {:.1} µs  p99 {:.1} µs",
         a.shed_queue_full, a.shed_deadline, m.p50_latency_us, m.p99_latency_us
     );
+    // The full admission funnel: every submitted request accounted for by
+    // exactly one outcome counter.
+    println!(
+        "admission: submitted {} = admitted {} + shed {} (queue-full {}, deadline-risk {}) \
+         + rejected {} (malformed {}, stopped {}){}",
+        a.submitted,
+        a.admitted,
+        a.shed_queue_full + a.shed_deadline,
+        a.shed_queue_full,
+        a.shed_deadline,
+        a.rejected(),
+        a.rejected_malformed,
+        a.rejected_stopped,
+        if a.is_conserved() { "" } else { "  [COUNTERS NOT CONSERVED]" }
+    );
     println!("replicas: {} (final {final_r})", trajectory.join(" -> "));
     if let Some(stats) = replan_stats {
         println!("re-planner: {replans} modeled plan(s) under live traffic, firmware cache: {stats}");
+    }
+    if let Some(stats) = &final_snap.cache {
+        println!("snapshot firmware cache: {stats}");
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics_prom(path, &final_snap)?;
+    }
+    if let Some(path) = &trace_out {
+        write_trace_json(path)?;
     }
     Ok(())
 }
@@ -328,11 +398,17 @@ fn main() -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "compile" => {
-            let args = Args::parse(rest, &["verify"])?;
+            let args = Args::parse(rest, &["verify", "profile"])?;
             let model_path = args.positional.first().context("missing <model.json>")?;
             let json = JsonModel::from_file(model_path)
                 .with_context(|| format!("loading {model_path}"))?;
             let cfg = load_config(&args, 128)?;
+            let profile = args.switches.contains("profile");
+            let trace_out = args.flags.get("trace-out").cloned();
+            if profile || trace_out.is_some() {
+                aie4ml::obs::tracer().enable();
+                aie4ml::obs::tracer().set_track_name("compile");
+            }
             let compiled = compile(&json, cfg)?;
             let fw = compiled.firmware.as_ref().unwrap();
             let out = args.flags.get("out").cloned().unwrap_or_else(|| "build/project".into());
@@ -356,6 +432,32 @@ fn main() -> Result<()> {
                 println!("invariants OK");
             }
             println!("project written to {out}");
+            if profile || trace_out.is_some() {
+                let batch = aie4ml::obs::tracer().drain();
+                if profile {
+                    use aie4ml::obs::EventKind;
+                    println!("compile profile (per pass):");
+                    for r in batch.records.iter().filter(|r| {
+                        r.cat == "compile" && r.kind == EventKind::Span && r.parent.is_some()
+                    }) {
+                        println!("  {:<16} {:>8} µs", r.name, r.dur_us);
+                    }
+                    if let Some(root) = batch
+                        .records
+                        .iter()
+                        .find(|r| r.cat == "compile" && r.parent.is_none())
+                    {
+                        println!("  {:<16} {:>8} µs", "total", root.dur_us);
+                    }
+                }
+                if let Some(path) = &trace_out {
+                    let text = aie4ml::obs::to_chrome_json(&batch);
+                    aie4ml::util::json::Value::parse(&text)
+                        .with_context(|| format!("emitted trace JSON failed its self-check ({path})"))?;
+                    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+                    println!("trace: {} event(s) -> {path}", batch.records.len());
+                }
+            }
         }
         "run" => {
             let args = Args::parse(rest, &["perf"])?;

@@ -1,0 +1,135 @@
+//! Chrome trace-event JSON export (loads in Perfetto / `chrome://tracing`).
+//!
+//! Emits the object form — `{"traceEvents": [...]}` — with:
+//!
+//! - one `M` (metadata) `thread_name` event per named track, so workers,
+//!   pipeline stages, and logical lanes ("queue", "autoscaler") get
+//!   labelled rows in the UI;
+//! - one `X` (complete) event per span, `ts`/`dur` in microseconds on the
+//!   tracer clock's timeline;
+//! - one `i` (instant, thread scope) event per instant record —
+//!   autoscaler decisions, cache hits, shed events.
+//!
+//! Span parent links ride in `args.span_id` / `args.parent_id`; Perfetto
+//! reconstructs nesting from `ts`/`dur` containment per track, which the
+//! tracer's per-thread LIFO guard discipline guarantees.
+
+use super::tracer::{ArgValue, EventKind, TraceBatch};
+use crate::util::json::{obj, Value};
+use std::collections::BTreeMap;
+
+/// One process id for the whole trace; tracks map to Chrome `tid`s.
+const PID: i64 = 1;
+
+fn arg_value(v: &ArgValue) -> Value {
+    match v {
+        ArgValue::U64(u) => {
+            if *u <= i64::MAX as u64 {
+                Value::Int(*u as i64)
+            } else {
+                Value::Float(*u as f64)
+            }
+        }
+        ArgValue::F64(f) => Value::Float(*f),
+        ArgValue::Bool(b) => Value::Bool(*b),
+        ArgValue::Str(s) => Value::Str(s.clone()),
+    }
+}
+
+/// Render a drained batch as Chrome trace-event JSON.
+pub fn to_chrome_json(batch: &TraceBatch) -> String {
+    let mut events: Vec<Value> = Vec::with_capacity(batch.records.len() + batch.track_names.len());
+
+    for (track, label) in &batch.track_names {
+        events.push(obj([
+            ("ph", "M".into()),
+            ("name", "thread_name".into()),
+            ("pid", Value::Int(PID)),
+            ("tid", Value::Int(*track as i64)),
+            ("args", obj([("name", label.as_str().into())])),
+        ]));
+    }
+
+    for rec in &batch.records {
+        let mut args: BTreeMap<String, Value> = rec
+            .args
+            .iter()
+            .map(|(k, v)| (k.to_string(), arg_value(v)))
+            .collect();
+        args.insert("span_id".to_string(), Value::Int(rec.id as i64));
+        if let Some(p) = rec.parent {
+            args.insert("parent_id".to_string(), Value::Int(p as i64));
+        }
+        let mut ev: BTreeMap<String, Value> = BTreeMap::new();
+        ev.insert("name".to_string(), rec.name.as_ref().into());
+        ev.insert("cat".to_string(), rec.cat.into());
+        ev.insert("pid".to_string(), Value::Int(PID));
+        ev.insert("tid".to_string(), Value::Int(rec.track as i64));
+        ev.insert("ts".to_string(), Value::Int(rec.start_us as i64));
+        ev.insert("args".to_string(), Value::Object(args));
+        match rec.kind {
+            EventKind::Span => {
+                ev.insert("ph".to_string(), "X".into());
+                ev.insert("dur".to_string(), Value::Int(rec.dur_us as i64));
+            }
+            EventKind::Instant => {
+                ev.insert("ph".to_string(), "i".into());
+                ev.insert("s".to_string(), "t".into());
+            }
+        }
+        events.push(Value::Object(ev));
+    }
+
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Value::Array(events));
+    root.insert("displayTimeUnit".to_string(), "ms".into());
+    if batch.dropped > 0 {
+        // Surface ring overflow in the file itself, not just stderr.
+        root.insert("aie4ml_dropped_records".to_string(), Value::Int(batch.dropped as i64));
+    }
+    Value::Object(root).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::ManualClock;
+    use crate::obs::tracer::Tracer;
+
+    #[test]
+    fn export_parses_and_keeps_invariants() {
+        let clock = ManualClock::new();
+        let t = Tracer::with_clock(Box::new(clock));
+        t.enable();
+        t.set_track_name("test-main");
+        {
+            let _s = t.span("serve", "request").with_arg("id", 7u64);
+            t.instant("serve", "admit").with_arg("ok", true);
+        }
+        let json = to_chrome_json(&t.drain());
+        let v = Value::parse(&json).expect("chrome JSON must parse");
+        let events = v.field("traceEvents").unwrap().as_array().unwrap();
+        assert!(events.len() >= 3); // thread_name + span + instant
+        let mut saw_x = false;
+        let mut saw_i = false;
+        for ev in events {
+            let ph = ev.field("ph").unwrap().as_str().unwrap();
+            match ph {
+                "X" => {
+                    saw_x = true;
+                    assert!(ev.field("ts").unwrap().as_i64().unwrap() >= 0);
+                    assert!(ev.field("dur").unwrap().as_i64().unwrap() >= 0);
+                }
+                "i" => {
+                    saw_i = true;
+                    assert_eq!(ev.field("s").unwrap().as_str().unwrap(), "t");
+                }
+                "M" => {
+                    assert_eq!(ev.field("name").unwrap().as_str().unwrap(), "thread_name");
+                }
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert!(saw_x && saw_i);
+    }
+}

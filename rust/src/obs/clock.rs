@@ -1,0 +1,101 @@
+//! Injected monotonic clocks for the tracer: no wall-clock reads in hot
+//! paths, deterministic timestamps in tests.
+//!
+//! Every tracer timestamp is microseconds since an arbitrary per-clock
+//! origin (Chrome trace-event `ts` semantics). Production uses
+//! [`MonotonicClock`] — `Instant`-based, origin at construction, so traces
+//! from one process share one timeline. Tests use [`ManualClock`] and
+//! advance time explicitly: span durations and orderings become exact
+//! constants instead of scheduler noise.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic microsecond clock. Implementations must be cheap — the
+/// tracer reads the clock twice per recorded span.
+pub trait Clock: Send + Sync + 'static {
+    /// Microseconds since this clock's origin. Must never decrease.
+    fn now_us(&self) -> u64;
+}
+
+/// Production clock: microseconds since construction, from
+/// [`std::time::Instant`].
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+}
+
+/// Test clock: time moves only when the test says so.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    t: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock::default()
+    }
+
+    /// Starting at `t` microseconds.
+    pub fn at(t: u64) -> ManualClock {
+        ManualClock { t: AtomicU64::new(t) }
+    }
+
+    /// Advance by `dt` microseconds, returning the new now.
+    pub fn advance(&self, dt: u64) -> u64 {
+        self.t.fetch_add(dt, Ordering::SeqCst) + dt
+    }
+
+    /// Jump to an absolute time (must not move backwards in tests that
+    /// care about monotonicity; the clock itself does not enforce it).
+    pub fn set(&self, t: u64) {
+        self.t.store(t, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_us(&self) -> u64 {
+        self.t.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_is_deterministic() {
+        let c = ManualClock::at(100);
+        assert_eq!(c.now_us(), 100);
+        assert_eq!(c.advance(50), 150);
+        assert_eq!(c.now_us(), 150);
+        c.set(1000);
+        assert_eq!(c.now_us(), 1000);
+    }
+
+    #[test]
+    fn monotonic_clock_never_decreases() {
+        let c = MonotonicClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+}

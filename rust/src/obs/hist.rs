@@ -1,0 +1,315 @@
+//! Mergeable log-bucketed latency histograms.
+//!
+//! Replaces the sorted-`Vec<f64>` percentile samples in
+//! `coordinator::metrics`. The design goals, in order:
+//!
+//! 1. **Merge is exact.** A histogram is a fixed vector of bucket counts
+//!    plus exact `count/sum/min/max`; merging is element-wise addition.
+//!    Any quantile computed from a merged histogram is therefore
+//!    *bit-identical* to the quantile computed from one histogram fed all
+//!    the samples — there is no per-replica information loss for the
+//!    merge to approximate. This is what fixes `MetricsReport::merged`
+//!    tail semantics: fleet p99 is the p99 of the pooled distribution,
+//!    not the worst replica's.
+//! 2. **Bounded memory.** [`NUM_BUCKETS`] fixed `u64` slots (~2 KiB per
+//!    histogram) regardless of how many samples land — sustained serving
+//!    load cannot grow it.
+//! 3. **Known resolution.** Buckets grow by γ = 2^(1/8) (8 sub-buckets
+//!    per octave, ≈ 9.05% relative width), so any quantile is within
+//!    ±4.5% of the exact sample quantile; `min`/`max`/`sum`/`count` are
+//!    exact, and quantile results are clamped into `[min, max]`.
+
+/// Lowest bucket upper bound, µs. Everything at or below lands in
+/// bucket 0.
+const BASE_US: f64 = 0.1;
+
+/// Sub-buckets per octave: γ = 2^(1/8) ≈ 1.0905.
+const SUB_BUCKETS: f64 = 8.0;
+
+/// Bucket 254's upper bound is BASE·2^(255/8) ≈ 4.5×10^8 µs (~7.5 min);
+/// bucket 255 is the overflow bucket (+Inf).
+pub const NUM_BUCKETS: usize = 256;
+
+/// A fixed-size log-bucketed histogram of microsecond latencies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+/// Upper bound of bucket `i` in µs (`+Inf` for the last bucket).
+pub fn bucket_upper_us(i: usize) -> f64 {
+    if i + 1 >= NUM_BUCKETS {
+        f64::INFINITY
+    } else {
+        BASE_US * ((i + 1) as f64 / SUB_BUCKETS).exp2()
+    }
+}
+
+fn bucket_lower_us(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        BASE_US * (i as f64 / SUB_BUCKETS).exp2()
+    }
+}
+
+/// Bucket index for a value: the smallest `i` with `v <= upper(i)`.
+fn bucket_index(v_us: f64) -> usize {
+    if v_us <= BASE_US {
+        return 0;
+    }
+    let f = SUB_BUCKETS * (v_us / BASE_US).log2();
+    let i = (f.ceil() as i64 - 1).max(0) as usize;
+    i.min(NUM_BUCKETS - 1)
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    /// Record one latency sample (µs). Negative/NaN samples are clamped
+    /// to 0 (they land in bucket 0 and drag `min` to 0, which is the
+    /// least-surprising rendering of a corrupt sample).
+    pub fn record_us(&mut self, v_us: f64) {
+        let v = if v_us.is_finite() && v_us > 0.0 { v_us } else { 0.0 };
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum_us += v;
+        self.min_us = self.min_us.min(v);
+        self.max_us = self.max_us.max(v);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    /// Element-wise merge. `merge(a, b)` then `quantile` is bit-identical
+    /// to recording all of `a`'s and `b`'s samples into one histogram.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded samples, µs.
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    /// Exact mean, µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded sample, µs (0 when empty).
+    pub fn min_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_us
+        }
+    }
+
+    /// Exact maximum recorded sample, µs (0 when empty).
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Quantile estimate, µs: the value at rank `ceil(q·count)` with
+    /// linear interpolation inside the containing bucket, clamped into
+    /// `[min, max]`. `q` outside [0,1] is clamped. Returns 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                let lower = bucket_lower_us(i);
+                let upper = if bucket_upper_us(i).is_finite() {
+                    bucket_upper_us(i)
+                } else {
+                    // Overflow bucket: max is exact, use it as the cap.
+                    self.max_us
+                };
+                let frac = (target - cum) as f64 / c as f64;
+                let v = lower + frac * (upper - lower);
+                return v.clamp(self.min_us, self.max_us);
+            }
+            cum += c;
+        }
+        self.max_us
+    }
+
+    /// Cumulative non-empty buckets for Prometheus exposition:
+    /// `(upper_bound_us, cumulative_count)` at each non-empty bucket, in
+    /// ascending order. The implicit `+Inf` bucket equals [`Self::count`].
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push((bucket_upper_us(i), cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_bracket_the_value() {
+        for &v in &[0.05, 0.1, 0.11, 1.0, 7.3, 100.0, 5e4, 1e7] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_upper_us(i) * (1.0 + 1e-12), "v={v} i={i}");
+            if i > 0 {
+                assert!(v > bucket_lower_us(i) * (1.0 - 1e-9), "v={v} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_within_bucket_resolution() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=1000u64 {
+            h.record_us(v as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.min_us(), 1.0);
+        assert_eq!(h.max_us(), 1000.0);
+        // γ = 2^(1/8): any quantile is within ±4.6% of exact.
+        let p50 = h.quantile_us(0.50);
+        let p99 = h.quantile_us(0.99);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.05, "p50={p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.05, "p99={p99}");
+        assert!(h.quantile_us(1.0) <= h.max_us() + 1e-9);
+        assert!(h.quantile_us(0.0) >= h.min_us() - 1e-9);
+    }
+
+    #[test]
+    fn merged_quantiles_are_bit_identical_to_pooled() {
+        // Two very asymmetric replicas.
+        let fast: Vec<f64> = (1..=900).map(|v| v as f64).collect();
+        let slow: Vec<f64> = (1..=100).map(|v| 5000.0 + 13.0 * v as f64).collect();
+
+        let mut pooled = LatencyHistogram::new();
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for &v in &fast {
+            pooled.record_us(v);
+            a.record_us(v);
+        }
+        for &v in &slow {
+            pooled.record_us(v);
+            b.record_us(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+
+        // Bit-identical, not approximately equal: element-wise counts and
+        // exact moments make the merged struct indistinguishable from the
+        // pooled one.
+        assert_eq!(merged, pooled);
+        for &q in &[0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(merged.quantile_us(q).to_bits(), pooled.quantile_us(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.min_us(), 0.0);
+        assert_eq!(h.max_us(), 0.0);
+        assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(42.0);
+        // Clamping to [min, max] makes every quantile exact for n=1.
+        assert_eq!(h.quantile_us(0.5), 42.0);
+        assert_eq!(h.quantile_us(0.99), 42.0);
+    }
+
+    #[test]
+    fn overflow_bucket_uses_exact_max() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(1e12); // far beyond the last finite bound
+        h.record_us(1e12);
+        assert_eq!(h.quantile_us(0.99), 1e12);
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum, vec![(f64::INFINITY, 2)]);
+    }
+
+    #[test]
+    fn cumulative_buckets_reach_total_count() {
+        let mut h = LatencyHistogram::new();
+        for v in [1.0, 10.0, 100.0, 1000.0] {
+            h.record_us(v);
+        }
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.last().unwrap().1, h.count());
+        // Ascending in both bound and count.
+        for w in cum.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 < w[1].1);
+        }
+    }
+
+    #[test]
+    fn corrupt_samples_clamp_to_zero() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(f64::NAN);
+        h.record_us(-5.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min_us(), 0.0);
+        assert_eq!(h.max_us(), 0.0);
+        assert_eq!(h.sum_us(), 0.0);
+    }
+}

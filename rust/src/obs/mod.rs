@@ -1,0 +1,40 @@
+//! Observability spine: spans, mergeable latency histograms, and
+//! Perfetto/Prometheus export.
+//!
+//! The stack's telemetry used to be a patchwork of bespoke structs; this
+//! module gives every layer one shared vocabulary:
+//!
+//! * [`tracer()`] — the process-global span tracer. Instrumentation lives
+//!   in the 7-pass compile pipeline (`passes::compile`), the partition
+//!   cut DP (per-candidate compile, cache hit/miss), the deploy planner's
+//!   candidate sweep, autoscaler decisions (window signals as arguments),
+//!   and the full serving request lifecycle (submit → admit/shed →
+//!   queue → batch-form → dispatch → per-partition stage → complete).
+//!   Disabled it costs one relaxed atomic load per site; enable it with
+//!   `serve --trace-out <path>` or `compile --profile`.
+//! * [`LatencyHistogram`] — fixed-size log-bucketed distribution whose
+//!   merge is element-wise and therefore *exact*: fleet percentiles in
+//!   `coordinator::metrics::MetricsReport::merged` are computed on the
+//!   pooled distribution, bit-identical to per-replica-then-merge.
+//! * [`chrome::to_chrome_json`] — Chrome trace-event JSON (open the file
+//!   in <https://ui.perfetto.dev>); one track per worker / pipeline
+//!   stage / logical lane.
+//! * [`prom::to_prometheus`] — Prometheus text exposition of a serving
+//!   snapshot, with conservation counters that reconcile exactly against
+//!   `AdmissionReport::delta` windows.
+//!
+//! Clocks are injected ([`Clock`]): production uses a monotonic
+//! `Instant`-based clock, tests a [`ManualClock`] — so span timings in
+//! tests are exact constants, not scheduler noise.
+
+pub mod chrome;
+pub mod clock;
+pub mod hist;
+pub mod prom;
+pub mod tracer;
+
+pub use chrome::to_chrome_json;
+pub use clock::{Clock, ManualClock, MonotonicClock};
+pub use hist::LatencyHistogram;
+pub use prom::{parse_prometheus, to_prometheus};
+pub use tracer::{tracer, ArgValue, EventKind, Span, SpanRecord, TraceBatch, Tracer};

@@ -1,0 +1,274 @@
+//! Prometheus text-exposition export of a [`ServingSnapshot`].
+//!
+//! One call renders everything an operator scrapes: the admission funnel
+//! as conservation counters (`submitted == admitted + shed_* +
+//! rejected_*`, per reason), the request-latency histogram straight from
+//! the mergeable [`LatencyHistogram`] buckets (cumulative `_bucket{le=}`
+//! semantics, exact `_sum`/`_count`), queue/replica gauges, per-stage
+//! pipeline health, and firmware-cache counters when a cache is attached.
+//!
+//! Counters are cumulative, so two scrapes difference into a window
+//! exactly like [`AdmissionReport::delta`] — pinned by the conservation
+//! property test in `tests/obs_trace.rs`.
+//!
+//! [`AdmissionReport::delta`]: crate::coordinator::AdmissionReport::delta
+
+use crate::coordinator::ServingSnapshot;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+fn counter(out: &mut String, name: &str, help: &str, series: &[(&str, f64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    for (labels, v) in series {
+        let _ = writeln!(out, "{name}{labels} {v}");
+    }
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, series: &[(&str, f64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for (labels, v) in series {
+        let _ = writeln!(out, "{name}{labels} {v}");
+    }
+}
+
+/// Render one snapshot as Prometheus text exposition (version 0.0.4).
+pub fn to_prometheus(snap: &ServingSnapshot) -> String {
+    let mut out = String::new();
+    let a = &snap.admission;
+    counter(
+        &mut out,
+        "aie4ml_requests_submitted_total",
+        "Requests offered to admission control.",
+        &[("", a.submitted as f64)],
+    );
+    counter(
+        &mut out,
+        "aie4ml_requests_admitted_total",
+        "Requests admitted into the serving queue.",
+        &[("", a.admitted as f64)],
+    );
+    counter(
+        &mut out,
+        "aie4ml_requests_shed_total",
+        "Well-formed requests shed at admission, by reason.",
+        &[
+            ("{reason=\"queue_full\"}", a.shed_queue_full as f64),
+            ("{reason=\"deadline_risk\"}", a.shed_deadline as f64),
+        ],
+    );
+    counter(
+        &mut out,
+        "aie4ml_requests_rejected_total",
+        "Requests rejected for non-load reasons, by reason.",
+        &[
+            ("{reason=\"malformed\"}", a.rejected_malformed as f64),
+            ("{reason=\"stopped\"}", a.rejected_stopped as f64),
+        ],
+    );
+
+    let m = &snap.metrics;
+    counter(
+        &mut out,
+        "aie4ml_requests_served_total",
+        "Requests whose batch completed.",
+        &[("", m.requests as f64)],
+    );
+    counter(
+        &mut out,
+        "aie4ml_batches_executed_total",
+        "Firmware batches executed.",
+        &[("", m.batches as f64)],
+    );
+    counter(
+        &mut out,
+        "aie4ml_device_busy_microseconds_total",
+        "Modeled device-busy time across executed batches.",
+        &[("", m.device_busy_us)],
+    );
+
+    gauge(
+        &mut out,
+        "aie4ml_batch_occupancy_mean",
+        "Mean real rows per executed batch.",
+        &[("", m.mean_batch_occupancy)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_queue_depth",
+        "Requests admitted but not yet claimed by a worker.",
+        &[("", snap.queued as f64)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_queue_capacity",
+        "Admission queue bound.",
+        &[("", snap.queue_capacity as f64)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_replicas",
+        "Effective worker count.",
+        &[("", snap.replicas as f64)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_batch_size",
+        "Firmware batch each worker executes.",
+        &[("", snap.batch as f64)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_batch_service_time_microseconds",
+        "EWMA wall-clock batch service time.",
+        &[("", snap.batch_us)],
+    );
+
+    // Request latency histogram — cumulative buckets straight from the
+    // log-bucketed histogram, plus exact sum/count.
+    let name = "aie4ml_request_latency_microseconds";
+    let _ = writeln!(out, "# HELP {name} End-to-end request latency (submit to reply).");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (le, cum) in m.latency.cumulative_buckets() {
+        if le.is_finite() {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", m.latency.count());
+    let _ = writeln!(out, "{name}_sum {}", m.latency.sum_us());
+    let _ = writeln!(out, "{name}_count {}", m.latency.count());
+
+    if !m.stages.is_empty() {
+        let labels: Vec<String> = m
+            .stages
+            .iter()
+            .map(|s| format!("{{partition=\"{}\"}}", s.partition))
+            .collect();
+        let busy: Vec<(&str, f64)> = labels
+            .iter()
+            .zip(&m.stages)
+            .map(|(l, s)| (l.as_str(), s.busy_fraction))
+            .collect();
+        let depth: Vec<(&str, f64)> = labels
+            .iter()
+            .zip(&m.stages)
+            .map(|(l, s)| (l.as_str(), s.mean_queue_depth))
+            .collect();
+        gauge(
+            &mut out,
+            "aie4ml_stage_busy_fraction",
+            "Fraction of wall time each pipeline stage spends executing.",
+            &busy,
+        );
+        gauge(
+            &mut out,
+            "aie4ml_stage_queue_depth_mean",
+            "Mean input-queue depth per pipeline stage at dequeue time.",
+            &depth,
+        );
+    }
+
+    if let Some(c) = &snap.cache {
+        counter(
+            &mut out,
+            "aie4ml_fw_cache_requests_total",
+            "Firmware-cache compile requests, by outcome.",
+            &[
+                ("{outcome=\"hit\"}", c.hits as f64),
+                ("{outcome=\"miss\"}", c.misses as f64),
+            ],
+        );
+        gauge(
+            &mut out,
+            "aie4ml_fw_cache_entries",
+            "Cached compile outcomes resident.",
+            &[("", c.entries as f64)],
+        );
+        gauge(
+            &mut out,
+            "aie4ml_fw_cache_negative_entries",
+            "Cached compile failures resident.",
+            &[("", c.negative_entries as f64)],
+        );
+    }
+    out
+}
+
+/// Parse a text exposition back into `full-series-name -> value` (keys
+/// keep their label set, e.g. `aie4ml_requests_shed_total{reason="queue_full"}`).
+/// Used by the validation tests and the CLI's own post-write check.
+pub fn parse_prometheus(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value separator: {line:?}", i + 1))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: bad value {value:?}", i + 1))?;
+        if out.insert(series.to_string(), v).is_some() {
+            return Err(format!("line {}: duplicate series {series:?}", i + 1));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MetricsReport;
+
+    fn snapshot() -> ServingSnapshot {
+        ServingSnapshot {
+            metrics: MetricsReport::empty(),
+            admission: Default::default(),
+            queued: 3,
+            queue_capacity: 64,
+            replicas: 2,
+            batch: 8,
+            batch_us: 123.5,
+            cache: Some(crate::cache::CacheStats {
+                hits: 10,
+                misses: 2,
+                entries: 2,
+                negative_entries: 1,
+            }),
+        }
+    }
+
+    #[test]
+    fn exposition_round_trips_through_the_parser() {
+        let text = to_prometheus(&snapshot());
+        let parsed = parse_prometheus(&text).unwrap();
+        assert_eq!(parsed["aie4ml_queue_depth"], 3.0);
+        assert_eq!(parsed["aie4ml_replicas"], 2.0);
+        assert_eq!(parsed["aie4ml_batch_service_time_microseconds"], 123.5);
+        assert_eq!(parsed["aie4ml_fw_cache_requests_total{outcome=\"hit\"}"], 10.0);
+        assert_eq!(parsed["aie4ml_fw_cache_negative_entries"], 1.0);
+        // Empty histogram still exposes the +Inf bucket and exact counts.
+        assert_eq!(parsed["aie4ml_request_latency_microseconds_bucket{le=\"+Inf\"}"], 0.0);
+        assert_eq!(parsed["aie4ml_request_latency_microseconds_count"], 0.0);
+    }
+
+    #[test]
+    fn conservation_holds_in_the_exposition() {
+        let mut snap = snapshot();
+        snap.admission.submitted = 10;
+        snap.admission.admitted = 6;
+        snap.admission.shed_queue_full = 2;
+        snap.admission.shed_deadline = 1;
+        snap.admission.rejected_malformed = 1;
+        let parsed = parse_prometheus(&to_prometheus(&snap)).unwrap();
+        let sum = parsed["aie4ml_requests_admitted_total"]
+            + parsed["aie4ml_requests_shed_total{reason=\"queue_full\"}"]
+            + parsed["aie4ml_requests_shed_total{reason=\"deadline_risk\"}"]
+            + parsed["aie4ml_requests_rejected_total{reason=\"malformed\"}"]
+            + parsed["aie4ml_requests_rejected_total{reason=\"stopped\"}"];
+        assert_eq!(parsed["aie4ml_requests_submitted_total"], sum);
+    }
+}

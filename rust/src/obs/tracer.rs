@@ -1,0 +1,559 @@
+//! Span tracer: structured request/compile lifecycle recording with
+//! injected clocks and lock-light sharded ring buffers.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Near-zero cost when disabled.** Every instrumentation point pays
+//!    one relaxed atomic load and returns an inert guard. No clock read,
+//!    no allocation, no lock. The serving hot path is instrumented
+//!    unconditionally and gated here ([`benches/obs_overhead.rs`] pins
+//!    the budget).
+//! 2. **Lock-light when enabled.** Finished spans land in one of
+//!    [`SHARDS`] ring buffers selected by the recording thread's track id,
+//!    so each worker thread almost always has a shard to itself; the only
+//!    cross-thread contention is the drain. Rings are bounded: sustained
+//!    load overwrites the oldest records and counts the drops instead of
+//!    growing without bound.
+//! 3. **Deterministic in tests.** Timestamps come from an injected
+//!    [`Clock`]; a [`ManualClock`](super::clock::ManualClock) makes span
+//!    durations exact constants.
+//!
+//! Spans are recorded *complete* (start + duration) when their guard
+//! drops — there is no unmatched-begin failure mode, and parent links are
+//! maintained per-thread: a span opened while another span of the same
+//! tracer is open on the same thread becomes its child. Cross-thread
+//! phases (e.g. a request's queue wait, submitted on a client thread and
+//! claimed on a worker) are recorded explicitly via
+//! [`Tracer::record_span`] onto a logical track.
+
+use super::clock::{Clock, MonotonicClock};
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Ring-buffer shards. Track ids map onto shards round-robin, so up to
+/// this many recording threads write without contending.
+const SHARDS: usize = 16;
+
+/// Default per-shard ring capacity (records). 16 shards × 16 Ki records
+/// bounds tracer memory at a few tens of MiB worst case.
+const DEFAULT_SHARD_CAPACITY: usize = 16 * 1024;
+
+/// One span argument value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> ArgValue {
+        ArgValue::U64(v)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> ArgValue {
+        ArgValue::U64(v as u64)
+    }
+}
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> ArgValue {
+        ArgValue::F64(v)
+    }
+}
+impl From<bool> for ArgValue {
+    fn from(v: bool) -> ArgValue {
+        ArgValue::Bool(v)
+    }
+}
+impl From<String> for ArgValue {
+    fn from(v: String) -> ArgValue {
+        ArgValue::Str(v)
+    }
+}
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> ArgValue {
+        ArgValue::Str(v.to_string())
+    }
+}
+
+/// What kind of trace event a record is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A complete span: `start_us` + `dur_us` (Chrome phase `X`).
+    Span,
+    /// A point event: `dur_us` == 0 (Chrome phase `i`).
+    Instant,
+}
+
+/// One finished trace event.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Process-unique span id (monotone in allocation order).
+    pub id: u64,
+    /// Enclosing span on the same thread (same tracer), if any.
+    pub parent: Option<u64>,
+    /// Track (≈ thread or logical lane) the event belongs to.
+    pub track: u32,
+    /// Category (subsystem): "compile", "serve", "deploy", …
+    pub cat: &'static str,
+    pub name: Cow<'static, str>,
+    pub kind: EventKind,
+    /// Microseconds since the tracer clock's origin.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl SpanRecord {
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+
+    /// Argument lookup by key.
+    pub fn arg(&self, key: &str) -> Option<&ArgValue> {
+        self.args.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+}
+
+/// Everything one [`Tracer::drain`] returns: the finished records (all
+/// shards, unordered across shards), the number of records the bounded
+/// rings overwrote, and the track-name registry for export.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBatch {
+    pub records: Vec<SpanRecord>,
+    pub dropped: u64,
+    /// `(track id, label)` pairs for every named track.
+    pub track_names: Vec<(u32, String)>,
+}
+
+struct Shard {
+    ring: VecDeque<SpanRecord>,
+}
+
+/// The tracer. One process-global instance backs all built-in
+/// instrumentation ([`tracer()`]); tests construct private instances with
+/// manual clocks.
+pub struct Tracer {
+    /// Distinguishes tracers in the thread-local span stack / track cache
+    /// (a thread may interleave spans of the global and a test tracer).
+    identity: u64,
+    enabled: AtomicBool,
+    clock: Box<dyn Clock>,
+    shards: Vec<Mutex<Shard>>,
+    shard_capacity: usize,
+    next_span: AtomicU64,
+    next_track: AtomicU32,
+    dropped: AtomicU64,
+    track_names: Mutex<Vec<(u32, String)>>,
+}
+
+thread_local! {
+    /// Open spans on this thread: (tracer identity, span id).
+    static SPAN_STACK: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+    /// This thread's track per tracer: (tracer identity, track id).
+    static TRACK: RefCell<Vec<(u64, u32)>> = const { RefCell::new(Vec::new()) };
+}
+
+static TRACER_IDS: AtomicU64 = AtomicU64::new(1);
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-global tracer every built-in instrumentation point records
+/// into. Disabled until something ([`Tracer::enable`], the `serve
+/// --trace-out` / `compile --profile` CLI paths, a test) turns it on.
+pub fn tracer() -> &'static Tracer {
+    GLOBAL.get_or_init(Tracer::new)
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// A disabled tracer on the production monotonic clock.
+    pub fn new() -> Tracer {
+        Tracer::with_clock(Box::new(MonotonicClock::new()))
+    }
+
+    /// A disabled tracer on an injected clock (tests pass a
+    /// [`ManualClock`](super::clock::ManualClock)).
+    pub fn with_clock(clock: Box<dyn Clock>) -> Tracer {
+        Tracer::with_clock_and_capacity(clock, DEFAULT_SHARD_CAPACITY)
+    }
+
+    /// Full control, for tests that exercise the bounded-ring drop path.
+    pub fn with_clock_and_capacity(clock: Box<dyn Clock>, shard_capacity: usize) -> Tracer {
+        Tracer {
+            identity: TRACER_IDS.fetch_add(1, Ordering::Relaxed),
+            enabled: AtomicBool::new(false),
+            clock,
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(Shard { ring: VecDeque::new() }))
+                .collect(),
+            shard_capacity: shard_capacity.max(1),
+            next_span: AtomicU64::new(1),
+            next_track: AtomicU32::new(1),
+            dropped: AtomicU64::new(0),
+            track_names: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::SeqCst);
+    }
+
+    /// The one check every instrumentation point starts with. Callers may
+    /// also use it to gate argument computation that is itself expensive.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Clock read, in the tracer's timeline. Only meaningful for
+    /// [`Tracer::record_span`] bookkeeping; returns 0 when disabled so
+    /// hot paths never pay the clock while tracing is off.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        if self.is_enabled() {
+            self.clock.now_us()
+        } else {
+            0
+        }
+    }
+
+    /// Open a span. Returns an inert guard (no clock read, no allocation)
+    /// when disabled. The span records when the guard drops; spans opened
+    /// while it is live on the same thread become its children.
+    #[inline]
+    pub fn span(&self, cat: &'static str, name: impl Into<Cow<'static, str>>) -> Span<'_> {
+        if !self.is_enabled() {
+            return Span { tracer: None, rec: None };
+        }
+        self.live_event(cat, name.into(), EventKind::Span)
+    }
+
+    /// Record a point event (Chrome `i` phase) when its guard drops —
+    /// argument attachment works exactly like spans.
+    #[inline]
+    pub fn instant(&self, cat: &'static str, name: impl Into<Cow<'static, str>>) -> Span<'_> {
+        if !self.is_enabled() {
+            return Span { tracer: None, rec: None };
+        }
+        self.live_event(cat, name.into(), EventKind::Instant)
+    }
+
+    fn live_event(&self, cat: &'static str, name: Cow<'static, str>, kind: EventKind) -> Span<'_> {
+        let id = self.next_span.fetch_add(1, Ordering::Relaxed);
+        let track = self.current_track();
+        let parent = SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = s.iter().rev().find(|(t, _)| *t == self.identity).map(|(_, id)| *id);
+            if kind == EventKind::Span {
+                s.push((self.identity, id));
+            }
+            parent
+        });
+        Span {
+            tracer: Some(self),
+            rec: Some(SpanRecord {
+                id,
+                parent,
+                track,
+                cat,
+                name,
+                kind,
+                start_us: self.clock.now_us(),
+                dur_us: 0,
+                args: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a complete span with explicit endpoints — for phases whose
+    /// start and end are observed on different threads (a request's queue
+    /// wait). No parent link, lands on `track` (use
+    /// [`Tracer::logical_track`] or [`Tracer::current_track`]).
+    pub fn record_span(
+        &self,
+        cat: &'static str,
+        name: impl Into<Cow<'static, str>>,
+        track: u32,
+        start_us: u64,
+        end_us: u64,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.push(SpanRecord {
+            id: self.next_span.fetch_add(1, Ordering::Relaxed),
+            parent: None,
+            track,
+            cat,
+            name: name.into(),
+            kind: EventKind::Span,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            args,
+        });
+    }
+
+    /// The calling thread's track id under this tracer, assigned on first
+    /// use.
+    pub fn current_track(&self) -> u32 {
+        TRACK.with(|t| {
+            let mut t = t.borrow_mut();
+            if let Some((_, id)) = t.iter().find(|(tid, _)| *tid == self.identity) {
+                return *id;
+            }
+            let id = self.next_track.fetch_add(1, Ordering::Relaxed);
+            t.push((self.identity, id));
+            id
+        })
+    }
+
+    /// Name the calling thread's track ("worker-0", "autoscaler", …);
+    /// exported as Chrome thread-name metadata.
+    pub fn set_track_name(&self, label: impl Into<String>) {
+        let track = self.current_track();
+        self.name_track(track, label);
+    }
+
+    /// Allocate a fresh logical track (not bound to any thread) — e.g.
+    /// one "queue" lane per server for cross-thread queue-wait spans.
+    pub fn logical_track(&self, label: impl Into<String>) -> u32 {
+        let id = self.next_track.fetch_add(1, Ordering::Relaxed);
+        self.name_track(id, label);
+        id
+    }
+
+    fn name_track(&self, track: u32, label: impl Into<String>) {
+        let label = label.into();
+        let mut names = self.track_names.lock().unwrap();
+        match names.iter_mut().find(|(t, _)| *t == track) {
+            Some((_, l)) => *l = label,
+            None => names.push((track, label)),
+        }
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let shard = &self.shards[rec.track as usize % self.shards.len()];
+        let mut s = shard.lock().unwrap();
+        if s.ring.len() >= self.shard_capacity {
+            s.ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        s.ring.push_back(rec);
+    }
+
+    /// Take every finished record (the rings empty; drop counts and track
+    /// names are reported but not reset). Records are sorted by start
+    /// time, ties by id.
+    pub fn drain(&self) -> TraceBatch {
+        let mut records = Vec::new();
+        for shard in &self.shards {
+            records.extend(shard.lock().unwrap().ring.drain(..));
+        }
+        records.sort_by_key(|r| (r.start_us, r.id));
+        TraceBatch {
+            records,
+            dropped: self.dropped.load(Ordering::Relaxed),
+            track_names: self.track_names.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// A live (or inert) span guard. Records on drop. `with_arg` attaches
+/// structured arguments; on an inert guard it is free.
+pub struct Span<'a> {
+    tracer: Option<&'a Tracer>,
+    rec: Option<SpanRecord>,
+}
+
+impl Span<'_> {
+    /// Whether this guard will record (tracing was enabled at open).
+    #[inline]
+    pub fn is_live(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// Attach an argument (builder style).
+    #[inline]
+    pub fn with_arg(mut self, key: &'static str, value: impl Into<ArgValue>) -> Self {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.args.push((key, value.into()));
+        }
+        self
+    }
+
+    /// Attach an argument through a live borrow (for args only known
+    /// mid-span).
+    #[inline]
+    pub fn arg(&mut self, key: &'static str, value: impl Into<ArgValue>) {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.args.push((key, value.into()));
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let (Some(tracer), Some(mut rec)) = (self.tracer, self.rec.take()) else {
+            return;
+        };
+        if rec.kind == EventKind::Span {
+            rec.dur_us = tracer.clock.now_us().saturating_sub(rec.start_us);
+            SPAN_STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                // Guards drop LIFO per thread, so our entry is the topmost
+                // for this tracer; search from the end for robustness.
+                if let Some(pos) =
+                    s.iter().rposition(|(t, id)| *t == tracer.identity && *id == rec.id)
+                {
+                    s.remove(pos);
+                }
+            });
+        }
+        tracer.push(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::clock::ManualClock;
+    use super::*;
+    use std::sync::Arc;
+
+    fn manual_tracer() -> (Tracer, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::new());
+        struct Shared(Arc<ManualClock>);
+        impl Clock for Shared {
+            fn now_us(&self) -> u64 {
+                self.0.now_us()
+            }
+        }
+        let t = Tracer::with_clock(Box::new(Shared(clock.clone())));
+        (t, clock)
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let (t, _) = manual_tracer();
+        {
+            let _s = t.span("test", "outer").with_arg("k", 1u64);
+            let _i = t.instant("test", "point");
+        }
+        t.record_span("test", "manual", 7, 0, 10, vec![]);
+        assert!(t.drain().records.is_empty());
+    }
+
+    #[test]
+    fn spans_nest_and_time_deterministically() {
+        let (t, clock) = manual_tracer();
+        t.enable();
+        {
+            let _outer = t.span("test", "outer");
+            clock.advance(10);
+            {
+                let _inner = t.span("test", "inner").with_arg("depth", 2u64);
+                clock.advance(5);
+            }
+            clock.advance(1);
+        }
+        let batch = t.drain();
+        assert_eq!(batch.records.len(), 2);
+        let outer = batch.records.iter().find(|r| r.name == "outer").unwrap();
+        let inner = batch.records.iter().find(|r| r.name == "inner").unwrap();
+        assert_eq!((outer.start_us, outer.dur_us), (0, 16));
+        assert_eq!((inner.start_us, inner.dur_us), (10, 5));
+        assert_eq!(inner.parent, Some(outer.id));
+        assert_eq!(outer.parent, None);
+        assert_eq!(inner.arg("depth"), Some(&ArgValue::U64(2)));
+        // Contained: parent interval covers the child.
+        assert!(outer.start_us <= inner.start_us && inner.end_us() <= outer.end_us());
+    }
+
+    #[test]
+    fn instants_record_zero_duration_and_keep_parents() {
+        let (t, clock) = manual_tracer();
+        t.enable();
+        {
+            let _outer = t.span("test", "outer");
+            clock.advance(3);
+            t.instant("test", "decision").with_arg("to", 4u64);
+        }
+        let batch = t.drain();
+        let i = batch.records.iter().find(|r| r.kind == EventKind::Instant).unwrap();
+        assert_eq!((i.start_us, i.dur_us), (3, 0));
+        assert!(i.parent.is_some());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let (t, _) = manual_tracer();
+        t.enable();
+        let t = Tracer::with_clock_and_capacity(Box::new(ManualClock::new()), 4);
+        t.enable();
+        for i in 0..10u64 {
+            t.record_span("test", "s", 0, i, i + 1, vec![]);
+        }
+        let batch = t.drain();
+        // Track 0 hashes to one shard with capacity 4: the 6 oldest fell out.
+        assert_eq!(batch.records.len(), 4);
+        assert_eq!(batch.dropped, 6);
+        // The *newest* records survived.
+        assert_eq!(batch.records.last().unwrap().start_us, 9);
+    }
+
+    #[test]
+    fn two_tracers_on_one_thread_do_not_cross_parents() {
+        let (a, _) = manual_tracer();
+        let (b, _) = manual_tracer();
+        a.enable();
+        b.enable();
+        {
+            let _pa = a.span("test", "a_parent");
+            let _sb = b.span("test", "b_root");
+        }
+        let bb = b.drain();
+        assert_eq!(bb.records.len(), 1);
+        // b's span must not adopt a's open span as parent.
+        assert_eq!(bb.records[0].parent, None);
+        assert_eq!(a.drain().records.len(), 1);
+    }
+
+    #[test]
+    fn tracks_are_per_thread_and_nameable() {
+        let (t, _) = manual_tracer();
+        t.enable();
+        t.set_track_name("main");
+        let main_track = t.current_track();
+        let t_ref = &t;
+        let worker_track = std::thread::scope(|s| {
+            s.spawn(|| {
+                t_ref.set_track_name("worker");
+                let _s = t_ref.span("test", "work");
+                t_ref.current_track()
+            })
+            .join()
+            .unwrap()
+        });
+        assert_ne!(main_track, worker_track);
+        let batch = t.drain();
+        assert_eq!(batch.records[0].track, worker_track);
+        let names: std::collections::HashMap<u32, String> =
+            batch.track_names.into_iter().collect();
+        assert_eq!(names[&main_track], "main");
+        assert_eq!(names[&worker_track], "worker");
+    }
+}

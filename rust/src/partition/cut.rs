@@ -271,6 +271,11 @@ pub fn choose_cuts_explained(
     k: usize,
     cache: &FirmwareCache,
 ) -> Result<CutPlan> {
+    let mut search_span = crate::obs::tracer()
+        .span("partition", "cut_search")
+        .with_arg("model", json.name.clone())
+        .with_arg("k", k)
+        .with_arg("candidates", candidates.len());
     let mac_cuts = choose_cuts_by_macs(json, candidates, k)?;
     if k == 1 {
         return Ok(CutPlan {
@@ -333,6 +338,7 @@ pub fn choose_cuts_explained(
             jobs.push((model, sub_cfg));
         }
     }
+    search_span.arg("slices", grid.len());
     let compiled = cache.compile_many(&jobs);
     // Score every compiled segment: its own steady-state interval, max'd
     // with the cost of the link feeding it (which depends on whether this
@@ -374,6 +380,7 @@ pub fn choose_cuts_explained(
         // No candidate slice set compiles at this K. Hand back the MAC
         // cuts: the caller's real compile then reports *why* (the actual
         // per-partition compile error), instead of a bare "no cuts".
+        search_span.arg("used_macs_fallback", true);
         return Ok(CutPlan {
             cuts: mac_cuts.clone(),
             bottleneck_cycles: f64::INFINITY,
@@ -395,6 +402,7 @@ pub fn choose_cuts_explained(
     segment_cycles.push(score[0][i].expect("first segment was scored").cycles);
     cuts.reverse();
     segment_cycles.reverse();
+    search_span.arg("bottleneck_cycles", best.cycles);
     Ok(CutPlan {
         cuts,
         bottleneck_cycles: best.cycles,

@@ -537,6 +537,10 @@ pub fn execute_partitioned(
     let mut finals: Vec<Option<Activation>> = vec![None; pfw.outputs.len()];
     let mut carry: Option<Activation> = None;
     for (i, fw) in pfw.partitions.iter().enumerate() {
+        let _stage = crate::obs::tracer()
+            .span("serve", "stage")
+            .with_arg("partition", i)
+            .with_arg("tiles", fw.stages.len());
         let x = carry.as_ref().unwrap_or(input);
         let mut outs = execute_all(fw, x)?;
         for (slot, o) in pfw.outputs.iter().enumerate() {

@@ -90,10 +90,20 @@ pub fn default_pipeline() -> Vec<Box<dyn Pass>> {
 }
 
 /// Compile a parsed JSON model with a config all the way to firmware.
+///
+/// Each pass runs under its own tracer span (child of one `compile`
+/// root), so `compile --profile` and serve-time re-plans attribute cold
+/// compile latency to the pass that spent it.
 pub fn compile(json: &JsonModel, config: CompileConfig) -> Result<Model> {
+    let tr = crate::obs::tracer();
+    let _root = tr
+        .span("compile", "compile")
+        .with_arg("model", json.name.clone())
+        .with_arg("layers", json.layers.len());
     let graph = json.to_graph()?;
     let mut model = Model::new(json.name.clone(), graph, config)?;
     for pass in default_pipeline() {
+        let _span = tr.span("compile", pass.name());
         pass.run(&mut model)
             .map_err(|e| anyhow::anyhow!("pass '{}' failed: {e:#}", pass.name()))?;
     }

@@ -1,0 +1,282 @@
+//! Observability spine: property and end-to-end tests.
+//!
+//! * Concurrent workers produce only *complete* spans whose parent links
+//!   respect per-thread containment (parent opens before, closes after).
+//! * A real serving run under the global tracer exports Chrome
+//!   trace-event JSON that parses and keeps the `ph`/`ts`/`dur`
+//!   invariants, with every request-lifecycle phase present.
+//! * Two Prometheus scrapes of a live server difference into exactly the
+//!   [`AdmissionReport::delta`] window between their snapshots.
+//!
+//! Tests that enable the process-global tracer serialize on a static
+//! mutex: the tracer is process-wide state and `cargo test` runs tests
+//! concurrently in one process.
+
+use aie4ml::arch::Dtype;
+use aie4ml::coordinator::{AdmissionConfig, ContinuousPolicy, ContinuousServer};
+use aie4ml::frontend::{CompileConfig, JsonModel};
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::obs::{self, parse_prometheus, to_chrome_json, to_prometheus, EventKind, SpanRecord, Tracer};
+use aie4ml::partition::{compile_partitioned, PartitionOptions, PartitionedFirmware};
+use aie4ml::util::json::Value;
+use aie4ml::util::Pcg32;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Serializes tests that enable the process-global tracer.
+fn global_tracer_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+fn pipeline(name: &str, batch: usize) -> Arc<PartitionedFirmware> {
+    let json: JsonModel = synth_model(name, &mlp_spec(&[24, 16, 8], Dtype::I8), 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = batch;
+    cfg.tiles_per_layer = Some(1);
+    Arc::new(compile_partitioned(&json, cfg, &PartitionOptions::default()).unwrap().firmware)
+}
+
+/// Assert parent links respect same-track containment: a child starts at
+/// or after its parent and ends at or before it.
+fn assert_parent_containment(records: &[SpanRecord]) {
+    let by_id: HashMap<u64, &SpanRecord> = records.iter().map(|r| (r.id, r)).collect();
+    let mut linked = 0usize;
+    for r in records {
+        let Some(pid) = r.parent else { continue };
+        let p = by_id
+            .get(&pid)
+            .unwrap_or_else(|| panic!("span {} names missing parent {pid}", r.id));
+        linked += 1;
+        assert_eq!(p.track, r.track, "parent {} and child {} on different tracks", p.id, r.id);
+        assert!(
+            p.start_us <= r.start_us && r.end_us() <= p.end_us(),
+            "child [{}, {}] escapes parent [{}, {}] ({} in {})",
+            r.start_us,
+            r.end_us(),
+            p.start_us,
+            p.end_us(),
+            r.name,
+            p.name,
+        );
+    }
+    assert!(linked > 0, "no parent-linked spans to check");
+}
+
+#[test]
+fn concurrent_workers_emit_complete_contained_spans() {
+    let tracer = Arc::new(Tracer::new());
+    tracer.enable();
+    let threads = 8usize;
+    let per_thread = 40usize;
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let t = tracer.clone();
+            scope.spawn(move || {
+                t.set_track_name(format!("prop-worker-{w}"));
+                for i in 0..per_thread {
+                    let _outer = t.span("prop", "outer").with_arg("i", i);
+                    {
+                        let _mid = t.span("prop", "mid");
+                        let _inner = t.span("prop", "inner");
+                    }
+                    t.instant("prop", "tick");
+                }
+            });
+        }
+    });
+    let batch = tracer.drain();
+    assert_eq!(batch.dropped, 0);
+    // Every opened span closed: 3 spans + 1 instant per iteration.
+    assert_eq!(batch.records.len(), threads * per_thread * 4);
+    for r in &batch.records {
+        match r.kind {
+            EventKind::Span => {}
+            EventKind::Instant => assert_eq!(r.dur_us, 0),
+        }
+    }
+    assert_parent_containment(&batch.records);
+    // Tracks never interleave across threads: per track, the "outer"
+    // spans are disjoint in time (each iteration's guard closed before
+    // the next opened).
+    let mut per_track: HashMap<u32, Vec<&SpanRecord>> = HashMap::new();
+    for r in batch.records.iter().filter(|r| r.name == "outer") {
+        per_track.entry(r.track).or_default().push(r);
+    }
+    assert_eq!(per_track.len(), threads);
+    for outers in per_track.values() {
+        for w in outers.windows(2) {
+            assert!(w[0].end_us() <= w[1].start_us, "sibling outer spans overlap");
+        }
+    }
+}
+
+#[test]
+fn serving_lifecycle_trace_exports_valid_chrome_json() {
+    let _guard = global_tracer_lock().lock().unwrap();
+    let pfw = pipeline("obs_e2e", 4);
+    let features = pfw.input_features();
+    let tr = obs::tracer();
+    tr.drain(); // discard anything earlier tests left behind
+    tr.enable();
+
+    let server = ContinuousServer::spawn(
+        pfw,
+        2,
+        ContinuousPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+    )
+    .unwrap();
+    let client = server.client();
+    let mut rng = Pcg32::seed_from_u64(9);
+    let tickets: Vec<_> = (0..24)
+        .map(|_| {
+            let x: Vec<i32> = (0..features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+            client.submit(x).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let (_, admission) = server.shutdown();
+    let batch = tr.drain();
+    tr.disable();
+
+    assert!(admission.is_conserved());
+    assert_eq!(admission.admitted, 24);
+
+    // Every request-lifecycle phase shows up.
+    for phase in ["submit", "queue_wait", "batch_form", "batch_execute", "dispatch", "stage"] {
+        assert!(
+            batch.records.iter().any(|r| r.name == phase && r.kind == EventKind::Span),
+            "no '{phase}' span in the lifecycle trace"
+        );
+    }
+    let completes =
+        batch.records.iter().filter(|r| r.name == "complete" && r.kind == EventKind::Instant);
+    assert_eq!(completes.count(), 24, "one completion instant per served request");
+    assert_eq!(
+        batch.records.iter().filter(|r| r.name == "submit").count(),
+        24,
+        "one submit span per request"
+    );
+    assert_parent_containment(&batch.records);
+
+    // The Chrome export parses and keeps the phase invariants.
+    let text = to_chrome_json(&batch);
+    let v = Value::parse(&text).expect("chrome JSON parses");
+    let events = v.field("traceEvents").unwrap().as_array().unwrap();
+    assert!(events.len() >= batch.records.len());
+    let mut named_tracks = 0usize;
+    for ev in events {
+        match ev.field("ph").unwrap().as_str().unwrap() {
+            "X" => {
+                assert!(ev.field("ts").unwrap().as_i64().unwrap() >= 0);
+                assert!(ev.field("dur").unwrap().as_i64().unwrap() >= 0);
+                assert!(ev.field("args").unwrap().get("span_id").is_some());
+            }
+            "i" => assert_eq!(ev.field("s").unwrap().as_str().unwrap(), "t"),
+            "M" => {
+                named_tracks += 1;
+                assert_eq!(ev.field("name").unwrap().as_str().unwrap(), "thread_name");
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+        assert_eq!(ev.field("pid").unwrap().as_i64().unwrap(), 1);
+    }
+    // At least the queue lane and the two worker tracks are named.
+    assert!(named_tracks >= 3, "only {named_tracks} named tracks");
+}
+
+#[test]
+fn prometheus_scrapes_difference_into_admission_delta_windows() {
+    let _guard = global_tracer_lock().lock().unwrap();
+    let pfw = pipeline("obs_prom", 4);
+    let features = pfw.input_features();
+    let server = ContinuousServer::spawn(
+        pfw,
+        1,
+        ContinuousPolicy {
+            max_wait: Duration::from_millis(1),
+            admission: AdmissionConfig { queue_capacity: 64, latency_budget_us: None },
+            record_batches: false,
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let mut rng = Pcg32::seed_from_u64(5);
+    let mut drive = |n: usize| {
+        let tickets: Vec<_> = (0..n)
+            .map(|_| {
+                let x: Vec<i32> = (0..features).map(|_| rng.gen_i32_in(-128, 127)).collect();
+                client.submit(x).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    };
+
+    // Workers record request metrics just *after* replying, so settle on
+    // the served count before scraping (admission counters are already
+    // exact at submit time).
+    let settled_snapshot = |served: usize| {
+        for _ in 0..2000 {
+            let snap = server.snapshot();
+            if snap.metrics.requests >= served {
+                return snap;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("metrics never settled at {served} served requests");
+    };
+    drive(8);
+    let snap1 = settled_snapshot(8);
+    let scrape1 = parse_prometheus(&to_prometheus(&snap1)).unwrap();
+    drive(12);
+    let snap2 = settled_snapshot(20);
+    let scrape2 = parse_prometheus(&to_prometheus(&snap2)).unwrap();
+    server.shutdown();
+
+    // Each scrape satisfies the conservation identity on its own.
+    for scrape in [&scrape1, &scrape2] {
+        let sum = scrape["aie4ml_requests_admitted_total"]
+            + scrape["aie4ml_requests_shed_total{reason=\"queue_full\"}"]
+            + scrape["aie4ml_requests_shed_total{reason=\"deadline_risk\"}"]
+            + scrape["aie4ml_requests_rejected_total{reason=\"malformed\"}"]
+            + scrape["aie4ml_requests_rejected_total{reason=\"stopped\"}"];
+        assert_eq!(scrape["aie4ml_requests_submitted_total"], sum);
+    }
+
+    // Scrape differences == the AdmissionReport::delta window, counter by
+    // counter (counters are cumulative, so subtraction is exact).
+    let delta = snap2.admission.delta(&snap1.admission);
+    assert!(snap1.admission.is_conserved() && snap2.admission.is_conserved());
+    let window = |name: &str| scrape2[name] - scrape1[name];
+    assert_eq!(window("aie4ml_requests_submitted_total"), delta.submitted as f64);
+    assert_eq!(window("aie4ml_requests_admitted_total"), delta.admitted as f64);
+    assert_eq!(
+        window("aie4ml_requests_shed_total{reason=\"queue_full\"}"),
+        delta.shed_queue_full as f64
+    );
+    assert_eq!(
+        window("aie4ml_requests_shed_total{reason=\"deadline_risk\"}"),
+        delta.shed_deadline as f64
+    );
+    assert_eq!(
+        window("aie4ml_requests_rejected_total{reason=\"malformed\"}"),
+        delta.rejected_malformed as f64
+    );
+    assert_eq!(
+        window("aie4ml_requests_rejected_total{reason=\"stopped\"}"),
+        delta.rejected_stopped as f64
+    );
+    assert_eq!(delta.submitted, 12);
+    assert_eq!(delta.admitted, 12);
+    // Served counts and the latency histogram advanced with the window.
+    assert_eq!(window("aie4ml_requests_served_total"), 12.0);
+    assert_eq!(
+        window("aie4ml_request_latency_microseconds_count"),
+        12.0
+    );
+}

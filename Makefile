@@ -16,6 +16,10 @@
 #                   partition-scaling, deploy-scaling, concat-tiling,
 #                   load-harness, compile-throughput and obs-overhead
 #                   benches (what CI's bench smoke job runs)
+#   make bench-check run every bench in --smoke mode, collect BENCH_*.json
+#                   records under rust/artifacts/bench, and run the regression
+#                   sentinel against benches/BASELINE.json (report-only: only
+#                   enforced budgets gate — what CI's bench-check job runs)
 #   make trace-demo serve the zoo's funnel_mlp under a bursty trace with the
 #                   autoscaler on, exporting a Perfetto-loadable Chrome trace
 #                   and a Prometheus scrape under rust/artifacts/obs/
@@ -23,7 +27,12 @@
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: build test zoo artifacts fmt clippy bench bench-smoke trace-demo clean
+BENCHES := ablations compile_throughput concat_tiling deploy_scaling \
+	fig3_placement fig4_layer_scaling load_harness obs_overhead \
+	partition_scaling table1_ceilings table2_single_kernel table3_models \
+	table4_frameworks table5_cross_device
+
+.PHONY: build test zoo artifacts fmt clippy bench bench-smoke bench-check trace-demo clean
 
 build:
 	$(CARGO) build --release
@@ -57,6 +66,15 @@ bench-smoke:
 	$(CARGO) bench --bench load_harness -- --smoke
 	$(CARGO) bench --bench compile_throughput -- --smoke
 	$(CARGO) bench --bench obs_overhead -- --smoke
+
+bench-check: build
+	rm -rf rust/artifacts/bench
+	mkdir -p rust/artifacts/bench
+	for b in $(BENCHES); do \
+		AIE4ML_BENCH_OUT=rust/artifacts/bench $(CARGO) bench --bench $$b -- --smoke || exit 1; \
+	done
+	target/release/aie4ml bench-check --records rust/artifacts/bench \
+		--baseline benches/BASELINE.json --report-only
 
 trace-demo: zoo
 	mkdir -p rust/artifacts/obs

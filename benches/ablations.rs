@@ -106,9 +106,14 @@ fn ablation_placement() {
 }
 
 fn main() {
-    bench::run("ablations_all", 3, || {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let (_, stats) = bench::run("ablations_all", iters, || {
         ablation_blocking();
         ablation_pingpong();
         ablation_placement();
     });
+    let mut rec = bench::BenchRecord::new("ablations", smoke);
+    rec.stats("all", &stats);
+    rec.write();
 }

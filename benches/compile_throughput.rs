@@ -169,4 +169,11 @@ fn main() {
         ("improved_models", improved.into()),
     ]);
     println!("\n{}", summary.to_string_compact());
+
+    let mut rec = aie4ml::util::bench::BenchRecord::new("compile_throughput", smoke);
+    rec.metric("cold_us", cold_us, "us")
+        .metric("warm_us", warm_us, "us")
+        .metric("speedup", speedup, "x")
+        .metric("improved_models", improved as f64, "count");
+    rec.write();
 }

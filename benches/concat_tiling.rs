@@ -36,7 +36,7 @@ fn main() {
         cfg.layers
             .insert(name.into(), LayerConfig { cascade: Some((2, 2)), ..Default::default() });
     }
-    let (m, _) = bench::run("concat_compile", iters, || {
+    let (m, concat_stats) = bench::run("concat_compile", iters, || {
         compile(&json, cfg.clone()).expect("concat compile")
     });
     let fw = m.firmware.as_ref().unwrap();
@@ -59,7 +59,7 @@ fn main() {
     let json = wide_mlp_2x_model("concat_tiling_wide2x");
     let wcfg = wide_mlp_2x_config();
     let opts = PartitionOptions { partitions: Some(2), ..Default::default() };
-    let (pm, _) = bench::run("wide2x_k2_compile", iters, || {
+    let (pm, wide_stats) = bench::run("wide2x_k2_compile", iters, || {
         compile_partitioned(&json, wcfg.clone(), &opts).expect("partitioned compile")
     });
     let pfw = &pm.firmware;
@@ -69,8 +69,15 @@ fn main() {
         "{:<8} {:>12} {:>14} {:>12} {:>14}",
         "path", "interval cyc", "latency cyc", "link cyc", "pipeline hops"
     );
+    let mut offset_interval = 0.0;
+    let mut staged_interval = 0.0;
     for (name, p) in [("offset", pfw), ("staged", &staged)] {
         let perf = analyze_pipeline(p, &model);
+        if name == "offset" {
+            offset_interval = perf.interval_cycles;
+        } else {
+            staged_interval = perf.interval_cycles;
+        }
         println!(
             "{:<8} {:>12.0} {:>14.0} {:>12.0} {:>14}",
             name,
@@ -80,4 +87,11 @@ fn main() {
             pipeline_total_hops(p)
         );
     }
+
+    let mut rec = bench::BenchRecord::new("concat_tiling", smoke);
+    rec.stats("concat_compile", &concat_stats)
+        .stats("wide2x_k2_compile", &wide_stats)
+        .metric("wide2x_offset_interval_cycles", offset_interval, "cycles")
+        .metric("wide2x_staged_interval_cycles", staged_interval, "cycles");
+    rec.write();
 }

@@ -42,6 +42,8 @@ fn main() {
         "{:>2} {:>16} {:>16} {:>10} {:>10}",
         "R", "predicted sps", "served sps", "speedup", "batches"
     );
+    let mut rec = aie4ml::util::bench::BenchRecord::new("deploy_scaling", smoke);
+    rec.metric("predicted_sps_per_replica", per_replica_sps, "sps");
     let mut base_served: Option<f64> = None;
     for r in [1usize, 2, 4] {
         let fleet = FleetServer::spawn(pfw.clone(), r, Duration::from_micros(200), 4096)
@@ -73,5 +75,8 @@ fn main() {
             speedup,
             m.merged.batches
         );
+        rec.metric(&format!("served_sps_r{r}"), served, "sps");
+        rec.metric(&format!("speedup_r{r}"), speedup, "x");
     }
+    rec.write();
 }

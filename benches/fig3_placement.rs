@@ -14,13 +14,15 @@ fn main() {
     let (short, long) = if smoke { (1, 1) } else { (5, 3) };
     let blocks = fig3::example_blocks();
     let prob = fig3::problem();
-    bench::run("fig3_bnb_search", short, || place_bnb(&blocks, &prob).unwrap().cost);
-    let (figure, _) = bench::run("fig3_full_comparison", long, || fig3::render().unwrap());
+    let (cost, search_stats) =
+        bench::run("fig3_bnb_search", short, || place_bnb(&blocks, &prob).unwrap().cost);
+    let (figure, full_stats) =
+        bench::run("fig3_full_comparison", long, || fig3::render().unwrap());
     println!("\n{figure}");
 
     // Branching scenario: the same solver over an explicit edge set.
     let (bblocks, edges) = fig3::branching_blocks();
-    bench::run("fig3_bnb_branching_search", short, || {
+    let (bcost, branch_stats) = bench::run("fig3_bnb_branching_search", short, || {
         place_bnb_graph(&bblocks, &edges, &prob).unwrap().cost
     });
     let rep = place_bnb_graph(&bblocks, &edges, &prob).unwrap();
@@ -32,4 +34,13 @@ fn main() {
         fig3::render_branching().unwrap()
     });
     println!("\n{bfigure}");
+
+    let mut rec = bench::BenchRecord::new("fig3_placement", smoke);
+    rec.stats("bnb_search", &search_stats)
+        .stats("full_comparison", &full_stats)
+        .stats("branching_search", &branch_stats)
+        .metric("bnb_cost", cost, "J")
+        .metric("branching_cost", bcost, "J")
+        .metric("branching_nodes_explored", rep.nodes_explored as f64, "nodes");
+    rec.write();
 }

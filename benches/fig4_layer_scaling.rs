@@ -3,6 +3,12 @@ use aie4ml::harness::fig4;
 use aie4ml::util::bench;
 
 fn main() {
-    let (figure, _) = bench::run("fig4_layer_scaling", 3, || fig4::render(128).unwrap());
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let (figure, stats) = bench::run("fig4_layer_scaling", iters, || fig4::render(128).unwrap());
     println!("\n{figure}");
+
+    let mut rec = bench::BenchRecord::new("fig4_layer_scaling", smoke);
+    rec.stats("render", &stats);
+    rec.write();
 }

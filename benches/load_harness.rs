@@ -289,6 +289,21 @@ fn main() {
         over_report.p99_latency_us
     );
 
+    let mut rec = aie4ml::util::bench::BenchRecord::new("load_harness", smoke);
+    rec.metric("async_p99_us", report.p99_latency_us, "us")
+        .metric("async_p50_us", report.p50_latency_us, "us")
+        .metric("async_shed_pct", 100.0 * shed as f64 / events.len() as f64, "pct")
+        .metric("baseline_p99_us", base_p99, "us")
+        .metric("overload_p99_us", over_report.p99_latency_us, "us")
+        .metric(
+            "overload_shed_pct",
+            100.0 * over_shed as f64 / over_events.len() as f64,
+            "pct",
+        )
+        .metric("peak_replicas", peak_r as f64, "replicas")
+        .metric("budget_us", budget_us, "us");
+    rec.write();
+
     if smoke {
         println!("\nsmoke OK (structural invariants only)");
         return;

@@ -101,6 +101,14 @@ fn main() {
          disabled {disabled_pct:.3}% (budget 1%)   enabled {enabled_pct:.3}% (budget 5%)"
     );
 
+    let mut rec = aie4ml::util::bench::BenchRecord::new("obs_overhead", smoke);
+    rec.metric("disabled_pct", disabled_pct, "pct")
+        .metric("enabled_pct", enabled_pct, "pct")
+        .metric("request_us", request_us, "us")
+        .metric("disabled_ns", disabled_ns, "ns")
+        .metric("enabled_ns", enabled_ns, "ns");
+    rec.write();
+
     if smoke {
         println!("smoke mode: budgets reported, not asserted");
         return;

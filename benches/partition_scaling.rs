@@ -30,13 +30,17 @@ fn main() {
         "K", "interval cyc", "latency cyc", "link cyc", "TOPS", "tiles"
     );
     let mut rows = Vec::new();
+    let mut rec = bench::BenchRecord::new("partition_scaling", smoke);
     for k in [1usize, 2, 4] {
         let opts = PartitionOptions { partitions: Some(k), ..Default::default() };
         let label = format!("partition_compile_k{k}");
-        let (pm, _) = bench::run(&label, iters, || {
+        let (pm, stats) = bench::run(&label, iters, || {
             compile_partitioned(&json, cfg.clone(), &opts).expect("partitioned compile")
         });
         let rep = analyze_pipeline(&pm.firmware, &EngineModel::default());
+        rec.stats(&format!("compile_k{k}"), &stats)
+            .metric(&format!("interval_cycles_k{k}"), rep.interval_cycles, "cycles")
+            .metric(&format!("throughput_tops_k{k}"), rep.throughput_tops, "tops");
         rows.push(format!(
             "{:>2} {:>12.0} {:>14.0} {:>14.0} {:>12.2} {:>10}",
             rep.k,
@@ -51,4 +55,5 @@ fn main() {
     for r in &rows {
         println!("{r}");
     }
+    rec.write();
 }

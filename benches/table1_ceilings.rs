@@ -3,6 +3,12 @@ use aie4ml::harness::table1;
 use aie4ml::util::bench;
 
 fn main() {
-    let (table, _) = bench::run("table1_ceilings", 100, table1::render);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 100 };
+    let (table, stats) = bench::run("table1_ceilings", iters, table1::render);
     println!("\n{table}");
+
+    let mut rec = bench::BenchRecord::new("table1_ceilings", smoke);
+    rec.stats("render", &stats);
+    rec.write();
 }

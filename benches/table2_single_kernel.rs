@@ -3,6 +3,12 @@ use aie4ml::harness::table2;
 use aie4ml::util::bench;
 
 fn main() {
-    let (table, _) = bench::run("table2_single_kernel", 10, || table2::render().unwrap());
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 10 };
+    let (table, stats) = bench::run("table2_single_kernel", iters, || table2::render().unwrap());
     println!("\n{table}");
+
+    let mut rec = bench::BenchRecord::new("table2_single_kernel", smoke);
+    rec.stats("render", &stats);
+    rec.write();
 }

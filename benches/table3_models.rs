@@ -3,6 +3,12 @@ use aie4ml::harness::table3;
 use aie4ml::util::bench;
 
 fn main() {
-    let (table, _) = bench::run("table3_models", 3, || table3::render().unwrap());
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let (table, stats) = bench::run("table3_models", iters, || table3::render().unwrap());
     println!("\n{table}");
+
+    let mut rec = bench::BenchRecord::new("table3_models", smoke);
+    rec.stats("render", &stats);
+    rec.write();
 }

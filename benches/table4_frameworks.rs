@@ -4,9 +4,18 @@ use aie4ml::harness::table4;
 use aie4ml::util::bench;
 
 fn main() {
-    bench::run("table4_gemm_full_array", 5, || {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (gemm_iters, render_iters) = if smoke { (1, 1) } else { (5, 3) };
+    let (gops, gemm_stats) = bench::run("table4_gemm_full_array", gemm_iters, || {
         table4::measure_gemm_full_array().unwrap().0
     });
-    let (table, _) = bench::run("table4_render", 3, || table4::render().unwrap());
+    let (table, render_stats) =
+        bench::run("table4_render", render_iters, || table4::render().unwrap());
     println!("\n{table}");
+
+    let mut rec = bench::BenchRecord::new("table4_frameworks", smoke);
+    rec.stats("gemm_full_array", &gemm_stats)
+        .stats("render", &render_stats)
+        .metric("gemm_gops", gops, "gops");
+    rec.write();
 }

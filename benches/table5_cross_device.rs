@@ -3,6 +3,12 @@ use aie4ml::harness::table5;
 use aie4ml::util::bench;
 
 fn main() {
-    let (table, _) = bench::run("table5_cross_device", 3, || table5::render().unwrap());
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let (table, stats) = bench::run("table5_cross_device", iters, || table5::render().unwrap());
     println!("\n{table}");
+
+    let mut rec = bench::BenchRecord::new("table5_cross_device", smoke);
+    rec.stats("render", &stats);
+    rec.write();
 }

@@ -25,6 +25,7 @@ use super::batcher::Request;
 use super::metrics::{Metrics, MetricsReport};
 use crate::cache::{CacheStats, FirmwareCache};
 use crate::obs;
+use crate::obs::attrib::{DriftDetector, DriftReport};
 use crate::partition::{analyze_pipeline, execute_partitioned, PartitionedFirmware};
 use crate::sim::engine::EngineModel;
 use crate::sim::functional::Activation;
@@ -114,6 +115,10 @@ struct Shared {
     /// Firmware cache whose counters this server surfaces in snapshots
     /// (attached when an autoscaler re-plans against one).
     cache: Mutex<Option<Arc<FirmwareCache>>>,
+    /// Measured-vs-predicted batch-latency drift (one stage: the whole
+    /// pipeline executes inside each worker). Predicted time comes from
+    /// the cycle model the server was spawned with.
+    drift: Mutex<DriftDetector>,
 }
 
 /// A pending reply for one admitted request. Dropping the ticket abandons
@@ -236,6 +241,11 @@ pub struct ServingSnapshot {
     /// ([`ContinuousServer::attach_cache`]) — surfaces re-planning
     /// hit/miss/negative-entry behaviour next to the serving signals.
     pub cache: Option<CacheStats>,
+    /// Measured-vs-predicted latency drift, once at least one batch has
+    /// been measured (`None` before the first sample). The autoscaler
+    /// folds [`DriftReport::correction`] into its model-derived capacity
+    /// fallback.
+    pub drift: Option<DriftReport>,
 }
 
 /// The running continuous-batching server.
@@ -245,16 +255,30 @@ pub struct ContinuousServer {
 }
 
 impl ContinuousServer {
-    /// Spawn `replicas` worker threads pulling from one shared queue.
+    /// Spawn `replicas` worker threads pulling from one shared queue,
+    /// predicting batch time with the default calibrated cycle model.
     pub fn spawn(
         pfw: Arc<PartitionedFirmware>,
         replicas: usize,
         policy: ContinuousPolicy,
     ) -> Result<ContinuousServer> {
+        ContinuousServer::spawn_with_model(pfw, replicas, policy, &EngineModel::default())
+    }
+
+    /// Spawn with an explicit cycle model. The model sets the predicted
+    /// per-batch device time the drift detector compares measured
+    /// latencies against — tests inject a deliberately mis-scaled model
+    /// to exercise the drift path.
+    pub fn spawn_with_model(
+        pfw: Arc<PartitionedFirmware>,
+        replicas: usize,
+        policy: ContinuousPolicy,
+        model: &EngineModel,
+    ) -> Result<ContinuousServer> {
         ensure!(replicas >= 1, "continuous server needs at least one replica worker");
         ensure!(policy.admission.queue_capacity >= 1, "queue capacity must be >= 1");
         pfw.check_invariants()?;
-        let device_us = analyze_pipeline(&pfw, &EngineModel::default()).interval_us;
+        let device_us = analyze_pipeline(&pfw, model).interval_us;
         let shared = Arc::new(Shared {
             features: pfw.input_features(),
             batch: pfw.batch(),
@@ -276,6 +300,7 @@ impl ContinuousServer {
             queue_track: obs::tracer().logical_track("queue"),
             worker_seq: AtomicU64::new(0),
             cache: Mutex::new(None),
+            drift: Mutex::new(DriftDetector::new(&[device_us])),
         });
         let mut handles = Vec::with_capacity(replicas);
         for _ in 0..replicas {
@@ -337,6 +362,14 @@ impl ContinuousServer {
             batch: self.shared.batch,
             batch_us,
             cache: self.shared.cache.lock().unwrap().as_ref().map(|c| c.stats()),
+            drift: {
+                let report = self.shared.drift.lock().unwrap().report();
+                if report.has_samples() {
+                    Some(report)
+                } else {
+                    None
+                }
+            },
         }
     }
 
@@ -484,6 +517,7 @@ fn worker_loop(shared: &Shared) {
         let outs = execute_partitioned(&shared.pfw, &act).expect("pipeline execution failed");
         let exec_us = t0.elapsed().as_secs_f64() * 1e6;
         drop(exec_span);
+        shared.drift.lock().unwrap().observe(0, exec_us);
         {
             let mut st = shared.state.lock().unwrap();
             st.batch_us_ewma = if st.batch_us_ewma == 0.0 {
@@ -576,6 +610,30 @@ mod tests {
         assert_eq!(c.infer(vec![1; 24]).unwrap().len(), 8);
         let (m, _) = server.shutdown();
         assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn snapshot_reports_drift_after_batches() {
+        let server = ContinuousServer::spawn_with_model(
+            pipeline("cont_drift", 1, 2),
+            1,
+            ContinuousPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+            &EngineModel::default(),
+        )
+        .unwrap();
+        // No drift before the first measured batch.
+        assert!(server.snapshot().drift.is_none());
+        let c = server.client();
+        c.infer(vec![1; 24]).unwrap();
+        let snap = server.snapshot();
+        let d = snap.drift.expect("drift present after first batch");
+        assert_eq!(d.stages.len(), 1);
+        assert!(d.total_samples >= 1);
+        // Host wall-clock vs modeled device time: any positive ratio is
+        // valid, but it must be a real measurement.
+        assert!(d.overall_ratio > 0.0);
+        assert!(d.correction > 0.0);
+        server.shutdown();
     }
 
     #[test]

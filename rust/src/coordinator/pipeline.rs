@@ -17,9 +17,11 @@
 //! pipeline imbalance is observable in the final [`MetricsReport`]
 //! (`stages[i].busy_fraction` ≈ 1 marks the bottleneck array).
 
-use super::admission::AdmissionError;
+use super::admission::{AdmissionError, AdmissionReport};
 use super::batcher::{BatchPolicy, Batcher, Request};
+use super::continuous::ServingSnapshot;
 use super::metrics::{Metrics, MetricsReport};
+use crate::obs::attrib::DriftDetector;
 use crate::partition::{analyze_pipeline, PartitionedFirmware};
 use crate::sim::engine::EngineModel;
 use crate::sim::functional::{execute_all, Activation};
@@ -91,23 +93,49 @@ pub struct PipelineServer {
     pub client: PipelineClient,
     pfw: Arc<PartitionedFirmware>,
     metrics: Arc<Mutex<Metrics>>,
+    drift: Arc<Mutex<DriftDetector>>,
+    depths: Vec<Arc<AtomicUsize>>,
+    device_us: f64,
+    queue_capacity: usize,
     front: std::thread::JoinHandle<()>,
     stages: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl PipelineServer {
-    /// Spawn the front batcher plus one stage thread per partition.
+    /// Spawn the front batcher plus one stage thread per partition,
+    /// predicting per-stage batch time with the default calibrated model.
     pub fn spawn(
         pfw: Arc<PartitionedFirmware>,
         max_wait: Duration,
         queue_depth: usize,
     ) -> PipelineServer {
+        PipelineServer::spawn_with_model(pfw, max_wait, queue_depth, &EngineModel::default())
+    }
+
+    /// Spawn with an explicit cycle model. The model sets the predicted
+    /// per-partition batch times the drift detector compares measured
+    /// stage latencies against.
+    pub fn spawn_with_model(
+        pfw: Arc<PartitionedFirmware>,
+        max_wait: Duration,
+        queue_depth: usize,
+        model: &EngineModel,
+    ) -> PipelineServer {
         let k = pfw.k();
         let policy = BatchPolicy { batch: pfw.batch(), max_wait };
         let features = pfw.input_features();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        // Simulated device time per batch for the whole pipeline.
-        let device_us = analyze_pipeline(&pfw, &EngineModel::default()).interval_us;
+        // Simulated device time per batch for the whole pipeline, plus the
+        // per-partition predictions the drift detector measures against.
+        let pipe = analyze_pipeline(&pfw, model);
+        let device_us = pipe.interval_us;
+        let freq_hz = pfw.partitions[0].device.freq_ghz * 1e9;
+        let predicted_us: Vec<f64> = pipe
+            .partitions
+            .iter()
+            .map(|p| p.interval_cycles / freq_hz * 1e6)
+            .collect();
+        let drift = Arc::new(Mutex::new(DriftDetector::new(&predicted_us)));
 
         // Stage channels: front -> stage 0 -> ... -> stage k-1. Each has a
         // shared depth counter so stages can report queue pressure.
@@ -132,8 +160,9 @@ impl PipelineServer {
             let my_depth = depths[i].clone();
             let pfw = pfw.clone();
             let metrics = metrics.clone();
+            let drift = drift.clone();
             let handle = std::thread::spawn(move || {
-                stage_loop(i, &pfw, rx, next_tx, next_depth, my_depth, metrics, device_us)
+                stage_loop(i, &pfw, rx, next_tx, next_depth, my_depth, metrics, drift, device_us)
             });
             stages.push(handle);
             forward = Some(txs[i].clone());
@@ -203,6 +232,10 @@ impl PipelineServer {
             client: PipelineClient { tx, next_id: Arc::new(AtomicU64::new(0)), features },
             pfw,
             metrics,
+            drift,
+            depths,
+            device_us,
+            queue_capacity: queue_depth.max(1),
             front,
             stages,
         }
@@ -215,6 +248,28 @@ impl PipelineServer {
 
     pub fn metrics(&self) -> MetricsReport {
         self.metrics.lock().unwrap().report()
+    }
+
+    /// One consistent observation of the pipeline: per-stage metrics and
+    /// measured-vs-predicted drift in the same [`ServingSnapshot`] shape
+    /// the continuous server exposes, so the Prometheus exporter and the
+    /// autoscaler consume both server kinds uniformly. The pipeline has no
+    /// admission gate of its own, so the admission report is empty and
+    /// `replicas` is the single pipeline instance.
+    pub fn snapshot(&self) -> ServingSnapshot {
+        let queued = self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum();
+        let report = self.drift.lock().unwrap().report();
+        ServingSnapshot {
+            metrics: self.metrics(),
+            admission: AdmissionReport::default(),
+            queued,
+            queue_capacity: self.queue_capacity,
+            replicas: 1,
+            batch: self.pfw.batch(),
+            batch_us: self.device_us,
+            cache: None,
+            drift: if report.has_samples() { Some(report) } else { None },
+        }
     }
 
     /// Stop accepting requests, drain in-flight batches through every
@@ -243,6 +298,7 @@ fn stage_loop(
     next_depth: Option<Arc<AtomicUsize>>,
     my_depth: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
+    drift: Arc<Mutex<DriftDetector>>,
     device_us: f64,
 ) {
     let fw = &pfw.partitions[i];
@@ -261,7 +317,9 @@ fn stage_loop(
                 .with_arg("queue_depth", depth);
             execute_all(fw, &job.act).expect("partition execution failed")
         };
-        busy += t0.elapsed();
+        let exec = t0.elapsed();
+        busy += exec;
+        drift.lock().unwrap().observe(i, exec.as_secs_f64() * 1e6);
         for (slot, o) in pfw.outputs.iter().enumerate() {
             if o.partition == i {
                 job.finals.push((slot, outs[o.output].clone()));
@@ -362,6 +420,31 @@ mod tests {
             assert_eq!(s.batches, m.batches);
             assert!((0.0..=1.0).contains(&s.busy_fraction));
         }
+    }
+
+    #[test]
+    fn snapshot_exposes_stage_drift() {
+        let pfw = pipeline(2);
+        let server = PipelineServer::spawn(pfw, Duration::from_millis(1), 16);
+        // No drift before any batch reaches a stage.
+        assert!(server.snapshot().drift.is_none());
+        for i in 0..8 {
+            server.client.infer(vec![i; 32]).unwrap();
+        }
+        let snap = server.snapshot();
+        assert_eq!(snap.replicas, 1);
+        assert_eq!(snap.batch, 4);
+        assert!(snap.batch_us > 0.0);
+        let d = snap.drift.expect("drift present after batches");
+        assert_eq!(d.stages.len(), 2);
+        for s in &d.stages {
+            assert!(s.samples >= 1, "stage {} never observed", s.stage);
+            assert!(s.predicted_us > 0.0);
+            assert!(s.ratio > 0.0);
+        }
+        assert!(d.correction > 0.0);
+        let m = server.shutdown();
+        assert_eq!(m.stages.len(), 2);
     }
 
     #[test]

@@ -160,6 +160,11 @@ pub struct Autoscaler {
     /// Present when the autoscaler may re-run the planner
     /// ([`Autoscaler::with_replanning`]).
     replan: Option<ReplanContext>,
+    /// Latest measured-vs-predicted drift correction from the serving
+    /// snapshots (1.0 until any drift report arrives). Applied to the
+    /// model-derived capacity fallback: if measured latencies run N× the
+    /// model, the modeled per-replica rate is N× optimistic.
+    drift_correction: f64,
     prev_admission: AdmissionReport,
     prev_requests: usize,
     prev_at: Option<Instant>,
@@ -192,6 +197,7 @@ impl Autoscaler {
             budget_us,
             cfg,
             replan: None,
+            drift_correction: 1.0,
             prev_admission: AdmissionReport::default(),
             prev_requests: 0,
             prev_at: None,
@@ -211,6 +217,12 @@ impl Autoscaler {
     /// The replication factor the planner predicted, when known.
     pub fn plan_r(&self) -> Option<usize> {
         self.plan_r
+    }
+
+    /// The drift correction currently applied to the model-derived
+    /// capacity fallback (1.0 = model trusted as calibrated).
+    pub fn drift_correction(&self) -> f64 {
+        self.drift_correction
     }
 
     /// Cache counters of the re-planning context, when armed.
@@ -252,6 +264,14 @@ impl Autoscaler {
     /// Ingest one snapshot, closing the current observation window.
     /// Returns `Hold` until two observations exist (no window yet).
     pub fn observe(&mut self, now: Instant, snap: &ServingSnapshot) -> ScaleDecision {
+        // Fold the serving path's measured-vs-predicted drift into the
+        // capacity fallback before sizing the window: a model that proves
+        // N× optimistic deflates the modeled per-replica rate by N.
+        if let Some(d) = &snap.drift {
+            if d.has_samples() && d.correction > 0.0 {
+                self.drift_correction = d.correction;
+            }
+        }
         let window = snap.admission.delta(&self.prev_admission);
         let served = snap.metrics.requests.saturating_sub(self.prev_requests);
         let elapsed = self.prev_at.map(|t| now.saturating_duration_since(t).as_secs_f64());
@@ -279,7 +299,10 @@ impl Autoscaler {
             per_replica_sps: if snap.batch_us > 0.0 {
                 snap.batch as f64 * 1e6 / snap.batch_us
             } else {
-                self.fallback_sps
+                // No live estimate yet: the model's costed rate, deflated
+                // by the observed drift (the live EWMA branch needs no
+                // correction — it already *is* a measurement).
+                self.fallback_sps / self.drift_correction.max(f64::MIN_POSITIVE)
             },
         };
         self.decide(now, &burn, snap.replicas)
@@ -489,6 +512,54 @@ mod tests {
         b.p99_ratio = 2.0;
         b.served_sps = 900.0;
         assert!(matches!(a.decide(t, &b, 2), ScaleDecision::Up { to: 3, .. }));
+    }
+
+    #[test]
+    fn drift_correction_deflates_model_capacity_fallback() {
+        use crate::coordinator::MetricsReport;
+        use crate::obs::attrib::DriftReport;
+        let mut a = Autoscaler::from_rate(
+            1000.0,
+            1_000_000.0,
+            AutoscalerConfig { cooldown: Duration::ZERO, ..Default::default() },
+        );
+        let snap = |submitted: u64, served: usize, drift: Option<DriftReport>| {
+            let mut m = MetricsReport::empty();
+            m.requests = served;
+            ServingSnapshot {
+                metrics: m,
+                admission: AdmissionReport {
+                    submitted,
+                    admitted: submitted,
+                    ..Default::default()
+                },
+                queued: 0,
+                queue_capacity: 64,
+                replicas: 1,
+                batch: 8,
+                batch_us: 0.0, // no live estimate: the model fallback decides
+                cache: None,
+                drift,
+            }
+        };
+        let t0 = Instant::now();
+        // First observation only opens the window.
+        assert_eq!(a.observe(t0, &snap(0, 0, None)), ScaleDecision::Hold);
+        // 2000 offered/s against a modeled 1000/s/replica: demand 2.
+        let d1 = a.observe(t0 + Duration::from_secs(1), &snap(2000, 2000, None));
+        assert!(matches!(d1, ScaleDecision::Up { from: 1, to: 2, .. }), "got {d1:?}");
+        assert_eq!(a.drift_correction(), 1.0);
+        // Same offered rate, but serving measured 4x the model's latency:
+        // corrected capacity 250/s, so the same window demands 8 replicas.
+        let drift = DriftReport {
+            stages: Vec::new(),
+            overall_ratio: 4.0,
+            correction: 4.0,
+            total_samples: 32,
+        };
+        let d2 = a.observe(t0 + Duration::from_secs(2), &snap(4000, 4000, Some(drift)));
+        assert_eq!(a.drift_correction(), 4.0);
+        assert!(matches!(d2, ScaleDecision::Up { from: 1, to: 8, .. }), "got {d2:?}");
     }
 
     #[test]

@@ -17,7 +17,7 @@ aie4ml — end-to-end NN compiler + simulator for AMD AIE-ML
 
 USAGE:
   aie4ml compile <model.json> [--config <cfg.json>] [--out <dir>] [--batch N] [--verify]
-                 [--profile] [--trace-out <trace.json>]
+                 [--profile] [--trace-out <trace.json>] [--metrics-out <util.prom>]
   aie4ml run     <model.json> [--config <cfg.json>] [--batch N] [--input <in.json>] [--perf]
   aie4ml perf    <model.json> [--config <cfg.json>] [--batch N]
   aie4ml partition <model.json> [--config <cfg.json>] [--batch N] [--parts K] [--max-parts K]
@@ -32,6 +32,8 @@ USAGE:
                  [--trace poisson|bursty|diurnal] [--rate-sps F] [--duration-ms N] [--seed N]
                  [--replicas R] [--budget-us F] [--queue N] [--autoscale] [--max-replicas N]
                  [--trace-out <trace.json>] [--metrics-out <metrics.prom>]
+  aie4ml analyze --trace <trace.json> [--root NAME] [--top N]
+  aie4ml bench-check [--records <dir>] [--baseline <BASELINE.json>] [--report-only]
   aie4ml info    [device]
 ";
 
@@ -139,7 +141,10 @@ fn write_trace_json(path: &str) -> Result<()> {
 /// Render a serving snapshot as Prometheus text exposition, self-check it
 /// through the bundled parser, and write it out.
 fn write_metrics_prom(path: &str, snap: &aie4ml::coordinator::ServingSnapshot) -> Result<()> {
-    let text = aie4ml::obs::to_prometheus(snap);
+    let mut text = aie4ml::obs::to_prometheus(snap);
+    // Ring-buffer health rides along: drop counts and shard occupancy
+    // without draining the rings.
+    text.push_str(&aie4ml::obs::prom::tracer_gauges(&aie4ml::obs::tracer().stats()));
     let series = aie4ml::obs::parse_prometheus(&text)
         .map_err(|e| anyhow::anyhow!("emitted metrics failed their self-check: {e}"))?;
     std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
@@ -432,6 +437,27 @@ fn main() -> Result<()> {
                 println!("invariants OK");
             }
             println!("project written to {out}");
+            if profile {
+                // Per-tile efficiency accounting against the calibrated
+                // cycle model: busy/peak fractions per stage, the Fig. 4
+                // scaling-efficiency number, and the array heatmap.
+                let util =
+                    aie4ml::obs::attrib::tile_utilization(fw, &EngineModel::default());
+                println!(
+                    "tile efficiency ('{}', batch {} on {}):",
+                    util.model_name, util.batch, util.device_name
+                );
+                print!("{}", util.render_table());
+                print!("{}", util.render_heatmap());
+                if let Some(path) = args.flags.get("metrics-out") {
+                    let text = aie4ml::obs::prom::tile_gauges(&util);
+                    aie4ml::obs::parse_prometheus(&text).map_err(|e| {
+                        anyhow::anyhow!("emitted tile gauges failed their self-check: {e}")
+                    })?;
+                    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+                    println!("tile gauges -> {path}");
+                }
+            }
             if profile || trace_out.is_some() {
                 let batch = aie4ml::obs::tracer().drain();
                 if profile {
@@ -624,6 +650,13 @@ fn main() -> Result<()> {
                 "pipeline: interval {:.3} µs / batch of {}   latency {:.2} µs   {:.2} TOPS over {} tiles",
                 rep.interval_us, rep.batch, rep.latency_us, rep.throughput_tops, rep.tiles_used
             );
+            if args.switches.contains("explain") {
+                // The modeled critical path: which arrays and wires the
+                // fill latency is spent on, and which step bounds the
+                // steady-state interval.
+                let cp = aie4ml::partition::model_critical_path(pfw, &EngineModel::default());
+                print!("{}", cp.render());
+            }
         }
         "deploy" => {
             // SLO-driven deployment planning: search partitioning /
@@ -830,6 +863,111 @@ fn main() -> Result<()> {
             println!(
                 "served {} requests in {} batches  p50 {:.1} µs  p99 {:.1} µs  device busy {:.1} µs",
                 m.requests, m.batches, m.p50_latency_us, m.p99_latency_us, m.device_busy_us
+            );
+        }
+        "analyze" => {
+            // Offline trace attribution: re-import a Chrome trace-event
+            // file (as written by --trace-out), print the self-time
+            // rollup, and extract the exact critical path — whose step
+            // durations partition the root span's wall time by
+            // construction (self-checked below).
+            let args = Args::parse(rest, &[])?;
+            let path = args
+                .flags
+                .get("trace")
+                .cloned()
+                .or_else(|| args.positional.first().cloned())
+                .context("missing trace file (aie4ml analyze --trace <trace.json>)")?;
+            let text =
+                std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+            let batch = aie4ml::obs::from_chrome_json(&text)?;
+            println!(
+                "{path}: {} record(s){}",
+                batch.records.len(),
+                if batch.dropped > 0 {
+                    format!(", {} dropped at capture", batch.dropped)
+                } else {
+                    String::new()
+                }
+            );
+            let roots = aie4ml::obs::attrib::root_names(&batch);
+            if roots.is_empty() {
+                bail!("trace contains no spans to analyze");
+            }
+            println!("root spans:");
+            for (name, count, total) in &roots {
+                println!("  {name:<28} x{count:<6} {total:>10} µs total");
+            }
+            let top = args.get_usize("top", 12)?;
+            let rollups = aie4ml::obs::attrib::rollup(&batch);
+            println!("self-time rollup (top {top} of {}):", rollups.len());
+            println!(
+                "  {:<28} {:<12} {:>6} {:>12} {:>12} {:>10}",
+                "name", "cat", "count", "self µs", "total µs", "max µs"
+            );
+            for r in rollups.iter().take(top) {
+                println!(
+                    "  {:<28} {:<12} {:>6} {:>12} {:>12} {:>10}",
+                    r.name, r.cat, r.count, r.self_us, r.total_us, r.max_us
+                );
+            }
+            let cp = aie4ml::obs::attrib::critical_path(
+                &batch,
+                args.flags.get("root").map(String::as_str),
+            )
+            .context("no matching root span in the trace")?;
+            print!("{}", cp.render());
+            let step_sum: u64 = cp.steps.iter().map(|s| s.dur_us()).sum();
+            if step_sum != cp.total_us() {
+                bail!(
+                    "critical-path self-check failed: steps sum to {step_sum} µs, \
+                     root wall time is {} µs",
+                    cp.total_us()
+                );
+            }
+            println!(
+                "critical path: {} step(s) partition the root's {} µs exactly",
+                cp.steps.len(),
+                cp.total_us()
+            );
+        }
+        "bench-check" => {
+            // Bench regression sentinel: BENCH_*.json records (as written
+            // by the benches under AIE4ML_BENCH_OUT) vs the committed
+            // baseline. --report-only gates only enforced budgets (the CI
+            // PR mode); a full run gates every budget.
+            let args = Args::parse(rest, &["report-only"])?;
+            let records_dir = args
+                .flags
+                .get("records")
+                .cloned()
+                .unwrap_or_else(|| "rust/artifacts/bench".into());
+            let baseline_path = args
+                .flags
+                .get("baseline")
+                .cloned()
+                .unwrap_or_else(|| "benches/BASELINE.json".into());
+            let entries =
+                aie4ml::obs::baseline::load_baseline(std::path::Path::new(&baseline_path))?;
+            let records =
+                aie4ml::obs::baseline::load_records(std::path::Path::new(&records_dir))?;
+            let report = aie4ml::obs::baseline::check(&entries, &records);
+            print!("{}", report.render());
+            let report_only = args.switches.contains("report-only");
+            let failures =
+                if report_only { report.gating_failures() } else { report.all_failures() };
+            if !failures.is_empty() {
+                bail!(
+                    "bench sentinel: {} budget(s) violated in {} mode",
+                    failures.len(),
+                    if report_only { "report-only" } else { "full" }
+                );
+            }
+            println!(
+                "bench sentinel: {} record(s), all {} budget(s) within bounds{}",
+                report.records.len(),
+                report.findings.len(),
+                if report_only { " (report-only: enforced budgets gate)" } else { "" }
             );
         }
         "info" => {

@@ -1,0 +1,329 @@
+//! Critical-path extraction and self-time rollups over drained span trees.
+//!
+//! Both analyses consume a [`TraceBatch`] (live from [`Tracer::drain`] or
+//! re-parsed from a Chrome export via [`crate::obs::chrome::from_chrome_json`]):
+//!
+//! * [`rollup`] — per-name aggregation: span count, total (inclusive)
+//!   time, *self* time (inclusive minus direct children), max duration.
+//!   For a well-nested single-root trace the self times partition the
+//!   root's wall time exactly.
+//! * [`critical_path`] — the end-to-end critical path under one root
+//!   span: a backward walk from the root's end that always descends into
+//!   the child ending latest, attributing every uncovered gap to the
+//!   enclosing span. By construction the step durations sum to the root's
+//!   wall time *exactly*, even when children overlap across tracks
+//!   (concurrent workers under one request span).
+
+use crate::obs::tracer::{EventKind, SpanRecord, TraceBatch};
+
+/// Paranoia bound on parent-chain depth so a malformed trace (cycle in
+/// the parent links) cannot recurse forever.
+const MAX_DEPTH: usize = 4096;
+
+/// One segment of the critical path: self time of `name` on `[start_us,
+/// end_us)`. `depth` is the nesting depth under the root (root = 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PathStep {
+    pub name: String,
+    pub cat: String,
+    pub track: u32,
+    pub depth: usize,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl PathStep {
+    pub fn dur_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// The critical path under one root span, in chronological order.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    pub root_name: String,
+    pub root_start_us: u64,
+    pub root_end_us: u64,
+    pub steps: Vec<PathStep>,
+}
+
+impl CriticalPath {
+    /// Root wall time; equals the sum of the step durations.
+    pub fn total_us(&self) -> u64 {
+        self.root_end_us.saturating_sub(self.root_start_us)
+    }
+
+    /// Render as an indented text table (one line per step).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical path: {} [{} .. {}] total {} us\n",
+            self.root_name, self.root_start_us, self.root_end_us, self.total_us()
+        ));
+        for s in &self.steps {
+            out.push_str(&format!(
+                "  {:>8} us  [{:>8} .. {:>8}]  {}{}\n",
+                s.dur_us(),
+                s.start_us,
+                s.end_us,
+                "  ".repeat(s.depth),
+                s.name
+            ));
+        }
+        out
+    }
+}
+
+/// Per-name aggregation over every span in a batch.
+#[derive(Debug, Clone)]
+pub struct NameRollup {
+    pub name: String,
+    pub cat: String,
+    pub count: usize,
+    /// Σ inclusive duration.
+    pub total_us: u64,
+    /// Σ (inclusive − direct children), clamped at zero per span so
+    /// cross-track overlap cannot drive it negative.
+    pub self_us: u64,
+    pub max_us: u64,
+}
+
+struct Tree<'a> {
+    spans: Vec<&'a SpanRecord>,
+    /// Children indices per span index, sorted by (end_us, start_us).
+    children: Vec<Vec<usize>>,
+    roots: Vec<usize>,
+}
+
+fn build_tree(batch: &TraceBatch) -> Tree<'_> {
+    let spans: Vec<&SpanRecord> =
+        batch.records.iter().filter(|r| r.kind == EventKind::Span).collect();
+    let index: std::collections::HashMap<u64, usize> =
+        spans.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots = Vec::new();
+    for (i, r) in spans.iter().enumerate() {
+        match r.parent.and_then(|p| index.get(&p).copied()) {
+            // A self-parented record would otherwise loop forever below.
+            Some(p) if p != i => children[p].push(i),
+            _ => roots.push(i),
+        }
+    }
+    for c in &mut children {
+        c.sort_by_key(|&i| (spans[i].end_us(), spans[i].start_us));
+    }
+    Tree { spans, children, roots }
+}
+
+/// Per-name rollups, sorted by self time descending.
+pub fn rollup(batch: &TraceBatch) -> Vec<NameRollup> {
+    let tree = build_tree(batch);
+    let mut by_name: std::collections::BTreeMap<(String, String), NameRollup> =
+        std::collections::BTreeMap::new();
+    for (i, r) in tree.spans.iter().enumerate() {
+        let child_us: u64 = tree.children[i].iter().map(|&c| tree.spans[c].dur_us).sum();
+        let e = by_name
+            .entry((r.name.to_string(), r.cat.to_string()))
+            .or_insert_with(|| NameRollup {
+                name: r.name.to_string(),
+                cat: r.cat.to_string(),
+                count: 0,
+                total_us: 0,
+                self_us: 0,
+                max_us: 0,
+            });
+        e.count += 1;
+        e.total_us += r.dur_us;
+        e.self_us += r.dur_us.saturating_sub(child_us);
+        e.max_us = e.max_us.max(r.dur_us);
+    }
+    let mut rows: Vec<NameRollup> = by_name.into_values().collect();
+    rows.sort_by(|a, b| b.self_us.cmp(&a.self_us).then_with(|| a.name.cmp(&b.name)));
+    rows
+}
+
+/// Backward walk from `t` under span `idx`; emits self segments into
+/// `steps` (reverse-chronological) and returns the time it reached
+/// (the span's clamped start).
+fn walk(tree: &Tree<'_>, idx: usize, t: u64, depth: usize, steps: &mut Vec<PathStep>) -> u64 {
+    let span = tree.spans[idx];
+    let lo = span.start_us.min(t);
+    let mut t = t.min(span.end_us()).max(lo);
+    if depth >= MAX_DEPTH {
+        push_self(span, depth, lo, t, steps);
+        return lo;
+    }
+    loop {
+        // Child ending latest within (lo, t]; ties broken toward the
+        // later-starting child so the walk always makes progress.
+        let next = tree.children[idx]
+            .iter()
+            .copied()
+            .filter(|&c| {
+                let e = tree.spans[c].end_us();
+                e <= t && e > lo
+            })
+            .max_by_key(|&c| (tree.spans[c].end_us(), tree.spans[c].start_us));
+        match next {
+            None => {
+                push_self(span, depth, lo, t, steps);
+                return lo;
+            }
+            Some(c) => {
+                let child_end = tree.spans[c].end_us();
+                push_self(span, depth, child_end, t, steps);
+                let reached = walk(tree, c, child_end, depth + 1, steps);
+                if reached <= lo {
+                    return lo;
+                }
+                t = reached;
+            }
+        }
+    }
+}
+
+fn push_self(span: &SpanRecord, depth: usize, start: u64, end: u64, steps: &mut Vec<PathStep>) {
+    if end > start {
+        steps.push(PathStep {
+            name: span.name.to_string(),
+            cat: span.cat.to_string(),
+            track: span.track,
+            depth,
+            start_us: start,
+            end_us: end,
+        });
+    }
+}
+
+/// Critical path under the given root span record.
+pub fn critical_path_under(batch: &TraceBatch, root_id: u64) -> Option<CriticalPath> {
+    let tree = build_tree(batch);
+    let idx = tree.spans.iter().position(|r| r.id == root_id)?;
+    let root = tree.spans[idx];
+    let mut steps = Vec::new();
+    walk(&tree, idx, root.end_us(), 0, &mut steps);
+    steps.reverse();
+    Some(CriticalPath {
+        root_name: root.name.to_string(),
+        root_start_us: root.start_us,
+        root_end_us: root.end_us(),
+        steps,
+    })
+}
+
+/// Critical path under the longest root span, optionally restricted to
+/// roots with a given name (e.g. `"request"`).
+pub fn critical_path(batch: &TraceBatch, root_name: Option<&str>) -> Option<CriticalPath> {
+    let tree = build_tree(batch);
+    let root = tree
+        .roots
+        .iter()
+        .copied()
+        .filter(|&i| root_name.is_none_or(|n| tree.spans[i].name == n))
+        .max_by_key(|&i| (tree.spans[i].dur_us, tree.spans[i].id))?;
+    critical_path_under(batch, tree.spans[root].id)
+}
+
+/// Root span names present in a batch with counts, longest-first — what
+/// `analyze` offers when the requested root is absent.
+pub fn root_names(batch: &TraceBatch) -> Vec<(String, usize, u64)> {
+    let tree = build_tree(batch);
+    let mut by_name: std::collections::BTreeMap<String, (usize, u64)> =
+        std::collections::BTreeMap::new();
+    for &i in &tree.roots {
+        let e = by_name.entry(tree.spans[i].name.to_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.max(tree.spans[i].dur_us);
+    }
+    let mut rows: Vec<(String, usize, u64)> =
+        by_name.into_iter().map(|(n, (c, d))| (n, c, d)).collect();
+    rows.sort_by(|a, b| b.2.cmp(&a.2).then_with(|| a.0.cmp(&b.0)));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::borrow::Cow;
+
+    fn span(
+        id: u64,
+        parent: Option<u64>,
+        track: u32,
+        name: &str,
+        start: u64,
+        end: u64,
+    ) -> SpanRecord {
+        SpanRecord {
+            id,
+            parent,
+            track,
+            cat: "test",
+            name: Cow::Owned(name.to_string()),
+            kind: EventKind::Span,
+            start_us: start,
+            dur_us: end - start,
+            args: Vec::new(),
+        }
+    }
+
+    fn batch(records: Vec<SpanRecord>) -> TraceBatch {
+        TraceBatch { records, dropped: 0, track_names: Vec::new() }
+    }
+
+    #[test]
+    fn overlapping_concurrent_children_path_is_exact() {
+        // root[0,100]; A[0,40] on track 1, B[10,90] on track 2 overlap;
+        // B1[20,60] nests in B. Expected: root(0-10), B(10-20),
+        // B1(20-60), B(60-90), root(90-100).
+        let b = batch(vec![
+            span(1, None, 0, "root", 0, 100),
+            span(2, Some(1), 1, "A", 0, 40),
+            span(3, Some(1), 2, "B", 10, 90),
+            span(4, Some(3), 2, "B1", 20, 60),
+        ]);
+        let cp = critical_path(&b, None).unwrap();
+        let got: Vec<(String, u64, u64)> =
+            cp.steps.iter().map(|s| (s.name.clone(), s.start_us, s.end_us)).collect();
+        assert_eq!(
+            got,
+            vec![
+                ("root".to_string(), 0, 10),
+                ("B".to_string(), 10, 20),
+                ("B1".to_string(), 20, 60),
+                ("B".to_string(), 60, 90),
+                ("root".to_string(), 90, 100),
+            ]
+        );
+        let sum: u64 = cp.steps.iter().map(|s| s.dur_us()).sum();
+        assert_eq!(sum, cp.total_us());
+    }
+
+    #[test]
+    fn nested_self_times_partition_root() {
+        // root[0,100] > A[10,40] > A1[20,30]; root > B[50,90].
+        let b = batch(vec![
+            span(1, None, 0, "root", 0, 100),
+            span(2, Some(1), 0, "A", 10, 40),
+            span(3, Some(2), 0, "A1", 20, 30),
+            span(4, Some(1), 0, "B", 50, 90),
+        ]);
+        let rows = rollup(&b);
+        let self_of = |n: &str| rows.iter().find(|r| r.name == n).unwrap().self_us;
+        assert_eq!(self_of("root"), 30);
+        assert_eq!(self_of("A"), 20);
+        assert_eq!(self_of("A1"), 10);
+        assert_eq!(self_of("B"), 40);
+        let total_self: u64 = rows.iter().map(|r| r.self_us).sum();
+        assert_eq!(total_self, 100);
+    }
+
+    #[test]
+    fn self_parent_and_missing_parent_do_not_loop() {
+        let b =
+            batch(vec![span(7, Some(7), 0, "loop", 0, 10), span(8, Some(99), 0, "orphan", 0, 5)]);
+        let cp = critical_path(&b, None).unwrap();
+        assert_eq!(cp.root_name, "loop");
+        assert_eq!(cp.total_us(), 10);
+    }
+}

@@ -1,0 +1,200 @@
+//! Model-drift detection: calibrated cycle-model predictions vs measured
+//! serving latencies.
+//!
+//! The cycle model predicts a per-stage device time (`analyze_pipeline`
+//! interval / per-partition intervals); serving measures what a batch
+//! actually took. [`DriftDetector`] keeps a bounded window of measured
+//! samples per stage and reports the ratio
+//!
+//! ```text
+//!   drift = windowed mean measured latency / predicted latency
+//! ```
+//!
+//! so `1.0` means the model is calibrated, `>1` means the model is
+//! optimistic (hardware/host slower than predicted), `<1` pessimistic.
+//! The overall ratio weights stages by predicted time (Σ measured /
+//! Σ predicted over stages with samples), and a clamped correction
+//! factor feeds the autoscaler's model-derived capacity fallback so
+//! replica decisions track reality rather than a stale calibration.
+
+use std::collections::VecDeque;
+
+/// Default number of measured samples retained per stage.
+pub const DEFAULT_WINDOW: usize = 64;
+
+/// Correction clamp: a wildly mis-scaled model still only skews capacity
+/// estimates by this factor either way.
+const CORRECTION_CLAMP: f64 = 32.0;
+
+/// Windowed measured-vs-predicted ratio for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageDrift {
+    /// Stage index (partition index; 0 for a single-stage server).
+    pub stage: usize,
+    /// Cycle-model predicted per-batch latency in microseconds.
+    pub predicted_us: f64,
+    /// Windowed mean of measured per-batch latencies in microseconds.
+    pub measured_us: f64,
+    /// Samples currently in the window.
+    pub samples: usize,
+    /// `measured_us / predicted_us` (0 when no samples yet).
+    pub ratio: f64,
+}
+
+/// Snapshot of every stage plus the aggregate, as carried in
+/// [`crate::coordinator::ServingSnapshot`] and exported to Prometheus.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub stages: Vec<StageDrift>,
+    /// Σ windowed-mean measured / Σ predicted over stages with samples.
+    pub overall_ratio: f64,
+    /// Clamped `overall_ratio` suitable as a capacity correction factor
+    /// (1.0 until any samples arrive).
+    pub correction: f64,
+    pub total_samples: usize,
+}
+
+impl DriftReport {
+    /// True once at least one measured sample informed the report.
+    pub fn has_samples(&self) -> bool {
+        self.total_samples > 0
+    }
+}
+
+struct StageWindow {
+    predicted_us: f64,
+    window: VecDeque<f64>,
+    capacity: usize,
+}
+
+impl StageWindow {
+    fn mean(&self) -> f64 {
+        if self.window.is_empty() {
+            0.0
+        } else {
+            self.window.iter().sum::<f64>() / self.window.len() as f64
+        }
+    }
+}
+
+/// Accumulates measured per-stage latencies against fixed predictions.
+/// Callers lock it around `observe`; `report` is cheap.
+pub struct DriftDetector {
+    stages: Vec<StageWindow>,
+}
+
+impl DriftDetector {
+    /// One window per stage, with the model's predicted per-batch
+    /// latency (µs) for each.
+    pub fn new(predicted_us: &[f64]) -> DriftDetector {
+        DriftDetector::with_window(predicted_us, DEFAULT_WINDOW)
+    }
+
+    pub fn with_window(predicted_us: &[f64], window: usize) -> DriftDetector {
+        DriftDetector {
+            stages: predicted_us
+                .iter()
+                .map(|&p| StageWindow {
+                    predicted_us: p,
+                    window: VecDeque::with_capacity(window.max(1)),
+                    capacity: window.max(1),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Record one measured per-batch latency (µs) for `stage`. Out-of-
+    /// range stages and non-finite samples are ignored (a serving loop
+    /// must never panic on telemetry).
+    pub fn observe(&mut self, stage: usize, measured_us: f64) {
+        let Some(s) = self.stages.get_mut(stage) else { return };
+        if !measured_us.is_finite() || measured_us < 0.0 {
+            return;
+        }
+        if s.window.len() == s.capacity {
+            s.window.pop_front();
+        }
+        s.window.push_back(measured_us);
+    }
+
+    pub fn report(&self) -> DriftReport {
+        let mut stages = Vec::with_capacity(self.stages.len());
+        let mut pred_sum = 0.0;
+        let mut meas_sum = 0.0;
+        let mut total_samples = 0;
+        for (i, s) in self.stages.iter().enumerate() {
+            let measured = s.mean();
+            let samples = s.window.len();
+            let ratio = if samples > 0 && s.predicted_us > 0.0 {
+                measured / s.predicted_us
+            } else {
+                0.0
+            };
+            if samples > 0 && s.predicted_us > 0.0 {
+                pred_sum += s.predicted_us;
+                meas_sum += measured;
+                total_samples += samples;
+            }
+            stages.push(StageDrift {
+                stage: i,
+                predicted_us: s.predicted_us,
+                measured_us: measured,
+                samples,
+                ratio,
+            });
+        }
+        let overall_ratio = if pred_sum > 0.0 { meas_sum / pred_sum } else { 0.0 };
+        let correction = if total_samples > 0 && overall_ratio > 0.0 {
+            overall_ratio.clamp(1.0 / CORRECTION_CLAMP, CORRECTION_CLAMP)
+        } else {
+            1.0
+        };
+        DriftReport { stages, overall_ratio, correction, total_samples }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_fixed_multiple() {
+        let mut d = DriftDetector::with_window(&[100.0, 50.0], 8);
+        for _ in 0..20 {
+            d.observe(0, 300.0);
+            d.observe(1, 150.0);
+        }
+        let r = d.report();
+        assert!((r.stages[0].ratio - 3.0).abs() < 1e-9);
+        assert!((r.stages[1].ratio - 3.0).abs() < 1e-9);
+        assert!((r.overall_ratio - 3.0).abs() < 1e-9);
+        assert!((r.correction - 3.0).abs() < 1e-9);
+        // Window is bounded.
+        assert_eq!(r.stages[0].samples, 8);
+    }
+
+    #[test]
+    fn empty_is_neutral() {
+        let d = DriftDetector::new(&[100.0]);
+        let r = d.report();
+        assert!(!r.has_samples());
+        assert_eq!(r.correction, 1.0);
+        assert_eq!(r.overall_ratio, 0.0);
+    }
+
+    #[test]
+    fn ignores_bad_samples_and_clamps() {
+        let mut d = DriftDetector::new(&[1.0]);
+        d.observe(0, f64::NAN);
+        d.observe(0, -5.0);
+        d.observe(5, 10.0); // out of range
+        assert!(!d.report().has_samples());
+        d.observe(0, 1.0e9);
+        let r = d.report();
+        assert!((r.correction - 32.0).abs() < 1e-9);
+    }
+}

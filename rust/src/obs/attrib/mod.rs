@@ -1,0 +1,23 @@
+//! Performance attribution on top of the observability spine.
+//!
+//! PR 8's tracer records *what happened*; this module explains *where the
+//! time went* and *whether the model still matches reality*:
+//!
+//! * [`critical`] — self-time rollups and exact critical-path extraction
+//!   over drained span trees (`aie4ml analyze --trace`).
+//! * [`tiles`] — per-tile busy/peak accounting, the Fig. 4-style
+//!   scaling-efficiency-vs-single-kernel number, array heatmaps, and
+//!   per-stage DMA-byte/hop totals (`compile --profile`).
+//! * [`drift`] — windowed measured-vs-predicted latency ratios from the
+//!   serving path, exported in `ServingSnapshot`/Prometheus and fed back
+//!   into the autoscaler's capacity fallback.
+
+pub mod critical;
+pub mod drift;
+pub mod tiles;
+
+pub use critical::{
+    critical_path, critical_path_under, rollup, root_names, CriticalPath, NameRollup, PathStep,
+};
+pub use drift::{DriftDetector, DriftReport, StageDrift};
+pub use tiles::{tile_utilization, StageUtil, TileUtilReport};

@@ -1,0 +1,317 @@
+//! Bench regression sentinel: compare `BENCH_*.json` records against a
+//! committed baseline with noise-tolerant thresholds.
+//!
+//! Every bench binary emits a [`BenchRecord`]; `aie4ml bench-check`
+//! (`make bench-check`) loads the records plus `benches/BASELINE.json`
+//! and evaluates each baseline entry:
+//!
+//! * `max` / `min` — absolute bounds (machine-independent budgets such
+//!   as the obs-overhead percentages, cache speedups, modeled cycle
+//!   counts);
+//! * `baseline` + `rel_budget` — relative bound `value ≤ baseline ×
+//!   (1 + rel_budget)` for lower-is-better metrics (wall-clock medians),
+//!   tolerant to host noise;
+//! * `enforce` — entries that gate even in report-only mode (the CI PR
+//!   job); non-enforced entries are informational there and gate only a
+//!   full `bench-check`.
+//!
+//! A missing record or metric for an *enforced* entry is a failure in
+//! every mode: silently dropping a bench is itself a regression.
+//!
+//! Baseline schema (version 1):
+//! ```json
+//! {"schema": 1, "entries": [
+//!   {"bench": "obs_overhead", "metric": "disabled_pct", "max": 1.0,
+//!    "enforce": true},
+//!   {"bench": "compile_throughput", "metric": "warm_us",
+//!    "baseline": 1200.0, "rel_budget": 2.0}
+//! ]}
+//! ```
+//!
+//! Updating the baseline: run `make bench-check`, inspect the report,
+//! copy the new steady value into `benches/BASELINE.json` in the same
+//! change that justifies it.
+
+use crate::util::bench::BenchRecord;
+use crate::util::json::Value;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One budgeted metric in the committed baseline.
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub bench: String,
+    pub metric: String,
+    /// Reference value for relative comparison (lower is better).
+    pub baseline: Option<f64>,
+    /// Allowed relative regression over `baseline` (e.g. `2.0` = 3×).
+    pub rel_budget: Option<f64>,
+    /// Absolute upper bound.
+    pub max: Option<f64>,
+    /// Absolute lower bound (for higher-is-better metrics).
+    pub min: Option<f64>,
+    /// Gate even in report-only mode.
+    pub enforce: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingStatus {
+    Pass,
+    Fail,
+    /// The record or metric was not produced by the run.
+    Missing,
+}
+
+/// Outcome of one baseline entry against the loaded records.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub bench: String,
+    pub metric: String,
+    pub value: Option<f64>,
+    /// Human-readable bound, e.g. `<= 1` or `<= 3600 (1200 +200%)`.
+    pub limit: String,
+    pub status: FindingStatus,
+    pub enforce: bool,
+}
+
+/// Full sentinel outcome.
+#[derive(Debug, Clone)]
+pub struct SentinelReport {
+    pub findings: Vec<Finding>,
+    /// Bench records that were loaded (name, smoke flag).
+    pub records: Vec<(String, bool)>,
+}
+
+impl SentinelReport {
+    /// Entries that gate a report-only (PR) run.
+    pub fn gating_failures(&self) -> Vec<&Finding> {
+        self.findings
+            .iter()
+            .filter(|f| f.enforce && f.status != FindingStatus::Pass)
+            .collect()
+    }
+
+    /// Entries that gate a full run.
+    pub fn all_failures(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.status != FindingStatus::Pass).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "bench sentinel: {} records, {} budgeted metrics\n",
+            self.records.len(),
+            self.findings.len()
+        ));
+        for f in &self.findings {
+            let status = match f.status {
+                FindingStatus::Pass => "PASS",
+                FindingStatus::Fail => "FAIL",
+                FindingStatus::Missing => "MISSING",
+            };
+            let value = match f.value {
+                Some(v) => format!("{v:.4}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "  {status:<8} {:<24} {:<28} value {:>12}  budget {}{}\n",
+                f.bench,
+                f.metric,
+                value,
+                f.limit,
+                if f.enforce { "  [enforced]" } else { "" }
+            ));
+        }
+        out
+    }
+}
+
+fn opt_f64(v: &Value, key: &str) -> Result<Option<f64>> {
+    match v.get(key) {
+        Some(x) => Ok(Some(x.as_f64()?)),
+        None => Ok(None),
+    }
+}
+
+/// Parse `BASELINE.json`.
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>> {
+    let v = Value::parse(text).context("parsing baseline JSON")?;
+    let schema = v.field("schema")?.as_i64()?;
+    if schema != 1 {
+        bail!("unsupported baseline schema {schema}");
+    }
+    let mut entries = Vec::new();
+    for e in v.field("entries")?.as_array()? {
+        let entry = BaselineEntry {
+            bench: e.field("bench")?.as_str()?.to_string(),
+            metric: e.field("metric")?.as_str()?.to_string(),
+            baseline: opt_f64(e, "baseline")?,
+            rel_budget: opt_f64(e, "rel_budget")?,
+            max: opt_f64(e, "max")?,
+            min: opt_f64(e, "min")?,
+            enforce: match e.get("enforce") {
+                Some(b) => b.as_bool()?,
+                None => false,
+            },
+        };
+        if entry.baseline.is_none() && entry.max.is_none() && entry.min.is_none() {
+            bail!(
+                "baseline entry {}/{} has no bound (need baseline+rel_budget, max, or min)",
+                entry.bench,
+                entry.metric
+            );
+        }
+        entries.push(entry);
+    }
+    Ok(entries)
+}
+
+pub fn load_baseline(path: &Path) -> Result<Vec<BaselineEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {}", path.display()))?;
+    parse_baseline(&text)
+}
+
+/// Load every `BENCH_*.json` in `dir` (non-recursive).
+pub fn load_records(dir: &Path) -> Result<Vec<BenchRecord>> {
+    let mut records = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading bench record dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(entry.path())
+            .with_context(|| format!("reading {}", entry.path().display()))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {name}"))?;
+        records.push(
+            BenchRecord::from_json(&v).with_context(|| format!("decoding record {name}"))?,
+        );
+    }
+    records.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(records)
+}
+
+/// Evaluate the baseline against the records.
+pub fn check(entries: &[BaselineEntry], records: &[BenchRecord]) -> SentinelReport {
+    let mut findings = Vec::with_capacity(entries.len());
+    for e in entries {
+        let value = records.iter().find(|r| r.name == e.bench).and_then(|r| r.get(&e.metric));
+        let mut limits = Vec::new();
+        if let Some(max) = e.max {
+            limits.push(format!("<= {max}"));
+        }
+        if let Some(min) = e.min {
+            limits.push(format!(">= {min}"));
+        }
+        if let (Some(base), Some(rel)) = (e.baseline, e.rel_budget) {
+            limits.push(format!("<= {:.4} ({base} +{:.0}%)", base * (1.0 + rel), rel * 100.0));
+        }
+        let status = match value {
+            None => FindingStatus::Missing,
+            Some(v) if !v.is_finite() => FindingStatus::Fail,
+            Some(v) => {
+                let mut ok = true;
+                if let Some(max) = e.max {
+                    ok &= v <= max;
+                }
+                if let Some(min) = e.min {
+                    ok &= v >= min;
+                }
+                if let (Some(base), Some(rel)) = (e.baseline, e.rel_budget) {
+                    ok &= v <= base * (1.0 + rel);
+                }
+                if ok {
+                    FindingStatus::Pass
+                } else {
+                    FindingStatus::Fail
+                }
+            }
+        };
+        findings.push(Finding {
+            bench: e.bench.clone(),
+            metric: e.metric.clone(),
+            value,
+            limit: limits.join(" and "),
+            status,
+            enforce: e.enforce,
+        });
+    }
+    SentinelReport {
+        findings,
+        records: records.iter().map(|r| (r.name.clone(), r.smoke)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(name: &str, metric: &str, value: f64) -> BenchRecord {
+        let mut r = BenchRecord::new(name, true);
+        r.metric(metric, value, "");
+        r
+    }
+
+    #[test]
+    fn absolute_and_relative_bounds() {
+        let baseline = r#"{"schema": 1, "entries": [
+            {"bench": "a", "metric": "pct", "max": 1.0, "enforce": true},
+            {"bench": "b", "metric": "speedup", "min": 5.0},
+            {"bench": "c", "metric": "wall_us", "baseline": 100.0, "rel_budget": 1.0}
+        ]}"#;
+        let entries = parse_baseline(baseline).unwrap();
+        let records = vec![
+            record("a", "pct", 0.5),
+            record("b", "speedup", 7.0),
+            record("c", "wall_us", 150.0),
+        ];
+        let report = check(&entries, &records);
+        assert!(report.all_failures().is_empty(), "{}", report.render());
+
+        let bad = vec![
+            record("a", "pct", 2.0),
+            record("b", "speedup", 3.0),
+            record("c", "wall_us", 250.0),
+        ];
+        let report = check(&entries, &bad);
+        assert_eq!(report.all_failures().len(), 3);
+        // Only the enforced entry gates report-only mode.
+        assert_eq!(report.gating_failures().len(), 1);
+        assert_eq!(report.gating_failures()[0].bench, "a");
+    }
+
+    #[test]
+    fn missing_enforced_metric_gates() {
+        let entries = parse_baseline(
+            r#"{"schema": 1, "entries": [
+                {"bench": "gone", "metric": "pct", "max": 1.0, "enforce": true}
+            ]}"#,
+        )
+        .unwrap();
+        let report = check(&entries, &[]);
+        assert_eq!(report.findings[0].status, FindingStatus::Missing);
+        assert_eq!(report.gating_failures().len(), 1);
+    }
+
+    #[test]
+    fn entry_without_bound_is_rejected() {
+        let res = parse_baseline(
+            r#"{"schema": 1, "entries": [{"bench": "x", "metric": "y"}]}"#,
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn round_trip_through_directory() {
+        let dir = std::env::temp_dir().join("aie4ml_sentinel_test");
+        std::fs::remove_dir_all(&dir).ok();
+        record("demo", "pct", 0.25).write_to(&dir).unwrap();
+        let records = load_records(&dir).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].get("pct"), Some(0.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -14,8 +14,10 @@
 //! reconstructs nesting from `ts`/`dur` containment per track, which the
 //! tracer's per-thread LIFO guard discipline guarantees.
 
-use super::tracer::{ArgValue, EventKind, TraceBatch};
+use super::tracer::{ArgValue, EventKind, SpanRecord, TraceBatch};
 use crate::util::json::{obj, Value};
+use anyhow::{Context, Result};
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 
 /// One process id for the whole trace; tracks map to Chrome `tid`s.
@@ -90,6 +92,98 @@ pub fn to_chrome_json(batch: &TraceBatch) -> String {
     Value::Object(root).to_string_compact()
 }
 
+/// Intern a parsed category as `&'static str` (the [`SpanRecord`] field
+/// type). Leaks one allocation per *unique* category string — bounded by
+/// the handful of subsystem names a trace contains, paid only on the
+/// offline `analyze` import path.
+fn intern_cat(s: &str, cache: &mut BTreeMap<String, &'static str>) -> &'static str {
+    if let Some(&v) = cache.get(s) {
+        return v;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    cache.insert(s.to_string(), leaked);
+    leaked
+}
+
+/// Parse a Chrome trace-event JSON document (as produced by
+/// [`to_chrome_json`]) back into a [`TraceBatch`] so the attribution
+/// analyses can run on exported traces (`aie4ml analyze --trace`).
+///
+/// Span ids and parent links ride in `args.span_id` / `args.parent_id`;
+/// events without a `span_id` (foreign traces) get synthetic ids above
+/// `1 << 62`. Structured span arguments are not reconstructed (their key
+/// type is `&'static str`) — ids, timing, tracks, names, and categories
+/// all survive the round trip, which is everything the critical-path and
+/// rollup analyses consume.
+pub fn from_chrome_json(text: &str) -> Result<TraceBatch> {
+    let v = Value::parse(text).context("parsing Chrome trace JSON")?;
+    let events = v.field("traceEvents").context("missing traceEvents")?.as_array()?;
+    let mut cats: BTreeMap<String, &'static str> = BTreeMap::new();
+    let mut records = Vec::new();
+    let mut track_names = Vec::new();
+    let mut synthetic_id: u64 = 1 << 62;
+    for ev in events {
+        let ph = ev.field("ph")?.as_str()?;
+        let track = ev.get("tid").and_then(|t| t.as_i64().ok()).unwrap_or(0).max(0) as u32;
+        match ph {
+            "M" => {
+                if ev.get("name").and_then(|n| n.as_str().ok()) == Some("thread_name") {
+                    if let Some(label) =
+                        ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str().ok())
+                    {
+                        track_names.push((track, label.to_string()));
+                    }
+                }
+            }
+            "X" | "i" => {
+                let args = ev.get("args");
+                let id = args
+                    .and_then(|a| a.get("span_id"))
+                    .and_then(|x| x.as_i64().ok())
+                    .map(|x| x.max(0) as u64)
+                    .unwrap_or_else(|| {
+                        synthetic_id += 1;
+                        synthetic_id
+                    });
+                let parent = args
+                    .and_then(|a| a.get("parent_id"))
+                    .and_then(|x| x.as_i64().ok())
+                    .map(|x| x.max(0) as u64);
+                let cat = ev.get("cat").and_then(|c| c.as_str().ok()).unwrap_or("");
+                let name = ev.get("name").and_then(|n| n.as_str().ok()).unwrap_or("").to_string();
+                let start_us =
+                    ev.get("ts").and_then(|t| t.as_i64().ok()).unwrap_or(0).max(0) as u64;
+                let dur_us = if ph == "X" {
+                    ev.get("dur").and_then(|d| d.as_i64().ok()).unwrap_or(0).max(0) as u64
+                } else {
+                    0
+                };
+                records.push(SpanRecord {
+                    id,
+                    parent,
+                    track,
+                    cat: intern_cat(cat, &mut cats),
+                    name: Cow::Owned(name),
+                    kind: if ph == "X" { EventKind::Span } else { EventKind::Instant },
+                    start_us,
+                    dur_us,
+                    args: Vec::new(),
+                });
+            }
+            // Foreign traces may contain other phases (B/E, counters) —
+            // skip them rather than fail the import.
+            _ => {}
+        }
+    }
+    records.sort_by_key(|r| (r.start_us, r.id));
+    let dropped = v
+        .get("aie4ml_dropped_records")
+        .and_then(|d| d.as_i64().ok())
+        .unwrap_or(0)
+        .max(0) as u64;
+    Ok(TraceBatch { records, dropped, track_names })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +225,49 @@ mod tests {
             }
         }
         assert!(saw_x && saw_i);
+    }
+
+    #[test]
+    fn round_trips_through_parse() {
+        use crate::obs::clock::Clock;
+        use std::sync::Arc;
+        let clock = Arc::new(ManualClock::new());
+        struct Shared(Arc<ManualClock>);
+        impl Clock for Shared {
+            fn now_us(&self) -> u64 {
+                self.0.now_us()
+            }
+        }
+        let t = Tracer::with_clock(Box::new(Shared(clock.clone())));
+        t.enable();
+        t.set_track_name("rt-main");
+        {
+            let _root = t.span("serve", "request");
+            clock.advance(10);
+            {
+                let _child = t.span("serve", "stage");
+                clock.advance(25);
+            }
+            clock.advance(5);
+        }
+        let batch = t.drain();
+        let json = to_chrome_json(&batch);
+        let back = from_chrome_json(&json).expect("round trip parses");
+        assert_eq!(back.dropped, 0);
+        assert_eq!(back.track_names.len(), batch.track_names.len());
+        let spans: Vec<_> =
+            back.records.iter().filter(|r| r.kind == EventKind::Span).collect();
+        assert_eq!(spans.len(), 2);
+        let root = spans.iter().find(|r| r.name == "request").unwrap();
+        let child = spans.iter().find(|r| r.name == "stage").unwrap();
+        assert_eq!(root.dur_us, 40);
+        assert_eq!(child.dur_us, 25);
+        assert_eq!(child.parent, Some(root.id));
+        assert_eq!(root.cat, "serve");
+        // The attribution layer runs unchanged on the re-imported batch.
+        let cp = crate::obs::attrib::critical_path(&back, None).unwrap();
+        assert_eq!(cp.total_us(), 40);
+        let step_sum: u64 = cp.steps.iter().map(|s| s.dur_us()).sum();
+        assert_eq!(step_sum, 40);
     }
 }

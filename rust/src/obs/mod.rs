@@ -26,15 +26,29 @@
 //! Clocks are injected ([`Clock`]): production uses a monotonic
 //! `Instant`-based clock, tests a [`ManualClock`] — so span timings in
 //! tests are exact constants, not scheduler noise.
+//!
+//! On top of the spine sits the attribution layer:
+//!
+//! * [`attrib::critical`] — self-time rollups + exact critical paths
+//!   over drained (or re-imported) span trees, `aie4ml analyze --trace`;
+//! * [`attrib::tiles`] — per-tile busy/peak accounting, Fig. 4-style
+//!   scaling efficiency, array heatmaps, DMA-byte/hop totals;
+//! * [`attrib::drift`] — measured-vs-predicted latency drift from the
+//!   serving path, fed back into autoscaler capacity estimates;
+//! * [`baseline`] — the bench regression sentinel over `BENCH_*.json`
+//!   records (`aie4ml bench-check`, `make bench-check`).
 
+pub mod attrib;
+pub mod baseline;
 pub mod chrome;
 pub mod clock;
 pub mod hist;
 pub mod prom;
 pub mod tracer;
 
-pub use chrome::to_chrome_json;
+pub use attrib::{CriticalPath, DriftDetector, DriftReport, TileUtilReport};
+pub use chrome::{from_chrome_json, to_chrome_json};
 pub use clock::{Clock, ManualClock, MonotonicClock};
 pub use hist::LatencyHistogram;
 pub use prom::{parse_prometheus, to_prometheus};
-pub use tracer::{tracer, ArgValue, EventKind, Span, SpanRecord, TraceBatch, Tracer};
+pub use tracer::{tracer, ArgValue, EventKind, Span, SpanRecord, TraceBatch, Tracer, TracerStats};

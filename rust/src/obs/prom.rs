@@ -155,6 +155,16 @@ pub fn to_prometheus(snap: &ServingSnapshot) -> String {
             .zip(&m.stages)
             .map(|(l, s)| (l.as_str(), s.mean_queue_depth))
             .collect();
+        let depth_max: Vec<(&str, f64)> = labels
+            .iter()
+            .zip(&m.stages)
+            .map(|(l, s)| (l.as_str(), s.max_queue_depth as f64))
+            .collect();
+        let batches: Vec<(&str, f64)> = labels
+            .iter()
+            .zip(&m.stages)
+            .map(|(l, s)| (l.as_str(), s.batches as f64))
+            .collect();
         gauge(
             &mut out,
             "aie4ml_stage_busy_fraction",
@@ -166,6 +176,43 @@ pub fn to_prometheus(snap: &ServingSnapshot) -> String {
             "aie4ml_stage_queue_depth_mean",
             "Mean input-queue depth per pipeline stage at dequeue time.",
             &depth,
+        );
+        gauge(
+            &mut out,
+            "aie4ml_stage_queue_depth_max",
+            "Peak input-queue depth per pipeline stage.",
+            &depth_max,
+        );
+        counter(
+            &mut out,
+            "aie4ml_stage_batches_total",
+            "Batches each pipeline stage processed.",
+            &batches,
+        );
+    }
+
+    if let Some(d) = &snap.drift {
+        let labels: Vec<String> =
+            d.stages.iter().map(|s| format!("{{partition=\"{}\"}}", s.stage)).collect();
+        let ratios: Vec<(&str, f64)> =
+            labels.iter().zip(&d.stages).map(|(l, s)| (l.as_str(), s.ratio)).collect();
+        gauge(
+            &mut out,
+            "aie4ml_stage_drift_ratio",
+            "Windowed measured/predicted latency ratio per stage (1 = calibrated model).",
+            &ratios,
+        );
+        gauge(
+            &mut out,
+            "aie4ml_model_drift_ratio",
+            "Overall measured/predicted latency ratio across stages with samples.",
+            &[("", d.overall_ratio)],
+        );
+        gauge(
+            &mut out,
+            "aie4ml_model_drift_correction",
+            "Clamped drift correction applied to model-derived capacity estimates.",
+            &[("", d.correction)],
         );
     }
 
@@ -192,6 +239,123 @@ pub fn to_prometheus(snap: &ServingSnapshot) -> String {
             &[("", c.negative_entries as f64)],
         );
     }
+    out
+}
+
+/// Render tracer ring-buffer health as Prometheus gauges — appended to a
+/// snapshot exposition by the CLI's `--metrics-out` path so a
+/// scrape-only consumer sees trace loss (ring overwrites) and shard
+/// pressure without draining the rings.
+pub fn tracer_gauges(stats: &crate::obs::tracer::TracerStats) -> String {
+    let mut out = String::new();
+    gauge(
+        &mut out,
+        "aie4ml_tracer_enabled",
+        "Whether span tracing is currently enabled (1/0).",
+        &[("", if stats.enabled { 1.0 } else { 0.0 })],
+    );
+    counter(
+        &mut out,
+        "aie4ml_tracer_dropped_records_total",
+        "Span records overwritten by the bounded rings before drain.",
+        &[("", stats.dropped as f64)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_tracer_shard_capacity",
+        "Per-shard ring capacity in records.",
+        &[("", stats.shard_capacity as f64)],
+    );
+    let labels: Vec<String> = (0..stats.shard_occupancy.len())
+        .map(|i| format!("{{shard=\"{i}\"}}"))
+        .collect();
+    let occupancy: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(&stats.shard_occupancy)
+        .map(|(l, &n)| (l.as_str(), n as f64))
+        .collect();
+    gauge(
+        &mut out,
+        "aie4ml_tracer_shard_occupancy",
+        "Records currently buffered per ring shard.",
+        &occupancy,
+    );
+    out
+}
+
+/// Render a tile-utilization report as Prometheus gauges — the
+/// `compile --profile --metrics-out` path, so per-tile efficiency lands
+/// on the same scrape surface as the serving metrics.
+pub fn tile_gauges(rep: &crate::obs::attrib::TileUtilReport) -> String {
+    let mut out = String::new();
+    gauge(
+        &mut out,
+        "aie4ml_array_utilization",
+        "Placed tiles over placeable tiles.",
+        &[("", rep.array_utilization)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_scaling_efficiency",
+        "Achieved throughput over the tiles x single-kernel baseline (Fig. 4 metric).",
+        &[("", rep.scaling_efficiency)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_tiles_used",
+        "Compute tiles the firmware occupies.",
+        &[("", rep.tiles_used as f64)],
+    );
+    gauge(
+        &mut out,
+        "aie4ml_interconnect_hops",
+        "Total routed stream-switch hops.",
+        &[("", rep.total_hops as f64)],
+    );
+    let labels: Vec<String> = rep
+        .stages
+        .iter()
+        .map(|s| format!("{{stage=\"{}\"}}", s.name))
+        .collect();
+    let busy: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(&rep.stages)
+        .map(|(l, s)| (l.as_str(), s.busy_fraction))
+        .collect();
+    let peak: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(&rep.stages)
+        .map(|(l, s)| (l.as_str(), s.peak_fraction))
+        .collect();
+    let dma: Vec<(String, f64)> = rep
+        .stages
+        .iter()
+        .flat_map(|s| {
+            [
+                (format!("{{stage=\"{}\",dir=\"in\"}}", s.name), s.dma_in_bytes),
+                (format!("{{stage=\"{}\",dir=\"out\"}}", s.name), s.dma_out_bytes),
+            ]
+        })
+        .collect();
+    let dma_refs: Vec<(&str, f64)> = dma.iter().map(|(l, v)| (l.as_str(), *v)).collect();
+    gauge(
+        &mut out,
+        "aie4ml_tile_busy_fraction",
+        "Per-stage tail-tile busy fraction of the steady-state interval.",
+        &busy,
+    );
+    gauge(
+        &mut out,
+        "aie4ml_tile_peak_fraction",
+        "Per-stage useful MACs over architectural peak within one interval.",
+        &peak,
+    );
+    gauge(
+        &mut out,
+        "aie4ml_stage_dma_bytes",
+        "Per-stage DMA bytes per batch, by direction.",
+        &dma_refs,
+    );
     out
 }
 
@@ -238,6 +402,7 @@ mod tests {
                 entries: 2,
                 negative_entries: 1,
             }),
+            drift: None,
         }
     }
 
@@ -270,5 +435,74 @@ mod tests {
             + parsed["aie4ml_requests_rejected_total{reason=\"malformed\"}"]
             + parsed["aie4ml_requests_rejected_total{reason=\"stopped\"}"];
         assert_eq!(parsed["aie4ml_requests_submitted_total"], sum);
+    }
+
+    #[test]
+    fn drift_gauges_render_when_present() {
+        use crate::obs::attrib::DriftDetector;
+        let mut snap = snapshot();
+        let mut d = DriftDetector::new(&[100.0]);
+        d.observe(0, 250.0);
+        snap.drift = Some(d.report());
+        let parsed = parse_prometheus(&to_prometheus(&snap)).unwrap();
+        assert_eq!(parsed["aie4ml_stage_drift_ratio{partition=\"0\"}"], 2.5);
+        assert_eq!(parsed["aie4ml_model_drift_ratio"], 2.5);
+        assert_eq!(parsed["aie4ml_model_drift_correction"], 2.5);
+        // Absent drift renders no drift series (no empty families).
+        let bare = to_prometheus(&snapshot());
+        assert!(!bare.contains("aie4ml_model_drift_ratio"));
+    }
+
+    #[test]
+    fn tile_gauges_render_and_parse() {
+        use crate::obs::attrib::{StageUtil, TileUtilReport};
+        let rep = TileUtilReport {
+            model_name: "m".into(),
+            device_name: "vek280".into(),
+            batch: 8,
+            rows: 2,
+            cols: 2,
+            interval_cycles: 100.0,
+            throughput_tops: 1.0,
+            tiles_used: 3,
+            tiles_total: 4,
+            stages: vec![StageUtil {
+                name: "fc1".into(),
+                tiles: 3,
+                head_busy_cycles: 80.0,
+                tail_busy_cycles: 90.0,
+                busy_fraction: 0.9,
+                peak_fraction: 0.5,
+                scaling_efficiency: 0.9,
+                dma_in_bytes: 1024.0,
+                dma_out_bytes: 256.0,
+            }],
+            scaling_efficiency: 0.9,
+            array_utilization: 0.75,
+            grid: vec![vec![0.9, 0.9], vec![0.9, 0.0]],
+            total_hops: 12,
+        };
+        let parsed = parse_prometheus(&tile_gauges(&rep)).unwrap();
+        assert_eq!(parsed["aie4ml_array_utilization"], 0.75);
+        assert_eq!(parsed["aie4ml_scaling_efficiency"], 0.9);
+        assert_eq!(parsed["aie4ml_tile_busy_fraction{stage=\"fc1\"}"], 0.9);
+        assert_eq!(parsed["aie4ml_stage_dma_bytes{stage=\"fc1\",dir=\"in\"}"], 1024.0);
+        assert_eq!(parsed["aie4ml_interconnect_hops"], 12.0);
+    }
+
+    #[test]
+    fn tracer_gauges_render_and_parse() {
+        let stats = crate::obs::tracer::TracerStats {
+            enabled: true,
+            dropped: 7,
+            shard_occupancy: vec![3, 0, 5],
+            shard_capacity: 16,
+        };
+        let parsed = parse_prometheus(&tracer_gauges(&stats)).unwrap();
+        assert_eq!(parsed["aie4ml_tracer_enabled"], 1.0);
+        assert_eq!(parsed["aie4ml_tracer_dropped_records_total"], 7.0);
+        assert_eq!(parsed["aie4ml_tracer_shard_capacity"], 16.0);
+        assert_eq!(parsed["aie4ml_tracer_shard_occupancy{shard=\"0\"}"], 3.0);
+        assert_eq!(parsed["aie4ml_tracer_shard_occupancy{shard=\"2\"}"], 5.0);
     }
 }

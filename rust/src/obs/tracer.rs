@@ -135,6 +135,25 @@ struct Shard {
     ring: VecDeque<SpanRecord>,
 }
 
+/// Ring-buffer health without draining: whether tracing is on, how many
+/// records the bounded rings overwrote, and each shard's current
+/// occupancy against its capacity. Exported as Prometheus gauges so a
+/// scrape-only consumer can see trace loss.
+#[derive(Debug, Clone)]
+pub struct TracerStats {
+    pub enabled: bool,
+    pub dropped: u64,
+    pub shard_occupancy: Vec<usize>,
+    pub shard_capacity: usize,
+}
+
+impl TracerStats {
+    /// Records currently buffered across all shards.
+    pub fn total_occupancy(&self) -> usize {
+        self.shard_occupancy.iter().sum()
+    }
+}
+
 /// The tracer. One process-global instance backs all built-in
 /// instrumentation ([`tracer()`]); tests construct private instances with
 /// manual clocks.
@@ -371,6 +390,22 @@ impl Tracer {
             track_names: self.track_names.lock().unwrap().clone(),
         }
     }
+
+    /// Non-draining ring health snapshot for scrape-only consumers
+    /// ([`crate::obs::prom::tracer_gauges`]): before this, drop counts
+    /// only surfaced in the Chrome export's root field.
+    pub fn stats(&self) -> TracerStats {
+        TracerStats {
+            enabled: self.is_enabled(),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            shard_occupancy: self
+                .shards
+                .iter()
+                .map(|s| s.lock().unwrap().ring.len())
+                .collect(),
+            shard_capacity: self.shard_capacity,
+        }
+    }
 }
 
 /// A live (or inert) span guard. Records on drop. `with_arg` attaches
@@ -513,6 +548,23 @@ mod tests {
         assert_eq!(batch.dropped, 6);
         // The *newest* records survived.
         assert_eq!(batch.records.last().unwrap().start_us, 9);
+    }
+
+    #[test]
+    fn stats_report_occupancy_without_draining() {
+        let t = Tracer::with_clock_and_capacity(Box::new(ManualClock::new()), 4);
+        t.enable();
+        for i in 0..6u64 {
+            t.record_span("test", "s", 0, i, i + 1, vec![]);
+        }
+        let stats = t.stats();
+        assert!(stats.enabled);
+        assert_eq!(stats.shard_capacity, 4);
+        assert_eq!(stats.total_occupancy(), 4);
+        assert_eq!(stats.dropped, 2);
+        // Stats did not drain: the records are still there.
+        assert_eq!(t.drain().records.len(), 4);
+        assert_eq!(t.stats().total_occupancy(), 0);
     }
 
     #[test]

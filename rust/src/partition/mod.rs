@@ -41,7 +41,10 @@ use anyhow::{bail, ensure, Context, Result};
 pub use cut::{
     choose_cuts, choose_cuts_by_macs, choose_cuts_explained, cut_candidates, CutCandidate, CutPlan,
 };
-pub use pipeline::{analyze_pipeline, pipeline_total_hops, PartitionPerf, PipelinePerfReport};
+pub use pipeline::{
+    analyze_pipeline, model_critical_path, pipeline_total_hops, LinkPerf, ModelCriticalPath,
+    ModelPathStep, PartitionPerf, PipelinePerfReport,
+};
 
 /// How to partition.
 #[derive(Debug, Clone)]

@@ -34,6 +34,26 @@ pub struct PartitionPerf {
     pub latency_cycles: f64,
 }
 
+/// Per-link summary row: one inter-array transfer between consecutive
+/// partitions.
+#[derive(Debug, Clone)]
+pub struct LinkPerf {
+    /// Upstream partition index (the link feeds partition `from + 1`).
+    pub from: usize,
+    /// Link activation features per sample.
+    pub features: usize,
+    /// Bytes moved per batch.
+    pub bytes: usize,
+    /// Transfer cycles charged to latency (and interval, if the wire is
+    /// the pipeline bottleneck).
+    pub cycles: f64,
+    /// True when the landing image needs a downstream re-tile pass (no
+    /// offset tiler on the wire).
+    pub staged: bool,
+    /// Switch traversals the landing pays on the downstream array.
+    pub landing_hops: usize,
+}
+
 /// Whole-pipeline performance report.
 #[derive(Debug, Clone)]
 pub struct PipelinePerfReport {
@@ -56,6 +76,8 @@ pub struct PipelinePerfReport {
     /// Total link-hop cycles charged to latency.
     pub link_cycles: f64,
     pub partitions: Vec<PartitionPerf>,
+    /// Per-link rows (`k - 1` entries, in pipeline order).
+    pub links: Vec<LinkPerf>,
 }
 
 impl PipelinePerfReport {
@@ -162,6 +184,7 @@ pub fn analyze_pipeline(pfw: &PartitionedFirmware, model: &EngineModel) -> Pipel
         });
     }
     let mut link_cycles = 0.0f64;
+    let mut links = Vec::with_capacity(pfw.links.len());
     for (i, link) in pfw.links.iter().enumerate() {
         let device = &pfw.partitions[i].device;
         let bytes = batch * link.features * link.quant.dtype.bytes();
@@ -171,6 +194,14 @@ pub fn analyze_pipeline(pfw: &PartitionedFirmware, model: &EngineModel) -> Pipel
         // the fill latency.
         interval = interval.max(hop);
         link_cycles += hop;
+        links.push(LinkPerf {
+            from: i,
+            features: link.features,
+            bytes,
+            cycles: hop,
+            staged: link.write_tiler.is_none(),
+            landing_hops: link_landing_hops(link, &pfw.partitions[i + 1]),
+        });
     }
     latency += link_cycles;
     let freq_hz = pfw.partitions[0].device.freq_ghz * 1e9;
@@ -193,6 +224,87 @@ pub fn analyze_pipeline(pfw: &PartitionedFirmware, model: &EngineModel) -> Pipel
         throughput_tops,
         link_cycles,
         partitions,
+        links,
+    }
+}
+
+/// One step of the modeled critical path: a partition's fill latency or a
+/// link transfer, in pipeline order.
+#[derive(Debug, Clone)]
+pub struct ModelPathStep {
+    pub name: String,
+    pub is_link: bool,
+    pub cycles: f64,
+    pub us: f64,
+    /// True when this step's own steady-state interval bounds the whole
+    /// pipeline (the bottleneck stage).
+    pub bottleneck: bool,
+}
+
+/// The stage-DAG critical path of one batch through the empty pipeline —
+/// the model-level sibling of the trace-level
+/// [`crate::obs::attrib::CriticalPath`]. The pipeline is a linear chain,
+/// so the fill path *is* every partition plus every link; what the
+/// breakdown adds is per-step cycles/µs and which step bounds the
+/// steady-state interval.
+#[derive(Debug, Clone)]
+pub struct ModelCriticalPath {
+    pub steps: Vec<ModelPathStep>,
+    pub total_cycles: f64,
+    pub total_us: f64,
+    /// Steady-state interval, for the closing summary line.
+    pub interval_cycles: f64,
+}
+
+impl ModelCriticalPath {
+    /// Text rendering for `partition --explain`.
+    pub fn render(&self) -> String {
+        let mut out = String::from("Critical path (batch fill through the empty pipeline):\n");
+        for s in &self.steps {
+            let mark = if s.bottleneck { "  <- interval bottleneck" } else { "" };
+            out.push_str(&format!(
+                "  {:<44} {:>12.0} cyc {:>10.2} us{}\n",
+                s.name, s.cycles, s.us, mark
+            ));
+        }
+        out.push_str(&format!(
+            "  {:<44} {:>12.0} cyc {:>10.2} us\n",
+            "total fill latency", self.total_cycles, self.total_us
+        ));
+        out
+    }
+}
+
+/// Build the modeled critical path of a partitioned pipeline.
+pub fn model_critical_path(pfw: &PartitionedFirmware, model: &EngineModel) -> ModelCriticalPath {
+    let rep = analyze_pipeline(pfw, model);
+    let freq_hz = pfw.partitions[0].device.freq_ghz * 1e9;
+    let to_us = |c: f64| c / freq_hz * 1e6;
+    let mut steps = Vec::with_capacity(rep.partitions.len() + rep.links.len());
+    for (i, p) in rep.partitions.iter().enumerate() {
+        steps.push(ModelPathStep {
+            name: format!("array {i}: {} ({} layers, {} tiles)", p.name, p.layers, p.tiles),
+            is_link: false,
+            cycles: p.latency_cycles,
+            us: to_us(p.latency_cycles),
+            bottleneck: p.interval_cycles == rep.interval_cycles,
+        });
+        if let Some(l) = rep.links.get(i) {
+            let kind = if l.staged { "staged" } else { "offset-tiled" };
+            steps.push(ModelPathStep {
+                name: format!("link {i}->{}: {} B {kind}", i + 1, l.bytes),
+                is_link: true,
+                cycles: l.cycles,
+                us: to_us(l.cycles),
+                bottleneck: l.cycles == rep.interval_cycles,
+            });
+        }
+    }
+    ModelCriticalPath {
+        steps,
+        total_cycles: rep.latency_cycles,
+        total_us: rep.latency_us,
+        interval_cycles: rep.interval_cycles,
     }
 }
 
@@ -257,5 +369,36 @@ mod tests {
         // Per-partition rows cover every array.
         assert_eq!(r2.partitions.len(), 2);
         assert!(r2.bottleneck_partition().is_some());
+        // Per-link rows: one per wire, cycles summing to link_cycles.
+        assert_eq!(r2.links.len(), 1);
+        assert_eq!(r2.links[0].from, 0);
+        assert!(r2.links[0].bytes > 0);
+        assert!((r2.links.iter().map(|l| l.cycles).sum::<f64>() - r2.link_cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_critical_path_partitions_the_fill_latency() {
+        let json = synth_model("pipe_cp", &mlp_spec(&[256; 6], crate::arch::Dtype::I8), 6);
+        let pm = compile_partitioned(
+            &json,
+            cfg(32),
+            &PartitionOptions { partitions: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let cp = model_critical_path(&pm.firmware, &EngineModel::default());
+        // Two arrays plus the one wire between them, in pipeline order.
+        assert_eq!(cp.steps.len(), 3);
+        assert!(!cp.steps[0].is_link && cp.steps[1].is_link && !cp.steps[2].is_link);
+        // The steps partition the fill latency exactly.
+        let sum: f64 = cp.steps.iter().map(|s| s.cycles).sum();
+        assert!((sum - cp.total_cycles).abs() < 1e-6, "steps {} vs total {}", sum, cp.total_cycles);
+        let rep = analyze_pipeline(&pm.firmware, &EngineModel::default());
+        assert_eq!(cp.total_cycles, rep.latency_cycles);
+        assert_eq!(cp.interval_cycles, rep.interval_cycles);
+        // Exactly the interval-bounding step(s) are marked.
+        assert!(cp.steps.iter().any(|s| s.bottleneck));
+        let text = cp.render();
+        assert!(text.contains("total fill latency"));
+        assert!(text.contains("interval bottleneck"));
     }
 }

@@ -2,15 +2,27 @@
 //!
 //! Each `benches/*.rs` binary regenerates one paper table/figure and times
 //! the regeneration. `run` does warmup + N timed iterations and prints
-//! mean / min / max wall-clock, which is what `cargo bench` surfaces.
+//! mean / median / min / max wall-clock, which is what `cargo bench`
+//! surfaces. Benches additionally emit a structured [`BenchRecord`]
+//! (`BENCH_<name>.json`) so the [`crate::obs::baseline`] regression
+//! sentinel can compare runs against a committed baseline.
 
+use crate::util::json::{obj, Value};
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Environment variable naming the directory `BenchRecord::write` emits
+/// into (defaults to the current directory).
+pub const BENCH_OUT_ENV: &str = "AIE4ML_BENCH_OUT";
 
 /// Timing statistics over the measured iterations.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
     pub iters: usize,
     pub mean: Duration,
+    /// Median of the measured iterations — the noise-tolerant central
+    /// value the regression sentinel records.
+    pub median: Duration,
     pub min: Duration,
     pub max: Duration,
 }
@@ -37,14 +49,127 @@ pub fn run<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> (T, BenchSt
         times.push(t0.elapsed());
     }
     let total: Duration = times.iter().sum();
+    times.sort();
+    let median = if times.is_empty() {
+        Duration::default()
+    } else if times.len() % 2 == 1 {
+        times[times.len() / 2]
+    } else {
+        (times[times.len() / 2 - 1] + times[times.len() / 2]) / 2
+    };
     let stats = BenchStats {
         iters,
-        mean: total / iters as u32,
-        min: times.iter().min().copied().unwrap_or_default(),
-        max: times.iter().max().copied().unwrap_or_default(),
+        mean: total / (iters.max(1)) as u32,
+        median,
+        min: times.first().copied().unwrap_or_default(),
+        max: times.last().copied().unwrap_or_default(),
     };
     println!("bench {name:<28} {stats}");
     (result, stats)
+}
+
+/// One named metric inside a [`BenchRecord`].
+#[derive(Debug, Clone)]
+pub struct BenchMetric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// Structured output of one bench binary, serialized as
+/// `BENCH_<name>.json` for the regression sentinel (`aie4ml bench-check`).
+///
+/// Schema (version 1):
+/// ```json
+/// {"schema": 1, "bench": "obs_overhead", "smoke": true,
+///  "metrics": [{"name": "disabled_pct", "value": 0.2, "unit": "pct"}]}
+/// ```
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub smoke: bool,
+    pub metrics: Vec<BenchMetric>,
+}
+
+impl BenchRecord {
+    pub fn new(name: &str, smoke: bool) -> BenchRecord {
+        BenchRecord { name: name.to_string(), smoke, metrics: Vec::new() }
+    }
+
+    /// Append one metric (last write wins is *not* applied — duplicates
+    /// are kept verbatim; the sentinel reads the first occurrence).
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) -> &mut Self {
+        self.metrics.push(BenchMetric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+        self
+    }
+
+    /// Record a [`BenchStats`] as `<prefix>_median_us` / `<prefix>_mean_us`.
+    pub fn stats(&mut self, prefix: &str, stats: &BenchStats) -> &mut Self {
+        self.metric(&format!("{prefix}_median_us"), stats.median.as_secs_f64() * 1e6, "us");
+        self.metric(&format!("{prefix}_mean_us"), stats.mean.as_secs_f64() * 1e6, "us")
+    }
+
+    pub fn to_json(&self) -> Value {
+        let metrics: Vec<Value> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                obj([
+                    ("name", m.name.as_str().into()),
+                    ("value", Value::Float(m.value)),
+                    ("unit", m.unit.as_str().into()),
+                ])
+            })
+            .collect();
+        obj([
+            ("schema", Value::Int(1)),
+            ("bench", self.name.as_str().into()),
+            ("smoke", Value::Bool(self.smoke)),
+            ("metrics", Value::Array(metrics)),
+        ])
+    }
+
+    /// Parse a `BENCH_<name>.json` document.
+    pub fn from_json(v: &Value) -> anyhow::Result<BenchRecord> {
+        let name = v.field("bench")?.as_str()?.to_string();
+        let smoke = v.field("smoke")?.as_bool()?;
+        let mut metrics = Vec::new();
+        for m in v.field("metrics")?.as_array()? {
+            metrics.push(BenchMetric {
+                name: m.field("name")?.as_str()?.to_string(),
+                value: m.field("value")?.as_f64()?,
+                unit: m.get("unit").and_then(|u| u.as_str().ok()).unwrap_or("").to_string(),
+            });
+        }
+        Ok(BenchRecord { name, smoke, metrics })
+    }
+
+    pub fn get(&self, metric: &str) -> Option<f64> {
+        self.metrics.iter().find(|m| m.name == metric).map(|m| m.value)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+
+    /// Write into `$AIE4ML_BENCH_OUT` (or the current directory) and
+    /// print the destination; errors are reported, not fatal — a bench
+    /// must never fail because a record directory is missing.
+    pub fn write(&self) {
+        let dir = std::env::var(BENCH_OUT_ENV).unwrap_or_else(|_| ".".to_string());
+        match self.write_to(std::path::Path::new(&dir)) {
+            Ok(path) => println!("bench record -> {}", path.display()),
+            Err(e) => eprintln!("warning: could not write bench record for {}: {e}", self.name),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -61,5 +186,31 @@ mod tests {
         assert_eq!(out, 6); // warmup + 5 iters
         assert_eq!(stats.iters, 5);
         assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn record_round_trips() {
+        let mut r = BenchRecord::new("demo", true);
+        r.metric("speedup", 5.5, "x").metric("cold_us", 1234.0, "us");
+        let v = Value::parse(&r.to_json().to_string_compact()).unwrap();
+        let back = BenchRecord::from_json(&v).unwrap();
+        assert_eq!(back.name, "demo");
+        assert!(back.smoke);
+        assert_eq!(back.get("speedup"), Some(5.5));
+        assert_eq!(back.get("cold_us"), Some(1234.0));
+        assert_eq!(back.get("missing"), None);
+    }
+
+    #[test]
+    fn record_writes_file() {
+        let dir = std::env::temp_dir().join("aie4ml_bench_record_test");
+        let mut r = BenchRecord::new("unit_demo", false);
+        r.metric("v", 1.0, "");
+        let path = r.write_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.field("bench").unwrap().as_str().unwrap(), "unit_demo");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,187 @@
+//! Integration tests for the performance attribution layer: drift
+//! detection feeding the autoscaler, drift surfaced through serving
+//! snapshots and Prometheus, and critical-path extraction surviving the
+//! Chrome-trace export/import round trip.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use aie4ml::coordinator::{
+    AdmissionReport, ContinuousPolicy, ContinuousServer, MetricsReport, ServingSnapshot,
+};
+use aie4ml::deploy::{Autoscaler, AutoscalerConfig, ScaleDecision};
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::obs::attrib::{critical_path, DriftDetector};
+use aie4ml::obs::{from_chrome_json, parse_prometheus, to_chrome_json, to_prometheus};
+use aie4ml::obs::{Clock, ManualClock, Tracer};
+use aie4ml::partition::{compile_partitioned, PartitionOptions, PartitionedFirmware};
+use aie4ml::sim::engine::EngineModel;
+
+fn pipeline(name: &str, batch: usize) -> Arc<PartitionedFirmware> {
+    let json = synth_model(name, &mlp_spec(&[24, 16, 8], aie4ml::arch::Dtype::I8), 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = batch;
+    cfg.tiles_per_layer = Some(1);
+    let opts = PartitionOptions { partitions: Some(1), max_partitions: 1 };
+    Arc::new(compile_partitioned(&json, cfg, &opts).unwrap().firmware)
+}
+
+/// A serving run whose measured latencies are a fixed multiple of the
+/// model prediction converges to exactly that ratio, and the autoscaler's
+/// capacity fallback deflates by it.
+#[test]
+fn drift_ratio_and_autoscaler_correction_converge_to_fixed_multiple() {
+    let mut det = DriftDetector::new(&[100.0, 50.0]);
+    for _ in 0..48 {
+        det.observe(0, 300.0);
+        det.observe(1, 150.0);
+    }
+    let report = det.report();
+    for s in &report.stages {
+        assert!((s.ratio - 3.0).abs() < 1e-9, "stage {} ratio {}", s.stage, s.ratio);
+    }
+    assert!((report.overall_ratio - 3.0).abs() < 1e-9);
+    assert!((report.correction - 3.0).abs() < 1e-9);
+
+    // Feed the detector's own report into the autoscaler: a 3x-optimistic
+    // model means a 2000/s window demands 6 replicas, not 2.
+    let mut scaler = Autoscaler::from_rate(
+        1000.0,
+        1_000_000.0,
+        AutoscalerConfig { cooldown: Duration::ZERO, ..Default::default() },
+    );
+    let snap = |submitted: u64, drift| {
+        let mut m = MetricsReport::empty();
+        m.requests = submitted as usize;
+        ServingSnapshot {
+            metrics: m,
+            admission: AdmissionReport { submitted, admitted: submitted, ..Default::default() },
+            queued: 0,
+            queue_capacity: 64,
+            replicas: 1,
+            batch: 8,
+            batch_us: 0.0, // no live estimate: the model fallback decides
+            cache: None,
+            drift,
+        }
+    };
+    let t0 = Instant::now();
+    assert_eq!(scaler.observe(t0, &snap(0, None)), ScaleDecision::Hold);
+    assert_eq!(scaler.drift_correction(), 1.0);
+    let d = scaler.observe(t0 + Duration::from_secs(1), &snap(2000, Some(report)));
+    assert_eq!(scaler.drift_correction(), 3.0);
+    assert!(matches!(d, ScaleDecision::Up { from: 1, to: 6, .. }), "got {d:?}");
+}
+
+/// A serving run against a deliberately mis-scaled cycle model reports
+/// drift > 0 in the snapshot and in the Prometheus exposition, and the
+/// ratio moves the right way when the prediction is inflated.
+#[test]
+fn misscaled_model_reports_drift_in_snapshot_and_prometheus() {
+    let policy = ContinuousPolicy {
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = ContinuousServer::spawn_with_model(
+        pipeline("attrib_drift_default", 2),
+        1,
+        policy,
+        &EngineModel::default(),
+    )
+    .unwrap();
+    let c = server.client();
+    for _ in 0..4 {
+        c.infer(vec![1; 24]).unwrap();
+    }
+    let snap = server.snapshot();
+    let d = snap.drift.clone().expect("drift present after measured batches");
+    assert!(d.overall_ratio > 0.0);
+    assert!(d.correction > 0.0);
+
+    let text = to_prometheus(&snap);
+    let parsed = parse_prometheus(&text).expect("self-parsing exposition");
+    let ratio = parsed.get("aie4ml_model_drift_ratio").expect("drift gauge exported");
+    assert!(*ratio > 0.0);
+    assert!(parsed.contains_key("aie4ml_model_drift_correction"));
+    server.shutdown();
+
+    // Same workload, predictions inflated ~1000x: the measured-over-
+    // predicted ratio must drop by orders of magnitude.
+    let inflated = EngineModel { dma_setup: 1_000_000, ..EngineModel::default() };
+    let server = ContinuousServer::spawn_with_model(
+        pipeline("attrib_drift_inflated", 2),
+        1,
+        ContinuousPolicy { max_wait: Duration::from_millis(1), ..Default::default() },
+        &inflated,
+    )
+    .unwrap();
+    let c = server.client();
+    for _ in 0..4 {
+        c.infer(vec![1; 24]).unwrap();
+    }
+    let snap2 = server.snapshot();
+    let d2 = snap2.drift.expect("drift present");
+    assert!(
+        d2.overall_ratio < d.overall_ratio,
+        "inflated prediction must lower the ratio: {} vs {}",
+        d2.overall_ratio,
+        d.overall_ratio
+    );
+    server.shutdown();
+}
+
+struct SharedClock(Arc<ManualClock>);
+
+impl Clock for SharedClock {
+    fn now_us(&self) -> u64 {
+        self.0.now_us()
+    }
+}
+
+/// Critical-path extraction on a ManualClock trace: the steps partition
+/// the root wall time exactly, and the result survives the Chrome JSON
+/// export/import round trip bit-for-bit.
+#[test]
+fn critical_path_round_trips_through_chrome_export() {
+    let clock = Arc::new(ManualClock::new());
+    let tracer = Tracer::with_clock(Box::new(SharedClock(clock.clone())));
+    tracer.enable();
+    {
+        let _root = tracer.span("serve", "request");
+        {
+            let _q = tracer.span("serve", "queue");
+            clock.advance(30);
+        }
+        {
+            let _e = tracer.span("serve", "execute");
+            {
+                let _s = tracer.span("serve", "stage0");
+                clock.advance(50);
+            }
+            {
+                let _s = tracer.span("serve", "stage1");
+                clock.advance(40);
+            }
+        }
+        clock.advance(20);
+    }
+    let batch = tracer.drain();
+    assert_eq!(batch.dropped, 0);
+
+    let cp = critical_path(&batch, Some("request")).expect("root span found");
+    assert_eq!(cp.total_us(), 140);
+    let step_sum: u64 = cp.steps.iter().map(|s| s.dur_us()).sum();
+    assert_eq!(step_sum, cp.total_us(), "steps must partition the root wall time");
+    let names: Vec<&str> = cp.steps.iter().map(|s| s.name.as_str()).collect();
+    assert!(names.contains(&"stage1"), "deepest tail child on the path: {names:?}");
+
+    let reimported = from_chrome_json(&to_chrome_json(&batch)).expect("round trip");
+    let cp2 = critical_path(&reimported, Some("request")).expect("root survives round trip");
+    assert_eq!(cp2.total_us(), cp.total_us());
+    assert_eq!(cp2.steps.len(), cp.steps.len());
+    for (a, b) in cp.steps.iter().zip(&cp2.steps) {
+        assert_eq!(a.name, b.name);
+        assert_eq!((a.start_us, a.end_us), (b.start_us, b.end_us));
+    }
+}

@@ -27,10 +27,10 @@
 CARGO ?= cargo
 PY ?= python3
 
-BENCHES := ablations compile_throughput concat_tiling deploy_scaling \
-	fig3_placement fig4_layer_scaling load_harness obs_overhead \
-	partition_scaling table1_ceilings table2_single_kernel table3_models \
-	table4_frameworks table5_cross_device
+BENCHES := ablations compile_throughput concat_tiling conv_lowering \
+	deploy_scaling fig3_placement fig4_layer_scaling load_harness \
+	obs_overhead partition_scaling table1_ceilings table2_single_kernel \
+	table3_models table4_frameworks table5_cross_device
 
 .PHONY: build test zoo artifacts fmt clippy bench bench-smoke bench-check trace-demo clean
 
@@ -63,6 +63,7 @@ bench-smoke:
 	$(CARGO) bench --bench partition_scaling -- --smoke
 	$(CARGO) bench --bench deploy_scaling -- --smoke
 	$(CARGO) bench --bench concat_tiling -- --smoke
+	$(CARGO) bench --bench conv_lowering -- --smoke
 	$(CARGO) bench --bench load_harness -- --smoke
 	$(CARGO) bench --bench compile_throughput -- --smoke
 	$(CARGO) bench --bench obs_overhead -- --smoke

@@ -1,0 +1,89 @@
+//! Bench: conv lowering — the implicit-GEMM patch walk vs the
+//! staged-im2col baseline on the CNN classifier zoo topology.
+//!
+//! Both paths run the *same* compiled firmware; the baseline comes from
+//! `Firmware::staged_im2col_variant()`, which flips every conv patch walk
+//! to "materialize the M × K patch matrix in the memory tile first":
+//! the input plan additionally holds the patch matrix (residency) and the
+//! cycle model charges the serial gather pass through the mem-tile port
+//! (interval + DMA traffic). Functional results are identical — the
+//! comparison isolates the data-movement contract of implicit GEMM.
+//!
+//! Reported per path: modeled interval, inbound DMA bytes per batch, and
+//! mem-tile input residency. The patch walk must strictly win all three —
+//! the wins are written to `BENCH_conv_lowering.json` and enforced by the
+//! regression sentinel against `benches/BASELINE.json`.
+//!
+//! `--smoke` runs a single timed iteration (CI's bench smoke job).
+
+use aie4ml::frontend::CompileConfig;
+use aie4ml::harness::models::cnn_classifier_model;
+use aie4ml::passes::compile;
+use aie4ml::sim::engine::{analyze, EngineModel};
+use aie4ml::util::bench;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 1 } else { 3 };
+    let model = EngineModel::default();
+
+    let json = cnn_classifier_model("conv_lowering_bench", 6);
+    let mut cfg = CompileConfig::default();
+    cfg.batch = 8;
+    let (m, compile_stats) = bench::run("cnn_compile", iters, || {
+        compile(&json, cfg.clone()).expect("cnn compile")
+    });
+    let fw = m.firmware.as_ref().unwrap();
+    let staged = fw.staged_im2col_variant();
+    staged.check_invariants().expect("staged variant invariants");
+
+    println!("\nconv lowering — {} batch {}\n", json.name, fw.batch);
+    println!(
+        "{:<14} {:>12} {:>14} {:>16}",
+        "path", "interval cyc", "dma_in B", "input resid B"
+    );
+    let mut wins = [0.0f64; 3]; // interval, dma, residency: staged / patch
+    for (name, f) in [("patch-walk", fw), ("staged-im2col", &staged)] {
+        let perf = analyze(f, &model);
+        let dma_in: f64 = perf.layers.iter().map(|l| l.dma_in_bytes).sum();
+        let resid: usize = f.layers.iter().map(|l| l.input_plan.total_bytes()).sum();
+        println!(
+            "{:<14} {:>12.0} {:>14.0} {:>16}",
+            name, perf.interval_cycles, dma_in, resid
+        );
+        if name == "patch-walk" {
+            wins = [perf.interval_cycles, dma_in, resid as f64];
+        } else {
+            wins = [
+                perf.interval_cycles / wins[0],
+                dma_in / wins[1],
+                resid as f64 / wins[2],
+            ];
+        }
+    }
+    let [interval_win, dma_win, residency_win] = wins;
+    println!(
+        "\npatch walk wins: interval x{interval_win:.2}, dma bytes x{dma_win:.2}, residency x{residency_win:.2}"
+    );
+    assert!(interval_win > 1.0, "patch walk must strictly beat staged im2col on interval");
+    assert!(dma_win > 1.0, "patch walk must strictly beat staged im2col on DMA bytes");
+    assert!(residency_win > 1.0, "patch walk must strictly beat staged im2col on residency");
+
+    // Per-stage detail (patch-walk firmware): where the conv time goes.
+    let perf = analyze(fw, &model);
+    println!("\nper-stage (patch walk):\n");
+    println!("{:<10} {:>6} {:>12} {:>12} {:>12}", "stage", "tiles", "stage cyc", "dma_in B", "bottleneck");
+    for l in &perf.layers {
+        println!(
+            "{:<10} {:>6} {:>12.0} {:>12.0} {:>12?}",
+            l.name, l.tiles, l.stage_cycles, l.dma_in_bytes, l.bottleneck
+        );
+    }
+
+    let mut rec = bench::BenchRecord::new("conv_lowering", smoke);
+    rec.stats("cnn_compile", &compile_stats)
+        .metric("interval_win", interval_win, "x")
+        .metric("dma_win", dma_win, "x")
+        .metric("residency_win", residency_win, "x");
+    rec.write();
+}

@@ -89,6 +89,97 @@ def make_residual_spec(name, features, hidden, classes, *, act_dtype="int8",
     return {"name": name, "device": "vek280", "layers": layers}
 
 
+def _out_dim(inp, kernel, stride, padding):
+    """Spatial output size, mirroring ``rust/src/ir/node.rs::Padding``."""
+    if padding == "same":
+        return -(-inp // stride)  # ceil division
+    return (inp - kernel) // stride + 1
+
+
+def make_cnn_spec(name, *, act_dtype="int8", frac_bits=6, weight_scale=0.25):
+    """Build the CNN classifier spec: ``12x12x3 -> conv3x3(same,ReLU)->8 ->
+    maxpool2x2/2 -> conv3x3(valid,ReLU)->16 -> dense head -> 10``. Conv
+    layers carry a ``conv`` geometry block and HWIO-flattened weights
+    ``[out_c][kh*kw*in_c]`` — the implicit-GEMM contract of
+    ``rust/src/frontend/json_model.rs``. Mirrors the Rust zoo's
+    ``cnn_classifier`` topology; payload agreement goes through the JSON.
+    """
+    rng = np.random.default_rng(fnv1a(name))
+    wlo, whi = _dtype_range(act_dtype)
+    wlo, whi = int(wlo * weight_scale), int(whi * weight_scale)
+
+    def quant():
+        return {
+            "input": {"dtype": act_dtype, "frac_bits": frac_bits},
+            "weight": {"dtype": act_dtype, "frac_bits": frac_bits},
+            "output": {"dtype": act_dtype, "frac_bits": frac_bits},
+        }
+
+    def conv(lname, conv_block, relu):
+        c = conv_block
+        oh = _out_dim(c["in_h"], c["kh"], c["stride_h"], c["padding"])
+        ow = _out_dim(c["in_w"], c["kw"], c["stride_w"], c["padding"])
+        patch = c["kh"] * c["kw"] * c["in_c"]
+        return {
+            "name": lname,
+            "type": "conv2d",
+            "in_features": c["in_h"] * c["in_w"] * c["in_c"],
+            "out_features": oh * ow * c["out_c"],
+            "use_bias": True,
+            "relu": bool(relu),
+            "quant": quant(),
+            "conv": c,
+            "weights": [int(v) for v in
+                        rng.integers(wlo, whi + 1,
+                                     size=(c["out_c"], patch)).reshape(-1)],
+            "bias": [int(v) for v in rng.integers(-512, 513, size=(c["out_c"],))],
+        }
+
+    def pool(lname, conv_block):
+        c = conv_block
+        oh = _out_dim(c["in_h"], c["kh"], c["stride_h"], c["padding"])
+        ow = _out_dim(c["in_w"], c["kw"], c["stride_w"], c["padding"])
+        return {
+            "name": lname,
+            "type": "maxpool2d",
+            "in_features": c["in_h"] * c["in_w"] * c["in_c"],
+            "out_features": oh * ow * c["in_c"],
+            "use_bias": False,
+            "relu": False,
+            "quant": quant(),
+            "conv": c,
+            "weights": [],
+            "bias": [],
+        }
+
+    def dense(lname, fin, fout):
+        return {
+            "name": lname,
+            "type": "dense",
+            "in_features": int(fin),
+            "out_features": int(fout),
+            "use_bias": True,
+            "relu": False,
+            "quant": quant(),
+            "weights": [int(v) for v in
+                        rng.integers(wlo, whi + 1, size=(fout, fin)).reshape(-1)],
+            "bias": [int(v) for v in rng.integers(-512, 513, size=(fout,))],
+        }
+
+    geom = {"kh": 3, "kw": 3, "stride_h": 1, "stride_w": 1}
+    layers = [
+        conv("c1", {"in_h": 12, "in_w": 12, "in_c": 3, "out_c": 8,
+                    "padding": "same", **geom}, True),
+        pool("pool1", {"in_h": 12, "in_w": 12, "in_c": 8, "out_c": 0,
+                       "kh": 2, "kw": 2, "stride_h": 2, "stride_w": 2,
+                       "padding": "valid"}),
+        conv("c2", {"in_h": 6, "in_w": 6, "in_c": 8, "out_c": 16,
+                    "padding": "valid", **geom}, True),
+        dense("head", 4 * 4 * 16, 10),
+    ]
+    return {"name": name, "device": "vek280", "layers": layers}
+
+
 def make_spec(name, dims, *, act_dtype="int8", wgt_dtype=None, frac_bits=6,
               relu=True, weight_scale=0.25):
     """Build a model spec dict (JSON-shaped) with deterministic weights.
@@ -150,6 +241,13 @@ RESIDUAL_ZOO = [
 ]
 
 
+# CNN zoo entries built by make_cnn_spec: (name, batch). Mirrors the Rust
+# zoo's `cnn_classifier` in name/topology/batch.
+CNN_ZOO = [
+    ("cnn_classifier", 4),
+]
+
+
 def zoo_specs():
     out = []
     for name, dims, act, batch in MODEL_ZOO:
@@ -158,6 +256,8 @@ def zoo_specs():
         out.append((spec, batch))
     for name, features, hidden, classes, batch in RESIDUAL_ZOO:
         out.append((make_residual_spec(name, features, hidden, classes), batch))
+    for name, batch in CNN_ZOO:
+        out.append((make_cnn_spec(name), batch))
     return out
 
 

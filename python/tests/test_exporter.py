@@ -4,7 +4,14 @@ the Rust side (`rust/src/harness/zoo.rs`, `frontend::json_model`)."""
 
 import json
 
-from compile.exporter import MODEL_ZOO, fnv1a, make_residual_spec, make_spec, zoo_specs
+from compile.exporter import (
+    MODEL_ZOO,
+    fnv1a,
+    make_cnn_spec,
+    make_residual_spec,
+    make_spec,
+    zoo_specs,
+)
 
 
 def test_fnv1a_pinned_vector():
@@ -54,7 +61,14 @@ def test_zoo_names_match_rust_zoo():
     names = [name for name, _, _, _ in MODEL_ZOO]
     assert names == ["quickstart", "mlp7", "token_mixer", "mlp_i16i8"]
     all_names = [spec["name"] for spec, _ in zoo_specs()]
-    assert all_names == ["quickstart", "mlp7", "token_mixer", "mlp_i16i8", "residual_mlp"]
+    assert all_names == [
+        "quickstart",
+        "mlp7",
+        "token_mixer",
+        "mlp_i16i8",
+        "residual_mlp",
+        "cnn_classifier",
+    ]
     for spec, batch in zoo_specs():
         assert batch > 0
         assert spec["layers"], spec["name"]
@@ -63,6 +77,36 @@ def test_zoo_names_match_rust_zoo():
             q = spec["layers"][0]["quant"]
             assert q["input"]["dtype"] == "int16"
             assert q["weight"]["dtype"] == "int8"
+
+
+def test_cnn_spec_matches_rust_conv_contract():
+    # Mirrors rust/src/harness/models.rs::cnn_classifier_model and the
+    # frontend's implicit-GEMM conv contract: NHWC features, a `conv`
+    # geometry block, HWIO-flattened weights [out_c][kh*kw*in_c].
+    spec = make_cnn_spec("cnn_t")
+    names = [l["name"] for l in spec["layers"]]
+    assert names == ["c1", "pool1", "c2", "head"]
+    c1, pool, c2, head = spec["layers"]
+    assert c1["type"] == "conv2d" and c1["conv"]["padding"] == "same"
+    # 'same' stride-1 keeps the 12x12 plane; channels 3 -> 8.
+    assert c1["in_features"] == 12 * 12 * 3
+    assert c1["out_features"] == 12 * 12 * 8
+    assert len(c1["weights"]) == 8 * (3 * 3 * 3)
+    assert len(c1["bias"]) == 8
+    # 2x2/2 valid pool halves the plane, channels untouched, no payload.
+    assert pool["type"] == "maxpool2d"
+    assert pool["out_features"] == 6 * 6 * 8
+    assert pool["weights"] == [] and pool["bias"] == []
+    # 'valid' 3x3 shrinks 6x6 -> 4x4; channels 8 -> 16.
+    assert c2["conv"]["padding"] == "valid"
+    assert c2["out_features"] == 4 * 4 * 16
+    assert len(c2["weights"]) == 16 * (3 * 3 * 8)
+    # The dense head reads the flattened conv output directly.
+    assert head["type"] == "dense"
+    assert head["in_features"] == c2["out_features"]
+    # Deterministic and JSON-round-trippable, like every exporter spec.
+    assert make_cnn_spec("cnn_t") == spec
+    assert json.loads(json.dumps(spec)) == spec
 
 
 def test_residual_spec_is_a_dag():

@@ -7,8 +7,8 @@
 //! programs, placement coordinates.
 
 use crate::arch::{Device, Dtype, MmulTiling};
-use crate::ir::{CascadeGeometry, DenseQuant, NodeId, PlacementRect, QuantSpec};
-use crate::sim::dma::{OffsetTiler, Tiler2d};
+use crate::ir::{CascadeGeometry, DenseQuant, NodeId, PlacementRect, Pool2DAttrs, QuantSpec};
+use crate::sim::dma::{ConvPatchTiler, OffsetTiler, Tiler2d};
 
 /// One compute-tile kernel instance.
 #[derive(Debug, Clone)]
@@ -43,6 +43,14 @@ pub struct MemTilePlan {
     pub write_tiler: Tiler2d,
     /// Consumer-side read tiler (layer_{i+1} reads {M_{i+1}, K_{i+1}} tiles).
     pub read_tiler: Tiler2d,
+    /// Implicit-GEMM patch walk (`Conv2D` consumers only): the buffer holds
+    /// the NHWC *image* and the read DMA synthesizes the im2col stream from
+    /// it coordinate-by-coordinate — `read_tiler` then describes the
+    /// *logical* patch-matrix read the walk realizes, and `buffer_bytes` is
+    /// image-sized (the zero-materialized-im2col invariant). `None` for
+    /// every non-conv consumer; serialization skips it, so pre-conv
+    /// firmware.json is byte-identical.
+    pub patch: Option<ConvPatchTiler>,
     /// Buffer bytes (whole logical activation, single buffer).
     pub buffer_bytes: usize,
     /// Ping-pong double buffering enabled.
@@ -130,8 +138,14 @@ impl MergePlan {
 pub struct FirmwareLayer {
     pub name: String,
     pub node_id: NodeId,
+    /// GEMM K: `in_features` for Dense, `KH·KW·C_in` (one patch) for Conv2D.
     pub in_features: usize,
+    /// GEMM N: `out_features` for Dense, `C_out` for Conv2D.
     pub out_features: usize,
+    /// GEMM rows per sample: 1 for Dense, `OH·OW` for a lowered Conv2D —
+    /// the layer processes `batch × m_scale` rows and its output tensor is
+    /// `m_scale × out_features` wide per sample.
+    pub m_scale: usize,
     pub use_bias: bool,
     pub relu: bool,
     pub quant: DenseQuant,
@@ -151,12 +165,24 @@ impl FirmwareLayer {
     pub fn tiles(&self) -> usize {
         self.kernels.len()
     }
+    /// True MACs per sample — for a lowered conv this is
+    /// `OH·OW · KH·KW·C_in · C_out`, not the padded GEMM shape.
     pub fn macs_per_sample(&self) -> usize {
-        self.in_features * self.out_features
+        self.in_features * self.out_features * self.m_scale
+    }
+    /// Output tensor width per sample (what downstream stages consume).
+    pub fn out_width(&self) -> usize {
+        self.out_features * self.m_scale
+    }
+    /// GEMM row count for a batch.
+    pub fn gemm_rows(&self, batch: usize) -> usize {
+        batch * self.m_scale
     }
 }
 
-/// A merge operator in compiled firmware.
+/// A memory-tile stage operator in compiled firmware: the multi-input
+/// merges plus the single-input windowed ops (pooling, transpose) that
+/// execute on memory tiles without occupying compute tiles.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MergeOp {
     /// Residual elementwise add: i32 wrapping sum, SRS(shift 0) store
@@ -164,9 +190,36 @@ pub enum MergeOp {
     Add,
     /// Feature concatenation in input order.
     Concat,
+    /// Windowed max over an NHWC image (out-of-bounds taps excluded).
+    MaxPool2D(Pool2DAttrs),
+    /// Windowed mean over an NHWC image: sum over present taps, divide by
+    /// the present count with round-half-toward-+inf, saturating store.
+    AvgPool2D(Pool2DAttrs),
+    /// Per-sample 2D transpose: `[rows, cols]` row-major → `[cols, rows]`.
+    Transpose { rows: usize, cols: usize },
 }
 
-/// One fully-resolved merge stage (residual Add / Concat).
+impl MergeOp {
+    /// How many producers this stage takes: merges fan in two or more,
+    /// windowed ops exactly one.
+    pub fn arity_range(&self) -> (usize, usize) {
+        match self {
+            MergeOp::Add | MergeOp::Concat => (2, usize::MAX),
+            _ => (1, 1),
+        }
+    }
+    /// Expected input width per producer, when fixed by the op (pools and
+    /// transpose; Add fixes it to `features`, Concat constrains the sum).
+    pub fn fixed_in_width(&self) -> Option<usize> {
+        match self {
+            MergeOp::MaxPool2D(p) | MergeOp::AvgPool2D(p) => Some(p.in_features()),
+            MergeOp::Transpose { rows, cols } => Some(rows * cols),
+            _ => None,
+        }
+    }
+}
+
+/// One fully-resolved memory-tile stage (merge / pool / transpose).
 #[derive(Debug, Clone)]
 pub struct MergeStage {
     pub name: String,
@@ -421,7 +474,9 @@ impl Firmware {
 
     fn stage_out_features_of(&self, s: &FirmwareStage) -> usize {
         match s.op {
-            StageRef::Layer(li) => self.layers[li].out_features,
+            // Full output tensor width: a lowered conv produces
+            // `m_scale × out_features` per sample.
+            StageRef::Layer(li) => self.layers[li].out_width(),
             StageRef::Merge(mi) => self.merges[mi].features,
         }
     }
@@ -457,6 +512,24 @@ impl Firmware {
         }
         for o in &mut fw.outputs {
             o.write_tiler = None;
+        }
+        fw
+    }
+
+    /// The same firmware with every conv patch walk flipped to the
+    /// **staged-im2col** baseline: the input buffer additionally holds the
+    /// materialized `M × K` patch matrix and the cycle model charges the
+    /// staging copy's DMA traffic. Functional results are identical — only
+    /// modeled residency/cycles change. `benches/conv_lowering.rs` baseline.
+    pub fn staged_im2col_variant(&self) -> Firmware {
+        let mut fw = self.clone();
+        let batch = self.batch;
+        for l in &mut fw.layers {
+            if let Some(p) = &mut l.input_plan.patch {
+                p.staged = true;
+                let rows = batch * p.out_h * p.out_w;
+                l.input_plan.buffer_bytes += rows * p.patch_len() * l.input_plan.dtype.bytes();
+            }
         }
         fw
     }
@@ -534,6 +607,43 @@ impl Firmware {
                 l.input_plan.per_column_bytes(),
                 self.device.mem_tile_bytes
             );
+            // Conv layers carry a patch walk agreeing with the GEMM shape;
+            // unless modeling the staged-im2col baseline, the input buffer
+            // holds only the image (the zero-materialized-im2col invariant).
+            match &l.input_plan.patch {
+                Some(p) => {
+                    ensure!(
+                        p.patch_len() == l.in_features && p.out_h * p.out_w == l.m_scale,
+                        "layer {}: patch walk ({} K, {} rows/sample) disagrees with \
+                         GEMM shape ({} K, {} rows/sample)",
+                        l.name,
+                        p.patch_len(),
+                        p.out_h * p.out_w,
+                        l.in_features,
+                        l.m_scale
+                    );
+                    if !p.staged {
+                        let image_bytes =
+                            self.batch * p.image_features() * l.input_plan.dtype.bytes();
+                        ensure!(
+                            l.input_plan.buffer_bytes == image_bytes,
+                            "layer {}: conv input buffer {} B != image {} B \
+                             (materialized im2col?)",
+                            l.name,
+                            l.input_plan.buffer_bytes,
+                            image_bytes
+                        );
+                    }
+                }
+                None => {
+                    ensure!(
+                        l.m_scale == 1,
+                        "layer {}: m_scale {} without a patch-walk read plan",
+                        l.name,
+                        l.m_scale
+                    );
+                }
+            }
         }
         ensure!(
             self.tiles_used() <= self.device.placeable_tiles(),
@@ -596,8 +706,11 @@ impl Firmware {
                 StageRef::Merge(mi) => {
                     ensure!(mi < self.merges.len(), "stage {i}: merge index {mi} out of range");
                     let m = &self.merges[mi];
+                    let (lo, hi) = m.op.arity_range();
                     ensure!(
-                        s.inputs.len() >= 2 && s.inputs.len() == m.plan.write_tilers.len(),
+                        s.inputs.len() >= lo
+                            && s.inputs.len() <= hi
+                            && s.inputs.len() == m.plan.write_tilers.len(),
                         "merge '{}': {} inputs vs {} write tilers",
                         m.name,
                         s.inputs.len(),
@@ -630,6 +743,25 @@ impl Firmware {
                                 widths,
                                 sum,
                                 m.features
+                            );
+                        }
+                        MergeOp::MaxPool2D(p) | MergeOp::AvgPool2D(p) => {
+                            ensure!(
+                                widths == [p.in_features()] && m.features == p.out_features(),
+                                "stage '{}': pool widths {:?} -> {} inconsistent with window",
+                                m.name,
+                                widths,
+                                m.features
+                            );
+                        }
+                        MergeOp::Transpose { rows, cols } => {
+                            ensure!(
+                                widths == [rows * cols] && m.features == rows * cols,
+                                "stage '{}': transpose widths {:?} != {}x{}",
+                                m.name,
+                                widths,
+                                rows,
+                                cols
                             );
                         }
                     }
@@ -714,7 +846,7 @@ impl Firmware {
             .layers
             .iter()
             .map(|l| {
-                obj([
+                let mut v = obj([
                     ("name", Value::from(l.name.as_str())),
                     ("in_features", Value::from(l.in_features)),
                     ("out_features", Value::from(l.out_features)),
@@ -747,7 +879,28 @@ impl Firmware {
                     ),
                     ("mem_col", Value::from(l.input_plan.mem_col)),
                     ("mem_bytes_per_column", Value::from(l.input_plan.per_column_bytes())),
-                ])
+                ]);
+                // Lowered convs describe their implicit-GEMM patch walk;
+                // dense layers keep the exact legacy shape (no keys), so
+                // pre-conv firmware.json is byte-identical.
+                if let Some(p) = &l.input_plan.patch {
+                    if let Value::Object(fields) = &mut v {
+                        fields.insert("m_scale".to_string(), Value::from(l.m_scale));
+                        fields.insert(
+                            "patch".to_string(),
+                            obj([
+                                ("image", Value::from(vec![p.in_h, p.in_w, p.in_c])),
+                                ("kernel", Value::from(vec![p.kh, p.kw])),
+                                ("stride", Value::from(vec![p.stride_h, p.stride_w])),
+                                ("pad", Value::from(vec![p.pad_top, p.pad_left])),
+                                ("out", Value::from(vec![p.out_h, p.out_w])),
+                                ("tile", Value::from(vec![p.tile_m, p.tile_k])),
+                                ("staged", Value::from(p.staged)),
+                            ]),
+                        );
+                    }
+                }
+                v
             })
             .collect();
         let mut top = obj([
@@ -772,6 +925,9 @@ impl Firmware {
                             Value::from(match m.op {
                                 MergeOp::Add => "add",
                                 MergeOp::Concat => "concat",
+                                MergeOp::MaxPool2D(_) => "maxpool2d",
+                                MergeOp::AvgPool2D(_) => "avgpool2d",
+                                MergeOp::Transpose { .. } => "transpose",
                             }),
                         ),
                         ("features", Value::from(m.features)),

@@ -25,8 +25,18 @@ pub enum FrontendError {
     BadWeights { layer: String, got: usize, want: usize },
     #[error("layer {layer}: bias length {got}, expected {want}")]
     BadBias { layer: String, got: usize, want: usize },
-    #[error("layer {layer}: unsupported layer type '{ty}'")]
+    #[error(
+        "layer {layer}: unknown layer kind '{ty}' (supported: dense, conv2d, maxpool2d, \
+         avgpool2d, transpose, add, concat)"
+    )]
     BadLayerType { layer: String, ty: String },
+    #[error(
+        "layer {layer}: a 'conv' window-geometry block is only valid on conv2d, maxpool2d, \
+         avgpool2d and transpose layers, not on '{ty}'"
+    )]
+    ConvFieldOnNonConv { layer: String, ty: String },
+    #[error("layer {layer}: layer kind '{ty}' requires a 'conv' window-geometry block")]
+    MissingConvField { layer: String, ty: String },
     #[error("layer {layer}: {detail}")]
     BadTopology { layer: String, detail: String },
     #[error("model has no layers")]
@@ -69,9 +79,75 @@ pub struct JsonLayerQuant {
     pub output: JsonQuant,
 }
 
+/// Window-geometry block for conv2d / pooling / transpose layers (the JSON
+/// `"conv"` key). Conv layers use every field; pools ignore `out_c`
+/// (channels are preserved); transpose reads `in_h`/`in_w` as its
+/// `rows`/`cols` and ignores the window fields.
+#[derive(Debug, Clone)]
+pub struct JsonConv {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    /// Conv output channels; 0 (absent) for pools and transpose.
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    /// `"same"` or `"valid"`.
+    pub padding: String,
+}
+
+impl JsonConv {
+    fn from_json(v: &Value) -> Result<JsonConv, FrontendError> {
+        let u = |key: &str, default: usize| -> Result<usize, FrontendError> {
+            Ok(v.get(key).map(|x| x.as_usize()).transpose()?.unwrap_or(default))
+        };
+        Ok(JsonConv {
+            in_h: v.field("in_h")?.as_usize()?,
+            in_w: v.field("in_w")?.as_usize()?,
+            in_c: u("in_c", 1)?,
+            out_c: u("out_c", 0)?,
+            kh: u("kh", 1)?,
+            kw: u("kw", 1)?,
+            stride_h: u("stride_h", 1)?,
+            stride_w: u("stride_w", 1)?,
+            padding: v
+                .get("padding")
+                .map(|x| x.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "valid".to_string()),
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        use crate::util::json::obj;
+        obj([
+            ("in_h", Value::from(self.in_h)),
+            ("in_w", Value::from(self.in_w)),
+            ("in_c", Value::from(self.in_c)),
+            ("out_c", Value::from(self.out_c)),
+            ("kh", Value::from(self.kh)),
+            ("kw", Value::from(self.kw)),
+            ("stride_h", Value::from(self.stride_h)),
+            ("stride_w", Value::from(self.stride_w)),
+            ("padding", Value::from(self.padding.as_str())),
+        ])
+    }
+
+    fn parse_padding(&self, layer: &str) -> Result<crate::ir::Padding, FrontendError> {
+        crate::ir::Padding::parse(&self.padding).ok_or_else(|| FrontendError::BadTopology {
+            layer: layer.to_string(),
+            detail: format!("unknown padding '{}' (use 'same' or 'valid')", self.padding),
+        })
+    }
+}
+
 /// One layer entry.
 ///
-/// `ty` is `"dense"`, `"add"` (residual merge) or `"concat"`. Layers wire
+/// `ty` is `"dense"`, `"conv2d"`, `"maxpool2d"`, `"avgpool2d"`,
+/// `"transpose"`, `"add"` (residual merge) or `"concat"`. Windowed kinds
+/// carry their NHWC geometry in the `conv` block. Layers wire
 /// into a DAG through `inputs`: each entry names an earlier layer (its
 /// post-activation output) or the literal `"input"` for the network input.
 /// An empty `inputs` list means "the previous layer" — the chain default,
@@ -92,6 +168,8 @@ pub struct JsonLayer {
     pub bias: Vec<i64>,
     /// Producer layers feeding this one (empty = previous layer).
     pub inputs: Vec<String>,
+    /// Window geometry — present exactly on conv2d/pool/transpose layers.
+    pub conv: Option<JsonConv>,
 }
 
 impl JsonLayer {
@@ -125,6 +203,109 @@ impl JsonLayer {
             weights,
             bias,
             inputs: Vec::new(),
+            conv: None,
+        }
+    }
+
+    /// Convenience constructor for a Conv2D layer (NHWC, HWIO-flattened
+    /// weights `[out_c][kh*kw*in_c]`) with uniform quantization.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        name: &str,
+        conv: JsonConv,
+        use_bias: bool,
+        relu: bool,
+        act_dtype: &str,
+        wgt_dtype: &str,
+        frac_bits: i32,
+        weights: Vec<i32>,
+        bias: Vec<i64>,
+    ) -> JsonLayer {
+        let in_features = conv.in_h * conv.in_w * conv.in_c;
+        // Output dims mirror ir::Padding; validate() re-derives and checks.
+        let out = |input: usize, kernel: usize, stride: usize| match conv.padding.as_str() {
+            "same" => input.div_ceil(stride),
+            _ => (input.saturating_sub(kernel)) / stride + 1,
+        };
+        let out_features =
+            out(conv.in_h, conv.kh, conv.stride_h) * out(conv.in_w, conv.kw, conv.stride_w) * conv.out_c;
+        JsonLayer {
+            name: name.to_string(),
+            ty: "conv2d".to_string(),
+            in_features,
+            out_features,
+            use_bias,
+            relu,
+            quant: JsonLayerQuant {
+                input: JsonQuant::new(act_dtype, frac_bits),
+                weight: JsonQuant::new(wgt_dtype, frac_bits),
+                output: JsonQuant::new(act_dtype, frac_bits),
+            },
+            weights,
+            bias,
+            inputs: Vec::new(),
+            conv: Some(conv),
+        }
+    }
+
+    /// Convenience constructor for a pooling layer (`ty` is `"maxpool2d"`
+    /// or `"avgpool2d"`); channels are preserved, `conv.out_c` is ignored.
+    pub fn pool2d(name: &str, ty: &str, conv: JsonConv, dtype: &str, frac_bits: i32) -> JsonLayer {
+        let in_features = conv.in_h * conv.in_w * conv.in_c;
+        let out = |input: usize, kernel: usize, stride: usize| match conv.padding.as_str() {
+            "same" => input.div_ceil(stride),
+            _ => (input.saturating_sub(kernel)) / stride + 1,
+        };
+        let out_features =
+            out(conv.in_h, conv.kh, conv.stride_h) * out(conv.in_w, conv.kw, conv.stride_w) * conv.in_c;
+        JsonLayer {
+            name: name.to_string(),
+            ty: ty.to_string(),
+            in_features,
+            out_features,
+            use_bias: false,
+            relu: false,
+            quant: JsonLayerQuant {
+                input: JsonQuant::new(dtype, frac_bits),
+                weight: JsonQuant::new(dtype, frac_bits),
+                output: JsonQuant::new(dtype, frac_bits),
+            },
+            weights: Vec::new(),
+            bias: Vec::new(),
+            inputs: Vec::new(),
+            conv: Some(conv),
+        }
+    }
+
+    /// Convenience constructor for a per-sample 2D transpose:
+    /// `[rows, cols]` row-major → `[cols, rows]`.
+    pub fn transpose(name: &str, rows: usize, cols: usize, dtype: &str, frac_bits: i32) -> JsonLayer {
+        JsonLayer {
+            name: name.to_string(),
+            ty: "transpose".to_string(),
+            in_features: rows * cols,
+            out_features: rows * cols,
+            use_bias: false,
+            relu: false,
+            quant: JsonLayerQuant {
+                input: JsonQuant::new(dtype, frac_bits),
+                weight: JsonQuant::new(dtype, frac_bits),
+                output: JsonQuant::new(dtype, frac_bits),
+            },
+            weights: Vec::new(),
+            bias: Vec::new(),
+            inputs: Vec::new(),
+            conv: Some(JsonConv {
+                in_h: rows,
+                in_w: cols,
+                in_c: 1,
+                out_c: 0,
+                kh: 1,
+                kw: 1,
+                stride_h: 1,
+                stride_w: 1,
+                padding: "valid".to_string(),
+            }),
         }
     }
 
@@ -151,6 +332,7 @@ impl JsonLayer {
             weights: Vec::new(),
             bias: Vec::new(),
             inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            conv: None,
         }
     }
 
@@ -214,6 +396,47 @@ impl JsonLayer {
             weights,
             bias,
             inputs,
+            conv: v.get("conv").map(JsonConv::from_json).transpose()?,
+        })
+    }
+
+    /// IR conv attributes for a `conv2d` layer (geometry checked by
+    /// [`JsonModel::validate`]).
+    pub(crate) fn conv_attrs(&self) -> Result<crate::ir::Conv2DAttrs, FrontendError> {
+        let c = self.conv.as_ref().ok_or_else(|| FrontendError::MissingConvField {
+            layer: self.name.clone(),
+            ty: self.ty.clone(),
+        })?;
+        Ok(crate::ir::Conv2DAttrs {
+            in_h: c.in_h,
+            in_w: c.in_w,
+            in_c: c.in_c,
+            out_c: c.out_c,
+            kh: c.kh,
+            kw: c.kw,
+            stride_h: c.stride_h,
+            stride_w: c.stride_w,
+            padding: c.parse_padding(&self.name)?,
+            use_bias: self.use_bias,
+            fused_relu: false,
+        })
+    }
+
+    /// IR pool attributes for a `maxpool2d`/`avgpool2d` layer.
+    pub(crate) fn pool_attrs(&self) -> Result<crate::ir::Pool2DAttrs, FrontendError> {
+        let c = self.conv.as_ref().ok_or_else(|| FrontendError::MissingConvField {
+            layer: self.name.clone(),
+            ty: self.ty.clone(),
+        })?;
+        Ok(crate::ir::Pool2DAttrs {
+            in_h: c.in_h,
+            in_w: c.in_w,
+            c: c.in_c,
+            kh: c.kh,
+            kw: c.kw,
+            stride_h: c.stride_h,
+            stride_w: c.stride_w,
+            padding: c.parse_padding(&self.name)?,
         })
     }
 }
@@ -284,10 +507,15 @@ impl JsonModel {
                     ("bias", Value::from(l.bias.clone())),
                 ]);
                 // Only DAG layers carry `inputs` — chain JSONs stay
-                // byte-identical to what pre-DAG exporters wrote.
-                if !l.inputs.is_empty() {
-                    if let Value::Object(fields) = &mut layer {
+                // byte-identical to what pre-DAG exporters wrote. The same
+                // goes for the `conv` geometry block: only windowed layers
+                // write it, so pre-conv model files round-trip unchanged.
+                if let Value::Object(fields) = &mut layer {
+                    if !l.inputs.is_empty() {
                         fields.insert("inputs".to_string(), Value::from(l.inputs.clone()));
+                    }
+                    if let Some(c) = &l.conv {
+                        fields.insert("conv".to_string(), c.to_json());
                     }
                 }
                 layer
@@ -310,10 +538,11 @@ impl JsonModel {
         if self.layers.is_empty() {
             return Err(FrontendError::Empty);
         }
-        if self.layers[0].ty != "dense" {
+        if self.layers[0].ty != "dense" && self.layers[0].ty != "conv2d" {
             return Err(FrontendError::BadTopology {
                 layer: self.layers[0].name.clone(),
-                detail: "the first layer must be dense (it consumes the network input)".into(),
+                detail: "the first layer must be dense or conv2d (it consumes the network input)"
+                    .into(),
             });
         }
         let mut names = std::collections::HashSet::new();
@@ -326,6 +555,12 @@ impl JsonModel {
             }
             match l.ty.as_str() {
                 "dense" => {
+                    if l.conv.is_some() {
+                        return Err(FrontendError::ConvFieldOnNonConv {
+                            layer: l.name.clone(),
+                            ty: l.ty.clone(),
+                        });
+                    }
                     if l.inputs.len() > 1 {
                         return Err(FrontendError::BadTopology {
                             layer: l.name.clone(),
@@ -348,7 +583,116 @@ impl JsonModel {
                         });
                     }
                 }
+                "conv2d" => {
+                    let c = l.conv_attrs()?;
+                    if l.inputs.len() > 1 {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!("conv2d layers take one input, found {}", l.inputs.len()),
+                        });
+                    }
+                    if c.out_c == 0 {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: "conv2d requires out_c > 0 in its 'conv' block".into(),
+                        });
+                    }
+                    if l.in_features != c.in_features() || l.out_features != c.out_features() {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!(
+                                "declared features {}→{} disagree with the conv geometry \
+                                 {}→{} (flattened NHWC)",
+                                l.in_features,
+                                l.out_features,
+                                c.in_features(),
+                                c.out_features()
+                            ),
+                        });
+                    }
+                    // HWIO-flattened weights: [out_c][kh*kw*in_c].
+                    let want = c.out_c * c.patch_len();
+                    if l.weights.len() != want {
+                        return Err(FrontendError::BadWeights {
+                            layer: l.name.clone(),
+                            got: l.weights.len(),
+                            want,
+                        });
+                    }
+                    if l.use_bias && l.bias.len() != c.out_c {
+                        return Err(FrontendError::BadBias {
+                            layer: l.name.clone(),
+                            got: l.bias.len(),
+                            want: c.out_c,
+                        });
+                    }
+                }
+                "maxpool2d" | "avgpool2d" => {
+                    let p = l.pool_attrs()?;
+                    if l.inputs.len() > 1 {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!("{} layers take one input, found {}", l.ty, l.inputs.len()),
+                        });
+                    }
+                    if !l.weights.is_empty() || !l.bias.is_empty() || l.use_bias || l.relu {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: "pooling layers carry no weights, bias or activation".into(),
+                        });
+                    }
+                    if l.in_features != p.in_features() || l.out_features != p.out_features() {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!(
+                                "declared features {}→{} disagree with the pool geometry \
+                                 {}→{} (flattened NHWC)",
+                                l.in_features,
+                                l.out_features,
+                                p.in_features(),
+                                p.out_features()
+                            ),
+                        });
+                    }
+                }
+                "transpose" => {
+                    let c = l.conv.as_ref().ok_or_else(|| FrontendError::MissingConvField {
+                        layer: l.name.clone(),
+                        ty: l.ty.clone(),
+                    })?;
+                    if l.inputs.len() > 1 {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!("transpose layers take one input, found {}", l.inputs.len()),
+                        });
+                    }
+                    if !l.weights.is_empty() || !l.bias.is_empty() || l.use_bias || l.relu {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: "transpose layers carry no weights, bias or activation".into(),
+                        });
+                    }
+                    let (rows, cols) = (c.in_h, c.in_w);
+                    if l.in_features != rows * cols || l.out_features != rows * cols {
+                        return Err(FrontendError::BadTopology {
+                            layer: l.name.clone(),
+                            detail: format!(
+                                "transpose of a {rows}x{cols} matrix needs in/out features {} \
+                                 (found {}→{})",
+                                rows * cols,
+                                l.in_features,
+                                l.out_features
+                            ),
+                        });
+                    }
+                }
                 "add" | "concat" => {
+                    if l.conv.is_some() {
+                        return Err(FrontendError::ConvFieldOnNonConv {
+                            layer: l.name.clone(),
+                            ty: l.ty.clone(),
+                        });
+                    }
                     if l.inputs.len() < 2 {
                         return Err(FrontendError::BadTopology {
                             layer: l.name.clone(),
@@ -505,6 +849,27 @@ impl JsonModel {
                         shift: 0,              // finalized by Quantization pass
                     });
                     id
+                }
+                "conv2d" => {
+                    let id = g.add_node(l.name.clone(), OpKind::Conv2D(l.conv_attrs()?));
+                    let node = g.node_mut(id).unwrap();
+                    node.weights = l.weights.clone();
+                    node.bias = l.bias.clone();
+                    node.attrs.quant = Some(crate::ir::DenseQuant {
+                        input: l.quant.input.to_spec(&l.name)?,
+                        weight: l.quant.weight.to_spec(&l.name)?,
+                        output: l.quant.output.to_spec(&l.name)?,
+                        bias_dtype: Dtype::I32,
+                        acc_dtype: Dtype::I32, // finalized by Quantization pass
+                        shift: 0,              // finalized by Quantization pass
+                    });
+                    id
+                }
+                "maxpool2d" => g.add_node(l.name.clone(), OpKind::MaxPool2D(l.pool_attrs()?)),
+                "avgpool2d" => g.add_node(l.name.clone(), OpKind::AvgPool2D(l.pool_attrs()?)),
+                "transpose" => {
+                    let c = l.conv.as_ref().expect("validate() requires the conv block");
+                    g.add_node(l.name.clone(), OpKind::Transpose { rows: c.in_h, cols: c.in_w })
                 }
                 "add" => g.add_node(l.name.clone(), OpKind::Add { features: l.out_features }),
                 _ => g.add_node(l.name.clone(), OpKind::Concat { features: l.out_features }),
@@ -712,6 +1077,142 @@ mod tests {
         let mut m = residual_model();
         m.layers[1].name = "fc1".into();
         assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+    }
+
+    fn small_conv() -> JsonConv {
+        JsonConv {
+            in_h: 4,
+            in_w: 4,
+            in_c: 2,
+            out_c: 3,
+            kh: 3,
+            kw: 3,
+            stride_h: 1,
+            stride_w: 1,
+            padding: "same".to_string(),
+        }
+    }
+
+    fn conv_model() -> JsonModel {
+        // conv 4x4x2 -> 4x4x3 (same) -> maxpool 2x2/2 -> dense head.
+        let conv = small_conv();
+        let pool = JsonConv {
+            in_c: 3,
+            out_c: 0,
+            kh: 2,
+            kw: 2,
+            stride_h: 2,
+            stride_w: 2,
+            padding: "valid".into(),
+            ..conv.clone()
+        };
+        JsonModel::new(
+            "cnn",
+            vec![
+                JsonLayer::conv2d("c1", conv, true, true, "int8", "int8", 4, vec![1; 3 * 18], vec![0; 3]),
+                JsonLayer::pool2d("p1", "maxpool2d", pool, "int8", 4),
+                JsonLayer::dense("head", 12, 5, false, false, "int8", "int8", 4, vec![1; 60], vec![]),
+            ],
+        )
+    }
+
+    #[test]
+    fn conv_model_validates_builds_and_roundtrips() {
+        let m = conv_model();
+        m.validate().unwrap();
+        assert_eq!(m.layers[0].in_features, 32);
+        assert_eq!(m.layers[0].out_features, 48); // 4x4 'same' x 3 channels
+        assert_eq!(m.layers[1].out_features, 12); // 2x2 x 3 channels
+        let g = m.to_graph().unwrap();
+        g.validate_shapes().unwrap();
+        // input, c1, c1_relu, p1, head, output.
+        assert_eq!(g.nodes.len(), 6);
+        let m2 = JsonModel::from_str(&m.to_json_string()).unwrap();
+        let c = m2.layers[0].conv.as_ref().unwrap();
+        assert_eq!((c.kh, c.kw, c.out_c, c.padding.as_str()), (3, 3, 3, "same"));
+        m2.to_graph().unwrap();
+        // Dense-only models keep writing no `conv` key at all.
+        assert!(!tiny_model().to_json_string().contains("\"conv\""));
+    }
+
+    #[test]
+    fn unknown_layer_kind_names_layer_and_lists_supported() {
+        let mut m = tiny_model();
+        m.layers[0].ty = "conv3d".into();
+        let err = m.validate().unwrap_err();
+        assert!(matches!(&err, FrontendError::BadLayerType { layer, ty } if layer == "fc1" && ty == "conv3d"));
+        let msg = err.to_string();
+        assert!(msg.contains("fc1"), "{msg}");
+        for kind in ["dense", "conv2d", "maxpool2d", "avgpool2d", "transpose", "add", "concat"] {
+            assert!(msg.contains(kind), "missing '{kind}' in: {msg}");
+        }
+    }
+
+    #[test]
+    fn conv_field_on_non_conv_layer_rejected() {
+        let mut m = tiny_model();
+        m.layers[0].conv = Some(small_conv());
+        let err = m.validate().unwrap_err();
+        assert!(
+            matches!(&err, FrontendError::ConvFieldOnNonConv { layer, ty } if layer == "fc1" && ty == "dense"),
+            "{err}"
+        );
+        assert!(err.to_string().contains("fc1"));
+        // Same on merges.
+        let mut m = residual_model();
+        m.layers[2].conv = Some(small_conv());
+        assert!(matches!(m.validate(), Err(FrontendError::ConvFieldOnNonConv { .. })));
+    }
+
+    #[test]
+    fn conv_layer_without_geometry_rejected() {
+        let mut m = conv_model();
+        m.layers[0].conv = None;
+        assert!(matches!(
+            m.validate(),
+            Err(FrontendError::MissingConvField { layer, ty }) if layer == "c1" && ty == "conv2d"
+        ));
+        let mut m = conv_model();
+        m.layers[1].conv = None;
+        assert!(matches!(m.validate(), Err(FrontendError::MissingConvField { .. })));
+    }
+
+    #[test]
+    fn conv_shape_and_payload_mismatches_rejected() {
+        // Wrong weight count for the HWIO layout.
+        let mut m = conv_model();
+        m.layers[0].weights.pop();
+        assert!(matches!(m.validate(), Err(FrontendError::BadWeights { want: 54, .. })));
+        // Declared features disagree with the geometry.
+        let mut m = conv_model();
+        m.layers[0].out_features = 47;
+        assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+        // Bad padding spelling.
+        let mut m = conv_model();
+        m.layers[0].conv.as_mut().unwrap().padding = "full".into();
+        assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+        // Pool layers carry no payload.
+        let mut m = conv_model();
+        m.layers[1].relu = true;
+        assert!(matches!(m.validate(), Err(FrontendError::BadTopology { .. })));
+    }
+
+    #[test]
+    fn transpose_layer_parses_and_checks_shape() {
+        let m = JsonModel::new(
+            "tr",
+            vec![
+                JsonLayer::dense("fc", 6, 12, false, false, "int8", "int8", 0, vec![1; 72], vec![]),
+                JsonLayer::transpose("t", 3, 4, "int8", 0),
+                JsonLayer::dense("head", 12, 2, false, false, "int8", "int8", 0, vec![1; 24], vec![]),
+            ],
+        );
+        m.validate().unwrap();
+        let g = m.to_graph().unwrap();
+        g.validate_shapes().unwrap();
+        let mut bad = m.clone();
+        bad.layers[1].in_features = 13;
+        assert!(matches!(bad.validate(), Err(FrontendError::BadTopology { .. })));
     }
 
     #[test]

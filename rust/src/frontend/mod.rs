@@ -7,4 +7,4 @@ pub mod config;
 pub mod json_model;
 
 pub use config::{CompileConfig, LayerConfig};
-pub use json_model::{FrontendError, JsonLayer, JsonModel, JsonQuant};
+pub use json_model::{FrontendError, JsonConv, JsonLayer, JsonModel, JsonQuant};

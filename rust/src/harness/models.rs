@@ -186,6 +186,171 @@ pub fn diamond_mlp_model(
     m
 }
 
+/// A small CNN classifier exercising the implicit-GEMM conv lowering
+/// end-to-end: `12×12×3 image -> conv3×3→8 (same, ReLU) -> maxpool 2×2/2
+/// -> conv3×3→16 (valid, ReLU) -> dense head -> 10 classes`. Both convs
+/// ride the dense pipeline as GEMMs with patch-walk read plans; the pool
+/// is a memory-tile stage. Deterministic weights from the name-seeded PCG
+/// stream, like [`synth_model`].
+pub fn cnn_classifier_model(name: &str, frac_bits: i32) -> JsonModel {
+    use crate::frontend::JsonConv;
+    fn conv_layer(
+        rng: &mut Pcg32,
+        lname: &str,
+        c: JsonConv,
+        relu: bool,
+        frac_bits: i32,
+    ) -> JsonLayer {
+        let weights: Vec<i32> =
+            (0..c.out_c * c.kh * c.kw * c.in_c).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let bias: Vec<i64> = (0..c.out_c).map(|_| rng.gen_range_i64(-512, 512)).collect();
+        JsonLayer::conv2d(lname, c, true, relu, "int8", "int8", frac_bits, weights, bias)
+    }
+    let mut rng = Pcg32::seed_from_u64(name_seed(name));
+    let c1 = JsonConv {
+        in_h: 12,
+        in_w: 12,
+        in_c: 3,
+        out_c: 8,
+        kh: 3,
+        kw: 3,
+        stride_h: 1,
+        stride_w: 1,
+        padding: "same".into(),
+    };
+    let pool = JsonConv {
+        in_h: 12,
+        in_w: 12,
+        in_c: 8,
+        out_c: 0,
+        kh: 2,
+        kw: 2,
+        stride_h: 2,
+        stride_w: 2,
+        padding: "valid".into(),
+    };
+    let c2 = JsonConv {
+        in_h: 6,
+        in_w: 6,
+        in_c: 8,
+        out_c: 16,
+        kh: 3,
+        kw: 3,
+        stride_h: 1,
+        stride_w: 1,
+        padding: "valid".into(),
+    };
+    let head_in = 4 * 4 * 16; // conv2's flattened 4×4×16 output
+    let layers = vec![
+        conv_layer(&mut rng, "c1", c1, true, frac_bits),
+        JsonLayer::pool2d("pool1", "maxpool2d", pool, "int8", frac_bits),
+        conv_layer(&mut rng, "c2", c2, true, frac_bits),
+        JsonLayer::dense(
+            "head",
+            head_in,
+            10,
+            true,
+            false,
+            "int8",
+            "int8",
+            frac_bits,
+            (0..head_in * 10).map(|_| rng.gen_i32_in(-128, 127)).collect(),
+            (0..10).map(|_| rng.gen_range_i64(-512, 512)).collect(),
+        ),
+    ];
+    let mut m = JsonModel::new(name, layers);
+    m.device = Some("vek280".to_string());
+    m
+}
+
+/// A complete MLP-Mixer block as a real IR DAG (paper §V-B, shrunk to
+/// example scale): a patch-embedding conv turns an `8×8×1` image into
+/// `T=16` tokens of `C=8` channels, then
+///
+/// * **token mixing** — `Transpose [T,C]→[C,T]`, a per-channel MLP over
+///   tokens as two 1×1 convs (`in_h=C, in_c=T`), `Transpose` back,
+///   residual `Add` with the embedding;
+/// * **channel mixing** — a per-token MLP over channels as two 1×1 convs
+///   (`in_h=T, in_c=C`), residual `Add`;
+///
+/// and a dense classifier head. Every op is a first-class IR node: the
+/// convs lower through implicit GEMM, the transposes are memory-tile
+/// stages, the adds are merges. Deterministic weights from the
+/// name-seeded PCG stream, like [`synth_model`].
+pub fn mlp_mixer_block_model(name: &str, frac_bits: i32) -> JsonModel {
+    use crate::frontend::JsonConv;
+    const T: usize = 16; // tokens (4×4 patches of the 8×8 image)
+    const C: usize = 8; // embedding channels
+    fn conv_layer(
+        rng: &mut Pcg32,
+        lname: &str,
+        c: JsonConv,
+        relu: bool,
+        frac_bits: i32,
+    ) -> JsonLayer {
+        let weights: Vec<i32> =
+            (0..c.out_c * c.kh * c.kw * c.in_c).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let bias: Vec<i64> = (0..c.out_c).map(|_| rng.gen_range_i64(-512, 512)).collect();
+        JsonLayer::conv2d(lname, c, true, relu, "int8", "int8", frac_bits, weights, bias)
+    }
+    // A 1×1 conv over an `[rows, 1, in_c]` image: the same dense layer
+    // applied to every row — exactly a mixer MLP layer over the last axis.
+    let mix = |rows: usize, in_c: usize, out_c: usize| JsonConv {
+        in_h: rows,
+        in_w: 1,
+        in_c,
+        out_c,
+        kh: 1,
+        kw: 1,
+        stride_h: 1,
+        stride_w: 1,
+        padding: "valid".into(),
+    };
+    let mut rng = Pcg32::seed_from_u64(name_seed(name));
+    let stem = JsonConv {
+        in_h: 8,
+        in_w: 8,
+        in_c: 1,
+        out_c: C,
+        kh: 2,
+        kw: 2,
+        stride_h: 2,
+        stride_w: 2,
+        padding: "valid".into(),
+    };
+    let head_w: Vec<i32> = (0..T * C * 10).map(|_| rng.gen_i32_in(-128, 127)).collect();
+    let head_b: Vec<i64> = (0..10).map(|_| rng.gen_range_i64(-512, 512)).collect();
+    let layers = vec![
+        // Patch embedding: 2×2/2 conv -> [4,4,C] = row-major [T, C].
+        conv_layer(&mut rng, "embed", stem, false, frac_bits),
+        // Token mixing on [C, T] rows.
+        JsonLayer::transpose("tok_t", T, C, "int8", frac_bits).with_inputs(&["embed"]),
+        conv_layer(&mut rng, "tok_fc1", mix(C, T, 2 * T), true, frac_bits),
+        conv_layer(&mut rng, "tok_fc2", mix(C, 2 * T, T), false, frac_bits),
+        JsonLayer::transpose("tok_back", C, T, "int8", frac_bits).with_inputs(&["tok_fc2"]),
+        JsonLayer::residual_add("tok_res", T * C, "int8", frac_bits, &["embed", "tok_back"]),
+        // Channel mixing on [T, C] rows.
+        conv_layer(&mut rng, "ch_fc1", mix(T, C, 2 * C), true, frac_bits),
+        conv_layer(&mut rng, "ch_fc2", mix(T, 2 * C, C), false, frac_bits),
+        JsonLayer::residual_add("ch_res", T * C, "int8", frac_bits, &["tok_res", "ch_fc2"]),
+        JsonLayer::dense(
+            "head",
+            T * C,
+            10,
+            true,
+            false,
+            "int8",
+            "int8",
+            frac_bits,
+            head_w,
+            head_b,
+        ),
+    ];
+    let mut m = JsonModel::new(name, layers);
+    m.device = Some("vek280".to_string());
+    m
+}
+
 /// The over-capacity zoo model: a 4-layer 512-wide MLP (2× the hermetic
 /// `mlp7` width) deployed at the throughput configuration
 /// [`wide_mlp_2x_config`] — 128 tiles per layer, 512 compute tiles total,
@@ -297,6 +462,42 @@ mod tests {
         fw.check_invariants().unwrap();
         assert_eq!(fw.layers.len(), 4);
         assert_eq!(fw.merges.len(), 1);
+    }
+
+    #[test]
+    fn cnn_classifier_compiles_end_to_end() {
+        let json = cnn_classifier_model("models_cnn", 6);
+        json.validate().unwrap();
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 4;
+        let m = compile(&json, cfg).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        fw.check_invariants().unwrap();
+        // Two conv GEMM layers + the dense head; the pool is a merge stage.
+        assert_eq!(fw.layers.len(), 3);
+        assert_eq!(fw.merges.len(), 1);
+        assert_eq!(fw.input_features(), 12 * 12 * 3);
+        assert_eq!(fw.output_features(), 10);
+        // Both convs carry patch-walk read plans (implicit GEMM, no im2col).
+        let with_patch = fw.layers.iter().filter(|l| l.input_plan.patch.is_some()).count();
+        assert_eq!(with_patch, 2);
+    }
+
+    #[test]
+    fn mixer_block_model_compiles_end_to_end() {
+        let json = mlp_mixer_block_model("models_mixer", 6);
+        json.validate().unwrap();
+        let mut cfg = CompileConfig::default();
+        cfg.batch = 2;
+        let m = compile(&json, cfg).unwrap();
+        let fw = m.firmware.as_ref().unwrap();
+        fw.check_invariants().unwrap();
+        assert_eq!(fw.input_features(), 8 * 8);
+        assert_eq!(fw.output_features(), 10);
+        // 5 convs + the dense head run as GEMMs; the 2 transposes and 2
+        // residual adds are memory-tile stages.
+        assert_eq!(fw.layers.len(), 6);
+        assert_eq!(fw.merges.len(), 4);
     }
 
     #[test]

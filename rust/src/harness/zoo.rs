@@ -22,7 +22,8 @@
 use crate::arch::Dtype;
 use crate::frontend::JsonModel;
 use crate::harness::models::{
-    concat_mlp_model, residual_mlp_model, synth_model, wide_mlp_2x_model, LayerSpec,
+    cnn_classifier_model, concat_mlp_model, residual_mlp_model, synth_model, wide_mlp_2x_model,
+    LayerSpec,
 };
 use crate::util::json::{obj, Value};
 use anyhow::{Context, Result};
@@ -87,6 +88,10 @@ pub fn zoo_models() -> Vec<(JsonModel, usize)> {
         // the zoo's witness that compile-in-the-loop cut choice strictly
         // beats the MAC proxy. Rust-only, like wide_mlp_2x.
         (synth_model("funnel_mlp", &layer_specs(&[512, 512, 512, 32, 32], Dtype::I8, Dtype::I8), 6), 16),
+        // CNN classifier: conv -> maxpool -> conv -> dense head, lowered
+        // through implicit GEMM (the conv bit-exactness gate). Mirrored by
+        // the Python exporter's CNN_ZOO entry.
+        (cnn_classifier_model("cnn_classifier", 6), 4),
     ]
 }
 
@@ -213,7 +218,7 @@ mod tests {
     fn zoo_is_deterministic() {
         let a = zoo_models();
         let b = zoo_models();
-        assert_eq!(a.len(), 8);
+        assert_eq!(a.len(), 9);
         for ((ma, _), (mb, _)) in a.iter().zip(&b) {
             assert_eq!(ma.name, mb.name);
             assert_eq!(ma.layers[0].weights, mb.layers[0].weights);
@@ -230,7 +235,8 @@ mod tests {
                 "residual_mlp",
                 "concat_mlp",
                 "wide_mlp_2x",
-                "funnel_mlp"
+                "funnel_mlp",
+                "cnn_classifier"
             ]
         );
     }
@@ -239,7 +245,7 @@ mod tests {
     fn ensure_zoo_writes_and_reuses() {
         let dir = ScratchDir::new("zoo").unwrap();
         let first = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(first.len(), 8);
+        assert_eq!(first.len(), 9);
         for e in &first {
             assert!(e.model.exists(), "{} missing", e.model.display());
             // Written models parse back into valid exporter JSON.
@@ -249,7 +255,7 @@ mod tests {
         }
         // Second call reuses the manifest (same paths, no rewrite needed).
         let second = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(second.len(), 8);
+        assert_eq!(second.len(), 9);
         assert_eq!(second[0].model, first[0].model);
     }
 
@@ -267,11 +273,12 @@ mod tests {
         )
         .unwrap();
         let entries = ensure_zoo(dir.path()).unwrap();
-        assert_eq!(entries.len(), 8);
+        assert_eq!(entries.len(), 9);
         assert!(entries.iter().any(|e| e.name == "residual_mlp"));
         assert!(entries.iter().any(|e| e.name == "concat_mlp"));
         assert!(entries.iter().any(|e| e.name == "wide_mlp_2x"));
         assert!(entries.iter().any(|e| e.name == "funnel_mlp"));
+        assert!(entries.iter().any(|e| e.name == "cnn_classifier"));
         // With the HLO artifact actually present, the same truncated
         // manifest is an AOT set and must be preserved verbatim.
         std::fs::write(
@@ -316,6 +323,25 @@ mod tests {
         );
         // Round-trips through the written JSON as a DAG.
         let back = JsonModel::from_str(&m.to_json_string()).unwrap();
+        back.to_graph().unwrap();
+    }
+
+    #[test]
+    fn cnn_zoo_entry_round_trips_conv_blocks() {
+        let zoo = zoo_models();
+        let (m, batch) = &zoo[8];
+        assert_eq!(m.name, "cnn_classifier");
+        assert_eq!(*batch, 4);
+        assert_eq!(m.layers[0].ty, "conv2d");
+        assert_eq!(m.layers[1].ty, "maxpool2d");
+        assert_eq!(m.layers[2].ty, "conv2d");
+        assert_eq!(m.layers[3].ty, "dense");
+        // Conv geometry survives the written JSON round trip.
+        let back = JsonModel::from_str(&m.to_json_string()).unwrap();
+        back.validate().unwrap();
+        let c1 = back.layers[0].conv.as_ref().unwrap();
+        assert_eq!((c1.in_h, c1.in_w, c1.in_c, c1.out_c), (12, 12, 3, 8));
+        assert_eq!(c1.padding, "same");
         back.to_graph().unwrap();
     }
 

@@ -95,7 +95,7 @@ impl Graph {
                 continue;
             }
             match self.nodes[n].op {
-                OpKind::Dense { .. } => out.push(n),
+                OpKind::Dense { .. } | OpKind::Conv2D(_) => out.push(n),
                 OpKind::Input { .. } | OpKind::Output => {}
                 _ => stack.extend(step(n)),
             }
@@ -192,6 +192,9 @@ impl Graph {
             match self.nodes.get(id)?.op {
                 OpKind::Input { features } => return Some(features),
                 OpKind::Dense { out_features, .. } => return Some(out_features),
+                OpKind::Conv2D(c) => return Some(c.out_features()),
+                OpKind::MaxPool2D(p) | OpKind::AvgPool2D(p) => return Some(p.out_features()),
+                OpKind::Transpose { rows, cols } => return Some(rows * cols),
                 OpKind::Add { features } | OpKind::Concat { features } => return Some(features),
                 OpKind::ReLU => id = *self.predecessors(id).first()?,
                 OpKind::Output => return None,
@@ -280,7 +283,13 @@ impl Graph {
             let preds = self.predecessors(n.id);
             let arity_ok = match n.op {
                 OpKind::Input { .. } => preds.is_empty(),
-                OpKind::Dense { .. } | OpKind::ReLU | OpKind::Output => preds.len() == 1,
+                OpKind::Dense { .. }
+                | OpKind::Conv2D(_)
+                | OpKind::ReLU
+                | OpKind::Output
+                | OpKind::MaxPool2D(_)
+                | OpKind::AvgPool2D(_)
+                | OpKind::Transpose { .. } => preds.len() == 1,
                 OpKind::Add { .. } | OpKind::Concat { .. } => preds.len() >= 2,
             };
             if !arity_ok {
@@ -290,19 +299,24 @@ impl Graph {
                     found: preds.len(),
                 });
             }
-            match n.op {
-                OpKind::Dense { in_features, .. } => {
-                    if let Some(produced) = self.produced_features(preds[0]) {
-                        if produced != in_features {
-                            return Err(GraphError::ShapeMismatch {
-                                from: preds[0],
-                                to: n.id,
-                                produced,
-                                expected: in_features,
-                            });
-                        }
+            let expect_one = |expected: usize| -> Result<(), GraphError> {
+                if let Some(produced) = self.produced_features(preds[0]) {
+                    if produced != expected {
+                        return Err(GraphError::ShapeMismatch {
+                            from: preds[0],
+                            to: n.id,
+                            produced,
+                            expected,
+                        });
                     }
                 }
+                Ok(())
+            };
+            match n.op {
+                OpKind::Dense { in_features, .. } => expect_one(in_features)?,
+                OpKind::Conv2D(c) => expect_one(c.in_features())?,
+                OpKind::MaxPool2D(p) | OpKind::AvgPool2D(p) => expect_one(p.in_features())?,
+                OpKind::Transpose { rows, cols } => expect_one(rows * cols)?,
                 OpKind::Add { features } => {
                     for &p in &preds {
                         if let Some(produced) = self.produced_features(p) {
@@ -548,6 +562,84 @@ mod tests {
         g.connect(a, d);
         assert!(matches!(g.topo_order(), Err(GraphError::Cyclic)));
         assert!(matches!(g.dense_order(), Err(GraphError::Cyclic)));
+    }
+
+    #[test]
+    fn conv_pool_chain_shapes_validate() {
+        use crate::ir::node::{Conv2DAttrs, Padding, Pool2DAttrs};
+        // image 8x8x3 -> conv3x3 same (8 ch) -> maxpool 2x2/2 -> conv(valid)
+        // -> flatten dense. Shapes flow as flattened NHWC widths.
+        let conv1 = Conv2DAttrs {
+            in_h: 8,
+            in_w: 8,
+            in_c: 3,
+            out_c: 8,
+            kh: 3,
+            kw: 3,
+            stride_h: 1,
+            stride_w: 1,
+            padding: Padding::Same,
+            use_bias: true,
+            fused_relu: false,
+        };
+        let pool = Pool2DAttrs {
+            in_h: 8,
+            in_w: 8,
+            c: 8,
+            kh: 2,
+            kw: 2,
+            stride_h: 2,
+            stride_w: 2,
+            padding: Padding::Valid,
+        };
+        let conv2 = Conv2DAttrs {
+            in_h: 4,
+            in_w: 4,
+            in_c: 8,
+            out_c: 4,
+            kh: 3,
+            kw: 3,
+            stride_h: 1,
+            stride_w: 1,
+            padding: Padding::Valid,
+            use_bias: false,
+            fused_relu: false,
+        };
+        let mut g = Graph::new();
+        let i = g.add_node("in", OpKind::Input { features: 8 * 8 * 3 });
+        let c1 = g.add_node("c1", OpKind::Conv2D(conv1));
+        let p = g.add_node("p", OpKind::MaxPool2D(pool));
+        let c2 = g.add_node("c2", OpKind::Conv2D(conv2));
+        let d = g.add_node(
+            "fc",
+            OpKind::Dense {
+                in_features: 2 * 2 * 4,
+                out_features: 10,
+                use_bias: false,
+                fused_relu: false,
+            },
+        );
+        g.connect(i, c1);
+        g.connect(c1, p);
+        g.connect(p, c2);
+        g.connect(c2, d);
+        g.validate_shapes().unwrap();
+        assert_eq!(g.produced_features(c1), Some(8 * 8 * 8));
+        assert_eq!(g.produced_features(p), Some(4 * 4 * 8));
+        assert_eq!(g.produced_features(c2), Some(2 * 2 * 4));
+        // Pools are transparent to the dense walk (like merges): c1's
+        // nearest dense descendant is c2, through the pool.
+        assert_eq!(g.dense_descendants(c1), vec![c2]);
+        assert_eq!(g.dense_order().unwrap(), vec![c1, c2, d]);
+        // True conv MACs, not padded GEMM shapes.
+        assert_eq!(
+            g.macs_per_sample(),
+            conv1.macs() + conv2.macs() + 2 * 2 * 4 * 10
+        );
+        // A channel mismatch trips the edge check.
+        let mut bad = g.clone();
+        bad.nodes[c2].op = OpKind::Conv2D(Conv2DAttrs { in_c: 4, ..conv2 });
+        assert!(matches!(bad.validate_shapes(), Err(GraphError::ShapeMismatch { .. })));
     }
 
     #[test]

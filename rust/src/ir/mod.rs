@@ -11,6 +11,7 @@ pub mod quant;
 
 pub use graph::{residual_block, sequential_mlp, Edge, Graph, GraphError};
 pub use node::{
-    AieAttrs, CascadeGeometry, DenseQuant, Node, NodeId, OpKind, PlacementRect,
+    AieAttrs, CascadeGeometry, Conv2DAttrs, DenseQuant, Node, NodeId, OpKind, Padding,
+    PlacementRect, Pool2DAttrs,
 };
 pub use quant::{derive_shift, srs, srs_i32, QuantSpec};

@@ -11,6 +11,142 @@ use crate::arch::{Dtype, MmulTiling};
 
 pub type NodeId = usize;
 
+/// Spatial padding mode of a Conv2D / pooling window walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// Output spatial dims = ceil(in / stride); missing taps read as zero
+    /// (max/avg pooling ignores out-of-bounds taps instead).
+    Same,
+    /// No padding: output dims = (in - kernel) / stride + 1.
+    Valid,
+}
+
+impl Padding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Padding::Same => "same",
+            Padding::Valid => "valid",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Padding> {
+        match s {
+            "same" => Some(Padding::Same),
+            "valid" => Some(Padding::Valid),
+            _ => None,
+        }
+    }
+    fn out_dim(&self, input: usize, kernel: usize, stride: usize) -> usize {
+        match self {
+            Padding::Same => input.div_ceil(stride),
+            Padding::Valid => (input.saturating_sub(kernel)) / stride + 1,
+        }
+    }
+    /// Leading (top/left) pad for one spatial axis, TF/Keras 'same' split:
+    /// total = max((out-1)*stride + kernel - in, 0), leading = total / 2.
+    fn pad_lo(&self, input: usize, kernel: usize, stride: usize) -> usize {
+        match self {
+            Padding::Valid => 0,
+            Padding::Same => {
+                let out = self.out_dim(input, kernel, stride);
+                ((out - 1) * stride + kernel).saturating_sub(input) / 2
+            }
+        }
+    }
+}
+
+/// Shape/geometry of a Conv2D node: NHWC input `[batch, in_h, in_w, in_c]`,
+/// HWIO-flattened weights `[out_c][kh*kw*in_c]` (patch order = row-major
+/// over the window, channels innermost — exactly the order the implicit-GEMM
+/// patch walk streams the input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2DAttrs {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub padding: Padding,
+    pub use_bias: bool,
+    /// Populated by the Lowering pass when a following ReLU is fused.
+    pub fused_relu: bool,
+}
+
+impl Conv2DAttrs {
+    pub fn out_h(&self) -> usize {
+        self.padding.out_dim(self.in_h, self.kh, self.stride_h)
+    }
+    pub fn out_w(&self) -> usize {
+        self.padding.out_dim(self.in_w, self.kw, self.stride_w)
+    }
+    pub fn pad_top(&self) -> usize {
+        self.padding.pad_lo(self.in_h, self.kh, self.stride_h)
+    }
+    pub fn pad_left(&self) -> usize {
+        self.padding.pad_lo(self.in_w, self.kw, self.stride_w)
+    }
+    /// K of the lowered GEMM: one flattened patch.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.in_c
+    }
+    /// Per-sample GEMM row count (output pixels) — the implicit-GEMM M
+    /// multiplier on the batch dimension.
+    pub fn gemm_m(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+    /// Flattened input tensor width `in_h*in_w*in_c`.
+    pub fn in_features(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+    /// Flattened output tensor width `out_h*out_w*out_c`.
+    pub fn out_features(&self) -> usize {
+        self.gemm_m() * self.out_c
+    }
+    /// True MACs per sample: `OH·OW·KH·KW·C_in·C_out` — what the profiler
+    /// and parallelism targets must count, not the padded GEMM shape.
+    pub fn macs(&self) -> usize {
+        self.gemm_m() * self.patch_len() * self.out_c
+    }
+}
+
+/// Shape of a 2D pooling window walk over an NHWC tensor (channel count
+/// preserved). Out-of-bounds taps under 'same' padding are *excluded*:
+/// max pools over present elements, avg divides by the present count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2DAttrs {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub padding: Padding,
+}
+
+impl Pool2DAttrs {
+    pub fn out_h(&self) -> usize {
+        self.padding.out_dim(self.in_h, self.kh, self.stride_h)
+    }
+    pub fn out_w(&self) -> usize {
+        self.padding.out_dim(self.in_w, self.kw, self.stride_w)
+    }
+    pub fn pad_top(&self) -> usize {
+        self.padding.pad_lo(self.in_h, self.kh, self.stride_h)
+    }
+    pub fn pad_left(&self) -> usize {
+        self.padding.pad_lo(self.in_w, self.kw, self.stride_w)
+    }
+    pub fn in_features(&self) -> usize {
+        self.in_h * self.in_w * self.c
+    }
+    pub fn out_features(&self) -> usize {
+        self.out_h() * self.out_w() * self.c
+    }
+}
+
 /// Operation kind for a node.
 #[derive(Debug, Clone, PartialEq)]
 pub enum OpKind {
@@ -24,8 +160,25 @@ pub enum OpKind {
         /// Populated by the Lowering pass when a following ReLU is fused.
         fused_relu: bool,
     },
-    /// Standalone activation (fused into Dense by Lowering when possible).
+    /// 2D convolution over an NHWC image, lowered onto the dense kernel via
+    /// implicit GEMM: M = batch·OH·OW, K = KH·KW·C_in, N = C_out. The node
+    /// *is* dense to the whole back half of the pipeline (tiling, cascade,
+    /// packing, placement); the only conv-specific machinery is the
+    /// patch-walk read plan ([`crate::sim::dma::ConvPatchTiler`]) that
+    /// streams im2col rows straight out of the image buffer.
+    Conv2D(Conv2DAttrs),
+    /// Standalone activation (fused into Dense/Conv2D by Lowering).
     ReLU,
+    /// Max pooling: a windowed max over the NHWC image, executed as a
+    /// memory-tile stage (no compute tiles).
+    MaxPool2D(Pool2DAttrs),
+    /// Average pooling: windowed mean with round-half-toward-+inf (the SRS
+    /// rounding flavor) and a saturating store.
+    AvgPool2D(Pool2DAttrs),
+    /// Per-sample 2D transpose: `[rows, cols]` row-major → `[cols, rows]`.
+    /// The reshape/transpose step between an MLP-Mixer's token and channel
+    /// mixing halves, executed as a memory-tile stage.
+    Transpose { rows: usize, cols: usize },
     /// Residual fan-in: elementwise add of two or more activations of
     /// identical shape and quantization. The sum is taken in i32 (wrapping,
     /// like the hardware accumulator) and stored through an SRS with shift 0
@@ -39,18 +192,34 @@ pub enum OpKind {
 }
 
 impl OpKind {
+    /// Does this node run on compute tiles through the generalized dense
+    /// kernel? Conv2D qualifies: after lowering it is a GEMM with a
+    /// patch-walk read plan.
     pub fn is_dense(&self) -> bool {
-        matches!(self, OpKind::Dense { .. })
+        matches!(self, OpKind::Dense { .. } | OpKind::Conv2D(_))
     }
     /// Is this a multi-input merge node (residual Add / Concat)?
     pub fn is_merge(&self) -> bool {
         matches!(self, OpKind::Add { .. } | OpKind::Concat { .. })
     }
+    /// Does this node execute as a memory-tile stage (merge machinery):
+    /// merges plus the single-input pooling/transpose ops?
+    pub fn is_mem_stage(&self) -> bool {
+        self.is_merge()
+            || matches!(
+                self,
+                OpKind::MaxPool2D(_) | OpKind::AvgPool2D(_) | OpKind::Transpose { .. }
+            )
+    }
     pub fn name(&self) -> &'static str {
         match self {
             OpKind::Input { .. } => "input",
             OpKind::Dense { .. } => "dense",
+            OpKind::Conv2D(_) => "conv2d",
             OpKind::ReLU => "relu",
+            OpKind::MaxPool2D(_) => "maxpool2d",
+            OpKind::AvgPool2D(_) => "avgpool2d",
+            OpKind::Transpose { .. } => "transpose",
             OpKind::Add { .. } => "add",
             OpKind::Concat { .. } => "concat",
             OpKind::Output => "output",
@@ -190,25 +359,49 @@ impl Node {
         }
     }
 
-    /// (in_features, out_features) for Dense nodes.
+    /// GEMM dimensions (K, N) for dense-kernel nodes: `(in_features,
+    /// out_features)` for Dense, `(KH·KW·C_in, C_out)` for Conv2D — the
+    /// shape tiling, cascade geometry, packing and the kernels all see.
     pub fn dense_dims(&self) -> Option<(usize, usize)> {
         match self.op {
             OpKind::Dense { in_features, out_features, .. } => Some((in_features, out_features)),
+            OpKind::Conv2D(c) => Some((c.patch_len(), c.out_c)),
+            _ => None,
+        }
+    }
+
+    /// Per-sample multiplier on the GEMM row dimension: a Conv2D computes
+    /// `OH·OW` output rows per sample (implicit-GEMM M = batch · m_scale);
+    /// everything else maps one sample to one row.
+    pub fn m_scale(&self) -> usize {
+        match self.op {
+            OpKind::Conv2D(c) => c.gemm_m(),
+            _ => 1,
+        }
+    }
+
+    /// Conv geometry, when this node is a Conv2D.
+    pub fn conv_attrs(&self) -> Option<&Conv2DAttrs> {
+        match &self.op {
+            OpKind::Conv2D(c) => Some(c),
             _ => None,
         }
     }
 
     pub fn use_bias(&self) -> bool {
         matches!(self.op, OpKind::Dense { use_bias: true, .. })
+            || matches!(self.op, OpKind::Conv2D(Conv2DAttrs { use_bias: true, .. }))
     }
 
     pub fn fused_relu(&self) -> bool {
         matches!(self.op, OpKind::Dense { fused_relu: true, .. })
+            || matches!(self.op, OpKind::Conv2D(Conv2DAttrs { fused_relu: true, .. }))
     }
 
-    /// MACs for one sample through this node.
+    /// MACs for one sample through this node — a Conv2D counts its *true*
+    /// MACs (`OH·OW·KH·KW·C_in·C_out`), not the padded GEMM shape.
     pub fn macs_per_sample(&self) -> usize {
-        self.dense_dims().map(|(i, o)| i * o).unwrap_or(0)
+        self.dense_dims().map(|(i, o)| i * o * self.m_scale()).unwrap_or(0)
     }
 }
 
@@ -249,6 +442,63 @@ mod tests {
         assert_eq!(g.tiles(), 16);
         assert_eq!(g.f_in_padded(), 128);
         assert_eq!(g.f_out_padded(), 128);
+    }
+
+    #[test]
+    fn conv_shape_derivation() {
+        // 12x12x3, 3x3 kernel, stride 1, 'same': 12x12 out, pad 1.
+        let c = Conv2DAttrs {
+            in_h: 12,
+            in_w: 12,
+            in_c: 3,
+            out_c: 8,
+            kh: 3,
+            kw: 3,
+            stride_h: 1,
+            stride_w: 1,
+            padding: Padding::Same,
+            use_bias: true,
+            fused_relu: true,
+        };
+        assert_eq!((c.out_h(), c.out_w()), (12, 12));
+        assert_eq!((c.pad_top(), c.pad_left()), (1, 1));
+        assert_eq!(c.patch_len(), 27);
+        assert_eq!(c.gemm_m(), 144);
+        assert_eq!(c.macs(), 144 * 27 * 8);
+        // 'valid', stride 2: floor((12-3)/2)+1 = 5.
+        let v = Conv2DAttrs { padding: Padding::Valid, stride_h: 2, stride_w: 2, ..c };
+        assert_eq!((v.out_h(), v.out_w()), (5, 5));
+        assert_eq!((v.pad_top(), v.pad_left()), (0, 0));
+        // The node views it as a (K, N) dense kernel with an M multiplier.
+        let n = Node::new(0, "conv", OpKind::Conv2D(c));
+        assert_eq!(n.dense_dims(), Some((27, 8)));
+        assert_eq!(n.m_scale(), 144);
+        assert_eq!(n.macs_per_sample(), c.macs());
+        assert!(n.use_bias() && n.fused_relu());
+        assert!(n.op.is_dense());
+        assert!(!n.op.is_mem_stage());
+    }
+
+    #[test]
+    fn pool_shape_derivation() {
+        let p = Pool2DAttrs {
+            in_h: 12,
+            in_w: 12,
+            c: 8,
+            kh: 2,
+            kw: 2,
+            stride_h: 2,
+            stride_w: 2,
+            padding: Padding::Valid,
+        };
+        assert_eq!((p.out_h(), p.out_w()), (6, 6));
+        assert_eq!(p.out_features(), 6 * 6 * 8);
+        // 'same' on an odd dim: ceil(13/2) = 7, pad split leading = 0.
+        let q = Pool2DAttrs { in_h: 13, padding: Padding::Same, ..p };
+        assert_eq!(q.out_h(), 7);
+        assert!(OpKind::MaxPool2D(p).is_mem_stage());
+        assert!(!OpKind::MaxPool2D(p).is_merge());
+        assert!(OpKind::Transpose { rows: 4, cols: 8 }.is_mem_stage());
     }
 
     #[test]

@@ -210,8 +210,10 @@ pub fn tile_utilization(fw: &Firmware, model: &EngineModel) -> TileUtilReport {
                 let layer = &fw.layers[li];
                 let geo = layer.cascade;
                 let q = layer.quant;
+                // A lowered conv runs `batch × m_scale` GEMM rows per batch.
+                let rows = layer.gemm_rows(batch);
                 let (chunk, _) =
-                    batch_chunk(device, &layer.tiling, &q, geo.f_in_slice, geo.f_out_slice, batch)
+                    batch_chunk(device, &layer.tiling, &q, geo.f_in_slice, geo.f_out_slice, rows)
                         .expect("emission validated local memory");
                 let tail = KernelWorkload {
                     batch: chunk,
@@ -224,7 +226,7 @@ pub fn tile_utilization(fw: &Firmware, model: &EngineModel) -> TileUtilReport {
                 };
                 let head = KernelWorkload { is_tail: false, ..tail };
                 let tail_busy = batch_cycles(
-                    batch,
+                    rows,
                     chunk,
                     &tail,
                     &model.kernel,
@@ -232,7 +234,7 @@ pub fn tile_utilization(fw: &Firmware, model: &EngineModel) -> TileUtilReport {
                     device.load_port_bytes,
                 );
                 let head_busy = batch_cycles(
-                    batch,
+                    rows,
                     chunk,
                     &head,
                     &model.kernel,
@@ -241,9 +243,16 @@ pub fn tile_utilization(fw: &Firmware, model: &EngineModel) -> TileUtilReport {
                 );
                 let busy_fraction = (tail_busy / interval).min(1.0);
                 let mpc = macs_per_cycle(device.generation, layer.tiling.pair).unwrap_or(0) as f64;
-                let slice_macs = (batch * geo.f_in_slice * geo.f_out_slice) as f64;
+                // Padded per-tile GEMM slice — the work the kernel actually
+                // streams, used to busy-weight the scaling aggregate.
+                let slice_macs = (rows * geo.f_in_slice * geo.f_out_slice) as f64;
+                // Peak fraction counts the layer's *true* MACs — for a
+                // lowered conv that is OH·OW·KH·KW·C_in·C_out per sample,
+                // never the padded GEMM shape's inflated figure.
+                let true_macs =
+                    (batch * layer.macs_per_sample()) as f64 / layer.tiles().max(1) as f64;
                 let peak_fraction =
-                    if mpc > 0.0 { (slice_macs / (mpc * interval)).min(1.0) } else { 0.0 };
+                    if mpc > 0.0 { (true_macs / (mpc * interval)).min(1.0) } else { 0.0 };
                 let scaling_efficiency =
                     if tail_busy > 0.0 { (tail_busy / interval).min(1.0) } else { 0.0 };
                 if tail_busy > 0.0 {
@@ -251,11 +260,12 @@ pub fn tile_utilization(fw: &Firmware, model: &EngineModel) -> TileUtilReport {
                     w_over_interval += w / interval;
                     w_over_tail += w / tail_busy;
                 }
-                // Every cascade column streams its own input slice; each
-                // cascade-row tail stores its output slice.
+                // Every cascade column streams its own input slice (for a
+                // conv: the patch walk's rows×K traffic); each cascade-row
+                // tail stores its output slice.
                 let dma_in_bytes =
-                    (batch * geo.f_in_slice * q.input.dtype.bytes() * geo.cas_len) as f64;
-                let dma_out_bytes = (batch * layer.out_features * q.output.dtype.bytes()) as f64;
+                    (rows * geo.f_in_slice * q.input.dtype.bytes() * geo.cas_len) as f64;
+                let dma_out_bytes = (rows * layer.out_features * q.output.dtype.bytes()) as f64;
                 // Paint the placement rect: tails sit on the east column of
                 // each cascade row (the cascade flows west→east).
                 let rect = layer.placement;
@@ -286,10 +296,20 @@ pub fn tile_utilization(fw: &Firmware, model: &EngineModel) -> TileUtilReport {
                 let (dma_in_bytes, dma_out_bytes) = if m.plan.offset_tiled() {
                     (0.0, 0.0)
                 } else {
-                    let out = (batch * m.features * m.quant.dtype.bytes()) as f64;
+                    let bytes = m.quant.dtype.bytes();
+                    let out = (batch * m.features * bytes) as f64;
                     let inb = match m.op {
                         MergeOp::Add => out * m.plan.write_tilers.len() as f64,
                         MergeOp::Concat => out,
+                        // Pooling lands the image then re-reads the window
+                        // walk's taps; transpose lands and re-reads once.
+                        MergeOp::MaxPool2D(p) | MergeOp::AvgPool2D(p) => {
+                            let image = (batch * p.in_features() * bytes) as f64;
+                            let walk =
+                                (batch * p.out_h() * p.out_w() * p.kh * p.kw * p.c * bytes) as f64;
+                            image + walk
+                        }
+                        MergeOp::Transpose { .. } => out * 2.0,
                     };
                     (inb, out)
                 };

@@ -50,7 +50,8 @@ pub struct CutCandidate {
 /// Enumerate every legal cut position. A position `after` qualifies when:
 /// exactly one layer-produced tensor is consumed across it, the raw
 /// network input is not read beyond it, and the first downstream layer is
-/// dense (it becomes the downstream partition's input-consuming layer).
+/// dense or conv2d (it becomes the downstream partition's input-consuming
+/// layer).
 /// Liveness is computed over [`JsonModel::effective_inputs`] — the same
 /// wiring rule `to_graph` connects, so a legal cut here is a legal cut in
 /// the compiled graph.
@@ -75,8 +76,10 @@ pub fn cut_candidates(json: &JsonModel) -> Vec<CutCandidate> {
         if input_crosses || crossing.len() != 1 {
             continue;
         }
-        if json.layers[after + 1].ty != "dense" {
-            continue; // the downstream partition's first layer must be dense
+        if !matches!(json.layers[after + 1].ty.as_str(), "dense" | "conv2d") {
+            // The downstream partition's first layer must consume the link
+            // as its network input: dense or conv2d.
+            continue;
         }
         out.push(CutCandidate {
             after,
@@ -86,17 +89,16 @@ pub fn cut_candidates(json: &JsonModel) -> Vec<CutCandidate> {
     out
 }
 
-/// MACs per layer (merge layers are free), the per-partition weight the
-/// MAC balance objective sums.
+/// MACs per layer (merge/pool/transpose layers are free), the
+/// per-partition weight the MAC balance objective sums. Conv layers count
+/// their *true* MACs (`OH·OW·KH·KW·C_in·C_out`), not the padded GEMM.
 fn layer_macs(json: &JsonModel) -> Vec<u64> {
     json.layers
         .iter()
-        .map(|l| {
-            if l.ty == "dense" {
-                (l.in_features * l.out_features) as u64
-            } else {
-                0
-            }
+        .map(|l| match l.ty.as_str() {
+            "dense" => (l.in_features * l.out_features) as u64,
+            "conv2d" => l.conv_attrs().map(|c| c.macs() as u64).unwrap_or(0),
+            _ => 0,
         })
         .collect()
 }

@@ -371,7 +371,8 @@ fn split_model(
 /// The offset tiler landing an inter-partition link directly in `down`'s
 /// {M, K} read-tile input buffer: available when exactly one dense layer
 /// reads the downstream network input (its tiling defines the read blocks).
-/// Several readers — or a merge reading the raw input — keep the legacy
+/// Several readers — a merge reading the raw input, or a conv layer (whose
+/// patch walk needs the row-major image, not GEMM tiles) — keep the legacy
 /// row-major landing (`None`).
 pub(crate) fn link_landing_tiler(down: &Firmware) -> Option<OffsetTiler> {
     let mut fed: Option<usize> = None;
@@ -384,6 +385,9 @@ pub(crate) fn link_landing_tiler(down: &Firmware) -> Option<OffsetTiler> {
         }
     }
     let l = &down.layers[fed?];
+    if l.input_plan.patch.is_some() {
+        return None;
+    }
     Some(OffsetTiler::new(0, down.in_features, l.tiling.m, l.tiling.k))
 }
 

@@ -83,13 +83,15 @@ impl Pass for Emission {
             let rect = node.attrs.placement.context("placement: rect")?;
             let q = node.attrs.quant.context("quantize: quant")?;
 
+            // The unit of kernel work is a GEMM row: a lowered conv chunks
+            // its `batch · OH·OW` patch rows, not the sample batch.
             let (_, local_mem_bytes) = batch_chunk(
                 &model.device,
                 &tiling,
                 &q,
                 geo.f_in_slice,
                 geo.f_out_slice,
-                model.config.batch,
+                model.config.batch * node.m_scale(),
             )
             .with_context(|| format!("layer '{name}': local memory budget"))?;
 
@@ -128,6 +130,7 @@ impl Pass for Emission {
                 node_id: id,
                 in_features: f_in,
                 out_features: f_out,
+                m_scale: node.m_scale(),
                 use_bias: node.use_bias(),
                 relu: node.fused_relu(),
                 quant: q,
@@ -152,14 +155,15 @@ impl Pass for Emission {
         for &id in &topo {
             let node = model.graph.node(id)?;
             match node.op {
-                OpKind::Dense { .. } => {
+                ref op if op.is_dense() => {
                     let preds = model.graph.predecessors(id);
                     ensure!(preds.len() == 1, "layer '{}' must have one input", node.name);
                     let src = stage_source(&model.graph, preds[0], &stage_of)?;
                     stages.push(FirmwareStage { op: StageRef::Layer(layer_idx[&id]), inputs: vec![src] });
                     stage_of.insert(id, stages.len() - 1);
                 }
-                OpKind::Add { features } | OpKind::Concat { features } => {
+                ref op if op.is_mem_stage() => {
+                    let features = model.graph.produced_features(id)?;
                     let mut plan = program
                         .merge_plans
                         .get(&id)
@@ -197,10 +201,13 @@ impl Pass for Emission {
                     merges.push(MergeStage {
                         name: node.name.clone(),
                         node_id: id,
-                        op: if matches!(node.op, OpKind::Add { .. }) {
-                            MergeOp::Add
-                        } else {
-                            MergeOp::Concat
+                        op: match node.op {
+                            OpKind::Add { .. } => MergeOp::Add,
+                            OpKind::Concat { .. } => MergeOp::Concat,
+                            OpKind::MaxPool2D(p) => MergeOp::MaxPool2D(p),
+                            OpKind::AvgPool2D(p) => MergeOp::AvgPool2D(p),
+                            OpKind::Transpose { rows, cols } => MergeOp::Transpose { rows, cols },
+                            _ => unreachable!("is_mem_stage covers exactly these ops"),
                         },
                         features,
                         quant: plan.quant,

@@ -20,7 +20,7 @@ use super::{Model, Pass};
 use crate::arch::Dtype;
 use crate::codegen::firmware::{MemTilePlan, MergePlan};
 use crate::ir::{NodeId, OpKind, QuantSpec};
-use crate::sim::dma::{OffsetTiler, Tiler2d};
+use crate::sim::dma::{ConvPatchTiler, OffsetTiler, Tiler2d};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -53,8 +53,8 @@ pub(crate) fn output_producer_ids(model: &Model) -> Result<Vec<NodeId>> {
             .iter()
             .find(|n| n.name == *name)
             .with_context(|| format!("extra output '{name}' names no layer"))?;
-        if !(node.op.is_dense() || node.op.is_merge()) {
-            bail!("extra output '{name}' is not a dense or merge layer");
+        if !(node.op.is_dense() || node.op.is_mem_stage()) {
+            bail!("extra output '{name}' is not a dense or memory-tile stage layer");
         }
         ids.push(node.id);
     }
@@ -86,7 +86,10 @@ fn concat_offset_tilers(model: &Model, id: NodeId, preds: &[NodeId]) -> Option<V
     let mut tilers = Vec::with_capacity(preds.len() * succs.len());
     for &s in &succs {
         let consumer = model.graph.node(s).ok()?;
-        if !consumer.op.is_dense() {
+        // Conv2D consumers are excluded even though they are dense kernels:
+        // their patch walk reads a row-major *image*, which offset-landed
+        // {M, K} tiles never materialize.
+        if !matches!(consumer.op, OpKind::Dense { .. }) {
             return None;
         }
         let ct = consumer.attrs.tiling?;
@@ -130,7 +133,12 @@ fn producer_side(
             // Network input: row-major, modeled as 1-row tiles.
             Ok((Tiler2d::new(batch, features, 1, row_tile_cols.max(1)), input_spec))
         }
-        OpKind::Dense { out_features, .. } => {
+        // Dense kernels (Dense and lowered Conv2D) write {M, N} store tiles;
+        // a conv's flat `(batch·OH·OW) × C_out` GEMM output *is* its NHWC
+        // output image, so the landed buffer doubles as the next conv's
+        // image with no reshaping.
+        ref op if op.is_dense() => {
+            let (_, n) = pn.dense_dims().unwrap();
             let pt = pn
                 .attrs
                 .tiling
@@ -139,14 +147,16 @@ fn producer_side(
                 .attrs
                 .quant
                 .with_context(|| format!("producer '{}' has no quant", pn.name))?;
-            Ok((Tiler2d::new(batch, out_features, pt.m, pt.n), Some(pq.output)))
+            Ok((Tiler2d::new(batch * pn.m_scale(), n, pt.m, pt.n), Some(pq.output)))
         }
-        OpKind::Add { features } | OpKind::Concat { features } => {
+        // Memory-tile stages (merges, pools, transpose) expose a row-major
+        // output buffer.
+        ref op if op.is_mem_stage() => {
+            let features = model.graph.produced_features(producer)?;
             let spec = merge_specs
                 .get(&producer)
                 .copied()
-                .with_context(|| format!("merge producer '{}' not yet planned", pn.name))?;
-            // Merge buffers are row-major.
+                .with_context(|| format!("stage producer '{}' not yet planned", pn.name))?;
             Ok((Tiler2d::new(batch, features, 1, row_tile_cols.max(1)), Some(spec)))
         }
         _ => bail!("node '{}' cannot produce activations", pn.name),
@@ -171,9 +181,11 @@ impl Pass for GraphPlanning {
         for &id in &topo {
             let node = model.graph.node(id)?;
             match node.op {
-                OpKind::Dense { .. } => {
+                ref op if op.is_dense() => {
                     let name = node.name.clone();
                     let (f_in, _) = node.dense_dims().unwrap();
+                    let conv = node.conv_attrs().copied();
+                    let rows = batch * node.m_scale();
                     let tiling = node.attrs.tiling.with_context(|| format!("{name}: no tiling"))?;
                     let geo = node.attrs.cascade.with_context(|| format!("{name}: no cascade"))?;
                     let q = node.attrs.quant.unwrap();
@@ -194,15 +206,40 @@ impl Pass for GraphPlanning {
                         }
                     }
                     // Consumer side: read {M, K} tiles over the *padded*
-                    // input extent (zero padding injected by the mem-tile DMA).
-                    let read_tiler = Tiler2d::new(batch, geo.f_in_padded(), tiling.m, tiling.k);
-                    let buffer_bytes = batch * f_in * q.input.dtype.bytes();
+                    // input extent (zero padding injected by the mem-tile
+                    // DMA). A conv reads the logical patch matrix — rows
+                    // multiply by OH·OW — but the walk synthesizes it from
+                    // the stored image, so the buffer stays image-sized.
+                    let read_tiler = Tiler2d::new(rows, geo.f_in_padded(), tiling.m, tiling.k);
+                    let (patch, buffer_bytes) = match conv {
+                        Some(c) => (
+                            Some(ConvPatchTiler {
+                                in_h: c.in_h,
+                                in_w: c.in_w,
+                                in_c: c.in_c,
+                                kh: c.kh,
+                                kw: c.kw,
+                                stride_h: c.stride_h,
+                                stride_w: c.stride_w,
+                                pad_top: c.pad_top(),
+                                pad_left: c.pad_left(),
+                                out_h: c.out_h(),
+                                out_w: c.out_w(),
+                                tile_m: tiling.m,
+                                tile_k: tiling.k,
+                                staged: false,
+                            }),
+                            batch * c.in_features() * q.input.dtype.bytes(),
+                        ),
+                        None => (None, batch * f_in * q.input.dtype.bytes()),
+                    };
                     program.input_plans.insert(
                         id,
                         MemTilePlan {
                             mem_col: 0, // finalized by Emission after Placement
                             write_tiler,
                             read_tiler,
+                            patch,
                             buffer_bytes,
                             ping_pong: true,
                             dtype: q.input.dtype,
@@ -210,12 +247,20 @@ impl Pass for GraphPlanning {
                         },
                     );
                 }
-                OpKind::Add { features } | OpKind::Concat { features } => {
+                ref op if op.is_mem_stage() => {
                     let name = node.name.clone();
+                    let is_merge = op.is_merge();
                     let is_add = matches!(node.op, OpKind::Add { .. });
+                    let features = model.graph.produced_features(id)?;
                     let preds = model.graph.predecessors(id);
-                    if preds.len() < 2 {
+                    if is_merge && preds.len() < 2 {
                         bail!("merge '{name}' has {} inputs; merges take at least two", preds.len());
+                    }
+                    if !is_merge && preds.len() != 1 {
+                        bail!(
+                            "stage '{name}' has {} inputs; pooling/transpose take one",
+                            preds.len()
+                        );
                     }
                     let mut spec: Option<QuantSpec> = None;
                     let mut write_tilers = Vec::with_capacity(preds.len());
@@ -252,11 +297,20 @@ impl Pass for GraphPlanning {
                     // branch at a feature offset of every consumer's
                     // read-tile buffer instead of staging row-major; Add
                     // always stages (the merge buffer is where the
-                    // accumulation happens).
-                    let offset_tilers = if is_add {
-                        Vec::new()
-                    } else {
+                    // accumulation happens), and so do the windowed stages.
+                    let offset_tilers = if matches!(node.op, OpKind::Concat { .. }) {
                         concat_offset_tilers(model, id, &preds).unwrap_or_default()
+                    } else {
+                        Vec::new()
+                    };
+                    // Merges and transpose work in one `features`-wide
+                    // buffer (transpose is a pure strided re-read); pooling
+                    // holds the landed image *and* the pooled output.
+                    let buffer_width = match node.op {
+                        OpKind::MaxPool2D(p) | OpKind::AvgPool2D(p) => {
+                            p.in_features() + p.out_features()
+                        }
+                        _ => features,
                     };
                     program.merge_plans.insert(
                         id,
@@ -265,7 +319,7 @@ impl Pass for GraphPlanning {
                             write_tilers,
                             offset_tilers,
                             features,
-                            buffer_bytes: batch * features * spec.dtype.bytes(),
+                            buffer_bytes: batch * buffer_width * spec.dtype.bytes(),
                             ping_pong: true,
                             quant: spec,
                             columns: 1,
@@ -282,27 +336,31 @@ impl Pass for GraphPlanning {
         for sink in output_producer_ids(model)? {
             let sink_node = model.graph.node(sink)?;
             let output_plan = match sink_node.op {
-                OpKind::Dense { .. } => {
+                ref op if op.is_dense() => {
                     let lt = sink_node.attrs.tiling.unwrap();
                     let lq = sink_node.attrs.quant.unwrap();
                     let (_, f_out) = sink_node.dense_dims().unwrap();
+                    let rows = batch * sink_node.m_scale();
                     let last_geo = sink_node.attrs.cascade.unwrap();
                     MemTilePlan {
                         mem_col: 0,
-                        write_tiler: Tiler2d::new(batch, f_out, lt.m, lt.n),
-                        read_tiler: Tiler2d::new(batch, f_out, 1, f_out.max(1)),
-                        buffer_bytes: batch * f_out * lq.output.dtype.bytes(),
+                        write_tiler: Tiler2d::new(rows, f_out, lt.m, lt.n),
+                        read_tiler: Tiler2d::new(rows, f_out, 1, f_out.max(1)),
+                        patch: None,
+                        buffer_bytes: rows * f_out * lq.output.dtype.bytes(),
                         ping_pong: true,
                         dtype: lq.output.dtype,
                         columns: last_geo.cas_num.max(1),
                     }
                 }
-                OpKind::Add { features } | OpKind::Concat { features } => {
+                ref op if op.is_mem_stage() => {
+                    let features = model.graph.produced_features(sink)?;
                     let spec = merge_specs[&sink];
                     MemTilePlan {
                         mem_col: 0,
                         write_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
                         read_tiler: Tiler2d::new(batch, features, 1, features.max(1)),
+                        patch: None,
                         buffer_bytes: batch * features * spec.dtype.bytes(),
                         ping_pong: true,
                         dtype: spec.dtype,

@@ -2,11 +2,24 @@
 //!
 //! The frontend graph may contain standalone `ReLU` nodes following dense
 //! layers; the AIE kernel applies activation in its epilogue for free, so
-//! Dense+ReLU is fused here (paper §IV-A step 1). The pass also validates
-//! shapes and rejects operator patterns the backend cannot map.
+//! Dense+ReLU is fused here (paper §IV-A step 1) — the same fusion applies
+//! to `Conv2D`, whose lowered GEMM runs through the identical kernel
+//! epilogue. The pass also validates shapes, checks conv/pool window
+//! geometry, and rejects operator patterns the backend cannot map.
+//!
+//! **Implicit-GEMM conv lowering.** A `Conv2D` is *not* rewritten into a
+//! different node: lowering validates its geometry and the node then flows
+//! through tiling/quantization/packing/placement as a dense kernel with
+//! `dense_dims = (KH·KW·C_in, C_out)` and `m_scale = OH·OW` GEMM rows per
+//! sample. The im2col patch matrix never materializes — graph planning
+//! attaches a [`crate::sim::dma::ConvPatchTiler`] read plan to the conv's
+//! input buffer so the memory-tile DMA streams patch rows straight out of
+//! the image, zero-filling 'same'-padding taps in flight. Pooling and
+//! transpose nodes lower to memory-tile stages (the merge machinery),
+//! occupying no compute tiles.
 
 use super::{Model, Pass};
-use crate::ir::{Graph, OpKind};
+use crate::ir::{Conv2DAttrs, Graph, OpKind, Pool2DAttrs};
 use anyhow::{bail, Result};
 
 pub struct Lowering;
@@ -17,6 +30,20 @@ impl Pass for Lowering {
     }
 
     fn run(&self, model: &mut Model) -> Result<()> {
+        // Window geometry first: shape validation derives output dims from
+        // it, so degenerate strides/kernels must be rejected up front.
+        for n in &model.graph.nodes {
+            match &n.op {
+                OpKind::Conv2D(c) => check_conv_geometry(&n.name, c)?,
+                OpKind::MaxPool2D(p) | OpKind::AvgPool2D(p) => check_pool_geometry(&n.name, p)?,
+                OpKind::Transpose { rows, cols } => {
+                    if *rows == 0 || *cols == 0 {
+                        bail!("node '{}': degenerate transpose shape {}x{}", n.name, rows, cols);
+                    }
+                }
+                _ => {}
+            }
+        }
         model.graph.validate_shapes()?;
         model.graph = fuse_dense_relu(&model.graph)?;
         // Every remaining node must be mappable.
@@ -24,6 +51,10 @@ impl Pass for Lowering {
             match n.op {
                 OpKind::Input { .. }
                 | OpKind::Dense { .. }
+                | OpKind::Conv2D(_)
+                | OpKind::MaxPool2D(_)
+                | OpKind::AvgPool2D(_)
+                | OpKind::Transpose { .. }
                 | OpKind::Add { .. }
                 | OpKind::Concat { .. }
                 | OpKind::Output => {}
@@ -41,6 +72,44 @@ impl Pass for Lowering {
         }
         Ok(())
     }
+}
+
+fn check_conv_geometry(name: &str, c: &Conv2DAttrs) -> Result<()> {
+    if c.kh == 0 || c.kw == 0 || c.stride_h == 0 || c.stride_w == 0 {
+        bail!("conv layer '{name}': degenerate kernel/stride");
+    }
+    if c.in_h == 0 || c.in_w == 0 || c.in_c == 0 || c.out_c == 0 {
+        bail!("conv layer '{name}': degenerate tensor shape");
+    }
+    if matches!(c.padding, crate::ir::Padding::Valid) && (c.kh > c.in_h || c.kw > c.in_w) {
+        bail!(
+            "conv layer '{name}': {}x{} kernel exceeds {}x{} input under 'valid' padding",
+            c.kh,
+            c.kw,
+            c.in_h,
+            c.in_w
+        );
+    }
+    Ok(())
+}
+
+fn check_pool_geometry(name: &str, p: &Pool2DAttrs) -> Result<()> {
+    if p.kh == 0 || p.kw == 0 || p.stride_h == 0 || p.stride_w == 0 {
+        bail!("pool layer '{name}': degenerate kernel/stride");
+    }
+    if p.in_h == 0 || p.in_w == 0 || p.c == 0 {
+        bail!("pool layer '{name}': degenerate tensor shape");
+    }
+    if matches!(p.padding, crate::ir::Padding::Valid) && (p.kh > p.in_h || p.kw > p.in_w) {
+        bail!(
+            "pool layer '{name}': {}x{} window exceeds {}x{} input under 'valid' padding",
+            p.kh,
+            p.kw,
+            p.in_h,
+            p.in_w
+        );
+    }
+    Ok(())
 }
 
 /// Rebuild the graph with every `Dense -> ReLU` pair fused into a single
@@ -70,10 +139,12 @@ pub fn fuse_dense_relu(graph: &Graph) -> Result<Graph> {
         }
         let n = &graph.nodes[id];
         let mut op = n.op.clone();
-        if let OpKind::Dense { fused_relu, .. } = &mut op {
-            // Did any ReLU fuse into this dense node?
-            if fused_into.iter().any(|f| *f == Some(id)) {
-                *fused_relu = true;
+        // Did any ReLU fuse into this dense-kernel node?
+        if fused_into.iter().any(|f| *f == Some(id)) {
+            match &mut op {
+                OpKind::Dense { fused_relu, .. } => *fused_relu = true,
+                OpKind::Conv2D(c) => c.fused_relu = true,
+                _ => {}
             }
         }
         let new_id = out.add_node(n.name.clone(), op);

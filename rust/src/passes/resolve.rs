@@ -62,6 +62,9 @@ impl Pass for Resolve {
             let node = model.graph.node_mut(id)?;
             let name = node.name.clone();
             let (f_in, f_out) = node.dense_dims().unwrap();
+            // Feasibility is checked against GEMM rows: a lowered conv
+            // streams `batch · OH·OW` patch rows through the cascade.
+            let batch = batch * node.m_scale();
             let tiling = node.attrs.tiling.unwrap();
             let q = node.attrs.quant.unwrap();
             let user = model.config.layer(&name).cascade;

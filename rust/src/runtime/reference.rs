@@ -18,7 +18,7 @@
 
 use crate::arch::{Dtype, PrecisionPair};
 use crate::frontend::JsonModel;
-use crate::ir::{derive_shift, srs_i32, QuantSpec};
+use crate::ir::{derive_shift, srs, srs_i32, Conv2DAttrs, Pool2DAttrs, QuantSpec};
 use crate::sim::functional::{reference_dense, Activation};
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
@@ -45,8 +45,29 @@ struct RefDense {
     relu: bool,
 }
 
+/// A Conv2D layer in logical form, executed as a naive direct NHWC
+/// convolution — deliberately *not* the implicit-GEMM patch walk the
+/// firmware path uses, so the two implementations stay independent.
+struct RefConv {
+    attrs: Conv2DAttrs,
+    /// HWIO-flattened `[out_c][kh*kw*in_c]`, exactly as exported.
+    weights: Vec<i32>,
+    bias: Option<Vec<i64>>,
+    acc_dtype: Dtype,
+    shift: u32,
+    relu: bool,
+}
+
 enum RefOp {
     Dense(RefDense),
+    /// Naive direct 2D convolution (no im2col, no tilers).
+    Conv2D(RefConv),
+    /// Windowed max over present (in-bounds) taps.
+    MaxPool2D(Pool2DAttrs),
+    /// Windowed mean over present taps, round-half-toward-+inf, saturate.
+    AvgPool2D(Pool2DAttrs),
+    /// Per-sample 2D transpose of a `[rows, cols]` row-major tensor.
+    Transpose { rows: usize, cols: usize },
     /// Residual add: wrapping i32 sum, SRS(0) saturating store.
     Add,
     /// Feature concatenation in input order.
@@ -127,7 +148,27 @@ impl ReferenceOracle {
                         output,
                     }
                 }
-                "add" | "concat" => {
+                "conv2d" => {
+                    let input = l.quant.input.to_spec(&l.name)?;
+                    let weight = l.quant.weight.to_spec(&l.name)?;
+                    let output = l.quant.output.to_spec(&l.name)?;
+                    let pair = PrecisionPair::new(input.dtype, weight.dtype);
+                    RefNode {
+                        name: l.name.clone(),
+                        op: RefOp::Conv2D(RefConv {
+                            attrs: l.conv_attrs()?,
+                            weights: l.weights.clone(),
+                            bias: if l.use_bias { Some(l.bias.clone()) } else { None },
+                            acc_dtype: pair.acc_dtype(),
+                            shift: derive_shift(input.frac_bits, weight.frac_bits, output.frac_bits),
+                            relu: l.relu,
+                        }),
+                        inputs,
+                        out_features: l.out_features,
+                        output,
+                    }
+                }
+                "add" | "concat" | "maxpool2d" | "avgpool2d" | "transpose" => {
                     // The merge's store spec comes from its producers (the
                     // raw network input contributes the model input spec).
                     let mut spec: Option<QuantSpec> = None;
@@ -151,13 +192,17 @@ impl ReferenceOracle {
                         }
                     }
                     let output = spec.context("reference oracle: merge has no inputs")?;
-                    RefNode {
-                        name: l.name.clone(),
-                        op: if l.ty == "add" { RefOp::Add } else { RefOp::Concat },
-                        inputs,
-                        out_features: l.out_features,
-                        output,
-                    }
+                    let op = match l.ty.as_str() {
+                        "add" => RefOp::Add,
+                        "concat" => RefOp::Concat,
+                        "maxpool2d" => RefOp::MaxPool2D(l.pool_attrs()?),
+                        "avgpool2d" => RefOp::AvgPool2D(l.pool_attrs()?),
+                        _ => {
+                            let c = l.conv_attrs()?;
+                            RefOp::Transpose { rows: c.in_h, cols: c.in_w }
+                        }
+                    };
+                    RefNode { name: l.name.clone(), op, inputs, out_features: l.out_features, output }
                 }
                 other => bail!("reference oracle: unsupported layer type '{other}'"),
             };
@@ -270,6 +315,147 @@ impl ReferenceOracle {
                         d.acc_dtype,
                         d.relu,
                     )
+                }
+                RefOp::Conv2D(c) => {
+                    let a = ins[0];
+                    let at = &c.attrs;
+                    ensure!(
+                        a.features == at.in_features(),
+                        "reference oracle: conv '{}' expects {} features, got {}",
+                        n.name,
+                        at.in_features(),
+                        a.features
+                    );
+                    ensure!(
+                        n.out_features == at.out_features(),
+                        "reference oracle: conv '{}' output shape mismatch",
+                        n.name
+                    );
+                    let (oh, ow) = (at.out_h(), at.out_w());
+                    let (pt, pl) = (at.pad_top() as isize, at.pad_left() as isize);
+                    let mut data = vec![0i32; a.batch * n.out_features];
+                    for b in 0..a.batch {
+                        let img = a.row(b);
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for oc in 0..at.out_c {
+                                    let w = &c.weights
+                                        [oc * at.patch_len()..(oc + 1) * at.patch_len()];
+                                    let mut acc: i64 = 0;
+                                    for ky in 0..at.kh {
+                                        let iy = (oy * at.stride_h + ky) as isize - pt;
+                                        if iy < 0 || iy >= at.in_h as isize {
+                                            continue; // zero-padded tap
+                                        }
+                                        for kx in 0..at.kw {
+                                            let ix = (ox * at.stride_w + kx) as isize - pl;
+                                            if ix < 0 || ix >= at.in_w as isize {
+                                                continue;
+                                            }
+                                            let px = (iy as usize * at.in_w + ix as usize)
+                                                * at.in_c;
+                                            for ic in 0..at.in_c {
+                                                acc += img[px + ic] as i64
+                                                    * w[(ky * at.kw + kx) * at.in_c + ic] as i64;
+                                            }
+                                        }
+                                    }
+                                    if let Some(bias) = &c.bias {
+                                        acc += bias[oc];
+                                    }
+                                    // Same store semantics as reference_dense:
+                                    // 32-bit accumulators wrap, i64 stays exact.
+                                    let mut y = if c.acc_dtype != Dtype::I64 {
+                                        srs_i32(acc as i32, c.shift, n.output.dtype) as i64
+                                    } else {
+                                        srs(acc, c.shift, n.output.dtype)
+                                    };
+                                    if c.relu {
+                                        y = y.max(0);
+                                    }
+                                    data[b * n.out_features + (oy * ow + ox) * at.out_c + oc] =
+                                        y as i32;
+                                }
+                            }
+                        }
+                    }
+                    Activation { batch: a.batch, features: n.out_features, data }
+                }
+                RefOp::MaxPool2D(p) | RefOp::AvgPool2D(p) => {
+                    let is_max = matches!(&n.op, RefOp::MaxPool2D(_));
+                    let a = ins[0];
+                    ensure!(
+                        a.features == p.in_features() && n.out_features == p.out_features(),
+                        "reference oracle: pool '{}' shape mismatch",
+                        n.name
+                    );
+                    let (oh, ow) = (p.out_h(), p.out_w());
+                    let (pt, pl) = (p.pad_top() as isize, p.pad_left() as isize);
+                    let mut data = vec![0i32; a.batch * n.out_features];
+                    for b in 0..a.batch {
+                        let img = a.row(b);
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for ch in 0..p.c {
+                                    let mut mx = i32::MIN;
+                                    let mut sum: i64 = 0;
+                                    let mut count: i64 = 0;
+                                    for ky in 0..p.kh {
+                                        let iy = (oy * p.stride_h + ky) as isize - pt;
+                                        if iy < 0 || iy >= p.in_h as isize {
+                                            continue; // OOB taps are excluded
+                                        }
+                                        for kx in 0..p.kw {
+                                            let ix = (ox * p.stride_w + kx) as isize - pl;
+                                            if ix < 0 || ix >= p.in_w as isize {
+                                                continue;
+                                            }
+                                            let v = img
+                                                [(iy as usize * p.in_w + ix as usize) * p.c + ch];
+                                            mx = mx.max(v);
+                                            sum += v as i64;
+                                            count += 1;
+                                        }
+                                    }
+                                    ensure!(
+                                        count > 0,
+                                        "reference oracle: pool '{}' empty window",
+                                        n.name
+                                    );
+                                    // Avg: round half toward +inf (SRS flavor),
+                                    // then a saturating store.
+                                    let y = if is_max {
+                                        mx
+                                    } else {
+                                        (sum + count / 2).div_euclid(count) as i32
+                                    };
+                                    data[b * n.out_features + (oy * ow + ox) * p.c + ch] =
+                                        srs_i32(y, 0, n.output.dtype);
+                                }
+                            }
+                        }
+                    }
+                    Activation { batch: a.batch, features: n.out_features, data }
+                }
+                RefOp::Transpose { rows, cols } => {
+                    let a = ins[0];
+                    ensure!(
+                        a.features == rows * cols && n.out_features == rows * cols,
+                        "reference oracle: transpose '{}' shape mismatch",
+                        n.name
+                    );
+                    let (rows, cols) = (*rows, *cols);
+                    let mut data = vec![0i32; a.batch * n.out_features];
+                    for b in 0..a.batch {
+                        let src = a.row(b);
+                        let dst = &mut data[b * n.out_features..(b + 1) * n.out_features];
+                        for r in 0..rows {
+                            for col in 0..cols {
+                                dst[col * rows + r] = src[r * cols + col];
+                            }
+                        }
+                    }
+                    Activation { batch: a.batch, features: n.out_features, data }
                 }
                 RefOp::Add => {
                     let batch = ins[0].batch;
@@ -431,6 +617,76 @@ mod tests {
         let x = Activation::new(2, 2, vec![5, -7, 9, 11]).unwrap();
         let y = oracle.execute(&x).unwrap();
         assert_eq!(y.data, vec![5, -7, 9, 11]);
+    }
+
+    #[test]
+    fn executes_hand_checked_conv() {
+        use crate::frontend::JsonConv;
+        // 2x2x1 image, 2x2 valid conv, one output channel, bias 5, shift 0:
+        // y = 1*1 + 2*2 + 3*3 + 4*4 + 5 = 35.
+        let conv = JsonConv {
+            in_h: 2,
+            in_w: 2,
+            in_c: 1,
+            out_c: 1,
+            kh: 2,
+            kw: 2,
+            stride_h: 1,
+            stride_w: 1,
+            padding: "valid".into(),
+        };
+        let m = JsonModel::new(
+            "conv",
+            vec![JsonLayer::conv2d("c", conv, true, false, "int8", "int8", 0, vec![1, 2, 3, 4], vec![5])],
+        );
+        let oracle = ReferenceOracle::from_model(&m).unwrap();
+        assert_eq!(oracle.input_features(), 4);
+        assert_eq!(oracle.output_features(), 1);
+        let x = Activation::new(1, 4, vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(oracle.execute(&x).unwrap().data, vec![35]);
+    }
+
+    #[test]
+    fn executes_hand_checked_pool_and_transpose() {
+        use crate::frontend::JsonConv;
+        // Identity 1x1 conv feeds a full-image pool: max([1,2,3,4]) = 4,
+        // avg = (10 + 2) / 4 = 3 (round half toward +inf).
+        let id = JsonConv {
+            in_h: 2,
+            in_w: 2,
+            in_c: 1,
+            out_c: 1,
+            kh: 1,
+            kw: 1,
+            stride_h: 1,
+            stride_w: 1,
+            padding: "valid".into(),
+        };
+        let window = JsonConv { out_c: 0, kh: 2, kw: 2, ..id.clone() };
+        for (ty, want) in [("maxpool2d", 4), ("avgpool2d", 3)] {
+            let m = JsonModel::new(
+                "pool",
+                vec![
+                    JsonLayer::conv2d("c", id.clone(), false, false, "int8", "int8", 0, vec![1], vec![]),
+                    JsonLayer::pool2d("p", ty, window.clone(), "int8", 0),
+                ],
+            );
+            let oracle = ReferenceOracle::from_model(&m).unwrap();
+            let x = Activation::new(1, 4, vec![1, 2, 3, 4]).unwrap();
+            assert_eq!(oracle.execute(&x).unwrap().data, vec![want], "{ty}");
+        }
+        // Transpose [2,3] -> [3,2]: row-major [1..6] -> [1,4,2,5,3,6].
+        let id23 = JsonConv { in_h: 2, in_w: 3, ..id };
+        let m = JsonModel::new(
+            "tr",
+            vec![
+                JsonLayer::conv2d("c", id23, false, false, "int8", "int8", 0, vec![1], vec![]),
+                JsonLayer::transpose("t", 2, 3, "int8", 0),
+            ],
+        );
+        let oracle = ReferenceOracle::from_model(&m).unwrap();
+        let x = Activation::new(1, 6, vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(oracle.execute(&x).unwrap().data, vec![1, 4, 2, 5, 3, 6]);
     }
 
     #[test]

@@ -297,6 +297,134 @@ impl OffsetTiler {
     }
 }
 
+/// A **convolution patch tiler**: streams the implicit-GEMM (im2col) operand
+/// of a `Conv2D` directly out of the stored NHWC image buffer.
+///
+/// The memory tile holds only the image (`batch × in_h·in_w·in_c` elements);
+/// the read-side DMA descriptor walks the consumer's `{tile_m, tile_k}`
+/// blocks of the *logical* `(batch·out_h·out_w) × (kh·kw·in_c)` patch matrix,
+/// translating each (row, col) coordinate to an image address on the fly and
+/// injecting zeros for 'same'-padding taps and K-padding columns (the
+/// hardware's built-in out-of-bounds zero fill, exactly as [`Tiler2d`] models
+/// it for plain matrices). The im2col matrix therefore never exists in
+/// memory — this is the conv analogue of [`OffsetTiler`] killing the staged
+/// concat copy.
+///
+/// `staged` is a pure modeling flag: when set, the cycle model charges the
+/// buffer and DMA cost of a materialized im2col staging copy instead (the
+/// baseline the `conv_lowering` bench compares against). Functional
+/// behaviour is identical either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvPatchTiler {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// Consumer read-tile rows (the lowered GEMM's mmul M).
+    pub tile_m: usize,
+    /// Consumer read-tile columns (the lowered GEMM's mmul K).
+    pub tile_k: usize,
+    /// Model a materialized im2col staging buffer (bench baseline only).
+    pub staged: bool,
+}
+
+impl ConvPatchTiler {
+    /// Logical K of the patch matrix: one flattened `kh × kw × in_c` window.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.in_c
+    }
+
+    /// Stored image row width (features per sample actually resident).
+    pub fn image_features(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    /// Logical GEMM rows for a batch: one row per output pixel per sample.
+    pub fn gemm_rows(&self, batch: usize) -> usize {
+        batch * self.out_h * self.out_w
+    }
+
+    /// The equivalent plain read tiler over the *logical* patch matrix —
+    /// `gather` produces exactly this tiler's stream without materializing
+    /// the matrix.
+    pub fn read_tiler(&self, batch: usize) -> Tiler2d {
+        Tiler2d::new(self.gemm_rows(batch), self.patch_len(), self.tile_m, self.tile_k)
+    }
+
+    /// One element of the logical patch matrix: row `m` (global GEMM row,
+    /// sample-major), column `k` (window position × channel). Out-of-image
+    /// taps (padding) read as zero.
+    pub fn element(&self, image: &[i32], m: usize, k: usize) -> i32 {
+        if k >= self.patch_len() {
+            return 0;
+        }
+        let b = m / (self.out_h * self.out_w);
+        let pix = m % (self.out_h * self.out_w);
+        let oy = pix / self.out_w;
+        let ox = pix % self.out_w;
+        let ky = k / (self.kw * self.in_c);
+        let kx = (k % (self.kw * self.in_c)) / self.in_c;
+        let c = k % self.in_c;
+        let iy = (oy * self.stride_h + ky) as isize - self.pad_top as isize;
+        let ix = (ox * self.stride_w + kx) as isize - self.pad_left as isize;
+        if iy < 0 || iy >= self.in_h as isize || ix < 0 || ix >= self.in_w as isize {
+            return 0;
+        }
+        let addr = ((b * self.in_h + iy as usize) * self.in_w + ix as usize) * self.in_c + c;
+        image[addr]
+    }
+
+    /// Materialize the logical patch (im2col) matrix row-major
+    /// (`gemm_rows × patch_len`). Reference/test helper only — the compiled
+    /// data path never builds this.
+    pub fn im2col(&self, batch: usize, image: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(image.len(), batch * self.image_features());
+        let rows = self.gemm_rows(batch);
+        let cols = self.patch_len();
+        let mut out = Vec::with_capacity(rows * cols);
+        for m in 0..rows {
+            for k in 0..cols {
+                out.push(self.element(image, m, k));
+            }
+        }
+        out
+    }
+
+    /// Stream the patch matrix in the consumer's `{tile_m, tile_k}` block
+    /// order straight from the image — bit-identical to
+    /// `self.read_tiler(batch).tile(self.im2col(batch, image))` but with the
+    /// image buffer as the only operand in memory.
+    pub fn gather(&self, batch: usize, image: &[i32]) -> Vec<i32> {
+        debug_assert_eq!(image.len(), batch * self.image_features());
+        let t = self.read_tiler(batch);
+        let rows = t.rows;
+        let mut out = Vec::with_capacity(t.stream_len());
+        for br in 0..t.row_blocks() {
+            for bc in 0..t.col_blocks() {
+                for r in 0..t.tile_rows {
+                    let m = br * t.tile_rows + r;
+                    for c in 0..t.tile_cols {
+                        let k = bc * t.tile_cols + c;
+                        if m >= rows {
+                            out.push(0);
+                        } else {
+                            out.push(self.element(image, m, k));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 /// A re-tiling between two layouts through a memory tile: producer writes in
 /// `write` tile order, consumer reads in `read` tile order. Models the
 /// independent write/read tilers of one memory-tile buffer (paper §III-C).
@@ -436,6 +564,114 @@ mod tests {
                 assert_eq!(image[r * 16 + c], want, "row {r} col {c}");
             }
         }
+    }
+
+    fn small_conv_tiler() -> ConvPatchTiler {
+        // 4x4x2 image, 3x3 kernel, stride 1, 'same' padding (pad 1) -> 4x4 out.
+        ConvPatchTiler {
+            in_h: 4,
+            in_w: 4,
+            in_c: 2,
+            kh: 3,
+            kw: 3,
+            stride_h: 1,
+            stride_w: 1,
+            pad_top: 1,
+            pad_left: 1,
+            out_h: 4,
+            out_w: 4,
+            tile_m: 4,
+            tile_k: 8,
+            staged: false,
+        }
+    }
+
+    #[test]
+    fn conv_patch_gather_matches_materialized_im2col() {
+        let t = small_conv_tiler();
+        let batch = 3;
+        let image: Vec<i32> = (0..(batch * t.image_features()) as i32).collect();
+        let im2col = t.im2col(batch, &image);
+        assert_eq!(im2col.len(), t.gemm_rows(batch) * t.patch_len());
+        // The streamed walk is bit-identical to tiling the materialized matrix.
+        assert_eq!(t.gather(batch, &image), t.read_tiler(batch).tile(&im2col));
+    }
+
+    #[test]
+    fn conv_patch_same_padding_zeros() {
+        let t = small_conv_tiler();
+        let image: Vec<i32> = (1..=t.image_features() as i32).collect();
+        // Row 0 = output pixel (0,0): taps with ky=0 or kx=0 fall off the
+        // top/left edge and must read zero.
+        for k in 0..t.patch_len() {
+            let ky = k / (t.kw * t.in_c);
+            let kx = (k % (t.kw * t.in_c)) / t.in_c;
+            let v = t.element(&image, 0, k);
+            if ky == 0 || kx == 0 {
+                assert_eq!(v, 0, "padding tap k={k} must be zero");
+            } else {
+                // Interior tap: image pixel (ky-1, kx-1), channel k%2.
+                let addr = ((ky - 1) * t.in_w + (kx - 1)) * t.in_c + k % t.in_c;
+                assert_eq!(v, image[addr], "tap k={k}");
+            }
+        }
+        // K columns beyond patch_len (K padding) are zero.
+        assert_eq!(t.element(&image, 0, t.patch_len()), 0);
+    }
+
+    #[test]
+    fn conv_patch_valid_stride_window() {
+        // 5x5x1 image, 3x3 kernel, stride 2, 'valid' -> 2x2 out, no padding.
+        let t = ConvPatchTiler {
+            in_h: 5,
+            in_w: 5,
+            in_c: 1,
+            kh: 3,
+            kw: 3,
+            stride_h: 2,
+            stride_w: 2,
+            pad_top: 0,
+            pad_left: 0,
+            out_h: 2,
+            out_w: 2,
+            tile_m: 2,
+            tile_k: 4,
+            staged: false,
+        };
+        let image: Vec<i32> = (0..25).collect();
+        // Output pixel (1,1) -> window origin (2,2): rows 2..5, cols 2..5.
+        let m = 1 * t.out_w + 1;
+        let want: Vec<i32> =
+            vec![12, 13, 14, 17, 18, 19, 22, 23, 24];
+        let got: Vec<i32> = (0..t.patch_len()).map(|k| t.element(&image, m, k)).collect();
+        assert_eq!(got, want);
+        // No padding taps anywhere for 'valid'.
+        let im2col = t.im2col(1, &image);
+        assert!(im2col.iter().all(|&v| (0..25).contains(&v)));
+    }
+
+    #[test]
+    fn conv_patch_1x1_is_identity() {
+        // A 1x1 stride-1 conv's patch matrix IS the flattened image.
+        let t = ConvPatchTiler {
+            in_h: 3,
+            in_w: 2,
+            in_c: 4,
+            kh: 1,
+            kw: 1,
+            stride_h: 1,
+            stride_w: 1,
+            pad_top: 0,
+            pad_left: 0,
+            out_h: 3,
+            out_w: 2,
+            tile_m: 2,
+            tile_k: 4,
+            staged: false,
+        };
+        let batch = 2;
+        let image: Vec<i32> = (0..(batch * t.image_features()) as i32).collect();
+        assert_eq!(t.im2col(batch, &image), image);
     }
 
     #[test]

@@ -67,6 +67,12 @@ pub struct LayerPerf {
     pub compute_cycles: f64,
     pub dma_in_cycles: f64,
     pub dma_out_cycles: f64,
+    /// Modeled inbound DMA traffic for one batch, bytes. For a lowered conv
+    /// this is the patch walk's *real* traffic — `rows × K` elements, the
+    /// overlapping window taps re-read from the image — not the image size.
+    pub dma_in_bytes: f64,
+    /// Modeled outbound DMA traffic for one batch, bytes.
+    pub dma_out_bytes: f64,
     /// max of the above — this layer's stage time.
     pub stage_cycles: f64,
     /// Fill contribution to end-to-end latency.
@@ -117,7 +123,11 @@ fn layer_perf(
 ) -> LayerPerf {
     let geo = layer.cascade;
     let q = layer.quant;
-    let (chunk, _) = batch_chunk(device, &layer.tiling, &q, geo.f_in_slice, geo.f_out_slice, batch)
+    // A lowered conv processes `batch × m_scale` GEMM rows per batch; every
+    // per-row figure below (kernel cycles, DMA streams) scales with the
+    // row count, not the sample count.
+    let rows = layer.gemm_rows(batch);
+    let (chunk, _) = batch_chunk(device, &layer.tiling, &q, geo.f_in_slice, geo.f_out_slice, rows)
         .expect("emission validated local memory");
 
     // (a) Compute: the cascade tail is the slowest tile of each row.
@@ -130,40 +140,64 @@ fn layer_perf(
         relu: layer.relu,
         is_tail: true,
     };
-    let mut compute = batch_cycles(batch, chunk, &tail, &model.kernel, device.generation, device.load_port_bytes);
+    let mut compute = batch_cycles(rows, chunk, &tail, &model.kernel, device.generation, device.load_port_bytes);
     // Cascade fill: partial sums ripple CAS_LEN-1 hops once per chunk.
-    let chunks = batch.div_ceil(chunk) as f64;
+    let chunks = rows.div_ceil(chunk) as f64;
     compute += chunks * (geo.cas_len.saturating_sub(1) * model.cascade_hop) as f64;
 
     // (b) Input DMA: the activation buffer is sharded across the cascade
     // columns' memory tiles; each column's DMA streams its own slice and
     // broadcasts it up the column, so the per-column slice bounds the stage.
-    let in_bytes = (batch * geo.f_in_slice * q.input.dtype.bytes()) as f64;
-    let dma_in = in_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
+    // For a conv this is the patch walk's real traffic — overlapping
+    // window taps are re-read from the image, so the stream is `rows × K`
+    // elements even though the buffer only holds the image.
+    let in_bytes = (rows * geo.f_in_slice * q.input.dtype.bytes()) as f64;
+    let mut dma_in = in_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
+    // Total inbound traffic across all cascade columns (reported bytes).
+    let mut in_bytes_total = (rows * geo.cas_len * geo.f_in_slice * q.input.dtype.bytes()) as f64;
+    let mut staging = 0.0;
+    if layer.input_plan.patch.as_ref().is_some_and(|p| p.staged) {
+        // Staged-im2col baseline (bench comparison only): the patch matrix
+        // is materialized in the memory tile before the kernel stream
+        // starts — one extra full pass of the gathered operand through the
+        // port, plus another descriptor program. The pass is *serial*: the
+        // operand stream reads the materialized matrix, so ping-pong
+        // cannot hide the gather behind this layer's own compute.
+        let staged_bytes = (rows * layer.in_features * q.input.dtype.bytes()) as f64;
+        staging = staged_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
+        dma_in += staging;
+        in_bytes_total += staged_bytes;
+    }
 
     // (c) Output DMA: tails of each cascade row store to the next buffer.
-    let out_bytes = (batch * layer.out_features * q.output.dtype.bytes()) as f64;
+    let out_bytes = (rows * layer.out_features * q.output.dtype.bytes()) as f64;
     let out_channels = geo.cas_num.min(device.mem_tile_channels).max(1) as f64;
     let dma_out = out_bytes / (device.mem_tile_port_bytes as f64 * out_channels)
         + model.dma_setup as f64;
 
     let stage = if model.ping_pong {
-        compute.max(dma_in).max(dma_out)
+        compute.max(dma_in - staging).max(dma_out) + staging
     } else {
         compute + dma_in + dma_out
     };
-    let bottleneck = if stage == compute {
+    let overlapped = compute.max(dma_in - staging).max(dma_out);
+    let bottleneck = if staging > 0.0 && overlapped != dma_in - staging {
+        // The serial gather pass is charged on top of whatever overlapped
+        // term wins; any staged layer not already input-port-bound is
+        // effectively paying an input-DMA tax.
+        Bottleneck::DmaIn
+    } else if overlapped == compute {
         Bottleneck::Compute
-    } else if stage == dma_in {
+    } else if overlapped == dma_in - staging {
         Bottleneck::DmaIn
     } else {
         Bottleneck::DmaOut
     };
 
     // Fill: first chunk must traverse DMA + broadcast + compute + drain.
-    let first_chunk = KernelWorkload { batch: chunk.min(batch), ..tail };
+    let first_chunk = KernelWorkload { batch: chunk.min(rows), ..tail };
     let first_compute = batch_cycles(
-        chunk.min(batch),
+        chunk.min(rows),
         chunk,
         &first_chunk,
         &model.kernel,
@@ -181,6 +215,8 @@ fn layer_perf(
         compute_cycles: compute,
         dma_in_cycles: dma_in,
         dma_out_cycles: dma_out,
+        dma_in_bytes: in_bytes_total,
+        dma_out_bytes: out_bytes,
         stage_cycles: stage,
         fill_cycles: fill,
         bottleneck,
@@ -208,15 +244,29 @@ fn merge_perf(m: &MergeStage, device: &Device, batch: usize, model: &EngineModel
             compute_cycles: 0.0,
             dma_in_cycles: 0.0,
             dma_out_cycles: 0.0,
+            dma_in_bytes: 0.0,
+            dma_out_bytes: 0.0,
             stage_cycles: 0.0,
             fill_cycles: 0.0,
             bottleneck: Bottleneck::DmaIn,
         };
     }
-    let out_bytes = (batch * m.features * m.quant.dtype.bytes()) as f64;
+    let bytes = m.quant.dtype.bytes();
+    let out_bytes = (batch * m.features * bytes) as f64;
     let in_bytes = match m.op {
         MergeOp::Add => out_bytes * m.plan.write_tilers.len() as f64,
         MergeOp::Concat => out_bytes,
+        // Pooling lands the whole image, then the window walk re-reads
+        // `OH·OW·KH·KW·C` taps to reduce them — both passes are real DMA
+        // traffic on the memory tile.
+        MergeOp::MaxPool2D(p) | MergeOp::AvgPool2D(p) => {
+            let image = (batch * p.in_features() * bytes) as f64;
+            let walk = (batch * p.out_h() * p.out_w() * p.kh * p.kw * p.c * bytes) as f64;
+            image + walk
+        }
+        // Transpose lands the matrix and re-reads it once with a strided
+        // descriptor — no staging copy beyond the landing buffer.
+        MergeOp::Transpose { .. } => out_bytes * 2.0,
     };
     let dma_in = in_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
     let dma_out = out_bytes / device.mem_tile_port_bytes as f64 + model.dma_setup as f64;
@@ -227,6 +277,8 @@ fn merge_perf(m: &MergeStage, device: &Device, batch: usize, model: &EngineModel
         compute_cycles: 0.0,
         dma_in_cycles: dma_in,
         dma_out_cycles: dma_out,
+        dma_in_bytes: in_bytes,
+        dma_out_bytes: out_bytes,
         stage_cycles: stage,
         fill_cycles: dma_in,
         bottleneck: Bottleneck::DmaIn,

@@ -146,12 +146,16 @@ fn run_stages(fw: &Firmware, input: &Activation) -> Result<Vec<Option<Activation
     Ok(outs)
 }
 
-/// Execute one merge stage (residual Add / Concat) bit-exactly. Every
-/// input models its mem-tile landing (write-tiler round trip), matching
-/// the DMA order the hardware buffer sees.
+/// Execute one memory-tile stage (residual Add / Concat / pooling /
+/// transpose) bit-exactly. Every input models its mem-tile landing
+/// (write-tiler round trip), matching the DMA order the hardware buffer
+/// sees.
 pub fn execute_merge(m: &MergeStage, inputs: &[&Activation]) -> Result<Activation> {
+    let (min_in, max_in) = m.op.arity_range();
     ensure!(
-        inputs.len() == m.plan.write_tilers.len() && inputs.len() >= 2,
+        inputs.len() == m.plan.write_tilers.len()
+            && inputs.len() >= min_in
+            && inputs.len() <= max_in,
         "merge '{}': {} inputs for {} write tilers",
         m.name,
         inputs.len(),
@@ -233,33 +237,148 @@ pub fn execute_merge(m: &MergeStage, inputs: &[&Activation]) -> Result<Activatio
             }
             Activation::new(batch, m.features, data)
         }
+        MergeOp::MaxPool2D(p) => pool2d(m, &p, true, inputs[0]),
+        MergeOp::AvgPool2D(p) => pool2d(m, &p, false, inputs[0]),
+        MergeOp::Transpose { rows, cols } => {
+            ensure!(
+                inputs[0].features == rows * cols && m.features == rows * cols,
+                "transpose '{}': features {} != {}x{}",
+                m.name,
+                inputs[0].features,
+                rows,
+                cols
+            );
+            let wt = &m.plan.write_tilers[0];
+            let linear = wt.untile(&wt.tile(&inputs[0].data));
+            // Pure strided re-read: [rows, cols] row-major -> [cols, rows].
+            let mut data = vec![0i32; batch * m.features];
+            for b in 0..batch {
+                let src = &linear[b * m.features..(b + 1) * m.features];
+                let dst = &mut data[b * m.features..(b + 1) * m.features];
+                for r in 0..rows {
+                    for c in 0..cols {
+                        dst[c * rows + r] = src[r * cols + c];
+                    }
+                }
+            }
+            Activation::new(batch, m.features, data)
+        }
     }
+}
+
+/// Windowed pooling over an NHWC image, executed on the memory tile.
+/// Out-of-bounds taps under 'same' padding are *excluded*: max pools over
+/// the present elements only, avg divides by the present count with the
+/// SRS rounding rule (round half toward +inf) and a saturating store.
+fn pool2d(
+    m: &MergeStage,
+    p: &crate::ir::Pool2DAttrs,
+    is_max: bool,
+    input: &Activation,
+) -> Result<Activation> {
+    ensure!(
+        input.features == p.in_features(),
+        "pool '{}': input features {} != image {}",
+        m.name,
+        input.features,
+        p.in_features()
+    );
+    ensure!(
+        m.features == p.out_features(),
+        "pool '{}': stage features {} != pooled image {}",
+        m.name,
+        m.features,
+        p.out_features()
+    );
+    let batch = input.batch;
+    let wt = &m.plan.write_tilers[0];
+    let image = wt.untile(&wt.tile(&input.data));
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let (pt, pl) = (p.pad_top() as isize, p.pad_left() as isize);
+    let dtype = m.quant.dtype;
+    let mut data = vec![0i32; batch * m.features];
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..p.c {
+                    let mut mx = i32::MIN;
+                    let mut sum: i64 = 0;
+                    let mut count: i64 = 0;
+                    for ky in 0..p.kh {
+                        for kx in 0..p.kw {
+                            let iy = (oy * p.stride_h + ky) as isize - pt;
+                            let ix = (ox * p.stride_w + kx) as isize - pl;
+                            if iy < 0
+                                || ix < 0
+                                || iy >= p.in_h as isize
+                                || ix >= p.in_w as isize
+                            {
+                                continue;
+                            }
+                            let v = image
+                                [((b * p.in_h + iy as usize) * p.in_w + ix as usize) * p.c + ch];
+                            mx = mx.max(v);
+                            sum += v as i64;
+                            count += 1;
+                        }
+                    }
+                    ensure!(count > 0, "pool '{}': window with no present taps", m.name);
+                    let y = if is_max {
+                        mx
+                    } else {
+                        // floor((sum + floor(count/2)) / count): nearest,
+                        // exact halves toward +inf — the SRS rounding rule.
+                        (sum + count / 2).div_euclid(count) as i32
+                    };
+                    data[b * m.features + (oy * ow + ox) * p.c + ch] = srs_i32(y, 0, dtype);
+                }
+            }
+        }
+    }
+    Activation::new(batch, m.features, data)
 }
 
 /// Execute one layer bit-exactly.
 pub fn execute_layer(layer: &FirmwareLayer, input: &Activation) -> Result<Activation> {
-    ensure!(
-        input.features == layer.in_features,
-        "layer '{}': input features {} != {}",
-        layer.name,
-        input.features,
-        layer.in_features
-    );
     let geo = layer.cascade;
     let t = layer.tiling;
     let q = layer.quant;
-    let batch = input.batch;
 
     // --- Mem-tile path: store in producer tile order, fetch, zero-pad ----
     // The write/read tiler round trip is exercised for DMA-model fidelity.
+    // A Conv2D layer's buffer holds the NHWC *image*; the read DMA
+    // synthesizes the im2col rows coordinate-by-coordinate on the way out
+    // (implicit GEMM) — the patch matrix below is the transient DMA
+    // stream the kernel consumes, never a buffer the plan accounts for.
     let plan = &layer.input_plan;
-    let stream = plan.write_tiler.tile(&input.data);
-    let linear = plan.write_tiler.untile(&stream);
+    let (batch, f_logical, linear) = if let Some(p) = &plan.patch {
+        ensure!(
+            input.features == p.image_features(),
+            "conv layer '{}': image features {} != {}",
+            layer.name,
+            input.features,
+            p.image_features()
+        );
+        let image = plan.write_tiler.untile(&plan.write_tiler.tile(&input.data));
+        let stream = p.gather(input.batch, &image);
+        let patches = p.read_tiler(input.batch).untile(&stream);
+        (p.gemm_rows(input.batch), p.patch_len(), patches)
+    } else {
+        let stream = plan.write_tiler.tile(&input.data);
+        (input.batch, input.features, plan.write_tiler.untile(&stream))
+    };
+    ensure!(
+        f_logical == layer.in_features,
+        "layer '{}': input features {} != {}",
+        layer.name,
+        f_logical,
+        layer.in_features
+    );
     let f_in_pad = geo.f_in_padded();
     let mut padded = vec![0i32; batch * f_in_pad];
     for b in 0..batch {
-        padded[b * f_in_pad..b * f_in_pad + input.features]
-            .copy_from_slice(&linear[b * input.features..(b + 1) * input.features]);
+        padded[b * f_in_pad..b * f_in_pad + f_logical]
+            .copy_from_slice(&linear[b * f_logical..(b + 1) * f_logical]);
     }
 
     // --- Per-cascade-row compute (rows are independent) ------------------
@@ -379,7 +498,10 @@ pub fn execute_layer(layer: &FirmwareLayer, input: &Activation) -> Result<Activa
             }
         }
     }
-    Activation::new(batch, f_out, data)
+    // Report the activation per *sample*: for a lowered conv the [rows, N]
+    // GEMM output row-major IS the flattened NHWC output image, so the
+    // `m_scale` GEMM rows of one sample fold back into its feature axis.
+    Activation::new(batch / layer.m_scale.max(1), f_out * layer.m_scale, data)
 }
 
 /// Reference dense layer on *unpacked* logical tensors — a second,

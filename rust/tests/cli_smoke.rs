@@ -9,7 +9,7 @@
 //! with a message instead of panicking.
 
 use aie4ml::frontend::JsonModel;
-use aie4ml::harness::models::{mlp_spec, synth_model};
+use aie4ml::harness::models::{cnn_classifier_model, mlp_spec, synth_model};
 use aie4ml::util::ScratchDir;
 use std::path::PathBuf;
 use std::process::{Command, Output};
@@ -215,6 +215,98 @@ fn cli_serve_trace_autoscales() {
     assert!(!out.status.success());
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("unknown trace kind"), "{stderr}");
+}
+
+fn write_cnn_model(dir: &ScratchDir) -> PathBuf {
+    let json = cnn_classifier_model("cli_cnn", 6);
+    let path = dir.path().join("cnn.json");
+    std::fs::write(&path, json.to_json_string()).unwrap();
+    path
+}
+
+#[test]
+fn cli_conv_compile_profiles_true_macs() {
+    // A conv model drives `compile --verify --profile` end to end: the
+    // project is written (conv kernels included), invariants hold, and the
+    // per-stage efficiency table reports a peak-MAC fraction for each conv
+    // stage derived from the conv's true MAC count (a real percentage in
+    // (0, 100], not the inflated im2col-GEMM op count).
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_cnn_model(&dir);
+    let out_dir = dir.path().join("proj");
+    let Some(out) = run(&[
+        "compile",
+        model.to_str().unwrap(),
+        "--out",
+        out_dir.to_str().unwrap(),
+        "--batch",
+        "4",
+        "--verify",
+        "--profile",
+    ]) else {
+        return;
+    };
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("invariants OK"), "{stdout}");
+    assert!(out_dir.join("graph.hpp").exists());
+    assert!(out_dir.join("kernels/c1.h").exists());
+    assert!(stdout.contains("tile efficiency"), "{stdout}");
+    for stage in ["c1", "c2", "head"] {
+        let line = stdout
+            .lines()
+            .find(|l| l.split_whitespace().next() == Some(stage))
+            .unwrap_or_else(|| panic!("no efficiency row for '{stage}' in:\n{stdout}"));
+        let cols: Vec<&str> = line.split_whitespace().collect();
+        let peak: f64 = cols[4].trim_end_matches('%').parse().unwrap();
+        assert!(
+            peak > 0.0 && peak <= 100.0,
+            "'{stage}' peak-MAC fraction out of range: {line}"
+        );
+    }
+}
+
+#[test]
+fn cli_conv_partition_and_deploy() {
+    // The conv pipeline composes with the CLI's partitioner and deploy
+    // planner with no special-casing: K = 2 partitioning stays bit-exact
+    // (the oracle gate runs the direct-conv reference), and SLO planning
+    // launches + verifies a fleet over the conv model.
+    let dir = ScratchDir::new("cli").unwrap();
+    let model = write_cnn_model(&dir);
+    let Some(out) = run(&[
+        "partition",
+        model.to_str().unwrap(),
+        "--batch",
+        "4",
+        "--parts",
+        "2",
+    ]) else {
+        return;
+    };
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("2 pipeline partition"), "{stdout}");
+    assert!(stdout.contains("BIT-EXACT"), "{stdout}");
+
+    let out = run(&[
+        "deploy",
+        model.to_str().unwrap(),
+        "--batch",
+        "4",
+        "--target-sps",
+        "100000",
+        "--latency-us",
+        "100000",
+        "--arrays",
+        "2",
+        "--verify",
+    ])
+    .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("best plan"), "{stdout}");
+    assert!(stdout.contains("BIT-EXACT"), "{stdout}");
 }
 
 #[test]

@@ -250,6 +250,99 @@ fn wide_mlp_2x_partitioned_bit_exact() {
 }
 
 #[test]
+fn cnn_classifier_bit_exact_single_partitioned_and_served() {
+    // The conv gate: the implicit-GEMM lowering must stay bit-exact against
+    // the reference oracle's independent direct convolution through (1) a
+    // single-array compile, (2) a K = 2 pipeline whose link feeds a conv
+    // partition, and (3) fleet serving — with the zero-materialized-im2col
+    // invariant audited on the compiled memory plans. Looked up leniently
+    // because older manifests omit the entry.
+    use aie4ml::deploy::FleetServer;
+    use aie4ml::partition::{compile_partitioned_at, cut_candidates, execute_partitioned};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let Some(e) = zoo_entries().iter().find(|e| e.name == "cnn_classifier") else {
+        eprintln!(
+            "skipping: manifest predates conv support — regenerate with `aie4ml zoo --force`"
+        );
+        return;
+    };
+    // 1. Single array, bit-exact.
+    check_model(e, 101);
+
+    // Zero-im2col memory audit: each conv's input buffer holds exactly the
+    // NHWC image; no plan anywhere holds a materialized M×K patch matrix.
+    let (json, fw) = compile_entry(e);
+    let convs: Vec<_> = fw.layers.iter().filter(|l| l.input_plan.patch.is_some()).collect();
+    assert_eq!(convs.len(), 2, "both conv layers must carry patch-walk read plans");
+    for l in &convs {
+        let p = l.input_plan.patch.as_ref().unwrap();
+        assert!(!p.staged, "conv '{}' compiled a staged im2col plan", l.name);
+        let image_bytes = fw.batch * p.image_features() * l.input_plan.dtype.bytes();
+        assert_eq!(
+            l.input_plan.buffer_bytes, image_bytes,
+            "conv '{}' input buffer must be image-sized (zero materialized im2col)",
+            l.name
+        );
+    }
+    // The staged baseline is strictly bigger — the audit has teeth.
+    let staged = fw.staged_im2col_variant();
+    let lean: usize = fw.layers.iter().map(|l| l.input_plan.total_bytes()).sum();
+    let fat: usize = staged.layers.iter().map(|l| l.input_plan.total_bytes()).sum();
+    assert!(fat > lean, "staged-im2col variant must cost extra residency ({fat} <= {lean})");
+
+    // 2. K = 2 pipeline cut after the pool: the downstream partition opens
+    // with a conv, so the link must land as a row-major image (no offset
+    // tiler — the patch walk needs the image layout), and stay bit-exact.
+    let mut cfg = CompileConfig::default();
+    cfg.batch = e.batch;
+    let candidates = cut_candidates(&json);
+    let pool_cut = candidates
+        .iter()
+        .find(|c| c.tensor == "pool1")
+        .expect("cut after the pool must be legal (next layer is conv2d)");
+    let cache = aie4ml::cache::FirmwareCache::new();
+    let pm = compile_partitioned_at(&json, &cfg, &candidates, &[pool_cut.after], &cache)
+        .expect("partitioned compile");
+    let pfw = &pm.firmware;
+    pfw.check_invariants().unwrap();
+    assert_eq!(pfw.k(), 2);
+    assert!(
+        pfw.links[0].write_tiler.is_none(),
+        "a link feeding a conv partition must keep the row-major landing"
+    );
+    let input = random_input(&fw, 102);
+    let want = ReferenceOracle::from_model(&json).unwrap().execute(&input).unwrap();
+    let got = execute_partitioned(pfw, &input).expect("pipeline execution");
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].data, want.data, "partitioned CNN diverges from the oracle");
+
+    // 3. Fleet serving over the conv pipeline, bit-exact per request.
+    let oracle = ReferenceOracle::from_model(&json).unwrap();
+    let fleet = FleetServer::spawn(
+        Arc::new(pm.firmware),
+        2,
+        Duration::from_millis(1),
+        16,
+    )
+    .expect("fleet spawn");
+    let client = fleet.client();
+    let mut rng = Pcg32::seed_from_u64(103);
+    for _ in 0..4 {
+        let x: Vec<i32> =
+            (0..fw.input_features()).map(|_| rng.gen_i32_in(-128, 127)).collect();
+        let got = client.infer_multi(x.clone()).expect("fleet infer");
+        let probe = Activation::new(1, fw.input_features(), x).unwrap();
+        let want = oracle.execute_all(&probe).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g, &w.data, "served CNN output diverges from the oracle");
+        }
+    }
+    fleet.shutdown();
+}
+
+#[test]
 fn oracle_detects_corruption() {
     // Negative control: poison one tail tile's bias after compilation and
     // feed zeros — the firmware saturates to the rail while the oracle stays
